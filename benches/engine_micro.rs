@@ -1,0 +1,91 @@
+//! Engine microbenchmarks: scheduler admission cost, decode-round
+//! latency by backend, and KV-manager append/compress cost — the L3
+//! coordinator pieces (ablation support for DESIGN.md §Perf).
+
+use mustafar::bench::{bench, BenchOpts};
+use mustafar::config::{Backend, EngineConfig, SparsityConfig};
+use mustafar::coordinator::{Engine, Request, Scheduler};
+use mustafar::kvcache::{KvPolicy, SequenceKV};
+use mustafar::model::{NativeModel, Weights};
+use mustafar::util::Pcg32;
+
+fn main() {
+    let opts = BenchOpts { warmup_iters: 2, iters: 10, min_time_s: 0.2 };
+
+    // -- scheduler admission ------------------------------------------------
+    let mcfg = mustafar::config::ModelConfig {
+        name: "bench".into(),
+        d_model: 256,
+        n_layers: 6,
+        n_heads: 4,
+        n_kv_heads: 2,
+        head_dim: 64,
+        ff: 512,
+        vocab: 512,
+        rope_theta: 1e4,
+        max_seq: 1024,
+        norm_eps: 1e-5,
+    };
+    let adm = bench("submit+admit 256 reqs", opts, || {
+        let mut ec = EngineConfig::default();
+        ec.max_batch = 64;
+        ec.queue_cap = 512;
+        let mut s = Scheduler::new(ec, mcfg.clone(), KvPolicy::mustafar(0.7, 0.7));
+        for i in 0..256 {
+            s.submit(Request::new(i, vec![0; 448], 64));
+        }
+        std::hint::black_box(s.admit(0));
+    });
+    println!("scheduler: {:>9.1} us / 256 requests ({:.2} us/req)",
+        adm.median_us(), adm.median_us() / 256.0);
+
+    // -- KV manager append + group compression ------------------------------
+    let mut rng = Pcg32::seeded(3);
+    let kv_bench = bench("kv append 128 tokens (6L x 2KV)", opts, || {
+        let mut kv = SequenceKV::new(KvPolicy::mustafar(0.7, 0.7), 6, 2, 64);
+        for _ in 0..128 {
+            for l in 0..6 {
+                for h in 0..2 {
+                    let k: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+                    let v: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+                    kv.append(l, h, &k, &v);
+                }
+            }
+            kv.commit_token().unwrap();
+        }
+        std::hint::black_box(kv.compression_rate());
+    });
+    println!("kv manager: {:>9.1} us / 128 decode tokens ({:.1} us/token)",
+        kv_bench.median_us(), kv_bench.median_us() / 128.0);
+
+    // -- decode round by backend (needs trained weights) ---------------------
+    let dir = std::path::Path::new("artifacts");
+    if let Ok(w) = Weights::load(dir, "gqa-small") {
+        for (label, backend, ks) in [
+            ("native-dense", Backend::NativeDense, 0.0),
+            ("native-sparse 70%", Backend::NativeSparse, 0.7),
+        ] {
+            let mut ec = EngineConfig::default();
+            ec.backend = backend;
+            ec.sparsity = SparsityConfig::mustafar(ks, ks);
+            ec.max_batch = 4;
+            ec.max_new_tokens = 16;
+            let mut e = Engine::new_native(NativeModel::new(w.clone()), ec);
+            let reqs: Vec<Request> = (0..4)
+                .map(|i| {
+                    let mut rng = Pcg32::seeded(100 + i);
+                    Request::new(i, mustafar::workload::lang::gen_document(&mut rng, 448), 16)
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            let _ = e.run_trace(reqs).unwrap();
+            println!(
+                "engine {label:<18}: {:>8.1} tok/s (batch 4, in 448, gen 16)",
+                e.metrics.tokens_per_sec()
+            );
+            let _ = t0;
+        }
+    } else {
+        println!("(gqa-small weights missing; engine decode bench skipped)");
+    }
+}

@@ -1,0 +1,70 @@
+//! Format-parameter ablation (DESIGN.md design-choice support): how the
+//! paper's choices — 1x64 tiles, multiples-of-8 value padding, u64
+//! bitmaps — trade compression rate against the alternatives, measured
+//! on real pruned KV matrices across sparsities.
+
+use mustafar::prune::{keep_count, per_token_magnitude};
+use mustafar::sparse::bitmap::{BITMAP_BYTES, OFFSET_BYTES, VALUE_BYTES};
+use mustafar::sparse::{BitmapMatrix, PackAxis, TILE};
+use mustafar::util::Pcg32;
+
+/// Compression rate under a hypothetical pad granularity / index format.
+fn rate_with(m: &BitmapMatrix, pad: usize, value_bytes: usize) -> f64 {
+    let mut bytes = 0usize;
+    for bm in &m.bitmaps {
+        let nnz = bm.count_ones() as usize;
+        bytes += nnz.div_ceil(pad) * pad * value_bytes + BITMAP_BYTES + OFFSET_BYTES;
+    }
+    bytes as f64 / (m.tokens * m.channels * VALUE_BYTES) as f64
+}
+
+/// CSR-style alternative: per-nnz 1-byte column index instead of bitmaps.
+fn rate_csr_like(m: &BitmapMatrix, value_bytes: usize) -> f64 {
+    let nnz = m.nnz();
+    let rows = m.tokens;
+    let bytes = nnz * (value_bytes + 1) + rows * OFFSET_BYTES;
+    bytes as f64 / (m.tokens * m.channels * VALUE_BYTES) as f64
+}
+
+fn main() {
+    let (t, hd) = (4096usize, 128usize);
+    let mut rng = Pcg32::seeded(3);
+    let k: Vec<f32> = (0..t * hd).map(|_| rng.normal_f32()).collect();
+
+    println!("=== bitmap-format ablation — T={t}, hd={hd}, fp16 accounting ===");
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "sparsity", "pad=8(paper)", "pad=1", "pad=16", "csr(1B idx)", "dense=100%"
+    );
+    for s in [0.3, 0.5, 0.7, 0.9] {
+        let kk = keep_count(hd, s);
+        let kp = per_token_magnitude(&k, t, hd, kk);
+        let m = BitmapMatrix::compress(&kp, t, hd, PackAxis::Token).unwrap();
+        println!(
+            "{:<10} {:>11.1}% {:>11.1}% {:>11.1}% {:>11.1}% {:>12}",
+            format!("{:.0}%", s * 100.0),
+            m.compression_rate() * 100.0,
+            rate_with(&m, 1, VALUE_BYTES) * 100.0,
+            rate_with(&m, 16, VALUE_BYTES) * 100.0,
+            rate_csr_like(&m, VALUE_BYTES) * 100.0,
+            "100%"
+        );
+    }
+
+    println!("\n(The paper's pad=8 costs a few points vs pad=1 — the GPU");
+    println!("coalescing tax quantified — and the bitmap beats a byte-index");
+    println!("CSR at every sparsity below ~87.5% because 1 bit < 1 byte per");
+    println!("position; at hd<=256 a byte index only wins in the ultra-sparse");
+    println!("regime the KV cache never reaches.)");
+
+    // tile-size ablation: bitmap+offset overhead per tile vs tile length
+    println!("\n=== tile-length ablation (overhead bytes per 64 elems) ===");
+    for tile in [16usize, 32, 64, 128] {
+        let bitmap_bytes = tile.div_ceil(8);
+        let per64 = (bitmap_bytes + OFFSET_BYTES) as f64 * (64.0 / tile as f64);
+        println!(
+            "tile=1x{tile:<4} bitmap {bitmap_bytes}B + offset {OFFSET_BYTES}B  -> {per64:.1} B per 64 elems{}",
+            if tile == TILE { "   <- paper (u64 bitmap = one register)" } else { "" }
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! Pruning + compression throughput microbenchmark — the runtime-overhead
+//! side of the Fig 6a story, across methods and keep-counts.
+
+use mustafar::bench::{bench, BenchOpts};
+use mustafar::prune::{
+    keep_count, per_channel_magnitude, per_token_magnitude, per_token_output_aware, semi_24,
+};
+use mustafar::sparse::{BitmapMatrix, PackAxis, TILE};
+use mustafar::util::Pcg32;
+
+fn main() {
+    let hd = 128usize;
+    let t = TILE; // one compression group, the runtime unit
+    let mut rng = Pcg32::seeded(11);
+    let x: Vec<f32> = (0..t * hd).map(|_| rng.normal_f32()).collect();
+    let qw: Vec<f32> = (0..hd).map(|_| rng.unit_f32()).collect();
+    let opts = BenchOpts { warmup_iters: 5, iters: 50, min_time_s: 0.2 };
+
+    println!("=== prune+compress micro — one 64-token group, hd={hd} ===");
+    for s in [0.5, 0.7] {
+        let kk = keep_count(hd, s);
+        let pm = bench("token-magnitude", opts, || {
+            std::hint::black_box(per_token_magnitude(&x, t, hd, kk));
+        });
+        let poa = bench("token-output-aware", opts, || {
+            std::hint::black_box(per_token_output_aware(&x, t, hd, &qw, kk));
+        });
+        let pcm = bench("channel-magnitude", opts, || {
+            std::hint::black_box(per_channel_magnitude(&x, t, hd, s));
+        });
+        let pruned = per_token_magnitude(&x, t, hd, kk);
+        let cmp = bench("bitmap-compress", opts, || {
+            std::hint::black_box(BitmapMatrix::compress(&pruned, t, hd, PackAxis::Token).unwrap());
+        });
+        println!(
+            "s={s}: magnitude {:>7.1} us | output-aware {:>7.1} us | channel {:>7.1} us | compress {:>7.1} us  ({:.1} Mtok/s prune)",
+            pm.median_us(),
+            poa.median_us(),
+            pcm.median_us(),
+            cmp.median_us(),
+            t as f64 / pm.median_us(),
+        );
+    }
+    let sm = bench("2:4", opts, || {
+        std::hint::black_box(semi_24(&x, t, hd));
+    });
+    println!("2:4 semi-structured: {:.1} us", sm.median_us());
+}

@@ -1,0 +1,68 @@
+//! SpMV microbenchmark: bandwidth accounting of the bitmap kernels vs the
+//! dense baseline across sparsities. Validates the memory-bound argument:
+//! SpMV time should track the compressed-bytes ratio.
+
+use mustafar::bench::{bench, BenchOpts};
+use mustafar::prune::{keep_count, per_token_magnitude};
+use mustafar::sparse::{dense_key, dense_value, spmv_key, spmv_value, BitmapMatrix, PackAxis};
+use mustafar::util::Pcg32;
+
+fn main() {
+    let t = 4096usize;
+    let hd = 128usize;
+    let mut rng = Pcg32::seeded(7);
+    let k: Vec<f32> = (0..t * hd).map(|_| rng.normal_f32()).collect();
+    let v: Vec<f32> = (0..t * hd).map(|_| rng.normal_f32()).collect();
+    let q: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+    let att: Vec<f32> = (0..t).map(|_| 1.0 / t as f32).collect();
+    let opts = BenchOpts { warmup_iters: 3, iters: 30, min_time_s: 0.3 };
+
+    let mut scores = vec![0.0f32; t];
+    let mut out = vec![0.0f32; hd];
+    let dense_k = bench("dense_key", opts, || {
+        scores.iter_mut().for_each(|x| *x = 0.0);
+        dense_key(&k, t, hd, &q, &mut scores);
+    });
+    let dense_v = bench("dense_value", opts, || {
+        out.iter_mut().for_each(|x| *x = 0.0);
+        dense_value(&v, t, hd, &att, &mut out);
+    });
+    let dense_bytes = (t * hd * 4) as f64;
+    println!("=== SpMV micro — T={t}, hd={hd} (f32 host buffers) ===");
+    println!(
+        "dense_key   {:>9.1} us  ({:.1} GB/s)",
+        dense_k.median_us(),
+        dense_bytes / dense_k.median_us() / 1e3
+    );
+    println!(
+        "dense_value {:>9.1} us  ({:.1} GB/s)",
+        dense_v.median_us(),
+        dense_bytes / dense_v.median_us() / 1e3
+    );
+
+    for s in [0.3, 0.5, 0.7, 0.9] {
+        let kk = keep_count(hd, s);
+        let kp = per_token_magnitude(&k, t, hd, kk);
+        let vp = per_token_magnitude(&v, t, hd, kk);
+        let kc = BitmapMatrix::compress(&kp, t, hd, PackAxis::Token).unwrap();
+        let vc = BitmapMatrix::compress(&vp, t, hd, PackAxis::Channel).unwrap();
+        let comp_bytes = kc.values.len() * 4 + kc.bitmaps.len() * 8 + kc.offsets.len() * 4;
+
+        let sk = bench("spmv_key", opts, || {
+            scores.iter_mut().for_each(|x| *x = 0.0);
+            spmv_key(&kc, &q, &mut scores);
+        });
+        let sv = bench("spmv_value", opts, || {
+            out.iter_mut().for_each(|x| *x = 0.0);
+            spmv_value(&vc, &att, &mut out);
+        });
+        println!(
+            "s={s:.1}  spmv_key {:>8.1} us ({:>5.1}% of dense, bytes {:>5.1}%) | spmv_value {:>8.1} us ({:>5.1}%)",
+            sk.median_us(),
+            sk.median_us() / dense_k.median_us() * 100.0,
+            comp_bytes as f64 / dense_bytes * 100.0,
+            sv.median_us(),
+            sv.median_us() / dense_v.median_us() * 100.0,
+        );
+    }
+}

@@ -1,0 +1,61 @@
+//! Joint compression stack (paper §4.2): Mustafar pruning combined with
+//! H2O token eviction and KIVI-style quantization, with memory accounting
+//! for each stage of the stack.
+
+use mustafar::eval::pipeline::{eval_sample, EvalConfig, H2oConfig};
+use mustafar::kvcache::QuantConfig;
+use mustafar::model::{NativeModel, Weights};
+use mustafar::workload::tasks;
+
+fn main() -> mustafar::Result<()> {
+    std::env::set_var("MUSTAFAR_THREADS", "4");
+    let dir = std::path::Path::new("artifacts");
+    let model = NativeModel::new(Weights::load(dir, "gqa-small")?);
+
+    let stack = vec![
+        EvalConfig::dense(),
+        EvalConfig::mustafar(0.5, 0.5),
+        EvalConfig {
+            label: "K0.5V0.5 + KIVI4".into(),
+            sparsity: mustafar::config::SparsityConfig::mustafar(0.5, 0.5),
+            quant: Some(QuantConfig { key_bits: 4, value_bits: 4 }),
+            h2o: None,
+        },
+        EvalConfig {
+            label: "K0.5V0.5 + H2O(20%)".into(),
+            sparsity: mustafar::config::SparsityConfig::mustafar(0.5, 0.5),
+            quant: None,
+            h2o: Some(H2oConfig { recent_frac: 0.1, hh_frac: 0.1 }),
+        },
+        EvalConfig {
+            label: "full stack".into(),
+            sparsity: mustafar::config::SparsityConfig::mustafar(0.5, 0.5),
+            quant: Some(QuantConfig { key_bits: 4, value_bits: 4 }),
+            h2o: Some(H2oConfig { recent_frac: 0.1, hh_frac: 0.1 }),
+        },
+    ];
+
+    // score a handful of retrieval samples under each stack level
+    let mut totals = vec![0.0f64; stack.len()];
+    let n = 8;
+    for idx in 0..n {
+        let sample = tasks::generate("syn-passkey", idx, 448);
+        let scores = eval_sample(&model, &sample, &stack);
+        for (t, s) in totals.iter_mut().zip(&scores) {
+            *t += s;
+        }
+    }
+    println!("{:<22} {:>10} {:>22}", "stack level", "passkey %", "approx KV vs dense");
+    // rough memory model: pruning keeps ~(1-s) values (+ format overhead),
+    // H2O keeps 20% of tokens, KIVI-4 quarters the value bytes.
+    let mem = [100.0, 65.0, 65.0 * 0.31 + 8.0, 65.0 * 0.2, (65.0 * 0.31 + 8.0) * 0.2];
+    for (i, cfg) in stack.iter().enumerate() {
+        println!(
+            "{:<22} {:>9.1}% {:>20.1}%",
+            cfg.label,
+            totals[i] / n as f64 * 100.0,
+            mem[i]
+        );
+    }
+    Ok(())
+}

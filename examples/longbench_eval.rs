@@ -1,0 +1,41 @@
+//! LongBench-sim accuracy sweep through the public eval API — a scaled
+//! version of what `mustafar exp table4` runs.
+
+use mustafar::eval::pipeline::EvalConfig;
+use mustafar::eval::run_sweep;
+use mustafar::model::{NativeModel, Weights};
+
+fn main() -> mustafar::Result<()> {
+    std::env::set_var("MUSTAFAR_THREADS", "1"); // sample-level parallelism instead
+    let dir = std::path::Path::new("artifacts");
+    let model = NativeModel::new(Weights::load(dir, "gqa-small")?);
+
+    let cfgs = vec![
+        EvalConfig::dense(),
+        EvalConfig::think(0.5),
+        EvalConfig::mustafar(0.5, 0.5),
+        EvalConfig::mustafar(0.7, 0.7),
+    ];
+    let sweep = run_sweep(
+        &model,
+        &cfgs,
+        Some(&["syn-passkey", "sqa-easy", "few-map", "sum-recap8"]),
+        10,
+        448,
+    );
+
+    println!("{:<14} {:>9} {:>9} {:>11} {:>11}", "task", "Dense", "ThinK0.5", "K0.5 V0.5", "K0.7 V0.7");
+    for (ti, task) in sweep.task_ids.iter().enumerate() {
+        print!("{task:<14}");
+        for c in 0..cfgs.len() {
+            print!(" {:>9.1}", sweep.scores[c][ti]);
+        }
+        println!();
+    }
+    print!("{:<14}", "AVERAGE");
+    for c in 0..cfgs.len() {
+        print!(" {:>9.1}", sweep.average(c));
+    }
+    println!();
+    Ok(())
+}

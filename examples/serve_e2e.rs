@@ -1,0 +1,51 @@
+//! End-to-end serving driver (the DESIGN.md §8 required example).
+//!
+//! Loads the trained model, starts the continuous-batching engine with
+//! the Mustafar compressed-KV path, serves a batched trace of synthetic
+//! long-context requests, and reports throughput / latency / KV memory —
+//! dense vs Mustafar 50% vs 70%. Recorded in EXPERIMENTS.md.
+//!
+//!   make artifacts && cargo run --release --example serve_e2e
+
+use mustafar::config::{Backend, EngineConfig, SparsityConfig};
+use mustafar::coordinator::{Engine, Request};
+use mustafar::model::{NativeModel, Weights};
+use mustafar::workload::trace::uniform_trace;
+
+fn run(model: &str, backend: Backend, ks: f64, vs: f64, label: &str) -> mustafar::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let weights = Weights::load(dir, model)?;
+    let mut ec = EngineConfig::default();
+    ec.backend = backend;
+    ec.sparsity = SparsityConfig::mustafar(ks, vs);
+    ec.max_batch = 8;
+    ec.max_new_tokens = 96;
+    let mut engine = Engine::new_native(NativeModel::new(weights), ec);
+
+    let reqs: Vec<Request> = uniform_trace(21, 16, 448, 96)
+        .into_iter()
+        .map(|t| Request::new(t.id, t.prompt, t.max_new_tokens))
+        .collect();
+    let completions = engine.run_trace(reqs)?;
+    let m = &engine.metrics;
+    let lat = m.latency_summary().unwrap();
+    println!(
+        "{label:<12} | {:>7.1} tok/s | p50 {:>7.0} ms  p95 {:>7.0} ms | kv rate {:>5.1}% | {} reqs, mean batch {:.1}",
+        m.tokens_per_sec(),
+        lat.p50,
+        lat.p95,
+        m.kv_compression_rate() * 100.0,
+        completions.len(),
+        m.mean_batch(),
+    );
+    Ok(())
+}
+
+fn main() -> mustafar::Result<()> {
+    println!("=== serve_e2e: 16 requests, in 448 / gen 96, max batch 8 (gqa-small) ===");
+    run("gqa-small", Backend::NativeDense, 0.0, 0.0, "dense")?;
+    run("gqa-small", Backend::NativeSparse, 0.5, 0.5, "K0.5 V0.5")?;
+    run("gqa-small", Backend::NativeSparse, 0.7, 0.7, "K0.7 V0.7")?;
+    println!("\n(compare with `cargo bench --bench fig7_throughput` for the full sweep)");
+    Ok(())
+}

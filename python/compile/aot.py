@@ -1,0 +1,220 @@
+"""AOT lowering: JAX (L2+L1) -> HLO *text* artifacts for the Rust runtime.
+
+HLO text — not `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (per model config, plus a smoke computation):
+
+  smoke.hlo.txt                    pallas (x@y+2) round-trip self-test
+  prefill_{cfg}.hlo.txt            weights..., tokens[1,S] -> logits, K, V
+  decode_dense_{cfg}.hlo.txt       weights..., token[1], cur_len, caches
+  decode_sparse_{cfg}_k{kk}.hlo.txt  the Mustafar decode step (L1 kernel)
+  attn_sparse_{cfg}_k{kk}.hlo.txt  standalone single-head sparse attention
+
+Every artifact takes the model weights as leading positional parameters
+(manifest order) so the Rust runtime keeps them device-resident via
+`execute_b`.  IO signatures are recorded in artifacts.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.sparse_attention import sparse_attention_head
+
+# Compressed-region capacity (tokens) and dense-tail capacity per artifact.
+# Tail = 64-token compression group in flight + 32-token local window.
+TAIL_CAP = 96
+LOCAL_WINDOW = 32
+
+# kept-elements-per-token variants to AOT (hd=64: 32 -> 50%, 20 -> ~70%)
+KK_BY_HD = {64: (32, 20), 32: (16, 10)}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _weight_specs(cfg: M.ModelCfg) -> List[jax.ShapeDtypeStruct]:
+    return [_spec(shape) for _, shape in M.param_manifest(cfg)]
+
+
+def _io_entry(name: str, args: List[jax.ShapeDtypeStruct], n_weights: int,
+              outputs: List[str]) -> Dict:
+    return dict(
+        name=name,
+        n_weights=n_weights,
+        inputs=[dict(shape=list(a.shape), dtype=str(a.dtype)) for a in args],
+        outputs=outputs,
+    )
+
+
+def lower_smoke(out_dir: str) -> Dict:
+    from jax.experimental import pallas as pl
+
+    def kernel(x_ref, y_ref, o_ref):
+        o_ref[...] = x_ref[...] @ y_ref[...] + 2.0
+
+    def fn(x, y):
+        return pl.pallas_call(
+            kernel, out_shape=jax.ShapeDtypeStruct((2, 2), jnp.float32),
+            interpret=True)(x, y)
+
+    spec = _spec((2, 2))
+    text = to_hlo_text(jax.jit(fn).lower(spec, spec))
+    path = os.path.join(out_dir, "smoke.hlo.txt")
+    open(path, "w").write(text)
+    return _io_entry("smoke", [spec, spec], 0, ["out[2,2]"])
+
+
+def lower_prefill(cfg: M.ModelCfg, seq: int, out_dir: str) -> Dict:
+    ws = _weight_specs(cfg)
+    tok = _spec((1, seq), jnp.int32)
+
+    def fn(params, tokens):
+        return M.prefill(cfg, params, tokens)
+
+    text = to_hlo_text(jax.jit(fn).lower(ws, tok))
+    open(os.path.join(out_dir, f"prefill_{cfg.name}.hlo.txt"), "w").write(text)
+    return _io_entry(f"prefill_{cfg.name}", ws + [tok], len(ws),
+                     [f"logits[1,{seq},{cfg.vocab}]",
+                      f"k[{cfg.n_layers},1,{cfg.n_kv_heads},{seq},{cfg.head_dim}]",
+                      f"v[{cfg.n_layers},1,{cfg.n_kv_heads},{seq},{cfg.head_dim}]"])
+
+
+def lower_decode_dense(cfg: M.ModelCfg, tmax: int, out_dir: str) -> Dict:
+    ws = _weight_specs(cfg)
+    tok = _spec((1,), jnp.int32)
+    cur = _spec((), jnp.int32)
+    kc = _spec((cfg.n_layers, 1, cfg.n_kv_heads, tmax, cfg.head_dim))
+    vc = _spec((cfg.n_layers, 1, cfg.n_kv_heads, tmax, cfg.head_dim))
+
+    def fn(params, token, cur_len, k_cache, v_cache):
+        return M.decode_step_dense(cfg, params, token, cur_len, k_cache, v_cache)
+
+    text = to_hlo_text(jax.jit(fn).lower(ws, tok, cur, kc, vc))
+    open(os.path.join(out_dir, f"decode_dense_{cfg.name}.hlo.txt"), "w").write(text)
+    return _io_entry(f"decode_dense_{cfg.name}", ws + [tok, cur, kc, vc], len(ws),
+                     [f"logits[1,{cfg.vocab}]", "k_cache'", "v_cache'"])
+
+
+def lower_decode_sparse(cfg: M.ModelCfg, tc: int, kk: int, out_dir: str) -> Dict:
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    ws = _weight_specs(cfg)
+    args = [
+        _spec((), jnp.int32),               # token
+        _spec((), jnp.int32),               # pos
+        _spec((L, KV, tc, kk)),             # k_vals
+        _spec((L, KV, tc, kk), jnp.int32),  # k_idx
+        _spec((L, KV, tc, kk)),             # v_vals
+        _spec((L, KV, tc, kk), jnp.int32),  # v_idx
+        _spec((), jnp.int32),               # nc
+        _spec((L, KV, TAIL_CAP, hd)),       # tail_k
+        _spec((L, KV, TAIL_CAP, hd)),       # tail_v
+        _spec((), jnp.int32),               # tail_len
+    ]
+
+    def fn(params, *rest):
+        return M.decode_step_sparse(cfg, params, *rest)
+
+    text = to_hlo_text(jax.jit(fn).lower(ws, *args))
+    name = f"decode_sparse_{cfg.name}_k{kk}"
+    open(os.path.join(out_dir, f"{name}.hlo.txt"), "w").write(text)
+    return _io_entry(name, ws + args, len(ws),
+                     [f"logits[{cfg.vocab}]", f"new_k[{L},{KV},{hd}]",
+                      f"new_v[{L},{KV},{hd}]"])
+
+
+def lower_attn_sparse(cfg: M.ModelCfg, tc: int, kk: int, out_dir: str) -> Dict:
+    hd = cfg.head_dim
+    args = [
+        _spec((hd,)),                   # q
+        _spec((tc, kk)),                # k_vals
+        _spec((tc, kk), jnp.int32),     # k_idx
+        _spec((tc, kk)),                # v_vals
+        _spec((tc, kk), jnp.int32),     # v_idx
+        _spec((), jnp.int32),           # nc
+        _spec((TAIL_CAP, hd)),          # tail_k
+        _spec((TAIL_CAP, hd)),          # tail_v
+        _spec((), jnp.int32),           # tail_len
+        _spec((hd,)),                   # new_k
+        _spec((hd,)),                   # new_v
+    ]
+
+    def fn(q, k_vals, k_idx, v_vals, v_idx, nc, tail_k, tail_v, tail_len, new_k, new_v):
+        return (sparse_attention_head(
+            q, k_vals, k_idx, v_vals, v_idx, nc, tail_k, tail_v, tail_len,
+            new_k, new_v, scale=1.0 / math.sqrt(hd)),)
+
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    name = f"attn_sparse_{cfg.name}_k{kk}"
+    open(os.path.join(out_dir, f"{name}.hlo.txt"), "w").write(text)
+    return _io_entry(name, args, 0, [f"out[{hd}]"])
+
+
+# Per-config AOT shape choices (prefill length, dense cache capacity,
+# compressed-region capacity).
+AOT_SHAPES = {
+    "tiny": dict(seq=128, tmax=256, tc=256),
+    "gqa-small": dict(seq=512, tmax=1024, tc=1024),
+    "mha-small": dict(seq=512, tmax=1024, tc=1024),
+    "gqa-medium": dict(seq=512, tmax=1024, tc=1024),
+}
+
+
+def lower_config(name: str, out_dir: str) -> List[Dict]:
+    cfg = M.CONFIGS[name]
+    sh = AOT_SHAPES[name]
+    entries = [
+        lower_prefill(cfg, sh["seq"], out_dir),
+        lower_decode_dense(cfg, sh["tmax"], out_dir),
+    ]
+    for kk in KK_BY_HD[cfg.head_dim]:
+        entries.append(lower_decode_sparse(cfg, sh["tc"], kk, out_dir))
+        entries.append(lower_attn_sparse(cfg, sh["tc"], kk, out_dir))
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cfg", default=None)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = ["tiny", "gqa-small", "mha-small", "gqa-medium"] if args.all else [args.cfg]
+
+    index: List[Dict] = [lower_smoke(args.out)]
+    for name in names:
+        print(f"[aot] lowering {name} ...", flush=True)
+        index += lower_config(name, args.out)
+
+    meta = dict(local_window=LOCAL_WINDOW, tail_cap=TAIL_CAP,
+                kk_by_hd={str(k): list(v) for k, v in KK_BY_HD.items()},
+                artifacts=index)
+    with open(os.path.join(args.out, "artifacts.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"[aot] wrote {len(index)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,297 @@
+"""Synthetic language used for training the Mustafar evaluation models.
+
+The paper evaluates on LongBench with pretrained 7-8B models; neither is
+available here, so we train small transformers from scratch on a
+deterministic synthetic language whose segments exercise the same skills
+the LongBench categories probe (retrieval, multi-doc aggregation,
+recap/summarization, few-shot induction, counting, code structure).
+
+IMPORTANT: this module is mirrored token-for-token by the Rust side
+(`rust/src/workload/lang.rs`).  Any change here must be reflected there;
+the pair is locked by golden-file tests
+(`python/tests/test_lang_golden.py` and `cargo test lang_golden`).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+# ---------------------------------------------------------------------------
+# Vocabulary layout (mirrored in rust/src/workload/lang.rs)
+# ---------------------------------------------------------------------------
+
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+KEY, VAL, QUERY, ANS = 4, 5, 6, 7
+DOC, ENDDOC, SUM, MAP = 8, 9, 10, 11
+ARROW, CNT, ITEM, RECAP = 12, 13, 14, 15
+
+NAME0, N_NAMES = 16, 128  # entity names              16..143
+VAL0, N_VALS = 144, 128   # answer values             144..271
+WORD0, N_WORDS = 272, 192 # filler words              272..463
+CODE0 = 464               # code tokens               464..511
+OPEN_PAREN, CLOSE_PAREN = 464, 465
+OPEN_BRACK, CLOSE_BRACK = 466, 467
+OPEN_BRACE, CLOSE_BRACE = 468, 469
+IDENT0, N_IDENTS = 470, 42
+VOCAB = 512
+
+OPENERS = (OPEN_PAREN, OPEN_BRACK, OPEN_BRACE)
+CLOSERS = (CLOSE_PAREN, CLOSE_BRACK, CLOSE_BRACE)
+
+
+# ---------------------------------------------------------------------------
+# PCG32 — identical bit-for-bit to rust/src/util/rng.rs
+# ---------------------------------------------------------------------------
+
+_M64 = (1 << 64) - 1
+_MUL = 6364136223846793005
+
+
+class Pcg32:
+    """Minimal PCG32 (XSH-RR) generator, mirrored in Rust."""
+
+    def __init__(self, initstate: int, initseq: int = 54):
+        self.state = 0
+        self.inc = ((initseq << 1) | 1) & _M64
+        self.next_u32()
+        self.state = (self.state + initstate) & _M64
+        self.next_u32()
+
+    def next_u32(self) -> int:
+        old = self.state
+        self.state = (old * _MUL + self.inc) & _M64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((32 - rot) & 31))) & 0xFFFFFFFF
+
+    def below(self, n: int) -> int:
+        """Uniform-ish integer in [0, n). Modulo bias is acceptable and keeps
+        the Rust mirror trivial."""
+        return self.next_u32() % n
+
+    def name(self) -> int:
+        return NAME0 + self.below(N_NAMES)
+
+    def value(self) -> int:
+        return VAL0 + self.below(N_VALS)
+
+    def word(self) -> int:
+        return WORD0 + self.below(N_WORDS)
+
+
+# ---------------------------------------------------------------------------
+# Segment generators. Each returns a token list. The *order of rng draws*
+# is part of the spec (the Rust mirror must draw in the same order).
+# ---------------------------------------------------------------------------
+
+
+def seg_kv_facts(rng: Pcg32) -> List[int]:
+    """[KEY name val SEP]*n then two queries over the stated pairs.
+
+    Values directly follow names (adjacency) so the retrieval skill is the
+    canonical induction-head task — learnable within a CPU token budget."""
+    n = 4 + rng.below(5)
+    names: List[int] = []
+    vals: List[int] = []
+    out: List[int] = []
+    for _ in range(n):
+        nm = rng.name()
+        while nm in names:  # distinct names within a segment
+            nm = rng.name()
+        v = rng.value()
+        names.append(nm)
+        vals.append(v)
+        out += [KEY, nm, v, SEP]
+    for _ in range(2):
+        i = rng.below(n)
+        out += [QUERY, names[i], vals[i], SEP]
+    return out
+
+
+def seg_doc_facts(rng: Pcg32) -> List[int]:
+    """Documents holding ARROW facts, then queries across documents."""
+    ndocs = 2 + rng.below(3)
+    names: List[int] = []
+    vals: List[int] = []
+    out: List[int] = []
+    for _ in range(ndocs):
+        doc_name = rng.name()
+        out += [DOC, doc_name]
+        for _ in range(2):
+            nm = rng.name()
+            while nm in names:
+                nm = rng.name()
+            v = rng.value()
+            names.append(nm)
+            vals.append(v)
+            out += [ARROW, nm, v, SEP]
+        out += [ENDDOC]
+    for _ in range(2):
+        i = rng.below(len(names))
+        out += [QUERY, names[i], vals[i], SEP]
+    return out
+
+
+def seg_recap(rng: Pcg32) -> List[int]:
+    """[SUM] w1..wm [RECAP] w1..w8 — teaches long-range copy/summary."""
+    m = 12 + rng.below(9)
+    words = [rng.word() for _ in range(m)]
+    return [SUM] + words + [RECAP] + words[:8] + [SEP]
+
+
+def fewshot_map(name_tok: int, offset: int) -> int:
+    return VAL0 + ((name_tok - NAME0) + offset) % N_VALS
+
+
+def seg_fewshot(rng: Pcg32) -> List[int]:
+    """In-context mapping f(name_i) = val_{(i+offset) mod N}; query a held-out
+    name. Teaches induction over an in-context rule."""
+    offset = 1 + rng.below(31)
+    k = 3 + rng.below(3)
+    out: List[int] = []
+    seen: List[int] = []
+    for _ in range(k):
+        nm = rng.name()
+        while nm in seen:
+            nm = rng.name()
+        seen.append(nm)
+        out += [MAP, nm, fewshot_map(nm, offset), SEP]
+    nm = rng.name()
+    while nm in seen:
+        nm = rng.name()
+    out += [QUERY, nm, fewshot_map(nm, offset), SEP]
+    return out
+
+
+def seg_count(rng: Pcg32) -> List[int]:
+    """ITEM x repeated k times, then CNT x ANS <k>."""
+    k = 2 + rng.below(9)
+    item = rng.name()
+    out: List[int] = []
+    for _ in range(k):
+        out += [ITEM, item]
+    out += [CNT, item, ANS, VAL0 + k, SEP]
+    return out
+
+
+def seg_code(rng: Pcg32) -> List[int]:
+    """Balanced bracket sequence with identifiers, closed in order at the
+    end — teaches structural (code-like) prediction."""
+    out: List[int] = []
+    stack: List[int] = []
+    steps = 10 + rng.below(13)
+    for _ in range(steps):
+        r = rng.below(4)
+        if r == 0 and len(stack) < 6:
+            b = rng.below(3)
+            out.append(OPENERS[b])
+            stack.append(CLOSERS[b])
+        elif r == 1 and stack:
+            out.append(stack.pop())
+        else:
+            out.append(IDENT0 + rng.below(N_IDENTS))
+    while stack:
+        out.append(stack.pop())
+    out.append(SEP)
+    return out
+
+
+def seg_filler(rng: Pcg32) -> List[int]:
+    """Deterministic bigram chain over filler words."""
+    m = 8 + rng.below(17)
+    cur = rng.below(N_WORDS)
+    out = [WORD0 + cur]
+    for _ in range(m - 1):
+        cur = (cur * 17 + 7 + rng.below(8)) % N_WORDS
+        out.append(WORD0 + cur)
+    out.append(SEP)
+    return out
+
+
+SEGMENT_FNS = (
+    seg_kv_facts,
+    seg_doc_facts,
+    seg_recap,
+    seg_fewshot,
+    seg_count,
+    seg_code,
+    seg_filler,
+)
+
+# Mixture weights (out of 16): retrieval-ish skills get extra mass because
+# most LongBench-sim tasks probe them.
+SEGMENT_WEIGHTS = (4, 3, 2, 2, 1, 2, 2)
+_WEIGHT_SUM = sum(SEGMENT_WEIGHTS)
+
+
+def next_segment(rng: Pcg32) -> List[int]:
+    r = rng.below(_WEIGHT_SUM)
+    acc = 0
+    for fn, w in zip(SEGMENT_FNS, SEGMENT_WEIGHTS):
+        acc += w
+        if r < acc:
+            return fn(rng)
+    raise AssertionError("unreachable")
+
+
+def scan_facts(tokens: List[int]) -> List[tuple]:
+    """Collect (name, value) facts stated anywhere in a token stream:
+    any name token directly followed by a value token (the adjacency
+    grammar of KEY/ARROW/MAP/QUERY statements). Later statements win
+    (recency), so document-end queries are unambiguous."""
+    facts = {}
+    for i in range(len(tokens) - 1):
+        nm, v = tokens[i], tokens[i + 1]
+        if (NAME0 <= nm < NAME0 + N_NAMES) and (VAL0 <= v < VAL0 + N_VALS):
+            facts[nm] = v
+    return list(facts.items())
+
+
+def gen_document(rng: Pcg32, seq_len: int) -> List[int]:
+    """One training document: BOS + segments + *long-range queries*.
+
+    The trailing queries revisit facts stated anywhere in the document,
+    which teaches retrieval across hundreds of tokens — the skill the
+    LongBench-sim tasks (and KV-cache pruning quality) probe."""
+    out = [BOS]
+    while len(out) < seq_len - 28:
+        out += next_segment(rng)
+    facts = scan_facts(out)
+    if facts:
+        for _ in range(3):
+            name, val = facts[rng.below(len(facts))]
+            out += [QUERY, name, val, SEP]
+    while len(out) < seq_len:
+        out += next_segment(rng)
+    return out[:seq_len]
+
+
+def corpus_batches(seed: int, batch: int, seq_len: int):
+    """Infinite iterator of [batch, seq_len] int32 documents."""
+    import numpy as np
+
+    doc_idx = 0
+    while True:
+        docs = []
+        for _ in range(batch):
+            rng = Pcg32(seed * 1_000_003 + doc_idx, 54)
+            docs.append(gen_document(rng, seq_len))
+            doc_idx += 1
+        yield np.asarray(docs, dtype=np.int32)
+
+
+@dataclass
+class LangSpec:
+    """Constants bundle handed to tests and the exporter."""
+
+    vocab: int = VOCAB
+    n_names: int = N_NAMES
+    n_vals: int = N_VALS
+    n_words: int = N_WORDS
+
+
+def golden_trace(seed: int = 42, n: int = 256) -> List[int]:
+    """First n tokens of the document stream for the golden-sync test."""
+    rng = Pcg32(seed, 54)
+    return gen_document(rng, n)

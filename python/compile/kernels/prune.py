@@ -1,0 +1,64 @@
+"""L1 — Pallas per-token magnitude pruning kernel.
+
+The paper prunes + compresses at runtime on the GPU (Triton).  Here the
+prune step is a Pallas kernel tiled over 64-token groups: each grid step
+selects the kk largest-magnitude elements of each token's K (or V) vector
+and emits the compressed (values, indices) pair directly — selection and
+compression fused, which is what makes the paper's runtime overhead small
+(Fig 6a: 1.8% prune / 6.3% compress of dense MV time).
+
+Tie-break convention (mirrored by the Rust pruner and ref.py): among equal
+magnitudes the lower index wins; kept indices are stored ascending.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 64
+
+
+def _prune_kernel(x_ref, vals_ref, idx_ref, *, kk: int):
+    x = x_ref[...]  # [TILE, D]
+    # lax.top_k is tie-stable: equal values keep the lower index first.
+    _, top_idx = jax.lax.top_k(jnp.abs(x), kk)
+    idx = jnp.sort(top_idx, axis=-1).astype(jnp.int32)
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    vals_ref[...] = vals
+    idx_ref[...] = idx
+
+
+@functools.partial(jax.jit, static_argnames=("kk", "interpret"))
+def prune_per_token(x: jax.Array, kk: int, interpret: bool = True):
+    """x [T, D] -> (vals [T, kk], idx [T, kk] int32); T % 64 == 0."""
+    t, d = x.shape
+    assert t % TILE == 0, f"T={t} must be a multiple of {TILE}"
+    assert 0 < kk <= d
+    return pl.pallas_call(
+        functools.partial(_prune_kernel, kk=kk),
+        grid=(t // TILE,),
+        in_specs=[pl.BlockSpec((TILE, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((TILE, kk), lambda i: (i, 0)),
+            pl.BlockSpec((TILE, kk), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, kk), x.dtype),
+            jax.ShapeDtypeStruct((t, kk), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def keep_count(d: int, sparsity: float) -> int:
+    """Number of kept elements per token for a target sparsity.
+
+    round-half-up of d*(1-s), floored at 1 — mirrored in rust/src/prune.
+    """
+    import math
+
+    return max(1, int(math.floor(d * (1.0 - sparsity) + 0.5)))

@@ -1,0 +1,72 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are written independently of the kernels (argsort-based selection,
+dense one-hot scatter, dense attention) and are the ground truth for the
+pytest / hypothesis sweeps in `python/tests/`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_prune_per_token(x: jnp.ndarray, kk: int):
+    """Per-token magnitude pruning oracle.
+
+    x [T, D] -> (vals [T, kk], idx [T, kk] int32).  Keeps the kk
+    largest-|.| elements per row; ties prefer the *lower* index; the kept
+    indices are reported in ascending order (the storage order of the
+    compressed format).
+    """
+    # stable argsort of -|x| == sort by (|x| desc, idx asc)
+    order = jnp.argsort(-jnp.abs(x), axis=-1, stable=True)[:, :kk]
+    idx = jnp.sort(order, axis=-1).astype(jnp.int32)
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx
+
+
+def densify(vals: jnp.ndarray, idx: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(vals, idx) [T, kk] -> dense [T, d] by one-hot scatter."""
+    onehot = (idx[..., None] == jnp.arange(d)).astype(vals.dtype)
+    return jnp.einsum("tk,tkd->td", vals, onehot)
+
+
+def ref_masked_dense(x: jnp.ndarray, kk: int) -> jnp.ndarray:
+    """Dense matrix with everything but the per-token top-kk zeroed."""
+    vals, idx = ref_prune_per_token(x, kk)
+    return densify(vals, idx, x.shape[-1])
+
+
+def ref_sparse_qk(q: jnp.ndarray, k_vals: jnp.ndarray, k_idx: jnp.ndarray) -> jnp.ndarray:
+    """scores [T] = densify(K) @ q."""
+    return densify(k_vals, k_idx, q.shape[-1]) @ q
+
+
+def ref_sparse_av(att: jnp.ndarray, v_vals: jnp.ndarray, v_idx: jnp.ndarray, d: int) -> jnp.ndarray:
+    """out [d] = att @ densify(V)."""
+    return att @ densify(v_vals, v_idx, d)
+
+
+def ref_attention_head(q, keys, values, scale):
+    """Dense single-query attention: q [hd], keys/values [T, hd] -> [hd]."""
+    import jax
+
+    att = (keys @ q) * scale
+    att = jax.nn.softmax(att)
+    return att @ values
+
+
+def ref_sparse_attention_head(q, k_vals, k_idx, v_vals, v_idx, nc,
+                              tail_k, tail_v, tail_len, new_k, new_v, scale):
+    """Oracle for kernels.sparse_attention.sparse_attention_head: densify
+    the compressed cache, concatenate the valid dense tail and the new
+    token's K/V, and run dense attention."""
+    import jax
+
+    hd = q.shape[-1]
+    kc = densify(k_vals, k_idx, hd)[:nc]
+    vc = densify(v_vals, v_idx, hd)[:nc]
+    keys = jnp.concatenate([kc, tail_k[:tail_len], new_k[None]], axis=0)
+    values = jnp.concatenate([vc, tail_v[:tail_len], new_v[None]], axis=0)
+    att = jax.nn.softmax((keys @ q) * scale)
+    return att @ values

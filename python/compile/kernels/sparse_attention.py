@@ -1,0 +1,170 @@
+"""L1 — Pallas sparse decode-attention over the compressed KV cache.
+
+GPU -> TPU adaptation of the paper's kernel (DESIGN.md §3): the paper's
+warp decompresses bitmap tiles from global memory into shared memory and
+feeds tensor cores ("load-as-compressed, compute-as-dense", Fig 8).  Here
+each Pallas grid step plays the role of one warp-tile: it receives the
+*compressed* operands of a 64-token tile in VMEM ((values, indices) pairs
+with constant per-token nnz — per-token pruning keeps exactly k elements,
+so the format is rectangular), densifies them into a VMEM scratch tile
+(`extract`), and runs a dense MXU dot.  HBM->VMEM traffic moves only the
+compressed bytes, which is the entire point of the paper's SpMV.
+
+Kernels MUST run with interpret=True in this image: real TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 64  # tokens per tile — matches the paper's 1x64 tile granularity
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: sparse K . q  (the Key x Query^T MV of the decode step)
+# ---------------------------------------------------------------------------
+
+
+def _sparse_qk_kernel(k_vals_ref, k_idx_ref, q_ref, out_ref):
+    """One grid step = one 64-token tile.
+
+    k_vals/k_idx: [TILE, kk] compressed tile; q: [hd]; out: [TILE] scores.
+    """
+    vals = k_vals_ref[...]
+    idx = k_idx_ref[...]
+    q = q_ref[...]
+    hd = q.shape[-1]
+    # 'extract': densify the compressed tile into a [TILE, hd] VMEM tile.
+    onehot = (idx[..., None] == jnp.arange(hd, dtype=idx.dtype)).astype(vals.dtype)
+    dense_tile = jnp.einsum("tk,tkh->th", vals, onehot)
+    # 'compute-as-dense': MXU-shaped MV over the densified tile.
+    out_ref[...] = dense_tile @ q
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparse_qk(q: jax.Array, k_vals: jax.Array, k_idx: jax.Array,
+              interpret: bool = True) -> jax.Array:
+    """scores [Tc] = densify(k_vals, k_idx) @ q.
+
+    q [hd]; k_vals [Tc, kk] f32; k_idx [Tc, kk] int32; Tc % 64 == 0.
+    Padding rows must carry vals == 0 (they then contribute score 0 and are
+    masked by the caller before softmax).
+    """
+    tc, kk = k_vals.shape
+    assert tc % TILE == 0, f"Tc={tc} must be a multiple of {TILE}"
+    hd = q.shape[-1]
+    return pl.pallas_call(
+        _sparse_qk_kernel,
+        grid=(tc // TILE,),
+        in_specs=[
+            pl.BlockSpec((TILE, kk), lambda i: (i, 0)),
+            pl.BlockSpec((TILE, kk), lambda i: (i, 0)),
+            pl.BlockSpec((hd,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((tc,), q.dtype),
+        interpret=interpret,
+    )(k_vals, k_idx, q)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: att^T . sparse V  (the AttentionScore x Value MV)
+# ---------------------------------------------------------------------------
+
+
+def _sparse_av_kernel(att_ref, v_vals_ref, v_idx_ref, out_ref):
+    """Accumulating tile kernel: out [hd] += att_tile @ densify(v_tile)."""
+    att = att_ref[...]
+    vals = v_vals_ref[...]
+    idx = v_idx_ref[...]
+    hd = out_ref.shape[-1]
+    onehot = (idx[..., None] == jnp.arange(hd, dtype=idx.dtype)).astype(vals.dtype)
+    dense_tile = jnp.einsum("tk,tkh->th", vals, onehot)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += att @ dense_tile
+
+
+@functools.partial(jax.jit, static_argnames=("hd", "interpret"))
+def sparse_av(att: jax.Array, v_vals: jax.Array, v_idx: jax.Array, hd: int,
+              interpret: bool = True) -> jax.Array:
+    """out [hd] = att @ densify(v_vals, v_idx).
+
+    att [Tc] (already softmax-normalized, zero on padding rows);
+    v_vals [Tc, kk]; v_idx [Tc, kk] int32.
+    """
+    tc, kk = v_vals.shape
+    assert tc % TILE == 0, f"Tc={tc} must be a multiple of {TILE}"
+    return pl.pallas_call(
+        _sparse_av_kernel,
+        grid=(tc // TILE,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE, kk), lambda i: (i, 0)),
+            pl.BlockSpec((TILE, kk), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((hd,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((hd,), att.dtype),
+        interpret=interpret,
+    )(att, v_vals, v_idx)
+
+
+# ---------------------------------------------------------------------------
+# Full single-head sparse decode attention (L2-facing; Fig 5a structure)
+# ---------------------------------------------------------------------------
+
+
+def sparse_attention_head(q: jax.Array,
+                          k_vals: jax.Array, k_idx: jax.Array,
+                          v_vals: jax.Array, v_idx: jax.Array, nc: jax.Array,
+                          tail_k: jax.Array, tail_v: jax.Array, tail_len: jax.Array,
+                          new_k: jax.Array, new_v: jax.Array,
+                          scale: float, interpret: bool = True) -> jax.Array:
+    """Mustafar decode attention for one head (Fig 5a):
+
+        scores = [ SpMV(compressed K, q) | dense MV(local-window K, q) | new ]
+        att    = softmax(scores)
+        out    =   SpMV(att_c, compressed V) + dense MV(att_w, window V)
+                 + att_new * new_v
+
+    q [hd]; k_vals/k_idx/v_vals/v_idx [Tc, kk]; nc scalar int32 (valid
+    compressed tokens <= Tc); tail_k/tail_v [W, hd] dense local window with
+    tail_len valid entries; new_k/new_v [hd] the current token's K/V.
+    """
+    hd = q.shape[-1]
+    tc = k_vals.shape[0]
+    w = tail_k.shape[0]
+
+    # --- scores ---------------------------------------------------------
+    s_comp = sparse_qk(q, k_vals, k_idx, interpret=interpret) * scale
+    s_tail = (tail_k @ q) * scale
+    s_new = jnp.dot(new_k, q) * scale
+
+    valid_c = jnp.arange(tc) < nc
+    valid_t = jnp.arange(w) < tail_len
+    s_comp = jnp.where(valid_c, s_comp, -1e30)
+    s_tail = jnp.where(valid_t, s_tail, -1e30)
+
+    # --- numerically-stable softmax across the three score groups -------
+    m = jnp.maximum(jnp.maximum(jnp.max(s_comp), jnp.max(s_tail)), s_new)
+    e_comp = jnp.where(valid_c, jnp.exp(s_comp - m), 0.0)
+    e_tail = jnp.where(valid_t, jnp.exp(s_tail - m), 0.0)
+    e_new = jnp.exp(s_new - m)
+    denom = e_comp.sum() + e_tail.sum() + e_new
+
+    a_comp = e_comp / denom
+    a_tail = e_tail / denom
+    a_new = e_new / denom
+
+    # --- values ----------------------------------------------------------
+    o_comp = sparse_av(a_comp, v_vals, v_idx, hd, interpret=interpret)
+    o_tail = a_tail @ tail_v
+    return o_comp + o_tail + a_new * new_v

@@ -1,0 +1,372 @@
+"""L2 — JAX transformer used by the Mustafar reproduction.
+
+Pure-JAX (no flax/optax in the image): parameters are a flat *list* of
+arrays in a fixed manifest order so the Rust runtime can feed the AOT
+artifacts positionally and load the same weights from `weights_{cfg}.bin`.
+
+The architecture is a small Llama-style decoder: RMSNorm, RoPE, GQA/MHA
+attention, SwiGLU MLP, untied LM head.  `mha-small` plays the role of
+Llama-2-7B (MHA), `gqa-small` of Llama-3-8B-Instruct (GQA),
+`gqa-medium` of Llama-2-13B in the paper's tables.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import data as langdata
+from .kernels.sparse_attention import sparse_attention_head
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    ff: int
+    vocab: int = langdata.VOCAB
+    rope_theta: float = 10000.0
+    max_seq: int = 1024
+    norm_eps: float = 1e-5
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+CONFIGS = {
+    # unit-test scale
+    "tiny": ModelCfg("tiny", d_model=64, n_layers=2, n_heads=2, n_kv_heads=1,
+                     head_dim=32, ff=128, max_seq=256),
+    # llama-3-8B-Instruct stand-in (GQA)
+    "gqa-small": ModelCfg("gqa-small", d_model=256, n_layers=6, n_heads=4,
+                          n_kv_heads=2, head_dim=64, ff=512),
+    # llama-2-7B / mistral stand-in (MHA)
+    "mha-small": ModelCfg("mha-small", d_model=256, n_layers=6, n_heads=4,
+                          n_kv_heads=4, head_dim=64, ff=512),
+    # llama-2-13B stand-in (larger)
+    "gqa-medium": ModelCfg("gqa-medium", d_model=384, n_layers=8, n_heads=6,
+                           n_kv_heads=2, head_dim=64, ff=768),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter manifest — order is the ABI between python and rust.
+# ---------------------------------------------------------------------------
+
+
+def param_manifest(cfg: ModelCfg) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) for every parameter, in ABI order."""
+    out: List[Tuple[str, Tuple[int, ...]]] = [("tok_emb", (cfg.vocab, cfg.d_model))]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        out += [
+            (p + "attn_norm", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.q_dim)),
+            (p + "wk", (cfg.d_model, cfg.kv_dim)),
+            (p + "wv", (cfg.d_model, cfg.kv_dim)),
+            (p + "wo", (cfg.q_dim, cfg.d_model)),
+            (p + "mlp_norm", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.ff)),
+            (p + "w_up", (cfg.d_model, cfg.ff)),
+            (p + "w_down", (cfg.ff, cfg.d_model)),
+        ]
+    out += [("final_norm", (cfg.d_model,)), ("lm_head", (cfg.d_model, cfg.vocab))]
+    return out
+
+
+def init_params(cfg: ModelCfg, key: jax.Array) -> List[jax.Array]:
+    params = []
+    for name, shape in param_manifest(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            std = 1.0 / math.sqrt(shape[0])
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def n_params(cfg: ModelCfg) -> int:
+    return sum(math.prod(s) for _, s in param_manifest(cfg))
+
+
+class ParamView:
+    """Named access into the flat parameter list."""
+
+    def __init__(self, cfg: ModelCfg, params: List[jax.Array]):
+        self.cfg = cfg
+        self.params = params
+        self.index = {name: i for i, (name, _) in enumerate(param_manifest(cfg))}
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.params[self.index[name]]
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables [..., head_dim/2] for the given positions."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., head_dim]; rotate-half convention (llama)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def swiglu(pv: ParamView, l: int, x: jax.Array) -> jax.Array:
+    p = f"layer{l}."
+    g = x @ pv[p + "w_gate"]
+    u = x @ pv[p + "w_up"]
+    return (jax.nn.silu(g) * u) @ pv[p + "w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Training / prefill forward (full causal attention)
+# ---------------------------------------------------------------------------
+
+
+def _forward_full(cfg: ModelCfg, params: List[jax.Array], tokens: jax.Array):
+    """Shared full-context forward; also returns the per-layer K/V caches
+    [L, B, KV, S, hd] (post-RoPE keys, exactly as the serving engine stores
+    them — pruning operates on the stored representation, like the paper)."""
+    pv = ParamView(cfg, params)
+    B, S = tokens.shape
+    x = pv["tok_emb"][tokens]
+    pos = jnp.arange(S)
+    cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta)  # [S, half]
+    mask = jnp.tril(jnp.ones((S, S), jnp.bool_))
+
+    k_caches, v_caches = [], []
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        h = rmsnorm(x, pv[p + "attn_norm"], cfg.norm_eps)
+        q = (h @ pv[p + "wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        k = (h @ pv[p + "wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ pv[p + "wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+        q = q.transpose(0, 2, 1, 3)  # [B,H,S,hd]
+        k = k.transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+        k_caches.append(k)
+        v_caches.append(v)
+        kg = jnp.repeat(k, cfg.group, axis=1)
+        vg = jnp.repeat(v, cfg.group, axis=1)
+        att = jnp.einsum("bhsd,bhtd->bhst", q, kg) / math.sqrt(cfg.head_dim)
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhst,bhtd->bhsd", att, vg)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.q_dim)
+        x = x + o @ pv[p + "wo"]
+        h = rmsnorm(x, pv[p + "mlp_norm"], cfg.norm_eps)
+        x = x + swiglu(pv, l, h)
+
+    x = rmsnorm(x, pv["final_norm"], cfg.norm_eps)
+    logits = x @ pv["lm_head"]
+    return logits, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+def forward_train(cfg: ModelCfg, params: List[jax.Array], tokens: jax.Array) -> jax.Array:
+    """tokens [B,S] -> logits [B,S,V]."""
+    return _forward_full(cfg, params, tokens)[0]
+
+
+def prefill(cfg: ModelCfg, params: List[jax.Array], tokens: jax.Array):
+    """tokens [B,S] -> (logits [B,S,V], k [L,B,KV,S,hd], v [L,B,KV,S,hd])."""
+    return _forward_full(cfg, params, tokens)
+
+
+def loss_fn(cfg: ModelCfg, params: List[jax.Array], tokens: jax.Array) -> jax.Array:
+    """Weighted next-token cross-entropy.
+
+    Positions following an ANS marker (query answers — the retrieval/
+    induction skill every LongBench-sim task probes) carry 8x weight so
+    the binding skill emerges within a CPU-sized token budget; recall that
+    most other tokens (filler, fresh facts) are irreducibly unpredictable.
+    """
+    logits = forward_train(cfg, params, tokens)
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    wt = (tgt != langdata.PAD).astype(jnp.float32)
+    # position j predicts tokens[j+1]; upweight when the input context
+    # ends with [QUERY, name] (answer positions) or with ANS (counting).
+    b = tokens.shape[0]
+    is_query_prev = jnp.concatenate(
+        [jnp.zeros((b, 1), jnp.bool_), tokens[:, :-2] == langdata.QUERY], axis=1)
+    boost = is_query_prev | (tokens[:, :-1] == langdata.ANS)
+    wt = wt * (1.0 + 7.0 * boost.astype(jnp.float32))
+    return (nll * wt).sum() / jnp.maximum(wt.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Dense decode step (AOT artifact `decode_dense_{cfg}`)
+# ---------------------------------------------------------------------------
+
+
+def decode_step_dense(cfg: ModelCfg, params: List[jax.Array], token: jax.Array,
+                      cur_len: jax.Array, k_cache: jax.Array, v_cache: jax.Array):
+    """Single-token decode over in-graph dense caches.
+
+    token [B] int32; cur_len scalar int32 = number of already-cached tokens
+    (the new token lands at position cur_len); k/v_cache [L,B,KV,Tmax,hd].
+    Returns (logits [B,V], k_cache', v_cache').
+    """
+    pv = ParamView(cfg, params)
+    B = token.shape[0]
+    Tmax = k_cache.shape[3]
+    x = pv["tok_emb"][token]  # [B,d]
+    cos, sin = rope_angles(cur_len[None], cfg.head_dim, cfg.rope_theta)
+    valid = jnp.arange(Tmax) <= cur_len  # includes the just-written slot
+
+    new_k, new_v = [], []
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        h = rmsnorm(x, pv[p + "attn_norm"], cfg.norm_eps)
+        q = (h @ pv[p + "wq"]).reshape(B, cfg.n_heads, cfg.head_dim)
+        k = (h @ pv[p + "wk"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ pv[p + "wv"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        kc = jax.lax.dynamic_update_slice(
+            k_cache[l], k[:, :, None, :], (0, 0, cur_len, 0))
+        vc = jax.lax.dynamic_update_slice(
+            v_cache[l], v[:, :, None, :], (0, 0, cur_len, 0))
+        new_k.append(kc)
+        new_v.append(vc)
+        kg = jnp.repeat(kc, cfg.group, axis=1)  # [B,H,Tmax,hd]
+        vg = jnp.repeat(vc, cfg.group, axis=1)
+        att = jnp.einsum("bhd,bhtd->bht", q, kg) / math.sqrt(cfg.head_dim)
+        att = jnp.where(valid[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bht,bhtd->bhd", att, vg).reshape(B, cfg.q_dim)
+        x = x + o @ pv[p + "wo"]
+        h = rmsnorm(x, pv[p + "mlp_norm"], cfg.norm_eps)
+        x = x + swiglu(pv, l, h)
+
+    x = rmsnorm(x, pv["final_norm"], cfg.norm_eps)
+    logits = x @ pv["lm_head"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# Sparse decode step (AOT artifact `decode_sparse_{cfg}`) — the Mustafar
+# path: compressed (pruned) KV outside the local window + dense tail.
+# ---------------------------------------------------------------------------
+
+
+def decode_step_sparse(cfg: ModelCfg, params: List[jax.Array], token: jax.Array,
+                       pos: jax.Array,
+                       k_vals: jax.Array, k_idx: jax.Array,
+                       v_vals: jax.Array, v_idx: jax.Array, nc: jax.Array,
+                       tail_k: jax.Array, tail_v: jax.Array, tail_len: jax.Array):
+    """Single-sequence (B=1) sparse decode step.
+
+    token [] int32, pos [] int32 (rope position of the new token);
+    k_vals/v_vals [L,KV,Tc,kk] f32, k_idx/v_idx [L,KV,Tc,kk] int32 —
+    per-token pruned caches in (values, indices) form (DESIGN.md §3);
+    nc [] int32 = valid compressed token count; tail_k/tail_v [L,KV,W,hd]
+    dense local window; tail_len [] int32.
+
+    Returns (logits [V], new_k [L,KV,hd], new_v [L,KV,hd]) — the host
+    (Rust KV manager) appends new_k/new_v to the tail and triggers
+    prune+compress when a 64-token group exits the local window.
+    """
+    pv = ParamView(cfg, params)
+    cos, sin = rope_angles(pos[None], cfg.head_dim, cfg.rope_theta)
+    x = pv["tok_emb"][token][None]  # [1,d]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+
+    new_k, new_v = [], []
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        h = rmsnorm(x, pv[p + "attn_norm"], cfg.norm_eps)
+        q = (h @ pv[p + "wq"]).reshape(cfg.n_heads, cfg.head_dim)
+        k = (h @ pv[p + "wk"]).reshape(cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ pv[p + "wv"]).reshape(cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        new_k.append(k)
+        new_v.append(v)
+
+        outs = []
+        for hh in range(cfg.n_heads):
+            kv = hh // cfg.group
+            outs.append(sparse_attention_head(
+                q[hh],
+                k_vals[l, kv], k_idx[l, kv], v_vals[l, kv], v_idx[l, kv], nc,
+                tail_k[l, kv], tail_v[l, kv], tail_len,
+                new_k=k[kv], new_v=v[kv], scale=scale))
+        o = jnp.stack(outs).reshape(1, cfg.q_dim)
+        x = x + o @ pv[p + "wo"]
+        h = rmsnorm(x, pv[p + "mlp_norm"], cfg.norm_eps)
+        x = x + swiglu(pv, l, h)
+
+    x = rmsnorm(x, pv["final_norm"], cfg.norm_eps)
+    logits = (x @ pv["lm_head"])[0]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# Training helpers (hand-rolled Adam; optax is not in the image)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=(1, 2))
+def train_step(cfg: ModelCfg, params, opt_state, tokens, lr):
+    """One Adam step. opt_state = (step, m, v) with m/v lists like params."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_fn(cfg, ps, tokens))(params)
+    step, m, v = opt_state
+    step = step + 1
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    m = [b1 * mi + (1 - b1) * g for mi, g in zip(m, grads)]
+    v = [b2 * vi + (1 - b2) * (g * g) for vi, g in zip(v, grads)]
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    params = [p - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+              for p, mi, vi in zip(params, m, v)]
+    return params, (step, m, v), loss
+
+
+def init_opt_state(params):
+    return (jnp.zeros((), jnp.float32),
+            [jnp.zeros_like(p) for p in params],
+            [jnp.zeros_like(p) for p in params])

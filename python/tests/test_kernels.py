@@ -1,0 +1,211 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracles in
+ref.py, including hypothesis sweeps over shapes/sparsities/dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.prune import keep_count, prune_per_token
+from compile.kernels.sparse_attention import sparse_attention_head, sparse_av, sparse_qk
+
+RNG = np.random.default_rng(0)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# prune kernel
+# ---------------------------------------------------------------------------
+
+
+class TestPrune:
+    def test_matches_oracle_basic(self):
+        x = randf(128, 64)
+        vals, idx = prune_per_token(x, 20)
+        rv, ri = ref.ref_prune_per_token(x, 20)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+        np.testing.assert_allclose(np.asarray(vals), np.asarray(rv))
+
+    def test_keeps_exactly_kk(self):
+        x = randf(64, 32)
+        vals, _ = prune_per_token(x, 10)
+        dense = ref.densify(*prune_per_token(x, 10), 32)
+        nnz = (np.asarray(dense) != 0).sum(axis=1)
+        assert (nnz <= 10).all()
+        assert vals.shape == (64, 10)
+
+    def test_tie_break_lower_index(self):
+        x = jnp.ones((64, 8), jnp.float32)
+        _, idx = prune_per_token(x, 3)
+        np.testing.assert_array_equal(np.asarray(idx[0]), [0, 1, 2])
+
+    def test_indices_sorted_ascending(self):
+        x = randf(64, 64)
+        _, idx = prune_per_token(x, 17)
+        idx = np.asarray(idx)
+        assert (np.diff(idx, axis=1) > 0).all()
+
+    def test_rejects_unaligned(self):
+        with pytest.raises(AssertionError):
+            prune_per_token(randf(63, 16), 4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        tiles=st.integers(1, 4),
+        d=st.sampled_from([8, 32, 64, 128]),
+        sparsity=st.floats(0.1, 0.95),
+    )
+    def test_hypothesis_sweep(self, tiles, d, sparsity):
+        kk = keep_count(d, sparsity)
+        t = tiles * 64
+        x = jnp.asarray(np.random.default_rng(tiles * 1000 + d).normal(size=(t, d)), jnp.float32)
+        vals, idx = prune_per_token(x, kk)
+        rv, ri = ref.ref_prune_per_token(x, kk)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+        np.testing.assert_allclose(np.asarray(vals), np.asarray(rv))
+
+    def test_keep_count_mirror(self):
+        # must match rust prune::keep_count
+        assert keep_count(64, 0.5) == 32
+        assert keep_count(64, 0.7) == 19
+        assert keep_count(128, 0.7) == 38
+        assert keep_count(64, 0.99) == 1
+
+
+# ---------------------------------------------------------------------------
+# sparse QK / AV kernels
+# ---------------------------------------------------------------------------
+
+
+class TestSpMV:
+    def test_qk_matches_oracle(self):
+        x = randf(192, 64)
+        vals, idx = prune_per_token(x, 20)
+        q = randf(64)
+        got = sparse_qk(q, vals, idx)
+        want = ref.ref_sparse_qk(q, vals, idx)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    def test_av_matches_oracle(self):
+        x = randf(128, 64)
+        vals, idx = prune_per_token(x, 32)
+        att = jnp.asarray(RNG.random(128), jnp.float32)
+        got = sparse_av(att, vals, idx, 64)
+        want = ref.ref_sparse_av(att, vals, idx, 64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+    def test_zero_padding_rows_contribute_nothing(self):
+        vals = jnp.zeros((64, 8), jnp.float32)
+        idx = jnp.zeros((64, 8), jnp.int32)
+        q = randf(32)
+        np.testing.assert_array_equal(np.asarray(sparse_qk(q, vals, idx)), np.zeros(64))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        tiles=st.integers(1, 3),
+        hd=st.sampled_from([32, 64, 128]),
+        kk_frac=st.floats(0.1, 0.9),
+    )
+    def test_hypothesis_qk_av(self, tiles, hd, kk_frac):
+        t = tiles * 64
+        kk = max(1, int(hd * kk_frac))
+        x = jnp.asarray(np.random.default_rng(hd + tiles).normal(size=(t, hd)), jnp.float32)
+        vals, idx = prune_per_token(x, kk)
+        q = jnp.asarray(np.random.default_rng(hd).normal(size=hd), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(sparse_qk(q, vals, idx)),
+            np.asarray(ref.ref_sparse_qk(q, vals, idx)),
+            atol=1e-4,
+        )
+        att = jnp.asarray(np.random.default_rng(t).random(t), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(sparse_av(att, vals, idx, hd)),
+            np.asarray(ref.ref_sparse_av(att, vals, idx, hd)),
+            atol=1e-3,
+        )
+
+
+# ---------------------------------------------------------------------------
+# full sparse attention head
+# ---------------------------------------------------------------------------
+
+
+class TestSparseAttentionHead:
+    def _case(self, nc, tail_len, hd=64, kk=20, tc=128, w=96, seed=1):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=hd), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(tc, hd)), jnp.float32)
+        k_vals, k_idx = prune_per_token(x, kk)
+        y = jnp.asarray(rng.normal(size=(tc, hd)), jnp.float32)
+        v_vals, v_idx = prune_per_token(y, kk)
+        tail_k = jnp.asarray(rng.normal(size=(w, hd)), jnp.float32)
+        tail_v = jnp.asarray(rng.normal(size=(w, hd)), jnp.float32)
+        new_k = jnp.asarray(rng.normal(size=hd), jnp.float32)
+        new_v = jnp.asarray(rng.normal(size=hd), jnp.float32)
+        got = sparse_attention_head(
+            q, k_vals, k_idx, v_vals, v_idx, jnp.int32(nc),
+            tail_k, tail_v, jnp.int32(tail_len), new_k, new_v, 0.125)
+        want = ref.ref_sparse_attention_head(
+            q, k_vals, k_idx, v_vals, v_idx, nc,
+            tail_k, tail_v, tail_len, new_k, new_v, 0.125)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+    def test_full_regions(self):
+        self._case(nc=128, tail_len=96)
+
+    def test_partial_compressed(self):
+        self._case(nc=70, tail_len=32)
+
+    def test_empty_compressed(self):
+        self._case(nc=0, tail_len=40)
+
+    def test_empty_tail(self):
+        self._case(nc=128, tail_len=0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(nc=st.integers(0, 128), tail_len=st.integers(0, 96), seed=st.integers(0, 5))
+    def test_hypothesis_boundaries(self, nc, tail_len, seed):
+        self._case(nc=nc, tail_len=tail_len, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# compressed-vs-dense equivalence at the attention level
+# ---------------------------------------------------------------------------
+
+
+def test_unpruned_pairs_match_dense_attention():
+    """kk = hd (no pruning) => sparse head == dense attention."""
+    hd, tc = 32, 64
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=hd), jnp.float32)
+    keys = jnp.asarray(rng.normal(size=(tc, hd)), jnp.float32)
+    values = jnp.asarray(rng.normal(size=(tc, hd)), jnp.float32)
+    k_vals, k_idx = prune_per_token(keys, hd)
+    v_vals, v_idx = prune_per_token(values, hd)
+    new_k = keys[-1] * 0 + 1.0
+    new_v = values[-1] * 0 + 2.0
+    got = sparse_attention_head(
+        q, k_vals, k_idx, v_vals, v_idx, jnp.int32(tc),
+        jnp.zeros((96, hd)), jnp.zeros((96, hd)), jnp.int32(0),
+        new_k, new_v, 0.3)
+    allk = jnp.concatenate([keys, new_k[None]])
+    allv = jnp.concatenate([values, new_v[None]])
+    want = ref.ref_attention_head(q, allk, allv, 0.3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_bf16_kernels_match_oracle_loosely():
+    """bf16 operands: kernels stay within bf16 tolerance of the f32 oracle."""
+    rng = np.random.default_rng(9)
+    x32 = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    x16 = x32.astype(jnp.bfloat16).astype(jnp.float32)
+    vals, idx = prune_per_token(x16, 20)
+    q = jnp.asarray(rng.normal(size=64), jnp.float32)
+    got = sparse_qk(q, vals, idx)
+    want = ref.ref_sparse_qk(q, *ref.ref_prune_per_token(x16, 20))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)

@@ -1,0 +1,34 @@
+"""Golden-file lock for the python<->rust synthetic-language mirror.
+The same file is consumed by `cargo test --test lang_golden`."""
+
+import json
+import os
+
+from compile import data as D
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_lang.json")
+
+
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def test_pcg32_stream():
+    rng = D.Pcg32(42, 54)
+    want = golden()["pcg32_42_54"]
+    got = [rng.next_u32() for _ in range(len(want))]
+    assert got == want
+
+
+def test_documents():
+    g = golden()
+    assert D.gen_document(D.Pcg32(42, 54), 256) == g["doc_seed42_len256"]
+    assert D.gen_document(D.Pcg32(7, 54), 512) == g["doc_seed7_len512"]
+
+
+def test_segments():
+    g = golden()
+    for i, fn in enumerate(D.SEGMENT_FNS):
+        key = f"seg{i}_{fn.__name__}_seed{100 + i}"
+        assert fn(D.Pcg32(100 + i, 54)) == g[key], key

@@ -1,0 +1,105 @@
+"""L2 model tests: shapes, decode/prefill consistency, sparse decode
+equivalence, manifest ABI stability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+from compile import model as M
+
+CFG = M.CONFIGS["tiny"]
+
+
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def tokens(b=2, s=64, seed=1):
+    return jnp.asarray(
+        np.asarray([D.gen_document(D.Pcg32(seed + i, 54), s) for i in range(b)], np.int32)
+    )
+
+
+class TestShapes:
+    def test_manifest_counts(self):
+        man = M.param_manifest(CFG)
+        assert len(man) == 1 + CFG.n_layers * 9 + 2
+        assert man[0][0] == "tok_emb"
+        assert man[-1][0] == "lm_head"
+
+    def test_prefill_shapes(self):
+        logits, k, v = M.prefill(CFG, params(), tokens())
+        assert logits.shape == (2, 64, CFG.vocab)
+        assert k.shape == (CFG.n_layers, 2, CFG.n_kv_heads, 64, CFG.head_dim)
+        assert v.shape == k.shape
+
+    def test_loss_finite(self):
+        loss = M.loss_fn(CFG, params(), tokens())
+        assert np.isfinite(float(loss))
+
+
+class TestDecodeConsistency:
+    def test_dense_decode_matches_prefill(self):
+        ps = params()
+        toks = tokens(b=1, s=65)
+        full, _, _ = M.prefill(CFG, ps, toks)
+        _, kp, vp = M.prefill(CFG, ps, toks[:, :64])
+        tmax = 128
+        kc = jnp.zeros((CFG.n_layers, 1, CFG.n_kv_heads, tmax, CFG.head_dim))
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[:, :, :, :64].set(kp)
+        vc = vc.at[:, :, :, :64].set(vp)
+        lg, _, _ = M.decode_step_dense(CFG, ps, toks[:, 64], jnp.int32(64), kc, vc)
+        np.testing.assert_allclose(
+            np.asarray(lg[0]), np.asarray(full[0, -1]), atol=1e-4)
+
+    def test_sparse_decode_unpruned_matches_dense(self):
+        ps = params()
+        toks = tokens(b=1, s=64)
+        _, kp, vp = M.prefill(CFG, ps, toks[:, :63])
+        # everything in the dense tail => sparse step must equal dense math
+        w = 96
+        tc, kk = 64, CFG.head_dim
+        zero_vals = jnp.zeros((CFG.n_layers, CFG.n_kv_heads, tc, kk))
+        zero_idx = jnp.zeros((CFG.n_layers, CFG.n_kv_heads, tc, kk), jnp.int32)
+        tail_k = jnp.zeros((CFG.n_layers, CFG.n_kv_heads, w, CFG.head_dim))
+        tail_v = jnp.zeros_like(tail_k)
+        tail_k = tail_k.at[:, :, :63].set(kp[:, 0])
+        tail_v = tail_v.at[:, :, :63].set(vp[:, 0])
+        lg_sparse, nk, nv = M.decode_step_sparse(
+            CFG, ps, toks[0, 63], jnp.int32(63),
+            zero_vals, zero_idx, zero_vals, zero_idx, jnp.int32(0),
+            tail_k, tail_v, jnp.int32(63))
+
+        full, _, _ = M.prefill(CFG, ps, toks)
+        np.testing.assert_allclose(
+            np.asarray(lg_sparse), np.asarray(full[0, -1]), atol=1e-4)
+        assert nk.shape == (CFG.n_layers, CFG.n_kv_heads, CFG.head_dim)
+
+    def test_train_step_decreases_loss(self):
+        ps = params()
+        opt = M.init_opt_state(ps)
+        toks = tokens(b=4, s=96, seed=9)
+        losses = []
+        for _ in range(8):
+            ps, opt, loss = M.train_step(CFG, ps, opt, toks, 3e-3)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.8, losses
+
+
+class TestLanguage:
+    def test_document_deterministic(self):
+        a = D.gen_document(D.Pcg32(5, 54), 128)
+        b = D.gen_document(D.Pcg32(5, 54), 128)
+        assert a == b
+        assert len(a) == 128
+
+    def test_scan_facts_adjacency(self):
+        doc = [D.BOS, D.KEY, D.NAME0 + 3, D.VAL0 + 7, D.SEP]
+        assert D.scan_facts(doc) == [(D.NAME0 + 3, D.VAL0 + 7)]
+
+    def test_segments_within_vocab(self):
+        for fn in D.SEGMENT_FNS:
+            toks = fn(D.Pcg32(77, 54))
+            assert all(0 <= t < D.VOCAB for t in toks)

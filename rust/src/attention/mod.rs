@@ -1,0 +1,337 @@
+//! Attention primitives: RoPE, softmax, dense prefill attention, and the
+//! two decode-phase paths — dense MV (baseline) and the Mustafar sparse
+//! path (bitmap SpMV over the compressed region + dense MV over the local
+//! window, Fig 5a).
+
+use crate::sparse::{dense_key, dense_value, spmv_key, spmv_value, BitmapMatrix};
+
+/// Precomputed RoPE table for one position: (cos, sin) of length hd/2.
+pub fn rope_cos_sin(pos: usize, head_dim: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
+    let half = head_dim / 2;
+    let mut cos = Vec::with_capacity(half);
+    let mut sin = Vec::with_capacity(half);
+    for i in 0..half {
+        let freq = theta.powf(-(i as f64) / half as f64);
+        let ang = pos as f64 * freq;
+        cos.push(ang.cos() as f32);
+        sin.push(ang.sin() as f32);
+    }
+    (cos, sin)
+}
+
+/// Apply RoPE in place (llama rotate-half convention, matching
+/// python/compile/model.py::apply_rope).
+pub fn apply_rope(x: &mut [f32], cos: &[f32], sin: &[f32]) {
+    let half = x.len() / 2;
+    debug_assert_eq!(cos.len(), half);
+    for i in 0..half {
+        let a = x[i];
+        let b = x[half + i];
+        x[i] = a * cos[i] - b * sin[i];
+        x[half + i] = b * cos[i] + a * sin[i];
+    }
+}
+
+/// Numerically-stable in-place softmax.
+pub fn softmax(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let m = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut denom = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        denom += *x;
+    }
+    let inv = 1.0 / denom;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Joint softmax over two concatenated score segments (compressed region
+/// and dense tail) without materializing the concatenation.
+pub fn two_part_softmax(a: &mut [f32], b: &mut [f32]) {
+    let ma = a.iter().fold(f32::NEG_INFINITY, |x, &y| x.max(y));
+    let mb = b.iter().fold(f32::NEG_INFINITY, |x, &y| x.max(y));
+    let m = ma.max(mb);
+    if !m.is_finite() {
+        return;
+    }
+    let mut denom = 0.0f32;
+    for x in a.iter_mut() {
+        *x = (*x - m).exp();
+        denom += *x;
+    }
+    for x in b.iter_mut() {
+        *x = (*x - m).exp();
+        denom += *x;
+    }
+    let inv = 1.0 / denom;
+    for x in a.iter_mut() {
+        *x *= inv;
+    }
+    for x in b.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Dense single-query decode attention: out[hd] over K/V `[t x hd]`.
+pub fn decode_dense(q: &[f32], k: &[f32], v: &[f32], t: usize, scale: f32, out: &mut [f32]) {
+    let hd = q.len();
+    debug_assert_eq!(k.len(), t * hd);
+    debug_assert_eq!(v.len(), t * hd);
+    let mut scores = vec![0.0f32; t];
+    dense_key(k, t, hd, q, &mut scores);
+    for s in scores.iter_mut() {
+        *s *= scale;
+    }
+    softmax(&mut scores);
+    out.iter_mut().for_each(|x| *x = 0.0);
+    dense_value(v, t, hd, &scores, out);
+}
+
+/// Mustafar sparse decode attention for one KV head (Fig 5a):
+/// SpMV over the bitmap-compressed region, dense MV over the local-window
+/// tail, joint softmax, then SpMV + dense MV on the value side.
+///
+/// `tail_k`/`tail_v` are `[tail_len x hd]` row-major (the local window,
+/// which always includes the current token's K/V — callers append before
+/// calling). Returns the attention output in `out` and, if `att_out` is
+/// given, writes the post-softmax attention over `[compressed | tail]`
+/// (used by the H2O tracker).
+#[allow(clippy::too_many_arguments)]
+pub fn decode_sparse(
+    q: &[f32],
+    k_comp: &BitmapMatrix,
+    v_comp: &BitmapMatrix,
+    tail_k: &[f32],
+    tail_v: &[f32],
+    tail_len: usize,
+    scale: f32,
+    out: &mut [f32],
+    mut att_out: Option<&mut Vec<f32>>,
+) {
+    let hd = q.len();
+    let nc = k_comp.tokens;
+    debug_assert_eq!(v_comp.tokens, nc);
+    debug_assert_eq!(tail_k.len(), tail_len * hd);
+
+    let mut s_comp = vec![0.0f32; nc];
+    spmv_key(k_comp, q, &mut s_comp);
+    let mut s_tail = vec![0.0f32; tail_len];
+    dense_key(tail_k, tail_len, hd, q, &mut s_tail);
+    for s in s_comp.iter_mut() {
+        *s *= scale;
+    }
+    for s in s_tail.iter_mut() {
+        *s *= scale;
+    }
+
+    two_part_softmax(&mut s_comp, &mut s_tail);
+
+    out.iter_mut().for_each(|x| *x = 0.0);
+    spmv_value(v_comp, &s_comp, out);
+    dense_value(tail_v, tail_len, hd, &s_tail, out);
+
+    if let Some(att) = att_out.take() {
+        att.clear();
+        att.extend_from_slice(&s_comp);
+        att.extend_from_slice(&s_tail);
+    }
+}
+
+/// Full causal self-attention for prefill, one head.
+///
+/// q/k/v `[t x hd]`; writes out `[t x hd]`. If `att_probs` is provided it
+/// receives the full `[t x t]` post-softmax matrix (row = query position)
+/// for output-aware scoring and H2O initialization.
+pub fn causal_prefill(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    t: usize,
+    hd: usize,
+    scale: f32,
+    out: &mut [f32],
+    mut att_probs: Option<&mut Vec<f32>>,
+) {
+    debug_assert_eq!(q.len(), t * hd);
+    if let Some(p) = att_probs.as_deref_mut() {
+        p.clear();
+        p.resize(t * t, 0.0);
+    }
+    let mut scores = vec![0.0f32; t];
+    for i in 0..t {
+        let qi = &q[i * hd..(i + 1) * hd];
+        let n = i + 1;
+        scores[..n].iter_mut().for_each(|s| *s = 0.0);
+        dense_key(&k[..n * hd], n, hd, qi, &mut scores[..n]);
+        for s in scores[..n].iter_mut() {
+            *s *= scale;
+        }
+        softmax(&mut scores[..n]);
+        let oi = &mut out[i * hd..(i + 1) * hd];
+        oi.iter_mut().for_each(|x| *x = 0.0);
+        dense_value(&v[..n * hd], n, hd, &scores[..n], oi);
+        if let Some(p) = att_probs.as_deref_mut() {
+            p[i * t..i * t + n].copy_from_slice(&scores[..n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prune::per_token_magnitude;
+    use crate::sparse::PackAxis;
+    use crate::util::Pcg32;
+
+    fn randv(n: usize, rng: &mut Pcg32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0, 2.0, 3.0, -5.0];
+        softmax(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0] && xs[0] > xs[3]);
+    }
+
+    #[test]
+    fn two_part_matches_joint() {
+        let mut rng = Pcg32::seeded(13);
+        let mut a = randv(10, &mut rng);
+        let mut b = randv(7, &mut rng);
+        let mut joint = [a.clone(), b.clone()].concat();
+        softmax(&mut joint);
+        two_part_softmax(&mut a, &mut b);
+        for (x, y) in a.iter().chain(b.iter()).zip(&joint) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Pcg32::seeded(14);
+        let mut x = randv(64, &mut rng);
+        let norm0: f32 = x.iter().map(|v| v * v).sum();
+        let (cos, sin) = rope_cos_sin(17, 64, 10000.0);
+        apply_rope(&mut x, &cos, &sin);
+        let norm1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((norm0 - norm1).abs() / norm0 < 1e-5);
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let mut rng = Pcg32::seeded(15);
+        let x0 = randv(32, &mut rng);
+        let mut x = x0.clone();
+        let (cos, sin) = rope_cos_sin(0, 32, 10000.0);
+        apply_rope(&mut x, &cos, &sin);
+        for (a, b) in x.iter().zip(&x0) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sparse_decode_matches_dense_when_unpruned() {
+        // With no pruning (compressed region holds the exact values),
+        // the sparse path must reproduce dense attention.
+        let mut rng = Pcg32::seeded(16);
+        let (t_comp, tail, hd) = (128, 16, 64);
+        let t = t_comp + tail;
+        let k = randv(t * hd, &mut rng);
+        let v = randv(t * hd, &mut rng);
+        let q = randv(hd, &mut rng);
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let k_comp =
+            BitmapMatrix::compress(&k[..t_comp * hd], t_comp, hd, PackAxis::Token).unwrap();
+        let v_comp =
+            BitmapMatrix::compress(&v[..t_comp * hd], t_comp, hd, PackAxis::Channel).unwrap();
+
+        let mut out_sparse = vec![0.0f32; hd];
+        decode_sparse(
+            &q, &k_comp, &v_comp,
+            &k[t_comp * hd..], &v[t_comp * hd..], tail,
+            scale, &mut out_sparse, None,
+        );
+
+        let mut out_dense = vec![0.0f32; hd];
+        decode_dense(&q, &k, &v, t, scale, &mut out_dense);
+
+        for (a, b) in out_sparse.iter().zip(&out_dense) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sparse_decode_matches_masked_dense_when_pruned() {
+        let mut rng = Pcg32::seeded(17);
+        let (t_comp, tail, hd, kk) = (64, 8, 64, 20);
+        let k = randv((t_comp + tail) * hd, &mut rng);
+        let v = randv((t_comp + tail) * hd, &mut rng);
+        let q = randv(hd, &mut rng);
+        let scale = 0.125;
+
+        let kp = per_token_magnitude(&k[..t_comp * hd], t_comp, hd, kk);
+        let vp = per_token_magnitude(&v[..t_comp * hd], t_comp, hd, kk);
+        let k_comp = BitmapMatrix::compress(&kp, t_comp, hd, PackAxis::Token).unwrap();
+        let v_comp = BitmapMatrix::compress(&vp, t_comp, hd, PackAxis::Channel).unwrap();
+
+        let mut out_sparse = vec![0.0f32; hd];
+        decode_sparse(
+            &q, &k_comp, &v_comp,
+            &k[t_comp * hd..], &v[t_comp * hd..], tail,
+            scale, &mut out_sparse, None,
+        );
+
+        // dense equivalent over the masked matrices
+        let kfull = [kp, k[t_comp * hd..].to_vec()].concat();
+        let vfull = [vp, v[t_comp * hd..].to_vec()].concat();
+        let mut out_dense = vec![0.0f32; hd];
+        decode_dense(&q, &kfull, &vfull, t_comp + tail, scale, &mut out_dense);
+
+        for (a, b) in out_sparse.iter().zip(&out_dense) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn causal_prefill_last_row_matches_decode() {
+        let mut rng = Pcg32::seeded(18);
+        let (t, hd) = (48, 32);
+        let q = randv(t * hd, &mut rng);
+        let k = randv(t * hd, &mut rng);
+        let v = randv(t * hd, &mut rng);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = vec![0.0f32; t * hd];
+        causal_prefill(&q, &k, &v, t, hd, scale, &mut out, None);
+
+        let mut last = vec![0.0f32; hd];
+        decode_dense(&q[(t - 1) * hd..], &k, &v, t, scale, &mut last);
+        for (a, b) in out[(t - 1) * hd..].iter().zip(&last) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn att_probs_rows_causal_and_normalized() {
+        let mut rng = Pcg32::seeded(19);
+        let (t, hd) = (16, 8);
+        let q = randv(t * hd, &mut rng);
+        let k = randv(t * hd, &mut rng);
+        let v = randv(t * hd, &mut rng);
+        let mut out = vec![0.0f32; t * hd];
+        let mut probs = Vec::new();
+        causal_prefill(&q, &k, &v, t, hd, 0.35, &mut out, Some(&mut probs));
+        for i in 0..t {
+            let row = &probs[i * t..(i + 1) * t];
+            let sum: f32 = row[..=i].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(row[i + 1..].iter().all(|&x| x == 0.0), "causality violated");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Hand-rolled micro-benchmark harness (criterion is not available in
+//! the offline vendor set). Warmup + timed iterations + summary stats;
+//! used by every `benches/*.rs` target (`harness = false`).
+
+use crate::util::{Stopwatch, Summary};
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Minimum total measurement time; iters are extended to reach it.
+    pub min_time_s: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup_iters: 3, iters: 20, min_time_s: 0.25 }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in microseconds.
+    pub us: Summary,
+}
+
+impl BenchResult {
+    pub fn median_us(&self) -> f64 {
+        self.us.p50
+    }
+}
+
+/// Time `f` under `opts`; the closure must perform one full iteration.
+pub fn bench<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.iters);
+    let total = Stopwatch::start();
+    loop {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.elapsed_us());
+        if samples.len() >= opts.iters && total.elapsed_s() >= opts.min_time_s {
+            break;
+        }
+        if samples.len() > 100_000 {
+            break; // safety valve for pathologically fast closures
+        }
+    }
+    BenchResult { name: name.to_string(), us: Summary::of(&samples) }
+}
+
+/// Pretty-print a set of results normalized against a baseline (the
+/// paper's Fig 6a style: components as % of the dense baseline).
+pub fn print_normalized(title: &str, baseline: &BenchResult, components: &[&BenchResult]) {
+    println!("\n## {title}");
+    println!(
+        "{:<28} {:>12} {:>10}",
+        "component", "median (us)", "% of base"
+    );
+    println!("{:<28} {:>12.1} {:>9.1}%", baseline.name, baseline.median_us(), 100.0);
+    for c in components {
+        println!(
+            "{:<28} {:>12.1} {:>9.1}%",
+            c.name,
+            c.median_us(),
+            c.median_us() / baseline.median_us() * 100.0
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let r = bench(
+            "sleep",
+            BenchOpts { warmup_iters: 0, iters: 3, min_time_s: 0.0 },
+            || std::thread::sleep(std::time::Duration::from_millis(2)),
+        );
+        assert!(r.median_us() >= 1500.0, "{}", r.median_us());
+        assert_eq!(r.us.n, 3);
+    }
+
+    #[test]
+    fn extends_to_min_time() {
+        let r = bench(
+            "fast",
+            BenchOpts { warmup_iters: 0, iters: 1, min_time_s: 0.05 },
+            || {
+                std::hint::black_box(1 + 1);
+            },
+        );
+        assert!(r.us.n > 100);
+    }
+}

@@ -1,0 +1,234 @@
+//! Typed configuration: model hyperparameters (loaded from the weight
+//! manifests the python exporter writes), sparsity/compression settings,
+//! and engine settings. CLI parsing lives in `main.rs` (clap is not
+//! available offline); this module only holds the typed structs.
+
+use crate::error::{Error, Result};
+use crate::fmt::Json;
+use crate::prune::Method;
+
+/// Model hyperparameters — mirrors `python/compile/model.py::ModelCfg`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ff: usize,
+    pub vocab: usize,
+    pub rope_theta: f64,
+    pub max_seq: usize,
+    pub norm_eps: f64,
+}
+
+impl ModelConfig {
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Queries per KV head (GQA group size).
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: v.get("name")?.as_str()?.to_string(),
+            d_model: v.get("d_model")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            n_heads: v.get("n_heads")?.as_usize()?,
+            n_kv_heads: v.get("n_kv_heads")?.as_usize()?,
+            head_dim: v.get("head_dim")?.as_usize()?,
+            ff: v.get("ff")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            rope_theta: v.get("rope_theta")?.as_f64()?,
+            max_seq: v.get("max_seq")?.as_usize()?,
+            norm_eps: v.get("norm_eps")?.as_f64()?,
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_heads % self.n_kv_heads != 0 {
+            return Err(Error::Config(format!(
+                "n_heads {} not divisible by n_kv_heads {}",
+                self.n_heads, self.n_kv_heads
+            )));
+        }
+        if self.head_dim % 2 != 0 {
+            return Err(Error::Config("head_dim must be even (RoPE)".into()));
+        }
+        if self.q_dim() != self.d_model && self.q_dim() == 0 {
+            return Err(Error::Config("bad head geometry".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Mustafar sparsity configuration for one serving session / experiment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SparsityConfig {
+    pub key_method: Method,
+    pub key_sparsity: f64,
+    pub value_method: Method,
+    pub value_sparsity: f64,
+}
+
+impl SparsityConfig {
+    pub fn dense() -> SparsityConfig {
+        SparsityConfig {
+            key_method: Method::None,
+            key_sparsity: 0.0,
+            value_method: Method::None,
+            value_sparsity: 0.0,
+        }
+    }
+
+    /// The paper's headline configuration: per-token magnitude on both.
+    pub fn mustafar(ks: f64, vs: f64) -> SparsityConfig {
+        SparsityConfig {
+            key_method: if ks > 0.0 { Method::TokenMagnitude } else { Method::None },
+            key_sparsity: ks,
+            value_method: if vs > 0.0 { Method::TokenMagnitude } else { Method::None },
+            value_sparsity: vs,
+        }
+    }
+
+    /// Table-row label, paper style ("K0.5 V0.7", "Dense", "ThinK0.5").
+    pub fn label(&self) -> String {
+        if self.key_method == Method::None && self.value_method == Method::None {
+            return "Dense".to_string();
+        }
+        if self.key_method == Method::ThinkStructured && self.value_method == Method::None {
+            return format!("ThinK{}", self.key_sparsity);
+        }
+        format!("K{} V{}", self.key_sparsity, self.value_sparsity)
+    }
+}
+
+/// Attention/compute backend selector for the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust forward, dense KV (baseline).
+    NativeDense,
+    /// Pure-Rust forward, bitmap-compressed KV + SpMV attention (Mustafar).
+    NativeSparse,
+    /// XLA/PJRT monolithic dense decode artifact.
+    PjrtDense,
+    /// XLA/PJRT sparse decode artifact (L1 Pallas kernel inside).
+    PjrtSparse,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        Some(match s {
+            "native-dense" => Backend::NativeDense,
+            "native-sparse" => Backend::NativeSparse,
+            "pjrt-dense" => Backend::PjrtDense,
+            "pjrt-sparse" => Backend::PjrtSparse,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::NativeDense => "native-dense",
+            Backend::NativeSparse => "native-sparse",
+            Backend::PjrtDense => "pjrt-dense",
+            Backend::PjrtSparse => "pjrt-sparse",
+        }
+    }
+}
+
+/// Engine (coordinator) settings.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub backend: Backend,
+    pub sparsity: SparsityConfig,
+    /// Maximum sequences decoded together (continuous batching cap).
+    pub max_batch: usize,
+    /// Admission queue capacity.
+    pub queue_cap: usize,
+    /// Max generated tokens per request (safety cap).
+    pub max_new_tokens: usize,
+    /// KV pool budget in bytes (0 = unlimited) — admission control uses
+    /// this to decide how many sequences fit, which is how Mustafar's
+    /// compression buys larger batches (Fig 7).
+    pub kv_budget_bytes: usize,
+    /// Worker threads for per-head attention parallelism.
+    pub threads: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            backend: Backend::NativeDense,
+            sparsity: SparsityConfig::dense(),
+            max_batch: 8,
+            queue_cap: 256,
+            max_new_tokens: 64,
+            kv_budget_bytes: 0,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_config_from_json() {
+        let text = r#"{"name":"tiny","d_model":64,"n_layers":2,"n_heads":2,
+            "n_kv_heads":1,"head_dim":32,"ff":128,"vocab":512,
+            "rope_theta":10000.0,"max_seq":256,"norm_eps":1e-5}"#;
+        let cfg = ModelConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.group(), 2);
+        assert_eq!(cfg.q_dim(), 64);
+        assert_eq!(cfg.kv_dim(), 32);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_geometry_rejected() {
+        let cfg = ModelConfig {
+            name: "x".into(),
+            d_model: 64,
+            n_layers: 1,
+            n_heads: 3,
+            n_kv_heads: 2,
+            head_dim: 32,
+            ff: 64,
+            vocab: 512,
+            rope_theta: 1e4,
+            max_seq: 128,
+            norm_eps: 1e-5,
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn sparsity_labels() {
+        assert_eq!(SparsityConfig::dense().label(), "Dense");
+        assert_eq!(SparsityConfig::mustafar(0.5, 0.7).label(), "K0.5 V0.7");
+        let think = SparsityConfig {
+            key_method: Method::ThinkStructured,
+            key_sparsity: 0.5,
+            value_method: Method::None,
+            value_sparsity: 0.0,
+        };
+        assert_eq!(think.label(), "ThinK0.5");
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(Backend::parse("native-sparse"), Some(Backend::NativeSparse));
+        assert_eq!(Backend::parse("nope"), None);
+        assert_eq!(Backend::PjrtDense.name(), "pjrt-dense");
+    }
+}

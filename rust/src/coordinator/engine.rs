@@ -1,0 +1,381 @@
+//! The serving engine: continuous batching over the native or PJRT
+//! backends, with the Mustafar compressed-KV lifecycle owned by the
+//! coordinator (prune + compress on local-window exit).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::{Backend, EngineConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pjrt_backend::{PjrtBackend, PjrtSeq};
+use crate::coordinator::request::{ActiveSeq, Completion, FinishReason, Request};
+use crate::coordinator::scheduler::Scheduler;
+use crate::error::Result;
+use crate::kvcache::{KvPolicy, SequenceKV};
+use crate::model::{argmax, NativeModel};
+
+/// Per-sequence backend state.
+pub enum SeqState {
+    Native(Box<SequenceKV>),
+    Pjrt(Box<PjrtSeq>),
+}
+
+/// Synchronous continuous-batching engine.
+///
+/// `run_trace` drives a whole request trace to completion; `submit` +
+/// `step` expose the same loop incrementally for the TCP server.
+pub struct Engine {
+    pub cfg: EngineConfig,
+    pub model: Arc<NativeModel>,
+    policy: KvPolicy,
+    scheduler: Scheduler,
+    active: Vec<ActiveSeq>,
+    completions: Vec<Completion>,
+    pub metrics: Metrics,
+    pjrt: Option<PjrtBackend>,
+}
+
+impl Engine {
+    /// Native-backend engine (pure Rust forward).
+    pub fn new_native(model: NativeModel, cfg: EngineConfig) -> Engine {
+        let policy = match cfg.backend {
+            Backend::NativeDense | Backend::PjrtDense => KvPolicy::dense(),
+            _ => KvPolicy {
+                sparsity: cfg.sparsity,
+                quant: None,
+                compress: true,
+                local_window: crate::prune::LOCAL_WINDOW,
+            },
+        };
+        let scheduler = Scheduler::new(cfg.clone(), model.cfg().clone(), policy);
+        Engine {
+            cfg,
+            model: Arc::new(model),
+            policy,
+            scheduler,
+            active: Vec::new(),
+            completions: Vec::new(),
+            metrics: Metrics::default(),
+            pjrt: None,
+        }
+    }
+
+    /// PJRT-backend engine (XLA artifacts on the hot path).
+    pub fn new_pjrt(model: NativeModel, cfg: EngineConfig, backend: PjrtBackend) -> Engine {
+        let mut e = Engine::new_native(model, cfg);
+        e.pjrt = Some(backend);
+        e
+    }
+
+    pub fn policy(&self) -> &KvPolicy {
+        &self.policy
+    }
+
+    /// Submit a request to the admission queue.
+    pub fn submit(&mut self, req: Request) -> bool {
+        let ok = self.scheduler.submit(req);
+        if !ok {
+            self.metrics.rejected += 1;
+        }
+        ok
+    }
+
+    /// True when nothing is queued or running.
+    pub fn idle(&self) -> bool {
+        self.active.is_empty() && self.scheduler.pending() == 0
+    }
+
+    /// Admit + prefill new sequences, then run one decode round.
+    pub fn step(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        self.admit_and_prefill()?;
+        self.decode_round()?;
+        self.metrics.wall_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Drive a whole trace to completion and return the completions.
+    pub fn run_trace(&mut self, reqs: Vec<Request>) -> Result<Vec<Completion>> {
+        for r in reqs {
+            self.submit(r);
+        }
+        while !self.idle() {
+            self.step()?;
+        }
+        Ok(std::mem::take(&mut self.completions))
+    }
+
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    fn admit_and_prefill(&mut self) -> Result<()> {
+        let admitted = self.scheduler.admit(self.active.len());
+        for req in admitted {
+            let enqueue = Instant::now(); // queue time measured from admission call in server mode
+            let t0 = Instant::now();
+            let (state, first_logits) = match (self.cfg.backend, &mut self.pjrt) {
+                (Backend::NativeDense | Backend::NativeSparse, _) => {
+                    let r = self.model.prefill(&req.prompt, false);
+                    let mut kv = SequenceKV::new(
+                        self.policy,
+                        self.model.cfg().n_layers,
+                        self.model.cfg().n_kv_heads,
+                        self.model.cfg().head_dim,
+                    );
+                    kv.ingest_prefill(&r.k, &r.v, r.t, None)?;
+                    (SeqState::Native(Box::new(kv)), r.logits_last)
+                }
+                (Backend::PjrtDense | Backend::PjrtSparse, Some(pj)) => {
+                    let (seq, logits) = pj.prefill(&req.prompt, self.cfg.backend)?;
+                    (SeqState::Pjrt(Box::new(seq)), logits)
+                }
+                (_, None) => {
+                    return Err(crate::Error::Engine(
+                        "pjrt backend selected but not constructed".into(),
+                    ))
+                }
+            };
+            let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+            self.metrics.prefill_tokens += req.prompt.len();
+
+            let first = argmax(&first_logits);
+            let pos = req.prompt.len();
+            let mut seq = ActiveSeq {
+                req,
+                generated: vec![first],
+                pos,
+                enqueue,
+                prefill_ms,
+                queue_ms: 0.0,
+                decode_start: Instant::now(),
+                state,
+            };
+            self.metrics.generated_tokens += 1;
+            if self.seq_finished(&seq) {
+                self.finish(seq);
+            } else {
+                seq.decode_start = Instant::now();
+                self.active.push(seq);
+            }
+        }
+        Ok(())
+    }
+
+    fn seq_finished(&self, s: &ActiveSeq) -> bool {
+        if s.generated.len() >= s.req.max_new_tokens {
+            return true;
+        }
+        if let (Some(stop), Some(&last)) = (s.req.stop_token, s.generated.last()) {
+            if last == stop {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn decode_round(&mut self) -> Result<()> {
+        if self.active.is_empty() {
+            return Ok(());
+        }
+        self.metrics.decode_rounds += 1;
+        self.metrics.batch_sizes.push(self.active.len());
+
+        match self.cfg.backend {
+            Backend::NativeDense | Backend::NativeSparse => {
+                // Sequences are independent: decode them in parallel
+                // (the CPU analogue of GPU batch parallelism).
+                let model = Arc::clone(&self.model);
+                let results: Vec<Result<u16>> = if self.active.len() > 1 {
+                    std::thread::scope(|scope| {
+                        let handles: Vec<_> = self
+                            .active
+                            .iter_mut()
+                            .map(|s| {
+                                let model = Arc::clone(&model);
+                                scope.spawn(move || decode_one_native(&model, s))
+                            })
+                            .collect();
+                        handles.into_iter().map(|h| h.join().unwrap()).collect()
+                    })
+                } else {
+                    self.active.iter_mut().map(|s| decode_one_native(&model, s)).collect()
+                };
+                for (s, r) in self.active.iter_mut().zip(results) {
+                    let tok = r?;
+                    s.generated.push(tok);
+                    s.pos += 1;
+                }
+            }
+            Backend::PjrtDense | Backend::PjrtSparse => {
+                let pj = self.pjrt.as_ref().unwrap();
+                for s in self.active.iter_mut() {
+                    let last = *s.generated.last().unwrap();
+                    let SeqState::Pjrt(seq) = &mut s.state else { unreachable!() };
+                    let logits = pj.decode(seq, last, s.pos)?;
+                    s.generated.push(argmax(&logits));
+                    s.pos += 1;
+                }
+            }
+        }
+        self.metrics.generated_tokens += self.active.len();
+
+        // retire finished sequences
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.seq_finished(&self.active[i]) {
+                let s = self.active.swap_remove(i);
+                self.finish(s);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, s: ActiveSeq) {
+        self.scheduler.release(&s.req);
+        let (kv_bytes, kv_dense) = match &s.state {
+            SeqState::Native(kv) => kv.memory_bytes(),
+            SeqState::Pjrt(seq) => self
+                .pjrt
+                .as_ref()
+                .map(|p| p.seq_memory_bytes(seq))
+                .unwrap_or((0, 0)),
+        };
+        self.metrics.peak_kv_bytes = self.metrics.peak_kv_bytes.max(kv_bytes);
+        self.metrics.peak_kv_dense_bytes = self.metrics.peak_kv_dense_bytes.max(kv_dense);
+        let decode_ms = s.decode_start.elapsed().as_secs_f64() * 1e3;
+        let total_ms = s.enqueue.elapsed().as_secs_f64() * 1e3;
+        self.metrics.request_ms.push(total_ms);
+        self.metrics.completions += 1;
+
+        let finish = if s
+            .req
+            .stop_token
+            .map(|st| s.generated.last() == Some(&st))
+            .unwrap_or(false)
+        {
+            FinishReason::Stop
+        } else {
+            FinishReason::Length
+        };
+        self.completions.push(Completion {
+            id: s.req.id,
+            tokens: s.generated,
+            finish,
+            queue_ms: s.queue_ms,
+            prefill_ms: s.prefill_ms,
+            decode_ms,
+            kv_bytes,
+            kv_dense_bytes: kv_dense,
+        });
+    }
+}
+
+fn decode_one_native(model: &NativeModel, s: &mut ActiveSeq) -> Result<u16> {
+    let last = *s.generated.last().unwrap();
+    let SeqState::Native(kv) = &mut s.state else { unreachable!() };
+    let logits = model.decode(last, s.pos, kv)?;
+    Ok(argmax(&logits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Backend, ModelConfig};
+    use crate::model::Weights;
+
+    fn tiny_engine(backend: Backend, sparsity: (f64, f64)) -> Engine {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 32,
+            ff: 128,
+            vocab: 512,
+            rope_theta: 10000.0,
+            max_seq: 256,
+            norm_eps: 1e-5,
+        };
+        let model = NativeModel::new(Weights::random_for_tests(cfg, 42));
+        let mut ec = EngineConfig::default();
+        ec.backend = backend;
+        ec.sparsity = crate::config::SparsityConfig::mustafar(sparsity.0, sparsity.1);
+        ec.max_batch = 4;
+        ec.max_new_tokens = 8;
+        Engine::new_native(model, ec)
+    }
+
+    fn reqs(n: u64, prompt_len: usize, gen: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| {
+                let prompt: Vec<u16> = (0..prompt_len).map(|j| ((i as usize * 31 + j) % 400 + 16) as u16).collect();
+                Request::new(i, prompt, gen)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn trace_completes_all_requests() {
+        let mut e = tiny_engine(Backend::NativeDense, (0.0, 0.0));
+        let out = e.run_trace(reqs(6, 40, 5)).unwrap();
+        assert_eq!(out.len(), 6);
+        for c in &out {
+            assert_eq!(c.tokens.len(), 5);
+            assert_eq!(c.finish, FinishReason::Length);
+        }
+        assert_eq!(e.metrics.completions, 6);
+        assert_eq!(e.metrics.generated_tokens, 30);
+        // continuous batching: max 4 at a time
+        assert!(e.metrics.batch_sizes.iter().all(|&b| b <= 4));
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated() {
+        let mut e = tiny_engine(Backend::NativeSparse, (0.5, 0.5));
+        let out = e.run_trace(reqs(9, 80, 4)).unwrap();
+        let mut ids: Vec<u64> = out.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sparse_backend_compresses_kv() {
+        let mut e = tiny_engine(Backend::NativeSparse, (0.7, 0.7));
+        let out = e.run_trace(reqs(2, 160, 4)).unwrap();
+        for c in &out {
+            assert!(c.kv_bytes < c.kv_dense_bytes, "{} vs {}", c.kv_bytes, c.kv_dense_bytes);
+        }
+        assert!(e.metrics.kv_compression_rate() < 0.8);
+    }
+
+    #[test]
+    fn stop_token_halts_generation() {
+        let mut e = tiny_engine(Backend::NativeDense, (0.0, 0.0));
+        let mut rs = reqs(1, 24, 8);
+        // stop on whatever token the model produces first
+        let probe = e.run_trace(rs.clone()).unwrap();
+        let first = probe[0].tokens[0];
+        rs[0].stop_token = Some(first);
+        rs[0].id = 77;
+        let mut e2 = tiny_engine(Backend::NativeDense, (0.0, 0.0));
+        let out = e2.run_trace(rs).unwrap();
+        assert_eq!(out[0].tokens.len(), 1);
+        assert_eq!(out[0].finish, FinishReason::Stop);
+    }
+
+    #[test]
+    fn dense_and_sparse_agree_on_short_context() {
+        // With only ~60 tokens everything stays in the local window+group,
+        // so sparse output must equal dense output exactly.
+        let r = reqs(1, 60, 6);
+        let mut ed = tiny_engine(Backend::NativeDense, (0.0, 0.0));
+        let mut es = tiny_engine(Backend::NativeSparse, (0.7, 0.7));
+        let a = ed.run_trace(r.clone()).unwrap();
+        let b = es.run_trace(r).unwrap();
+        assert_eq!(a[0].tokens, b[0].tokens);
+    }
+}

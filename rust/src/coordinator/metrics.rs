@@ -1,0 +1,72 @@
+//! Serving metrics: token throughput, latency percentiles, KV memory.
+
+use crate::util::Summary;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// Wall-clock seconds spent inside engine stepping.
+    pub wall_s: f64,
+    pub prefill_tokens: usize,
+    pub generated_tokens: usize,
+    pub decode_rounds: usize,
+    pub completions: usize,
+    pub rejected: usize,
+    /// Per-decode-round batch sizes (for utilization analysis).
+    pub batch_sizes: Vec<usize>,
+    /// Per-request end-to-end latencies (ms).
+    pub request_ms: Vec<f64>,
+    /// Peak KV bytes across the run (compressed accounting).
+    pub peak_kv_bytes: usize,
+    /// Peak dense-equivalent KV bytes.
+    pub peak_kv_dense_bytes: usize,
+}
+
+impl Metrics {
+    /// Generated tokens per second (the Fig 7 metric).
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.generated_tokens as f64 / self.wall_s
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        crate::util::stats::mean(
+            &self.batch_sizes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
+        )
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        if self.request_ms.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.request_ms))
+        }
+    }
+
+    pub fn kv_compression_rate(&self) -> f64 {
+        if self.peak_kv_dense_bytes == 0 {
+            1.0
+        } else {
+            self.peak_kv_bytes as f64 / self.peak_kv_dense_bytes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let m = Metrics { wall_s: 2.0, generated_tokens: 100, ..Default::default() };
+        assert!((m.tokens_per_sec() - 50.0).abs() < 1e-9);
+        assert_eq!(Metrics::default().tokens_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn latency_summary_empty() {
+        assert!(Metrics::default().latency_summary().is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 serving coordinator — the paper's system layer: request admission,
+//! continuous batching, prefill/decode scheduling, and the compressed
+//! KV-cache lifecycle (prune + compress on local-window exit).
+
+pub mod engine;
+pub mod metrics;
+pub mod pjrt_backend;
+pub mod request;
+pub mod scheduler;
+
+pub use engine::Engine;
+pub use metrics::Metrics;
+pub use request::{Completion, FinishReason, Request};
+pub use scheduler::{estimate_seq_bytes, Scheduler};

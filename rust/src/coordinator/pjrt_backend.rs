@@ -1,0 +1,349 @@
+//! PJRT execution backend for the engine: the three-layer hot path.
+//! The XLA artifacts (lowered from the JAX model, with the L1 Pallas
+//! sparse-attention kernel inside `decode_sparse_*`) do the model math;
+//! this module owns the host-side compressed KV state and the
+//! prune+compress lifecycle, mirroring `SequenceKV` semantics.
+//!
+//! Shape discipline: artifacts are compiled for fixed shapes (one serving
+//! "bucket" per config — prompt length S, cache capacity Tc/Tmax). The
+//! engine enforces prompt length == S for PJRT backends; the native
+//! backend has no such restriction.
+
+use std::path::Path;
+
+use crate::config::{Backend, ModelConfig, SparsityConfig};
+use crate::error::{Error, Result};
+use crate::kvcache::TAIL_CAP;
+use crate::model::Weights;
+use crate::prune::{self, keep_count, LOCAL_WINDOW};
+use crate::runtime::{literal_f32, DeviceWeights, HostArg, Runtime};
+use crate::sparse::{TokenPairs, TILE};
+
+/// Per-sequence state for the PJRT backends.
+pub enum PjrtSeq {
+    Dense {
+        /// Host-side caches `[L,1,KV,Tmax,hd]` (round-trip each step).
+        k: Vec<f32>,
+        v: Vec<f32>,
+        cur_len: usize,
+    },
+    Sparse {
+        /// Compressed region `[L,KV,Tc,kk]` in (values, indices) form.
+        k_vals: Vec<f32>,
+        k_idx: Vec<i32>,
+        v_vals: Vec<f32>,
+        v_idx: Vec<i32>,
+        /// Valid compressed tokens.
+        nc: usize,
+        /// Dense tail `[L,KV,TAIL_CAP,hd]`, `tail_len` valid rows each.
+        tail_k: Vec<f32>,
+        tail_v: Vec<f32>,
+        tail_len: usize,
+        tokens: usize,
+    },
+}
+
+/// The PJRT backend: runtime + device weights + artifact bookkeeping.
+pub struct PjrtBackend {
+    rt: Runtime,
+    dw: DeviceWeights,
+    pub cfg: ModelConfig,
+    prefill_name: String,
+    decode_dense_name: String,
+    decode_sparse_name: Option<String>,
+    /// Prefill prompt length the artifact was compiled for.
+    pub s: usize,
+    pub tmax: usize,
+    pub tc: usize,
+    pub kk: usize,
+    sparsity: SparsityConfig,
+}
+
+// SAFETY: a PjrtBackend is owned by exactly one Engine and is only used
+// from whichever single thread currently owns that Engine (the server
+// moves the whole Engine onto its engine thread; nothing is shared).
+// The inner Rc/raw pointers therefore never experience concurrent access.
+unsafe impl Send for PjrtBackend {}
+
+impl PjrtBackend {
+    /// Load artifacts + weights for `cfg_name` and pick the sparse-decode
+    /// variant matching the sparsity config (pjrt-sparse supports the
+    /// AOT'd keep-counts only; the native backend covers the full grid).
+    pub fn new(
+        artifact_dir: &Path,
+        weights: &Weights,
+        backend: Backend,
+        sparsity: SparsityConfig,
+    ) -> Result<PjrtBackend> {
+        let cfg = weights.cfg.clone();
+        let mut rt = Runtime::new(artifact_dir)?;
+        let prefill_name = format!("prefill_{}", cfg.name);
+        let decode_dense_name = format!("decode_dense_{}", cfg.name);
+        rt.load(&prefill_name)?;
+        let meta = rt.index.entries.get(&prefill_name).unwrap().clone();
+        let s = meta.input_shapes.last().unwrap().0[1];
+
+        let dmeta = rt
+            .index
+            .entries
+            .get(&decode_dense_name)
+            .ok_or_else(|| Error::Runtime(format!("missing {decode_dense_name}")))?;
+        let tmax = dmeta.input_shapes[dmeta.n_weights + 2].0[3];
+
+        let (decode_sparse_name, tc, kk) = if backend == Backend::PjrtSparse {
+            let kk_k = keep_count(cfg.head_dim, sparsity.key_sparsity);
+            let kk_v = keep_count(cfg.head_dim, sparsity.value_sparsity);
+            if kk_k != kk_v {
+                return Err(Error::Engine(
+                    "pjrt-sparse requires symmetric K/V sparsity (AOT'd variants)".into(),
+                ));
+            }
+            let name = format!("decode_sparse_{}_k{}", cfg.name, kk_k);
+            let smeta = rt.index.entries.get(&name).ok_or_else(|| {
+                Error::Engine(format!(
+                    "no AOT variant '{name}' — pjrt-sparse supports the pre-compiled keep-counts"
+                ))
+            })?;
+            let tc = smeta.input_shapes[smeta.n_weights + 2].0[2];
+            rt.load(&name)?;
+            (Some(name), tc, kk_k)
+        } else {
+            rt.load(&decode_dense_name)?;
+            (None, 0, 0)
+        };
+        if backend == Backend::PjrtDense {
+            rt.load(&decode_dense_name)?;
+        }
+
+        let dw = rt.upload_weights(weights)?;
+        Ok(PjrtBackend {
+            rt,
+            dw,
+            cfg,
+            prefill_name,
+            decode_dense_name,
+            decode_sparse_name,
+            s,
+            tmax,
+            tc,
+            kk,
+            sparsity,
+        })
+    }
+
+    /// Run the prefill artifact and build the per-sequence state.
+    pub fn prefill(&self, prompt: &[u16], backend: Backend) -> Result<(PjrtSeq, Vec<f32>)> {
+        if prompt.len() != self.s {
+            return Err(Error::Engine(format!(
+                "pjrt backends are compiled for prompt length {} (got {}) — \
+                 use the native backend for arbitrary lengths",
+                self.s,
+                prompt.len()
+            )));
+        }
+        let toks: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+        let out = self.rt.run(
+            &self.prefill_name,
+            Some(&self.dw),
+            &[HostArg::I32(&toks, vec![1, self.s])],
+        )?;
+        let (logits, ldims) = literal_f32(&out[0])?;
+        let (kflat, _) = literal_f32(&out[1])?;
+        let (vflat, _) = literal_f32(&out[2])?;
+        let vocab = ldims[2];
+        let last_logits = logits[(self.s - 1) * vocab..].to_vec();
+
+        let (l, kv, hd) = (self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim);
+        let seq = match backend {
+            Backend::PjrtDense => {
+                // place [L,1,KV,S,hd] into [L,1,KV,Tmax,hd]
+                let mut k = vec![0.0f32; l * kv * self.tmax * hd];
+                let mut v = vec![0.0f32; l * kv * self.tmax * hd];
+                for li in 0..l {
+                    for h in 0..kv {
+                        let src = (li * kv + h) * self.s * hd;
+                        let dst = (li * kv + h) * self.tmax * hd;
+                        k[dst..dst + self.s * hd]
+                            .copy_from_slice(&kflat[src..src + self.s * hd]);
+                        v[dst..dst + self.s * hd]
+                            .copy_from_slice(&vflat[src..src + self.s * hd]);
+                    }
+                }
+                PjrtSeq::Dense { k, v, cur_len: self.s }
+            }
+            Backend::PjrtSparse => {
+                let n_comp = ((self.s - LOCAL_WINDOW) / TILE) * TILE;
+                let tail = self.s - n_comp;
+                let mut st = self.empty_sparse_seq();
+                let PjrtSeq::Sparse {
+                    k_vals, k_idx, v_vals, v_idx, nc, tail_k, tail_v, tail_len, tokens,
+                } = &mut st
+                else {
+                    unreachable!()
+                };
+                for li in 0..l {
+                    for h in 0..kv {
+                        let src = (li * kv + h) * self.s * hd;
+                        let krows = &kflat[src..src + self.s * hd];
+                        let vrows = &vflat[src..src + self.s * hd];
+                        // prune + pack the compressed region
+                        let kp = prune::per_token_magnitude(&krows[..n_comp * hd], n_comp, hd, self.kk);
+                        let vp = prune::per_token_magnitude(&vrows[..n_comp * hd], n_comp, hd, self.kk);
+                        let kpair = TokenPairs::from_dense(&kp, n_comp, hd, self.kk)?;
+                        let vpair = TokenPairs::from_dense(&vp, n_comp, hd, self.kk)?;
+                        let base = (li * kv + h) * self.tc * self.kk;
+                        k_vals[base..base + n_comp * self.kk].copy_from_slice(&kpair.values);
+                        k_idx[base..base + n_comp * self.kk].copy_from_slice(&kpair.indices);
+                        v_vals[base..base + n_comp * self.kk].copy_from_slice(&vpair.values);
+                        v_idx[base..base + n_comp * self.kk].copy_from_slice(&vpair.indices);
+                        // dense tail
+                        let tb = (li * kv + h) * TAIL_CAP * hd;
+                        tail_k[tb..tb + tail * hd].copy_from_slice(&krows[n_comp * hd..]);
+                        tail_v[tb..tb + tail * hd].copy_from_slice(&vrows[n_comp * hd..]);
+                    }
+                }
+                *nc = n_comp;
+                *tail_len = tail;
+                *tokens = self.s;
+                st
+            }
+            _ => unreachable!("native backends never call PjrtBackend::prefill"),
+        };
+        Ok((seq, last_logits))
+    }
+
+    fn empty_sparse_seq(&self) -> PjrtSeq {
+        let (l, kv, hd) = (self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim);
+        PjrtSeq::Sparse {
+            k_vals: vec![0.0; l * kv * self.tc * self.kk],
+            k_idx: vec![0; l * kv * self.tc * self.kk],
+            v_vals: vec![0.0; l * kv * self.tc * self.kk],
+            v_idx: vec![0; l * kv * self.tc * self.kk],
+            nc: 0,
+            tail_k: vec![0.0; l * kv * TAIL_CAP * hd],
+            tail_v: vec![0.0; l * kv * TAIL_CAP * hd],
+            tail_len: 0,
+            tokens: 0,
+        }
+    }
+
+    /// One decode step; returns logits.
+    pub fn decode(&self, seq: &mut PjrtSeq, token: u16, pos: usize) -> Result<Vec<f32>> {
+        let (l, kvh, hd) = (self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim);
+        match seq {
+            PjrtSeq::Dense { k, v, cur_len } => {
+                if *cur_len >= self.tmax {
+                    return Err(Error::Engine("dense cache capacity exceeded".into()));
+                }
+                let tok = [token as i32];
+                let out = self.rt.run(
+                    &self.decode_dense_name,
+                    Some(&self.dw),
+                    &[
+                        HostArg::I32(&tok, vec![1]),
+                        HostArg::ScalarI32(*cur_len as i32),
+                        HostArg::F32(k, vec![l, 1, kvh, self.tmax, hd]),
+                        HostArg::F32(v, vec![l, 1, kvh, self.tmax, hd]),
+                    ],
+                )?;
+                let (logits, _) = literal_f32(&out[0])?;
+                let (knew, _) = literal_f32(&out[1])?;
+                let (vnew, _) = literal_f32(&out[2])?;
+                *k = knew;
+                *v = vnew;
+                *cur_len += 1;
+                let _ = pos;
+                Ok(logits)
+            }
+            PjrtSeq::Sparse {
+                k_vals, k_idx, v_vals, v_idx, nc, tail_k, tail_v, tail_len, tokens,
+            } => {
+                let name = self.decode_sparse_name.as_ref().unwrap();
+                let out = self.rt.run(
+                    name,
+                    Some(&self.dw),
+                    &[
+                        HostArg::ScalarI32(token as i32),
+                        HostArg::ScalarI32(pos as i32),
+                        HostArg::F32(k_vals, vec![l, kvh, self.tc, self.kk]),
+                        HostArg::I32(k_idx, vec![l, kvh, self.tc, self.kk]),
+                        HostArg::F32(v_vals, vec![l, kvh, self.tc, self.kk]),
+                        HostArg::I32(v_idx, vec![l, kvh, self.tc, self.kk]),
+                        HostArg::ScalarI32(*nc as i32),
+                        HostArg::F32(tail_k, vec![l, kvh, TAIL_CAP, hd]),
+                        HostArg::F32(tail_v, vec![l, kvh, TAIL_CAP, hd]),
+                        HostArg::ScalarI32(*tail_len as i32),
+                    ],
+                )?;
+                let (logits, _) = literal_f32(&out[0])?;
+                let (new_k, _) = literal_f32(&out[1])?; // [L,KV,hd]
+                let (new_v, _) = literal_f32(&out[2])?;
+
+                // append the new token's K/V to every head's tail
+                for li in 0..l {
+                    for h in 0..kvh {
+                        let src = (li * kvh + h) * hd;
+                        let dst = (li * kvh + h) * TAIL_CAP * hd + *tail_len * hd;
+                        tail_k[dst..dst + hd].copy_from_slice(&new_k[src..src + hd]);
+                        tail_v[dst..dst + hd].copy_from_slice(&new_v[src..src + hd]);
+                    }
+                }
+                *tail_len += 1;
+                *tokens += 1;
+
+                // compression trigger: a full group has exited the window
+                if *tail_len == TAIL_CAP {
+                    if *nc + TILE > self.tc {
+                        return Err(Error::Engine("compressed region capacity exceeded".into()));
+                    }
+                    for li in 0..l {
+                        for h in 0..kvh {
+                            let tb = (li * kvh + h) * TAIL_CAP * hd;
+                            let kg = tail_k[tb..tb + TILE * hd].to_vec();
+                            let vg = tail_v[tb..tb + TILE * hd].to_vec();
+                            let kp = prune::per_token_magnitude(&kg, TILE, hd, self.kk);
+                            let vp = prune::per_token_magnitude(&vg, TILE, hd, self.kk);
+                            let kpair = TokenPairs::from_dense(&kp, TILE, hd, self.kk)?;
+                            let vpair = TokenPairs::from_dense(&vp, TILE, hd, self.kk)?;
+                            let base = ((li * kvh + h) * self.tc + *nc) * self.kk;
+                            k_vals[base..base + TILE * self.kk].copy_from_slice(&kpair.values);
+                            k_idx[base..base + TILE * self.kk].copy_from_slice(&kpair.indices);
+                            v_vals[base..base + TILE * self.kk].copy_from_slice(&vpair.values);
+                            v_idx[base..base + TILE * self.kk].copy_from_slice(&vpair.indices);
+                            // slide the tail down by one group
+                            tail_k.copy_within(tb + TILE * hd..tb + TAIL_CAP * hd, tb);
+                            tail_v.copy_within(tb + TILE * hd..tb + TAIL_CAP * hd, tb);
+                        }
+                    }
+                    *nc += TILE;
+                    *tail_len -= TILE;
+                }
+                let _ = self.sparsity;
+                Ok(logits)
+            }
+        }
+    }
+
+    /// fp16-accounting memory for a PJRT sequence (engine metrics).
+    pub fn seq_memory_bytes(&self, seq: &PjrtSeq) -> (usize, usize) {
+        use crate::sparse::bitmap::{BITMAP_BYTES, OFFSET_BYTES, PAD, VALUE_BYTES};
+        let (l, kv, hd) = (self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim);
+        let heads = l * kv;
+        match seq {
+            PjrtSeq::Dense { cur_len, .. } => {
+                let d = heads * 2 * cur_len * hd * VALUE_BYTES;
+                (d, d)
+            }
+            PjrtSeq::Sparse { nc, tail_len, tokens, .. } => {
+                // bitmap-equivalent accounting of the (vals, idx) region
+                let tiles_per_cache = nc * hd / TILE;
+                let vals_per_tile = (self.kk * TILE / hd).div_ceil(PAD) * PAD;
+                let per_cache =
+                    tiles_per_cache * (vals_per_tile * VALUE_BYTES + BITMAP_BYTES + OFFSET_BYTES);
+                let comp = heads * (2 * per_cache + 2 * tail_len * hd * VALUE_BYTES);
+                let dense = heads * 2 * tokens * hd * VALUE_BYTES;
+                (comp, dense)
+            }
+        }
+    }
+}

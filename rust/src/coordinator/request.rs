@@ -1,0 +1,70 @@
+//! Request/sequence lifecycle types for the serving coordinator.
+
+use std::time::Instant;
+
+/// Inference request as submitted by a client (router or trace).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u16>,
+    pub max_new_tokens: usize,
+    /// Stop generation at this token (the language's SEP by default).
+    pub stop_token: Option<u16>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u16>, max_new_tokens: usize) -> Request {
+        Request { id, prompt, max_new_tokens, stop_token: None }
+    }
+}
+
+/// Why a sequence finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit max_new_tokens.
+    Length,
+    /// Produced the stop token.
+    Stop,
+    /// Rejected at admission (prompt too long / over budget).
+    Rejected,
+}
+
+/// Completed request with timing breakdown.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<u16>,
+    pub finish: FinishReason,
+    pub queue_ms: f64,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    /// KV bytes (compressed accounting) held at completion.
+    pub kv_bytes: usize,
+    /// Dense-equivalent KV bytes at completion.
+    pub kv_dense_bytes: usize,
+}
+
+/// Internal per-sequence decode state.
+pub(crate) struct ActiveSeq {
+    pub req: Request,
+    pub generated: Vec<u16>,
+    /// Next RoPE position (= tokens processed so far).
+    pub pos: usize,
+    pub enqueue: Instant,
+    pub prefill_ms: f64,
+    pub queue_ms: f64,
+    pub decode_start: Instant,
+    pub state: crate::coordinator::engine::SeqState,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_defaults() {
+        let r = Request::new(7, vec![1, 2, 3], 16);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.stop_token, None);
+    }
+}

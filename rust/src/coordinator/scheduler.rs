@@ -1,0 +1,222 @@
+//! Admission control + continuous-batching scheduler.
+//!
+//! The scheduler decides which waiting requests join the running batch.
+//! Its KV-budget model is where Mustafar's compression pays off at the
+//! system level: compressed sequences reserve fewer bytes, so more of
+//! them fit in the same budget — the mechanism behind Fig 7's "larger
+//! batch at the same memory" result.
+
+use std::collections::VecDeque;
+
+use crate::config::{EngineConfig, ModelConfig};
+use crate::coordinator::request::Request;
+use crate::kvcache::KvPolicy;
+use crate::sparse::bitmap::{BITMAP_BYTES, OFFSET_BYTES, PAD, TILE, VALUE_BYTES};
+
+/// Estimate the steady-state KV bytes a sequence of `tokens` total tokens
+/// (prompt + generation) will hold under `policy` — the planning model
+/// used for admission, matching `SequenceKV::memory_bytes` accounting.
+pub fn estimate_seq_bytes(policy: &KvPolicy, cfg: &ModelConfig, tokens: usize) -> usize {
+    let heads = cfg.n_layers * cfg.n_kv_heads;
+    let hd = cfg.head_dim;
+    let dense_per_tok = 2 * hd * VALUE_BYTES; // K and V
+    if !policy.compress {
+        return heads * tokens * dense_per_tok;
+    }
+    let window = policy.local_window + TILE / 2; // average in-flight tail
+    let comp_tokens = tokens.saturating_sub(window);
+    let tail_tokens = tokens - comp_tokens;
+
+    let per_cache = |sparsity: f64, prune: bool| -> usize {
+        if !prune {
+            return comp_tokens * hd * VALUE_BYTES;
+        }
+        let kept = crate::prune::keep_count(hd, sparsity);
+        // per 64-elem tile: padded values + bitmap + offset
+        let tiles = comp_tokens * hd / TILE;
+        let vals_per_tile = (kept * TILE / hd).div_ceil(PAD) * PAD; // avg nnz per tile padded
+        tiles * (vals_per_tile * VALUE_BYTES + BITMAP_BYTES + OFFSET_BYTES)
+    };
+
+    let sp = &policy.sparsity;
+    let k_bytes = per_cache(sp.key_sparsity, sp.key_method != crate::prune::Method::None);
+    let v_bytes = per_cache(sp.value_sparsity, sp.value_method != crate::prune::Method::None);
+    heads * (k_bytes + v_bytes + tail_tokens * dense_per_tok)
+}
+
+/// FIFO admission queue with capacity + KV-budget gating.
+pub struct Scheduler {
+    pub cfg: EngineConfig,
+    model_cfg: ModelConfig,
+    policy: KvPolicy,
+    queue: VecDeque<Request>,
+    /// Bytes currently reserved by running sequences.
+    reserved: usize,
+    pub rejected: Vec<Request>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: EngineConfig, model_cfg: ModelConfig, policy: KvPolicy) -> Scheduler {
+        Scheduler {
+            cfg,
+            model_cfg,
+            policy,
+            queue: VecDeque::new(),
+            reserved: 0,
+            rejected: Vec::new(),
+        }
+    }
+
+    /// Enqueue a request; returns false (and records it) when the queue is
+    /// full or the request can never fit the budget.
+    pub fn submit(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.cfg.queue_cap {
+            self.rejected.push(req);
+            return false;
+        }
+        let need = self.estimate(&req);
+        if self.cfg.kv_budget_bytes > 0 && need > self.cfg.kv_budget_bytes {
+            self.rejected.push(req);
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    fn estimate(&self, req: &Request) -> usize {
+        estimate_seq_bytes(
+            &self.policy,
+            &self.model_cfg,
+            req.prompt.len() + req.max_new_tokens,
+        )
+    }
+
+    /// Admit requests into the running batch (`running` = current size).
+    /// Returns the admitted requests and reserves their KV budget.
+    pub fn admit(&mut self, running: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        while running + out.len() < self.cfg.max_batch {
+            let Some(front) = self.queue.front() else { break };
+            let need = self.estimate(front);
+            if self.cfg.kv_budget_bytes > 0 && self.reserved + need > self.cfg.kv_budget_bytes {
+                break; // head-of-line blocking by design (FIFO fairness)
+            }
+            self.reserved += need;
+            out.push(self.queue.pop_front().unwrap());
+        }
+        out
+    }
+
+    /// Release a finished sequence's reservation.
+    pub fn release(&mut self, req: &Request) {
+        let need = self.estimate(req);
+        self.reserved = self.reserved.saturating_sub(need);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn reserved_bytes(&self) -> usize {
+        self.reserved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    fn mc() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 256,
+            n_layers: 6,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 64,
+            ff: 512,
+            vocab: 512,
+            rope_theta: 1e4,
+            max_seq: 1024,
+            norm_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn estimate_compression_orders() {
+        let cfg = mc();
+        let dense = estimate_seq_bytes(&KvPolicy::dense(), &cfg, 1024);
+        let m50 = estimate_seq_bytes(&KvPolicy::mustafar(0.5, 0.5), &cfg, 1024);
+        let m70 = estimate_seq_bytes(&KvPolicy::mustafar(0.7, 0.7), &cfg, 1024);
+        assert!(dense > m50 && m50 > m70, "{dense} {m50} {m70}");
+        // Fig 6b ballpark: 50% -> ~0.65x dense, 70% -> ~0.45x dense
+        let r50 = m50 as f64 / dense as f64;
+        let r70 = m70 as f64 / dense as f64;
+        assert!((0.55..0.75).contains(&r50), "{r50}");
+        assert!((0.38..0.55).contains(&r70), "{r70}");
+    }
+
+    #[test]
+    fn budget_admits_more_compressed_sequences() {
+        let cfg = mc();
+        let budget = estimate_seq_bytes(&KvPolicy::dense(), &cfg, 1024) * 6; // fits 6 dense
+        let mk = |policy: KvPolicy| {
+            let mut ec = EngineConfig::default();
+            ec.max_batch = 16;
+            ec.kv_budget_bytes = budget;
+            let mut s = Scheduler::new(ec, cfg.clone(), policy);
+            for i in 0..16 {
+                let ok = s.submit(Request::new(i, vec![0; 896], 128));
+                assert!(ok);
+            }
+            s.admit(0).len()
+        };
+        let dense_batch = mk(KvPolicy::dense());
+        let sparse_batch = mk(KvPolicy::mustafar(0.7, 0.7));
+        assert_eq!(dense_batch, 6);
+        assert!(sparse_batch > dense_batch, "{sparse_batch} vs {dense_batch}");
+    }
+
+    #[test]
+    fn queue_capacity_rejects() {
+        let cfg = mc();
+        let mut ec = EngineConfig::default();
+        ec.queue_cap = 2;
+        let mut s = Scheduler::new(ec, cfg, KvPolicy::dense());
+        assert!(s.submit(Request::new(0, vec![0; 8], 4)));
+        assert!(s.submit(Request::new(1, vec![0; 8], 4)));
+        assert!(!s.submit(Request::new(2, vec![0; 8], 4)));
+        assert_eq!(s.rejected.len(), 1);
+        assert_eq!(s.pending(), 2);
+    }
+
+    #[test]
+    fn release_frees_budget() {
+        let cfg = mc();
+        let per = estimate_seq_bytes(&KvPolicy::dense(), &cfg, 40);
+        let mut ec = EngineConfig::default();
+        ec.max_batch = 1;
+        ec.kv_budget_bytes = per; // fits exactly one
+        let mut s = Scheduler::new(ec, cfg, KvPolicy::dense());
+        let r0 = Request::new(0, vec![0; 32], 8);
+        let r1 = Request::new(1, vec![0; 32], 8);
+        assert!(s.submit(r0.clone()));
+        assert!(s.submit(r1));
+        let adm = s.admit(0);
+        assert_eq!(adm.len(), 1);
+        assert_eq!(s.admit(0).len(), 0); // budget exhausted even with room
+        s.release(&r0);
+        assert_eq!(s.admit(0).len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let cfg = mc();
+        let mut s = Scheduler::new(EngineConfig::default(), cfg, KvPolicy::dense());
+        for i in 0..5 {
+            s.submit(Request::new(i, vec![0; 4], 1));
+        }
+        let adm = s.admit(0);
+        let ids: Vec<u64> = adm.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,38 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("json: {0}")]
+    Json(String),
+
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("shape: {0}")]
+    Shape(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla: {0}")]
+    Xla(String),
+
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    #[error("engine: {0}")]
+    Engine(String),
+
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

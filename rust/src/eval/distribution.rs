@@ -1,0 +1,87 @@
+//! KV-cache magnitude-distribution analysis (paper Fig 2): quantifies the
+//! Key cache's channel-wise outlier structure versus the Value cache's
+//! uniformity — the observation the whole pruning-direction study builds
+//! on. We verify our trained models exhibit the same structure before
+//! relying on it (DESIGN.md §2 substitution).
+
+use crate::model::NativeModel;
+
+/// Per-cache distribution statistics for one (layer, kv-head).
+#[derive(Clone, Debug)]
+pub struct CacheStats {
+    /// Mean |x| per channel.
+    pub channel_mean_abs: Vec<f32>,
+    /// Max/mean ratio of channel means — the "outlier-ness" score.
+    /// Large for the Key cache (outlier channels), near 1 for uniform.
+    pub channel_outlier_ratio: f32,
+    /// Coefficient of variation across channel means.
+    pub channel_cv: f32,
+}
+
+pub fn cache_stats(cache: &[f32], t: usize, hd: usize) -> CacheStats {
+    let mut mean = vec![0.0f32; hd];
+    for row in 0..t {
+        for c in 0..hd {
+            mean[c] += cache[row * hd + c].abs();
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= t as f32;
+    }
+    let avg: f32 = mean.iter().sum::<f32>() / hd as f32;
+    let mx = mean.iter().fold(0.0f32, |a, &b| a.max(b));
+    let var: f32 = mean.iter().map(|&m| (m - avg) * (m - avg)).sum::<f32>() / hd as f32;
+    CacheStats {
+        channel_outlier_ratio: if avg > 0.0 { mx / avg } else { 0.0 },
+        channel_cv: if avg > 0.0 { var.sqrt() / avg } else { 0.0 },
+        channel_mean_abs: mean,
+    }
+}
+
+/// Aggregated Fig-2 analysis over a prompt: per layer/head stats for both
+/// caches plus cache-wide averages of the outlier ratio.
+pub struct Fig2Result {
+    pub key_stats: Vec<CacheStats>,
+    pub value_stats: Vec<CacheStats>,
+    pub key_outlier_mean: f64,
+    pub value_outlier_mean: f64,
+}
+
+pub fn analyze_model(model: &NativeModel, prompt: &[u16]) -> Fig2Result {
+    let pre = model.prefill(prompt, false);
+    let hd = model.cfg().head_dim;
+    let t = pre.t;
+    let key_stats: Vec<CacheStats> = pre.k.iter().map(|k| cache_stats(k, t, hd)).collect();
+    let value_stats: Vec<CacheStats> = pre.v.iter().map(|v| cache_stats(v, t, hd)).collect();
+    let key_outlier_mean = crate::util::stats::mean(
+        &key_stats.iter().map(|s| s.channel_outlier_ratio as f64).collect::<Vec<_>>(),
+    );
+    let value_outlier_mean = crate::util::stats::mean(
+        &value_stats.iter().map(|s| s.channel_outlier_ratio as f64).collect::<Vec<_>>(),
+    );
+    Fig2Result { key_stats, value_stats, key_outlier_mean, value_outlier_mean }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outlier_ratio_detects_structure() {
+        // uniform matrix -> ratio ~1
+        let t = 100;
+        let hd = 16;
+        let uniform = vec![1.0f32; t * hd];
+        let s = cache_stats(&uniform, t, hd);
+        assert!((s.channel_outlier_ratio - 1.0).abs() < 1e-6);
+        assert!(s.channel_cv < 1e-6);
+
+        // one hot channel -> large ratio
+        let mut outlier = vec![0.1f32; t * hd];
+        for row in 0..t {
+            outlier[row * hd + 3] = 5.0;
+        }
+        let s = cache_stats(&outlier, t, hd);
+        assert!(s.channel_outlier_ratio > 5.0, "{}", s.channel_outlier_ratio);
+    }
+}

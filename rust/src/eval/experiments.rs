@@ -1,0 +1,522 @@
+//! Paper-experiment regenerators: one function per table/figure of the
+//! evaluation section (DESIGN.md §7 maps experiment ids to modules).
+//! Each prints a paper-style table and writes `reports/<id>.md`.
+
+use std::path::PathBuf;
+
+use crate::error::{Error, Result};
+use crate::eval::distribution;
+use crate::eval::harness::{run_sweep, SweepResult};
+use crate::eval::pipeline::{EvalConfig, H2oConfig};
+use crate::fmt::table::{fnum, Table};
+use crate::kvcache::{KvPolicy, QuantConfig, SequenceKV};
+use crate::model::{NativeModel, Weights};
+use crate::prune::Method;
+use crate::util::Pcg32;
+use crate::workload::tasks::Category;
+use crate::workload::lang;
+
+/// Shared experiment context (artifact + report dirs, sample budget).
+pub struct ExpCtx {
+    pub artifacts: PathBuf,
+    pub reports: PathBuf,
+    pub n_samples: usize,
+    pub ctx_len: usize,
+}
+
+impl ExpCtx {
+    pub fn new(artifacts: PathBuf, reports: PathBuf) -> ExpCtx {
+        ExpCtx { artifacts, reports, n_samples: 20, ctx_len: 448 }
+    }
+
+    fn model(&self, name: &str) -> Result<NativeModel> {
+        Ok(NativeModel::new(Weights::load(&self.artifacts, name)?))
+    }
+
+    fn write_report(&self, id: &str, content: &str) -> Result<()> {
+        std::fs::create_dir_all(&self.reports)?;
+        let path = self.reports.join(format!("{id}.md"));
+        std::fs::write(&path, content)?;
+        crate::info!("wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// All known experiment ids, in run order.
+pub const ALL_EXPERIMENTS: [&str; 15] = [
+    "fig2", "table1", "table2", "table3", "table4", "table5", "table6",
+    "table7", "table8", "table9", "table10", "table11", "table12", "fig6b",
+    "ppl",
+];
+
+/// Dispatch one experiment by id ("all" runs everything).
+pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
+    match id {
+        "all" => {
+            for e in ALL_EXPERIMENTS {
+                if let Err(err) = run(e, ctx) {
+                    // keep going — a missing model (e.g. gqa-medium not yet
+                    // trained) should not block the remaining experiments
+                    eprintln!("[exp] {e} failed: {err}");
+                }
+            }
+            Ok(())
+        }
+        "fig2" => fig2(ctx),
+        "table1" => key_method_study(ctx, "gqa-small", "table1"),
+        "table2" => value_method_study(ctx, "gqa-small", "table2"),
+        "table3" => table3(ctx),
+        "table4" => table4(ctx),
+        "table5" => table5(ctx),
+        "table6" => table6(ctx),
+        "table7" => key_method_study(ctx, "mha-small", "table7"),
+        "table8" => value_method_study(ctx, "mha-small", "table8"),
+        "table9" => table9(ctx),
+        "table10" => table10(ctx),
+        "table11" => table11(ctx),
+        "table12" => table12(ctx),
+        "fig6b" => fig6b(ctx),
+        "ppl" => ppl_study(ctx),
+        other => Err(Error::Invalid(format!("unknown experiment '{other}'"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rendering helpers
+// ---------------------------------------------------------------------------
+
+/// Category-rows table (paper Tables 1/2/3/7/8/9 layout).
+fn render_category_table(title: &str, sweep: &SweepResult) -> String {
+    let mut header = vec!["Task"];
+    let labels: Vec<&str> = sweep.config_labels.iter().map(|s| s.as_str()).collect();
+    header.extend(labels.iter());
+    let mut t = Table::new(title, &header);
+    let mut avg_row = vec!["Average".to_string()];
+    for c in 0..sweep.config_labels.len() {
+        avg_row.push(fnum(sweep.average(c), 2));
+    }
+    t.row(avg_row);
+    for cat in Category::all() {
+        let mut row = vec![cat.name().to_string()];
+        for c in 0..sweep.config_labels.len() {
+            row.push(fnum(sweep.category_avg(c, cat), 2));
+        }
+        t.row(row);
+    }
+    let out = t.render();
+    println!("{out}");
+    out
+}
+
+/// Config-rows × task-columns table (paper Table 4 layout).
+fn render_grid_table(title: &str, sweep: &SweepResult) -> String {
+    let mut header = vec!["Config".to_string()];
+    header.extend(sweep.task_ids.iter().cloned());
+    header.push("Avg.".to_string());
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &hrefs);
+    for c in 0..sweep.config_labels.len() {
+        let mut row = vec![sweep.config_labels[c].clone()];
+        for &s in &sweep.scores[c] {
+            row.push(fnum(s, 2));
+        }
+        row.push(fnum(sweep.average(c), 2));
+        t.row(row);
+    }
+    let out = t.render();
+    println!("{out}");
+    out
+}
+
+fn six_task_subset() -> Vec<&'static str> {
+    // one representative task per category (paper Tables 5/6 use
+    // NtrvQA/HotpotQA/GovReport/TREC/PCount/Lcc)
+    vec!["sqa-easy", "mqa-2doc", "sum-recap8", "few-map", "syn-count", "code-ident"]
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2 — KV magnitude distributions
+// ---------------------------------------------------------------------------
+
+fn fig2(ctx: &ExpCtx) -> Result<()> {
+    let mut out = String::from("# Fig 2 — KV cache magnitude distribution\n\n");
+    out.push_str(
+        "Paper: Key cache has distinct channel-wise outliers; Value cache is \
+         uniform. Metric: max/mean ratio of per-channel mean |x| (1.0 = \
+         perfectly uniform).\n\n",
+    );
+    let mut t = Table::new("Channel outlier ratios", &["model", "Key cache", "Value cache", "K/V ratio"]);
+    for name in ["gqa-small", "mha-small", "gqa-medium"] {
+        let Ok(model) = ctx.model(name) else {
+            crate::info!("fig2: skipping {name} (weights missing)");
+            continue;
+        };
+        let prompt = lang::gen_document(&mut Pcg32::seeded(1234), ctx.ctx_len);
+        let r = distribution::analyze_model(&model, &prompt);
+        t.row(vec![
+            name.to_string(),
+            fnum(r.key_outlier_mean, 2),
+            fnum(r.value_outlier_mean, 2),
+            fnum(r.key_outlier_mean / r.value_outlier_mean.max(1e-9), 2),
+        ]);
+    }
+    let body = t.render();
+    println!("{body}");
+    out.push_str(&body);
+    ctx.write_report("fig2", &out)
+}
+
+// ---------------------------------------------------------------------------
+// Tables 1/7 — Key-cache pruning method study
+// ---------------------------------------------------------------------------
+
+fn key_method_study(ctx: &ExpCtx, model_name: &str, id: &str) -> Result<()> {
+    let model = ctx.model(model_name)?;
+    let mut cfgs = vec![EvalConfig::dense()];
+    for s in [0.5, 0.7] {
+        cfgs.push(EvalConfig::think(s));
+        cfgs.push(EvalConfig::methods(
+            &format!("OA-Unstr K{s}"),
+            Method::TokenOutputAware,
+            s,
+            Method::None,
+            0.0,
+        ));
+        cfgs.push(EvalConfig::methods(
+            &format!("Mag K{s}"),
+            Method::TokenMagnitude,
+            s,
+            Method::None,
+            0.0,
+        ));
+    }
+    let sweep = run_sweep(&model, &cfgs, None, ctx.n_samples, ctx.ctx_len);
+    let body = render_category_table(
+        &format!("{id} — Key-cache pruning methods ({model_name})"),
+        &sweep,
+    );
+    ctx.write_report(id, &body)
+}
+
+// ---------------------------------------------------------------------------
+// Tables 2/8 — Value-cache pruning method study
+// ---------------------------------------------------------------------------
+
+fn value_method_study(ctx: &ExpCtx, model_name: &str, id: &str) -> Result<()> {
+    let model = ctx.model(model_name)?;
+    let mut cfgs = vec![EvalConfig::dense()];
+    for s in [0.5, 0.7] {
+        cfgs.push(EvalConfig::methods(
+            &format!("ThinK V{s}"),
+            Method::None,
+            0.0,
+            Method::ThinkStructured,
+            s,
+        ));
+        cfgs.push(EvalConfig::methods(
+            &format!("ChMag V{s}"),
+            Method::None,
+            0.0,
+            Method::ChannelMagnitude,
+            s,
+        ));
+        cfgs.push(EvalConfig::methods(
+            &format!("ChOA V{s}"),
+            Method::None,
+            0.0,
+            Method::ChannelOutputAware,
+            s,
+        ));
+        cfgs.push(EvalConfig::methods(
+            &format!("TokMag V{s}"),
+            Method::None,
+            0.0,
+            Method::TokenMagnitude,
+            s,
+        ));
+    }
+    let sweep = run_sweep(&model, &cfgs, None, ctx.n_samples, ctx.ctx_len);
+    let body = render_category_table(
+        &format!("{id} — Value-cache pruning methods ({model_name})"),
+        &sweep,
+    );
+    ctx.write_report(id, &body)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — K+V per-token magnitude on both small models
+// ---------------------------------------------------------------------------
+
+fn table3(ctx: &ExpCtx) -> Result<()> {
+    let cfgs = vec![
+        EvalConfig::dense(),
+        EvalConfig::mustafar(0.5, 0.5),
+        EvalConfig::mustafar(0.7, 0.7),
+    ];
+    let mut out = String::new();
+    for name in ["gqa-small", "mha-small"] {
+        let model = ctx.model(name)?;
+        let sweep = run_sweep(&model, &cfgs, None, ctx.n_samples, ctx.ctx_len);
+        out.push_str(&render_category_table(
+            &format!("table3 — K+V per-token magnitude ({name})"),
+            &sweep,
+        ));
+        out.push('\n');
+    }
+    ctx.write_report("table3", &out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 — full sparsity grid × 16 tasks × 3 models
+// ---------------------------------------------------------------------------
+
+fn grid_configs() -> Vec<EvalConfig> {
+    vec![
+        EvalConfig::dense(),
+        EvalConfig::think(0.5),
+        EvalConfig::mustafar(0.5, 0.0),
+        EvalConfig::think(0.7),
+        EvalConfig::mustafar(0.7, 0.0),
+        EvalConfig::mustafar(0.0, 0.5),
+        EvalConfig::mustafar(0.0, 0.7),
+        EvalConfig::mustafar(0.5, 0.5),
+        EvalConfig::mustafar(0.7, 0.7),
+    ]
+}
+
+fn table4(ctx: &ExpCtx) -> Result<()> {
+    let cfgs = grid_configs();
+    let mut out = String::new();
+    for name in ["gqa-small", "mha-small", "gqa-medium"] {
+        let model = ctx.model(name)?;
+        let sweep = run_sweep(&model, &cfgs, None, ctx.n_samples, ctx.ctx_len);
+        out.push_str(&render_grid_table(&format!("table4 — full grid ({name})"), &sweep));
+        out.push('\n');
+    }
+    ctx.write_report("table4", &out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — joint with H2O token eviction (20% KV budget)
+// ---------------------------------------------------------------------------
+
+fn table5(ctx: &ExpCtx) -> Result<()> {
+    let model = ctx.model("mha-small")?;
+    let h2o = Some(H2oConfig { recent_frac: 0.1, hh_frac: 0.1 });
+    let with_h2o = |mut c: EvalConfig, label: &str| {
+        c.h2o = h2o;
+        c.label = label.to_string();
+        c
+    };
+    let cfgs = vec![
+        EvalConfig::dense(), // "Full KV cache" row
+        with_h2o(EvalConfig::dense(), "H2O Dense"),
+        with_h2o(EvalConfig::mustafar(0.5, 0.0), "H2O K0.5"),
+        with_h2o(EvalConfig::mustafar(0.7, 0.0), "H2O K0.7"),
+        with_h2o(EvalConfig::mustafar(0.0, 0.5), "H2O V0.5"),
+        with_h2o(EvalConfig::mustafar(0.0, 0.7), "H2O V0.7"),
+        with_h2o(EvalConfig::mustafar(0.5, 0.5), "H2O K0.5 V0.5"),
+        with_h2o(EvalConfig::mustafar(0.7, 0.7), "H2O K0.7 V0.7"),
+    ];
+    let subset = six_task_subset();
+    let model_sweep = run_sweep(&model, &cfgs, Some(&subset), ctx.n_samples, ctx.ctx_len);
+    let body = render_grid_table("table5 — Mustafar + H2O (mha-small, 20% budget)", &model_sweep);
+    ctx.write_report("table5", &body)
+}
+
+// ---------------------------------------------------------------------------
+// Table 6 — joint with KIVI quantization
+// ---------------------------------------------------------------------------
+
+fn table6(ctx: &ExpCtx) -> Result<()> {
+    let model = ctx.model("gqa-small")?;
+    let mut cfgs = vec![EvalConfig::dense()];
+    for bits in [4u32, 2] {
+        let q = Some(QuantConfig { key_bits: bits, value_bits: bits });
+        let mk = |mut c: EvalConfig, label: String| {
+            c.quant = q;
+            c.label = label;
+            c
+        };
+        cfgs.push(mk(EvalConfig::dense(), format!("KIVI{bits} Dense")));
+        cfgs.push(mk(EvalConfig::mustafar(0.5, 0.0), format!("KIVI{bits} K0.5")));
+        cfgs.push(mk(EvalConfig::mustafar(0.7, 0.0), format!("KIVI{bits} K0.7")));
+        cfgs.push(mk(EvalConfig::mustafar(0.0, 0.5), format!("KIVI{bits} V0.5")));
+        cfgs.push(mk(EvalConfig::mustafar(0.0, 0.7), format!("KIVI{bits} V0.7")));
+        cfgs.push(mk(EvalConfig::mustafar(0.5, 0.5), format!("KIVI{bits} K0.5 V0.5")));
+        cfgs.push(mk(EvalConfig::mustafar(0.7, 0.7), format!("KIVI{bits} K0.7 V0.7")));
+    }
+    let subset = six_task_subset();
+    let sweep = run_sweep(&model, &cfgs, Some(&subset), ctx.n_samples, ctx.ctx_len);
+    let body = render_grid_table("table6 — Mustafar + KIVI (gqa-small)", &sweep);
+    ctx.write_report("table6", &body)
+}
+
+// ---------------------------------------------------------------------------
+// Table 9 — K+V magnitude on mha-small (App. A.1)
+// ---------------------------------------------------------------------------
+
+fn table9(ctx: &ExpCtx) -> Result<()> {
+    let model = ctx.model("mha-small")?;
+    let cfgs = vec![
+        EvalConfig::dense(),
+        EvalConfig::mustafar(0.5, 0.5),
+        EvalConfig::mustafar(0.7, 0.7),
+    ];
+    let sweep = run_sweep(&model, &cfgs, None, ctx.n_samples, ctx.ctx_len);
+    let body = render_category_table("table9 — K+V per-token magnitude (mha-small)", &sweep);
+    ctx.write_report("table9", &body)
+}
+
+// ---------------------------------------------------------------------------
+// Table 10 — larger model incl. mixed sparsity (App. A.2)
+// ---------------------------------------------------------------------------
+
+fn table10(ctx: &ExpCtx) -> Result<()> {
+    let model = ctx.model("gqa-medium")?;
+    let mut cfgs = grid_configs();
+    cfgs.push(EvalConfig::mustafar(0.5, 0.7)); // the paper's mixed pick
+    let sweep = run_sweep(&model, &cfgs, None, ctx.n_samples, ctx.ctx_len);
+    let body = render_grid_table("table10 — larger model, incl. K0.5 V0.7 (gqa-medium)", &sweep);
+    ctx.write_report("table10", &body)
+}
+
+// ---------------------------------------------------------------------------
+// Table 11 — higher sparsity (App. A.3)
+// ---------------------------------------------------------------------------
+
+fn table11(ctx: &ExpCtx) -> Result<()> {
+    let model = ctx.model("gqa-small")?;
+    let cfgs = vec![
+        EvalConfig::dense(),
+        EvalConfig::mustafar(0.8, 0.0),
+        EvalConfig::mustafar(0.9, 0.0),
+        EvalConfig::mustafar(0.0, 0.8),
+        EvalConfig::mustafar(0.0, 0.9),
+        EvalConfig::mustafar(0.8, 0.8),
+        EvalConfig::mustafar(0.9, 0.9),
+    ];
+    let sweep = run_sweep(&model, &cfgs, None, ctx.n_samples, ctx.ctx_len);
+    let body = render_grid_table("table11 — higher sparsity (gqa-small)", &sweep);
+    ctx.write_report("table11", &body)
+}
+
+// ---------------------------------------------------------------------------
+// Table 12 — 2:4 semi-structured vs unstructured (App. B)
+// ---------------------------------------------------------------------------
+
+fn table12(ctx: &ExpCtx) -> Result<()> {
+    let model = ctx.model("gqa-small")?;
+    let cfgs = vec![
+        EvalConfig::dense(),
+        EvalConfig::methods("K0.5 (2:4)", Method::Semi24, 0.5, Method::None, 0.0),
+        EvalConfig::methods("K0.5 (Unstr)", Method::TokenMagnitude, 0.5, Method::None, 0.0),
+        EvalConfig::methods("V0.5 (2:4)", Method::None, 0.0, Method::Semi24, 0.5),
+        EvalConfig::methods("V0.5 (Unstr)", Method::None, 0.0, Method::TokenMagnitude, 0.5),
+        EvalConfig::methods("KV0.5 (2:4)", Method::Semi24, 0.5, Method::Semi24, 0.5),
+        EvalConfig::methods("KV0.5 (Unstr)", Method::TokenMagnitude, 0.5, Method::TokenMagnitude, 0.5),
+    ];
+    let sweep = run_sweep(&model, &cfgs, None, ctx.n_samples, ctx.ctx_len);
+    let body = render_grid_table("table12 — 2:4 vs unstructured (gqa-small)", &sweep);
+    ctx.write_report("table12", &body)
+}
+
+// ---------------------------------------------------------------------------
+// Supplementary: perplexity degradation under pruning (floor-free signal)
+// ---------------------------------------------------------------------------
+
+/// Held-out NLL under the §2 method grid — the model-quality-independent
+/// version of Tables 1/2: the *ordering* of methods is the reproduction
+/// target (dense < unstructured magnitude/OA < 2:4 < structured).
+fn ppl_study(ctx: &ExpCtx) -> Result<()> {
+    let mut out = String::from(
+        "# Supplementary — held-out NLL (nats/token) under KV pruning\n\n         Lower is better; Dense is the floor. This signal does not depend\n         on task mastery, so it is meaningful at any training budget.\n\n",
+    );
+    for name in ["gqa-small", "mha-small"] {
+        let Ok(model) = ctx.model(name) else { continue };
+        let cfgs = vec![
+            EvalConfig::dense(),
+            EvalConfig::mustafar(0.5, 0.5),
+            EvalConfig::methods("OA-K0.5 V0.5", Method::TokenOutputAware, 0.5, Method::TokenMagnitude, 0.5),
+            EvalConfig::methods("2:4 KV", Method::Semi24, 0.5, Method::Semi24, 0.5),
+            EvalConfig::methods("ChMag V0.5", Method::None, 0.0, Method::ChannelMagnitude, 0.5),
+            EvalConfig::think(0.5),
+            EvalConfig::mustafar(0.7, 0.7),
+            EvalConfig::think(0.7),
+            EvalConfig::mustafar(0.9, 0.9),
+        ];
+        let nll = crate::eval::ppl::sweep_nll(&model, &cfgs, ctx.n_samples.min(12), ctx.ctx_len.min(384));
+        let mut t = Table::new(&format!("ppl — {name}"), &["config", "NLL (nats/tok)", "Δ vs dense"]);
+        for (c, cfg) in cfgs.iter().enumerate() {
+            t.row(vec![
+                cfg.label.clone(),
+                fnum(nll[c], 4),
+                fnum(nll[c] - nll[0], 4),
+            ]);
+        }
+        let body = t.render();
+        println!("{body}");
+        out.push_str(&body);
+        out.push('\n');
+    }
+    ctx.write_report("ppl", &out)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6b — compression rate vs accuracy
+// ---------------------------------------------------------------------------
+
+fn fig6b(ctx: &ExpCtx) -> Result<()> {
+    let mut out = String::from("# Fig 6b — compression rate vs LongBench-sim average\n\n");
+    for name in ["gqa-small", "mha-small"] {
+        let model = ctx.model(name)?;
+        // measured compression rate on a real prompt through the KV manager
+        let rate_of = |cfg: &EvalConfig| -> f64 {
+            let mcfg = model.cfg();
+            let prompt = lang::gen_document(&mut Pcg32::seeded(5), ctx.ctx_len);
+            let pre = model.prefill(&prompt, false);
+            let policy = KvPolicy {
+                sparsity: cfg.sparsity,
+                quant: None,
+                compress: cfg.sparsity.key_method != Method::None
+                    || cfg.sparsity.value_method != Method::None,
+                local_window: crate::prune::LOCAL_WINDOW,
+            };
+            let mut kv = SequenceKV::new(policy, mcfg.n_layers, mcfg.n_kv_heads, mcfg.head_dim);
+            kv.ingest_prefill(&pre.k, &pre.v, pre.t, None).unwrap();
+            if cfg.sparsity.key_method == Method::ThinkStructured {
+                // ThinK keeps kept channels dense: kept fraction of K + dense V
+                let ks = 1.0 - cfg.sparsity.key_sparsity;
+                return (ks + 1.0) / 2.0;
+            }
+            kv.compression_rate()
+        };
+
+        let points = vec![
+            EvalConfig::dense(),
+            EvalConfig::think(0.5),
+            EvalConfig::think(0.7),
+            EvalConfig::mustafar(0.5, 0.0),
+            EvalConfig::mustafar(0.7, 0.0),
+            EvalConfig::mustafar(0.5, 0.5),
+            EvalConfig::mustafar(0.7, 0.7),
+        ];
+        let sweep = run_sweep(&model, &points, None, ctx.n_samples, ctx.ctx_len);
+        let mut t = Table::new(
+            &format!("fig6b — {name}"),
+            &["config", "compression rate (% of dense)", "LongBench-sim avg"],
+        );
+        for (i, cfg) in points.iter().enumerate() {
+            t.row(vec![
+                cfg.label.clone(),
+                fnum(rate_of(cfg) * 100.0, 1),
+                fnum(sweep.average(i), 2),
+            ]);
+        }
+        let body = t.render();
+        println!("{body}");
+        out.push_str(&body);
+        out.push('\n');
+    }
+    ctx.write_report("fig6b", &out)
+}

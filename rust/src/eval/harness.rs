@@ -1,0 +1,137 @@
+//! Sweep harness: evaluates a config grid over the task suite with
+//! sample-level parallelism, aggregates per-task / per-category / average
+//! scores — the machinery behind every accuracy table in the paper.
+
+use std::sync::Mutex;
+
+use crate::eval::pipeline::{eval_sample, EvalConfig};
+use crate::model::NativeModel;
+use crate::workload::tasks::{self, Category, TASKS};
+
+/// Scores from one sweep: `scores[cfg][task]` in paper units (0-100).
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub config_labels: Vec<String>,
+    pub task_ids: Vec<String>,
+    pub scores: Vec<Vec<f64>>,
+}
+
+impl SweepResult {
+    /// Mean over all tasks for config `c`.
+    pub fn average(&self, c: usize) -> f64 {
+        crate::util::stats::mean(&self.scores[c])
+    }
+
+    /// Mean over the tasks of one category.
+    pub fn category_avg(&self, c: usize, cat: Category) -> f64 {
+        let vals: Vec<f64> = self
+            .task_ids
+            .iter()
+            .zip(&self.scores[c])
+            .filter(|(id, _)| tasks::spec(id).map(|s| s.category) == Some(cat))
+            .map(|(_, &s)| s)
+            .collect();
+        crate::util::stats::mean(&vals)
+    }
+
+    pub fn cfg_index(&self, label: &str) -> Option<usize> {
+        self.config_labels.iter().position(|l| l == label)
+    }
+}
+
+/// Run `n_samples` of every task (or `task_subset` if given) under the
+/// config grid. Parallelizes over samples; the model must outlive the
+/// call. Returns scores ×100 (paper units).
+pub fn run_sweep(
+    model: &NativeModel,
+    cfgs: &[EvalConfig],
+    task_subset: Option<&[&str]>,
+    n_samples: usize,
+    ctx_len: usize,
+) -> SweepResult {
+    let task_ids: Vec<String> = match task_subset {
+        Some(sub) => sub.iter().map(|s| s.to_string()).collect(),
+        None => TASKS.iter().map(|t| t.id.to_string()).collect(),
+    };
+
+    // (task_idx, sample_idx) work items
+    let work: Vec<(usize, u64)> = task_ids
+        .iter()
+        .enumerate()
+        .flat_map(|(ti, _)| (0..n_samples as u64).map(move |s| (ti, s)))
+        .collect();
+
+    // accumulate per (cfg, task)
+    let acc = Mutex::new(vec![vec![0.0f64; task_ids.len()]; cfgs.len()]);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let workers = crate::util::threads().min(work.len().max(1));
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= work.len() {
+                    break;
+                }
+                let (ti, sidx) = work[i];
+                let sample = tasks::generate(&task_ids[ti], sidx, ctx_len);
+                let scores = eval_sample(model, &sample, cfgs);
+                let mut a = acc.lock().unwrap();
+                for (c, s) in scores.iter().enumerate() {
+                    a[c][ti] += s;
+                }
+            });
+        }
+    });
+
+    let mut scores = acc.into_inner().unwrap();
+    for row in scores.iter_mut() {
+        for s in row.iter_mut() {
+            *s = *s / n_samples as f64 * 100.0;
+        }
+    }
+    SweepResult {
+        config_labels: cfgs.iter().map(|c| c.label.clone()).collect(),
+        task_ids,
+        scores,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::Weights;
+
+    #[test]
+    fn sweep_aggregates_shapes() {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 32,
+            ff: 128,
+            vocab: 512,
+            rope_theta: 10000.0,
+            max_seq: 512,
+            norm_eps: 1e-5,
+        };
+        let model = NativeModel::new(Weights::random_for_tests(cfg, 3));
+        let cfgs = vec![EvalConfig::dense(), EvalConfig::mustafar(0.7, 0.7)];
+        let r = run_sweep(&model, &cfgs, Some(&["syn-passkey", "sum-recap8"]), 2, 192);
+        assert_eq!(r.scores.len(), 2);
+        assert_eq!(r.scores[0].len(), 2);
+        for row in &r.scores {
+            for &s in row {
+                assert!((0.0..=100.0).contains(&s));
+            }
+        }
+        let avg = r.average(0);
+        assert!((0.0..=100.0).contains(&avg));
+        // category average over subset picks only matching tasks
+        let syn = r.category_avg(0, Category::Synthetic);
+        assert!((0.0..=100.0).contains(&syn));
+    }
+}

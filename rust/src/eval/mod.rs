@@ -1,0 +1,14 @@
+//! Accuracy-evaluation pipeline: runs LongBench-sim samples through the
+//! native model under a grid of compression configurations and scores
+//! them. One prefill is shared across every configuration of a sample
+//! (prefill is dense in the paper too — pruning happens afterwards), so
+//! full-grid sweeps cost one prefill + cheap decodes per config.
+
+pub mod distribution;
+pub mod experiments;
+pub mod harness;
+pub mod pipeline;
+pub mod ppl;
+
+pub use harness::{run_sweep, SweepResult};
+pub use pipeline::{eval_sample, EvalConfig, H2oConfig};

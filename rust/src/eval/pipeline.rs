@@ -1,0 +1,262 @@
+//! Single-sample evaluation under a grid of compression configs.
+
+use crate::config::SparsityConfig;
+use crate::evict::h2o_select;
+use crate::kvcache::{KvPolicy, PruneAux, QuantConfig, SequenceKV};
+use crate::model::{argmax, NativeModel, PrefillResult};
+use crate::prune::{Method, LOCAL_WINDOW};
+use crate::workload::TaskSample;
+
+/// H2O joint-application settings (paper §4.2.1: 10% + 10%).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct H2oConfig {
+    pub recent_frac: f64,
+    pub hh_frac: f64,
+}
+
+/// One column of an accuracy table.
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    pub label: String,
+    pub sparsity: SparsityConfig,
+    pub quant: Option<QuantConfig>,
+    pub h2o: Option<H2oConfig>,
+}
+
+impl EvalConfig {
+    pub fn dense() -> EvalConfig {
+        EvalConfig {
+            label: "Dense".into(),
+            sparsity: SparsityConfig::dense(),
+            quant: None,
+            h2o: None,
+        }
+    }
+
+    pub fn mustafar(ks: f64, vs: f64) -> EvalConfig {
+        let sp = SparsityConfig::mustafar(ks, vs);
+        EvalConfig { label: sp.label(), sparsity: sp, quant: None, h2o: None }
+    }
+
+    pub fn think(ks: f64) -> EvalConfig {
+        let sp = SparsityConfig {
+            key_method: Method::ThinkStructured,
+            key_sparsity: ks,
+            value_method: Method::None,
+            value_sparsity: 0.0,
+        };
+        EvalConfig { label: format!("ThinK{ks}"), sparsity: sp, quant: None, h2o: None }
+    }
+
+    /// Custom per-cache methods (the §2 method studies).
+    pub fn methods(label: &str, km: Method, ks: f64, vm: Method, vs: f64) -> EvalConfig {
+        EvalConfig {
+            label: label.to_string(),
+            sparsity: SparsityConfig {
+                key_method: km,
+                key_sparsity: ks,
+                value_method: vm,
+                value_sparsity: vs,
+            },
+            quant: None,
+            h2o: None,
+        }
+    }
+
+    fn needs_aux(&self) -> bool {
+        self.h2o.is_some()
+            || matches!(
+                self.sparsity.key_method,
+                Method::TokenOutputAware | Method::ThinkStructured
+            )
+            || matches!(self.sparsity.value_method, Method::ChannelOutputAware)
+    }
+
+    fn compresses(&self) -> bool {
+        self.sparsity.key_method != Method::None
+            || self.sparsity.value_method != Method::None
+            || self.quant.is_some()
+            || self.h2o.is_some()
+    }
+}
+
+/// Whether any config in the grid needs the (expensive) attention-matrix
+/// capture during prefill.
+pub fn grid_needs_aux(cfgs: &[EvalConfig]) -> bool {
+    cfgs.iter().any(|c| c.needs_aux())
+}
+
+/// Evaluate one sample under every config; returns scores in [0, 1].
+///
+/// The context minus its trailing `query_len` tokens is prefilled once
+/// (dense, as in the paper); per config, the cache is pruned/quantized/
+/// evicted + compressed, the query tokens are decoded teacher-forced, and
+/// the answer is scored (greedy generation or teacher-forced accuracy).
+pub fn eval_sample(model: &NativeModel, sample: &TaskSample, cfgs: &[EvalConfig]) -> Vec<f64> {
+    let ctx = &sample.context;
+    let qlen = sample.query_len.max(1).min(ctx.len() - 1);
+    let t_pre = ctx.len() - qlen;
+    let pre = model.prefill(&ctx[..t_pre], grid_needs_aux(cfgs));
+
+    cfgs.iter().map(|cfg| eval_one(model, sample, &pre, cfg, t_pre)).collect()
+}
+
+fn eval_one(
+    model: &NativeModel,
+    sample: &TaskSample,
+    pre: &PrefillResult,
+    cfg: &EvalConfig,
+    t_pre: usize,
+) -> f64 {
+    let mcfg = model.cfg();
+    let policy = KvPolicy {
+        sparsity: cfg.sparsity,
+        quant: cfg.quant,
+        compress: cfg.compresses(),
+        local_window: LOCAL_WINDOW,
+    };
+    let mut kv = SequenceKV::new(policy, mcfg.n_layers, mcfg.n_kv_heads, mcfg.head_dim);
+
+    // H2O eviction first (paper §4.2.1: Mustafar prunes the *retained*
+    // tokens), per head — budgets are uniform so head token counts agree.
+    let (k_rows, v_rows, t_kept, aux) = if let Some(h2o) = cfg.h2o {
+        let hd = mcfg.head_dim;
+        let (rb, hb) = crate::evict::budgets_from_fraction(t_pre, h2o.recent_frac, h2o.hh_frac);
+        let mut k_f = Vec::with_capacity(pre.k.len());
+        let mut v_f = Vec::with_capacity(pre.v.len());
+        let mut aux_f = PruneAux::default();
+        let mut kept_len = 0;
+        for idx in 0..pre.k.len() {
+            let sel = h2o_select(&pre.att_total[idx].iter().map(|&x| x as f64).collect::<Vec<_>>(), t_pre, rb, hb);
+            kept_len = sel.kept.len();
+            let mut km = Vec::with_capacity(sel.kept.len() * hd);
+            let mut vm = Vec::with_capacity(sel.kept.len() * hd);
+            let mut aw = Vec::with_capacity(sel.kept.len());
+            for &t in &sel.kept {
+                km.extend_from_slice(&pre.k[idx][t * hd..(t + 1) * hd]);
+                vm.extend_from_slice(&pre.v[idx][t * hd..(t + 1) * hd]);
+                aw.push(pre.aux.att_win[idx].get(t).copied().unwrap_or(0.0));
+            }
+            k_f.push(km);
+            v_f.push(vm);
+            aux_f.q_abs_win.push(pre.aux.q_abs_win.get(idx).cloned().unwrap_or_default());
+            aux_f.att_win.push(aw);
+        }
+        (k_f, v_f, kept_len, Some(aux_f))
+    } else {
+        (pre.k.clone(), pre.v.clone(), t_pre, None)
+    };
+
+    let aux_ref = if cfg.needs_aux() {
+        if aux.is_some() {
+            aux.as_ref()
+        } else {
+            Some(&pre.aux)
+        }
+    } else {
+        None
+    };
+    kv.ingest_prefill(&k_rows, &v_rows, t_kept, aux_ref).expect("ingest");
+
+    // Feed the query through decode steps (positions continue from the
+    // *original* sequence, eviction notwithstanding — keys keep their
+    // RoPE positions).
+    let ctx = &sample.context;
+    let mut logits = Vec::new();
+    for (i, &tok) in ctx[t_pre..].iter().enumerate() {
+        logits = model.decode(tok, t_pre + i, &mut kv).expect("decode");
+    }
+    let mut pos = ctx.len();
+
+    // Score the answer.
+    let ans = &sample.answer;
+    let mut correct = 0usize;
+    for (j, &gold) in ans.iter().enumerate() {
+        let pred = argmax(&logits);
+        if pred == gold {
+            correct += 1;
+        }
+        if j + 1 < ans.len() {
+            // forced: feed gold; gen: feed the model's own token
+            let next = if sample.forced { gold } else { pred };
+            logits = model.decode(next, pos, &mut kv).expect("decode");
+            pos += 1;
+        }
+    }
+    correct as f64 / ans.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::Weights;
+    use crate::workload::tasks;
+
+    fn tiny_model() -> NativeModel {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 32,
+            ff: 128,
+            vocab: 512,
+            rope_theta: 10000.0,
+            max_seq: 512,
+            norm_eps: 1e-5,
+        };
+        NativeModel::new(Weights::random_for_tests(cfg, 7))
+    }
+
+    #[test]
+    fn grid_eval_runs_all_config_kinds() {
+        let model = tiny_model();
+        let sample = tasks::generate("sqa-easy", 0, 256);
+        let cfgs = vec![
+            EvalConfig::dense(),
+            EvalConfig::mustafar(0.5, 0.5),
+            EvalConfig::think(0.5),
+            EvalConfig::methods("oa", Method::TokenOutputAware, 0.5, Method::ChannelOutputAware, 0.5),
+            EvalConfig {
+                label: "kivi".into(),
+                sparsity: SparsityConfig::mustafar(0.5, 0.5),
+                quant: Some(QuantConfig { key_bits: 4, value_bits: 4 }),
+                h2o: None,
+            },
+            EvalConfig {
+                label: "h2o".into(),
+                sparsity: SparsityConfig::mustafar(0.5, 0.5),
+                quant: None,
+                h2o: Some(H2oConfig { recent_frac: 0.1, hh_frac: 0.1 }),
+            },
+        ];
+        let scores = eval_sample(&model, &sample, &cfgs);
+        assert_eq!(scores.len(), cfgs.len());
+        for s in scores {
+            assert!((0.0..=1.0).contains(&s));
+        }
+    }
+
+    #[test]
+    fn forced_scoring_counts_positions() {
+        let model = tiny_model();
+        let sample = tasks::generate("sum-recap8", 1, 256);
+        assert!(sample.forced);
+        assert_eq!(sample.answer.len(), 8);
+        let scores = eval_sample(&model, &sample, &[EvalConfig::dense()]);
+        // untrained random model: score is a multiple of 1/8 in [0,1]
+        let q = (scores[0] * 8.0).round() / 8.0;
+        assert!((scores[0] - q).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dense_config_is_deterministic() {
+        let model = tiny_model();
+        let sample = tasks::generate("syn-passkey", 2, 256);
+        let a = eval_sample(&model, &sample, &[EvalConfig::dense()]);
+        let b = eval_sample(&model, &sample, &[EvalConfig::dense()]);
+        assert_eq!(a, b);
+    }
+}

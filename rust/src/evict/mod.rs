@@ -1,0 +1,141 @@
+//! H2O token eviction (heavy-hitter oracle) [44], used for the joint
+//! Mustafar+H2O study (§4.2.1, Table 5).
+//!
+//! H2O retains a fixed budget of *recent* tokens plus *heavy-hitter*
+//! tokens ranked by accumulated attention mass; everything else is
+//! evicted. The paper configures 10% of the KV budget for each class.
+//! Jointly with Mustafar, retained tokens that have exited the local
+//! window are additionally pruned + compressed.
+
+/// Which tokens survive an H2O pass.
+#[derive(Clone, Debug, PartialEq)]
+pub struct H2oSelection {
+    /// Sorted kept token positions.
+    pub kept: Vec<usize>,
+    /// kept[i] is a recent token (true) or a heavy hitter (false).
+    pub is_recent: Vec<bool>,
+}
+
+/// Accumulated-attention tracker for one KV head.
+#[derive(Clone, Debug, Default)]
+pub struct HeavyHitterTracker {
+    /// acc[t] = Σ over decode steps of attention mass on token t.
+    acc: Vec<f64>,
+}
+
+impl HeavyHitterTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one attention distribution (length = current token count).
+    pub fn observe(&mut self, att: &[f32]) {
+        if att.len() > self.acc.len() {
+            self.acc.resize(att.len(), 0.0);
+        }
+        for (a, x) in self.acc.iter_mut().zip(att) {
+            *a += *x as f64;
+        }
+    }
+
+    pub fn scores(&self) -> &[f64] {
+        &self.acc
+    }
+
+    pub fn len(&self) -> usize {
+        self.acc.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.acc.is_empty()
+    }
+}
+
+/// Select surviving tokens for a sequence of length `n`:
+/// the `recent_budget` most recent tokens plus the `hh_budget` highest
+/// accumulated-attention tokens among the rest (ties -> more recent wins,
+/// matching H2O's greedy oracle on streaming ties).
+pub fn h2o_select(scores: &[f64], n: usize, recent_budget: usize, hh_budget: usize) -> H2oSelection {
+    assert!(scores.len() >= n || scores.is_empty() || scores.len() == n);
+    let recent_start = n.saturating_sub(recent_budget);
+    let mut candidates: Vec<usize> = (0..recent_start).collect();
+    candidates.sort_by(|&a, &b| {
+        let sa = scores.get(a).copied().unwrap_or(0.0);
+        let sb = scores.get(b).copied().unwrap_or(0.0);
+        sb.partial_cmp(&sa).unwrap().then(b.cmp(&a))
+    });
+    let mut kept: Vec<(usize, bool)> = candidates
+        .into_iter()
+        .take(hh_budget)
+        .map(|t| (t, false))
+        .collect();
+    kept.extend((recent_start..n).map(|t| (t, true)));
+    kept.sort_by_key(|(t, _)| *t);
+    H2oSelection {
+        is_recent: kept.iter().map(|(_, r)| *r).collect(),
+        kept: kept.into_iter().map(|(t, _)| t).collect(),
+    }
+}
+
+/// Budgets from a fraction of sequence length (paper: 10% + 10%).
+pub fn budgets_from_fraction(n: usize, recent_frac: f64, hh_frac: f64) -> (usize, usize) {
+    let r = ((n as f64 * recent_frac).round() as usize).max(1);
+    let h = ((n as f64 * hh_frac).round() as usize).max(1);
+    (r, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_recents_and_heavy_hitters() {
+        let n = 100;
+        let mut scores = vec![0.0f64; n];
+        scores[5] = 10.0;
+        scores[17] = 8.0;
+        scores[33] = 6.0;
+        let sel = h2o_select(&scores, n, 10, 3);
+        assert_eq!(sel.kept.len(), 13);
+        assert!(sel.kept.contains(&5));
+        assert!(sel.kept.contains(&17));
+        assert!(sel.kept.contains(&33));
+        for t in 90..100 {
+            assert!(sel.kept.contains(&t));
+        }
+    }
+
+    #[test]
+    fn kept_sorted_and_flagged() {
+        let scores = vec![1.0f64; 50];
+        let sel = h2o_select(&scores, 50, 5, 5);
+        for w in sel.kept.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        let recents = sel.is_recent.iter().filter(|r| **r).count();
+        assert_eq!(recents, 5);
+    }
+
+    #[test]
+    fn tracker_accumulates() {
+        let mut tr = HeavyHitterTracker::new();
+        tr.observe(&[0.5, 0.5]);
+        tr.observe(&[0.1, 0.2, 0.7]);
+        assert_eq!(tr.len(), 3);
+        assert!((tr.scores()[0] - 0.6).abs() < 1e-6);
+        assert!((tr.scores()[2] - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn budget_fractions() {
+        assert_eq!(budgets_from_fraction(500, 0.1, 0.1), (50, 50));
+        assert_eq!(budgets_from_fraction(3, 0.1, 0.1), (1, 1));
+    }
+
+    #[test]
+    fn short_sequences_keep_everything_recent() {
+        let sel = h2o_select(&[], 5, 10, 10);
+        assert_eq!(sel.kept, vec![0, 1, 2, 3, 4]);
+        assert!(sel.is_recent.iter().all(|r| *r));
+    }
+}

@@ -1,0 +1,7 @@
+//! Serialization helpers: minimal JSON and markdown table rendering.
+
+pub mod json;
+pub mod table;
+
+pub use json::Json;
+pub use table::Table;

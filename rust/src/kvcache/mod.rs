@@ -1,0 +1,400 @@
+//! Compressed KV-cache management (the red half of Fig 1).
+//!
+//! Per sequence, per (layer, kv-head): a bitmap-compressed region (tokens
+//! that exited the local window, pruned + compressed) and a dense tail
+//! (the local window plus the 64-token compression group in flight).
+//!
+//! Lifecycle, following §3 and App. C:
+//!  * prefill KV is pruned + compressed before decode starts (everything
+//!    but the most recent `local_window` tokens);
+//!  * decode KV stays dense while inside the local window; once a full
+//!    64-token group has exited the window it is pruned (per-token
+//!    magnitude — the runtime method) and *appended* to the compressed
+//!    region (tile ordering makes this an O(group) append);
+//!  * optional KIVI-style fake quantization after pruning (§4.2.2).
+
+use crate::config::SparsityConfig;
+use crate::error::Result;
+use crate::prune::{self, Method, OutputAwareCtx};
+use crate::quant;
+use crate::sparse::{BitmapMatrix, PackAxis, TILE};
+
+/// Dense-tail capacity: one compression group in flight + local window.
+pub const TAIL_CAP: usize = TILE + prune::LOCAL_WINDOW;
+
+/// Optional KIVI-sim quantization applied to the compressed region.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantConfig {
+    pub key_bits: u32,
+    pub value_bits: u32,
+}
+
+/// Per-sequence KV policy.
+#[derive(Clone, Copy, Debug)]
+pub struct KvPolicy {
+    pub sparsity: SparsityConfig,
+    pub quant: Option<QuantConfig>,
+    /// When false (dense baseline) nothing is ever pruned/compressed and
+    /// the tail holds the entire history.
+    pub compress: bool,
+    pub local_window: usize,
+}
+
+impl KvPolicy {
+    pub fn dense() -> KvPolicy {
+        KvPolicy {
+            sparsity: SparsityConfig::dense(),
+            quant: None,
+            compress: false,
+            local_window: prune::LOCAL_WINDOW,
+        }
+    }
+
+    pub fn mustafar(ks: f64, vs: f64) -> KvPolicy {
+        KvPolicy {
+            sparsity: SparsityConfig::mustafar(ks, vs),
+            quant: None,
+            compress: true,
+            local_window: prune::LOCAL_WINDOW,
+        }
+    }
+}
+
+/// KV state of one (layer, kv-head).
+#[derive(Clone, Debug)]
+pub struct HeadKV {
+    /// Compressed region: Key packed along tokens, Value along channels.
+    pub k_comp: BitmapMatrix,
+    pub v_comp: BitmapMatrix,
+    /// Dense tail `[tail_len x hd]`, row-major, post-RoPE keys.
+    pub tail_k: Vec<f32>,
+    pub tail_v: Vec<f32>,
+}
+
+impl HeadKV {
+    fn new(hd: usize) -> HeadKV {
+        HeadKV {
+            k_comp: BitmapMatrix::empty(hd, PackAxis::Token),
+            v_comp: BitmapMatrix::empty(hd, PackAxis::Channel),
+            tail_k: Vec::new(),
+            tail_v: Vec::new(),
+        }
+    }
+
+    pub fn tail_len(&self, hd: usize) -> usize {
+        self.tail_k.len() / hd
+    }
+}
+
+/// Prune-time side information for output-aware / structured methods
+/// (captured by the prefill pass; None for plain magnitude).
+#[derive(Clone, Debug, Default)]
+pub struct PruneAux {
+    /// Σ|Q| over the query window, per (layer*kv_head), length hd.
+    pub q_abs_win: Vec<Vec<f32>>,
+    /// Attention mass per token over the query window, per (layer*kv_head).
+    pub att_win: Vec<Vec<f32>>,
+}
+
+/// Full per-sequence KV cache across layers and kv-heads.
+#[derive(Clone, Debug)]
+pub struct SequenceKV {
+    pub policy: KvPolicy,
+    pub n_layers: usize,
+    pub n_kv: usize,
+    pub hd: usize,
+    heads: Vec<HeadKV>,
+    /// Total tokens represented (compressed + tail); uniform across heads.
+    pub tokens: usize,
+}
+
+impl SequenceKV {
+    pub fn new(policy: KvPolicy, n_layers: usize, n_kv: usize, hd: usize) -> SequenceKV {
+        SequenceKV {
+            policy,
+            n_layers,
+            n_kv,
+            hd,
+            heads: (0..n_layers * n_kv).map(|_| HeadKV::new(hd)).collect(),
+            tokens: 0,
+        }
+    }
+
+    #[inline]
+    pub fn head(&self, layer: usize, kv: usize) -> &HeadKV {
+        &self.heads[layer * self.n_kv + kv]
+    }
+
+    #[inline]
+    pub fn head_mut(&mut self, layer: usize, kv: usize) -> &mut HeadKV {
+        &mut self.heads[layer * self.n_kv + kv]
+    }
+
+    /// Ingest prefill caches: `k_dense[l*n_kv+h]` is `[t x hd]` row-major
+    /// (post-RoPE keys). Prunes + compresses everything except the local
+    /// window per the policy; `aux` supplies output-aware scores.
+    pub fn ingest_prefill(
+        &mut self,
+        k_dense: &[Vec<f32>],
+        v_dense: &[Vec<f32>],
+        t: usize,
+        aux: Option<&PruneAux>,
+    ) -> Result<()> {
+        assert_eq!(k_dense.len(), self.n_layers * self.n_kv);
+        assert_eq!(self.tokens, 0, "ingest_prefill on non-empty cache");
+        let hd = self.hd;
+        let w = self.policy.local_window;
+
+        // Compress whole 64-token groups that are fully outside the window.
+        let n_comp = if self.policy.compress && t > w { ((t - w) / TILE) * TILE } else { 0 };
+
+        for idx in 0..self.heads.len() {
+            let k = &k_dense[idx];
+            let v = &v_dense[idx];
+            assert_eq!(k.len(), t * hd);
+
+            if n_comp > 0 {
+                let (kp, vp) = self.prune_pair(&k[..n_comp * hd], &v[..n_comp * hd], n_comp, idx, aux);
+                let h = &mut self.heads[idx];
+                h.k_comp.append_groups(&kp, n_comp)?;
+                h.v_comp.append_groups(&vp, n_comp)?;
+            }
+            let h = &mut self.heads[idx];
+            h.tail_k.extend_from_slice(&k[n_comp * hd..]);
+            h.tail_v.extend_from_slice(&v[n_comp * hd..]);
+        }
+        self.tokens = t;
+        Ok(())
+    }
+
+    /// Apply the policy's pruning (+ optional quantization) to a span of
+    /// K and V rows for head index `idx`.
+    fn prune_pair(
+        &self,
+        k: &[f32],
+        v: &[f32],
+        t: usize,
+        idx: usize,
+        aux: Option<&PruneAux>,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let hd = self.hd;
+        let sp = &self.policy.sparsity;
+
+        let kctx = OutputAwareCtx {
+            q_abs_sum: aux.map(|a| a.q_abs_win[idx].as_slice()),
+            att_sum: None,
+        };
+        let mut kp = prune::apply(sp.key_method, k, t, hd, sp.key_sparsity, &kctx);
+
+        let vctx = OutputAwareCtx {
+            q_abs_sum: None,
+            // only the rows being pruned (the compressed span) are scored
+            att_sum: aux.map(|a| &a.att_win[idx][..t]),
+        };
+        let mut vp = prune::apply(sp.value_method, v, t, hd, sp.value_sparsity, &vctx);
+
+        if let Some(q) = self.policy.quant {
+            // Harma et al. ordering (as the paper follows): prune first,
+            // then quantize the survivors.
+            quant::kivi_fake_quant(&mut kp, t, hd, q.key_bits, quant::Axis::PerChannel, true);
+            quant::kivi_fake_quant(&mut vp, t, hd, q.value_bits, quant::Axis::PerToken, true);
+        }
+        (kp, vp)
+    }
+
+    /// Append one decoded token's K/V for (layer, kv). Call for every
+    /// (layer, kv) exactly once per generated token, then `commit_token`.
+    pub fn append(&mut self, layer: usize, kv: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.hd);
+        let h = self.head_mut(layer, kv);
+        h.tail_k.extend_from_slice(k);
+        h.tail_v.extend_from_slice(v);
+    }
+
+    /// Account the token appended to all heads and run the compression
+    /// trigger: once the tail holds a full group + window, the oldest
+    /// 64-token group is pruned (runtime per-token magnitude at the
+    /// policy's sparsity) and appended to the compressed region.
+    pub fn commit_token(&mut self) -> Result<()> {
+        self.tokens += 1;
+        if !self.policy.compress {
+            return Ok(());
+        }
+        let hd = self.hd;
+        let cap = TILE + self.policy.local_window;
+        // decide based on head 0 (all heads have identical tail lengths)
+        if self.heads[0].tail_len(hd) < cap {
+            return Ok(());
+        }
+        let sp = self.policy.sparsity;
+        for idx in 0..self.heads.len() {
+            let (kp, vp) = {
+                let h = &self.heads[idx];
+                let kg = h.tail_k[..TILE * hd].to_vec();
+                let vg = h.tail_v[..TILE * hd].to_vec();
+                // Runtime path is magnitude-based (the paper's kernel
+                // method); output-aware scores are a prefill-time notion.
+                let kk_k = prune::keep_count(hd, sp.key_sparsity);
+                let kk_v = prune::keep_count(hd, sp.value_sparsity);
+                let kp = if sp.key_method == Method::None {
+                    kg
+                } else {
+                    prune::per_token_magnitude(&kg, TILE, hd, kk_k)
+                };
+                let vp = if sp.value_method == Method::None {
+                    vg
+                } else {
+                    prune::per_token_magnitude(&vg, TILE, hd, kk_v)
+                };
+                (kp, vp)
+            };
+            let (mut kp, mut vp) = (kp, vp);
+            if let Some(q) = self.policy.quant {
+                quant::kivi_fake_quant(&mut kp, TILE, hd, q.key_bits, quant::Axis::PerChannel, true);
+                quant::kivi_fake_quant(&mut vp, TILE, hd, q.value_bits, quant::Axis::PerToken, true);
+            }
+            let h = &mut self.heads[idx];
+            h.k_comp.append_groups(&kp, TILE)?;
+            h.v_comp.append_groups(&vp, TILE)?;
+            h.tail_k.drain(..TILE * hd);
+            h.tail_v.drain(..TILE * hd);
+        }
+        Ok(())
+    }
+
+    /// (compressed_bytes, dense_equivalent_bytes) under the paper's fp16
+    /// accounting — the Fig 6b metric, aggregated over layers and heads.
+    /// The dense tail is counted at its dense size in both.
+    pub fn memory_bytes(&self) -> (usize, usize) {
+        let hd = self.hd;
+        let mut comp = 0usize;
+        let mut dense = 0usize;
+        for h in &self.heads {
+            comp += h.k_comp.compressed_bytes() + h.v_comp.compressed_bytes();
+            comp += (h.tail_k.len() + h.tail_v.len()) * crate::sparse::bitmap::VALUE_BYTES;
+            dense += 2 * self.tokens * hd * crate::sparse::bitmap::VALUE_BYTES;
+        }
+        let _ = hd;
+        (comp, dense)
+    }
+
+    /// Fig 6b compression rate for this sequence (1.0 = dense).
+    pub fn compression_rate(&self) -> f64 {
+        let (c, d) = self.memory_bytes();
+        if d == 0 {
+            0.0
+        } else {
+            c as f64 / d as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn rand_heads(n: usize, t: usize, hd: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| (0..t * hd).map(|_| rng.normal_f32()).collect()).collect()
+    }
+
+    #[test]
+    fn prefill_ingest_splits_comp_and_tail() {
+        let (l, kv, hd, t) = (2, 2, 64, 448);
+        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.5, 0.5), l, kv, hd);
+        let k = rand_heads(l * kv, t, hd, 1);
+        let v = rand_heads(l * kv, t, hd, 2);
+        seq.ingest_prefill(&k, &v, t, None).unwrap();
+        // (448-32)/64 = 6 groups -> 384 compressed, 64 tail
+        assert_eq!(seq.tokens, 448);
+        let h = seq.head(0, 0);
+        assert_eq!(h.k_comp.tokens, 384);
+        assert_eq!(h.tail_len(hd), 64);
+        // ~50% sparsity in compressed K
+        let rate = h.k_comp.nnz() as f64 / (384.0 * hd as f64);
+        assert!((rate - 0.5).abs() < 0.02, "{rate}");
+    }
+
+    #[test]
+    fn dense_policy_keeps_everything_in_tail() {
+        let (l, kv, hd, t) = (1, 1, 32, 200);
+        let mut seq = SequenceKV::new(KvPolicy::dense(), l, kv, hd);
+        let k = rand_heads(1, t, hd, 3);
+        let v = rand_heads(1, t, hd, 4);
+        seq.ingest_prefill(&k, &v, t, None).unwrap();
+        assert_eq!(seq.head(0, 0).k_comp.tokens, 0);
+        assert_eq!(seq.head(0, 0).tail_len(hd), 200);
+        assert!((seq.compression_rate() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_appends_trigger_group_compression() {
+        let (l, kv, hd) = (1, 1, 64);
+        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.7, 0.7), l, kv, hd);
+        let mut rng = Pcg32::seeded(5);
+        // grow token by token past the trigger point
+        for i in 0..TAIL_CAP + 10 {
+            let k: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+            let v: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+            seq.append(0, 0, &k, &v);
+            seq.commit_token().unwrap();
+            let h = seq.head(0, 0);
+            assert_eq!(h.k_comp.tokens + h.tail_len(hd), i + 1, "token {i}");
+            assert!(h.tail_len(hd) >= 32.min(i + 1), "local window violated at {i}");
+            assert!(h.tail_len(hd) < TAIL_CAP + 1);
+        }
+        let h = seq.head(0, 0);
+        assert_eq!(h.k_comp.tokens, TILE); // exactly one group compressed
+    }
+
+    #[test]
+    fn compression_rate_improves_with_sparsity() {
+        let (l, kv, hd, t) = (1, 1, 64, 448);
+        let k = rand_heads(1, t, hd, 6);
+        let v = rand_heads(1, t, hd, 7);
+        let mut rates = Vec::new();
+        for s in [0.5, 0.7] {
+            let mut seq = SequenceKV::new(KvPolicy::mustafar(s, s), l, kv, hd);
+            seq.ingest_prefill(&k, &v, t, None).unwrap();
+            rates.push(seq.compression_rate());
+        }
+        assert!(rates[0] > rates[1], "{rates:?}");
+        assert!(rates[0] < 1.0);
+    }
+
+    #[test]
+    fn quantization_is_applied_to_compressed_region() {
+        let (l, kv, hd, t) = (1, 1, 64, 128);
+        let k = rand_heads(1, t, hd, 8);
+        let v = rand_heads(1, t, hd, 9);
+        let mut pol = KvPolicy::mustafar(0.5, 0.5);
+        pol.quant = Some(QuantConfig { key_bits: 2, value_bits: 2 });
+        let mut seq = SequenceKV::new(pol, l, kv, hd);
+        seq.ingest_prefill(&k, &v, t, None).unwrap();
+        // quantized values differ from originals (2-bit is coarse)
+        let dec = seq.head(0, 0).k_comp.decompress();
+        let mut diffs = 0;
+        for (a, b) in dec.iter().zip(&k[0][..dec.len()]) {
+            if *a != 0.0 && (a - b).abs() > 1e-6 {
+                diffs += 1;
+            }
+        }
+        assert!(diffs > 100, "quant had no effect ({diffs})");
+    }
+
+    #[test]
+    fn roundtrip_contents_match_prune_reference() {
+        let (l, kv, hd, t) = (1, 1, 64, 96);
+        let k = rand_heads(1, t, hd, 10);
+        let v = rand_heads(1, t, hd, 11);
+        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.5, 0.0), l, kv, hd);
+        seq.ingest_prefill(&k, &v, t, None).unwrap();
+        let h = seq.head(0, 0);
+        // first 64 tokens compressed, pruned to kk=32
+        let want = crate::prune::per_token_magnitude(&k[0][..64 * hd], 64, hd, 32);
+        assert_eq!(h.k_comp.decompress(), want);
+        // value method None -> v stored exactly
+        assert_eq!(h.v_comp.decompress(), &v[0][..64 * hd]);
+    }
+}

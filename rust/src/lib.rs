@@ -1,0 +1,38 @@
+//! # Mustafar-RS
+//!
+//! Reproduction of *"MUSTAFAR: Promoting Unstructured Sparsity for KV
+//! Cache Pruning in LLM Inference"* (NeurIPS 2025) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! * **L3 (this crate)** — serving coordinator: request router, continuous
+//!   batcher, compressed KV-cache manager built on the paper's bitmap
+//!   sparse format, runtime pruning + compression, and the SpMV attention
+//!   hot path.
+//! * **L2 (python/compile/model.py)** — JAX transformer, AOT-lowered to
+//!   HLO text artifacts executed through `runtime` (PJRT).
+//! * **L1 (python/compile/kernels/)** — Pallas sparse-attention and prune
+//!   kernels (interpret-mode validated; TPU-shaped).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod attention;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod eval;
+pub mod evict;
+pub mod fmt;
+pub mod kvcache;
+pub mod model;
+pub mod prune;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod sparse;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,225 @@
+//! `mustafar` — CLI for the Mustafar serving coordinator and the paper's
+//! experiment harness.
+//!
+//! Subcommands:
+//!   exp <id|all>       regenerate a paper table/figure (reports/<id>.md)
+//!   serve              start the TCP serving front-end
+//!   generate           one-shot generation (any backend)
+//!   info               inventory of artifacts/weights/configs
+//!
+//! Arg parsing is hand-rolled (clap is not in the offline vendor set).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use mustafar::config::{Backend, EngineConfig, SparsityConfig};
+use mustafar::coordinator::pjrt_backend::PjrtBackend;
+use mustafar::coordinator::{Engine, Request};
+use mustafar::eval::experiments::{self, ExpCtx};
+use mustafar::model::{NativeModel, Weights};
+use mustafar::util::Pcg32;
+use mustafar::workload::lang;
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.flags.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.flags.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn usage() -> &'static str {
+    "mustafar — unstructured-sparsity KV cache pruning (NeurIPS'25 reproduction)
+
+USAGE:
+  mustafar exp <table1..table12|fig2|fig6b|all> [--samples N] [--ctx N]
+           [--artifacts DIR] [--report-dir DIR]
+  mustafar serve    [--model M] [--backend B] [--ks S] [--vs S]
+           [--addr HOST:PORT] [--max-batch N] [--artifacts DIR]
+  mustafar generate [--model M] [--backend B] [--ks S] [--vs S]
+           [--prompt-seed N] [--prompt-len N] [--max-new N] [--artifacts DIR]
+  mustafar info     [--artifacts DIR]
+
+BACKENDS: native-dense | native-sparse | pjrt-dense | pjrt-sparse
+MODELS:   tiny | gqa-small | mha-small | gqa-medium
+"
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let res = match cmd.as_str() {
+        "exp" => cmd_exp(&args),
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    match res {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts", "artifacts"))
+}
+
+fn cmd_exp(args: &Args) -> mustafar::Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| mustafar::Error::Invalid("exp: missing experiment id".into()))?;
+    let mut ctx = ExpCtx::new(artifacts_dir(args), PathBuf::from(args.get("report-dir", "reports")));
+    ctx.n_samples = args.get_usize("samples", 20);
+    ctx.ctx_len = args.get_usize("ctx", 448);
+    // Sweeps parallelize across samples; keep per-matmul threading off to
+    // avoid oversubscription (see DESIGN.md §Perf).
+    if std::env::var("MUSTAFAR_THREADS").is_err() {
+        std::env::set_var("MUSTAFAR_THREADS", "1");
+    }
+    experiments::run(&id, &ctx)
+}
+
+fn build_engine(args: &Args) -> mustafar::Result<Engine> {
+    let model_name = args.get("model", "gqa-small");
+    let backend = Backend::parse(&args.get("backend", "native-sparse"))
+        .ok_or_else(|| mustafar::Error::Invalid("bad --backend".into()))?;
+    let ks = args.get_f64("ks", 0.5);
+    let vs = args.get_f64("vs", 0.5);
+    let dir = artifacts_dir(args);
+    let weights = Weights::load(&dir, &model_name)?;
+
+    let mut ec = EngineConfig::default();
+    ec.backend = backend;
+    ec.sparsity = SparsityConfig::mustafar(ks, vs);
+    ec.max_batch = args.get_usize("max-batch", 8);
+    ec.max_new_tokens = args.get_usize("max-new", 64);
+    ec.kv_budget_bytes = args.get_usize("kv-budget", 0);
+
+    let model = NativeModel::new(weights.clone());
+    match backend {
+        Backend::PjrtDense | Backend::PjrtSparse => {
+            let pj = PjrtBackend::new(&dir, &weights, backend, ec.sparsity)?;
+            Ok(Engine::new_pjrt(model, ec, pj))
+        }
+        _ => Ok(Engine::new_native(model, ec)),
+    }
+}
+
+fn cmd_serve(args: &Args) -> mustafar::Result<()> {
+    let engine = build_engine(args)?;
+    let addr = args.get("addr", "127.0.0.1:7777");
+    mustafar::server::serve(engine, &addr)
+}
+
+fn cmd_generate(args: &Args) -> mustafar::Result<()> {
+    let mut engine = build_engine(args)?;
+    let seed = args.get_usize("prompt-seed", 7) as u64;
+    // pjrt backends are compiled for a fixed prompt length (= max_seq/2)
+    let default_len = match engine.cfg.backend {
+        Backend::PjrtDense | Backend::PjrtSparse => engine.model.cfg().max_seq / 2,
+        _ => 256,
+    };
+    let plen = args.get_usize("prompt-len", default_len);
+    let max_new = args.get_usize("max-new", 32);
+
+    let prompt = lang::gen_document(&mut Pcg32::seeded(seed), plen);
+    println!(
+        "model={} backend={} prompt_len={} max_new={}",
+        engine.model.cfg().name,
+        engine.cfg.backend.name(),
+        plen,
+        max_new
+    );
+    let out = engine.run_trace(vec![Request::new(0, prompt, max_new)])?;
+    let c = &out[0];
+    println!("generated: {:?}", c.tokens);
+    println!(
+        "prefill {:.1} ms | decode {:.1} ms | {:.1} tok/s | kv {:.1} KiB ({:.0}% of dense)",
+        c.prefill_ms,
+        c.decode_ms,
+        c.tokens.len() as f64 / ((c.prefill_ms + c.decode_ms) / 1e3),
+        c.kv_bytes as f64 / 1024.0,
+        c.kv_bytes as f64 / c.kv_dense_bytes.max(1) as f64 * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> mustafar::Result<()> {
+    let dir = artifacts_dir(args);
+    println!("artifact dir: {}", dir.display());
+    match mustafar::runtime::ArtifactIndex::load(&dir) {
+        Ok(idx) => {
+            println!("local_window={} tail_cap={}", idx.local_window, idx.tail_cap);
+            let mut names: Vec<&String> = idx.entries.keys().collect();
+            names.sort();
+            for n in names {
+                let m = &idx.entries[n];
+                println!("  {n}: {} inputs ({} weights)", m.input_shapes.len(), m.n_weights);
+            }
+        }
+        Err(e) => println!("  (no artifact index: {e})"),
+    }
+    for name in ["tiny", "gqa-small", "mha-small", "gqa-medium"] {
+        match Weights::load(&dir, name) {
+            Ok(w) => println!(
+                "  weights_{name}: {:.2}M params, final_loss={:.3}",
+                w.n_params() as f64 / 1e6,
+                w.final_loss
+            ),
+            Err(_) => println!("  weights_{name}: (missing)"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,153 @@
+//! Dense math for the native transformer: threaded blocked matmul,
+//! RMSNorm, SiLU. The native path exists for fast accuracy sweeps and as
+//! a numerics cross-check against the PJRT artifacts; the serving hot
+//! path's sparse attention lives in `sparse::spmv`.
+
+/// out[m x n] = x[m x k] @ w[k x n], row-major. Accumulates into zeroed
+/// output. Parallelizes over row blocks when the work is large enough.
+pub fn matmul(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(out.len(), m * n);
+
+    let flops = 2 * m * k * n;
+    let threads = crate::util::threads();
+    if flops < 4_000_000 || threads <= 1 || m == 1 {
+        matmul_rows(x, m, k, w, n, out);
+        return;
+    }
+
+    let rows_per = m.div_ceil(threads).max(8);
+    std::thread::scope(|scope| {
+        let mut out_rest = &mut out[..];
+        let mut r0 = 0usize;
+        while r0 < m {
+            let rows = rows_per.min(m - r0);
+            let (chunk, rest) = out_rest.split_at_mut(rows * n);
+            out_rest = rest;
+            let xs = &x[r0 * k..(r0 + rows) * k];
+            scope.spawn(move || {
+                matmul_rows(xs, rows, k, w, n, chunk);
+            });
+            r0 += rows;
+        }
+    });
+}
+
+/// Single-threaded kernel: axpy form (sequential access on both w rows
+/// and the output row), 4-way unrolled over k.
+fn matmul_rows(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    for r in 0..m {
+        let xr = &x[r * k..(r + 1) * k];
+        let or = &mut out[r * n..(r + 1) * n];
+        or.iter_mut().for_each(|v| *v = 0.0);
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let (a0, a1, a2, a3) = (xr[kk], xr[kk + 1], xr[kk + 2], xr[kk + 3]);
+            let w0 = &w[kk * n..(kk + 1) * n];
+            let w1 = &w[(kk + 1) * n..(kk + 2) * n];
+            let w2 = &w[(kk + 2) * n..(kk + 3) * n];
+            let w3 = &w[(kk + 3) * n..(kk + 4) * n];
+            for c in 0..n {
+                or[c] += a0 * w0[c] + a1 * w1[c] + a2 * w2[c] + a3 * w3[c];
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let a = xr[kk];
+            if a != 0.0 {
+                let wr = &w[kk * n..(kk + 1) * n];
+                for c in 0..n {
+                    or[c] += a * wr[c];
+                }
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// RMSNorm over the last axis: y = x / rms(x) * g, row-major `[m x d]`.
+pub fn rmsnorm(x: &[f32], m: usize, d: usize, g: &[f32], eps: f32, out: &mut [f32]) {
+    assert_eq!(g.len(), d);
+    assert_eq!(x.len(), m * d);
+    for r in 0..m {
+        let xr = &x[r * d..(r + 1) * d];
+        let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        let or = &mut out[r * d..(r + 1) * d];
+        for c in 0..d {
+            or[c] = xr[c] * inv * g[c];
+        }
+    }
+}
+
+/// SiLU (swish) activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn naive_matmul(x: &[f32], m: usize, k: usize, w: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for r in 0..m {
+            for kk in 0..k {
+                for c in 0..n {
+                    out[r * n + c] += x[r * k + kk] * w[kk * n + c];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg32::seeded(21);
+        for &(m, k, n) in &[(1, 8, 8), (3, 7, 5), (17, 33, 9), (64, 64, 64), (130, 70, 90)] {
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+            let mut got = vec![0.0f32; m * n];
+            matmul(&x, m, k, &w, n, &mut got);
+            let want = naive_matmul(&x, m, k, &w, n);
+            for (g, wv) in got.iter().zip(&want) {
+                assert!((g - wv).abs() < 1e-3, "({m},{k},{n}): {g} vs {wv}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_parallel_path_matches() {
+        let mut rng = Pcg32::seeded(22);
+        let (m, k, n) = (256, 128, 128); // big enough to trigger threading
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let mut got = vec![0.0f32; m * n];
+        matmul(&x, m, k, &w, n, &mut got);
+        let want = naive_matmul(&x, m, k, &w, n);
+        for (g, wv) in got.iter().zip(&want) {
+            assert!((g - wv).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![3.0f32, 4.0]; // rms = sqrt(12.5)
+        let g = vec![1.0f32, 1.0];
+        let mut out = vec![0.0f32; 2];
+        rmsnorm(&x, 1, 2, &g, 0.0, &mut out);
+        let rms = (12.5f32).sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn silu_known_values() {
+        assert!((silu(0.0)).abs() < 1e-9);
+        assert!((silu(10.0) - 10.0).abs() < 1e-3);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+}

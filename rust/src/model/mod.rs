@@ -1,0 +1,9 @@
+//! Model layer: weight loading (python-exported), native transformer
+//! forward (prefill + decode over SequenceKV).
+
+pub mod math;
+pub mod native;
+pub mod weights;
+
+pub use native::{argmax, NativeModel, PrefillResult};
+pub use weights::Weights;

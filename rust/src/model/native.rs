@@ -1,0 +1,366 @@
+//! Native (pure-Rust) transformer forward — prefill and single-token
+//! decode over the `SequenceKV` cache. Exists for fast accuracy sweeps
+//! (hundreds of LongBench-sim samples across the sparsity grid) and as a
+//! numerics cross-check of the PJRT backends; it is bit-architecture
+//! identical to `python/compile/model.py` and validated against
+//! python-generated goldens in `rust/tests/pipeline.rs`.
+
+use crate::attention;
+use crate::config::ModelConfig;
+use crate::error::Result;
+use crate::kvcache::{PruneAux, SequenceKV};
+use crate::model::math::{matmul, rmsnorm, silu};
+use crate::model::weights::Weights;
+use crate::prune::LOCAL_WINDOW;
+
+/// Everything the eval pipeline needs from a prefill pass.
+pub struct PrefillResult {
+    /// Logits of the final position `[vocab]`.
+    pub logits_last: Vec<f32>,
+    /// Post-RoPE key cache per (layer*kv_head), each `[t x hd]`.
+    pub k: Vec<Vec<f32>>,
+    /// Value cache per (layer*kv_head), each `[t x hd]`.
+    pub v: Vec<Vec<f32>>,
+    /// Output-aware pruning context (query window / attention window).
+    pub aux: PruneAux,
+    /// Accumulated attention mass per token over *all* query positions,
+    /// per (layer*kv_head) — the H2O heavy-hitter score at prefill end.
+    pub att_total: Vec<Vec<f32>>,
+    pub t: usize,
+}
+
+/// Native model: config + weights.
+pub struct NativeModel {
+    pub w: Weights,
+}
+
+impl NativeModel {
+    pub fn new(w: Weights) -> NativeModel {
+        NativeModel { w }
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.w.cfg
+    }
+
+    /// Full-context forward. `capture_aux` additionally materializes the
+    /// per-head attention matrices to build output-aware scores (slower;
+    /// only the pruning-method studies need it).
+    pub fn prefill(&self, tokens: &[u16], capture_aux: bool) -> PrefillResult {
+        let cfg = self.cfg().clone();
+        let t = tokens.len();
+        let (d, hd) = (cfg.d_model, cfg.head_dim);
+        let (nh, nkv, group) = (cfg.n_heads, cfg.n_kv_heads, cfg.group());
+        let scale = 1.0 / (hd as f32).sqrt();
+        let win = LOCAL_WINDOW.min(t);
+
+        // token embeddings
+        let emb = self.w.get("tok_emb");
+        let mut x = vec![0.0f32; t * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            x[i * d..(i + 1) * d].copy_from_slice(emb.row(tok as usize));
+        }
+
+        // rope tables per position
+        let ropes: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..t).map(|p| attention::rope_cos_sin(p, hd, cfg.rope_theta)).collect();
+
+        let mut k_out: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_layers * nkv);
+        let mut v_out: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_layers * nkv);
+        let mut aux = PruneAux::default();
+        let mut att_total: Vec<Vec<f32>> = Vec::new();
+
+        let mut hn = vec![0.0f32; t * d];
+        let mut probs_buf = Vec::new();
+
+        for l in 0..cfg.n_layers {
+            rmsnorm(&x, t, d, self.w.layer(l, "attn_norm").data(), cfg.norm_eps as f32, &mut hn);
+
+            let mut q = vec![0.0f32; t * cfg.q_dim()];
+            let mut k = vec![0.0f32; t * cfg.kv_dim()];
+            let mut v = vec![0.0f32; t * cfg.kv_dim()];
+            matmul(&hn, t, d, self.w.layer(l, "wq").data(), cfg.q_dim(), &mut q);
+            matmul(&hn, t, d, self.w.layer(l, "wk").data(), cfg.kv_dim(), &mut k);
+            matmul(&hn, t, d, self.w.layer(l, "wv").data(), cfg.kv_dim(), &mut v);
+
+            // rope on q and k, per head
+            for i in 0..t {
+                let (cos, sin) = &ropes[i];
+                for h in 0..nh {
+                    attention::apply_rope(&mut q[i * cfg.q_dim() + h * hd..i * cfg.q_dim() + (h + 1) * hd], cos, sin);
+                }
+                for h in 0..nkv {
+                    attention::apply_rope(&mut k[i * cfg.kv_dim() + h * hd..i * cfg.kv_dim() + (h + 1) * hd], cos, sin);
+                }
+            }
+
+            // contiguous per-kv-head K/V
+            let mut k_heads: Vec<Vec<f32>> = vec![vec![0.0; t * hd]; nkv];
+            let mut v_heads: Vec<Vec<f32>> = vec![vec![0.0; t * hd]; nkv];
+            for i in 0..t {
+                for h in 0..nkv {
+                    k_heads[h][i * hd..(i + 1) * hd]
+                        .copy_from_slice(&k[i * cfg.kv_dim() + h * hd..i * cfg.kv_dim() + (h + 1) * hd]);
+                    v_heads[h][i * hd..(i + 1) * hd]
+                        .copy_from_slice(&v[i * cfg.kv_dim() + h * hd..i * cfg.kv_dim() + (h + 1) * hd]);
+                }
+            }
+
+            // aux accumulators for this layer
+            let mut q_abs_l: Vec<Vec<f32>> = vec![vec![0.0; hd]; nkv];
+            let mut att_win_l: Vec<Vec<f32>> = vec![vec![0.0; t]; nkv];
+            let mut att_tot_l: Vec<Vec<f32>> = vec![vec![0.0; t]; nkv];
+
+            // attention per query head
+            let mut o = vec![0.0f32; t * cfg.q_dim()];
+            let mut q_head = vec![0.0f32; t * hd];
+            let mut o_head = vec![0.0f32; t * hd];
+            for h in 0..nh {
+                let kvh = h / group;
+                for i in 0..t {
+                    q_head[i * hd..(i + 1) * hd]
+                        .copy_from_slice(&q[i * cfg.q_dim() + h * hd..i * cfg.q_dim() + (h + 1) * hd]);
+                }
+                let probs_opt = if capture_aux { Some(&mut probs_buf) } else { None };
+                attention::causal_prefill(&q_head, &k_heads[kvh], &v_heads[kvh], t, hd, scale, &mut o_head, probs_opt);
+                for i in 0..t {
+                    o[i * cfg.q_dim() + h * hd..i * cfg.q_dim() + (h + 1) * hd]
+                        .copy_from_slice(&o_head[i * hd..(i + 1) * hd]);
+                }
+                if capture_aux {
+                    // Σ|Q| over the trailing query window (GQA: summed over
+                    // the group's query heads — Fig 3 / §2 GQA note)
+                    for i in t - win..t {
+                        for c in 0..hd {
+                            q_abs_l[kvh][c] += q_head[i * hd + c].abs();
+                        }
+                    }
+                    // attention mass per key-token over the window / total
+                    for i in 0..t {
+                        let row = &probs_buf[i * t..i * t + i + 1];
+                        let target = &mut att_tot_l[kvh];
+                        for (j, &p) in row.iter().enumerate() {
+                            target[j] += p;
+                        }
+                        if i >= t - win {
+                            let tw = &mut att_win_l[kvh];
+                            for (j, &p) in row.iter().enumerate() {
+                                tw[j] += p;
+                            }
+                        }
+                    }
+                }
+            }
+
+            let mut attn_out = vec![0.0f32; t * d];
+            matmul(&o, t, cfg.q_dim(), self.w.layer(l, "wo").data(), d, &mut attn_out);
+            for (xi, ai) in x.iter_mut().zip(&attn_out) {
+                *xi += ai;
+            }
+
+            // MLP
+            rmsnorm(&x, t, d, self.w.layer(l, "mlp_norm").data(), cfg.norm_eps as f32, &mut hn);
+            let mut g = vec![0.0f32; t * cfg.ff];
+            let mut u = vec![0.0f32; t * cfg.ff];
+            matmul(&hn, t, d, self.w.layer(l, "w_gate").data(), cfg.ff, &mut g);
+            matmul(&hn, t, d, self.w.layer(l, "w_up").data(), cfg.ff, &mut u);
+            for (gi, ui) in g.iter_mut().zip(&u) {
+                *gi = silu(*gi) * ui;
+            }
+            let mut down = vec![0.0f32; t * d];
+            matmul(&g, t, cfg.ff, self.w.layer(l, "w_down").data(), d, &mut down);
+            for (xi, di) in x.iter_mut().zip(&down) {
+                *xi += di;
+            }
+
+            k_out.append(&mut k_heads);
+            v_out.append(&mut v_heads);
+            aux.q_abs_win.append(&mut q_abs_l);
+            aux.att_win.append(&mut att_win_l);
+            att_total.append(&mut att_tot_l);
+        }
+
+        // final norm + lm head on the last position only
+        let mut last = vec![0.0f32; d];
+        rmsnorm(&x[(t - 1) * d..], 1, d, self.w.get("final_norm").data(), cfg.norm_eps as f32, &mut last);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        matmul(&last, 1, d, self.w.get("lm_head").data(), cfg.vocab, &mut logits);
+
+        PrefillResult { logits_last: logits, k: k_out, v: v_out, aux, att_total, t }
+    }
+
+    /// One decode step: appends the token's K/V into `kv` (dense tail),
+    /// runs attention over compressed + tail per head, returns logits.
+    /// `pos` is the RoPE position of `token` (= tokens so far).
+    pub fn decode(&self, token: u16, pos: usize, kv: &mut SequenceKV) -> Result<Vec<f32>> {
+        let cfg = self.cfg().clone();
+        let (d, hd) = (cfg.d_model, cfg.head_dim);
+        let (nh, nkv, group) = (cfg.n_heads, cfg.n_kv_heads, cfg.group());
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let mut x = self.w.get("tok_emb").row(token as usize).to_vec();
+        let (cos, sin) = attention::rope_cos_sin(pos, hd, cfg.rope_theta);
+
+        let mut hn = vec![0.0f32; d];
+        for l in 0..cfg.n_layers {
+            rmsnorm(&x, 1, d, self.w.layer(l, "attn_norm").data(), cfg.norm_eps as f32, &mut hn);
+            let mut q = vec![0.0f32; cfg.q_dim()];
+            let mut k = vec![0.0f32; cfg.kv_dim()];
+            let mut v = vec![0.0f32; cfg.kv_dim()];
+            matmul(&hn, 1, d, self.w.layer(l, "wq").data(), cfg.q_dim(), &mut q);
+            matmul(&hn, 1, d, self.w.layer(l, "wk").data(), cfg.kv_dim(), &mut k);
+            matmul(&hn, 1, d, self.w.layer(l, "wv").data(), cfg.kv_dim(), &mut v);
+            for h in 0..nh {
+                attention::apply_rope(&mut q[h * hd..(h + 1) * hd], &cos, &sin);
+            }
+            for h in 0..nkv {
+                attention::apply_rope(&mut k[h * hd..(h + 1) * hd], &cos, &sin);
+            }
+            for h in 0..nkv {
+                kv.append(l, h, &k[h * hd..(h + 1) * hd], &v[h * hd..(h + 1) * hd]);
+            }
+
+            let mut o = vec![0.0f32; cfg.q_dim()];
+            for h in 0..nh {
+                let kvh = h / group;
+                let head = kv.head(l, kvh);
+                let tail_len = head.tail_len(hd);
+                attention::decode_sparse(
+                    &q[h * hd..(h + 1) * hd],
+                    &head.k_comp,
+                    &head.v_comp,
+                    &head.tail_k,
+                    &head.tail_v,
+                    tail_len,
+                    scale,
+                    &mut o[h * hd..(h + 1) * hd],
+                    None,
+                );
+            }
+
+            let mut attn_out = vec![0.0f32; d];
+            matmul(&o, 1, cfg.q_dim(), self.w.layer(l, "wo").data(), d, &mut attn_out);
+            for (xi, ai) in x.iter_mut().zip(&attn_out) {
+                *xi += ai;
+            }
+
+            rmsnorm(&x, 1, d, self.w.layer(l, "mlp_norm").data(), cfg.norm_eps as f32, &mut hn);
+            let mut g = vec![0.0f32; cfg.ff];
+            let mut u = vec![0.0f32; cfg.ff];
+            matmul(&hn, 1, d, self.w.layer(l, "w_gate").data(), cfg.ff, &mut g);
+            matmul(&hn, 1, d, self.w.layer(l, "w_up").data(), cfg.ff, &mut u);
+            for (gi, ui) in g.iter_mut().zip(&u) {
+                *gi = silu(*gi) * ui;
+            }
+            let mut down = vec![0.0f32; d];
+            matmul(&g, 1, cfg.ff, self.w.layer(l, "w_down").data(), d, &mut down);
+            for (xi, di) in x.iter_mut().zip(&down) {
+                *xi += di;
+            }
+        }
+        kv.commit_token()?;
+
+        let mut last = vec![0.0f32; d];
+        rmsnorm(&x, 1, d, self.w.get("final_norm").data(), cfg.norm_eps as f32, &mut last);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        matmul(&last, 1, d, self.w.get("lm_head").data(), cfg.vocab, &mut logits);
+        Ok(logits)
+    }
+}
+
+/// Greedy argmax over logits.
+pub fn argmax(logits: &[f32]) -> u16 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvPolicy;
+    use crate::model::weights::Weights;
+
+    fn tiny_model() -> NativeModel {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 32,
+            ff: 128,
+            vocab: 512,
+            rope_theta: 10000.0,
+            max_seq: 256,
+            norm_eps: 1e-5,
+        };
+        NativeModel::new(Weights::random_for_tests(cfg, 99))
+    }
+
+    #[test]
+    fn prefill_shapes() {
+        let m = tiny_model();
+        let tokens: Vec<u16> = (0..80).map(|i| (i % 400 + 16) as u16).collect();
+        let r = m.prefill(&tokens, true);
+        assert_eq!(r.logits_last.len(), 512);
+        assert_eq!(r.k.len(), 2); // L*KV = 2*1
+        assert_eq!(r.k[0].len(), 80 * 32);
+        assert_eq!(r.aux.q_abs_win.len(), 2);
+        assert_eq!(r.aux.att_win[0].len(), 80);
+        assert_eq!(r.att_total[1].len(), 80);
+    }
+
+    #[test]
+    fn decode_after_prefill_matches_full_prefill() {
+        // prefill(n) then decode(token n) must equal prefill(n+1)'s last
+        // logits when the cache is dense (no pruning).
+        let m = tiny_model();
+        let tokens: Vec<u16> = (0..65).map(|i| (i * 7 % 400 + 16) as u16).collect();
+        let full = m.prefill(&tokens, false);
+
+        let r = m.prefill(&tokens[..64], false);
+        let mut kv = SequenceKV::new(KvPolicy::dense(), 2, 1, 32);
+        kv.ingest_prefill(&r.k, &r.v, 64, None).unwrap();
+        let logits = m.decode(tokens[64], 64, &mut kv).unwrap();
+
+        let mad: f32 = logits
+            .iter()
+            .zip(&full.logits_last)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(mad < 1e-3, "decode vs prefill mismatch: {mad}");
+    }
+
+    #[test]
+    fn decode_with_pruned_cache_runs_and_differs() {
+        let m = tiny_model();
+        let tokens: Vec<u16> = (0..96).map(|i| (i * 11 % 400 + 16) as u16).collect();
+        let r = m.prefill(&tokens, false);
+
+        let mut kv_dense = SequenceKV::new(KvPolicy::dense(), 2, 1, 32);
+        kv_dense.ingest_prefill(&r.k, &r.v, 96, None).unwrap();
+        let ld = m.decode(300, 96, &mut kv_dense).unwrap();
+
+        let mut kv_sparse = SequenceKV::new(KvPolicy::mustafar(0.7, 0.7), 2, 1, 32);
+        kv_sparse.ingest_prefill(&r.k, &r.v, 96, None).unwrap();
+        let ls = m.decode(300, 96, &mut kv_sparse).unwrap();
+
+        let mad: f32 = ld.iter().zip(&ls).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        assert!(mad > 0.0, "pruning should perturb logits");
+        // ... but not catastrophically (70% per-token magnitude is benign)
+        let denom: f32 = ld.iter().map(|x| x.abs()).fold(0.0, f32::max);
+        assert!(mad / denom < 1.0, "pruned logits unreasonably far: {mad} vs {denom}");
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.0, 3.0, -1.0, 3.0]), 1);
+    }
+}

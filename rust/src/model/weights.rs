@@ -1,0 +1,181 @@
+//! Weight loading: reads the `weights_{cfg}.bin` + `weights_{cfg}.json`
+//! pair exported by `python/compile/train.py`. The flat-list manifest
+//! order is the python↔rust ABI (model.py::param_manifest).
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::fmt::Json;
+use crate::tensor::Tensor;
+
+/// Loaded model weights plus config.
+#[derive(Clone)]
+pub struct Weights {
+    pub cfg: ModelConfig,
+    pub params: Vec<Tensor>,
+    pub names: Vec<String>,
+    index: HashMap<String, usize>,
+    /// Final training loss recorded by the exporter (provenance).
+    pub final_loss: f64,
+}
+
+impl Weights {
+    /// Load `weights_{name}.{bin,json}` from `dir`.
+    pub fn load(dir: &Path, name: &str) -> Result<Weights> {
+        let meta_path = dir.join(format!("weights_{name}.json"));
+        let bin_path = dir.join(format!("weights_{name}.bin"));
+        let meta = Json::parse(&std::fs::read_to_string(&meta_path).map_err(|e| {
+            Error::Runtime(format!("cannot read {} ({e}) — run `make artifacts`", meta_path.display()))
+        })?)?;
+        let cfg = ModelConfig::from_json(&meta)?;
+        cfg.validate()?;
+
+        let mut blob = Vec::new();
+        std::fs::File::open(&bin_path)?.read_to_end(&mut blob)?;
+        let total = meta.get("total_bytes")?.as_usize()?;
+        if blob.len() != total {
+            return Err(Error::Runtime(format!(
+                "{}: {} bytes, manifest says {total}",
+                bin_path.display(),
+                blob.len()
+            )));
+        }
+
+        let mut params = Vec::new();
+        let mut names = Vec::new();
+        let mut index = HashMap::new();
+        for p in meta.get("params")?.as_arr()? {
+            let pname = p.get("name")?.as_str()?.to_string();
+            let shape = p.get("shape")?.as_usize_vec()?;
+            let offset = p.get("offset")?.as_usize()?;
+            let nbytes = p.get("nbytes")?.as_usize()?;
+            let n: usize = shape.iter().product();
+            if nbytes != n * 4 || offset + nbytes > blob.len() {
+                return Err(Error::Runtime(format!("bad manifest entry for {pname}")));
+            }
+            let mut data = vec![0.0f32; n];
+            for (i, chunk) in blob[offset..offset + nbytes].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            index.insert(pname.clone(), params.len());
+            names.push(pname);
+            params.push(Tensor::new(shape, data)?);
+        }
+
+        let final_loss = meta.opt("final_loss").and_then(|v| v.as_f64().ok()).unwrap_or(f64::NAN);
+        Ok(Weights { cfg, params, names, index, final_loss })
+    }
+
+    /// Named parameter access ("layer0.wq", "tok_emb", ...).
+    pub fn get(&self, name: &str) -> &Tensor {
+        let i = *self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("missing weight '{name}'"));
+        &self.params[i]
+    }
+
+    pub fn layer(&self, l: usize, part: &str) -> &Tensor {
+        self.get(&format!("layer{l}.{part}"))
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(|t| t.len()).sum()
+    }
+
+    /// Synthesize random weights for unit tests (bypasses disk).
+    pub fn random_for_tests(cfg: ModelConfig, seed: u64) -> Weights {
+        let mut rng = crate::util::Pcg32::seeded(seed);
+        let mut params = Vec::new();
+        let mut names = Vec::new();
+        let mut index = HashMap::new();
+        let manifest = manifest_for(&cfg);
+        for (name, shape) in manifest {
+            let n: usize = shape.iter().product();
+            let std = 1.0 / (shape[0] as f32).sqrt();
+            let data: Vec<f32> = if name.ends_with("norm") {
+                vec![1.0; n]
+            } else {
+                (0..n).map(|_| rng.normal_f32() * std).collect()
+            };
+            index.insert(name.clone(), params.len());
+            names.push(name);
+            params.push(Tensor::new(shape, data).unwrap());
+        }
+        Weights { cfg, params, names, index, final_loss: f64::NAN }
+    }
+}
+
+/// The parameter manifest (name, shape) in ABI order — mirror of
+/// python/compile/model.py::param_manifest.
+pub fn manifest_for(cfg: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let mut out = vec![("tok_emb".to_string(), vec![cfg.vocab, cfg.d_model])];
+    for l in 0..cfg.n_layers {
+        let p = format!("layer{l}.");
+        out.push((format!("{p}attn_norm"), vec![cfg.d_model]));
+        out.push((format!("{p}wq"), vec![cfg.d_model, cfg.q_dim()]));
+        out.push((format!("{p}wk"), vec![cfg.d_model, cfg.kv_dim()]));
+        out.push((format!("{p}wv"), vec![cfg.d_model, cfg.kv_dim()]));
+        out.push((format!("{p}wo"), vec![cfg.q_dim(), cfg.d_model]));
+        out.push((format!("{p}mlp_norm"), vec![cfg.d_model]));
+        out.push((format!("{p}w_gate"), vec![cfg.d_model, cfg.ff]));
+        out.push((format!("{p}w_up"), vec![cfg.d_model, cfg.ff]));
+        out.push((format!("{p}w_down"), vec![cfg.ff, cfg.d_model]));
+    }
+    out.push(("final_norm".to_string(), vec![cfg.d_model]));
+    out.push(("lm_head".to_string(), vec![cfg.d_model, cfg.vocab]));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 32,
+            ff: 128,
+            vocab: 512,
+            rope_theta: 10000.0,
+            max_seq: 256,
+            norm_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn manifest_matches_python_layout() {
+        let m = manifest_for(&tiny_cfg());
+        assert_eq!(m.len(), 1 + 2 * 9 + 2);
+        assert_eq!(m[0].0, "tok_emb");
+        assert_eq!(m[1].0, "layer0.attn_norm");
+        assert_eq!(m[10].0, "layer1.attn_norm");
+        assert_eq!(m.last().unwrap().0, "lm_head");
+        assert_eq!(m[2].1, vec![64, 64]); // wq [d, H*hd]
+        assert_eq!(m[3].1, vec![64, 32]); // wk [d, KV*hd]
+    }
+
+    #[test]
+    fn random_weights_consistent() {
+        let w = Weights::random_for_tests(tiny_cfg(), 1);
+        assert_eq!(w.get("tok_emb").shape(), &[512, 64]);
+        assert_eq!(w.layer(1, "w_down").shape(), &[128, 64]);
+        let n = w.n_params();
+        assert!(n > 100_000, "{n}");
+    }
+
+    #[test]
+    #[should_panic(expected = "missing weight")]
+    fn missing_weight_panics() {
+        let w = Weights::random_for_tests(tiny_cfg(), 1);
+        let _ = w.get("layer9.wq");
+    }
+}

@@ -1,0 +1,191 @@
+//! Pruning algorithms explored in §2 of the paper plus baselines:
+//! per-token magnitude (the verdict method), per-token output-aware (Key),
+//! per-channel magnitude / output-aware (Value), ThinK-style structured
+//! channel removal, and 2:4 semi-structured.
+
+pub mod per_channel;
+pub mod per_token;
+pub mod semi;
+pub mod think;
+
+pub use per_channel::{per_channel_magnitude, per_channel_output_aware, CHANNEL_GROUP};
+pub use per_token::{per_token_magnitude, per_token_output_aware, select_top_per_row};
+pub use semi::semi_24;
+pub use think::{structured_compression_rate, think_key, think_value};
+
+/// Recent-token dense window: the paper keeps the most recent 32 tokens
+/// untouched during decode (§2, "local dense window").
+pub const LOCAL_WINDOW: usize = 32;
+
+/// Kept elements per token for a target sparsity over `d` channels:
+/// round-half-up of d·(1−s), floored at 1. Mirrors
+/// `python/compile/kernels/prune.py::keep_count`.
+pub fn keep_count(d: usize, sparsity: f64) -> usize {
+    (((d as f64) * (1.0 - sparsity) + 0.5).floor() as usize).clamp(1, d)
+}
+
+/// Pruning method selector used by configs and the experiment harness.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// No pruning.
+    None,
+    /// Per-token magnitude (the paper's verdict method).
+    TokenMagnitude,
+    /// Per-token output-aware (Key cache; needs query window).
+    TokenOutputAware,
+    /// Per-channel magnitude in 32-token groups (Value cache study).
+    ChannelMagnitude,
+    /// Per-channel output-aware (Value cache; needs attention window).
+    ChannelOutputAware,
+    /// ThinK-style structured channel removal.
+    ThinkStructured,
+    /// 2:4 semi-structured (sparsity fixed at 0.5).
+    Semi24,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "none" => Method::None,
+            "token-magnitude" | "magnitude" => Method::TokenMagnitude,
+            "token-output-aware" | "output-aware" => Method::TokenOutputAware,
+            "channel-magnitude" => Method::ChannelMagnitude,
+            "channel-output-aware" => Method::ChannelOutputAware,
+            "think" | "structured" => Method::ThinkStructured,
+            "2:4" | "semi24" => Method::Semi24,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::None => "none",
+            Method::TokenMagnitude => "token-magnitude",
+            Method::TokenOutputAware => "token-output-aware",
+            Method::ChannelMagnitude => "channel-magnitude",
+            Method::ChannelOutputAware => "channel-output-aware",
+            Method::ThinkStructured => "think",
+            Method::Semi24 => "2:4",
+        }
+    }
+}
+
+/// Side information some methods need (computed by the harness/engine
+/// from the prompt's trailing query window, paper Fig 3 / §2.2).
+pub struct OutputAwareCtx<'a> {
+    /// Σ_w |Q_w| per channel (GQA: summed over the queries of the group).
+    pub q_abs_sum: Option<&'a [f32]>,
+    /// Σ_w α_w per token (attention mass received over the window).
+    pub att_sum: Option<&'a [f32]>,
+}
+
+impl<'a> OutputAwareCtx<'a> {
+    pub fn none() -> OutputAwareCtx<'static> {
+        OutputAwareCtx { q_abs_sum: None, att_sum: None }
+    }
+}
+
+/// Apply `method` at `sparsity` to a `[tokens x channels]` cache matrix.
+/// Panics if a required output-aware context is missing (programmer error
+/// — the harness wires these explicitly).
+pub fn apply(
+    method: Method,
+    x: &[f32],
+    tokens: usize,
+    channels: usize,
+    sparsity: f64,
+    ctx: &OutputAwareCtx,
+) -> Vec<f32> {
+    if tokens == 0 {
+        return Vec::new();
+    }
+    match method {
+        Method::None => x.to_vec(),
+        Method::TokenMagnitude => {
+            per_token_magnitude(x, tokens, channels, keep_count(channels, sparsity))
+        }
+        Method::TokenOutputAware => per_token_output_aware(
+            x,
+            tokens,
+            channels,
+            ctx.q_abs_sum.expect("TokenOutputAware needs q_abs_sum"),
+            keep_count(channels, sparsity),
+        ),
+        Method::ChannelMagnitude => per_channel_magnitude(x, tokens, channels, sparsity),
+        Method::ChannelOutputAware => per_channel_output_aware(
+            x,
+            tokens,
+            channels,
+            ctx.att_sum.expect("ChannelOutputAware needs att_sum"),
+            sparsity,
+        ),
+        Method::ThinkStructured => {
+            // For the Key cache ThinK is query-driven; for Value the
+            // magnitude variant is used. The harness passes q_abs_sum for
+            // K and leaves it None for V.
+            match ctx.q_abs_sum {
+                Some(q) => think_key(x, tokens, channels, q, sparsity).0,
+                None => think_value(x, tokens, channels, sparsity).0,
+            }
+        }
+        Method::Semi24 => semi_24(x, tokens, channels),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn keep_count_rounding() {
+        assert_eq!(keep_count(64, 0.5), 32);
+        assert_eq!(keep_count(64, 0.7), 19); // 64*0.3 = 19.2 -> 19
+        assert_eq!(keep_count(128, 0.7), 38); // 128*0.3 = 38.4 -> 38
+        assert_eq!(keep_count(64, 0.0), 64);
+        assert_eq!(keep_count(64, 0.99), 1);
+        assert_eq!(keep_count(10, 0.75), 3); // 2.5 rounds half-up to 3
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [
+            Method::None,
+            Method::TokenMagnitude,
+            Method::TokenOutputAware,
+            Method::ChannelMagnitude,
+            Method::ChannelOutputAware,
+            Method::ThinkStructured,
+            Method::Semi24,
+        ] {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("bogus"), None);
+    }
+
+    #[test]
+    fn apply_dispatch_sparsity() {
+        let mut rng = Pcg32::seeded(10);
+        let (t, d) = (64, 64);
+        let x: Vec<f32> = (0..t * d).map(|_| rng.normal_f32()).collect();
+        let ctx = OutputAwareCtx::none();
+        for (m, s) in [
+            (Method::TokenMagnitude, 0.5),
+            (Method::ChannelMagnitude, 0.5),
+            (Method::Semi24, 0.5),
+        ] {
+            let p = apply(m, &x, t, d, s, &ctx);
+            let nnz = p.iter().filter(|v| **v != 0.0).count() as f64;
+            let rate = nnz / (t * d) as f64;
+            assert!((rate - 0.5).abs() < 0.02, "{m:?}: kept {rate}");
+        }
+        let p = apply(Method::None, &x, t, d, 0.5, &ctx);
+        assert_eq!(p, x);
+    }
+
+    #[test]
+    fn apply_empty_input() {
+        let ctx = OutputAwareCtx::none();
+        assert!(apply(Method::TokenMagnitude, &[], 0, 64, 0.5, &ctx).is_empty());
+    }
+}

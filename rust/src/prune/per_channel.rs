@@ -1,0 +1,135 @@
+//! Per-channel pruning (§2.2): sparsity is induced across tokens for each
+//! channel. The paper prunes each channel within *32-token groups* (for
+//! compatibility with the local-window size) and explores magnitude and
+//! output-aware scores for the Value cache.
+
+/// Token-group size used by per-channel pruning (paper §2.2).
+pub const CHANNEL_GROUP: usize = 32;
+
+/// Number of kept tokens for a group of `glen` tokens at target sparsity.
+fn group_keep(glen: usize, sparsity: f64) -> usize {
+    ((glen as f64 * (1.0 - sparsity) + 0.5).floor() as usize).max(1)
+}
+
+/// Shared scaffolding: per (channel, 32-token group), keep the `keep`
+/// highest-scored tokens. `score` has the same layout as `x`.
+fn select_per_channel(
+    x: &[f32],
+    score: &[f32],
+    tokens: usize,
+    channels: usize,
+    sparsity: f64,
+) -> Vec<f32> {
+    assert_eq!(x.len(), tokens * channels);
+    let mut out = vec![0.0f32; tokens * channels];
+    let mut order: Vec<u32> = Vec::with_capacity(CHANNEL_GROUP);
+    let mut g0 = 0usize;
+    while g0 < tokens {
+        let glen = CHANNEL_GROUP.min(tokens - g0);
+        let keep = group_keep(glen, sparsity).min(glen);
+        for c in 0..channels {
+            order.clear();
+            order.extend(0..glen as u32);
+            if keep < glen {
+                order.select_nth_unstable_by(keep - 1, |&a, &b| {
+                    let sa = score[(g0 + a as usize) * channels + c];
+                    let sb = score[(g0 + b as usize) * channels + c];
+                    sb.partial_cmp(&sa).unwrap().then(a.cmp(&b))
+                });
+                order.truncate(keep);
+            }
+            for &r in order.iter() {
+                let t = g0 + r as usize;
+                out[t * channels + c] = x[t * channels + c];
+            }
+        }
+        g0 += glen;
+    }
+    out
+}
+
+/// Per-channel magnitude pruning of the Value cache.
+pub fn per_channel_magnitude(v: &[f32], tokens: usize, channels: usize, sparsity: f64) -> Vec<f32> {
+    let score: Vec<f32> = v.iter().map(|x| x.abs()).collect();
+    select_per_channel(v, &score, tokens, channels, sparsity)
+}
+
+/// Per-channel *output-aware* Value pruning (§2.2):
+/// `S = |V| ⊙ broadcast(Σ_w |α_w|)` where `att_sum[t]` is the accumulated
+/// attention mass token t receives over the query window.
+pub fn per_channel_output_aware(
+    v: &[f32],
+    tokens: usize,
+    channels: usize,
+    att_sum: &[f32],
+    sparsity: f64,
+) -> Vec<f32> {
+    assert_eq!(att_sum.len(), tokens);
+    let mut score = vec![0.0f32; tokens * channels];
+    for t in 0..tokens {
+        let a = att_sum[t];
+        for c in 0..channels {
+            score[t * channels + c] = v[t * channels + c].abs() * a;
+        }
+    }
+    select_per_channel(v, &score, tokens, channels, sparsity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn per_channel_sparsity_within_groups() {
+        let mut rng = Pcg32::seeded(4);
+        let (t, d) = (96, 16); // three full groups
+        let v: Vec<f32> = (0..t * d).map(|_| rng.normal_f32() + 0.01).collect();
+        let p = per_channel_magnitude(&v, t, d, 0.5);
+        for g in 0..3 {
+            for c in 0..d {
+                let kept = (0..CHANNEL_GROUP)
+                    .filter(|r| p[(g * CHANNEL_GROUP + r) * d + c] != 0.0)
+                    .count();
+                assert_eq!(kept, 16, "group {g} channel {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_tail_group() {
+        let mut rng = Pcg32::seeded(5);
+        let (t, d) = (40, 4); // 32 + 8 tail
+        let v: Vec<f32> = (0..t * d).map(|_| rng.normal_f32() + 0.01).collect();
+        let p = per_channel_magnitude(&v, t, d, 0.7);
+        // tail group of 8 tokens at 70% -> keep round(8*0.3)=2
+        for c in 0..d {
+            let kept = (32..40).filter(|&tt| p[tt * d + c] != 0.0).count();
+            assert_eq!(kept, 2, "channel {c}");
+        }
+    }
+
+    #[test]
+    fn output_aware_prefers_attended_tokens() {
+        // Uniform |V|, attention mass concentrated on token 3 -> token 3's
+        // elements survive in every channel.
+        let (t, d) = (32, 2);
+        let v = vec![1.0f32; t * d];
+        let mut att = vec![0.01f32; t];
+        att[3] = 5.0;
+        let p = per_channel_output_aware(&v, t, d, &att, 0.9);
+        for c in 0..d {
+            assert!(p[3 * d + c] != 0.0);
+        }
+    }
+
+    #[test]
+    fn keeps_at_least_one_per_group() {
+        let v = vec![1.0f32; 32 * 2];
+        let p = per_channel_magnitude(&v, 32, 2, 0.99);
+        for c in 0..2 {
+            let kept = (0..32).filter(|&t| p[t * 2 + c] != 0.0).count();
+            assert_eq!(kept, 1);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Per-token pruning (§2): sparsity is induced across each token's vector
+//! (over channels). The paper's headline method is per-token *magnitude*
+//! pruning; the output-aware variant weights each Key element by the
+//! L1-accumulated query magnitudes (Fig 3).
+//!
+//! Tie-break convention (shared with the L1 kernel and ref.py): among
+//! equal scores the lower channel index wins.
+
+/// Select, per row, the `kk` largest entries of `score` and copy the
+/// corresponding `x` entries into the output (everything else zero).
+///
+/// `x` and `score` are row-major `[tokens x channels]`.
+pub fn select_top_per_row(
+    x: &[f32],
+    score: &[f32],
+    tokens: usize,
+    channels: usize,
+    kk: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), tokens * channels);
+    assert_eq!(score.len(), tokens * channels);
+    assert!(kk >= 1 && kk <= channels);
+    let mut out = vec![0.0f32; tokens * channels];
+    let mut idx: Vec<u32> = Vec::with_capacity(channels);
+    for t in 0..tokens {
+        let s = &score[t * channels..(t + 1) * channels];
+        idx.clear();
+        idx.extend(0..channels as u32);
+        if kk < channels {
+            // Partial selection: kk largest by (score desc, index asc).
+            idx.select_nth_unstable_by(kk - 1, |&a, &b| {
+                s[b as usize]
+                    .partial_cmp(&s[a as usize])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            idx.truncate(kk);
+        }
+        let xr = &x[t * channels..(t + 1) * channels];
+        let or = &mut out[t * channels..(t + 1) * channels];
+        for &c in idx.iter() {
+            or[c as usize] = xr[c as usize];
+        }
+    }
+    out
+}
+
+/// Per-token magnitude pruning: keep the `kk` largest-|.| elements of each
+/// token's vector. The paper's verdict method for both K and V caches.
+pub fn per_token_magnitude(x: &[f32], tokens: usize, channels: usize, kk: usize) -> Vec<f32> {
+    let score: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+    select_top_per_row(x, &score, tokens, channels, kk)
+}
+
+/// Per-token *output-aware* Key pruning (Fig 3):
+/// `S = |K| ⊙ broadcast(Σ_w |Q_w|)`; keep the per-token top-kk by S.
+///
+/// `q_abs_sum` is the element-wise L1 accumulation of the query window
+/// (the harness sums the last 32 prompt queries; for GQA the scores of all
+/// queries mapped to a KV head are summed — the caller does that fold).
+pub fn per_token_output_aware(
+    k: &[f32],
+    tokens: usize,
+    channels: usize,
+    q_abs_sum: &[f32],
+    kk: usize,
+) -> Vec<f32> {
+    assert_eq!(q_abs_sum.len(), channels);
+    let mut score = vec![0.0f32; tokens * channels];
+    for t in 0..tokens {
+        for c in 0..channels {
+            score[t * channels + c] = k[t * channels + c].abs() * q_abs_sum[c];
+        }
+    }
+    select_top_per_row(k, &score, tokens, channels, kk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn keeps_exactly_kk_per_row() {
+        let mut rng = Pcg32::seeded(1);
+        let (t, d, kk) = (16, 64, 20);
+        let x: Vec<f32> = (0..t * d).map(|_| rng.normal_f32()).collect();
+        let p = per_token_magnitude(&x, t, d, kk);
+        for tt in 0..t {
+            let n = p[tt * d..(tt + 1) * d].iter().filter(|v| **v != 0.0).count();
+            assert_eq!(n, kk);
+        }
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let x = vec![0.1, -5.0, 0.2, 3.0, -0.3, 0.05, 1.0, -2.0];
+        let p = per_token_magnitude(&x, 1, 8, 3);
+        assert_eq!(p, vec![0.0, -5.0, 0.0, 3.0, 0.0, 0.0, 0.0, -2.0]);
+    }
+
+    #[test]
+    fn tie_break_prefers_lower_index() {
+        let x = vec![1.0, -1.0, 1.0, 1.0];
+        let p = per_token_magnitude(&x, 1, 4, 2);
+        assert_eq!(p, vec![1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn output_aware_reweights() {
+        // |K| equal everywhere; q weights pick channels 2 and 0.
+        let k = vec![1.0f32; 4];
+        let q = vec![0.5, 0.1, 0.9, 0.2];
+        let p = per_token_output_aware(&k, 1, 4, &q, 2);
+        assert_eq!(p, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn kk_equals_channels_is_identity() {
+        let mut rng = Pcg32::seeded(2);
+        let x: Vec<f32> = (0..4 * 8).map(|_| rng.normal_f32()).collect();
+        assert_eq!(per_token_magnitude(&x, 4, 8, 8), x);
+    }
+
+    #[test]
+    fn preserved_values_are_unmodified() {
+        let mut rng = Pcg32::seeded(3);
+        let (t, d, kk) = (8, 32, 10);
+        let x: Vec<f32> = (0..t * d).map(|_| rng.normal_f32()).collect();
+        let p = per_token_magnitude(&x, t, d, kk);
+        for (orig, kept) in x.iter().zip(&p) {
+            assert!(*kept == 0.0 || kept == orig);
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! 2:4 semi-structured pruning (App. B): within every 4 consecutive
+//! channels of a token's vector, keep the 2 largest-magnitude elements —
+//! a global 50% sparsity with the pattern NVIDIA sparse tensor cores
+//! support. Used only for the accuracy comparison of Table 12.
+
+/// Apply 2:4 semi-structured magnitude pruning along each row.
+/// `channels` must be a multiple of 4.
+pub fn semi_24(x: &[f32], tokens: usize, channels: usize) -> Vec<f32> {
+    assert_eq!(x.len(), tokens * channels);
+    assert_eq!(channels % 4, 0, "2:4 needs channels % 4 == 0");
+    let mut out = vec![0.0f32; x.len()];
+    for t in 0..tokens {
+        for g in 0..channels / 4 {
+            let base = t * channels + g * 4;
+            let grp = &x[base..base + 4];
+            // indices of the two largest |.| (ties -> lower index)
+            let mut idx = [0usize, 1, 2, 3];
+            idx.sort_by(|&a, &b| {
+                grp[b].abs().partial_cmp(&grp[a].abs()).unwrap().then(a.cmp(&b))
+            });
+            out[base + idx[0]] = grp[idx[0]];
+            out[base + idx[1]] = grp[idx[1]];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn exactly_two_of_four_survive() {
+        let mut rng = Pcg32::seeded(8);
+        let (t, d) = (8, 64);
+        let x: Vec<f32> = (0..t * d).map(|_| rng.normal_f32()).collect();
+        let p = semi_24(&x, t, d);
+        for tt in 0..t {
+            for g in 0..d / 4 {
+                let grp = &p[tt * d + g * 4..tt * d + g * 4 + 4];
+                assert_eq!(grp.iter().filter(|v| **v != 0.0).count(), 2);
+            }
+        }
+    }
+
+    #[test]
+    fn keeps_the_largest() {
+        let x = vec![0.1, -3.0, 2.0, 0.5];
+        assert_eq!(semi_24(&x, 1, 4), vec![0.0, -3.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn global_sparsity_is_half() {
+        let mut rng = Pcg32::seeded(9);
+        let x: Vec<f32> = (0..64 * 64).map(|_| rng.normal_f32()).collect();
+        let p = semi_24(&x, 64, 64);
+        let nnz = p.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(nnz, 64 * 64 / 2);
+    }
+}

@@ -1,0 +1,124 @@
+//! ThinK-style structured (per-channel removal) pruning baseline [38].
+//!
+//! ThinK drops entire Key-cache channels using a query-driven score
+//! accumulated over the last 32 queries. We reproduce it in spirit:
+//! channel score = (Σ_w |Q_w[c]|) · ‖K[:,c]‖₂, keep the top ⌈(1-s)·D⌉
+//! channels, zero the rest. For the Value cache (paper Tables 2/8) the
+//! same structured scheme with a pure magnitude score ‖V[:,c]‖₂ is used.
+
+/// Structured Key-cache pruning: drop whole channels by query-driven score.
+/// Returns the pruned matrix and the kept-channel mask.
+pub fn think_key(
+    k: &[f32],
+    tokens: usize,
+    channels: usize,
+    q_abs_sum: &[f32],
+    sparsity: f64,
+) -> (Vec<f32>, Vec<bool>) {
+    assert_eq!(k.len(), tokens * channels);
+    assert_eq!(q_abs_sum.len(), channels);
+    let mut score = vec![0.0f64; channels];
+    for c in 0..channels {
+        let mut norm2 = 0.0f64;
+        for t in 0..tokens {
+            let x = k[t * channels + c] as f64;
+            norm2 += x * x;
+        }
+        score[c] = q_abs_sum[c] as f64 * norm2.sqrt();
+    }
+    apply_channel_mask(k, tokens, channels, &score, sparsity)
+}
+
+/// Structured Value-cache pruning: drop whole channels by L2 magnitude.
+pub fn think_value(v: &[f32], tokens: usize, channels: usize, sparsity: f64) -> (Vec<f32>, Vec<bool>) {
+    assert_eq!(v.len(), tokens * channels);
+    let mut score = vec![0.0f64; channels];
+    for c in 0..channels {
+        let mut norm2 = 0.0f64;
+        for t in 0..tokens {
+            let x = v[t * channels + c] as f64;
+            norm2 += x * x;
+        }
+        score[c] = norm2.sqrt();
+    }
+    apply_channel_mask(v, tokens, channels, &score, sparsity)
+}
+
+fn apply_channel_mask(
+    x: &[f32],
+    tokens: usize,
+    channels: usize,
+    score: &[f64],
+    sparsity: f64,
+) -> (Vec<f32>, Vec<bool>) {
+    let keep = (((channels as f64) * (1.0 - sparsity) + 0.5).floor() as usize)
+        .clamp(1, channels);
+    let mut order: Vec<usize> = (0..channels).collect();
+    order.sort_by(|&a, &b| score[b].partial_cmp(&score[a]).unwrap().then(a.cmp(&b)));
+    let mut mask = vec![false; channels];
+    for &c in order.iter().take(keep) {
+        mask[c] = true;
+    }
+    let mut out = vec![0.0f32; tokens * channels];
+    for t in 0..tokens {
+        for c in 0..channels {
+            if mask[c] {
+                out[t * channels + c] = x[t * channels + c];
+            }
+        }
+    }
+    (out, mask)
+}
+
+/// Structured pruning memory accounting: kept channels remain dense, so
+/// the compressed size is simply the kept fraction (no bitmap needed).
+/// The paper's Fig 6b: K-only 50% ThinK => 75% of the *full KV* footprint.
+pub fn structured_compression_rate(mask: &[bool]) -> f64 {
+    mask.iter().filter(|m| **m).count() as f64 / mask.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn drops_whole_channels() {
+        let mut rng = Pcg32::seeded(6);
+        let (t, d) = (50, 16);
+        let k: Vec<f32> = (0..t * d).map(|_| rng.normal_f32()).collect();
+        let q = vec![1.0f32; d];
+        let (p, mask) = think_key(&k, t, d, &q, 0.5);
+        assert_eq!(mask.iter().filter(|m| **m).count(), 8);
+        for c in 0..d {
+            let any = (0..t).any(|tt| p[tt * d + c] != 0.0);
+            if mask[c] {
+                assert!(any || k.iter().skip(c).step_by(d).all(|x| *x == 0.0));
+            } else {
+                assert!(!any, "dropped channel {c} has survivors");
+            }
+        }
+    }
+
+    #[test]
+    fn query_weighting_changes_selection() {
+        // channel 0 large K but zero query weight; channel 1 small K but
+        // large weight -> ThinK keeps channel 1.
+        let k = vec![10.0, 0.1, 10.0, 0.1];
+        let q = vec![0.0, 5.0];
+        let (_, mask) = think_key(&k, 2, 2, &q, 0.5);
+        assert_eq!(mask, vec![false, true]);
+    }
+
+    #[test]
+    fn value_variant_magnitude_only() {
+        let v = vec![3.0, 0.1, 3.0, 0.2];
+        let (_, mask) = think_value(&v, 2, 2, 0.5);
+        assert_eq!(mask, vec![true, false]);
+    }
+
+    #[test]
+    fn compression_rate_is_kept_fraction() {
+        assert_eq!(structured_compression_rate(&[true, false, true, false]), 0.5);
+    }
+}

@@ -1,0 +1,179 @@
+//! KIVI-style KV-cache quantization, numerically simulated (§4.2.2).
+//!
+//! KIVI [27] quantizes the Key cache per-channel and the Value cache
+//! per-token with asymmetric uniform b-bit quantization over small groups.
+//! The paper evaluates Mustafar+KIVI for *accuracy only* (its kernel does
+//! not support low-bit either), so we reproduce the numerics: quantize →
+//! dequantize and measure the accuracy impact. Following Harma et al.
+//! [13] (as the paper does), pruning is applied *before* quantization;
+//! zeros introduced by pruning are excluded from the quantization range so
+//! the joint error model matches a real sparse-quantized store.
+
+/// Quantization group length (KIVI uses small per-group scales).
+pub const GROUP: usize = 32;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Axis {
+    /// Groups run down each channel (Key cache — per-channel quant).
+    PerChannel,
+    /// Groups run along each token's vector (Value cache — per-token quant).
+    PerToken,
+}
+
+/// Asymmetric uniform quantize→dequantize of one group of values,
+/// ignoring exact zeros (pruned slots) when `skip_zeros` is set.
+fn fake_quant_group(vals: &mut [f32], bits: u32, skip_zeros: bool) {
+    let levels = (1u32 << bits) - 1;
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in vals.iter() {
+        if skip_zeros && v == 0.0 {
+            continue;
+        }
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || hi <= lo {
+        return; // all-zero or constant group: exact representation
+    }
+    let scale = (hi - lo) / levels as f32;
+    for v in vals.iter_mut() {
+        if skip_zeros && *v == 0.0 {
+            continue;
+        }
+        let q = ((*v - lo) / scale).round().clamp(0.0, levels as f32);
+        *v = lo + q * scale;
+    }
+}
+
+/// Fake-quantize a `[tokens x channels]` cache matrix in place.
+pub fn kivi_fake_quant(
+    x: &mut [f32],
+    tokens: usize,
+    channels: usize,
+    bits: u32,
+    axis: Axis,
+    skip_zeros: bool,
+) {
+    assert_eq!(x.len(), tokens * channels);
+    assert!(bits >= 1 && bits <= 8);
+    match axis {
+        Axis::PerChannel => {
+            // groups of GROUP tokens down each channel
+            let mut buf = vec![0.0f32; GROUP];
+            let mut g0 = 0usize;
+            while g0 < tokens {
+                let glen = GROUP.min(tokens - g0);
+                for c in 0..channels {
+                    for r in 0..glen {
+                        buf[r] = x[(g0 + r) * channels + c];
+                    }
+                    fake_quant_group(&mut buf[..glen], bits, skip_zeros);
+                    for r in 0..glen {
+                        x[(g0 + r) * channels + c] = buf[r];
+                    }
+                }
+                g0 += glen;
+            }
+        }
+        Axis::PerToken => {
+            for t in 0..tokens {
+                let row = &mut x[t * channels..(t + 1) * channels];
+                let mut c0 = 0usize;
+                while c0 < channels {
+                    let glen = GROUP.min(channels - c0);
+                    fake_quant_group(&mut row[c0..c0 + glen], bits, skip_zeros);
+                    c0 += glen;
+                }
+            }
+        }
+    }
+}
+
+/// KIVI joint memory accounting: b bits per kept element + one (scale,
+/// zero-point) f16 pair per group. Returns bytes.
+pub fn kivi_bytes(kept_elems: usize, bits: u32) -> usize {
+    let groups = kept_elems.div_ceil(GROUP);
+    (kept_elems * bits as usize).div_ceil(8) + groups * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn randmat(t: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..t * d).map(|_| rng.normal_f32()).collect()
+    }
+
+    fn rms(a: &[f32], b: &[f32]) -> f32 {
+        let s: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+        (s / a.len() as f32).sqrt()
+    }
+
+    #[test]
+    fn error_shrinks_with_bits() {
+        let (t, d) = (64, 64);
+        let x = randmat(t, d, 20);
+        let mut e = Vec::new();
+        for bits in [2u32, 4, 8] {
+            let mut y = x.clone();
+            kivi_fake_quant(&mut y, t, d, bits, Axis::PerToken, false);
+            e.push(rms(&x, &y));
+        }
+        assert!(e[0] > e[1] && e[1] > e[2], "errors {e:?}");
+        assert!(e[2] < 0.02, "8-bit error too big: {}", e[2]);
+    }
+
+    #[test]
+    fn preserves_zeros_when_skipping() {
+        let (t, d) = (32, 64);
+        let mut x = randmat(t, d, 21);
+        for i in (0..x.len()).step_by(3) {
+            x[i] = 0.0;
+        }
+        let mut y = x.clone();
+        kivi_fake_quant(&mut y, t, d, 2, Axis::PerChannel, true);
+        for (orig, q) in x.iter().zip(&y) {
+            if *orig == 0.0 {
+                assert_eq!(*q, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn range_endpoints_exact() {
+        // group min/max are representable exactly by asymmetric quant
+        let mut x = vec![0.5f32, 1.0, 2.0, 4.0];
+        kivi_fake_quant(&mut x, 1, 4, 2, Axis::PerToken, false);
+        assert_eq!(x[0], 0.5);
+        assert_eq!(x[3], 4.0);
+    }
+
+    #[test]
+    fn constant_group_unchanged() {
+        let mut x = vec![3.0f32; 64];
+        kivi_fake_quant(&mut x, 1, 64, 2, Axis::PerToken, false);
+        assert!(x.iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn per_channel_groups_independent() {
+        // Token groups quantize independently: an outlier in group 2 must
+        // not affect group 1's values.
+        let (t, d) = (64, 1);
+        let mut a: Vec<f32> = (0..t).map(|i| (i % 7) as f32 * 0.1).collect();
+        let mut b = a.clone();
+        b[40] = 1000.0; // outlier in second group of 32
+        kivi_fake_quant(&mut a, t, d, 2, Axis::PerChannel, false);
+        kivi_fake_quant(&mut b, t, d, 2, Axis::PerChannel, false);
+        assert_eq!(&a[..32], &b[..32]);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        assert_eq!(kivi_bytes(64, 4), 32 + 2 * 4);
+        assert_eq!(kivi_bytes(64, 2), 16 + 2 * 4);
+    }
+}

@@ -1,0 +1,269 @@
+//! XLA/PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them on the PJRT CPU client, and
+//! executes them from the serving hot path. Weights are uploaded once as
+//! device-resident buffers and reused via `execute_b`.
+//!
+//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::fmt::Json;
+use crate::model::Weights;
+
+/// Parsed `artifacts.json` + artifact directory.
+pub struct ArtifactIndex {
+    pub dir: PathBuf,
+    pub local_window: usize,
+    pub tail_cap: usize,
+    /// name -> IO metadata
+    pub entries: HashMap<String, ArtifactMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub n_weights: usize,
+    pub input_shapes: Vec<(Vec<usize>, String)>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactIndex {
+    pub fn load(dir: &Path) -> Result<ArtifactIndex> {
+        let path = dir.join("artifacts.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} ({e}) — run `make artifacts`",
+                path.display()
+            ))
+        })?;
+        let v = Json::parse(&text)?;
+        let mut entries = HashMap::new();
+        for a in v.get("artifacts")?.as_arr()? {
+            let name = a.get("name")?.as_str()?.to_string();
+            let inputs = a
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|x| {
+                    Ok((
+                        x.get("shape")?.as_usize_vec()?,
+                        x.get("dtype")?.as_str()?.to_string(),
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name,
+                    n_weights: a.get("n_weights")?.as_usize()?,
+                    input_shapes: inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(ArtifactIndex {
+            dir: dir.to_path_buf(),
+            local_window: v.get("local_window")?.as_usize()?,
+            tail_cap: v.get("tail_cap")?.as_usize()?,
+            entries,
+        })
+    }
+}
+
+/// A host-side input value for an executable call.
+pub enum HostArg<'a> {
+    F32(&'a [f32], Vec<usize>),
+    I32(&'a [i32], Vec<usize>),
+    ScalarI32(i32),
+}
+
+/// PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub index: ArtifactIndex,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client and load the artifact index.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let index = ArtifactIndex::load(artifact_dir)?;
+        Ok(Runtime { client, exes: HashMap::new(), index })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.index.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Upload model weights as device-resident buffers (manifest order).
+    pub fn upload_weights(&self, w: &Weights) -> Result<DeviceWeights> {
+        let mut bufs = Vec::with_capacity(w.params.len());
+        for t in &w.params {
+            bufs.push(self.client.buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)?);
+        }
+        Ok(DeviceWeights { bufs, cfg: w.cfg.clone() })
+    }
+
+    /// Upload one host argument.
+    pub fn upload(&self, arg: &HostArg) -> Result<xla::PjRtBuffer> {
+        Ok(match arg {
+            HostArg::F32(data, dims) => {
+                self.client.buffer_from_host_buffer::<f32>(data, dims, None)?
+            }
+            HostArg::I32(data, dims) => {
+                self.client.buffer_from_host_buffer::<i32>(data, dims, None)?
+            }
+            HostArg::ScalarI32(x) => self.client.buffer_from_host_buffer::<i32>(&[*x], &[], None)?,
+        })
+    }
+
+    /// Execute artifact `name` with device-resident weights followed by
+    /// the given host args; returns the flattened output literals.
+    pub fn run(
+        &self,
+        name: &str,
+        weights: Option<&DeviceWeights>,
+        args: &[HostArg],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not loaded")))?;
+        let meta = self
+            .index
+            .entries
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not in index")))?;
+
+        let weight_refs: Vec<&xla::PjRtBuffer> = match weights {
+            Some(dw) => {
+                if dw.bufs.len() != meta.n_weights {
+                    return Err(Error::Runtime(format!(
+                        "{name}: weight count {} != manifest {}",
+                        dw.bufs.len(),
+                        meta.n_weights
+                    )));
+                }
+                dw.bufs.iter().collect()
+            }
+            None => {
+                if meta.n_weights != 0 {
+                    return Err(Error::Runtime(format!("{name}: weights required")));
+                }
+                Vec::new()
+            }
+        };
+        if meta.input_shapes.len() != meta.n_weights + args.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} inputs, got {} weights + {} args",
+                meta.input_shapes.len(),
+                meta.n_weights,
+                args.len()
+            )));
+        }
+        let arg_bufs: Vec<xla::PjRtBuffer> =
+            args.iter().map(|a| self.upload(a)).collect::<Result<Vec<_>>>()?;
+        let mut all: Vec<&xla::PjRtBuffer> = weight_refs;
+        all.extend(arg_bufs.iter());
+
+        let out = exe.execute_b(&all)?;
+        let lit = out[0][0].to_literal_sync()?;
+        // AOT lowers with return_tuple=True: decompose.
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Device-resident weight buffers (uploaded once, reused every step).
+pub struct DeviceWeights {
+    bufs: Vec<xla::PjRtBuffer>,
+    pub cfg: ModelConfig,
+}
+
+/// Pull an f32 literal out as (data, shape).
+pub fn literal_f32(lit: &xla::Literal) -> Result<(Vec<f32>, Vec<usize>)> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    Ok((lit.to_vec::<f32>()?, dims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("artifacts.json").exists()
+    }
+
+    #[test]
+    fn smoke_artifact_roundtrip() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        rt.load("smoke").unwrap();
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = [1.0f32, 1.0, 1.0, 1.0];
+        let out = rt
+            .run(
+                "smoke",
+                None,
+                &[HostArg::F32(&x, vec![2, 2]), HostArg::F32(&y, vec![2, 2])],
+            )
+            .unwrap();
+        let (vals, dims) = literal_f32(&out[0]).unwrap();
+        assert_eq!(dims, vec![2, 2]);
+        // pallas kernel computes x@y + 2
+        assert_eq!(vals, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn index_parses() {
+        if !have_artifacts() {
+            return;
+        }
+        let idx = ArtifactIndex::load(&artifacts_dir()).unwrap();
+        assert!(idx.entries.contains_key("smoke"));
+        assert_eq!(idx.local_window, 32);
+    }
+
+    #[test]
+    fn missing_artifact_dir_is_clear_error() {
+        let err = Runtime::new(Path::new("/nonexistent-dir")).err();
+        // Either client creation or index load fails with a useful message.
+        assert!(err.is_some());
+        let msg = format!("{}", err.unwrap());
+        assert!(msg.contains("artifacts") || msg.contains("nonexistent"), "{msg}");
+    }
+}

@@ -1,0 +1,181 @@
+//! Minimal TCP front-end for the serving engine (the "router" face of
+//! the L3 coordinator). Line-delimited JSON protocol:
+//!
+//!   -> {"id": 1, "prompt": [1, 17, 300, ...], "max_new_tokens": 32}
+//!   <- {"id": 1, "tokens": [...], "finish": "length", ...}
+//!
+//! The engine runs on a dedicated thread; connections feed the admission
+//! queue through an mpsc channel and a dispatcher routes completions
+//! back. tokio is not available offline — std::net + threads suffice for
+//! the workloads this serves.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{Completion, Engine, Request};
+use crate::error::{Error, Result};
+use crate::fmt::Json;
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = Json::parse(line)?;
+    let id = v.get("id")?.as_usize()? as u64;
+    let prompt: Vec<u16> = v
+        .get("prompt")?
+        .as_arr()?
+        .iter()
+        .map(|x| Ok(x.as_usize()? as u16))
+        .collect::<Result<Vec<_>>>()?;
+    let max_new = v.get("max_new_tokens")?.as_usize()?;
+    let mut req = Request::new(id, prompt, max_new);
+    if let Some(stop) = v.opt("stop_token") {
+        req.stop_token = Some(stop.as_usize()? as u16);
+    }
+    Ok(req)
+}
+
+/// Serialize a completion line.
+pub fn render_completion(c: &Completion) -> String {
+    Json::obj(vec![
+        ("id", Json::num(c.id as f64)),
+        (
+            "tokens",
+            Json::arr(c.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        (
+            "finish",
+            Json::str(match c.finish {
+                crate::coordinator::FinishReason::Length => "length",
+                crate::coordinator::FinishReason::Stop => "stop",
+                crate::coordinator::FinishReason::Rejected => "rejected",
+            }),
+        ),
+        ("prefill_ms", Json::num(c.prefill_ms)),
+        ("decode_ms", Json::num(c.decode_ms)),
+        ("kv_bytes", Json::num(c.kv_bytes as f64)),
+    ])
+    .to_string()
+}
+
+/// Serve `engine` on `addr` until the process exits. Each accepted
+/// connection may pipeline many requests; responses return on the same
+/// connection in completion order.
+pub fn serve(engine: Engine, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).map_err(Error::Io)?;
+    crate::info!("mustafar server listening on {addr}");
+
+    let (req_tx, req_rx): (Sender<Request>, Receiver<Request>) = channel();
+    type Waiters = Arc<Mutex<HashMap<u64, Sender<Completion>>>>;
+    let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
+
+    // engine thread: pull requests, step, route completions
+    {
+        let waiters = Arc::clone(&waiters);
+        std::thread::spawn(move || {
+            let mut engine = engine;
+            loop {
+                // drain incoming requests without blocking the decode loop
+                loop {
+                    match req_rx.try_recv() {
+                        Ok(r) => {
+                            engine.submit(r);
+                        }
+                        Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                        Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
+                    }
+                }
+                if engine.idle() {
+                    // park briefly; a condvar would be nicer but this path
+                    // is idle-only
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    continue;
+                }
+                if let Err(e) = engine.step() {
+                    eprintln!("[server] engine error: {e}");
+                }
+                for c in engine.take_completions() {
+                    let tx = waiters.lock().unwrap().remove(&c.id);
+                    if let Some(tx) = tx {
+                        let _ = tx.send(c);
+                    }
+                }
+            }
+        });
+    }
+
+    for stream in listener.incoming() {
+        let stream = stream.map_err(Error::Io)?;
+        let req_tx = req_tx.clone();
+        let waiters = Arc::clone(&waiters);
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, req_tx, &waiters) {
+                eprintln!("[server] connection error: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    req_tx: Sender<Request>,
+    waiters: &Mutex<HashMap<u64, Sender<Completion>>>,
+) -> Result<()> {
+    let mut writer = stream.try_clone().map_err(Error::Io)?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line.map_err(Error::Io)?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match parse_request(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                writeln!(writer, "{{\"error\": \"{e}\"}}").map_err(Error::Io)?;
+                continue;
+            }
+        };
+        let (tx, rx) = channel();
+        waiters.lock().unwrap().insert(req.id, tx);
+        req_tx.send(req).map_err(|_| Error::Engine("engine gone".into()))?;
+        let comp = rx.recv().map_err(|_| Error::Engine("engine dropped request".into()))?;
+        writeln!(writer, "{}", render_completion(&comp)).map_err(Error::Io)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_parse_roundtrip() {
+        let r = parse_request(r#"{"id": 3, "prompt": [1, 2, 300], "max_new_tokens": 8}"#).unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.prompt, vec![1, 2, 300]);
+        assert_eq!(r.max_new_tokens, 8);
+        assert!(parse_request("{}").is_err());
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn completion_renders_json() {
+        let c = Completion {
+            id: 9,
+            tokens: vec![5, 6],
+            finish: crate::coordinator::FinishReason::Length,
+            queue_ms: 0.0,
+            prefill_ms: 1.5,
+            decode_ms: 2.5,
+            kv_bytes: 100,
+            kv_dense_bytes: 200,
+        };
+        let s = render_completion(&c);
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "length");
+    }
+}

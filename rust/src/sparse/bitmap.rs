@@ -1,0 +1,398 @@
+//! The paper's bitmap-based sparse format (Fig 5b, App. C).
+//!
+//! A pruned cache matrix `[tokens x channels]` is stored as 1x64 tiles:
+//! each tile covers 64 consecutive elements along the *packing axis*, and
+//! carries a 64-bit bitmap marking non-zero positions plus a tile offset
+//! addressing its first non-zero in the packed value array. Per-tile value
+//! segments are padded to a multiple of 8 ("coalescing" padding — the
+//! paper's 15%-overhead source at 50% sparsity).
+//!
+//! Packing-axis choice follows App. C: the tiling direction must be
+//! orthogonal to the dimension being contracted, so
+//!   * Key cache (contracted over channels in K·q)   -> `PackAxis::Token`
+//!   * Value cache (contracted over tokens in αᵀ·V)  -> `PackAxis::Channel`
+//!
+//! Tile *ordering* is chosen so that newly compressed 64-token groups
+//! append at the end of every array (App. C requirement (2)); see
+//! `layout.rs` for the traversal and the append path.
+
+use crate::error::{Error, Result};
+use crate::util::round_up;
+
+/// Tile extent along the packing axis (the paper's 1x64 tile).
+pub const TILE: usize = 64;
+/// Value-segment padding granularity (paper: multiples of 8).
+pub const PAD: usize = 8;
+/// Bytes per stored value in the *accounting model* (paper stores fp16).
+pub const VALUE_BYTES: usize = 2;
+/// Bytes per tile bitmap.
+pub const BITMAP_BYTES: usize = 8;
+/// Bytes per tile offset.
+pub const OFFSET_BYTES: usize = 4;
+
+/// Which logical dimension the 1x64 tiles run along.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackAxis {
+    /// Tiles span 64 tokens at a fixed channel (Key cache; Fig 9a).
+    Token,
+    /// Tiles span 64 channels of a fixed token (Value cache; Fig 9b).
+    Channel,
+}
+
+/// A pruned `[tokens x channels]` matrix in the bitmap format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitmapMatrix {
+    pub tokens: usize,
+    pub channels: usize,
+    pub axis: PackAxis,
+    /// Per-tile 64-bit occupancy bitmap, in `layout::tile_order`.
+    pub bitmaps: Vec<u64>,
+    /// Per-tile start offset into `values` (+ one trailing total-length entry).
+    pub offsets: Vec<u32>,
+    /// Packed non-zero values; each tile's segment padded to a multiple of 8.
+    pub values: Vec<f32>,
+}
+
+impl BitmapMatrix {
+    /// Number of tiles for a (tokens, channels, axis) geometry.
+    pub fn n_tiles(tokens: usize, channels: usize, axis: PackAxis) -> usize {
+        match axis {
+            PackAxis::Token => tokens.div_ceil(TILE) * channels,
+            PackAxis::Channel => channels.div_ceil(TILE) * tokens,
+        }
+    }
+
+    /// Empty matrix with zero tokens.
+    pub fn empty(channels: usize, axis: PackAxis) -> BitmapMatrix {
+        BitmapMatrix {
+            tokens: 0,
+            channels,
+            axis,
+            bitmaps: Vec::new(),
+            offsets: vec![0],
+            values: Vec::new(),
+        }
+    }
+
+    /// Compress a dense (already pruned — zeros are "pruned away") matrix.
+    ///
+    /// `dense` is row-major `[tokens x channels]`. For `PackAxis::Token`,
+    /// `tokens` must be a multiple of 64 (the KV manager only compresses
+    /// whole 64-token groups, matching the kernel's warp-tile granularity);
+    /// for `PackAxis::Channel`, `channels` must be a multiple of 64.
+    pub fn compress(dense: &[f32], tokens: usize, channels: usize, axis: PackAxis) -> Result<BitmapMatrix> {
+        if dense.len() != tokens * channels {
+            return Err(Error::Shape(format!(
+                "dense len {} != {}x{}",
+                dense.len(),
+                tokens,
+                channels
+            )));
+        }
+        match axis {
+            PackAxis::Token if tokens % TILE != 0 => {
+                return Err(Error::Shape(format!("tokens {tokens} not a multiple of {TILE}")));
+            }
+            PackAxis::Channel if channels % TILE != 0 => {
+                return Err(Error::Shape(format!("channels {channels} not a multiple of {TILE}")));
+            }
+            _ => {}
+        }
+
+        let mut m = BitmapMatrix::empty(channels, axis);
+        m.append_groups(dense, tokens)?;
+        Ok(m)
+    }
+
+    /// Append `new_tokens` (a multiple of the group granularity) worth of
+    /// dense rows to the compressed matrix. This is the paper's runtime
+    /// compression path: 64-token groups exiting the local window are
+    /// compressed and appended (App. C requirement (2)).
+    pub fn append_groups(&mut self, dense: &[f32], new_tokens: usize) -> Result<()> {
+        if dense.len() != new_tokens * self.channels {
+            return Err(Error::Shape(format!(
+                "append: dense len {} != {}x{}",
+                dense.len(),
+                new_tokens,
+                self.channels
+            )));
+        }
+        if self.axis == PackAxis::Token && new_tokens % TILE != 0 {
+            return Err(Error::Shape(format!(
+                "append: new_tokens {new_tokens} not a multiple of {TILE}"
+            )));
+        }
+
+        let d = self.channels;
+        match self.axis {
+            PackAxis::Token => {
+                // groups of 64 tokens; within a group, one tile per channel
+                for g in 0..new_tokens / TILE {
+                    for c in 0..d {
+                        let mut bm: u64 = 0;
+                        let mut vals: Vec<f32> = Vec::with_capacity(TILE);
+                        for b in 0..TILE {
+                            let x = dense[(g * TILE + b) * d + c];
+                            if x != 0.0 {
+                                bm |= 1u64 << b;
+                                vals.push(x);
+                            }
+                        }
+                        self.push_tile(bm, &vals);
+                    }
+                }
+            }
+            PackAxis::Channel => {
+                // one tile per (token, 64-channel block); token-major order
+                let cblocks = d / TILE;
+                for t in 0..new_tokens {
+                    for cb in 0..cblocks {
+                        let mut bm: u64 = 0;
+                        let mut vals: Vec<f32> = Vec::with_capacity(TILE);
+                        for b in 0..TILE {
+                            let x = dense[t * d + cb * TILE + b];
+                            if x != 0.0 {
+                                bm |= 1u64 << b;
+                                vals.push(x);
+                            }
+                        }
+                        self.push_tile(bm, &vals);
+                    }
+                }
+            }
+        }
+        self.tokens += new_tokens;
+        Ok(())
+    }
+
+    fn push_tile(&mut self, bitmap: u64, vals: &[f32]) {
+        debug_assert_eq!(bitmap.count_ones() as usize, vals.len());
+        self.bitmaps.push(bitmap);
+        self.values.extend_from_slice(vals);
+        // coalescing padding to a multiple of 8 values
+        let padded = round_up(vals.len(), PAD);
+        self.values.extend(std::iter::repeat(0.0).take(padded - vals.len()));
+        let last = *self.offsets.last().unwrap();
+        self.offsets.push(last + padded as u32);
+    }
+
+    /// Decompress to a dense row-major `[tokens x channels]` matrix.
+    pub fn decompress(&self) -> Vec<f32> {
+        let d = self.channels;
+        let mut out = vec![0.0f32; self.tokens * d];
+        match self.axis {
+            PackAxis::Token => {
+                for (ti, &bm) in self.bitmaps.iter().enumerate() {
+                    let g = ti / d;
+                    let c = ti % d;
+                    let mut off = self.offsets[ti] as usize;
+                    let mut bits = bm;
+                    while bits != 0 {
+                        let b = bits.trailing_zeros() as usize;
+                        out[(g * TILE + b) * d + c] = self.values[off];
+                        off += 1;
+                        bits &= bits - 1;
+                    }
+                }
+            }
+            PackAxis::Channel => {
+                let cblocks = d / TILE;
+                for (ti, &bm) in self.bitmaps.iter().enumerate() {
+                    let t = ti / cblocks;
+                    let cb = ti % cblocks;
+                    let mut off = self.offsets[ti] as usize;
+                    let mut bits = bm;
+                    while bits != 0 {
+                        let b = bits.trailing_zeros() as usize;
+                        out[t * d + cb * TILE + b] = self.values[off];
+                        off += 1;
+                        bits &= bits - 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of stored non-zeros (excluding padding slots).
+    pub fn nnz(&self) -> usize {
+        self.bitmaps.iter().map(|b| b.count_ones() as usize).sum()
+    }
+
+    /// Compressed size in bytes under the paper's accounting model
+    /// (fp16 values incl. padding + u64 bitmaps + u32 tile offsets).
+    pub fn compressed_bytes(&self) -> usize {
+        self.values.len() * VALUE_BYTES
+            + self.bitmaps.len() * BITMAP_BYTES
+            + (self.offsets.len() - 1) * OFFSET_BYTES
+    }
+
+    /// Dense size in bytes of the same matrix (fp16 accounting).
+    pub fn dense_bytes(&self) -> usize {
+        self.tokens * self.channels * VALUE_BYTES
+    }
+
+    /// Compression rate = compressed / dense (the paper's Fig 6b metric;
+    /// lower is better, dense = 1.0).
+    pub fn compression_rate(&self) -> f64 {
+        if self.tokens == 0 {
+            return 0.0;
+        }
+        self.compressed_bytes() as f64 / self.dense_bytes() as f64
+    }
+
+    /// Internal consistency check (used by tests and debug assertions).
+    pub fn validate(&self) -> Result<()> {
+        let want_tiles = Self::n_tiles(self.tokens, self.channels, self.axis);
+        if self.bitmaps.len() != want_tiles {
+            return Err(Error::Shape(format!(
+                "tile count {} != expected {}",
+                self.bitmaps.len(),
+                want_tiles
+            )));
+        }
+        if self.offsets.len() != want_tiles + 1 {
+            return Err(Error::Shape("offsets length mismatch".into()));
+        }
+        for (i, &bm) in self.bitmaps.iter().enumerate() {
+            let seg = (self.offsets[i + 1] - self.offsets[i]) as usize;
+            let nnz = bm.count_ones() as usize;
+            if seg != round_up(nnz, PAD) {
+                return Err(Error::Shape(format!(
+                    "tile {i}: segment {seg} != padded nnz {}",
+                    round_up(nnz, PAD)
+                )));
+            }
+        }
+        if *self.offsets.last().unwrap() as usize != self.values.len() {
+            return Err(Error::Shape("values length mismatch".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_pruned(tokens: usize, channels: usize, keep_prob: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..tokens * channels)
+            .map(|_| {
+                if rng.unit_f32() < keep_prob {
+                    rng.normal_f32()
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_token_axis() {
+        for &(t, d, p) in &[(64, 64, 0.5), (128, 32, 0.3), (192, 64, 0.05), (64, 8, 1.0)] {
+            let dense = random_pruned(t, d, p, 42);
+            let m = BitmapMatrix::compress(&dense, t, d, PackAxis::Token).unwrap();
+            m.validate().unwrap();
+            assert_eq!(m.decompress(), dense, "t={t} d={d} p={p}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_channel_axis() {
+        for &(t, d, p) in &[(10, 64, 0.5), (100, 128, 0.3), (1, 64, 0.0), (7, 64, 1.0)] {
+            let dense = random_pruned(t, d, p, 43);
+            let m = BitmapMatrix::compress(&dense, t, d, PackAxis::Channel).unwrap();
+            m.validate().unwrap();
+            assert_eq!(m.decompress(), dense, "t={t} d={d} p={p}");
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let dense = vec![0.0; 63 * 64];
+        assert!(BitmapMatrix::compress(&dense, 63, 64, PackAxis::Token).is_err());
+        let dense = vec![0.0; 4 * 63];
+        assert!(BitmapMatrix::compress(&dense, 4, 63, PackAxis::Channel).is_err());
+        let dense = vec![0.0; 10];
+        assert!(BitmapMatrix::compress(&dense, 64, 64, PackAxis::Token).is_err());
+    }
+
+    #[test]
+    fn nnz_and_padding() {
+        // one tile with 3 non-zeros -> padded segment of 8
+        let mut dense = vec![0.0f32; 64 * 1];
+        dense[0] = 1.0;
+        dense[10] = 2.0;
+        dense[63] = 3.0;
+        let m = BitmapMatrix::compress(&dense, 64, 1, PackAxis::Token).unwrap();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.values.len(), 8);
+        assert_eq!(m.offsets, vec![0, 8]);
+        assert_eq!(m.bitmaps[0], (1u64 << 0) | (1 << 10) | (1 << 63));
+    }
+
+    #[test]
+    fn accounting_matches_paper_shape() {
+        // 50% sparsity with hd=128-like channels: compression rate should
+        // land near the paper's ~0.65 (Fig 6b), 70% near ~0.45.
+        let t = 1024;
+        let d = 128;
+        for &(sparsity, lo, hi) in &[(0.5, 0.60, 0.70), (0.7, 0.40, 0.50)] {
+            let dense = random_pruned(t, d, 1.0 - sparsity, 7);
+            let m = BitmapMatrix::compress(&dense, t, d, PackAxis::Token).unwrap();
+            let r = m.compression_rate();
+            assert!(r > lo && r < hi, "sparsity {sparsity}: rate {r}");
+        }
+    }
+
+    #[test]
+    fn append_equals_full_compress_token_axis() {
+        let d = 32;
+        let dense = random_pruned(192, d, 0.4, 11);
+        let full = BitmapMatrix::compress(&dense, 192, d, PackAxis::Token).unwrap();
+        let mut inc = BitmapMatrix::compress(&dense[..64 * d], 64, d, PackAxis::Token).unwrap();
+        inc.append_groups(&dense[64 * d..128 * d], 64).unwrap();
+        inc.append_groups(&dense[128 * d..], 64).unwrap();
+        assert_eq!(inc, full);
+    }
+
+    #[test]
+    fn append_equals_full_compress_channel_axis() {
+        let d = 64;
+        let dense = random_pruned(100, d, 0.4, 12);
+        let full = BitmapMatrix::compress(&dense, 100, d, PackAxis::Channel).unwrap();
+        let mut inc = BitmapMatrix::compress(&dense[..60 * d], 60, d, PackAxis::Channel).unwrap();
+        inc.append_groups(&dense[60 * d..], 40).unwrap();
+        assert_eq!(inc, full);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = BitmapMatrix::empty(64, PackAxis::Channel);
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.compression_rate(), 0.0);
+        assert!(m.decompress().is_empty());
+    }
+
+    #[test]
+    fn property_roundtrip_random_patterns() {
+        // Arbitrary sparsity patterns — the paper's whole point is that the
+        // format supports *unstructured* sparsity, so test random masks.
+        for seed in 0..20 {
+            let mut rng = Pcg32::seeded(seed);
+            let groups = 1 + rng.below(3) as usize;
+            let t = groups * TILE;
+            let d = [8, 16, 64][rng.below(3) as usize];
+            let p = rng.unit_f32();
+            let dense = random_pruned(t, d, p, seed + 1000);
+            let m = BitmapMatrix::compress(&dense, t, d, PackAxis::Token).unwrap();
+            m.validate().unwrap();
+            assert_eq!(m.decompress(), dense);
+            let nnz_expected = dense.iter().filter(|x| **x != 0.0).count();
+            assert_eq!(m.nnz(), nnz_expected);
+        }
+    }
+}

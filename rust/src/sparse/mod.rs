@@ -1,0 +1,17 @@
+//! The paper's bitmap-based sparse format and the SpMV kernels over it
+//! (§3, Fig 5, App. C).
+//!
+//! * `bitmap` — 1x64-tile compressed representation with per-tile u64
+//!   bitmaps, tile offsets, and multiples-of-8 value padding.
+//! * `spmv` — load-as-compressed/compute-as-dense matrix-vector products
+//!   for the two decode-phase attention MVs, plus dense baselines.
+//! * `pairs` — the rectangular (values, indices) view used at the
+//!   XLA/PJRT boundary (static shapes).
+
+pub mod bitmap;
+pub mod pairs;
+pub mod spmv;
+
+pub use bitmap::{BitmapMatrix, PackAxis, PAD, TILE};
+pub use pairs::TokenPairs;
+pub use spmv::{dense_key, dense_value, spmv_key, spmv_value};

@@ -1,0 +1,125 @@
+//! (values, indices) rectangular view of a per-token pruned matrix.
+//!
+//! The L1 Pallas kernel consumes compressed operands as constant-width
+//! `[T, kk]` (values, indices) pairs because XLA requires static shapes
+//! (DESIGN.md §3). Per-token pruning keeps exactly `kk` elements per
+//! token, so this view is lossless; it is derived from / converted to the
+//! bitmap format only at the PJRT boundary. Both views are bit-exact
+//! representations of the same pruned matrix (round-trip tested).
+
+use super::bitmap::{BitmapMatrix, PackAxis};
+use crate::error::{Error, Result};
+
+/// Rectangular compressed view: row t holds the kept elements of token t
+/// with their channel indices ascending; rows with fewer than `kk` kept
+/// elements are padded with (0.0, 0).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TokenPairs {
+    pub tokens: usize,
+    pub channels: usize,
+    pub kk: usize,
+    /// `[tokens * kk]` values (padding slots are 0.0)
+    pub values: Vec<f32>,
+    /// `[tokens * kk]` channel indices (padding slots are 0)
+    pub indices: Vec<i32>,
+}
+
+impl TokenPairs {
+    /// Build from a dense (pruned) row-major `[tokens x channels]` matrix.
+    /// Errors if any token has more than `kk` non-zeros.
+    pub fn from_dense(dense: &[f32], tokens: usize, channels: usize, kk: usize) -> Result<TokenPairs> {
+        if dense.len() != tokens * channels {
+            return Err(Error::Shape(format!(
+                "dense len {} != {tokens}x{channels}",
+                dense.len()
+            )));
+        }
+        let mut values = vec![0.0f32; tokens * kk];
+        let mut indices = vec![0i32; tokens * kk];
+        for t in 0..tokens {
+            let row = &dense[t * channels..(t + 1) * channels];
+            let mut j = 0usize;
+            for (c, &x) in row.iter().enumerate() {
+                if x != 0.0 {
+                    if j >= kk {
+                        return Err(Error::Shape(format!(
+                            "token {t} has more than kk={kk} non-zeros"
+                        )));
+                    }
+                    values[t * kk + j] = x;
+                    indices[t * kk + j] = c as i32;
+                    j += 1;
+                }
+            }
+        }
+        Ok(TokenPairs { tokens, channels, kk, values, indices })
+    }
+
+    /// Densify back to `[tokens x channels]`.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.tokens * self.channels];
+        for t in 0..self.tokens {
+            for j in 0..self.kk {
+                let v = self.values[t * self.kk + j];
+                if v != 0.0 {
+                    out[t * self.channels + self.indices[t * self.kk + j] as usize] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Convert a bitmap-format matrix into the pairs view.
+    pub fn from_bitmap(m: &BitmapMatrix, kk: usize) -> Result<TokenPairs> {
+        Self::from_dense(&m.decompress(), m.tokens, m.channels, kk)
+    }
+
+    /// Convert to the bitmap format with the given packing axis (tokens
+    /// must satisfy the axis' granularity requirement).
+    pub fn to_bitmap(&self, axis: PackAxis) -> Result<BitmapMatrix> {
+        BitmapMatrix::compress(&self.to_dense(), self.tokens, self.channels, axis)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prune::per_token_magnitude;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn roundtrip_with_pruned_matrix() {
+        let mut rng = Pcg32::seeded(77);
+        let (t, d, kk) = (128, 64, 20);
+        let dense: Vec<f32> = (0..t * d).map(|_| rng.normal_f32()).collect();
+        let pruned = per_token_magnitude(&dense, t, d, kk);
+        let pairs = TokenPairs::from_dense(&pruned, t, d, kk).unwrap();
+        assert_eq!(pairs.to_dense(), pruned);
+
+        // bitmap <-> pairs equivalence
+        let bm = pairs.to_bitmap(PackAxis::Token).unwrap();
+        let pairs2 = TokenPairs::from_bitmap(&bm, kk).unwrap();
+        assert_eq!(pairs, pairs2);
+    }
+
+    #[test]
+    fn rejects_overfull_rows() {
+        let dense = vec![1.0f32; 2 * 8]; // every element non-zero
+        assert!(TokenPairs::from_dense(&dense, 2, 8, 4).is_err());
+    }
+
+    #[test]
+    fn indices_ascending() {
+        let mut rng = Pcg32::seeded(5);
+        let (t, d, kk) = (64, 64, 16);
+        let dense: Vec<f32> = (0..t * d).map(|_| rng.normal_f32()).collect();
+        let pruned = per_token_magnitude(&dense, t, d, kk);
+        let pairs = TokenPairs::from_dense(&pruned, t, d, kk).unwrap();
+        for tt in 0..t {
+            let idx = &pairs.indices[tt * kk..(tt + 1) * kk];
+            for w in idx.windows(2) {
+                assert!(w[0] < w[1], "indices not ascending: {idx:?}");
+            }
+        }
+    }
+}

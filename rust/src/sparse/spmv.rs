@@ -1,0 +1,238 @@
+//! SpMV over the bitmap format — the Mustafar attention hot path.
+//!
+//! Two flavors mirror the two decode-phase MVs (Fig 5a):
+//!   * `spmv_key`:  scores[t] = Σ_c K[t,c]·q[c]   (Key × Queryᵀ)
+//!   * `spmv_value`: out[c]   = Σ_t α[t]·V[t,c]   (AttentionScore × Value)
+//!
+//! Both follow the paper's *load-as-compressed, compute-as-dense* paradigm:
+//! the packed value stream is walked sequentially (that is the bandwidth
+//! win — only compressed bytes are touched), with the bitmap steering
+//! accumulation into the right output lane.
+//!
+//! Dense reference MVs (`dense_key`, `dense_value`) play the cuBLAS-
+//! baseline role of Fig 6a.
+
+use super::bitmap::{BitmapMatrix, PackAxis, TILE};
+
+// §Perf note: a byte-LUT decode (table of set-bit positions per byte) was
+// tried and REGRESSED ~4x vs the tzcnt bit-walk on this CPU (indirect
+// table loads + data-dependent inner loops beat by hardware tzcnt);
+// recorded in EXPERIMENTS.md §Perf iteration log.
+
+/// scores[t] = Σ_c K[t,c]·q[c] for a Key cache packed along `PackAxis::Token`.
+///
+/// `scores` must have length `k.tokens` and is *accumulated into* (callers
+/// zero it or seed it with the local-window contribution separately).
+pub fn spmv_key(k: &BitmapMatrix, q: &[f32], scores: &mut [f32]) {
+    assert_eq!(k.axis, PackAxis::Token, "key cache must be token-packed");
+    assert_eq!(q.len(), k.channels);
+    assert_eq!(scores.len(), k.tokens);
+
+    let d = k.channels;
+    let values = &k.values[..];
+    // Tile order: token-group-major, channel-minor (layout in bitmap.rs).
+    // All tiles of group g write into scores[g*64 .. g*64+64].
+    for g in 0..k.tokens / TILE {
+        let out = &mut scores[g * TILE..(g + 1) * TILE];
+        let tile_base = g * d;
+        for c in 0..d {
+            let ti = tile_base + c;
+            let bits = k.bitmaps[ti];
+            if bits == 0 {
+                continue;
+            }
+            let qc = q[c];
+            let mut off = k.offsets[ti] as usize;
+            if bits == u64::MAX {
+                // dense tile fast path: straight vectorizable loop
+                for (o, &v) in out.iter_mut().zip(&values[off..off + TILE]) {
+                    *o += v * qc;
+                }
+                continue;
+            }
+            // bit-walk decode (tzcnt); bounds hoisted — `validate()`
+            // guarantees offsets stay within `values`.
+            let mut bits = bits;
+            unsafe {
+                while bits != 0 {
+                    let b = bits.trailing_zeros() as usize;
+                    *out.get_unchecked_mut(b) += values.get_unchecked(off) * qc;
+                    off += 1;
+                    bits &= bits - 1;
+                }
+            }
+        }
+    }
+}
+
+/// out[c] = Σ_t α[t]·V[t,c] for a Value cache packed along `PackAxis::Channel`.
+///
+/// `out` must have length `v.channels` and is accumulated into.
+pub fn spmv_value(v: &BitmapMatrix, att: &[f32], out: &mut [f32]) {
+    assert_eq!(v.axis, PackAxis::Channel, "value cache must be channel-packed");
+    assert_eq!(att.len(), v.tokens);
+    assert_eq!(out.len(), v.channels);
+
+    let cblocks = v.channels / TILE;
+    let values = &v.values[..];
+    for t in 0..v.tokens {
+        let at = att[t];
+        if at == 0.0 {
+            continue;
+        }
+        for cb in 0..cblocks {
+            let ti = t * cblocks + cb;
+            let bits = v.bitmaps[ti];
+            if bits == 0 {
+                continue;
+            }
+            let mut off = v.offsets[ti] as usize;
+            let out_block = &mut out[cb * TILE..(cb + 1) * TILE];
+            if bits == u64::MAX {
+                for (o, &x) in out_block.iter_mut().zip(&values[off..off + TILE]) {
+                    *o += x * at;
+                }
+                continue;
+            }
+            // expand-then-FMA ("compute-as-dense", Fig 8): scatter the
+            // compressed tile into a stack buffer with plain stores, then
+            // one vectorizable 64-wide FMA — breaks the load-add-store
+            // dependency chain of a scattered accumulate.
+            let mut buf = [0.0f32; TILE];
+            let mut bits = bits;
+            unsafe {
+                while bits != 0 {
+                    let b = bits.trailing_zeros() as usize;
+                    *buf.get_unchecked_mut(b) = *values.get_unchecked(off);
+                    off += 1;
+                    bits &= bits - 1;
+                }
+            }
+            for (o, &x) in out_block.iter_mut().zip(buf.iter()) {
+                *o += x * at;
+            }
+        }
+    }
+}
+
+/// Dense MV baseline: scores[t] = Σ_c K[t,c]·q[c] (row-major K [T x D]).
+pub fn dense_key(k: &[f32], tokens: usize, channels: usize, q: &[f32], scores: &mut [f32]) {
+    assert_eq!(k.len(), tokens * channels);
+    assert_eq!(q.len(), channels);
+    assert_eq!(scores.len(), tokens);
+    for t in 0..tokens {
+        let row = &k[t * channels..(t + 1) * channels];
+        let mut acc = 0.0f32;
+        // 4-lane unrolled dot product
+        let mut c = 0;
+        let lim = channels & !3;
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        while c < lim {
+            a0 += row[c] * q[c];
+            a1 += row[c + 1] * q[c + 1];
+            a2 += row[c + 2] * q[c + 2];
+            a3 += row[c + 3] * q[c + 3];
+            c += 4;
+        }
+        while c < channels {
+            acc += row[c] * q[c];
+            c += 1;
+        }
+        scores[t] += acc + a0 + a1 + a2 + a3;
+    }
+}
+
+/// Dense MV baseline: out[c] = Σ_t α[t]·V[t,c] (row-major V [T x D]).
+pub fn dense_value(v: &[f32], tokens: usize, channels: usize, att: &[f32], out: &mut [f32]) {
+    assert_eq!(v.len(), tokens * channels);
+    assert_eq!(att.len(), tokens);
+    assert_eq!(out.len(), channels);
+    for t in 0..tokens {
+        let at = att[t];
+        if at == 0.0 {
+            continue;
+        }
+        let row = &v[t * channels..(t + 1) * channels];
+        for c in 0..channels {
+            out[c] += at * row[c];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_pruned(tokens: usize, channels: usize, keep: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..tokens * channels)
+            .map(|_| if rng.unit_f32() < keep { rng.normal_f32() } else { 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn spmv_key_matches_dense() {
+        for seed in 0..10 {
+            let mut rng = Pcg32::seeded(seed + 500);
+            let t = TILE * (1 + rng.below(4) as usize);
+            let d = [16, 64, 128][rng.below(3) as usize];
+            let dense = random_pruned(t, d, 0.3 + 0.5 * rng.unit_f32(), seed);
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+
+            let m = BitmapMatrix::compress(&dense, t, d, PackAxis::Token).unwrap();
+            let mut got = vec![0.0f32; t];
+            spmv_key(&m, &q, &mut got);
+
+            let mut want = vec![0.0f32; t];
+            dense_key(&dense, t, d, &q, &mut want);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "seed {seed}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_value_matches_dense() {
+        for seed in 0..10 {
+            let mut rng = Pcg32::seeded(seed + 900);
+            let t = 1 + rng.below(300) as usize;
+            let d = TILE * (1 + rng.below(2) as usize);
+            let dense = random_pruned(t, d, 0.3 + 0.5 * rng.unit_f32(), seed);
+            let att: Vec<f32> = (0..t).map(|_| rng.unit_f32()).collect();
+
+            let m = BitmapMatrix::compress(&dense, t, d, PackAxis::Channel).unwrap();
+            let mut got = vec![0.0f32; d];
+            spmv_value(&m, &att, &mut got);
+
+            let mut want = vec![0.0f32; d];
+            dense_value(&dense, t, d, &att, &mut want);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3, "seed {seed}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_accumulates() {
+        let d = 64;
+        let dense = random_pruned(TILE, d, 0.5, 1);
+        let m = BitmapMatrix::compress(&dense, TILE, d, PackAxis::Token).unwrap();
+        let q = vec![1.0f32; d];
+        let mut scores = vec![10.0f32; TILE];
+        spmv_key(&m, &q, &mut scores);
+        let mut base = vec![0.0f32; TILE];
+        spmv_key(&m, &q, &mut base);
+        for (s, b) in scores.iter().zip(&base) {
+            assert!((s - (b + 10.0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn empty_bitmap_is_noop() {
+        let m = BitmapMatrix::compress(&vec![0.0; TILE * 8], TILE, 8, PackAxis::Token).unwrap();
+        let mut scores = vec![0.0f32; TILE];
+        spmv_key(&m, &[1.0; 8], &mut scores);
+        assert!(scores.iter().all(|&x| x == 0.0));
+    }
+}

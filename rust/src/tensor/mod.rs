@@ -1,0 +1,175 @@
+//! Minimal host tensor: row-major f32 with shape metadata.
+//!
+//! Deliberately small — the heavy math lives in `attention`, `model`, and
+//! the XLA runtime; this type carries data between them.
+
+use crate::error::{Error, Result};
+
+/// Row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elems, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn filled(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    /// Random-normal tensor (deterministic; used for synthetic workloads).
+    pub fn randn(shape: Vec<usize>, rng: &mut crate::util::Pcg32) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal_f32()).collect();
+        Tensor { shape, data }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows / row width for a 2-D tensor.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        if self.shape.len() != 2 {
+            return Err(Error::Shape(format!("expected 2-D, got {:?}", self.shape)));
+        }
+        Ok((self.shape[0], self.shape[1]))
+    }
+
+    /// Borrow row `r` of a 2-D tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        let (n, d) = self.dims2().expect("row() on non-2D tensor");
+        assert!(r < n, "row {r} out of {n}");
+        &self.data[r * d..(r + 1) * d]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let (n, d) = self.dims2().expect("row_mut() on non-2D tensor");
+        assert!(r < n, "row {r} out of {n}");
+        &mut self.data[r * d..(r + 1) * d]
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "reshape {:?} -> {:?} mismatch",
+                self.shape, shape
+            )));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Max |a - b| across two same-shaped tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// f32 -> bf16 -> f32 round-trip (truncation with round-to-nearest-even),
+/// used to model the 2-byte storage the paper's format assumes.
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7fff + lsb) & 0xffff_0000;
+    f32::from_bits(rounded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_rows() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert!(Tensor::new(vec![2, 2], vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let t = Tensor::zeros(vec![4, 2]);
+        let t = t.reshape(vec![2, 4]).unwrap();
+        assert_eq!(t.shape(), &[2, 4]);
+        assert!(Tensor::zeros(vec![4]).reshape(vec![5]).is_err());
+    }
+
+    #[test]
+    fn bf16_roundtrip_error_small() {
+        for &x in &[0.0f32, 1.0, -1.0, 3.14159, 1e-3, 123.456, -0.25] {
+            let r = bf16_round(x);
+            if x != 0.0 {
+                assert!(((r - x) / x).abs() < 0.01, "{x} -> {r}");
+            } else {
+                assert_eq!(r, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_exact_for_representable() {
+        // powers of two are exactly representable in bf16
+        for &x in &[0.5f32, 2.0, 4.0, -8.0] {
+            assert_eq!(bf16_round(x), x);
+        }
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = crate::util::Pcg32::seeded(5);
+        let mut r2 = crate::util::Pcg32::seeded(5);
+        assert_eq!(Tensor::randn(vec![8], &mut r1), Tensor::randn(vec![8], &mut r2));
+    }
+}

@@ -1,0 +1,110 @@
+//! Shared utilities: deterministic RNG (python-mirrored), statistics,
+//! timing, and a minimal logger.
+
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg32;
+pub use stats::Summary;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch with ms/us readouts.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+/// Log level for the tiny env-controlled logger (`MUSTAFAR_LOG=debug`).
+#[derive(Clone, Copy, PartialEq, PartialOrd)]
+pub enum Level {
+    Error = 0,
+    Info = 1,
+    Debug = 2,
+}
+
+pub fn log_level() -> Level {
+    match std::env::var("MUSTAFAR_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("error") => Level::Error,
+        _ => Level::Info,
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= $crate::util::Level::Info {
+            eprintln!("[info] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= $crate::util::Level::Debug {
+            eprintln!("[debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// Worker thread count: `MUSTAFAR_THREADS` env override, else the
+/// machine's available parallelism.
+pub fn threads() -> usize {
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("MUSTAFAR_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            })
+    })
+}
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// Integer ceil-div.
+#[inline]
+pub fn ceil_div(x: usize, m: usize) -> usize {
+    x.div_ceil(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounding() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(ceil_div(9, 8), 2);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(sw.elapsed_ms() >= 1.0);
+    }
+}

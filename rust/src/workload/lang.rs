@@ -1,0 +1,373 @@
+//! Synthetic language — token-for-token mirror of
+//! `python/compile/data.py`. The evaluation models are trained (in JAX)
+//! on exactly this stream; the Rust side regenerates it for serving
+//! workloads and builds the LongBench-sim tasks from the same segment
+//! vocabulary. Locked against drift by `tests/lang_golden.rs` (rust) and
+//! `python/tests/test_lang_golden.py` (python) over a shared golden file.
+
+use crate::util::Pcg32;
+
+// -- vocabulary layout (mirror of data.py) ---------------------------------
+
+pub const PAD: u16 = 0;
+pub const BOS: u16 = 1;
+pub const EOS: u16 = 2;
+pub const SEP: u16 = 3;
+pub const KEY: u16 = 4;
+pub const VAL: u16 = 5;
+pub const QUERY: u16 = 6;
+pub const ANS: u16 = 7;
+pub const DOC: u16 = 8;
+pub const ENDDOC: u16 = 9;
+pub const SUM: u16 = 10;
+pub const MAP: u16 = 11;
+pub const ARROW: u16 = 12;
+pub const CNT: u16 = 13;
+pub const ITEM: u16 = 14;
+pub const RECAP: u16 = 15;
+
+pub const NAME0: u16 = 16;
+pub const N_NAMES: u16 = 128;
+pub const VAL0: u16 = 144;
+pub const N_VALS: u16 = 128;
+pub const WORD0: u16 = 272;
+pub const N_WORDS: u16 = 192;
+pub const CODE0: u16 = 464;
+pub const OPEN_PAREN: u16 = 464;
+pub const CLOSE_PAREN: u16 = 465;
+pub const OPEN_BRACK: u16 = 466;
+pub const CLOSE_BRACK: u16 = 467;
+pub const OPEN_BRACE: u16 = 468;
+pub const CLOSE_BRACE: u16 = 469;
+pub const IDENT0: u16 = 470;
+pub const N_IDENTS: u16 = 42;
+pub const VOCAB: usize = 512;
+
+pub const OPENERS: [u16; 3] = [OPEN_PAREN, OPEN_BRACK, OPEN_BRACE];
+pub const CLOSERS: [u16; 3] = [CLOSE_PAREN, CLOSE_BRACK, CLOSE_BRACE];
+
+/// rng helpers matching the python draw order exactly.
+pub trait LangRng {
+    fn name(&mut self) -> u16;
+    fn value(&mut self) -> u16;
+    fn word(&mut self) -> u16;
+}
+
+impl LangRng for Pcg32 {
+    fn name(&mut self) -> u16 {
+        NAME0 + self.below(N_NAMES as u32) as u16
+    }
+    fn value(&mut self) -> u16 {
+        VAL0 + self.below(N_VALS as u32) as u16
+    }
+    fn word(&mut self) -> u16 {
+        WORD0 + self.below(N_WORDS as u32) as u16
+    }
+}
+
+pub fn is_name(tok: u16) -> bool {
+    (NAME0..NAME0 + N_NAMES).contains(&tok)
+}
+
+pub fn is_value(tok: u16) -> bool {
+    (VAL0..VAL0 + N_VALS).contains(&tok)
+}
+
+// -- segment generators (draw order is the spec) ----------------------------
+
+/// `[KEY name val SEP]*n` then two queries over the stated pairs.
+/// Values directly follow names (adjacency): retrieval is the canonical
+/// induction-head task, learnable within a CPU token budget.
+pub fn seg_kv_facts(rng: &mut Pcg32) -> Vec<u16> {
+    let n = 4 + rng.below(5) as usize;
+    let mut names: Vec<u16> = Vec::with_capacity(n);
+    let mut vals: Vec<u16> = Vec::with_capacity(n);
+    let mut out = Vec::new();
+    for _ in 0..n {
+        let mut nm = rng.name();
+        while names.contains(&nm) {
+            nm = rng.name();
+        }
+        let v = rng.value();
+        names.push(nm);
+        vals.push(v);
+        out.extend_from_slice(&[KEY, nm, v, SEP]);
+    }
+    for _ in 0..2 {
+        let i = rng.below(n as u32) as usize;
+        out.extend_from_slice(&[QUERY, names[i], vals[i], SEP]);
+    }
+    out
+}
+
+/// Documents holding ARROW facts, then queries across documents.
+pub fn seg_doc_facts(rng: &mut Pcg32) -> Vec<u16> {
+    let ndocs = 2 + rng.below(3) as usize;
+    let mut names: Vec<u16> = Vec::new();
+    let mut vals: Vec<u16> = Vec::new();
+    let mut out = Vec::new();
+    for _ in 0..ndocs {
+        let doc_name = rng.name();
+        out.extend_from_slice(&[DOC, doc_name]);
+        for _ in 0..2 {
+            let mut nm = rng.name();
+            while names.contains(&nm) {
+                nm = rng.name();
+            }
+            let v = rng.value();
+            names.push(nm);
+            vals.push(v);
+            out.extend_from_slice(&[ARROW, nm, v, SEP]);
+        }
+        out.push(ENDDOC);
+    }
+    for _ in 0..2 {
+        let i = rng.below(names.len() as u32) as usize;
+        out.extend_from_slice(&[QUERY, names[i], vals[i], SEP]);
+    }
+    out
+}
+
+/// `[SUM] w1..wm [RECAP] w1..w8` — long-range copy/summary.
+pub fn seg_recap(rng: &mut Pcg32) -> Vec<u16> {
+    let m = 12 + rng.below(9) as usize;
+    let words: Vec<u16> = (0..m).map(|_| rng.word()).collect();
+    let mut out = vec![SUM];
+    out.extend_from_slice(&words);
+    out.push(RECAP);
+    out.extend_from_slice(&words[..8]);
+    out.push(SEP);
+    out
+}
+
+/// In-context mapping f(name_i) = val_{(i+offset) mod N}.
+pub fn fewshot_map(name_tok: u16, offset: u16) -> u16 {
+    VAL0 + ((name_tok - NAME0) + offset) % N_VALS
+}
+
+pub fn seg_fewshot(rng: &mut Pcg32) -> Vec<u16> {
+    let offset = 1 + rng.below(31) as u16;
+    let k = 3 + rng.below(3) as usize;
+    let mut out = Vec::new();
+    let mut seen: Vec<u16> = Vec::new();
+    for _ in 0..k {
+        let mut nm = rng.name();
+        while seen.contains(&nm) {
+            nm = rng.name();
+        }
+        seen.push(nm);
+        out.extend_from_slice(&[MAP, nm, fewshot_map(nm, offset), SEP]);
+    }
+    let mut nm = rng.name();
+    while seen.contains(&nm) {
+        nm = rng.name();
+    }
+    out.extend_from_slice(&[QUERY, nm, fewshot_map(nm, offset), SEP]);
+    out
+}
+
+/// ITEM x repeated k times, then `CNT x ANS <k>`.
+pub fn seg_count(rng: &mut Pcg32) -> Vec<u16> {
+    let k = 2 + rng.below(9) as usize;
+    let item = rng.name();
+    let mut out = Vec::new();
+    for _ in 0..k {
+        out.extend_from_slice(&[ITEM, item]);
+    }
+    out.extend_from_slice(&[CNT, item, ANS, VAL0 + k as u16, SEP]);
+    out
+}
+
+/// Balanced bracket sequence with identifiers, closed in order at the end.
+pub fn seg_code(rng: &mut Pcg32) -> Vec<u16> {
+    let mut out = Vec::new();
+    let mut stack: Vec<u16> = Vec::new();
+    let steps = 10 + rng.below(13) as usize;
+    for _ in 0..steps {
+        let r = rng.below(4);
+        if r == 0 && stack.len() < 6 {
+            let b = rng.below(3) as usize;
+            out.push(OPENERS[b]);
+            stack.push(CLOSERS[b]);
+        } else if r == 1 && !stack.is_empty() {
+            out.push(stack.pop().unwrap());
+        } else {
+            out.push(IDENT0 + rng.below(N_IDENTS as u32) as u16);
+        }
+    }
+    while let Some(c) = stack.pop() {
+        out.push(c);
+    }
+    out.push(SEP);
+    out
+}
+
+/// Deterministic bigram chain over filler words.
+pub fn seg_filler(rng: &mut Pcg32) -> Vec<u16> {
+    let m = 8 + rng.below(17) as usize;
+    let mut cur = rng.below(N_WORDS as u32) as u16;
+    let mut out = vec![WORD0 + cur];
+    for _ in 0..m - 1 {
+        cur = ((cur as u32 * 17 + 7 + rng.below(8)) % N_WORDS as u32) as u16;
+        out.push(WORD0 + cur);
+    }
+    out.push(SEP);
+    out
+}
+
+/// Segment mixture weights (out of 16) — mirror of data.py.
+pub const SEGMENT_WEIGHTS: [u32; 7] = [4, 3, 2, 2, 1, 2, 2];
+
+pub fn next_segment(rng: &mut Pcg32) -> Vec<u16> {
+    let total: u32 = SEGMENT_WEIGHTS.iter().sum();
+    let r = rng.below(total);
+    let mut acc = 0;
+    for (i, &w) in SEGMENT_WEIGHTS.iter().enumerate() {
+        acc += w;
+        if r < acc {
+            return match i {
+                0 => seg_kv_facts(rng),
+                1 => seg_doc_facts(rng),
+                2 => seg_recap(rng),
+                3 => seg_fewshot(rng),
+                4 => seg_count(rng),
+                5 => seg_code(rng),
+                _ => seg_filler(rng),
+            };
+        }
+    }
+    unreachable!()
+}
+
+/// Collect (name, value) facts stated anywhere in a token stream: any
+/// name token directly followed by a value token (the adjacency grammar
+/// of KEY/ARROW/MAP/QUERY statements). Later statements win. Mirror of
+/// data.py::scan_facts (python dict preserves insertion order).
+pub fn scan_facts(tokens: &[u16]) -> Vec<(u16, u16)> {
+    let mut order: Vec<u16> = Vec::new();
+    let mut map: std::collections::HashMap<u16, u16> = std::collections::HashMap::new();
+    for i in 0..tokens.len().saturating_sub(1) {
+        let (nm, v) = (tokens[i], tokens[i + 1]);
+        if is_name(nm) && is_value(v) {
+            if !map.contains_key(&nm) {
+                order.push(nm);
+            }
+            map.insert(nm, v);
+        }
+    }
+    order.into_iter().map(|n| (n, map[&n])).collect()
+}
+
+/// One training document: BOS + segments + long-range queries over facts
+/// stated anywhere in the document. Mirror of data.py::gen_document.
+pub fn gen_document(rng: &mut Pcg32, seq_len: usize) -> Vec<u16> {
+    let mut out = vec![BOS];
+    while out.len() < seq_len.saturating_sub(28) {
+        out.extend(next_segment(rng));
+    }
+    let facts = scan_facts(&out);
+    if !facts.is_empty() {
+        for _ in 0..3 {
+            let (name, val) = facts[rng.below(facts.len() as u32) as usize];
+            out.extend_from_slice(&[QUERY, name, val, SEP]);
+        }
+    }
+    while out.len() < seq_len {
+        out.extend(next_segment(rng));
+    }
+    out.truncate(seq_len);
+    out
+}
+
+/// Per-document rng seeding used by the training corpus
+/// (data.py::corpus_batches): document `i` of stream `seed`.
+pub fn doc_rng(seed: u64, doc_idx: u64) -> Pcg32 {
+    Pcg32::new(seed.wrapping_mul(1_000_003).wrapping_add(doc_idx), 54)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segments_are_deterministic() {
+        let a = seg_kv_facts(&mut Pcg32::seeded(1));
+        let b = seg_kv_facts(&mut Pcg32::seeded(1));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn kv_facts_shape() {
+        let toks = seg_kv_facts(&mut Pcg32::seeded(2));
+        assert_eq!(toks[0], KEY);
+        // n pairs of 4 + 2 queries of 4
+        assert_eq!(toks.len() % 4, 0);
+        let pairs = scan_facts(&toks);
+        assert!(pairs.len() >= 4);
+        // queries restate known facts (value adjacent to name)
+        let qpos: Vec<usize> = (0..toks.len()).filter(|&i| toks[i] == QUERY).collect();
+        assert_eq!(qpos.len(), 2);
+        for i in qpos {
+            let nm = toks[i + 1];
+            let ans = toks[i + 2];
+            assert_eq!(pairs.iter().find(|(n, _)| *n == nm).unwrap().1, ans);
+        }
+    }
+
+    #[test]
+    fn code_segment_balanced() {
+        for seed in 0..20 {
+            let toks = seg_code(&mut Pcg32::seeded(seed));
+            let mut stack = Vec::new();
+            for &t in &toks {
+                if OPENERS.contains(&t) {
+                    stack.push(t);
+                } else if let Some(pos) = CLOSERS.iter().position(|&c| c == t) {
+                    assert_eq!(stack.pop(), Some(OPENERS[pos]), "seed {seed}");
+                }
+            }
+            assert!(stack.is_empty(), "seed {seed}: unclosed brackets");
+        }
+    }
+
+    #[test]
+    fn fewshot_mapping_consistent() {
+        let toks = seg_fewshot(&mut Pcg32::seeded(3));
+        // every MAP fact and the query share one offset
+        let mut offsets = Vec::new();
+        for i in 0..toks.len() {
+            if toks[i] == MAP || toks[i] == QUERY {
+                let nm = toks[i + 1];
+                let v = toks[i + 2];
+                let off = (v - VAL0 + N_VALS - (nm - NAME0)) % N_VALS;
+                offsets.push(off);
+            }
+        }
+        assert!(offsets.len() >= 4);
+        assert!(offsets.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn document_has_longrange_queries() {
+        let doc = gen_document(&mut Pcg32::seeded(42), 512);
+        assert_eq!(doc.len(), 512);
+        assert_eq!(doc[0], BOS);
+        let nq = doc.iter().filter(|&&t| t == QUERY).count();
+        assert!(nq >= 3, "documents should contain queries, got {nq}");
+    }
+
+    #[test]
+    fn count_segment_counts() {
+        let toks = seg_count(&mut Pcg32::seeded(9));
+        let items = toks.iter().filter(|&&t| t == ITEM).count();
+        let cnt_pos = toks.iter().position(|&t| t == CNT).unwrap();
+        assert_eq!(toks[cnt_pos + 3], VAL0 + items as u16);
+    }
+
+    #[test]
+    fn scan_facts_recency_wins() {
+        let toks = vec![KEY, NAME0, VAL0, SEP, KEY, NAME0, VAL0 + 1, SEP];
+        let facts = scan_facts(&toks);
+        assert_eq!(facts, vec![(NAME0, VAL0 + 1)]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Serving/eval workloads: the synthetic language (python-mirrored), the
+//! LongBench-sim task suite, and request traces for throughput benches.
+
+pub mod lang;
+pub mod tasks;
+pub mod trace;
+
+pub use tasks::{Category, TaskSample, TaskSpec, TASKS};

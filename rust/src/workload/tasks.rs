@@ -1,0 +1,420 @@
+//! LongBench-sim: 16 synthetic long-context tasks in the paper's six
+//! LongBench categories (Table 4 column layout). Each task plants the
+//! answer-bearing tokens far from the query so that damaging distant KV
+//! entries damages the score — the mechanism KV-cache pruning quality is
+//! measured by. Substitution rationale: DESIGN.md §2.
+
+use super::lang::{self, LangRng};
+use crate::util::Pcg32;
+
+/// Task category, mirroring LongBench's six groups.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    SingleDoc,
+    MultiDoc,
+    Summarization,
+    FewShot,
+    Synthetic,
+    Code,
+}
+
+impl Category {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::SingleDoc => "SingleDoc QA",
+            Category::MultiDoc => "MultiDoc QA",
+            Category::Summarization => "Summarization",
+            Category::FewShot => "Few-shot",
+            Category::Synthetic => "Synthetic",
+            Category::Code => "Code",
+        }
+    }
+
+    pub fn all() -> [Category; 6] {
+        [
+            Category::SingleDoc,
+            Category::MultiDoc,
+            Category::Summarization,
+            Category::FewShot,
+            Category::Synthetic,
+            Category::Code,
+        ]
+    }
+}
+
+/// One evaluation sample. `context` already ends with the query tokens;
+/// the model must continue with `answer`.
+#[derive(Clone, Debug)]
+pub struct TaskSample {
+    pub context: Vec<u16>,
+    pub answer: Vec<u16>,
+    /// Teacher-forced scoring (per-position argmax accuracy) instead of
+    /// greedy generation + match.
+    pub forced: bool,
+    /// Number of trailing context tokens fed through *decode* steps
+    /// (teacher-forced) instead of prefill. Prefill is dense (as in the
+    /// paper — pruning happens after it), so the answer-predicting step
+    /// must be a decode over the pruned cache for pruning to matter.
+    pub query_len: usize,
+}
+
+/// Static description of one task.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskSpec {
+    pub id: &'static str,
+    pub category: Category,
+    /// The LongBench task this column stands in for.
+    pub paper_analog: &'static str,
+}
+
+/// The 16 tasks, in the paper's Table 4 column order.
+pub const TASKS: [TaskSpec; 16] = [
+    TaskSpec { id: "sqa-easy", category: Category::SingleDoc, paper_analog: "NrtvQA" },
+    TaskSpec { id: "sqa-med", category: Category::SingleDoc, paper_analog: "Qasper" },
+    TaskSpec { id: "sqa-hard", category: Category::SingleDoc, paper_analog: "MF-en" },
+    TaskSpec { id: "mqa-2doc", category: Category::MultiDoc, paper_analog: "HotpotQA" },
+    TaskSpec { id: "mqa-4doc", category: Category::MultiDoc, paper_analog: "2WikiMQA" },
+    TaskSpec { id: "mqa-8doc", category: Category::MultiDoc, paper_analog: "Musique" },
+    TaskSpec { id: "sum-recap8", category: Category::Summarization, paper_analog: "GovReport" },
+    TaskSpec { id: "sum-recap16", category: Category::Summarization, paper_analog: "QMSum" },
+    TaskSpec { id: "sum-far", category: Category::Summarization, paper_analog: "MultiNews" },
+    TaskSpec { id: "few-map", category: Category::FewShot, paper_analog: "TREC" },
+    TaskSpec { id: "few-map-long", category: Category::FewShot, paper_analog: "TriviaQA" },
+    TaskSpec { id: "few-count", category: Category::FewShot, paper_analog: "SAMSum" },
+    TaskSpec { id: "syn-count", category: Category::Synthetic, paper_analog: "PCount" },
+    TaskSpec { id: "syn-passkey", category: Category::Synthetic, paper_analog: "PRe" },
+    TaskSpec { id: "code-ident", category: Category::Code, paper_analog: "Lcc" },
+    TaskSpec { id: "code-balance", category: Category::Code, paper_analog: "RB-P" },
+];
+
+pub fn spec(id: &str) -> Option<&'static TaskSpec> {
+    TASKS.iter().find(|t| t.id == id)
+}
+
+fn task_seed(id: &str) -> u64 {
+    // FNV-1a over the task id, so each task has its own sample stream.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in id.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Deterministically generate sample `idx` of `task` with a target
+/// context length (the query tokens are included in the budget).
+pub fn generate(task: &str, idx: u64, ctx_len: usize) -> TaskSample {
+    let mut rng = Pcg32::new(task_seed(task).wrapping_add(idx), 54);
+    match task {
+        "sqa-easy" => single_doc(&mut rng, ctx_len, 4),
+        "sqa-med" => single_doc(&mut rng, ctx_len, 8),
+        "sqa-hard" => single_doc(&mut rng, ctx_len, 16),
+        "mqa-2doc" => multi_doc(&mut rng, ctx_len, 2),
+        "mqa-4doc" => multi_doc(&mut rng, ctx_len, 4),
+        "mqa-8doc" => multi_doc(&mut rng, ctx_len, 8),
+        "sum-recap8" => recap(&mut rng, ctx_len, 8, false),
+        "sum-recap16" => recap(&mut rng, ctx_len, 16, false),
+        "sum-far" => recap(&mut rng, ctx_len, 8, true),
+        "few-map" => few_map(&mut rng, ctx_len, 6),
+        "few-map-long" => few_map(&mut rng, ctx_len, 8),
+        "few-count" => spread_count(&mut rng, ctx_len, 1),
+        "syn-count" => spread_count(&mut rng, ctx_len, 2),
+        "syn-passkey" => passkey(&mut rng, ctx_len),
+        "code-ident" => code_ident(&mut rng, ctx_len),
+        "code-balance" => code_balance(&mut rng, ctx_len),
+        other => panic!("unknown task '{other}'"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// builders
+// ---------------------------------------------------------------------------
+
+/// Append filler word-chain tokens until `out` reaches `target` length.
+fn fill_to(rng: &mut Pcg32, out: &mut Vec<u16>, target: usize) {
+    while out.len() < target {
+        out.extend(lang::seg_filler(rng));
+    }
+    out.truncate(target);
+}
+
+/// Fresh names, distinct from each other and from `taken`.
+fn fresh_names(rng: &mut Pcg32, n: usize, taken: &[u16]) -> Vec<u16> {
+    let mut out: Vec<u16> = Vec::with_capacity(n);
+    while out.len() < n {
+        let nm = rng.name();
+        if !taken.contains(&nm) && !out.contains(&nm) {
+            out.push(nm);
+        }
+    }
+    out
+}
+
+/// Place `blocks` into a context of `body_len` tokens with filler between,
+/// block b at approximately `fracs[b]` of the body.
+fn weave(rng: &mut Pcg32, blocks: &[(f64, Vec<u16>)], body_len: usize) -> Vec<u16> {
+    let mut out = vec![lang::BOS];
+    let mut blocks: Vec<&(f64, Vec<u16>)> = blocks.iter().collect();
+    blocks.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for (frac, toks) in blocks {
+        let at = (((body_len as f64) * frac) as usize).max(out.len());
+        fill_to(rng, &mut out, at);
+        out.extend_from_slice(toks);
+    }
+    fill_to(rng, &mut out, body_len);
+    out
+}
+
+fn single_doc(rng: &mut Pcg32, ctx_len: usize, distractors: usize) -> TaskSample {
+    let names = fresh_names(rng, distractors + 1, &[]);
+    let gold_name = names[0];
+    let gold_val = rng.value();
+
+    let mut blocks: Vec<(f64, Vec<u16>)> = Vec::new();
+    let gold_frac = 0.08 + 0.55 * rng.unit_f32() as f64;
+    blocks.push((gold_frac, vec![lang::KEY, gold_name, gold_val, lang::SEP]));
+    for nm in &names[1..] {
+        let v = rng.value();
+        let frac = 0.05 + 0.85 * rng.unit_f32() as f64;
+        blocks.push((frac, vec![lang::KEY, *nm, v, lang::SEP]));
+    }
+
+    let mut context = weave(rng, &blocks, ctx_len - 2);
+    context.extend_from_slice(&[lang::QUERY, gold_name]);
+    TaskSample { context, answer: vec![gold_val], forced: false, query_len: 2 }
+}
+
+fn multi_doc(rng: &mut Pcg32, ctx_len: usize, ndocs: usize) -> TaskSample {
+    let facts_per_doc = 2usize;
+    let names = fresh_names(rng, ndocs * facts_per_doc, &[]);
+    let vals: Vec<u16> = (0..names.len()).map(|_| rng.value()).collect();
+    let gold = rng.below((names.len()) as u32) as usize;
+
+    let mut blocks: Vec<(f64, Vec<u16>)> = Vec::new();
+    for d in 0..ndocs {
+        let mut doc = vec![lang::DOC, rng.name()];
+        for f in 0..facts_per_doc {
+            let i = d * facts_per_doc + f;
+            doc.extend_from_slice(&[lang::ARROW, names[i], vals[i], lang::SEP]);
+        }
+        doc.push(lang::ENDDOC);
+        let frac = 0.05 + 0.8 * (d as f64 + rng.unit_f32() as f64 * 0.8) / ndocs as f64;
+        blocks.push((frac, doc));
+    }
+
+    let mut context = weave(rng, &blocks, ctx_len - 2);
+    context.extend_from_slice(&[lang::QUERY, names[gold]]);
+    TaskSample { context, answer: vec![vals[gold]], forced: false, query_len: 2 }
+}
+
+fn recap(rng: &mut Pcg32, ctx_len: usize, nback: usize, far: bool) -> TaskSample {
+    let m = 24;
+    let words: Vec<u16> = (0..m).map(|_| rng.word()).collect();
+    let mut seg = vec![lang::SUM];
+    seg.extend_from_slice(&words);
+    let frac = if far { 0.0 } else { 0.05 + 0.4 * rng.unit_f32() as f64 };
+
+    let mut context = weave(rng, &[(frac, seg)], ctx_len - 1);
+    context.push(lang::RECAP);
+    TaskSample { context, answer: words[..nback].to_vec(), forced: true, query_len: 1 }
+}
+
+fn few_map(rng: &mut Pcg32, ctx_len: usize, nshots: usize) -> TaskSample {
+    let offset = 1 + rng.below(31) as u16;
+    let names = fresh_names(rng, nshots + 1, &[]);
+
+    let mut blocks: Vec<(f64, Vec<u16>)> = Vec::new();
+    for (i, nm) in names[..nshots].iter().enumerate() {
+        let frac = 0.05 + 0.85 * (i as f64 + rng.unit_f32() as f64) / nshots as f64;
+        blocks.push((frac, vec![lang::MAP, *nm, lang::fewshot_map(*nm, offset), lang::SEP]));
+    }
+    let q = names[nshots];
+    let mut context = weave(rng, &blocks, ctx_len - 2);
+    context.extend_from_slice(&[lang::QUERY, q]);
+    TaskSample { context, answer: vec![lang::fewshot_map(q, offset)], forced: false, query_len: 2 }
+}
+
+fn spread_count(rng: &mut Pcg32, ctx_len: usize, ntypes: usize) -> TaskSample {
+    let items = fresh_names(rng, ntypes, &[]);
+    let counts: Vec<usize> = (0..ntypes).map(|_| 2 + rng.below(9) as usize).collect();
+    let ask = rng.below(ntypes as u32) as usize;
+
+    let mut blocks: Vec<(f64, Vec<u16>)> = Vec::new();
+    for (ty, &item) in items.iter().enumerate() {
+        for _ in 0..counts[ty] {
+            let frac = 0.05 + 0.85 * rng.unit_f32() as f64;
+            blocks.push((frac, vec![lang::ITEM, item]));
+        }
+    }
+    let mut context = weave(rng, &blocks, ctx_len - 3);
+    context.extend_from_slice(&[lang::CNT, items[ask], lang::ANS]);
+    TaskSample { context, answer: vec![lang::VAL0 + counts[ask] as u16], forced: false, query_len: 3 }
+}
+
+fn passkey(rng: &mut Pcg32, ctx_len: usize) -> TaskSample {
+    let nm = rng.name();
+    let v = rng.value();
+    let frac = 0.05 + 0.45 * rng.unit_f32() as f64;
+    let mut context = weave(
+        rng,
+        &[(frac, vec![lang::KEY, nm, v, lang::SEP])],
+        ctx_len - 2,
+    );
+    context.extend_from_slice(&[lang::QUERY, nm]);
+    TaskSample { context, answer: vec![v], forced: false, query_len: 2 }
+}
+
+fn code_ident(rng: &mut Pcg32, ctx_len: usize) -> TaskSample {
+    // A fixed 6-ident motif repeated throughout the context ("API usage
+    // pattern"); the model completes the final, truncated occurrence.
+    let motif: Vec<u16> = (0..6).map(|_| lang::IDENT0 + rng.below(lang::N_IDENTS as u32) as u16).collect();
+    let mut blocks: Vec<(f64, Vec<u16>)> = Vec::new();
+    for r in 0..4 {
+        let mut b = motif.clone();
+        b.push(lang::SEP);
+        let frac = 0.05 + 0.8 * (r as f64 + rng.unit_f32() as f64 * 0.6) / 4.0;
+        blocks.push((frac, b));
+    }
+    let cut = 3usize;
+    let mut context = weave(rng, &blocks, ctx_len - cut);
+    context.extend_from_slice(&motif[..cut]);
+    TaskSample { context, answer: motif[cut..].to_vec(), forced: true, query_len: 3 }
+}
+
+fn code_balance(rng: &mut Pcg32, ctx_len: usize) -> TaskSample {
+    // Long code region whose open brackets must be closed in order at the
+    // end — structural prediction over long range.
+    let mut stack: Vec<u16> = Vec::new();
+    let mut code: Vec<u16> = Vec::new();
+    let body = 80usize;
+    for i in 0..body {
+        let r = rng.below(4);
+        // keep a few brackets open near the end so the answer is non-empty
+        let want_open = stack.len() < 3 && i > body - 30;
+        if (r == 0 || want_open) && stack.len() < 6 {
+            let b = rng.below(3) as usize;
+            code.push(lang::OPENERS[b]);
+            stack.push(lang::CLOSERS[b]);
+        } else if r == 1 && stack.len() > 3 {
+            code.push(stack.pop().unwrap());
+        } else {
+            code.push(lang::IDENT0 + rng.below(lang::N_IDENTS as u32) as u16);
+        }
+    }
+    stack.reverse();
+    let answer = stack;
+
+    let mut context = vec![lang::BOS];
+    fill_to(rng, &mut context, ctx_len.saturating_sub(code.len()));
+    context.extend_from_slice(&code);
+    TaskSample { context, answer, forced: true, query_len: 8 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate() {
+        for t in TASKS.iter() {
+            for idx in 0..3 {
+                let s = generate(t.id, idx, 448);
+                assert!(!s.answer.is_empty(), "{} empty answer", t.id);
+                assert!(
+                    s.context.len() <= 448 + 8 && s.context.len() > 300,
+                    "{}: context len {}",
+                    t.id,
+                    s.context.len()
+                );
+                assert_eq!(s.context[0], lang::BOS, "{}", t.id);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        for t in TASKS.iter() {
+            let a = generate(t.id, 5, 448);
+            let b = generate(t.id, 5, 448);
+            assert_eq!(a.context, b.context);
+            assert_eq!(a.answer, b.answer);
+        }
+    }
+
+    #[test]
+    fn sqa_answer_is_planted() {
+        for idx in 0..10 {
+            let s = generate("sqa-hard", idx, 448);
+            let n = s.context.len();
+            let qname = s.context[n - 1];
+            // find KEY qname v in the context
+            let mut found = None;
+            for i in 0..n - 3 {
+                if s.context[i] == lang::KEY && s.context[i + 1] == qname {
+                    found = Some(s.context[i + 2]);
+                }
+            }
+            assert_eq!(found, Some(s.answer[0]), "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn gold_outside_local_window() {
+        // the answer-bearing tokens must sit outside the recent-32 window,
+        // otherwise pruning could never affect the task
+        for t in ["sqa-easy", "syn-passkey", "mqa-4doc"] {
+            for idx in 0..10 {
+                let s = generate(t, idx, 448);
+                let n = s.context.len();
+                let qname = s.context[n - 1];
+                let mut last_pos = 0;
+                for i in 0..n - 1 {
+                    if s.context[i] == qname {
+                        last_pos = last_pos.max(i);
+                    }
+                }
+                assert!(last_pos > 0, "{t}/{idx}: gold never planted");
+                assert!(
+                    n - last_pos > 32,
+                    "{t}/{idx}: gold at {last_pos} inside local window (n={n})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn count_tasks_answer_matches_occurrences() {
+        for idx in 0..10 {
+            let s = generate("few-count", idx, 448);
+            let item = s.context[s.context.len() - 2];
+            let occurrences = (0..s.context.len() - 3)
+                .filter(|&i| s.context[i] == lang::ITEM && s.context[i + 1] == item)
+                .count();
+            assert_eq!(s.answer[0], lang::VAL0 + occurrences as u16, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn code_balance_answer_closes_stack() {
+        for idx in 0..10 {
+            let s = generate("code-balance", idx, 448);
+            let mut stack = Vec::new();
+            for &t in &s.context {
+                if lang::OPENERS.contains(&t) {
+                    stack.push(t);
+                } else if let Some(p) = lang::CLOSERS.iter().position(|&c| c == t) {
+                    assert_eq!(stack.pop(), Some(lang::OPENERS[p]));
+                }
+            }
+            let want: Vec<u16> = stack
+                .iter()
+                .rev()
+                .map(|&o| {
+                    let p = lang::OPENERS.iter().position(|&x| x == o).unwrap();
+                    lang::CLOSERS[p]
+                })
+                .collect();
+            assert_eq!(s.answer, want, "idx {idx}");
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Engine + server integration over the real trained model (random
+//! weights fallback keeps the test meaningful without artifacts).
+
+use mustafar::config::{Backend, EngineConfig, ModelConfig, SparsityConfig};
+use mustafar::coordinator::{Engine, Request};
+use mustafar::model::{NativeModel, Weights};
+use mustafar::server;
+
+fn tiny_weights() -> Weights {
+    let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    Weights::load(dir, "tiny").unwrap_or_else(|_| {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 32,
+            ff: 128,
+            vocab: 512,
+            rope_theta: 10000.0,
+            max_seq: 256,
+            norm_eps: 1e-5,
+        };
+        Weights::random_for_tests(cfg, 1)
+    })
+}
+
+#[test]
+fn continuous_batching_interleaves_admissions() {
+    let mut ec = EngineConfig::default();
+    ec.backend = Backend::NativeSparse;
+    ec.sparsity = SparsityConfig::mustafar(0.5, 0.5);
+    ec.max_batch = 3;
+    let mut e = Engine::new_native(NativeModel::new(tiny_weights()), ec);
+    // 7 requests through a 3-wide batch: later requests must be admitted
+    // as earlier ones retire.
+    let reqs: Vec<Request> = (0..7)
+        .map(|i| Request::new(i, vec![16 + (i as u16 % 100); 80], 6))
+        .collect();
+    let out = e.run_trace(reqs).unwrap();
+    assert_eq!(out.len(), 7);
+    assert!(e.metrics.batch_sizes.iter().any(|&b| b == 3));
+    assert_eq!(e.metrics.generated_tokens, 7 * 6);
+}
+
+#[test]
+fn server_round_trip_over_tcp() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let mut ec = EngineConfig::default();
+    ec.backend = Backend::NativeDense;
+    ec.max_new_tokens = 4;
+    let engine = Engine::new_native(NativeModel::new(tiny_weights()), ec);
+
+    let addr = "127.0.0.1:17771";
+    std::thread::spawn(move || {
+        let _ = server::serve(engine, addr);
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    writeln!(stream, r#"{{"id": 42, "prompt": [1, 20, 30, 40], "max_new_tokens": 4}}"#).unwrap();
+    let mut line = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+    let v = mustafar::fmt::Json::parse(&line).unwrap();
+    assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 42);
+    assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+
+    // malformed request gets an error object, not a hang
+    writeln!(stream, "not json").unwrap();
+    line.clear();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    assert!(line.contains("error"));
+}

@@ -1,0 +1,67 @@
+//! Golden-file lock between the Rust and Python synthetic-language
+//! implementations. The golden file is produced by the python side
+//! (python/tests/golden_lang.json); if this test fails the two mirrors
+//! have drifted and the trained models no longer match the serving
+//! workloads.
+
+use mustafar::fmt::Json;
+use mustafar::util::Pcg32;
+use mustafar::workload::lang;
+
+fn golden() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/python/tests/golden_lang.json");
+    let text = std::fs::read_to_string(path).expect("golden_lang.json missing — run python goldens first");
+    Json::parse(&text).unwrap()
+}
+
+fn u16vec(v: &Json) -> Vec<u16> {
+    v.as_arr().unwrap().iter().map(|x| x.as_usize().unwrap() as u16).collect()
+}
+
+#[test]
+fn pcg32_stream_matches_python() {
+    let g = golden();
+    let want: Vec<u32> = g
+        .get("pcg32_42_54")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as u32)
+        .collect();
+    let mut rng = Pcg32::new(42, 54);
+    let got: Vec<u32> = (0..want.len()).map(|_| rng.next_u32()).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn documents_match_python() {
+    let g = golden();
+    let want = u16vec(g.get("doc_seed42_len256").unwrap());
+    let got = lang::gen_document(&mut Pcg32::new(42, 54), 256);
+    assert_eq!(got, want);
+
+    let want = u16vec(g.get("doc_seed7_len512").unwrap());
+    let got = lang::gen_document(&mut Pcg32::new(7, 54), 512);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn segments_match_python() {
+    let g = golden();
+    type SegFn = fn(&mut Pcg32) -> Vec<u16>;
+    let fns: [(&str, SegFn); 7] = [
+        ("seg0_seg_kv_facts_seed100", lang::seg_kv_facts),
+        ("seg1_seg_doc_facts_seed101", lang::seg_doc_facts),
+        ("seg2_seg_recap_seed102", lang::seg_recap),
+        ("seg3_seg_fewshot_seed103", lang::seg_fewshot),
+        ("seg4_seg_count_seed104", lang::seg_count),
+        ("seg5_seg_code_seed105", lang::seg_code),
+        ("seg6_seg_filler_seed106", lang::seg_filler),
+    ];
+    for (i, (key, f)) in fns.iter().enumerate() {
+        let want = u16vec(g.get(key).unwrap());
+        let got = f(&mut Pcg32::new(100 + i as u64, 54));
+        assert_eq!(&got, &want, "{key} drifted");
+    }
+}

@@ -1,0 +1,99 @@
+//! Cross-layer pipeline tests: trained weights + AOT artifacts + native
+//! model must agree. Skips gracefully when `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use mustafar::config::{Backend, EngineConfig, SparsityConfig};
+use mustafar::coordinator::pjrt_backend::PjrtBackend;
+use mustafar::coordinator::{Engine, Request};
+use mustafar::model::{NativeModel, Weights};
+use mustafar::util::Pcg32;
+use mustafar::workload::lang;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+fn have(name: &str) -> bool {
+    artifacts().join(format!("weights_{name}.json")).exists()
+        && artifacts().join("artifacts.json").exists()
+}
+
+#[test]
+fn native_vs_pjrt_dense_logits_agree() {
+    if !have("tiny") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let w = Weights::load(&artifacts(), "tiny").unwrap();
+    let model = NativeModel::new(w.clone());
+    let plen = w.cfg.max_seq / 2; // AOT prefill length
+    let prompt = lang::gen_document(&mut Pcg32::seeded(3), plen);
+
+    // native greedy tokens
+    let mut ec = EngineConfig::default();
+    ec.backend = Backend::NativeDense;
+    ec.max_new_tokens = 8;
+    let mut en = Engine::new_native(NativeModel::new(w.clone()), ec.clone());
+    let native = en.run_trace(vec![Request::new(0, prompt.clone(), 8)]).unwrap();
+
+    // pjrt-dense greedy tokens
+    let mut ec2 = EngineConfig::default();
+    ec2.backend = Backend::PjrtDense;
+    ec2.max_new_tokens = 8;
+    let pj = PjrtBackend::new(&artifacts(), &w, Backend::PjrtDense, SparsityConfig::dense())
+        .unwrap();
+    let mut ep = Engine::new_pjrt(model, ec2, pj);
+    let pjrt = ep.run_trace(vec![Request::new(0, prompt, 8)]).unwrap();
+
+    assert_eq!(
+        native[0].tokens, pjrt[0].tokens,
+        "greedy decode must agree across native and XLA backends"
+    );
+}
+
+#[test]
+fn pjrt_sparse_backend_runs_and_compresses() {
+    if !have("tiny") {
+        return;
+    }
+    let w = Weights::load(&artifacts(), "tiny").unwrap();
+    let plen = w.cfg.max_seq / 2;
+    let prompt = lang::gen_document(&mut Pcg32::seeded(5), plen);
+    let mut ec = EngineConfig::default();
+    ec.backend = Backend::PjrtSparse;
+    ec.sparsity = SparsityConfig::mustafar(0.7, 0.7);
+    ec.max_new_tokens = 6;
+    let pj = PjrtBackend::new(&artifacts(), &w, Backend::PjrtSparse, ec.sparsity).unwrap();
+    let mut e = Engine::new_pjrt(NativeModel::new(w), ec, pj);
+    let out = e.run_trace(vec![Request::new(0, prompt, 6)]).unwrap();
+    assert_eq!(out[0].tokens.len(), 6);
+    assert!(
+        out[0].kv_bytes < out[0].kv_dense_bytes,
+        "sparse pjrt path must report compressed KV"
+    );
+}
+
+#[test]
+fn native_sparse_70_mechanics_on_tiny() {
+    if !have("tiny") {
+        return;
+    }
+    let w = Weights::load(&artifacts(), "tiny").unwrap();
+    let prompt = lang::gen_document(&mut Pcg32::seeded(7), 200);
+    let gen = 12;
+    let mk = |backend, s, w: &Weights| {
+        let mut ec = EngineConfig::default();
+        ec.backend = backend;
+        ec.sparsity = SparsityConfig::mustafar(s, s);
+        ec.max_new_tokens = gen;
+        Engine::new_native(NativeModel::new(w.clone()), ec)
+    };
+    let a = mk(Backend::NativeDense, 0.0, &w)
+        .run_trace(vec![Request::new(0, prompt.clone(), gen)])
+        .unwrap();
+    let b = mk(Backend::NativeSparse, 0.7, &w)
+        .run_trace(vec![Request::new(0, prompt, gen)])
+        .unwrap();
+    assert_eq!(a[0].tokens.len(), b[0].tokens.len());
+}
