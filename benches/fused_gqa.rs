@@ -1,0 +1,124 @@
+//! Fused GQA decode benchmark: the multi-query sparse attention path
+//! (`decode_sparse_group`, one compressed-stream walk per KV head) vs
+//! the per-query-head path (`decode_sparse` called G times), across
+//! GQA group sizes and sparsity levels. Companion to `engine_micro`;
+//! results are recorded in EXPERIMENTS.md §Perf iteration log.
+
+use mustafar::attention::{decode_sparse, decode_sparse_group};
+use mustafar::bench::{bench, BenchOpts};
+use mustafar::config::{Backend, EngineConfig, SparsityConfig};
+use mustafar::coordinator::{Engine, Request};
+use mustafar::model::{NativeModel, Weights};
+use mustafar::sparse::{BitmapMatrix, PackAxis};
+use mustafar::util::Pcg32;
+
+fn random_pruned(t: usize, d: usize, keep: f32, rng: &mut Pcg32) -> Vec<f32> {
+    (0..t * d)
+        .map(|_| if rng.unit_f32() < keep { rng.normal_f32() } else { 0.0 })
+        .collect()
+}
+
+fn main() {
+    let opts = BenchOpts { warmup_iters: 3, iters: 30, min_time_s: 0.15 };
+    let hd = 128usize;
+    let t_comp = 1024usize;
+    let tail = 33usize;
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    println!("## fused GQA decode kernel (t_comp={t_comp}, tail={tail}, hd={hd})");
+    // "calls/s" = fused decode_sparse_group invocations per second; one
+    // generated token costs n_layers x n_kv_heads such calls plus matmuls.
+    println!(
+        "{:<10} {:>6} {:>14} {:>14} {:>9} {:>13}",
+        "sparsity", "group", "fused (us)", "per-head (us)", "speedup", "calls/s fused"
+    );
+
+    for &sparsity in &[0.5f32, 0.7] {
+        let mut rng = Pcg32::seeded((sparsity * 100.0) as u64);
+        let kd = random_pruned(t_comp, hd, 1.0 - sparsity, &mut rng);
+        let vd = random_pruned(t_comp, hd, 1.0 - sparsity, &mut rng);
+        let k_comp = BitmapMatrix::compress(&kd, t_comp, hd, PackAxis::Token).unwrap();
+        let v_comp = BitmapMatrix::compress(&vd, t_comp, hd, PackAxis::Channel).unwrap();
+        let tail_k: Vec<f32> = (0..tail * hd).map(|_| rng.normal_f32()).collect();
+        let tail_v: Vec<f32> = (0..tail * hd).map(|_| rng.normal_f32()).collect();
+
+        for &g in &[1usize, 4, 8] {
+            let qs: Vec<f32> = (0..g * hd).map(|_| rng.normal_f32()).collect();
+            let mut out = vec![0.0f32; g * hd];
+            let (mut sc, mut st) = (Vec::new(), Vec::new());
+
+            let fused = bench("fused", opts, || {
+                decode_sparse_group(
+                    &qs, g, &k_comp, &v_comp, &tail_k, &tail_v, tail, scale,
+                    &mut out, &mut sc, &mut st,
+                );
+                std::hint::black_box(&out);
+            });
+
+            let per_head = bench("per-head", opts, || {
+                for l in 0..g {
+                    decode_sparse(
+                        &qs[l * hd..(l + 1) * hd],
+                        &k_comp,
+                        &v_comp,
+                        &tail_k,
+                        &tail_v,
+                        tail,
+                        scale,
+                        &mut out[l * hd..(l + 1) * hd],
+                        None,
+                    );
+                }
+                std::hint::black_box(&out);
+            });
+
+            println!(
+                "{:<10} {:>6} {:>14.1} {:>14.1} {:>8.2}x {:>13.0}",
+                sparsity,
+                g,
+                fused.median_us(),
+                per_head.median_us(),
+                per_head.median_us() / fused.median_us(),
+                1e6 / fused.median_us()
+            );
+        }
+    }
+
+    // -- engine-level decode throughput (random weights, GQA model) ---------
+    // Absolute tok/s for the full fused decode round, to read next to the
+    // `engine_micro` numbers (which cover scheduler + KV manager cost).
+    let mcfg = mustafar::config::ModelConfig {
+        name: "bench-gqa".into(),
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 8,
+        n_kv_heads: 2,
+        head_dim: 64,
+        ff: 512,
+        vocab: 512,
+        rope_theta: 1e4,
+        max_seq: 1024,
+        norm_eps: 1e-5,
+    };
+    println!("\n## engine decode, fused GQA path (group=4, batch 4, in 448, gen 16)");
+    for (label, backend, ks) in [
+        ("native-dense", Backend::NativeDense, 0.0),
+        ("native-sparse 70%", Backend::NativeSparse, 0.7),
+    ] {
+        let w = Weights::random_for_tests(mcfg.clone(), 7);
+        let mut ec = EngineConfig::default();
+        ec.backend = backend;
+        ec.sparsity = SparsityConfig::mustafar(ks, ks);
+        ec.max_batch = 4;
+        ec.max_new_tokens = 16;
+        let mut e = Engine::new_native(NativeModel::new(w), ec);
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| {
+                let mut rng = Pcg32::seeded(100 + i);
+                Request::new(i, mustafar::workload::lang::gen_document(&mut rng, 448), 16)
+            })
+            .collect();
+        let _ = e.run_trace(reqs).unwrap();
+        println!("engine {label:<18}: {:>8.1} tok/s", e.metrics.tokens_per_sec());
+    }
+}

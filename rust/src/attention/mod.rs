@@ -3,20 +3,39 @@
 //! path (bitmap SpMV over the compressed region + dense MV over the local
 //! window, Fig 5a).
 
-use crate::sparse::{dense_key, dense_value, spmv_key, spmv_value, BitmapMatrix};
+use crate::sparse::{
+    dense_key, dense_key_multi, dense_value, dense_value_multi, spmv_key, spmv_key_multi,
+    spmv_value, spmv_value_multi, BitmapMatrix,
+};
 
 /// Precomputed RoPE table for one position: (cos, sin) of length hd/2.
 pub fn rope_cos_sin(pos: usize, head_dim: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
+    let mut cos = Vec::new();
+    let mut sin = Vec::new();
+    rope_cos_sin_into(pos, head_dim, theta, &mut cos, &mut sin);
+    (cos, sin)
+}
+
+/// Allocation-free variant of `rope_cos_sin`: fills caller-owned buffers
+/// (cleared and resized in place; no heap traffic once capacity exists).
+pub fn rope_cos_sin_into(
+    pos: usize,
+    head_dim: usize,
+    theta: f64,
+    cos: &mut Vec<f32>,
+    sin: &mut Vec<f32>,
+) {
     let half = head_dim / 2;
-    let mut cos = Vec::with_capacity(half);
-    let mut sin = Vec::with_capacity(half);
+    cos.clear();
+    sin.clear();
+    cos.reserve(half);
+    sin.reserve(half);
     for i in 0..half {
         let freq = theta.powf(-(i as f64) / half as f64);
         let ang = pos as f64 * freq;
         cos.push(ang.cos() as f32);
         sin.push(ang.sin() as f32);
     }
-    (cos, sin)
 }
 
 /// Apply RoPE in place (llama rotate-half convention, matching
@@ -139,6 +158,65 @@ pub fn decode_sparse(
         att.extend_from_slice(&s_comp);
         att.extend_from_slice(&s_tail);
     }
+}
+
+/// Fused GQA sparse decode attention for one KV head and its whole query
+/// group: `g` query lanes attend over the same compressed region + dense
+/// tail, with every compressed tile decoded exactly once (the multi-query
+/// kernels in `sparse::spmv`).
+///
+/// `qs` is `[g x hd]` flat; `out` is `[g x hd]` flat (overwritten).
+/// `s_comp`/`s_tail` are caller-owned score workspaces (`[g x nc]` and
+/// `[g x tail_len]` after the call) — reusing them across tokens keeps
+/// the decode hot path allocation-free.
+///
+/// Per lane, results are bit-exact against `decode_sparse`.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_sparse_group(
+    qs: &[f32],
+    g: usize,
+    k_comp: &BitmapMatrix,
+    v_comp: &BitmapMatrix,
+    tail_k: &[f32],
+    tail_v: &[f32],
+    tail_len: usize,
+    scale: f32,
+    out: &mut [f32],
+    s_comp: &mut Vec<f32>,
+    s_tail: &mut Vec<f32>,
+) {
+    assert!(g >= 1, "empty query group");
+    let hd = qs.len() / g;
+    debug_assert_eq!(qs.len(), g * hd);
+    debug_assert_eq!(out.len(), g * hd);
+    let nc = k_comp.tokens;
+    debug_assert_eq!(v_comp.tokens, nc);
+    debug_assert_eq!(tail_k.len(), tail_len * hd);
+
+    s_comp.clear();
+    s_comp.resize(g * nc, 0.0);
+    s_tail.clear();
+    s_tail.resize(g * tail_len, 0.0);
+
+    spmv_key_multi(k_comp, qs, g, s_comp);
+    dense_key_multi(tail_k, tail_len, hd, qs, g, s_tail);
+    for s in s_comp.iter_mut() {
+        *s *= scale;
+    }
+    for s in s_tail.iter_mut() {
+        *s *= scale;
+    }
+
+    for l in 0..g {
+        two_part_softmax(
+            &mut s_comp[l * nc..(l + 1) * nc],
+            &mut s_tail[l * tail_len..(l + 1) * tail_len],
+        );
+    }
+
+    out.iter_mut().for_each(|x| *x = 0.0);
+    spmv_value_multi(v_comp, s_comp, g, out);
+    dense_value_multi(tail_v, tail_len, hd, s_tail, g, out);
 }
 
 /// Full causal self-attention for prefill, one head.
@@ -296,6 +374,69 @@ mod tests {
 
         for (a, b) in out_sparse.iter().zip(&out_dense) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decode_sparse_group_bitexact_vs_per_head() {
+        // The fused GQA path must reproduce G independent single-lane
+        // decode_sparse calls bit-for-bit (the refactor invariant).
+        for seed in 0..8 {
+            let mut rng = Pcg32::seeded(seed + 700);
+            let g = [1, 2, 4, 8][rng.below(4) as usize];
+            let (t_comp, tail, hd) = (64 * (1 + rng.below(3) as usize), 1 + rng.below(40) as usize, 64);
+            let kk = 16 + rng.below(40) as usize;
+            let k = randv((t_comp + tail) * hd, &mut rng);
+            let v = randv((t_comp + tail) * hd, &mut rng);
+            let qs = randv(g * hd, &mut rng);
+            let scale = 1.0 / (hd as f32).sqrt();
+
+            let kp = per_token_magnitude(&k[..t_comp * hd], t_comp, hd, kk);
+            let vp = per_token_magnitude(&v[..t_comp * hd], t_comp, hd, kk);
+            let k_comp = BitmapMatrix::compress(&kp, t_comp, hd, PackAxis::Token).unwrap();
+            let v_comp = BitmapMatrix::compress(&vp, t_comp, hd, PackAxis::Channel).unwrap();
+            let (tail_k, tail_v) = (&k[t_comp * hd..], &v[t_comp * hd..]);
+
+            let mut fused = vec![0.0f32; g * hd];
+            let (mut sc, mut st) = (Vec::new(), Vec::new());
+            decode_sparse_group(
+                &qs, g, &k_comp, &v_comp, tail_k, tail_v, tail,
+                scale, &mut fused, &mut sc, &mut st,
+            );
+
+            for l in 0..g {
+                let mut lane = vec![0.0f32; hd];
+                decode_sparse(
+                    &qs[l * hd..(l + 1) * hd], &k_comp, &v_comp,
+                    tail_k, tail_v, tail, scale, &mut lane, None,
+                );
+                assert_eq!(&fused[l * hd..(l + 1) * hd], &lane[..], "seed {seed} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_sparse_group_empty_compressed_region() {
+        // Before any group has been compressed the whole history lives in
+        // the tail; the fused path must handle nc == 0.
+        let mut rng = Pcg32::seeded(31);
+        let (g, tail, hd) = (4, 12, 32);
+        let k = randv(tail * hd, &mut rng);
+        let v = randv(tail * hd, &mut rng);
+        let qs = randv(g * hd, &mut rng);
+        let k_comp = BitmapMatrix::empty(hd, PackAxis::Token);
+        let v_comp = BitmapMatrix::empty(hd, PackAxis::Channel);
+        let mut fused = vec![0.0f32; g * hd];
+        let (mut sc, mut st) = (Vec::new(), Vec::new());
+        decode_sparse_group(
+            &qs, g, &k_comp, &v_comp, &k, &v, tail, 0.2, &mut fused, &mut sc, &mut st,
+        );
+        for l in 0..g {
+            let mut lane = vec![0.0f32; hd];
+            decode_dense(&qs[l * hd..(l + 1) * hd], &k, &v, tail, 0.2, &mut lane);
+            for (a, b) in fused[l * hd..(l + 1) * hd].iter().zip(&lane) {
+                assert!((a - b).abs() < 1e-5, "lane {l}: {a} vs {b}");
+            }
         }
     }
 

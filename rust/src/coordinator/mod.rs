@@ -5,10 +5,12 @@
 pub mod engine;
 pub mod metrics;
 pub mod pjrt_backend;
+pub mod pool;
 pub mod request;
 pub mod scheduler;
 
 pub use engine::Engine;
 pub use metrics::Metrics;
+pub use pool::WorkerPool;
 pub use request::{Completion, FinishReason, Request};
 pub use scheduler::{estimate_seq_bytes, Scheduler};

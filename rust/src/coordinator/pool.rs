@@ -1,0 +1,185 @@
+//! Persistent decode worker pool.
+//!
+//! `Engine::decode_round` previously spawned a fresh `std::thread::scope`
+//! every round, paying thread creation + teardown for every generated
+//! token. Decode steps are short (especially for small batches and short
+//! contexts), so that fixed cost is a real fraction of the round. This
+//! pool keeps workers parked on a shared queue and re-dispatches borrowed
+//! closures each round, with a completion barrier standing in for the
+//! scope's implicit join.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+/// Panic payload carried back from a worker (`None` = job completed).
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
+/// Fixed-size pool of parked worker threads executing borrowed jobs with
+/// a scoped-join guarantee (`run_scoped` blocks until every submitted
+/// job has finished).
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    done_rx: Receiver<Option<PanicPayload>>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `size` parked workers (at least 1).
+    pub fn new(size: usize) -> WorkerPool {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (done_tx, done_rx) = channel::<Option<PanicPayload>>();
+        let handles = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let done = done_tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("decode-worker-{i}"))
+                    .spawn(move || loop {
+                        // hold the lock only while dequeueing
+                        let job = match rx.lock() {
+                            Ok(guard) => guard.recv(),
+                            Err(_) => break,
+                        };
+                        match job {
+                            Ok(job) => {
+                                // carry the payload back so run_scoped can
+                                // resume_unwind with the original message
+                                let payload = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                )
+                                .err();
+                                if done.send(payload).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn decode worker")
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), done_rx, handles, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Execute all jobs on the pool and block until every one completes.
+    ///
+    /// Jobs may borrow from the caller's stack: the completion barrier
+    /// below is what makes the lifetime extension sound, exactly like the
+    /// implicit join of `std::thread::scope`.
+    pub fn run_scoped<'s>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 's>>) {
+        let n = jobs.len();
+        for job in jobs {
+            // SAFETY: `Job` erases the `'s` lifetime. We do not return (or
+            // unwind) from this frame until all `n` jobs have signalled
+            // completion (panics inside a job are caught by the worker's
+            // `catch_unwind` and still signal), so every borrow captured
+            // by a job strictly outlives its execution. The two
+            // cannot-happen channel failures below therefore must ABORT,
+            // not unwind: unwinding past this point with jobs still
+            // queued/running would free borrowed stack data under them.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 's>, Job>(job)
+            };
+            let alive = self
+                .tx
+                .as_ref()
+                .map(|tx| tx.send(job).is_ok())
+                .unwrap_or(false);
+            if !alive {
+                eprintln!("fatal: decode worker pool unavailable mid-dispatch");
+                std::process::abort();
+            }
+        }
+        let mut first_panic: Option<PanicPayload> = None;
+        for _ in 0..n {
+            match self.done_rx.recv() {
+                Ok(payload) => {
+                    if first_panic.is_none() {
+                        first_panic = payload;
+                    }
+                }
+                Err(_) => {
+                    eprintln!("fatal: decode worker pool died mid-round");
+                    std::process::abort();
+                }
+            }
+        }
+        // All jobs have finished executing; unwinding is safe from here.
+        // Re-raise the first job panic with its original payload.
+        if let Some(payload) = first_panic {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // closing the queue wakes every worker out of recv()
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_borrowed_jobs_to_completion() {
+        let pool = WorkerPool::new(4);
+        let mut results = vec![0usize; 16];
+        for round in 0..3usize {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = results
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| {
+                    let job: Box<dyn FnOnce() + Send + '_> =
+                        Box::new(move || *slot = i * 10 + round);
+                    job
+                })
+                .collect();
+            pool.run_scoped(jobs);
+            for (i, r) in results.iter().enumerate() {
+                assert_eq!(*r, i * 10 + round);
+            }
+        }
+    }
+
+    #[test]
+    fn reuses_threads_across_rounds() {
+        let pool = WorkerPool::new(2);
+        let count = AtomicUsize::new(0);
+        for _ in 0..50 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|_| {
+                    let c = &count;
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    });
+                    job
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn empty_round_is_noop() {
+        let pool = WorkerPool::new(1);
+        pool.run_scoped(Vec::new());
+        assert_eq!(pool.size(), 1);
+    }
+}

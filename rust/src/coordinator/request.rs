@@ -55,6 +55,9 @@ pub(crate) struct ActiveSeq {
     pub queue_ms: f64,
     pub decode_start: Instant,
     pub state: crate::coordinator::engine::SeqState,
+    /// Per-sequence decode workspace: buffers persist across tokens so
+    /// the native decode hot path allocates nothing in steady state.
+    pub scratch: crate::model::DecodeScratch,
 }
 
 #[cfg(test)]

@@ -1,34 +1,50 @@
-//! Library-wide error type.
+//! Library-wide error type (hand-rolled Display — proc-macro derive
+//! crates are not in the offline vendor set).
 
-use thiserror::Error;
+use std::fmt;
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("json: {0}")]
     Json(String),
-
-    #[error("config: {0}")]
     Config(String),
-
-    #[error("shape: {0}")]
     Shape(String),
-
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla: {0}")]
+    Io(std::io::Error),
     Xla(String),
-
-    #[error("runtime: {0}")]
     Runtime(String),
-
-    #[error("engine: {0}")]
     Engine(String),
-
-    #[error("invalid argument: {0}")]
     Invalid(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Json(s) => write!(f, "json: {s}"),
+            Error::Config(s) => write!(f, "config: {s}"),
+            Error::Shape(s) => write!(f, "shape: {s}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Xla(s) => write!(f, "xla: {s}"),
+            Error::Runtime(s) => write!(f, "runtime: {s}"),
+            Error::Engine(s) => write!(f, "engine: {s}"),
+            Error::Invalid(s) => write!(f, "invalid argument: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

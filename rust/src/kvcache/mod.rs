@@ -60,15 +60,27 @@ impl KvPolicy {
     }
 }
 
+/// How many dead 64-token groups may accumulate ahead of the tail cursor
+/// before the buffers are compacted. Larger values amortize the memmove
+/// further at the cost of transient buffer growth: up to
+/// `TAIL_COMPACT_GROUPS * TILE * hd` dead floats in each of the k and v
+/// buffers per head.
+const TAIL_COMPACT_GROUPS: usize = 4;
+
 /// KV state of one (layer, kv-head).
 #[derive(Clone, Debug)]
 pub struct HeadKV {
     /// Compressed region: Key packed along tokens, Value along channels.
     pub k_comp: BitmapMatrix,
     pub v_comp: BitmapMatrix,
-    /// Dense tail `[tail_len x hd]`, row-major, post-RoPE keys.
-    pub tail_k: Vec<f32>,
-    pub tail_v: Vec<f32>,
+    /// Dense tail storage; the live window is `tail_k_buf[tail_start..]`,
+    /// `[tail_len x hd]` row-major, post-RoPE keys. Compressed-away
+    /// groups advance the cursor instead of memmoving the window every
+    /// group; the dead prefix is compacted lazily (`advance_tail`).
+    tail_k_buf: Vec<f32>,
+    tail_v_buf: Vec<f32>,
+    /// Element offset of the live tail within both buffers.
+    tail_start: usize,
 }
 
 impl HeadKV {
@@ -76,13 +88,48 @@ impl HeadKV {
         HeadKV {
             k_comp: BitmapMatrix::empty(hd, PackAxis::Token),
             v_comp: BitmapMatrix::empty(hd, PackAxis::Channel),
-            tail_k: Vec::new(),
-            tail_v: Vec::new(),
+            tail_k_buf: Vec::new(),
+            tail_v_buf: Vec::new(),
+            tail_start: 0,
         }
     }
 
+    /// Live dense-tail keys `[tail_len x hd]`.
+    #[inline]
+    pub fn tail_k(&self) -> &[f32] {
+        &self.tail_k_buf[self.tail_start..]
+    }
+
+    /// Live dense-tail values `[tail_len x hd]`.
+    #[inline]
+    pub fn tail_v(&self) -> &[f32] {
+        &self.tail_v_buf[self.tail_start..]
+    }
+
     pub fn tail_len(&self, hd: usize) -> usize {
-        self.tail_k.len() / hd
+        (self.tail_k_buf.len() - self.tail_start) / hd
+    }
+
+    fn push_tail(&mut self, k: &[f32], v: &[f32]) {
+        self.tail_k_buf.extend_from_slice(k);
+        self.tail_v_buf.extend_from_slice(v);
+    }
+
+    /// Consume `elems` elements (one compressed-away group) from the
+    /// front of the live tail. O(1) cursor bump; the buffers are
+    /// compacted only once `TAIL_COMPACT_GROUPS` dead groups have
+    /// accumulated, so the per-group memmove of the seed's
+    /// `Vec::drain` is amortized away.
+    fn advance_tail(&mut self, elems: usize) {
+        self.tail_start += elems;
+        if self.tail_start >= TAIL_COMPACT_GROUPS * elems {
+            let live = self.tail_k_buf.len() - self.tail_start;
+            self.tail_k_buf.copy_within(self.tail_start.., 0);
+            self.tail_k_buf.truncate(live);
+            self.tail_v_buf.copy_within(self.tail_start.., 0);
+            self.tail_v_buf.truncate(live);
+            self.tail_start = 0;
+        }
     }
 }
 
@@ -160,8 +207,7 @@ impl SequenceKV {
                 h.v_comp.append_groups(&vp, n_comp)?;
             }
             let h = &mut self.heads[idx];
-            h.tail_k.extend_from_slice(&k[n_comp * hd..]);
-            h.tail_v.extend_from_slice(&v[n_comp * hd..]);
+            h.push_tail(&k[n_comp * hd..], &v[n_comp * hd..]);
         }
         self.tokens = t;
         Ok(())
@@ -206,9 +252,7 @@ impl SequenceKV {
     /// (layer, kv) exactly once per generated token, then `commit_token`.
     pub fn append(&mut self, layer: usize, kv: usize, k: &[f32], v: &[f32]) {
         debug_assert_eq!(k.len(), self.hd);
-        let h = self.head_mut(layer, kv);
-        h.tail_k.extend_from_slice(k);
-        h.tail_v.extend_from_slice(v);
+        self.head_mut(layer, kv).push_tail(k, v);
     }
 
     /// Account the token appended to all heads and run the compression
@@ -227,28 +271,27 @@ impl SequenceKV {
             return Ok(());
         }
         let sp = self.policy.sparsity;
+        // Runtime path is magnitude-based (the paper's kernel method);
+        // output-aware scores are a prefill-time notion.
+        let kk_k = prune::keep_count(hd, sp.key_sparsity);
+        let kk_v = prune::keep_count(hd, sp.value_sparsity);
         for idx in 0..self.heads.len() {
-            let (kp, vp) = {
+            let (mut kp, mut vp) = {
                 let h = &self.heads[idx];
-                let kg = h.tail_k[..TILE * hd].to_vec();
-                let vg = h.tail_v[..TILE * hd].to_vec();
-                // Runtime path is magnitude-based (the paper's kernel
-                // method); output-aware scores are a prefill-time notion.
-                let kk_k = prune::keep_count(hd, sp.key_sparsity);
-                let kk_v = prune::keep_count(hd, sp.value_sparsity);
+                let kg = &h.tail_k()[..TILE * hd];
+                let vg = &h.tail_v()[..TILE * hd];
                 let kp = if sp.key_method == Method::None {
-                    kg
+                    kg.to_vec()
                 } else {
-                    prune::per_token_magnitude(&kg, TILE, hd, kk_k)
+                    prune::per_token_magnitude(kg, TILE, hd, kk_k)
                 };
                 let vp = if sp.value_method == Method::None {
-                    vg
+                    vg.to_vec()
                 } else {
-                    prune::per_token_magnitude(&vg, TILE, hd, kk_v)
+                    prune::per_token_magnitude(vg, TILE, hd, kk_v)
                 };
                 (kp, vp)
             };
-            let (mut kp, mut vp) = (kp, vp);
             if let Some(q) = self.policy.quant {
                 quant::kivi_fake_quant(&mut kp, TILE, hd, q.key_bits, quant::Axis::PerChannel, true);
                 quant::kivi_fake_quant(&mut vp, TILE, hd, q.value_bits, quant::Axis::PerToken, true);
@@ -256,8 +299,7 @@ impl SequenceKV {
             let h = &mut self.heads[idx];
             h.k_comp.append_groups(&kp, TILE)?;
             h.v_comp.append_groups(&vp, TILE)?;
-            h.tail_k.drain(..TILE * hd);
-            h.tail_v.drain(..TILE * hd);
+            h.advance_tail(TILE * hd);
         }
         Ok(())
     }
@@ -271,10 +313,9 @@ impl SequenceKV {
         let mut dense = 0usize;
         for h in &self.heads {
             comp += h.k_comp.compressed_bytes() + h.v_comp.compressed_bytes();
-            comp += (h.tail_k.len() + h.tail_v.len()) * crate::sparse::bitmap::VALUE_BYTES;
+            comp += (h.tail_k().len() + h.tail_v().len()) * crate::sparse::bitmap::VALUE_BYTES;
             dense += 2 * self.tokens * hd * crate::sparse::bitmap::VALUE_BYTES;
         }
-        let _ = hd;
         (comp, dense)
     }
 
@@ -346,6 +387,40 @@ mod tests {
         }
         let h = seq.head(0, 0);
         assert_eq!(h.k_comp.tokens, TILE); // exactly one group compressed
+    }
+
+    #[test]
+    fn lazy_tail_compaction_preserves_contents() {
+        // Drive enough tokens through the decode path to cross several
+        // compaction cycles; the live tail must always hold exactly the
+        // most recent `tail_len` rows, and the dead prefix stays bounded.
+        let hd = 16;
+        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.5, 0.5), 1, 1, hd);
+        let row = |i: usize, c: usize| (i * 31 + c) as f32 + 0.25;
+        for i in 0..1000 {
+            let k: Vec<f32> = (0..hd).map(|c| row(i, c)).collect();
+            let v: Vec<f32> = (0..hd).map(|c| -row(i, c)).collect();
+            seq.append(0, 0, &k, &v);
+            seq.commit_token().unwrap();
+
+            let h = seq.head(0, 0);
+            let tl = h.tail_len(hd);
+            assert_eq!(h.k_comp.tokens + tl, i + 1);
+            let tail = h.tail_k();
+            assert_eq!(tail.len(), tl * hd);
+            for r in 0..tl {
+                let tok = i + 1 - tl + r;
+                for c in 0..hd {
+                    assert_eq!(tail[r * hd + c], row(tok, c), "token {i} row {r} ch {c}");
+                }
+                assert_eq!(h.tail_v()[r * hd], -row(i + 1 - tl + r, 0));
+            }
+            // dead prefix bounded by the compaction threshold
+            assert!(
+                h.tail_k_buf.len() - h.tail_k().len() < TAIL_COMPACT_GROUPS * TILE * hd,
+                "dead prefix unbounded at token {i}"
+            );
+        }
     }
 
     #[test]

@@ -5,5 +5,5 @@ pub mod math;
 pub mod native;
 pub mod weights;
 
-pub use native::{argmax, NativeModel, PrefillResult};
+pub use native::{argmax, DecodeScratch, NativeModel, PrefillResult};
 pub use weights::Weights;

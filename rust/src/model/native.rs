@@ -29,6 +29,58 @@ pub struct PrefillResult {
     pub t: usize,
 }
 
+/// Reusable decode workspace: every temporary the single-token forward
+/// needs, owned by the caller (one per active sequence) so that
+/// steady-state decode performs no heap allocations. Buffers are sized
+/// lazily on first use and reused verbatim afterwards — `matmul` and
+/// `rmsnorm` fully overwrite their outputs, and the attention score
+/// lanes are cleared/resized in `decode_sparse_group`.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeScratch {
+    x: Vec<f32>,
+    hn: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    o: Vec<f32>,
+    attn_out: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    down: Vec<f32>,
+    last: Vec<f32>,
+    /// Logits of the decoded position `[vocab]` (the forward's output).
+    pub logits: Vec<f32>,
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    /// Multi-query attention score lanes over the compressed region.
+    s_comp: Vec<f32>,
+    /// Multi-query attention score lanes over the dense tail.
+    s_tail: Vec<f32>,
+}
+
+impl DecodeScratch {
+    pub fn new() -> DecodeScratch {
+        DecodeScratch::default()
+    }
+
+    /// Size all fixed-shape buffers for `cfg` (no-op once sized).
+    fn prepare(&mut self, cfg: &ModelConfig) {
+        let d = cfg.d_model;
+        self.x.resize(d, 0.0);
+        self.hn.resize(d, 0.0);
+        self.q.resize(cfg.q_dim(), 0.0);
+        self.k.resize(cfg.kv_dim(), 0.0);
+        self.v.resize(cfg.kv_dim(), 0.0);
+        self.o.resize(cfg.q_dim(), 0.0);
+        self.attn_out.resize(d, 0.0);
+        self.gate.resize(cfg.ff, 0.0);
+        self.up.resize(cfg.ff, 0.0);
+        self.down.resize(d, 0.0);
+        self.last.resize(d, 0.0);
+        self.logits.resize(cfg.vocab, 0.0);
+    }
+}
+
 /// Native model: config + weights.
 pub struct NativeModel {
     pub w: Weights,
@@ -192,79 +244,121 @@ impl NativeModel {
     /// One decode step: appends the token's K/V into `kv` (dense tail),
     /// runs attention over compressed + tail per head, returns logits.
     /// `pos` is the RoPE position of `token` (= tokens so far).
+    ///
+    /// Convenience wrapper over `decode_into` that allocates a throwaway
+    /// workspace; hot loops (the engine) hold a `DecodeScratch` per
+    /// sequence and call `decode_into` directly.
     pub fn decode(&self, token: u16, pos: usize, kv: &mut SequenceKV) -> Result<Vec<f32>> {
-        let cfg = self.cfg().clone();
+        let mut scratch = DecodeScratch::new();
+        self.decode_into(token, pos, kv, &mut scratch)?;
+        Ok(std::mem::take(&mut scratch.logits))
+    }
+
+    /// One decode step into a caller-owned workspace; logits land in
+    /// `scratch.logits`. The attention hot path walks each KV head's
+    /// compressed stream once for the whole GQA query group
+    /// (`decode_sparse_group`) and performs no heap allocations in
+    /// steady state — every temporary lives in `scratch`.
+    pub fn decode_into(
+        &self,
+        token: u16,
+        pos: usize,
+        kv: &mut SequenceKV,
+        scratch: &mut DecodeScratch,
+    ) -> Result<()> {
+        let cfg = &self.w.cfg;
         let (d, hd) = (cfg.d_model, cfg.head_dim);
         let (nh, nkv, group) = (cfg.n_heads, cfg.n_kv_heads, cfg.group());
         let scale = 1.0 / (hd as f32).sqrt();
+        scratch.prepare(cfg);
 
-        let mut x = self.w.get("tok_emb").row(token as usize).to_vec();
-        let (cos, sin) = attention::rope_cos_sin(pos, hd, cfg.rope_theta);
+        scratch.x.copy_from_slice(self.w.get("tok_emb").row(token as usize));
+        attention::rope_cos_sin_into(pos, hd, cfg.rope_theta, &mut scratch.cos, &mut scratch.sin);
 
-        let mut hn = vec![0.0f32; d];
         for l in 0..cfg.n_layers {
-            rmsnorm(&x, 1, d, self.w.layer(l, "attn_norm").data(), cfg.norm_eps as f32, &mut hn);
-            let mut q = vec![0.0f32; cfg.q_dim()];
-            let mut k = vec![0.0f32; cfg.kv_dim()];
-            let mut v = vec![0.0f32; cfg.kv_dim()];
-            matmul(&hn, 1, d, self.w.layer(l, "wq").data(), cfg.q_dim(), &mut q);
-            matmul(&hn, 1, d, self.w.layer(l, "wk").data(), cfg.kv_dim(), &mut k);
-            matmul(&hn, 1, d, self.w.layer(l, "wv").data(), cfg.kv_dim(), &mut v);
+            rmsnorm(
+                &scratch.x, 1, d,
+                self.w.layer(l, "attn_norm").data(),
+                cfg.norm_eps as f32,
+                &mut scratch.hn,
+            );
+            matmul(&scratch.hn, 1, d, self.w.layer(l, "wq").data(), cfg.q_dim(), &mut scratch.q);
+            matmul(&scratch.hn, 1, d, self.w.layer(l, "wk").data(), cfg.kv_dim(), &mut scratch.k);
+            matmul(&scratch.hn, 1, d, self.w.layer(l, "wv").data(), cfg.kv_dim(), &mut scratch.v);
             for h in 0..nh {
-                attention::apply_rope(&mut q[h * hd..(h + 1) * hd], &cos, &sin);
+                attention::apply_rope(&mut scratch.q[h * hd..(h + 1) * hd], &scratch.cos, &scratch.sin);
             }
             for h in 0..nkv {
-                attention::apply_rope(&mut k[h * hd..(h + 1) * hd], &cos, &sin);
+                attention::apply_rope(&mut scratch.k[h * hd..(h + 1) * hd], &scratch.cos, &scratch.sin);
             }
             for h in 0..nkv {
-                kv.append(l, h, &k[h * hd..(h + 1) * hd], &v[h * hd..(h + 1) * hd]);
+                kv.append(l, h, &scratch.k[h * hd..(h + 1) * hd], &scratch.v[h * hd..(h + 1) * hd]);
             }
 
-            let mut o = vec![0.0f32; cfg.q_dim()];
-            for h in 0..nh {
-                let kvh = h / group;
+            // Fused GQA attention: iterate KV heads, not query heads.
+            // The `group` query lanes sharing KV head `kvh` are contiguous
+            // in `q` (heads kvh*group .. (kvh+1)*group), so each group is
+            // one flat [group x hd] slab — one multi-query call per KV
+            // head walks its compressed stream exactly once. Groups wider
+            // than the kernels' MAX_GROUP lane cap (extreme MQA) are
+            // chunked; each chunk still amortizes the stream walk over up
+            // to MAX_GROUP lanes.
+            for kvh in 0..nkv {
                 let head = kv.head(l, kvh);
                 let tail_len = head.tail_len(hd);
-                attention::decode_sparse(
-                    &q[h * hd..(h + 1) * hd],
-                    &head.k_comp,
-                    &head.v_comp,
-                    &head.tail_k,
-                    &head.tail_v,
-                    tail_len,
-                    scale,
-                    &mut o[h * hd..(h + 1) * hd],
-                    None,
-                );
+                let mut lane0 = 0;
+                while lane0 < group {
+                    let lanes = (group - lane0).min(crate::sparse::MAX_GROUP);
+                    let start = (kvh * group + lane0) * hd;
+                    let span = start..start + lanes * hd;
+                    attention::decode_sparse_group(
+                        &scratch.q[span.clone()],
+                        lanes,
+                        &head.k_comp,
+                        &head.v_comp,
+                        head.tail_k(),
+                        head.tail_v(),
+                        tail_len,
+                        scale,
+                        &mut scratch.o[span],
+                        &mut scratch.s_comp,
+                        &mut scratch.s_tail,
+                    );
+                    lane0 += lanes;
+                }
             }
 
-            let mut attn_out = vec![0.0f32; d];
-            matmul(&o, 1, cfg.q_dim(), self.w.layer(l, "wo").data(), d, &mut attn_out);
-            for (xi, ai) in x.iter_mut().zip(&attn_out) {
+            matmul(&scratch.o, 1, cfg.q_dim(), self.w.layer(l, "wo").data(), d, &mut scratch.attn_out);
+            for (xi, ai) in scratch.x.iter_mut().zip(&scratch.attn_out) {
                 *xi += ai;
             }
 
-            rmsnorm(&x, 1, d, self.w.layer(l, "mlp_norm").data(), cfg.norm_eps as f32, &mut hn);
-            let mut g = vec![0.0f32; cfg.ff];
-            let mut u = vec![0.0f32; cfg.ff];
-            matmul(&hn, 1, d, self.w.layer(l, "w_gate").data(), cfg.ff, &mut g);
-            matmul(&hn, 1, d, self.w.layer(l, "w_up").data(), cfg.ff, &mut u);
-            for (gi, ui) in g.iter_mut().zip(&u) {
+            rmsnorm(
+                &scratch.x, 1, d,
+                self.w.layer(l, "mlp_norm").data(),
+                cfg.norm_eps as f32,
+                &mut scratch.hn,
+            );
+            matmul(&scratch.hn, 1, d, self.w.layer(l, "w_gate").data(), cfg.ff, &mut scratch.gate);
+            matmul(&scratch.hn, 1, d, self.w.layer(l, "w_up").data(), cfg.ff, &mut scratch.up);
+            for (gi, ui) in scratch.gate.iter_mut().zip(&scratch.up) {
                 *gi = silu(*gi) * ui;
             }
-            let mut down = vec![0.0f32; d];
-            matmul(&g, 1, cfg.ff, self.w.layer(l, "w_down").data(), d, &mut down);
-            for (xi, di) in x.iter_mut().zip(&down) {
+            matmul(&scratch.gate, 1, cfg.ff, self.w.layer(l, "w_down").data(), d, &mut scratch.down);
+            for (xi, di) in scratch.x.iter_mut().zip(&scratch.down) {
                 *xi += di;
             }
         }
         kv.commit_token()?;
 
-        let mut last = vec![0.0f32; d];
-        rmsnorm(&x, 1, d, self.w.get("final_norm").data(), cfg.norm_eps as f32, &mut last);
-        let mut logits = vec![0.0f32; cfg.vocab];
-        matmul(&last, 1, d, self.w.get("lm_head").data(), cfg.vocab, &mut logits);
-        Ok(logits)
+        rmsnorm(
+            &scratch.x, 1, d,
+            self.w.get("final_norm").data(),
+            cfg.norm_eps as f32,
+            &mut scratch.last,
+        );
+        matmul(&scratch.last, 1, d, self.w.get("lm_head").data(), cfg.vocab, &mut scratch.logits);
+        Ok(())
     }
 }
 
@@ -362,5 +456,100 @@ mod tests {
     #[test]
     fn argmax_basic() {
         assert_eq!(argmax(&[0.0, 3.0, -1.0, 3.0]), 1);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_scratch() {
+        // Decoding with one persistent workspace must be bit-identical to
+        // decoding with a fresh workspace every token (no state leaks
+        // between tokens through reused buffers).
+        let m = tiny_model();
+        let tokens: Vec<u16> = (0..120).map(|i| (i * 13 % 400 + 16) as u16).collect();
+        let r = m.prefill(&tokens, false);
+
+        let mut kv_a = SequenceKV::new(KvPolicy::mustafar(0.6, 0.6), 2, 1, 32);
+        kv_a.ingest_prefill(&r.k, &r.v, 120, None).unwrap();
+        let mut kv_b = kv_a.clone();
+
+        let mut persistent = DecodeScratch::new();
+        let mut tok_a = 77u16;
+        let mut tok_b = 77u16;
+        for i in 0..40 {
+            m.decode_into(tok_a, 120 + i, &mut kv_a, &mut persistent).unwrap();
+            let la = persistent.logits.clone();
+            let mut fresh = DecodeScratch::new();
+            m.decode_into(tok_b, 120 + i, &mut kv_b, &mut fresh).unwrap();
+            assert_eq!(la, fresh.logits, "token {i}");
+            tok_a = argmax(&la);
+            tok_b = argmax(&fresh.logits);
+        }
+    }
+
+    #[test]
+    fn wide_gqa_decode_matches_prefill() {
+        // group = 4 (n_heads=4, n_kv_heads=1): the fused multi-query path
+        // must still reproduce full-prefill logits on a dense cache.
+        let cfg = ModelConfig {
+            name: "tiny-gqa4".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 1,
+            head_dim: 16,
+            ff: 128,
+            vocab: 512,
+            rope_theta: 10000.0,
+            max_seq: 256,
+            norm_eps: 1e-5,
+        };
+        let m = NativeModel::new(Weights::random_for_tests(cfg, 123));
+        let tokens: Vec<u16> = (0..49).map(|i| (i * 5 % 400 + 16) as u16).collect();
+        let full = m.prefill(&tokens, false);
+
+        let r = m.prefill(&tokens[..48], false);
+        let mut kv = SequenceKV::new(KvPolicy::dense(), 2, 1, 16);
+        kv.ingest_prefill(&r.k, &r.v, 48, None).unwrap();
+        let logits = m.decode(tokens[48], 48, &mut kv).unwrap();
+
+        let mad: f32 = logits
+            .iter()
+            .zip(&full.logits_last)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(mad < 1e-3, "wide-GQA decode vs prefill mismatch: {mad}");
+    }
+
+    #[test]
+    fn mqa_group_wider_than_max_group_is_chunked() {
+        // group = 32 > sparse::MAX_GROUP = 16: decode must chunk the
+        // query group across fused calls rather than panic.
+        let cfg = ModelConfig {
+            name: "tiny-mqa32".into(),
+            d_model: 64,
+            n_layers: 1,
+            n_heads: 32,
+            n_kv_heads: 1,
+            head_dim: 8,
+            ff: 64,
+            vocab: 256,
+            rope_theta: 10000.0,
+            max_seq: 128,
+            norm_eps: 1e-5,
+        };
+        let m = NativeModel::new(Weights::random_for_tests(cfg, 321));
+        let tokens: Vec<u16> = (0..41).map(|i| (i * 3 % 200 + 16) as u16).collect();
+        let full = m.prefill(&tokens, false);
+
+        let r = m.prefill(&tokens[..40], false);
+        let mut kv = SequenceKV::new(KvPolicy::dense(), 1, 1, 8);
+        kv.ingest_prefill(&r.k, &r.v, 40, None).unwrap();
+        let logits = m.decode(tokens[40], 40, &mut kv).unwrap();
+
+        let mad: f32 = logits
+            .iter()
+            .zip(&full.logits_last)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(mad < 1e-3, "chunked MQA decode vs prefill mismatch: {mad}");
     }
 }

@@ -14,4 +14,7 @@ pub mod spmv;
 
 pub use bitmap::{BitmapMatrix, PackAxis, PAD, TILE};
 pub use pairs::TokenPairs;
-pub use spmv::{dense_key, dense_value, spmv_key, spmv_value};
+pub use spmv::{
+    dense_key, dense_key_multi, dense_value, dense_value_multi, spmv_key, spmv_key_multi,
+    spmv_value, spmv_value_multi, MAX_GROUP,
+};

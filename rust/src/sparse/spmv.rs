@@ -115,6 +115,28 @@ pub fn spmv_value(v: &BitmapMatrix, att: &[f32], out: &mut [f32]) {
     }
 }
 
+/// 4-lane unrolled dot product — shared by the dense single- and
+/// multi-query MVs so their per-lane rounding is identical.
+#[inline]
+fn dot_unrolled(row: &[f32], q: &[f32], channels: usize) -> f32 {
+    let mut acc = 0.0f32;
+    let mut c = 0;
+    let lim = channels & !3;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    while c < lim {
+        a0 += row[c] * q[c];
+        a1 += row[c + 1] * q[c + 1];
+        a2 += row[c + 2] * q[c + 2];
+        a3 += row[c + 3] * q[c + 3];
+        c += 4;
+    }
+    while c < channels {
+        acc += row[c] * q[c];
+        c += 1;
+    }
+    acc + a0 + a1 + a2 + a3
+}
+
 /// Dense MV baseline: scores[t] = Σ_c K[t,c]·q[c] (row-major K [T x D]).
 pub fn dense_key(k: &[f32], tokens: usize, channels: usize, q: &[f32], scores: &mut [f32]) {
     assert_eq!(k.len(), tokens * channels);
@@ -122,23 +144,7 @@ pub fn dense_key(k: &[f32], tokens: usize, channels: usize, q: &[f32], scores: &
     assert_eq!(scores.len(), tokens);
     for t in 0..tokens {
         let row = &k[t * channels..(t + 1) * channels];
-        let mut acc = 0.0f32;
-        // 4-lane unrolled dot product
-        let mut c = 0;
-        let lim = channels & !3;
-        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-        while c < lim {
-            a0 += row[c] * q[c];
-            a1 += row[c + 1] * q[c + 1];
-            a2 += row[c + 2] * q[c + 2];
-            a3 += row[c + 3] * q[c + 3];
-            c += 4;
-        }
-        while c < channels {
-            acc += row[c] * q[c];
-            c += 1;
-        }
-        scores[t] += acc + a0 + a1 + a2 + a3;
+        scores[t] += dot_unrolled(row, q, channels);
     }
 }
 
@@ -155,6 +161,201 @@ pub fn dense_value(v: &[f32], tokens: usize, channels: usize, att: &[f32], out: 
         let row = &v[t * channels..(t + 1) * channels];
         for c in 0..channels {
             out[c] += at * row[c];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused GQA multi-query kernels.
+//
+// Under grouped-query attention, `G = n_heads / n_kv_heads` query heads
+// share one KV head. The single-lane kernels above force the caller to
+// re-walk the compressed stream G times per token; since the decode SpMV
+// is memory-bound (Fig 5a/6a), that throws away the format's bandwidth
+// win. The `_multi` kernels below walk each tile's bitmap + packed
+// values exactly once and FMA the decoded tile into all G lanes.
+//
+// Lane layouts are flat: queries `[G x channels]`, scores `[G x tokens]`,
+// outputs `[G x channels]`. Per lane, the floating-point operation order
+// is identical to the corresponding single-lane kernel, so results are
+// bit-exact against G independent single-lane calls (tested below).
+// ---------------------------------------------------------------------------
+
+/// Maximum GQA group size the fused kernels accept (stack-buffer bound;
+/// real models use 4–8 queries per KV head).
+pub const MAX_GROUP: usize = 16;
+
+/// Multi-query `spmv_key`: scores[l*tokens + t] += Σ_c K[t,c]·q[l*channels + c]
+/// for `g` query lanes, walking the compressed Key stream once.
+pub fn spmv_key_multi(k: &BitmapMatrix, qs: &[f32], g: usize, scores: &mut [f32]) {
+    assert_eq!(k.axis, PackAxis::Token, "key cache must be token-packed");
+    assert!(g >= 1 && g <= MAX_GROUP, "group size {g} out of range");
+    assert_eq!(qs.len(), g * k.channels);
+    assert_eq!(scores.len(), g * k.tokens);
+
+    let d = k.channels;
+    let nt = k.tokens;
+    let values = &k.values[..];
+    for gt in 0..nt / TILE {
+        let base = gt * TILE;
+        let tile_base = gt * d;
+        for c in 0..d {
+            let ti = tile_base + c;
+            let bits = k.bitmaps[ti];
+            if bits == 0 {
+                continue;
+            }
+            // hoist the G query weights for this channel
+            let mut qc = [0.0f32; MAX_GROUP];
+            for (l, slot) in qc[..g].iter_mut().enumerate() {
+                *slot = qs[l * d + c];
+            }
+            let mut off = k.offsets[ti] as usize;
+            if bits == u64::MAX {
+                // dense tile fast path: per lane, one vectorizable sweep
+                for l in 0..g {
+                    let w = qc[l];
+                    let out = &mut scores[l * nt + base..l * nt + base + TILE];
+                    for (o, &v) in out.iter_mut().zip(&values[off..off + TILE]) {
+                        *o += v * w;
+                    }
+                }
+                continue;
+            }
+            // single bit-walk; each decoded value feeds all G lanes
+            let mut bits = bits;
+            unsafe {
+                while bits != 0 {
+                    let b = bits.trailing_zeros() as usize;
+                    let v = *values.get_unchecked(off);
+                    for (l, &w) in qc[..g].iter().enumerate() {
+                        *scores.get_unchecked_mut(l * nt + base + b) += v * w;
+                    }
+                    off += 1;
+                    bits &= bits - 1;
+                }
+            }
+        }
+    }
+}
+
+/// Multi-query `spmv_value`: out[l*channels + c] += Σ_t α[l*tokens + t]·V[t,c]
+/// for `g` attention lanes, walking the compressed Value stream once.
+/// Each partial tile is scattered into a stack buffer once and then FMA'd
+/// into every lane (amortizing the decode across the GQA group).
+pub fn spmv_value_multi(v: &BitmapMatrix, att: &[f32], g: usize, out: &mut [f32]) {
+    assert_eq!(v.axis, PackAxis::Channel, "value cache must be channel-packed");
+    assert!(g >= 1 && g <= MAX_GROUP, "group size {g} out of range");
+    assert_eq!(att.len(), g * v.tokens);
+    assert_eq!(out.len(), g * v.channels);
+
+    let cblocks = v.channels / TILE;
+    let nt = v.tokens;
+    let d = v.channels;
+    let values = &v.values[..];
+    for t in 0..nt {
+        let mut ats = [0.0f32; MAX_GROUP];
+        let mut any = false;
+        for (l, slot) in ats[..g].iter_mut().enumerate() {
+            let a = att[l * nt + t];
+            *slot = a;
+            any |= a != 0.0;
+        }
+        if !any {
+            continue;
+        }
+        for cb in 0..cblocks {
+            let ti = t * cblocks + cb;
+            let bits = v.bitmaps[ti];
+            if bits == 0 {
+                continue;
+            }
+            let mut off = v.offsets[ti] as usize;
+            if bits == u64::MAX {
+                let seg = &values[off..off + TILE];
+                for (l, &at) in ats[..g].iter().enumerate() {
+                    if at == 0.0 {
+                        continue;
+                    }
+                    let ob = &mut out[l * d + cb * TILE..l * d + (cb + 1) * TILE];
+                    for (o, &x) in ob.iter_mut().zip(seg) {
+                        *o += x * at;
+                    }
+                }
+                continue;
+            }
+            // expand once ("compute-as-dense", Fig 8), FMA per lane
+            let mut buf = [0.0f32; TILE];
+            let mut bits = bits;
+            unsafe {
+                while bits != 0 {
+                    let b = bits.trailing_zeros() as usize;
+                    *buf.get_unchecked_mut(b) = *values.get_unchecked(off);
+                    off += 1;
+                    bits &= bits - 1;
+                }
+            }
+            for (l, &at) in ats[..g].iter().enumerate() {
+                if at == 0.0 {
+                    continue;
+                }
+                let ob = &mut out[l * d + cb * TILE..l * d + (cb + 1) * TILE];
+                for (o, &x) in ob.iter_mut().zip(buf.iter()) {
+                    *o += x * at;
+                }
+            }
+        }
+    }
+}
+
+/// Multi-query dense Key MV for the local-window tail: each K row is read
+/// once and dotted against all `g` query lanes.
+pub fn dense_key_multi(
+    k: &[f32],
+    tokens: usize,
+    channels: usize,
+    qs: &[f32],
+    g: usize,
+    scores: &mut [f32],
+) {
+    assert_eq!(k.len(), tokens * channels);
+    assert!(g >= 1 && g <= MAX_GROUP, "group size {g} out of range");
+    assert_eq!(qs.len(), g * channels);
+    assert_eq!(scores.len(), g * tokens);
+    for t in 0..tokens {
+        let row = &k[t * channels..(t + 1) * channels];
+        for l in 0..g {
+            let q = &qs[l * channels..(l + 1) * channels];
+            scores[l * tokens + t] += dot_unrolled(row, q, channels);
+        }
+    }
+}
+
+/// Multi-query dense Value MV for the local-window tail: each V row is
+/// read once and accumulated into all `g` output lanes.
+pub fn dense_value_multi(
+    v: &[f32],
+    tokens: usize,
+    channels: usize,
+    att: &[f32],
+    g: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(v.len(), tokens * channels);
+    assert!(g >= 1 && g <= MAX_GROUP, "group size {g} out of range");
+    assert_eq!(att.len(), g * tokens);
+    assert_eq!(out.len(), g * channels);
+    for t in 0..tokens {
+        let row = &v[t * channels..(t + 1) * channels];
+        for l in 0..g {
+            let at = att[l * tokens + t];
+            if at == 0.0 {
+                continue;
+            }
+            let ob = &mut out[l * channels..(l + 1) * channels];
+            for (o, &x) in ob.iter_mut().zip(row) {
+                *o += at * x;
+            }
         }
     }
 }
@@ -234,5 +435,102 @@ mod tests {
         let mut scores = vec![0.0f32; TILE];
         spmv_key(&m, &[1.0; 8], &mut scores);
         assert!(scores.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn spmv_key_multi_bitexact_vs_single_lane() {
+        // property: on random unstructured masks, the fused kernel must be
+        // bit-for-bit identical to G independent single-lane calls.
+        for seed in 0..20 {
+            let mut rng = Pcg32::seeded(seed + 3000);
+            let t = TILE * (1 + rng.below(4) as usize);
+            let d = [16, 64, 128][rng.below(3) as usize];
+            let g = [1, 2, 4, 8][rng.below(4) as usize];
+            // include fully-dense tiles sometimes to hit the fast path
+            let keep = if seed % 5 == 0 { 1.0 } else { 0.1 + 0.8 * rng.unit_f32() };
+            let dense = random_pruned(t, d, keep, seed);
+            let m = BitmapMatrix::compress(&dense, t, d, PackAxis::Token).unwrap();
+            let qs: Vec<f32> = (0..g * d).map(|_| rng.normal_f32()).collect();
+
+            let mut fused = vec![0.0f32; g * t];
+            spmv_key_multi(&m, &qs, g, &mut fused);
+
+            for l in 0..g {
+                let mut lane = vec![0.0f32; t];
+                spmv_key(&m, &qs[l * d..(l + 1) * d], &mut lane);
+                assert_eq!(&fused[l * t..(l + 1) * t], &lane[..], "seed {seed} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_value_multi_bitexact_vs_single_lane() {
+        for seed in 0..20 {
+            let mut rng = Pcg32::seeded(seed + 4000);
+            let t = 1 + rng.below(300) as usize;
+            let d = TILE * (1 + rng.below(2) as usize);
+            let g = [1, 2, 4, 8][rng.below(4) as usize];
+            let keep = if seed % 5 == 0 { 1.0 } else { 0.1 + 0.8 * rng.unit_f32() };
+            let dense = random_pruned(t, d, keep, seed);
+            let m = BitmapMatrix::compress(&dense, t, d, PackAxis::Channel).unwrap();
+            // include exact zeros in some lanes to hit the skip path
+            let att: Vec<f32> = (0..g * t)
+                .map(|i| if i % 7 == 0 { 0.0 } else { rng.unit_f32() })
+                .collect();
+
+            let mut fused = vec![0.0f32; g * d];
+            spmv_value_multi(&m, &att, g, &mut fused);
+
+            for l in 0..g {
+                let mut lane = vec![0.0f32; d];
+                spmv_value(&m, &att[l * t..(l + 1) * t], &mut lane);
+                assert_eq!(&fused[l * d..(l + 1) * d], &lane[..], "seed {seed} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_multi_bitexact_vs_single_lane() {
+        for seed in 0..10 {
+            let mut rng = Pcg32::seeded(seed + 5000);
+            let t = 1 + rng.below(100) as usize;
+            let d = [16, 32, 64][rng.below(3) as usize];
+            let g = [1, 3, 4, 8][rng.below(4) as usize];
+            let mat: Vec<f32> = (0..t * d).map(|_| rng.normal_f32()).collect();
+            let qs: Vec<f32> = (0..g * d).map(|_| rng.normal_f32()).collect();
+            let att: Vec<f32> = (0..g * t)
+                .map(|i| if i % 5 == 0 { 0.0 } else { rng.normal_f32() })
+                .collect();
+
+            let mut sk = vec![0.0f32; g * t];
+            dense_key_multi(&mat, t, d, &qs, g, &mut sk);
+            let mut ov = vec![0.0f32; g * d];
+            dense_value_multi(&mat, t, d, &att, g, &mut ov);
+
+            for l in 0..g {
+                let mut lane_s = vec![0.0f32; t];
+                dense_key(&mat, t, d, &qs[l * d..(l + 1) * d], &mut lane_s);
+                assert_eq!(&sk[l * t..(l + 1) * t], &lane_s[..], "key seed {seed} lane {l}");
+
+                let mut lane_o = vec![0.0f32; d];
+                dense_value(&mat, t, d, &att[l * t..(l + 1) * t], &mut lane_o);
+                assert_eq!(&ov[l * d..(l + 1) * d], &lane_o[..], "val seed {seed} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_kernels_accumulate() {
+        let d = 64;
+        let dense = random_pruned(TILE, d, 0.5, 77);
+        let m = BitmapMatrix::compress(&dense, TILE, d, PackAxis::Token).unwrap();
+        let qs = vec![1.0f32; 2 * d];
+        let mut scores = vec![5.0f32; 2 * TILE];
+        spmv_key_multi(&m, &qs, 2, &mut scores);
+        let mut base = vec![0.0f32; 2 * TILE];
+        spmv_key_multi(&m, &qs, 2, &mut base);
+        for (s, b) in scores.iter().zip(&base) {
+            assert!((s - (b + 5.0)).abs() < 1e-5);
+        }
     }
 }

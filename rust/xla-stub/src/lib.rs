@@ -1,0 +1,137 @@
+//! Offline stub of the `xla` (xla_extension 0.5.x) bindings used by
+//! `mustafar::runtime`. The image that bakes in libxla links the real
+//! crate; everywhere else this stub keeps the crate compiling and lets
+//! the native backend run, while any attempt to actually compile or
+//! execute an HLO artifact fails with a clear runtime error.
+//!
+//! Only the API surface `runtime/mod.rs` touches is mirrored — keep the
+//! two in sync when extending the runtime.
+
+use std::fmt;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Error type matching the real bindings' `xla::Error` usage
+/// (`Display` + `Debug`; converted to `mustafar::Error::Xla` via
+/// `to_string`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: xla_extension is not linked in this build (offline stub); \
+         use the native backend or build against the real xla crate"
+    ))
+}
+
+/// PJRT client handle. Construction succeeds (so artifact-index errors
+/// surface first, matching the real flow); device work fails.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient(()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("buffer_from_host_buffer"))
+    }
+}
+
+/// Device buffer handle (never constructed by the stub).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+/// Host literal (never constructed by the stub).
+pub struct Literal(());
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("to_tuple"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(unavailable("array_shape"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("to_vec"))
+    }
+}
+
+/// Array shape of a literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_but_device_ops_fail() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "stub");
+        let err = c.buffer_from_host_buffer::<f32>(&[1.0], &[1], None).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
