@@ -42,7 +42,7 @@ fn main() {
     // -- KV manager append + group compression ------------------------------
     let mut rng = Pcg32::seeded(3);
     let kv_bench = bench("kv append 128 tokens (6L x 2KV)", opts, || {
-        let mut kv = SequenceKV::new(KvPolicy::mustafar(0.7, 0.7), 6, 2, 64);
+        let mut kv = SequenceKV::new(KvPolicy::mustafar(0.7, 0.7), 6, 2, 64).unwrap();
         for _ in 0..128 {
             for l in 0..6 {
                 for h in 0..2 {

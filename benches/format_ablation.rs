@@ -31,7 +31,9 @@ fn main() {
     let mut rng = Pcg32::seeded(3);
     let k: Vec<f32> = (0..t * hd).map(|_| rng.normal_f32()).collect();
 
-    println!("=== bitmap-format ablation — T={t}, hd={hd}, fp16 accounting ===");
+    // Since the f16 storage refactor the fp16 figures are the actual
+    // in-memory layout, not just an accounting model.
+    println!("=== bitmap-format ablation — T={t}, hd={hd}, fp16 storage ===");
     println!(
         "{:<10} {:>12} {:>12} {:>12} {:>12} {:>12}",
         "sparsity", "pad=8(paper)", "pad=1", "pad=16", "csr(1B idx)", "dense=100%"

@@ -5,11 +5,11 @@
 //! results are recorded in EXPERIMENTS.md §Perf iteration log.
 
 use mustafar::attention::{decode_sparse, decode_sparse_group};
-use mustafar::bench::{bench, BenchOpts};
+use mustafar::bench::{bench, smoke_mode, BenchOpts};
 use mustafar::config::{Backend, EngineConfig, SparsityConfig};
 use mustafar::coordinator::{Engine, Request};
 use mustafar::model::{NativeModel, Weights};
-use mustafar::sparse::{BitmapMatrix, PackAxis};
+use mustafar::sparse::{f32_to_f16, BitmapMatrix, PackAxis};
 use mustafar::util::Pcg32;
 
 fn random_pruned(t: usize, d: usize, keep: f32, rng: &mut Pcg32) -> Vec<f32> {
@@ -19,13 +19,24 @@ fn random_pruned(t: usize, d: usize, keep: f32, rng: &mut Pcg32) -> Vec<f32> {
 }
 
 fn main() {
-    let opts = BenchOpts { warmup_iters: 3, iters: 30, min_time_s: 0.15 };
+    // MUSTAFAR_BENCH_SMOKE=1: tiny iteration counts for the CI feature
+    // matrix (default + --features simd) — keeps both code paths green
+    // without meaningful bench time.
+    let smoke = smoke_mode();
+    let opts = if smoke {
+        BenchOpts::smoke()
+    } else {
+        BenchOpts { warmup_iters: 3, iters: 30, min_time_s: 0.15 }
+    };
     let hd = 128usize;
     let t_comp = 1024usize;
     let tail = 33usize;
     let scale = 1.0 / (hd as f32).sqrt();
 
-    println!("## fused GQA decode kernel (t_comp={t_comp}, tail={tail}, hd={hd})");
+    println!(
+        "## fused GQA decode kernel (t_comp={t_comp}, tail={tail}, hd={hd}, f16 storage, simd={})",
+        if cfg!(feature = "simd") { "on" } else { "off" }
+    );
     // "calls/s" = fused decode_sparse_group invocations per second; one
     // generated token costs n_layers x n_kv_heads such calls plus matmuls.
     println!(
@@ -39,8 +50,9 @@ fn main() {
         let vd = random_pruned(t_comp, hd, 1.0 - sparsity, &mut rng);
         let k_comp = BitmapMatrix::compress(&kd, t_comp, hd, PackAxis::Token).unwrap();
         let v_comp = BitmapMatrix::compress(&vd, t_comp, hd, PackAxis::Channel).unwrap();
-        let tail_k: Vec<f32> = (0..tail * hd).map(|_| rng.normal_f32()).collect();
-        let tail_v: Vec<f32> = (0..tail * hd).map(|_| rng.normal_f32()).collect();
+        // dense tail in its real storage type (binary16)
+        let tail_k: Vec<u16> = (0..tail * hd).map(|_| f32_to_f16(rng.normal_f32())).collect();
+        let tail_v: Vec<u16> = (0..tail * hd).map(|_| f32_to_f16(rng.normal_f32())).collect();
 
         for &g in &[1usize, 4, 8] {
             let qs: Vec<f32> = (0..g * hd).map(|_| rng.normal_f32()).collect();
@@ -100,7 +112,8 @@ fn main() {
         max_seq: 1024,
         norm_eps: 1e-5,
     };
-    println!("\n## engine decode, fused GQA path (group=4, batch 4, in 448, gen 16)");
+    let gen = if smoke { 4usize } else { 16 };
+    println!("\n## engine decode, fused GQA path (group=4, batch 4, in 448, gen {gen})");
     for (label, backend, ks) in [
         ("native-dense", Backend::NativeDense, 0.0),
         ("native-sparse 70%", Backend::NativeSparse, 0.7),
@@ -110,12 +123,12 @@ fn main() {
         ec.backend = backend;
         ec.sparsity = SparsityConfig::mustafar(ks, ks);
         ec.max_batch = 4;
-        ec.max_new_tokens = 16;
+        ec.max_new_tokens = gen;
         let mut e = Engine::new_native(NativeModel::new(w), ec);
         let reqs: Vec<Request> = (0..4)
             .map(|i| {
                 let mut rng = Pcg32::seeded(100 + i);
-                Request::new(i, mustafar::workload::lang::gen_document(&mut rng, 448), 16)
+                Request::new(i, mustafar::workload::lang::gen_document(&mut rng, 448), gen)
             })
             .collect();
         let _ = e.run_trace(reqs).unwrap();

@@ -1,21 +1,33 @@
 //! SpMV microbenchmark: bandwidth accounting of the bitmap kernels vs the
 //! dense baseline across sparsities. Validates the memory-bound argument:
-//! SpMV time should track the compressed-bytes ratio.
+//! SpMV time should track the compressed-bytes ratio. Since the f16
+//! storage refactor the compressed byte counts below are *actual* stored
+//! bytes (2-byte values), so the bytes column is the real stream size the
+//! kernel walks.
+//!
+//! `MUSTAFAR_BENCH_SMOKE=1` shrinks the problem and iteration counts so
+//! CI can keep both the default and `--features simd` code paths green
+//! without burning minutes.
 
-use mustafar::bench::{bench, BenchOpts};
+use mustafar::bench::{bench, smoke_mode, BenchOpts};
 use mustafar::prune::{keep_count, per_token_magnitude};
 use mustafar::sparse::{dense_key, dense_value, spmv_key, spmv_value, BitmapMatrix, PackAxis};
 use mustafar::util::Pcg32;
 
 fn main() {
-    let t = 4096usize;
+    let smoke = smoke_mode();
+    let t = if smoke { 1024usize } else { 4096 };
     let hd = 128usize;
     let mut rng = Pcg32::seeded(7);
     let k: Vec<f32> = (0..t * hd).map(|_| rng.normal_f32()).collect();
     let v: Vec<f32> = (0..t * hd).map(|_| rng.normal_f32()).collect();
     let q: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
     let att: Vec<f32> = (0..t).map(|_| 1.0 / t as f32).collect();
-    let opts = BenchOpts { warmup_iters: 3, iters: 30, min_time_s: 0.3 };
+    let opts = if smoke {
+        BenchOpts::smoke()
+    } else {
+        BenchOpts { warmup_iters: 3, iters: 30, min_time_s: 0.3 }
+    };
 
     let mut scores = vec![0.0f32; t];
     let mut out = vec![0.0f32; hd];
@@ -27,15 +39,18 @@ fn main() {
         out.iter_mut().for_each(|x| *x = 0.0);
         dense_value(&v, t, hd, &att, &mut out);
     });
-    let dense_bytes = (t * hd * 4) as f64;
-    println!("=== SpMV micro — T={t}, hd={hd} (f32 host buffers) ===");
+    let dense_bytes = std::mem::size_of_val(k.as_slice()) as f64;
     println!(
-        "dense_key   {:>9.1} us  ({:.1} GB/s)",
+        "=== SpMV micro — T={t}, hd={hd}, f16 compressed storage, simd={} ===",
+        if cfg!(feature = "simd") { "on" } else { "off (scalar fallback)" }
+    );
+    println!(
+        "dense_key   {:>9.1} us  ({:.1} GB/s, f32 host buffer)",
         dense_k.median_us(),
         dense_bytes / dense_k.median_us() / 1e3
     );
     println!(
-        "dense_value {:>9.1} us  ({:.1} GB/s)",
+        "dense_value {:>9.1} us  ({:.1} GB/s, f32 host buffer)",
         dense_v.median_us(),
         dense_bytes / dense_v.median_us() / 1e3
     );
@@ -46,7 +61,10 @@ fn main() {
         let vp = per_token_magnitude(&v, t, hd, kk);
         let kc = BitmapMatrix::compress(&kp, t, hd, PackAxis::Token).unwrap();
         let vc = BitmapMatrix::compress(&vp, t, hd, PackAxis::Channel).unwrap();
-        let comp_bytes = kc.values.len() * 4 + kc.bitmaps.len() * 8 + kc.offsets.len() * 4;
+        // actual stored bytes of the compressed stream (u16 values) —
+        // the same figure the crate reports, not a parallel formula
+        let comp_bytes = kc.compressed_bytes();
+        assert_eq!(std::mem::size_of_val(&kc.values[0]), 2, "values must be stored as f16");
 
         let sk = bench("spmv_key", opts, || {
             scores.iter_mut().for_each(|x| *x = 0.0);

@@ -3,6 +3,7 @@
 
 use mustafar::attention::decode_sparse;
 use mustafar::prune::{keep_count, per_token_magnitude};
+use mustafar::sparse::f16::{f16_round_vec, to_f16_vec};
 use mustafar::sparse::{BitmapMatrix, PackAxis, TokenPairs};
 use mustafar::util::Pcg32;
 
@@ -31,7 +32,9 @@ fn main() {
     for (i, bm) in m.bitmaps.iter().take(4).enumerate() {
         println!("  tile {i}: {:064b} (offset {})", bm, m.offsets[i]);
     }
-    assert_eq!(m.decompress(), pruned, "lossless round-trip");
+    // storage is binary16: the round trip is exact up to f16 rounding
+    let pruned_f16 = f16_round_vec(&pruned);
+    assert_eq!(m.decompress(), pruned_f16, "f16-exact round-trip");
 
     // rectangular (values, indices) view — the XLA/PJRT boundary form
     let pairs = TokenPairs::from_dense(&pruned, t, hd, kk).unwrap();
@@ -42,17 +45,17 @@ fn main() {
         &pairs.indices[..kk]
     );
 
+    // channel packing supports partial tiles: hd=16 < 64 yields one
+    // partial tile per token (the trailing-block bitmap just stops at 16)
+    let v_small = BitmapMatrix::compress(&pruned, t, hd, PackAxis::Channel).unwrap();
+    println!(
+        "\nchannel-packed at hd={hd}: {} partial tiles, nnz={}",
+        v_small.bitmaps.len(),
+        v_small.nnz()
+    );
+    assert_eq!(v_small.decompress(), pruned_f16, "partial tiles round-trip");
+
     // sparse decode attention over compressed K/V + a 4-token dense tail
-    let v_comp = BitmapMatrix::compress(&pruned, t, hd, PackAxis::Channel);
-    let v_comp = match v_comp {
-        Ok(v) => v,
-        Err(_) => {
-            // hd=16 < 64: channel packing needs hd % 64 == 0; pad demo
-            println!("\n(channel-axis demo needs hd % 64 == 0 — using token axis for V too)");
-            BitmapMatrix::compress(&pruned, t, hd, PackAxis::Token).unwrap()
-        }
-    };
-    let _ = v_comp;
     let hd2 = 64usize;
     let dense2: Vec<f32> = (0..t * hd2).map(|_| rng.normal_f32()).collect();
     let kk2 = keep_count(hd2, 0.7);
@@ -61,7 +64,8 @@ fn main() {
     let vc = BitmapMatrix::compress(&kp, t, hd2, PackAxis::Channel).unwrap();
     let q: Vec<f32> = (0..hd2).map(|_| rng.normal_f32()).collect();
     let tail: Vec<f32> = (0..4 * hd2).map(|_| rng.normal_f32()).collect();
+    let tail16 = to_f16_vec(&tail); // the KV manager's tail storage type
     let mut out = vec![0.0f32; hd2];
-    decode_sparse(&q, &kc, &vc, &tail, &tail, 4, 0.125, &mut out, None);
+    decode_sparse(&q, &kc, &vc, &tail16, &tail16, 4, 0.125, &mut out, None);
     println!("\nsparse decode attention out[0..6] = {:?}", &out[..6]);
 }

@@ -5,7 +5,7 @@
 
 use crate::sparse::{
     dense_key, dense_key_multi, dense_value, dense_value_multi, spmv_key, spmv_key_multi,
-    spmv_value, spmv_value_multi, BitmapMatrix,
+    spmv_value, spmv_value_multi, BitmapMatrix, KvElem,
 };
 
 /// Precomputed RoPE table for one position: (cos, sin) of length hd/2.
@@ -116,16 +116,17 @@ pub fn decode_dense(q: &[f32], k: &[f32], v: &[f32], t: usize, scale: f32, out: 
 ///
 /// `tail_k`/`tail_v` are `[tail_len x hd]` row-major (the local window,
 /// which always includes the current token's K/V — callers append before
-/// calling). Returns the attention output in `out` and, if `att_out` is
+/// calling), stored as f32 or binary16 (`KvElem`; the KV manager's tail
+/// is `u16`). Returns the attention output in `out` and, if `att_out` is
 /// given, writes the post-softmax attention over `[compressed | tail]`
 /// (used by the H2O tracker).
 #[allow(clippy::too_many_arguments)]
-pub fn decode_sparse(
+pub fn decode_sparse<E: KvElem>(
     q: &[f32],
     k_comp: &BitmapMatrix,
     v_comp: &BitmapMatrix,
-    tail_k: &[f32],
-    tail_v: &[f32],
+    tail_k: &[E],
+    tail_v: &[E],
     tail_len: usize,
     scale: f32,
     out: &mut [f32],
@@ -172,13 +173,13 @@ pub fn decode_sparse(
 ///
 /// Per lane, results are bit-exact against `decode_sparse`.
 #[allow(clippy::too_many_arguments)]
-pub fn decode_sparse_group(
+pub fn decode_sparse_group<E: KvElem>(
     qs: &[f32],
     g: usize,
     k_comp: &BitmapMatrix,
     v_comp: &BitmapMatrix,
-    tail_k: &[f32],
-    tail_v: &[f32],
+    tail_k: &[E],
+    tail_v: &[E],
     tail_len: usize,
     scale: f32,
     out: &mut [f32],
@@ -262,6 +263,7 @@ pub fn causal_prefill(
 mod tests {
     use super::*;
     use crate::prune::per_token_magnitude;
+    use crate::sparse::f16::{f16_round_vec as f16_ref, to_f16_vec};
     use crate::sparse::PackAxis;
     use crate::util::Pcg32;
 
@@ -315,8 +317,9 @@ mod tests {
 
     #[test]
     fn sparse_decode_matches_dense_when_unpruned() {
-        // With no pruning (compressed region holds the exact values),
-        // the sparse path must reproduce dense attention.
+        // With no pruning (compressed region holds the exact stored
+        // values), the sparse path must reproduce dense attention over
+        // the f16-rounded matrices — same values, different op order.
         let mut rng = Pcg32::seeded(16);
         let (t_comp, tail, hd) = (128, 16, 64);
         let t = t_comp + tail;
@@ -329,16 +332,18 @@ mod tests {
             BitmapMatrix::compress(&k[..t_comp * hd], t_comp, hd, PackAxis::Token).unwrap();
         let v_comp =
             BitmapMatrix::compress(&v[..t_comp * hd], t_comp, hd, PackAxis::Channel).unwrap();
+        let tail_k = to_f16_vec(&k[t_comp * hd..]);
+        let tail_v = to_f16_vec(&v[t_comp * hd..]);
 
         let mut out_sparse = vec![0.0f32; hd];
         decode_sparse(
             &q, &k_comp, &v_comp,
-            &k[t_comp * hd..], &v[t_comp * hd..], tail,
+            &tail_k, &tail_v, tail,
             scale, &mut out_sparse, None,
         );
 
         let mut out_dense = vec![0.0f32; hd];
-        decode_dense(&q, &k, &v, t, scale, &mut out_dense);
+        decode_dense(&q, &f16_ref(&k), &f16_ref(&v), t, scale, &mut out_dense);
 
         for (a, b) in out_sparse.iter().zip(&out_dense) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
@@ -362,13 +367,13 @@ mod tests {
         let mut out_sparse = vec![0.0f32; hd];
         decode_sparse(
             &q, &k_comp, &v_comp,
-            &k[t_comp * hd..], &v[t_comp * hd..], tail,
+            &to_f16_vec(&k[t_comp * hd..]), &to_f16_vec(&v[t_comp * hd..]), tail,
             scale, &mut out_sparse, None,
         );
 
-        // dense equivalent over the masked matrices
-        let kfull = [kp, k[t_comp * hd..].to_vec()].concat();
-        let vfull = [vp, v[t_comp * hd..].to_vec()].concat();
+        // dense equivalent over the masked, f16-rounded matrices
+        let kfull = f16_ref(&[kp, k[t_comp * hd..].to_vec()].concat());
+        let vfull = f16_ref(&[vp, v[t_comp * hd..].to_vec()].concat());
         let mut out_dense = vec![0.0f32; hd];
         decode_dense(&q, &kfull, &vfull, t_comp + tail, scale, &mut out_dense);
 
@@ -395,12 +400,13 @@ mod tests {
             let vp = per_token_magnitude(&v[..t_comp * hd], t_comp, hd, kk);
             let k_comp = BitmapMatrix::compress(&kp, t_comp, hd, PackAxis::Token).unwrap();
             let v_comp = BitmapMatrix::compress(&vp, t_comp, hd, PackAxis::Channel).unwrap();
-            let (tail_k, tail_v) = (&k[t_comp * hd..], &v[t_comp * hd..]);
+            let (tail_k, tail_v) =
+                (to_f16_vec(&k[t_comp * hd..]), to_f16_vec(&v[t_comp * hd..]));
 
             let mut fused = vec![0.0f32; g * hd];
             let (mut sc, mut st) = (Vec::new(), Vec::new());
             decode_sparse_group(
-                &qs, g, &k_comp, &v_comp, tail_k, tail_v, tail,
+                &qs, g, &k_comp, &v_comp, &tail_k, &tail_v, tail,
                 scale, &mut fused, &mut sc, &mut st,
             );
 
@@ -408,7 +414,7 @@ mod tests {
                 let mut lane = vec![0.0f32; hd];
                 decode_sparse(
                     &qs[l * hd..(l + 1) * hd], &k_comp, &v_comp,
-                    tail_k, tail_v, tail, scale, &mut lane, None,
+                    &tail_k, &tail_v, tail, scale, &mut lane, None,
                 );
                 assert_eq!(&fused[l * hd..(l + 1) * hd], &lane[..], "seed {seed} lane {l}");
             }
@@ -429,11 +435,12 @@ mod tests {
         let mut fused = vec![0.0f32; g * hd];
         let (mut sc, mut st) = (Vec::new(), Vec::new());
         decode_sparse_group(
-            &qs, g, &k_comp, &v_comp, &k, &v, tail, 0.2, &mut fused, &mut sc, &mut st,
+            &qs, g, &k_comp, &v_comp, &to_f16_vec(&k), &to_f16_vec(&v), tail, 0.2,
+            &mut fused, &mut sc, &mut st,
         );
         for l in 0..g {
             let mut lane = vec![0.0f32; hd];
-            decode_dense(&qs[l * hd..(l + 1) * hd], &k, &v, tail, 0.2, &mut lane);
+            decode_dense(&qs[l * hd..(l + 1) * hd], &f16_ref(&k), &f16_ref(&v), tail, 0.2, &mut lane);
             for (a, b) in fused[l * hd..(l + 1) * hd].iter().zip(&lane) {
                 assert!((a - b).abs() < 1e-5, "lane {l}: {a} vs {b}");
             }

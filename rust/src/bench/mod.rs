@@ -19,6 +19,21 @@ impl Default for BenchOpts {
     }
 }
 
+impl BenchOpts {
+    /// Tiny iteration counts for CI smoke runs (`smoke_mode()`).
+    pub fn smoke() -> BenchOpts {
+        BenchOpts { warmup_iters: 1, iters: 3, min_time_s: 0.0 }
+    }
+}
+
+/// True when `MUSTAFAR_BENCH_SMOKE` is set non-empty and not "0" — the
+/// CI bench mode that exercises both kernel code paths without real
+/// measurement time. Shared by every bench target so the env contract
+/// cannot drift between them.
+pub fn smoke_mode() -> bool {
+    std::env::var("MUSTAFAR_BENCH_SMOKE").map_or(false, |v| !v.is_empty() && v != "0")
+}
+
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {

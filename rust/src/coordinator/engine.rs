@@ -127,7 +127,7 @@ impl Engine {
                         self.model.cfg().n_layers,
                         self.model.cfg().n_kv_heads,
                         self.model.cfg().head_dim,
-                    );
+                    )?;
                     kv.ingest_prefill(&r.k, &r.v, r.t, None)?;
                     (SeqState::Native(Box::new(kv)), r.logits_last)
                 }
@@ -425,15 +425,17 @@ mod tests {
     fn gqa_long_context_sparse_decode_completes() {
         // Long enough to push groups through compression during decode
         // with group > 1 (fused path over a non-empty compressed region).
-        // head_dim = 64: channel-packed V tiles need channels >= TILE to
-        // be populated at all (see ROADMAP seed-bug note), so smaller
-        // heads would leave the fused value kernel unexercised here.
-        let mut e = tiny_engine_gqa(Backend::NativeSparse, (0.6, 0.6), 4, 2, 64);
-        let out = e.run_trace(reqs(2, 160, 8)).unwrap();
-        assert_eq!(out.len(), 2);
-        for c in &out {
-            assert_eq!(c.tokens.len(), 8);
-            assert!(c.kv_bytes < c.kv_dense_bytes);
+        // head_dim = 32 exercises the partial channel tiles of the
+        // value cache (the former seed bug left hd < 64 silently empty);
+        // head_dim = 64 covers the full-tile path.
+        for hd in [32usize, 64] {
+            let mut e = tiny_engine_gqa(Backend::NativeSparse, (0.6, 0.6), 4, 2, hd);
+            let out = e.run_trace(reqs(2, 160, 8)).unwrap();
+            assert_eq!(out.len(), 2);
+            for c in &out {
+                assert_eq!(c.tokens.len(), 8, "hd={hd}");
+                assert!(c.kv_bytes < c.kv_dense_bytes, "hd={hd}");
+            }
         }
     }
 }

@@ -325,6 +325,12 @@ impl PjrtBackend {
     }
 
     /// fp16-accounting memory for a PJRT sequence (engine metrics).
+    ///
+    /// Unlike the native backend — whose `SequenceKV` stores real
+    /// binary16, making its figures actual bytes — the PJRT host buffers
+    /// stay `f32` because the AOT'd XLA artifacts take F32 literals at
+    /// the FFI boundary; this figure remains the paper's fp16 *model*
+    /// of the same state so both backends report comparable numbers.
     pub fn seq_memory_bytes(&self, seq: &PjrtSeq) -> (usize, usize) {
         use crate::sparse::bitmap::{BITMAP_BYTES, OFFSET_BYTES, PAD, VALUE_BYTES};
         let (l, kv, hd) = (self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim);

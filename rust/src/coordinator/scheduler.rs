@@ -12,10 +12,14 @@ use crate::config::{EngineConfig, ModelConfig};
 use crate::coordinator::request::Request;
 use crate::kvcache::KvPolicy;
 use crate::sparse::bitmap::{BITMAP_BYTES, OFFSET_BYTES, PAD, TILE, VALUE_BYTES};
+use crate::sparse::PackAxis;
 
 /// Estimate the steady-state KV bytes a sequence of `tokens` total tokens
 /// (prompt + generation) will hold under `policy` — the planning model
-/// used for admission, matching `SequenceKV::memory_bytes` accounting.
+/// used for admission. Matches `SequenceKV::memory_bytes`, which since
+/// the f16 storage refactor reports *actually stored* bytes
+/// (`VALUE_BYTES = 2` is the real per-value footprint, not an accounting
+/// fiction), so admission reserves what sequences genuinely occupy.
 pub fn estimate_seq_bytes(policy: &KvPolicy, cfg: &ModelConfig, tokens: usize) -> usize {
     let heads = cfg.n_layers * cfg.n_kv_heads;
     let hd = cfg.head_dim;
@@ -27,20 +31,45 @@ pub fn estimate_seq_bytes(policy: &KvPolicy, cfg: &ModelConfig, tokens: usize) -
     let comp_tokens = tokens.saturating_sub(window);
     let tail_tokens = tokens - comp_tokens;
 
-    let per_cache = |sparsity: f64, prune: bool| -> usize {
-        if !prune {
-            return comp_tokens * hd * VALUE_BYTES;
+    // Axis-aware tile model. Key tiles span 64 tokens at a fixed channel
+    // (always full); Value tiles span up to 64 channels of one token, and
+    // the trailing block is *partial* when hd % 64 != 0 — each partial
+    // tile still pays its full bitmap + offset overhead, so the count
+    // must be ceil-based or hd < 64 sequences get under-reserved.
+    let per_cache = |sparsity: f64, prune: bool, axis: PackAxis| -> usize {
+        // An unpruned-but-compressed cache (Method::None under a
+        // compressing policy) still lives in the bitmap format — fully
+        // dense tiles that pay value padding and per-tile bitmap+offset
+        // overhead — so it is the kept = hd case of the same model.
+        let kept = if prune { crate::prune::keep_count(hd, sparsity) } else { hd };
+        match axis {
+            PackAxis::Token => {
+                let tiles = comp_tokens * hd / TILE;
+                let vals_per_tile = (kept * TILE / hd).div_ceil(PAD) * PAD; // avg nnz padded
+                tiles * (vals_per_tile * VALUE_BYTES + BITMAP_BYTES + OFFSET_BYTES)
+            }
+            PackAxis::Channel => {
+                let mut per_tok = 0usize;
+                let mut c = 0;
+                while c < hd {
+                    let width = TILE.min(hd - c);
+                    let nnz = (kept * width).div_ceil(hd); // avg nnz in this block
+                    per_tok += nnz.div_ceil(PAD) * PAD * VALUE_BYTES + BITMAP_BYTES + OFFSET_BYTES;
+                    c += width;
+                }
+                comp_tokens * per_tok
+            }
         }
-        let kept = crate::prune::keep_count(hd, sparsity);
-        // per 64-elem tile: padded values + bitmap + offset
-        let tiles = comp_tokens * hd / TILE;
-        let vals_per_tile = (kept * TILE / hd).div_ceil(PAD) * PAD; // avg nnz per tile padded
-        tiles * (vals_per_tile * VALUE_BYTES + BITMAP_BYTES + OFFSET_BYTES)
     };
 
     let sp = &policy.sparsity;
-    let k_bytes = per_cache(sp.key_sparsity, sp.key_method != crate::prune::Method::None);
-    let v_bytes = per_cache(sp.value_sparsity, sp.value_method != crate::prune::Method::None);
+    let k_bytes =
+        per_cache(sp.key_sparsity, sp.key_method != crate::prune::Method::None, PackAxis::Token);
+    let v_bytes = per_cache(
+        sp.value_sparsity,
+        sp.value_method != crate::prune::Method::None,
+        PackAxis::Channel,
+    );
     heads * (k_bytes + v_bytes + tail_tokens * dense_per_tok)
 }
 
@@ -153,6 +182,44 @@ mod tests {
         let r70 = m70 as f64 / dense as f64;
         assert!((0.55..0.75).contains(&r50), "{r50}");
         assert!((0.38..0.55).contains(&r70), "{r70}");
+    }
+
+    #[test]
+    fn estimate_tracks_actual_bytes_incl_partial_tile_heads() {
+        // Regression for the partial-channel-tile shapes (hd % 64 != 0):
+        // every partial tile pays full bitmap+offset overhead, and the
+        // planning model must reserve for it, or hd < 64 workloads
+        // over-admit against kv_budget_bytes.
+        use crate::kvcache::SequenceKV;
+        use crate::util::Pcg32;
+        // second policy: unpruned-but-compressed V (Method::None) still
+        // pays bitmap-format overhead and must be priced as such
+        for policy in [KvPolicy::mustafar(0.5, 0.5), KvPolicy::mustafar(0.5, 0.0)] {
+            for hd in [32usize, 64, 96] {
+                let mut cfg = mc();
+                cfg.head_dim = hd;
+                let tokens = 1024usize;
+                let est = estimate_seq_bytes(&policy, &cfg, tokens);
+
+                let heads = cfg.n_layers * cfg.n_kv_heads;
+                let mut rng = Pcg32::seeded(900 + hd as u64);
+                let mk = |rng: &mut Pcg32| -> Vec<Vec<f32>> {
+                    (0..heads)
+                        .map(|_| (0..tokens * hd).map(|_| rng.normal_f32()).collect())
+                        .collect()
+                };
+                let (k, v) = (mk(&mut rng), mk(&mut rng));
+                let mut kv = SequenceKV::new(policy, cfg.n_layers, cfg.n_kv_heads, hd).unwrap();
+                kv.ingest_prefill(&k, &v, tokens, None).unwrap();
+                let (actual, _) = kv.memory_bytes();
+
+                let ratio = est as f64 / actual as f64;
+                assert!(
+                    (0.8..1.3).contains(&ratio),
+                    "hd={hd} policy {policy:?}: est {est} vs actual {actual} (ratio {ratio:.3})"
+                );
+            }
+        }
     }
 
     #[test]

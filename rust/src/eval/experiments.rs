@@ -482,7 +482,8 @@ fn fig6b(ctx: &ExpCtx) -> Result<()> {
                     || cfg.sparsity.value_method != Method::None,
                 local_window: crate::prune::LOCAL_WINDOW,
             };
-            let mut kv = SequenceKV::new(policy, mcfg.n_layers, mcfg.n_kv_heads, mcfg.head_dim);
+            let mut kv = SequenceKV::new(policy, mcfg.n_layers, mcfg.n_kv_heads, mcfg.head_dim)
+                .expect("kv geometry");
             kv.ingest_prefill(&pre.k, &pre.v, pre.t, None).unwrap();
             if cfg.sparsity.key_method == Method::ThinkStructured {
                 // ThinK keeps kept channels dense: kept fraction of K + dense V

@@ -115,7 +115,8 @@ fn eval_one(
         compress: cfg.compresses(),
         local_window: LOCAL_WINDOW,
     };
-    let mut kv = SequenceKV::new(policy, mcfg.n_layers, mcfg.n_kv_heads, mcfg.head_dim);
+    let mut kv = SequenceKV::new(policy, mcfg.n_layers, mcfg.n_kv_heads, mcfg.head_dim)
+        .expect("kv geometry");
 
     // H2O eviction first (paper §4.2.1: Mustafar prunes the *retained*
     // tokens), per head — budgets are uniform so head token counts agree.

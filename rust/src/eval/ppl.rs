@@ -32,7 +32,8 @@ pub fn doc_nll(model: &NativeModel, doc: &[u16], split: usize, cfgs: &[EvalConfi
                     || cfg.quant.is_some(),
                 local_window: LOCAL_WINDOW,
             };
-            let mut kv = SequenceKV::new(policy, mcfg.n_layers, mcfg.n_kv_heads, mcfg.head_dim);
+            let mut kv = SequenceKV::new(policy, mcfg.n_layers, mcfg.n_kv_heads, mcfg.head_dim)
+                .expect("kv geometry");
             let aux = if needs_aux(cfg) { Some(&pre.aux) } else { None };
             kv.ingest_prefill(&pre.k, &pre.v, split, aux).expect("ingest");
 

@@ -3,6 +3,9 @@
 //! Per sequence, per (layer, kv-head): a bitmap-compressed region (tokens
 //! that exited the local window, pruned + compressed) and a dense tail
 //! (the local window plus the 64-token compression group in flight).
+//! Both regions store real IEEE binary16 (`sparse::f16`) — the paper's
+//! storage type — so `mem_usage`/`memory_bytes` report *actually stored*
+//! bytes, not an accounting model.
 //!
 //! Lifecycle, following §3 and App. C:
 //!  * prefill KV is pruned + compressed before decode starts (everything
@@ -14,9 +17,10 @@
 //!  * optional KIVI-style fake quantization after pruning (§4.2.2).
 
 use crate::config::SparsityConfig;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::prune::{self, Method, OutputAwareCtx};
 use crate::quant;
+use crate::sparse::f16;
 use crate::sparse::{BitmapMatrix, PackAxis, TILE};
 
 /// Dense-tail capacity: one compression group in flight + local window.
@@ -63,7 +67,7 @@ impl KvPolicy {
 /// How many dead 64-token groups may accumulate ahead of the tail cursor
 /// before the buffers are compacted. Larger values amortize the memmove
 /// further at the cost of transient buffer growth: up to
-/// `TAIL_COMPACT_GROUPS * TILE * hd` dead floats in each of the k and v
+/// `TAIL_COMPACT_GROUPS * TILE * hd` dead elements in each of the k and v
 /// buffers per head.
 const TAIL_COMPACT_GROUPS: usize = 4;
 
@@ -73,36 +77,49 @@ pub struct HeadKV {
     /// Compressed region: Key packed along tokens, Value along channels.
     pub k_comp: BitmapMatrix,
     pub v_comp: BitmapMatrix,
-    /// Dense tail storage; the live window is `tail_k_buf[tail_start..]`,
-    /// `[tail_len x hd]` row-major, post-RoPE keys. Compressed-away
-    /// groups advance the cursor instead of memmoving the window every
-    /// group; the dead prefix is compacted lazily (`advance_tail`).
-    tail_k_buf: Vec<f32>,
-    tail_v_buf: Vec<f32>,
+    /// Dense tail storage in binary16; the live window is
+    /// `tail_k_buf[tail_start..]`, `[tail_len x hd]` row-major, post-RoPE
+    /// keys. Compressed-away groups advance the cursor instead of
+    /// memmoving the window every group; the dead prefix is compacted
+    /// lazily (`advance_tail`).
+    tail_k_buf: Vec<u16>,
+    tail_v_buf: Vec<u16>,
     /// Element offset of the live tail within both buffers.
     tail_start: usize,
 }
 
 impl HeadKV {
-    fn new(hd: usize) -> HeadKV {
-        HeadKV {
+    /// Build the per-head state, guarding against geometries the bitmap
+    /// format cannot represent. With partial channel tiles any
+    /// `hd >= 1` is storable (including `hd < 64` and `hd % 64 != 0`);
+    /// a zero-width head has no tiles at all and is rejected loudly
+    /// instead of producing a silently-empty compressed region.
+    pub fn new(hd: usize) -> Result<HeadKV> {
+        if hd == 0 {
+            return Err(Error::Shape(
+                "HeadKV: head_dim must be >= 1 — the bitmap format has no tiles for \
+                 zero-width heads"
+                    .into(),
+            ));
+        }
+        Ok(HeadKV {
             k_comp: BitmapMatrix::empty(hd, PackAxis::Token),
             v_comp: BitmapMatrix::empty(hd, PackAxis::Channel),
             tail_k_buf: Vec::new(),
             tail_v_buf: Vec::new(),
             tail_start: 0,
-        }
+        })
     }
 
-    /// Live dense-tail keys `[tail_len x hd]`.
+    /// Live dense-tail keys `[tail_len x hd]` (binary16).
     #[inline]
-    pub fn tail_k(&self) -> &[f32] {
+    pub fn tail_k(&self) -> &[u16] {
         &self.tail_k_buf[self.tail_start..]
     }
 
-    /// Live dense-tail values `[tail_len x hd]`.
+    /// Live dense-tail values `[tail_len x hd]` (binary16).
     #[inline]
-    pub fn tail_v(&self) -> &[f32] {
+    pub fn tail_v(&self) -> &[u16] {
         &self.tail_v_buf[self.tail_start..]
     }
 
@@ -111,8 +128,8 @@ impl HeadKV {
     }
 
     fn push_tail(&mut self, k: &[f32], v: &[f32]) {
-        self.tail_k_buf.extend_from_slice(k);
-        self.tail_v_buf.extend_from_slice(v);
+        f16::extend_f16(&mut self.tail_k_buf, k);
+        f16::extend_f16(&mut self.tail_v_buf, v);
     }
 
     /// Consume `elems` elements (one compressed-away group) from the
@@ -130,6 +147,20 @@ impl HeadKV {
             self.tail_v_buf.truncate(live);
             self.tail_start = 0;
         }
+    }
+
+    /// Actually-stored bytes of this head's *live* KV state: both
+    /// compressed regions (f16 values incl. padding + u64 bitmaps + u32
+    /// offsets) plus the live f16 dense tail. Every term is the
+    /// in-memory size of real data — values occupy 2 bytes each, not 4.
+    /// Transient allocator slack is excluded: the lazily-compacted dead
+    /// tail prefix (bounded by `TAIL_COMPACT_GROUPS` groups) and `Vec`
+    /// spare capacity are not live state.
+    pub fn mem_usage(&self) -> usize {
+        self.k_comp.compressed_bytes()
+            + self.v_comp.compressed_bytes()
+            + std::mem::size_of_val(self.tail_k())
+            + std::mem::size_of_val(self.tail_v())
     }
 }
 
@@ -156,15 +187,10 @@ pub struct SequenceKV {
 }
 
 impl SequenceKV {
-    pub fn new(policy: KvPolicy, n_layers: usize, n_kv: usize, hd: usize) -> SequenceKV {
-        SequenceKV {
-            policy,
-            n_layers,
-            n_kv,
-            hd,
-            heads: (0..n_layers * n_kv).map(|_| HeadKV::new(hd)).collect(),
-            tokens: 0,
-        }
+    pub fn new(policy: KvPolicy, n_layers: usize, n_kv: usize, hd: usize) -> Result<SequenceKV> {
+        let heads =
+            (0..n_layers * n_kv).map(|_| HeadKV::new(hd)).collect::<Result<Vec<HeadKV>>>()?;
+        Ok(SequenceKV { policy, n_layers, n_kv, hd, heads, tokens: 0 })
     }
 
     #[inline]
@@ -248,8 +274,9 @@ impl SequenceKV {
         (kp, vp)
     }
 
-    /// Append one decoded token's K/V for (layer, kv). Call for every
-    /// (layer, kv) exactly once per generated token, then `commit_token`.
+    /// Append one decoded token's K/V for (layer, kv) — narrowed to
+    /// binary16 at the push. Call for every (layer, kv) exactly once per
+    /// generated token, then `commit_token`.
     pub fn append(&mut self, layer: usize, kv: usize, k: &[f32], v: &[f32]) {
         debug_assert_eq!(k.len(), self.hd);
         self.head_mut(layer, kv).push_tail(k, v);
@@ -275,20 +302,28 @@ impl SequenceKV {
         // output-aware scores are a prefill-time notion.
         let kk_k = prune::keep_count(hd, sp.key_sparsity);
         let kk_v = prune::keep_count(hd, sp.value_sparsity);
+        // One widening scratch reused across heads: the only remaining
+        // group-boundary allocations are the pruned copies themselves
+        // (matching the seed's allocation envelope).
+        let mut kg = vec![0.0f32; TILE * hd];
+        let mut vg = vec![0.0f32; TILE * hd];
         for idx in 0..self.heads.len() {
+            // Widen the exiting group to f32 for pruning/quantization;
+            // appending narrows back — a no-op for values already rounded
+            // through f16 once.
             let (mut kp, mut vp) = {
                 let h = &self.heads[idx];
-                let kg = &h.tail_k()[..TILE * hd];
-                let vg = &h.tail_v()[..TILE * hd];
+                f16::widen_into(&mut kg, &h.tail_k()[..TILE * hd]);
+                f16::widen_into(&mut vg, &h.tail_v()[..TILE * hd]);
                 let kp = if sp.key_method == Method::None {
-                    kg.to_vec()
+                    kg.clone()
                 } else {
-                    prune::per_token_magnitude(kg, TILE, hd, kk_k)
+                    prune::per_token_magnitude(&kg, TILE, hd, kk_k)
                 };
                 let vp = if sp.value_method == Method::None {
-                    vg.to_vec()
+                    vg.clone()
                 } else {
-                    prune::per_token_magnitude(vg, TILE, hd, kk_v)
+                    prune::per_token_magnitude(&vg, TILE, hd, kk_v)
                 };
                 (kp, vp)
             };
@@ -304,16 +339,17 @@ impl SequenceKV {
         Ok(())
     }
 
-    /// (compressed_bytes, dense_equivalent_bytes) under the paper's fp16
-    /// accounting — the Fig 6b metric, aggregated over layers and heads.
-    /// The dense tail is counted at its dense size in both.
+    /// (compressed_bytes, dense_equivalent_bytes) — the Fig 6b metric,
+    /// aggregated over layers and heads. Since the cache stores real
+    /// binary16, the compressed figure is the sum of actually-stored
+    /// bytes (`HeadKV::mem_usage`); the dense equivalent counts the same
+    /// token count at dense fp16.
     pub fn memory_bytes(&self) -> (usize, usize) {
         let hd = self.hd;
         let mut comp = 0usize;
         let mut dense = 0usize;
         for h in &self.heads {
-            comp += h.k_comp.compressed_bytes() + h.v_comp.compressed_bytes();
-            comp += (h.tail_k().len() + h.tail_v().len()) * crate::sparse::bitmap::VALUE_BYTES;
+            comp += h.mem_usage();
             dense += 2 * self.tokens * hd * crate::sparse::bitmap::VALUE_BYTES;
         }
         (comp, dense)
@@ -343,7 +379,7 @@ mod tests {
     #[test]
     fn prefill_ingest_splits_comp_and_tail() {
         let (l, kv, hd, t) = (2, 2, 64, 448);
-        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.5, 0.5), l, kv, hd);
+        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.5, 0.5), l, kv, hd).unwrap();
         let k = rand_heads(l * kv, t, hd, 1);
         let v = rand_heads(l * kv, t, hd, 2);
         seq.ingest_prefill(&k, &v, t, None).unwrap();
@@ -358,9 +394,36 @@ mod tests {
     }
 
     #[test]
+    fn small_head_dim_populates_value_cache() {
+        // Seed-bug regression: hd = 32 < 64 channel-packed V produced
+        // zero tiles (channels / TILE == 0) and silently contributed
+        // nothing; partial channel tiles must carry the real values.
+        let (l, kv, hd, t) = (1, 1, 32, 448);
+        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.5, 0.5), l, kv, hd).unwrap();
+        let k = rand_heads(l * kv, t, hd, 21);
+        let v = rand_heads(l * kv, t, hd, 22);
+        seq.ingest_prefill(&k, &v, t, None).unwrap();
+        let h = seq.head(0, 0);
+        assert_eq!(h.v_comp.tokens, 384);
+        assert_eq!(h.v_comp.bitmaps.len(), 384, "one partial tile per token");
+        let rate = h.v_comp.nnz() as f64 / (384.0 * hd as f64);
+        assert!((rate - 0.5).abs() < 0.05, "value cache holds ~50%: {rate}");
+        // and the decompressed region matches the pruned reference
+        let want =
+            f16::f16_round_vec(&crate::prune::per_token_magnitude(&v[0][..384 * hd], 384, hd, 16));
+        assert_eq!(h.v_comp.decompress(), want);
+    }
+
+    #[test]
+    fn zero_head_dim_is_rejected() {
+        let err = SequenceKV::new(KvPolicy::dense(), 1, 1, 0);
+        assert!(err.is_err(), "hd = 0 must fail construction, not silently store nothing");
+    }
+
+    #[test]
     fn dense_policy_keeps_everything_in_tail() {
         let (l, kv, hd, t) = (1, 1, 32, 200);
-        let mut seq = SequenceKV::new(KvPolicy::dense(), l, kv, hd);
+        let mut seq = SequenceKV::new(KvPolicy::dense(), l, kv, hd).unwrap();
         let k = rand_heads(1, t, hd, 3);
         let v = rand_heads(1, t, hd, 4);
         seq.ingest_prefill(&k, &v, t, None).unwrap();
@@ -372,7 +435,7 @@ mod tests {
     #[test]
     fn decode_appends_trigger_group_compression() {
         let (l, kv, hd) = (1, 1, 64);
-        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.7, 0.7), l, kv, hd);
+        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.7, 0.7), l, kv, hd).unwrap();
         let mut rng = Pcg32::seeded(5);
         // grow token by token past the trigger point
         for i in 0..TAIL_CAP + 10 {
@@ -393,9 +456,10 @@ mod tests {
     fn lazy_tail_compaction_preserves_contents() {
         // Drive enough tokens through the decode path to cross several
         // compaction cycles; the live tail must always hold exactly the
-        // most recent `tail_len` rows, and the dead prefix stays bounded.
+        // most recent `tail_len` rows (as their f16 narrowings — storage
+        // is binary16), and the dead prefix stays bounded.
         let hd = 16;
-        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.5, 0.5), 1, 1, hd);
+        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.5, 0.5), 1, 1, hd).unwrap();
         let row = |i: usize, c: usize| (i * 31 + c) as f32 + 0.25;
         for i in 0..1000 {
             let k: Vec<f32> = (0..hd).map(|c| row(i, c)).collect();
@@ -411,9 +475,13 @@ mod tests {
             for r in 0..tl {
                 let tok = i + 1 - tl + r;
                 for c in 0..hd {
-                    assert_eq!(tail[r * hd + c], row(tok, c), "token {i} row {r} ch {c}");
+                    assert_eq!(
+                        tail[r * hd + c],
+                        crate::sparse::f32_to_f16(row(tok, c)),
+                        "token {i} row {r} ch {c}"
+                    );
                 }
-                assert_eq!(h.tail_v()[r * hd], -row(i + 1 - tl + r, 0));
+                assert_eq!(h.tail_v()[r * hd], crate::sparse::f32_to_f16(-row(i + 1 - tl + r, 0)));
             }
             // dead prefix bounded by the compaction threshold
             assert!(
@@ -430,12 +498,39 @@ mod tests {
         let v = rand_heads(1, t, hd, 7);
         let mut rates = Vec::new();
         for s in [0.5, 0.7] {
-            let mut seq = SequenceKV::new(KvPolicy::mustafar(s, s), l, kv, hd);
+            let mut seq = SequenceKV::new(KvPolicy::mustafar(s, s), l, kv, hd).unwrap();
             seq.ingest_prefill(&k, &v, t, None).unwrap();
             rates.push(seq.compression_rate());
         }
         assert!(rates[0] > rates[1], "{rates:?}");
         assert!(rates[0] < 1.0);
+    }
+
+    #[test]
+    fn mem_usage_equals_actually_stored_bytes() {
+        // Acceptance: the compressed-bytes figure must equal the summed
+        // in-memory size of every buffer actually held — f16 values are
+        // 2 bytes in memory, not 4.
+        let (l, kv, hd, t) = (2, 1, 64, 448);
+        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.5, 0.5), l, kv, hd).unwrap();
+        let k = rand_heads(l * kv, t, hd, 30);
+        let v = rand_heads(l * kv, t, hd, 31);
+        seq.ingest_prefill(&k, &v, t, None).unwrap();
+
+        let mut expect = 0usize;
+        for layer in 0..l {
+            let h = seq.head(layer, 0);
+            for m in [&h.k_comp, &h.v_comp] {
+                expect += std::mem::size_of_val(m.values.as_slice())
+                    + std::mem::size_of_val(m.bitmaps.as_slice())
+                    + std::mem::size_of_val(&m.offsets.as_slice()[..m.offsets.len() - 1]);
+            }
+            expect += std::mem::size_of_val(h.tail_k()) + std::mem::size_of_val(h.tail_v());
+            assert_eq!(std::mem::size_of_val(&h.k_comp.values[0]), 2, "values are f16");
+        }
+        let (comp, dense) = seq.memory_bytes();
+        assert_eq!(comp, expect);
+        assert!(comp < dense);
     }
 
     #[test]
@@ -445,7 +540,7 @@ mod tests {
         let v = rand_heads(1, t, hd, 9);
         let mut pol = KvPolicy::mustafar(0.5, 0.5);
         pol.quant = Some(QuantConfig { key_bits: 2, value_bits: 2 });
-        let mut seq = SequenceKV::new(pol, l, kv, hd);
+        let mut seq = SequenceKV::new(pol, l, kv, hd).unwrap();
         seq.ingest_prefill(&k, &v, t, None).unwrap();
         // quantized values differ from originals (2-bit is coarse)
         let dec = seq.head(0, 0).k_comp.decompress();
@@ -463,13 +558,14 @@ mod tests {
         let (l, kv, hd, t) = (1, 1, 64, 96);
         let k = rand_heads(1, t, hd, 10);
         let v = rand_heads(1, t, hd, 11);
-        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.5, 0.0), l, kv, hd);
+        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.5, 0.0), l, kv, hd).unwrap();
         seq.ingest_prefill(&k, &v, t, None).unwrap();
         let h = seq.head(0, 0);
-        // first 64 tokens compressed, pruned to kk=32
-        let want = crate::prune::per_token_magnitude(&k[0][..64 * hd], 64, hd, 32);
+        // first 64 tokens compressed, pruned to kk=32, stored as f16
+        let want =
+            f16::f16_round_vec(&crate::prune::per_token_magnitude(&k[0][..64 * hd], 64, hd, 32));
         assert_eq!(h.k_comp.decompress(), want);
-        // value method None -> v stored exactly
-        assert_eq!(h.v_comp.decompress(), &v[0][..64 * hd]);
+        // value method None -> v stored exactly (up to the f16 narrowing)
+        assert_eq!(h.v_comp.decompress(), f16::f16_round_vec(&v[0][..64 * hd]));
     }
 }

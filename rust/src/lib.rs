@@ -1,3 +1,8 @@
+// Portable SIMD for the widening tile kernels (sparse::f16::simd) is
+// nightly-only; the `simd` cargo feature opts in, the default build stays
+// stable with the bit-identical scalar fallback.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # Mustafar-RS
 //!
 //! Reproduction of *"MUSTAFAR: Promoting Unstructured Sparsity for KV

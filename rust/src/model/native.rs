@@ -411,25 +411,32 @@ mod tests {
         assert_eq!(r.att_total[1].len(), 80);
     }
 
+    /// Max-abs deviation scaled by the reference's own magnitude. The
+    /// cached path stores K/V as binary16 (≤2^-11 relative rounding per
+    /// element) while prefill computes in f32, so decode-vs-prefill
+    /// parity holds to a small *relative* bound rather than exactly.
+    fn rel_mad(got: &[f32], want: &[f32]) -> f32 {
+        let mad = got.iter().zip(want).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        let scale = want.iter().map(|x| x.abs()).fold(f32::MIN_POSITIVE, f32::max);
+        mad / scale
+    }
+
     #[test]
     fn decode_after_prefill_matches_full_prefill() {
         // prefill(n) then decode(token n) must equal prefill(n+1)'s last
-        // logits when the cache is dense (no pruning).
+        // logits when the cache is dense (no pruning), up to the f16
+        // rounding of the cached K/V.
         let m = tiny_model();
         let tokens: Vec<u16> = (0..65).map(|i| (i * 7 % 400 + 16) as u16).collect();
         let full = m.prefill(&tokens, false);
 
         let r = m.prefill(&tokens[..64], false);
-        let mut kv = SequenceKV::new(KvPolicy::dense(), 2, 1, 32);
+        let mut kv = SequenceKV::new(KvPolicy::dense(), 2, 1, 32).unwrap();
         kv.ingest_prefill(&r.k, &r.v, 64, None).unwrap();
         let logits = m.decode(tokens[64], 64, &mut kv).unwrap();
 
-        let mad: f32 = logits
-            .iter()
-            .zip(&full.logits_last)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0, f32::max);
-        assert!(mad < 1e-3, "decode vs prefill mismatch: {mad}");
+        let rel = rel_mad(&logits, &full.logits_last);
+        assert!(rel < 2e-2, "decode vs prefill mismatch: rel {rel}");
     }
 
     #[test]
@@ -438,11 +445,11 @@ mod tests {
         let tokens: Vec<u16> = (0..96).map(|i| (i * 11 % 400 + 16) as u16).collect();
         let r = m.prefill(&tokens, false);
 
-        let mut kv_dense = SequenceKV::new(KvPolicy::dense(), 2, 1, 32);
+        let mut kv_dense = SequenceKV::new(KvPolicy::dense(), 2, 1, 32).unwrap();
         kv_dense.ingest_prefill(&r.k, &r.v, 96, None).unwrap();
         let ld = m.decode(300, 96, &mut kv_dense).unwrap();
 
-        let mut kv_sparse = SequenceKV::new(KvPolicy::mustafar(0.7, 0.7), 2, 1, 32);
+        let mut kv_sparse = SequenceKV::new(KvPolicy::mustafar(0.7, 0.7), 2, 1, 32).unwrap();
         kv_sparse.ingest_prefill(&r.k, &r.v, 96, None).unwrap();
         let ls = m.decode(300, 96, &mut kv_sparse).unwrap();
 
@@ -467,7 +474,7 @@ mod tests {
         let tokens: Vec<u16> = (0..120).map(|i| (i * 13 % 400 + 16) as u16).collect();
         let r = m.prefill(&tokens, false);
 
-        let mut kv_a = SequenceKV::new(KvPolicy::mustafar(0.6, 0.6), 2, 1, 32);
+        let mut kv_a = SequenceKV::new(KvPolicy::mustafar(0.6, 0.6), 2, 1, 32).unwrap();
         kv_a.ingest_prefill(&r.k, &r.v, 120, None).unwrap();
         let mut kv_b = kv_a.clone();
 
@@ -507,16 +514,12 @@ mod tests {
         let full = m.prefill(&tokens, false);
 
         let r = m.prefill(&tokens[..48], false);
-        let mut kv = SequenceKV::new(KvPolicy::dense(), 2, 1, 16);
+        let mut kv = SequenceKV::new(KvPolicy::dense(), 2, 1, 16).unwrap();
         kv.ingest_prefill(&r.k, &r.v, 48, None).unwrap();
         let logits = m.decode(tokens[48], 48, &mut kv).unwrap();
 
-        let mad: f32 = logits
-            .iter()
-            .zip(&full.logits_last)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0, f32::max);
-        assert!(mad < 1e-3, "wide-GQA decode vs prefill mismatch: {mad}");
+        let rel = rel_mad(&logits, &full.logits_last);
+        assert!(rel < 2e-2, "wide-GQA decode vs prefill mismatch: rel {rel}");
     }
 
     #[test]
@@ -541,15 +544,11 @@ mod tests {
         let full = m.prefill(&tokens, false);
 
         let r = m.prefill(&tokens[..40], false);
-        let mut kv = SequenceKV::new(KvPolicy::dense(), 1, 1, 8);
+        let mut kv = SequenceKV::new(KvPolicy::dense(), 1, 1, 8).unwrap();
         kv.ingest_prefill(&r.k, &r.v, 40, None).unwrap();
         let logits = m.decode(tokens[40], 40, &mut kv).unwrap();
 
-        let mad: f32 = logits
-            .iter()
-            .zip(&full.logits_last)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0, f32::max);
-        assert!(mad < 1e-3, "chunked MQA decode vs prefill mismatch: {mad}");
+        let rel = rel_mad(&logits, &full.logits_last);
+        assert!(rel < 2e-2, "chunked MQA decode vs prefill mismatch: rel {rel}");
     }
 }

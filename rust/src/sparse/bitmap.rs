@@ -7,24 +7,36 @@
 //! segments are padded to a multiple of 8 ("coalescing" padding — the
 //! paper's 15%-overhead source at 50% sparsity).
 //!
+//! Values are stored as real IEEE 754 binary16 (`u16` bit patterns,
+//! `sparse::f16`), exactly as the paper's kernels do — the compressed
+//! byte accounting below *is* the in-memory footprint, and the SpMV
+//! kernels widen f16→f32 in-register while walking the stream.
+//!
 //! Packing-axis choice follows App. C: the tiling direction must be
 //! orthogonal to the dimension being contracted, so
 //!   * Key cache (contracted over channels in K·q)   -> `PackAxis::Token`
 //!   * Value cache (contracted over tokens in αᵀ·V)  -> `PackAxis::Channel`
+//!
+//! Along the channel axis the trailing tile may be *partial*
+//! (`head_dim % 64 != 0`): its bitmap simply never sets bits at or past
+//! the block width. (The seed silently produced zero tiles for
+//! `head_dim < 64`; see the regression tests below.)
 //!
 //! Tile *ordering* is chosen so that newly compressed 64-token groups
 //! append at the end of every array (App. C requirement (2)); see
 //! `layout.rs` for the traversal and the append path.
 
 use crate::error::{Error, Result};
+use crate::sparse::f16::{f16_to_f32, f32_to_f16};
 use crate::util::round_up;
 
 /// Tile extent along the packing axis (the paper's 1x64 tile).
 pub const TILE: usize = 64;
 /// Value-segment padding granularity (paper: multiples of 8).
 pub const PAD: usize = 8;
-/// Bytes per stored value in the *accounting model* (paper stores fp16).
-pub const VALUE_BYTES: usize = 2;
+/// Bytes per stored value — real binary16 storage, so this is the actual
+/// in-memory size, not just the paper's accounting model.
+pub const VALUE_BYTES: usize = std::mem::size_of::<u16>();
 /// Bytes per tile bitmap.
 pub const BITMAP_BYTES: usize = 8;
 /// Bytes per tile offset.
@@ -49,8 +61,9 @@ pub struct BitmapMatrix {
     pub bitmaps: Vec<u64>,
     /// Per-tile start offset into `values` (+ one trailing total-length entry).
     pub offsets: Vec<u32>,
-    /// Packed non-zero values; each tile's segment padded to a multiple of 8.
-    pub values: Vec<f32>,
+    /// Packed non-zero values as binary16 bit patterns; each tile's
+    /// segment padded to a multiple of 8.
+    pub values: Vec<u16>,
 }
 
 impl BitmapMatrix {
@@ -74,12 +87,14 @@ impl BitmapMatrix {
         }
     }
 
-    /// Compress a dense (already pruned — zeros are "pruned away") matrix.
+    /// Compress a dense (already pruned — zeros are "pruned away") matrix,
+    /// narrowing values to binary16.
     ///
     /// `dense` is row-major `[tokens x channels]`. For `PackAxis::Token`,
     /// `tokens` must be a multiple of 64 (the KV manager only compresses
-    /// whole 64-token groups, matching the kernel's warp-tile granularity);
-    /// for `PackAxis::Channel`, `channels` must be a multiple of 64.
+    /// whole 64-token groups, matching the kernel's warp-tile granularity).
+    /// `PackAxis::Channel` accepts any channel count — the trailing
+    /// channel tile is partial when `channels % 64 != 0`.
     pub fn compress(dense: &[f32], tokens: usize, channels: usize, axis: PackAxis) -> Result<BitmapMatrix> {
         if dense.len() != tokens * channels {
             return Err(Error::Shape(format!(
@@ -89,14 +104,8 @@ impl BitmapMatrix {
                 channels
             )));
         }
-        match axis {
-            PackAxis::Token if tokens % TILE != 0 => {
-                return Err(Error::Shape(format!("tokens {tokens} not a multiple of {TILE}")));
-            }
-            PackAxis::Channel if channels % TILE != 0 => {
-                return Err(Error::Shape(format!("channels {channels} not a multiple of {TILE}")));
-            }
-            _ => {}
+        if axis == PackAxis::Token && tokens % TILE != 0 {
+            return Err(Error::Shape(format!("tokens {tokens} not a multiple of {TILE}")));
         }
 
         let mut m = BitmapMatrix::empty(channels, axis);
@@ -108,6 +117,10 @@ impl BitmapMatrix {
     /// dense rows to the compressed matrix. This is the paper's runtime
     /// compression path: 64-token groups exiting the local window are
     /// compressed and appended (App. C requirement (2)).
+    ///
+    /// A position is considered non-zero iff its binary16 narrowing is
+    /// non-zero, so the bitmap always agrees with the stored stream
+    /// (magnitudes below ~2^-25 underflow and are treated as pruned).
     pub fn append_groups(&mut self, dense: &[f32], new_tokens: usize) -> Result<()> {
         if dense.len() != new_tokens * self.channels {
             return Err(Error::Shape(format!(
@@ -124,39 +137,45 @@ impl BitmapMatrix {
         }
 
         let d = self.channels;
+        let mut vals = [0u16; TILE];
         match self.axis {
             PackAxis::Token => {
                 // groups of 64 tokens; within a group, one tile per channel
                 for g in 0..new_tokens / TILE {
                     for c in 0..d {
                         let mut bm: u64 = 0;
-                        let mut vals: Vec<f32> = Vec::with_capacity(TILE);
+                        let mut n = 0;
                         for b in 0..TILE {
-                            let x = dense[(g * TILE + b) * d + c];
-                            if x != 0.0 {
+                            let h = f32_to_f16(dense[(g * TILE + b) * d + c]);
+                            if h & 0x7fff != 0 {
                                 bm |= 1u64 << b;
-                                vals.push(x);
+                                vals[n] = h;
+                                n += 1;
                             }
                         }
-                        self.push_tile(bm, &vals);
+                        self.push_tile(bm, &vals[..n]);
                     }
                 }
             }
             PackAxis::Channel => {
-                // one tile per (token, 64-channel block); token-major order
-                let cblocks = d / TILE;
+                // one tile per (token, 64-channel block), token-major; the
+                // trailing block is partial when d % 64 != 0 (its bitmap
+                // never sets bits at or beyond the block width).
+                let cblocks = d.div_ceil(TILE);
                 for t in 0..new_tokens {
                     for cb in 0..cblocks {
+                        let width = TILE.min(d - cb * TILE);
                         let mut bm: u64 = 0;
-                        let mut vals: Vec<f32> = Vec::with_capacity(TILE);
-                        for b in 0..TILE {
-                            let x = dense[t * d + cb * TILE + b];
-                            if x != 0.0 {
+                        let mut n = 0;
+                        for b in 0..width {
+                            let h = f32_to_f16(dense[t * d + cb * TILE + b]);
+                            if h & 0x7fff != 0 {
                                 bm |= 1u64 << b;
-                                vals.push(x);
+                                vals[n] = h;
+                                n += 1;
                             }
                         }
-                        self.push_tile(bm, &vals);
+                        self.push_tile(bm, &vals[..n]);
                     }
                 }
             }
@@ -165,18 +184,19 @@ impl BitmapMatrix {
         Ok(())
     }
 
-    fn push_tile(&mut self, bitmap: u64, vals: &[f32]) {
+    fn push_tile(&mut self, bitmap: u64, vals: &[u16]) {
         debug_assert_eq!(bitmap.count_ones() as usize, vals.len());
         self.bitmaps.push(bitmap);
         self.values.extend_from_slice(vals);
         // coalescing padding to a multiple of 8 values
         let padded = round_up(vals.len(), PAD);
-        self.values.extend(std::iter::repeat(0.0).take(padded - vals.len()));
+        self.values.extend(std::iter::repeat(0u16).take(padded - vals.len()));
         let last = *self.offsets.last().unwrap();
         self.offsets.push(last + padded as u32);
     }
 
-    /// Decompress to a dense row-major `[tokens x channels]` matrix.
+    /// Decompress to a dense row-major `[tokens x channels]` f32 matrix
+    /// (each value widened from its stored binary16 form).
     pub fn decompress(&self) -> Vec<f32> {
         let d = self.channels;
         let mut out = vec![0.0f32; self.tokens * d];
@@ -189,14 +209,14 @@ impl BitmapMatrix {
                     let mut bits = bm;
                     while bits != 0 {
                         let b = bits.trailing_zeros() as usize;
-                        out[(g * TILE + b) * d + c] = self.values[off];
+                        out[(g * TILE + b) * d + c] = f16_to_f32(self.values[off]);
                         off += 1;
                         bits &= bits - 1;
                     }
                 }
             }
             PackAxis::Channel => {
-                let cblocks = d / TILE;
+                let cblocks = d.div_ceil(TILE);
                 for (ti, &bm) in self.bitmaps.iter().enumerate() {
                     let t = ti / cblocks;
                     let cb = ti % cblocks;
@@ -204,7 +224,7 @@ impl BitmapMatrix {
                     let mut bits = bm;
                     while bits != 0 {
                         let b = bits.trailing_zeros() as usize;
-                        out[t * d + cb * TILE + b] = self.values[off];
+                        out[t * d + cb * TILE + b] = f16_to_f32(self.values[off]);
                         off += 1;
                         bits &= bits - 1;
                     }
@@ -219,15 +239,17 @@ impl BitmapMatrix {
         self.bitmaps.iter().map(|b| b.count_ones() as usize).sum()
     }
 
-    /// Compressed size in bytes under the paper's accounting model
-    /// (fp16 values incl. padding + u64 bitmaps + u32 tile offsets).
+    /// Compressed size in bytes. Since values are stored as real binary16
+    /// this is the *actual* in-memory footprint (fp16 values incl.
+    /// padding + u64 bitmaps + u32 tile offsets), which coincides with
+    /// the paper's accounting model.
     pub fn compressed_bytes(&self) -> usize {
-        self.values.len() * VALUE_BYTES
-            + self.bitmaps.len() * BITMAP_BYTES
+        std::mem::size_of_val(self.values.as_slice())
+            + std::mem::size_of_val(self.bitmaps.as_slice())
             + (self.offsets.len() - 1) * OFFSET_BYTES
     }
 
-    /// Dense size in bytes of the same matrix (fp16 accounting).
+    /// Dense size in bytes of the same matrix (fp16 storage).
     pub fn dense_bytes(&self) -> usize {
         self.tokens * self.channels * VALUE_BYTES
     }
@@ -267,6 +289,20 @@ impl BitmapMatrix {
         if *self.offsets.last().unwrap() as usize != self.values.len() {
             return Err(Error::Shape("values length mismatch".into()));
         }
+        if self.axis == PackAxis::Channel && self.channels % TILE != 0 {
+            // partial trailing tiles must stay within their block width
+            let cblocks = self.channels.div_ceil(TILE);
+            let width = self.channels - (cblocks - 1) * TILE; // 1..=63 here
+            let legal = (1u64 << width) - 1;
+            for t in 0..self.tokens {
+                let bm = self.bitmaps[t * cblocks + cblocks - 1];
+                if bm & !legal != 0 {
+                    return Err(Error::Shape(format!(
+                        "token {t}: partial tile sets bits beyond width {width}"
+                    )));
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -274,6 +310,7 @@ impl BitmapMatrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::f16::f16_round_vec as f16_ref;
     use crate::util::Pcg32;
 
     fn random_pruned(tokens: usize, channels: usize, keep_prob: f32, seed: u64) -> Vec<f32> {
@@ -295,7 +332,7 @@ mod tests {
             let dense = random_pruned(t, d, p, 42);
             let m = BitmapMatrix::compress(&dense, t, d, PackAxis::Token).unwrap();
             m.validate().unwrap();
-            assert_eq!(m.decompress(), dense, "t={t} d={d} p={p}");
+            assert_eq!(m.decompress(), f16_ref(&dense), "t={t} d={d} p={p}");
         }
     }
 
@@ -305,7 +342,23 @@ mod tests {
             let dense = random_pruned(t, d, p, 43);
             let m = BitmapMatrix::compress(&dense, t, d, PackAxis::Channel).unwrap();
             m.validate().unwrap();
-            assert_eq!(m.decompress(), dense, "t={t} d={d} p={p}");
+            assert_eq!(m.decompress(), f16_ref(&dense), "t={t} d={d} p={p}");
+        }
+    }
+
+    #[test]
+    fn partial_channel_tiles_small_and_ragged_heads() {
+        // Seed-bug regression: channel-packed matrices with
+        // channels % 64 != 0 (notably head_dim < 64) must carry real
+        // partial tiles instead of silently contributing nothing.
+        for &(t, d, p) in &[(5, 32, 0.6), (16, 8, 0.5), (3, 96, 0.4), (7, 100, 0.7), (1, 1, 1.0)] {
+            let dense = random_pruned(t, d, p, 77);
+            let m = BitmapMatrix::compress(&dense, t, d, PackAxis::Channel).unwrap();
+            m.validate().unwrap();
+            assert_eq!(m.bitmaps.len(), t * d.div_ceil(TILE), "t={t} d={d}");
+            assert_eq!(m.decompress(), f16_ref(&dense), "t={t} d={d}");
+            let nnz_expected = dense.iter().filter(|&&x| f32_to_f16(x) & 0x7fff != 0).count();
+            assert_eq!(m.nnz(), nnz_expected, "t={t} d={d}");
         }
     }
 
@@ -313,10 +366,11 @@ mod tests {
     fn shape_errors() {
         let dense = vec![0.0; 63 * 64];
         assert!(BitmapMatrix::compress(&dense, 63, 64, PackAxis::Token).is_err());
-        let dense = vec![0.0; 4 * 63];
-        assert!(BitmapMatrix::compress(&dense, 4, 63, PackAxis::Channel).is_err());
         let dense = vec![0.0; 10];
         assert!(BitmapMatrix::compress(&dense, 64, 64, PackAxis::Token).is_err());
+        // channel axis now accepts any channel count (partial tiles)
+        let dense = vec![0.0; 4 * 63];
+        assert!(BitmapMatrix::compress(&dense, 4, 63, PackAxis::Channel).is_ok());
     }
 
     #[test]
@@ -331,6 +385,21 @@ mod tests {
         assert_eq!(m.values.len(), 8);
         assert_eq!(m.offsets, vec![0, 8]);
         assert_eq!(m.bitmaps[0], (1u64 << 0) | (1 << 10) | (1 << 63));
+        // 1.0/2.0/3.0 are exactly representable in binary16
+        assert_eq!(&m.values[..3], &[f32_to_f16(1.0), f32_to_f16(2.0), f32_to_f16(3.0)]);
+    }
+
+    #[test]
+    fn compressed_bytes_is_actual_storage() {
+        let dense = random_pruned(128, 48, 0.5, 9);
+        let m = BitmapMatrix::compress(&dense, 128, 48, PackAxis::Token).unwrap();
+        let actual = std::mem::size_of_val(m.values.as_slice())
+            + std::mem::size_of_val(m.bitmaps.as_slice())
+            + std::mem::size_of_val(&m.offsets.as_slice()[..m.offsets.len() - 1]);
+        assert_eq!(m.compressed_bytes(), actual);
+        // the load-bearing half of the claim: a stored value is 2 bytes
+        assert_eq!(std::mem::size_of_val(&m.values[0]), 2);
+        assert_eq!(m.compressed_bytes() % 2, 0);
     }
 
     #[test]
@@ -360,12 +429,13 @@ mod tests {
 
     #[test]
     fn append_equals_full_compress_channel_axis() {
-        let d = 64;
-        let dense = random_pruned(100, d, 0.4, 12);
-        let full = BitmapMatrix::compress(&dense, 100, d, PackAxis::Channel).unwrap();
-        let mut inc = BitmapMatrix::compress(&dense[..60 * d], 60, d, PackAxis::Channel).unwrap();
-        inc.append_groups(&dense[60 * d..], 40).unwrap();
-        assert_eq!(inc, full);
+        for d in [32usize, 64, 96] {
+            let dense = random_pruned(100, d, 0.4, 12);
+            let full = BitmapMatrix::compress(&dense, 100, d, PackAxis::Channel).unwrap();
+            let mut inc = BitmapMatrix::compress(&dense[..60 * d], 60, d, PackAxis::Channel).unwrap();
+            inc.append_groups(&dense[60 * d..], 40).unwrap();
+            assert_eq!(inc, full, "d={d}");
+        }
     }
 
     #[test]
@@ -390,8 +460,8 @@ mod tests {
             let dense = random_pruned(t, d, p, seed + 1000);
             let m = BitmapMatrix::compress(&dense, t, d, PackAxis::Token).unwrap();
             m.validate().unwrap();
-            assert_eq!(m.decompress(), dense);
-            let nnz_expected = dense.iter().filter(|x| **x != 0.0).count();
+            assert_eq!(m.decompress(), f16_ref(&dense));
+            let nnz_expected = dense.iter().filter(|&&x| f32_to_f16(x) & 0x7fff != 0).count();
             assert_eq!(m.nnz(), nnz_expected);
         }
     }

@@ -1,0 +1,312 @@
+//! IEEE 754 binary16 storage type for the compressed KV cache.
+//!
+//! The paper stores packed values in fp16; until this module existed the
+//! repo only *accounted* bytes as fp16 (`VALUE_BYTES = 2`) while storing
+//! `f32`, so the measured bandwidth win was half of what the format can
+//! deliver. `BitmapMatrix::values` and the `SequenceKV` dense tails now
+//! hold real binary16 bit patterns (`u16`), converted once at
+//! compress/append time and widened back to `f32` in-register inside the
+//! SpMV kernels.
+//!
+//! Hand-rolled conversions (no external crate — the build is offline):
+//!
+//! * `f32_to_f16` — narrowing with round-to-nearest-even, the IEEE
+//!   default rounding mode, including subnormal and overflow handling.
+//! * `f16_to_f32` — widening via the branch-light "multiply trick": shift
+//!   the half's exponent/mantissa into f32 position and scale by 2^112.
+//!   Both the normal and subnormal cases are *exact* power-of-two
+//!   rescalings, so no double rounding occurs.
+//!
+//! The feature-gated `simd` submodule provides an 8-lane widening used by
+//! the tile kernels; it applies the identical multiply trick, so SIMD and
+//! scalar decode are bit-for-bit interchangeable (the kernels' parity
+//! tests rely on this).
+
+/// 2^112 as f32 bits: rescales a half's exponent field, pre-shifted into
+/// f32 position, onto the f32 bias (`(254 - 15) << 23`).
+const WIDEN_SCALE_BITS: u32 = (254 - 15) << 23;
+
+/// 2^16 as f32 bits: the smallest magnitude the multiply trick produces
+/// for an Inf/NaN half (finite halves top out at 65504 < 2^16).
+const WIDEN_INFNAN_BITS: u32 = (127 + 16) << 23;
+
+/// Widen one binary16 bit pattern to f32.
+///
+/// Exact for every finite half (normal and subnormal); Inf maps to Inf
+/// and NaN to NaN (top mantissa bits preserved).
+#[inline(always)]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = (h as u32 & 0x8000) << 16;
+    let om = (h as u32 & 0x7fff) << 13;
+    let f = f32::from_bits(om) * f32::from_bits(WIDEN_SCALE_BITS);
+    let mut bits = f.to_bits();
+    if f >= f32::from_bits(WIDEN_INFNAN_BITS) {
+        bits |= 0x7f80_0000; // restore the Inf/NaN exponent
+    }
+    f32::from_bits(bits | sign)
+}
+
+/// Narrow an f32 to a binary16 bit pattern with round-to-nearest-even.
+///
+/// Overflow rounds to ±Inf, underflow to signed zero, and every NaN
+/// canonicalizes to a quiet f16 NaN.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+
+    if abs >= 0x7f80_0000 {
+        return if abs == 0x7f80_0000 { sign | 0x7c00 } else { sign | 0x7e00 };
+    }
+
+    let exp = ((abs >> 23) as i32) - 127; // unbiased exponent
+    let man = abs & 0x007f_ffff;
+
+    if exp >= 16 {
+        return sign | 0x7c00; // |x| >= 2^16: beyond the f16 range
+    }
+    if exp >= -14 {
+        // Normal half: drop 13 mantissa bits with RNE. A carry propagates
+        // into the exponent (and, at the top of the range, on to Inf —
+        // exactly the IEEE overflow behaviour for values >= 65520).
+        let mut h = (((exp + 15) as u32) << 10) | (man >> 13);
+        let rem = man & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (h & 1) == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    if exp >= -25 {
+        // Subnormal half: shift the 24-bit significand (implicit bit made
+        // explicit) into the 10-bit field, RNE on the shifted-out bits.
+        let sig = man | 0x0080_0000;
+        let shift = (-(exp + 1)) as u32; // 14..=24
+        let mut h = sig >> shift;
+        let rem = sig & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && (h & 1) == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    sign // underflows to signed zero
+}
+
+/// f32 → f16 → f32 round trip: the value a stored f32 comes back as.
+/// Identity for every value exactly representable in binary16.
+#[inline]
+pub fn f16_round(x: f32) -> f32 {
+    f16_to_f32(f32_to_f16(x))
+}
+
+/// Narrow a whole f32 slice into a fresh f16 buffer.
+pub fn to_f16_vec(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| f32_to_f16(x)).collect()
+}
+
+/// Widen a whole f16 buffer into a fresh f32 vector.
+pub fn to_f32_vec(hs: &[u16]) -> Vec<f32> {
+    hs.iter().map(|&h| f16_to_f32(h)).collect()
+}
+
+/// Widen `src` into a caller-owned buffer (no allocation; lengths must
+/// match). The group-compression path reuses one scratch across heads.
+pub fn widen_into(dst: &mut [f32], src: &[u16]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &h) in dst.iter_mut().zip(src) {
+        *d = f16_to_f32(h);
+    }
+}
+
+/// Round every element of `xs` through binary16 — the reference
+/// transform every "stored and widened" test compares against.
+pub fn f16_round_vec(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| f16_round(x)).collect()
+}
+
+/// Append the f16 narrowing of `xs` onto `dst` (the tail-buffer push path).
+#[inline]
+pub fn extend_f16(dst: &mut Vec<u16>, xs: &[f32]) {
+    dst.extend(xs.iter().map(|&x| f32_to_f16(x)));
+}
+
+/// Element type a KV buffer can hold: `f32` (activations, dense
+/// baselines) or binary16 bits in a `u16` (the compressed region and the
+/// dense-tail storage). The dense MV kernels are generic over this so the
+/// same code serves full-precision prefill buffers and the f16 tail.
+pub trait KvElem: Copy {
+    /// Widen to f32 (identity for f32, f16 decode for u16).
+    fn widen(self) -> f32;
+}
+
+impl KvElem for f32 {
+    #[inline(always)]
+    fn widen(self) -> f32 {
+        self
+    }
+}
+
+impl KvElem for u16 {
+    #[inline(always)]
+    fn widen(self) -> f32 {
+        f16_to_f32(self)
+    }
+}
+
+/// Portable-SIMD widening (nightly `portable_simd`, behind the `simd`
+/// cargo feature). Lane-for-lane bit-identical to the scalar
+/// `f16_to_f32`: same multiply trick, and both the subnormal and normal
+/// rescalings are exact, so there is no rounding to diverge on.
+#[cfg(feature = "simd")]
+pub mod simd {
+    use core::simd::cmp::SimdPartialOrd;
+    use core::simd::num::SimdFloat;
+    use core::simd::Simd;
+
+    /// Lane count for the tile kernels (one AVX2 register of f32).
+    pub const LANES: usize = 8;
+    pub type F32S = Simd<f32, LANES>;
+    pub type U32S = Simd<u32, LANES>;
+    pub type U16S = Simd<u16, LANES>;
+
+    /// Widen 8 packed binary16 values to f32.
+    #[inline]
+    pub fn widen(h: U16S) -> F32S {
+        let h: U32S = h.cast();
+        let sign = (h & U32S::splat(0x8000)) << U32S::splat(16);
+        let om = (h & U32S::splat(0x7fff)) << U32S::splat(13);
+        let f = F32S::from_bits(om) * F32S::splat(f32::from_bits(super::WIDEN_SCALE_BITS));
+        let bits = f.to_bits();
+        let infnan = f.simd_ge(F32S::splat(f32::from_bits(super::WIDEN_INFNAN_BITS)));
+        let bits = infnan.select(bits | U32S::splat(0x7f80_0000), bits);
+        F32S::from_bits(bits | sign)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Straightforward (slow, obviously-correct) widening used as the
+    /// oracle for the exhaustive cross-check. All arithmetic is exact in
+    /// f32: `man / 1024` and `2^k` scalings introduce no rounding.
+    fn f16_to_f32_reference(h: u16) -> f32 {
+        let sign = if h & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+        let exp = ((h >> 10) & 0x1f) as i32;
+        let man = (h & 0x3ff) as f32;
+        match exp {
+            0 => sign * man * (2.0f32).powi(-24),
+            31 => {
+                if man == 0.0 {
+                    sign * f32::INFINITY
+                } else {
+                    f32::NAN
+                }
+            }
+            e => sign * (1.0 + man / 1024.0) * (2.0f32).powi(e - 15),
+        }
+    }
+
+    #[test]
+    fn widen_matches_reference_exhaustively() {
+        for h in 0..=u16::MAX {
+            let got = f16_to_f32(h);
+            let want = f16_to_f32_reference(h);
+            if want.is_nan() {
+                assert!(got.is_nan(), "h={h:#06x}: {got} should be NaN");
+            } else {
+                assert_eq!(got.to_bits(), want.to_bits(), "h={h:#06x}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_identity_for_every_finite_half() {
+        // Includes ±0 and every subnormal; NaN payloads canonicalize and
+        // are excluded.
+        for h in 0..=u16::MAX {
+            if (h >> 10) & 0x1f == 31 && h & 0x3ff != 0 {
+                continue; // NaN
+            }
+            assert_eq!(f32_to_f16(f16_to_f32(h)), h, "h={h:#06x}");
+        }
+    }
+
+    #[test]
+    fn exact_for_representable_values() {
+        for x in [
+            0.0f32, -0.0, 1.0, -1.0, 0.5, 1.5, -0.375, 2048.0, 65504.0, -65504.0, 6.103515625e-5,
+            5.960464477539063e-8, // smallest subnormal, 2^-24
+        ] {
+            assert_eq!(f16_round(x).to_bits(), x.to_bits(), "{x}");
+        }
+        for k in -24..=15 {
+            let x = (2.0f32).powi(k);
+            assert_eq!(f16_round(x), x, "2^{k}");
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1.0 + 2^-10:
+        // ties go to the even mantissa (1.0).
+        assert_eq!(f32_to_f16(1.0 + (2.0f32).powi(-11)), f32_to_f16(1.0));
+        // 1 + 3·2^-11 is halfway between 1 + 2^-10 (odd) and 1 + 2^-9
+        // (even): ties to even rounds *up* here.
+        let x = 1.0 + 3.0 * (2.0f32).powi(-11);
+        assert_eq!(f16_to_f32(f32_to_f16(x)), 1.0 + (2.0f32).powi(-9));
+        // just above/below the tie round to the nearer neighbour
+        assert_eq!(f16_round(1.0 + 1.1 * (2.0f32).powi(-11)), 1.0 + (2.0f32).powi(-10));
+        assert_eq!(f16_round(1.0 + 0.9 * (2.0f32).powi(-11)), 1.0);
+    }
+
+    #[test]
+    fn overflow_underflow_and_specials() {
+        assert_eq!(f32_to_f16(65519.0), f32_to_f16(65504.0)); // below the tie: max normal
+        assert_eq!(f32_to_f16(65520.0), 0x7c00); // tie rounds up to Inf
+        assert_eq!(f32_to_f16(1e6), 0x7c00);
+        assert_eq!(f32_to_f16(-1e6), 0xfc00);
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // sub-subnormal magnitudes underflow to signed zero
+        assert_eq!(f32_to_f16(1e-10), 0x0000);
+        assert_eq!(f32_to_f16(-1e-10), 0x8000);
+        // 2^-25 is exactly halfway between 0 and the smallest subnormal:
+        // ties to even -> 0; anything above it rounds to the subnormal.
+        assert_eq!(f32_to_f16((2.0f32).powi(-25)), 0x0000);
+        assert_eq!(f32_to_f16(1.5 * (2.0f32).powi(-25)), 0x0001);
+    }
+
+    #[test]
+    fn relative_error_bounded_for_normals() {
+        let mut rng = crate::util::Pcg32::seeded(404);
+        for _ in 0..20_000 {
+            let x = rng.normal_f32() * 10.0;
+            let r = f16_round(x);
+            let rel = (r - x).abs() / x.abs().max(6.2e-5);
+            assert!(rel <= (2.0f32).powi(-11), "{x} -> {r} (rel {rel})");
+        }
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_widen_matches_scalar_exhaustively() {
+        use super::simd::{widen, U16S, LANES};
+        let mut h: u32 = 0;
+        while h <= u16::MAX as u32 {
+            let lane: [u16; LANES] = std::array::from_fn(|i| (h as u16).wrapping_add(i as u16));
+            let got = widen(U16S::from_array(lane));
+            for i in 0..LANES {
+                assert_eq!(
+                    got[i].to_bits(),
+                    f16_to_f32(lane[i]).to_bits(),
+                    "h={:#06x}",
+                    lane[i]
+                );
+            }
+            h += LANES as u32;
+        }
+    }
+}

@@ -2,17 +2,24 @@
 //! (§3, Fig 5, App. C).
 //!
 //! * `bitmap` — 1x64-tile compressed representation with per-tile u64
-//!   bitmaps, tile offsets, and multiples-of-8 value padding.
+//!   bitmaps, tile offsets, and multiples-of-8 value padding; values are
+//!   stored as real IEEE binary16 (`u16`).
+//! * `f16` — hand-rolled f32↔binary16 conversion (round-to-nearest-even
+//!   narrowing, exact multiply-trick widening) plus the feature-gated
+//!   SIMD widening used by the tile kernels.
 //! * `spmv` — load-as-compressed/compute-as-dense matrix-vector products
-//!   for the two decode-phase attention MVs, plus dense baselines.
+//!   for the two decode-phase attention MVs, plus dense baselines generic
+//!   over the stored element type (`KvElem`).
 //! * `pairs` — the rectangular (values, indices) view used at the
-//!   XLA/PJRT boundary (static shapes).
+//!   XLA/PJRT boundary (static shapes, f32 at the FFI surface).
 
 pub mod bitmap;
+pub mod f16;
 pub mod pairs;
 pub mod spmv;
 
 pub use bitmap::{BitmapMatrix, PackAxis, PAD, TILE};
+pub use f16::{f16_round, f16_to_f32, f32_to_f16, KvElem};
 pub use pairs::TokenPairs;
 pub use spmv::{
     dense_key, dense_key_multi, dense_value, dense_value_multi, spmv_key, spmv_key_multi,

@@ -7,17 +7,94 @@
 //! Both follow the paper's *load-as-compressed, compute-as-dense* paradigm:
 //! the packed value stream is walked sequentially (that is the bandwidth
 //! win — only compressed bytes are touched), with the bitmap steering
-//! accumulation into the right output lane.
+//! accumulation into the right output lane. The stream is real binary16
+//! (`sparse::f16`), widened to f32 in-register on the fly, so the bytes
+//! walked are genuinely half of an f32 stream.
 //!
 //! Dense reference MVs (`dense_key`, `dense_value`) play the cuBLAS-
-//! baseline role of Fig 6a.
+//! baseline role of Fig 6a. They are generic over `KvElem`, serving both
+//! full-precision prefill buffers (`f32`) and the f16 dense tail (`u16`).
+//!
+//! The 64-wide dense-tile and expand-then-FMA sweeps have explicit SIMD
+//! widening-FMA paths (`std::simd` behind the `simd` cargo feature,
+//! nightly only); the scalar fallback is always compiled and doubles as
+//! the parity oracle — per output element both paths perform the
+//! identical `acc += widen(v) * w`, and the f16 widening itself is exact,
+//! so SIMD and scalar results are bit-for-bit equal.
 
 use super::bitmap::{BitmapMatrix, PackAxis, TILE};
+use super::f16::{f16_to_f32, KvElem};
 
 // §Perf note: a byte-LUT decode (table of set-bit positions per byte) was
 // tried and REGRESSED ~4x vs the tzcnt bit-walk on this CPU (indirect
 // table loads + data-dependent inner loops beat by hardware tzcnt);
 // recorded in EXPERIMENTS.md §Perf iteration log.
+
+// ---------------------------------------------------------------------------
+// Tile sweep primitives (scalar fallback = SIMD parity oracle).
+// ---------------------------------------------------------------------------
+
+/// out[i] += widen(vals[i]) * w — the dense-tile fast path sweep.
+#[inline]
+fn fma_tile_f16_scalar(out: &mut [f32], vals: &[u16], w: f32) {
+    for (o, &v) in out.iter_mut().zip(vals) {
+        *o += f16_to_f32(v) * w;
+    }
+}
+
+/// out[i] += buf[i] * w — the expand-then-FMA sweep over a decoded tile.
+#[inline]
+fn fma_tile_f32_scalar(out: &mut [f32], buf: &[f32], w: f32) {
+    for (o, &x) in out.iter_mut().zip(buf) {
+        *o += x * w;
+    }
+}
+
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+fn fma_tile_f16(out: &mut [f32], vals: &[u16], w: f32) {
+    fma_tile_f16_scalar(out, vals, w)
+}
+
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+fn fma_tile_f32(out: &mut [f32], buf: &[f32], w: f32) {
+    fma_tile_f32_scalar(out, buf, w)
+}
+
+#[cfg(feature = "simd")]
+#[inline]
+fn fma_tile_f16(out: &mut [f32], vals: &[u16], w: f32) {
+    use super::f16::simd::{widen, F32S, U16S, LANES};
+    debug_assert_eq!(out.len(), vals.len());
+    let wv = F32S::splat(w);
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut vc = vals.chunks_exact(LANES);
+    for (o, v) in (&mut oc).zip(&mut vc) {
+        let acc = F32S::from_slice(o) + widen(U16S::from_slice(v)) * wv;
+        acc.copy_to_slice(o);
+    }
+    fma_tile_f16_scalar(oc.into_remainder(), vc.remainder(), w);
+}
+
+#[cfg(feature = "simd")]
+#[inline]
+fn fma_tile_f32(out: &mut [f32], buf: &[f32], w: f32) {
+    use super::f16::simd::{F32S, LANES};
+    debug_assert_eq!(out.len(), buf.len());
+    let wv = F32S::splat(w);
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut bc = buf.chunks_exact(LANES);
+    for (o, b) in (&mut oc).zip(&mut bc) {
+        let acc = F32S::from_slice(o) + F32S::from_slice(b) * wv;
+        acc.copy_to_slice(o);
+    }
+    fma_tile_f32_scalar(oc.into_remainder(), bc.remainder(), w);
+}
+
+// ---------------------------------------------------------------------------
+// Single-query kernels.
+// ---------------------------------------------------------------------------
 
 /// scores[t] = Σ_c K[t,c]·q[c] for a Key cache packed along `PackAxis::Token`.
 ///
@@ -44,10 +121,8 @@ pub fn spmv_key(k: &BitmapMatrix, q: &[f32], scores: &mut [f32]) {
             let qc = q[c];
             let mut off = k.offsets[ti] as usize;
             if bits == u64::MAX {
-                // dense tile fast path: straight vectorizable loop
-                for (o, &v) in out.iter_mut().zip(&values[off..off + TILE]) {
-                    *o += v * qc;
-                }
+                // dense tile fast path: one 64-wide widening FMA
+                fma_tile_f16(out, &values[off..off + TILE], qc);
                 continue;
             }
             // bit-walk decode (tzcnt); bounds hoisted — `validate()`
@@ -56,7 +131,7 @@ pub fn spmv_key(k: &BitmapMatrix, q: &[f32], scores: &mut [f32]) {
             unsafe {
                 while bits != 0 {
                     let b = bits.trailing_zeros() as usize;
-                    *out.get_unchecked_mut(b) += values.get_unchecked(off) * qc;
+                    *out.get_unchecked_mut(b) += f16_to_f32(*values.get_unchecked(off)) * qc;
                     off += 1;
                     bits &= bits - 1;
                 }
@@ -67,13 +142,15 @@ pub fn spmv_key(k: &BitmapMatrix, q: &[f32], scores: &mut [f32]) {
 
 /// out[c] = Σ_t α[t]·V[t,c] for a Value cache packed along `PackAxis::Channel`.
 ///
-/// `out` must have length `v.channels` and is accumulated into.
+/// `out` must have length `v.channels` and is accumulated into. The
+/// trailing channel block may be partial (`channels % 64 != 0`).
 pub fn spmv_value(v: &BitmapMatrix, att: &[f32], out: &mut [f32]) {
     assert_eq!(v.axis, PackAxis::Channel, "value cache must be channel-packed");
     assert_eq!(att.len(), v.tokens);
     assert_eq!(out.len(), v.channels);
 
-    let cblocks = v.channels / TILE;
+    let d = v.channels;
+    let cblocks = d.div_ceil(TILE);
     let values = &v.values[..];
     for t in 0..v.tokens {
         let at = att[t];
@@ -87,11 +164,10 @@ pub fn spmv_value(v: &BitmapMatrix, att: &[f32], out: &mut [f32]) {
                 continue;
             }
             let mut off = v.offsets[ti] as usize;
-            let out_block = &mut out[cb * TILE..(cb + 1) * TILE];
+            let out_block = &mut out[cb * TILE..(cb * TILE + TILE).min(d)];
             if bits == u64::MAX {
-                for (o, &x) in out_block.iter_mut().zip(&values[off..off + TILE]) {
-                    *o += x * at;
-                }
+                // only possible for full-width blocks
+                fma_tile_f16(out_block, &values[off..off + TILE], at);
                 continue;
             }
             // expand-then-FMA ("compute-as-dense", Fig 8): scatter the
@@ -103,14 +179,13 @@ pub fn spmv_value(v: &BitmapMatrix, att: &[f32], out: &mut [f32]) {
             unsafe {
                 while bits != 0 {
                     let b = bits.trailing_zeros() as usize;
-                    *buf.get_unchecked_mut(b) = *values.get_unchecked(off);
+                    *buf.get_unchecked_mut(b) = f16_to_f32(*values.get_unchecked(off));
                     off += 1;
                     bits &= bits - 1;
                 }
             }
-            for (o, &x) in out_block.iter_mut().zip(buf.iter()) {
-                *o += x * at;
-            }
+            let w = out_block.len();
+            fma_tile_f32(out_block, &buf[..w], at);
         }
     }
 }
@@ -118,27 +193,28 @@ pub fn spmv_value(v: &BitmapMatrix, att: &[f32], out: &mut [f32]) {
 /// 4-lane unrolled dot product — shared by the dense single- and
 /// multi-query MVs so their per-lane rounding is identical.
 #[inline]
-fn dot_unrolled(row: &[f32], q: &[f32], channels: usize) -> f32 {
+fn dot_unrolled<E: KvElem>(row: &[E], q: &[f32], channels: usize) -> f32 {
     let mut acc = 0.0f32;
     let mut c = 0;
     let lim = channels & !3;
     let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
     while c < lim {
-        a0 += row[c] * q[c];
-        a1 += row[c + 1] * q[c + 1];
-        a2 += row[c + 2] * q[c + 2];
-        a3 += row[c + 3] * q[c + 3];
+        a0 += row[c].widen() * q[c];
+        a1 += row[c + 1].widen() * q[c + 1];
+        a2 += row[c + 2].widen() * q[c + 2];
+        a3 += row[c + 3].widen() * q[c + 3];
         c += 4;
     }
     while c < channels {
-        acc += row[c] * q[c];
+        acc += row[c].widen() * q[c];
         c += 1;
     }
     acc + a0 + a1 + a2 + a3
 }
 
-/// Dense MV baseline: scores[t] = Σ_c K[t,c]·q[c] (row-major K [T x D]).
-pub fn dense_key(k: &[f32], tokens: usize, channels: usize, q: &[f32], scores: &mut [f32]) {
+/// Dense MV baseline: scores[t] = Σ_c K[t,c]·q[c] (row-major K [T x D],
+/// f32 or stored-f16 elements).
+pub fn dense_key<E: KvElem>(k: &[E], tokens: usize, channels: usize, q: &[f32], scores: &mut [f32]) {
     assert_eq!(k.len(), tokens * channels);
     assert_eq!(q.len(), channels);
     assert_eq!(scores.len(), tokens);
@@ -148,8 +224,9 @@ pub fn dense_key(k: &[f32], tokens: usize, channels: usize, q: &[f32], scores: &
     }
 }
 
-/// Dense MV baseline: out[c] = Σ_t α[t]·V[t,c] (row-major V [T x D]).
-pub fn dense_value(v: &[f32], tokens: usize, channels: usize, att: &[f32], out: &mut [f32]) {
+/// Dense MV baseline: out[c] = Σ_t α[t]·V[t,c] (row-major V [T x D],
+/// f32 or stored-f16 elements).
+pub fn dense_value<E: KvElem>(v: &[E], tokens: usize, channels: usize, att: &[f32], out: &mut [f32]) {
     assert_eq!(v.len(), tokens * channels);
     assert_eq!(att.len(), tokens);
     assert_eq!(out.len(), channels);
@@ -160,7 +237,7 @@ pub fn dense_value(v: &[f32], tokens: usize, channels: usize, att: &[f32], out: 
         }
         let row = &v[t * channels..(t + 1) * channels];
         for c in 0..channels {
-            out[c] += at * row[c];
+            out[c] += at * row[c].widen();
         }
     }
 }
@@ -212,13 +289,10 @@ pub fn spmv_key_multi(k: &BitmapMatrix, qs: &[f32], g: usize, scores: &mut [f32]
             }
             let mut off = k.offsets[ti] as usize;
             if bits == u64::MAX {
-                // dense tile fast path: per lane, one vectorizable sweep
-                for l in 0..g {
-                    let w = qc[l];
+                // dense tile fast path: per lane, one 64-wide widening FMA
+                for (l, &w) in qc[..g].iter().enumerate() {
                     let out = &mut scores[l * nt + base..l * nt + base + TILE];
-                    for (o, &v) in out.iter_mut().zip(&values[off..off + TILE]) {
-                        *o += v * w;
-                    }
+                    fma_tile_f16(out, &values[off..off + TILE], w);
                 }
                 continue;
             }
@@ -227,7 +301,7 @@ pub fn spmv_key_multi(k: &BitmapMatrix, qs: &[f32], g: usize, scores: &mut [f32]
             unsafe {
                 while bits != 0 {
                     let b = bits.trailing_zeros() as usize;
-                    let v = *values.get_unchecked(off);
+                    let v = f16_to_f32(*values.get_unchecked(off));
                     for (l, &w) in qc[..g].iter().enumerate() {
                         *scores.get_unchecked_mut(l * nt + base + b) += v * w;
                     }
@@ -249,9 +323,9 @@ pub fn spmv_value_multi(v: &BitmapMatrix, att: &[f32], g: usize, out: &mut [f32]
     assert_eq!(att.len(), g * v.tokens);
     assert_eq!(out.len(), g * v.channels);
 
-    let cblocks = v.channels / TILE;
-    let nt = v.tokens;
     let d = v.channels;
+    let cblocks = d.div_ceil(TILE);
+    let nt = v.tokens;
     let values = &v.values[..];
     for t in 0..nt {
         let mut ats = [0.0f32; MAX_GROUP];
@@ -270,6 +344,7 @@ pub fn spmv_value_multi(v: &BitmapMatrix, att: &[f32], g: usize, out: &mut [f32]
             if bits == 0 {
                 continue;
             }
+            let blk = cb * TILE..(cb * TILE + TILE).min(d);
             let mut off = v.offsets[ti] as usize;
             if bits == u64::MAX {
                 let seg = &values[off..off + TILE];
@@ -277,10 +352,8 @@ pub fn spmv_value_multi(v: &BitmapMatrix, att: &[f32], g: usize, out: &mut [f32]
                     if at == 0.0 {
                         continue;
                     }
-                    let ob = &mut out[l * d + cb * TILE..l * d + (cb + 1) * TILE];
-                    for (o, &x) in ob.iter_mut().zip(seg) {
-                        *o += x * at;
-                    }
+                    let ob = &mut out[l * d + blk.start..l * d + blk.end];
+                    fma_tile_f16(ob, seg, at);
                 }
                 continue;
             }
@@ -290,19 +363,18 @@ pub fn spmv_value_multi(v: &BitmapMatrix, att: &[f32], g: usize, out: &mut [f32]
             unsafe {
                 while bits != 0 {
                     let b = bits.trailing_zeros() as usize;
-                    *buf.get_unchecked_mut(b) = *values.get_unchecked(off);
+                    *buf.get_unchecked_mut(b) = f16_to_f32(*values.get_unchecked(off));
                     off += 1;
                     bits &= bits - 1;
                 }
             }
+            let width = blk.end - blk.start;
             for (l, &at) in ats[..g].iter().enumerate() {
                 if at == 0.0 {
                     continue;
                 }
-                let ob = &mut out[l * d + cb * TILE..l * d + (cb + 1) * TILE];
-                for (o, &x) in ob.iter_mut().zip(buf.iter()) {
-                    *o += x * at;
-                }
+                let ob = &mut out[l * d + blk.start..l * d + blk.end];
+                fma_tile_f32(ob, &buf[..width], at);
             }
         }
     }
@@ -310,8 +382,8 @@ pub fn spmv_value_multi(v: &BitmapMatrix, att: &[f32], g: usize, out: &mut [f32]
 
 /// Multi-query dense Key MV for the local-window tail: each K row is read
 /// once and dotted against all `g` query lanes.
-pub fn dense_key_multi(
-    k: &[f32],
+pub fn dense_key_multi<E: KvElem>(
+    k: &[E],
     tokens: usize,
     channels: usize,
     qs: &[f32],
@@ -333,8 +405,8 @@ pub fn dense_key_multi(
 
 /// Multi-query dense Value MV for the local-window tail: each V row is
 /// read once and accumulated into all `g` output lanes.
-pub fn dense_value_multi(
-    v: &[f32],
+pub fn dense_value_multi<E: KvElem>(
+    v: &[E],
     tokens: usize,
     channels: usize,
     att: &[f32],
@@ -354,7 +426,7 @@ pub fn dense_value_multi(
             }
             let ob = &mut out[l * channels..(l + 1) * channels];
             for (o, &x) in ob.iter_mut().zip(row) {
-                *o += at * x;
+                *o += at * x.widen();
             }
         }
     }
@@ -363,6 +435,7 @@ pub fn dense_value_multi(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::f16::f16_round_vec as f16_ref;
     use crate::util::Pcg32;
 
     fn random_pruned(tokens: usize, channels: usize, keep: f32, seed: u64) -> Vec<f32> {
@@ -374,6 +447,8 @@ mod tests {
 
     #[test]
     fn spmv_key_matches_dense() {
+        // dense reference over the f16-rounded matrix: identical stored
+        // values, different summation order -> tight tolerance.
         for seed in 0..10 {
             let mut rng = Pcg32::seeded(seed + 500);
             let t = TILE * (1 + rng.below(4) as usize);
@@ -386,7 +461,7 @@ mod tests {
             spmv_key(&m, &q, &mut got);
 
             let mut want = vec![0.0f32; t];
-            dense_key(&dense, t, d, &q, &mut want);
+            dense_key(&f16_ref(&dense), t, d, &q, &mut want);
             for (g, w) in got.iter().zip(&want) {
                 assert!((g - w).abs() < 1e-4, "seed {seed}: {g} vs {w}");
             }
@@ -407,10 +482,61 @@ mod tests {
             spmv_value(&m, &att, &mut got);
 
             let mut want = vec![0.0f32; d];
-            dense_value(&dense, t, d, &att, &mut want);
+            dense_value(&f16_ref(&dense), t, d, &att, &mut want);
             for (g, w) in got.iter().zip(&want) {
                 assert!((g - w).abs() < 1e-3, "seed {seed}: {g} vs {w}");
             }
+        }
+    }
+
+    #[test]
+    fn spmv_value_partial_channel_blocks_match_dense() {
+        // channels % 64 != 0 (incl. head_dim < 64) — the seed-bug shapes.
+        for &(t, d) in &[(20, 32), (9, 8), (33, 96), (5, 100)] {
+            let dense = random_pruned(t, d, 0.6, t as u64 * 131 + d as u64);
+            let mut rng = Pcg32::seeded(d as u64);
+            let att: Vec<f32> = (0..t).map(|_| rng.unit_f32()).collect();
+            let m = BitmapMatrix::compress(&dense, t, d, PackAxis::Channel).unwrap();
+            let mut got = vec![0.0f32; d];
+            spmv_value(&m, &att, &mut got);
+            let mut want = vec![0.0f32; d];
+            dense_value(&f16_ref(&dense), t, d, &att, &mut want);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3, "t={t} d={d}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_kernels_within_tolerance_of_f32_reference() {
+        // Acceptance property: against the *unrounded* f32 reference
+        // kernels, the f16 storage path stays within 1e-2 relative error
+        // (L2 over the output vector) across sparsity 0.3–0.9.
+        let l2 = |xs: &[f32]| xs.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        for (i, &s) in [0.3f32, 0.5, 0.7, 0.9].iter().enumerate() {
+            let mut rng = Pcg32::seeded(6000 + i as u64);
+            let (t, d) = (4 * TILE, 128);
+            let dense = random_pruned(t, d, 1.0 - s, 6100 + i as u64);
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let att: Vec<f32> = (0..t).map(|_| rng.unit_f32()).collect();
+
+            let kc = BitmapMatrix::compress(&dense, t, d, PackAxis::Token).unwrap();
+            let mut got_k = vec![0.0f32; t];
+            spmv_key(&kc, &q, &mut got_k);
+            let mut ref_k = vec![0.0f32; t];
+            dense_key(&dense, t, d, &q, &mut ref_k);
+            let err: Vec<f32> = got_k.iter().zip(&ref_k).map(|(a, b)| a - b).collect();
+            let rel = l2(&err) / l2(&ref_k).max(1e-12);
+            assert!(rel <= 1e-2, "key sparsity {s}: rel {rel}");
+
+            let vc = BitmapMatrix::compress(&dense, t, d, PackAxis::Channel).unwrap();
+            let mut got_v = vec![0.0f32; d];
+            spmv_value(&vc, &att, &mut got_v);
+            let mut ref_v = vec![0.0f32; d];
+            dense_value(&dense, t, d, &att, &mut ref_v);
+            let err: Vec<f32> = got_v.iter().zip(&ref_v).map(|(a, b)| a - b).collect();
+            let rel = l2(&err) / l2(&ref_v).max(1e-12);
+            assert!(rel <= 1e-2, "value sparsity {s}: rel {rel}");
         }
     }
 
@@ -468,7 +594,8 @@ mod tests {
         for seed in 0..20 {
             let mut rng = Pcg32::seeded(seed + 4000);
             let t = 1 + rng.below(300) as usize;
-            let d = TILE * (1 + rng.below(2) as usize);
+            // include partial trailing channel blocks (d % 64 != 0)
+            let d = [32, 64, 96, 128][rng.below(4) as usize];
             let g = [1, 2, 4, 8][rng.below(4) as usize];
             let keep = if seed % 5 == 0 { 1.0 } else { 0.1 + 0.8 * rng.unit_f32() };
             let dense = random_pruned(t, d, keep, seed);
@@ -496,7 +623,9 @@ mod tests {
             let t = 1 + rng.below(100) as usize;
             let d = [16, 32, 64][rng.below(3) as usize];
             let g = [1, 3, 4, 8][rng.below(4) as usize];
-            let mat: Vec<f32> = (0..t * d).map(|_| rng.normal_f32()).collect();
+            // exercise the E = u16 instantiation (the f16 dense tail)
+            let mat: Vec<u16> =
+                (0..t * d).map(|_| crate::sparse::f16::f32_to_f16(rng.normal_f32())).collect();
             let qs: Vec<f32> = (0..g * d).map(|_| rng.normal_f32()).collect();
             let att: Vec<f32> = (0..g * t)
                 .map(|i| if i % 5 == 0 { 0.0 } else { rng.normal_f32() })
@@ -531,6 +660,33 @@ mod tests {
         spmv_key_multi(&m, &qs, 2, &mut base);
         for (s, b) in scores.iter().zip(&base) {
             assert!((s - (b + 5.0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn tile_fma_dispatch_matches_scalar_bitexact() {
+        // The dispatched fma_tile_* (SIMD when the `simd` feature is on,
+        // scalar otherwise) must be bit-identical to the scalar oracle for
+        // every length, including non-multiples of the lane count.
+        let mut rng = Pcg32::seeded(8080);
+        for len in 1..=TILE {
+            let vals: Vec<u16> =
+                (0..len).map(|_| crate::sparse::f16::f32_to_f16(rng.normal_f32())).collect();
+            let buf: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let acc0: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let w = rng.normal_f32();
+
+            let mut a = acc0.clone();
+            let mut b = acc0.clone();
+            fma_tile_f16(&mut a, &vals, w);
+            fma_tile_f16_scalar(&mut b, &vals, w);
+            assert_eq!(a, b, "f16 len {len}");
+
+            let mut a = acc0.clone();
+            let mut b = acc0;
+            fma_tile_f32(&mut a, &buf, w);
+            fma_tile_f32_scalar(&mut b, &buf, w);
+            assert_eq!(a, b, "f32 len {len}");
         }
     }
 }
