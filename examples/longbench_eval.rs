@@ -1,3 +1,16 @@
+// Shared lint policy with the library crate (rust/src/lib.rs): these
+// allows cover numeric-harness idioms (indexed loops, config structs
+// mutated after Default::default(), positional format args).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::field_reassign_with_default,
+    clippy::uninlined_format_args,
+    clippy::manual_div_ceil,
+    clippy::type_complexity
+)]
+
 //! LongBench-sim accuracy sweep through the public eval API — a scaled
 //! version of what `mustafar exp table4` runs.
 
@@ -24,7 +37,10 @@ fn main() -> mustafar::Result<()> {
         448,
     );
 
-    println!("{:<14} {:>9} {:>9} {:>11} {:>11}", "task", "Dense", "ThinK0.5", "K0.5 V0.5", "K0.7 V0.7");
+    println!(
+        "{:<14} {:>9} {:>9} {:>11} {:>11}",
+        "task", "Dense", "ThinK0.5", "K0.5 V0.5", "K0.7 V0.7"
+    );
     for (ti, task) in sweep.task_ids.iter().enumerate() {
         print!("{task:<14}");
         for c in 0..cfgs.len() {

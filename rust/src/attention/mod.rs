@@ -5,7 +5,7 @@
 
 use crate::sparse::{
     dense_key, dense_key_multi, dense_value, dense_value_multi, spmv_key, spmv_key_multi,
-    spmv_value, spmv_value_multi, BitmapMatrix, KvElem,
+    spmv_value, spmv_value_multi, BitmapMatrix, KvElem, MAX_GROUP,
 };
 
 /// Precomputed RoPE table for one position: (cos, sin) of length hd/2.
@@ -186,20 +186,70 @@ pub fn decode_sparse_group<E: KvElem>(
     s_comp: &mut Vec<f32>,
     s_tail: &mut Vec<f32>,
 ) {
+    decode_sparse_group_segments(
+        qs,
+        g,
+        &[(k_comp, v_comp)],
+        tail_k,
+        tail_v,
+        tail_len,
+        scale,
+        out,
+        s_comp,
+        s_tail,
+    );
+}
+
+/// Multi-segment fused GQA sparse decode: `decode_sparse_group` where
+/// the compressed region is a *sequence of segments in token order* —
+/// e.g. a shared prefill prefix (`kvcache::SharedPrefix`) followed by
+/// the sequence's own compressed groups. Every segment's bitmap stream
+/// is walked exactly once for the whole query group, and the joint
+/// softmax runs per lane across all segments plus the dense tail.
+///
+/// `s_comp` is laid out segment-major: segment `s` of `nc_s` tokens
+/// occupies `g * nc_s` entries (`[lane][token]` within the segment) at
+/// the running offset. Because segments concatenate at 64-token group
+/// boundaries, walking them in order reproduces the exact tile stream —
+/// and the exact floating-point operation order — of one merged
+/// `BitmapMatrix`, so results are bit-identical to a single-segment call
+/// on the concatenation (and, with one segment, to `decode_sparse`).
+#[allow(clippy::too_many_arguments)]
+pub fn decode_sparse_group_segments<E: KvElem>(
+    qs: &[f32],
+    g: usize,
+    segs: &[(&BitmapMatrix, &BitmapMatrix)],
+    tail_k: &[E],
+    tail_v: &[E],
+    tail_len: usize,
+    scale: f32,
+    out: &mut [f32],
+    s_comp: &mut Vec<f32>,
+    s_tail: &mut Vec<f32>,
+) {
     assert!(g >= 1, "empty query group");
+    assert!(g <= MAX_GROUP, "query group {g} exceeds MAX_GROUP {MAX_GROUP}");
     let hd = qs.len() / g;
     debug_assert_eq!(qs.len(), g * hd);
     debug_assert_eq!(out.len(), g * hd);
-    let nc = k_comp.tokens;
-    debug_assert_eq!(v_comp.tokens, nc);
     debug_assert_eq!(tail_k.len(), tail_len * hd);
+    let total: usize = segs.iter().map(|(k, _)| k.tokens).sum();
 
     s_comp.clear();
-    s_comp.resize(g * nc, 0.0);
+    s_comp.resize(g * total, 0.0);
     s_tail.clear();
     s_tail.resize(g * tail_len, 0.0);
 
-    spmv_key_multi(k_comp, qs, g, s_comp);
+    let mut off = 0;
+    for (k, v) in segs {
+        let nc = k.tokens;
+        debug_assert_eq!(v.tokens, nc);
+        if nc == 0 {
+            continue;
+        }
+        spmv_key_multi(k, qs, g, &mut s_comp[off..off + g * nc]);
+        off += g * nc;
+    }
     dense_key_multi(tail_k, tail_len, hd, qs, g, s_tail);
     for s in s_comp.iter_mut() {
         *s *= scale;
@@ -208,15 +258,94 @@ pub fn decode_sparse_group<E: KvElem>(
         *s *= scale;
     }
 
+    // Joint softmax per lane over [seg_0 | seg_1 | ... | tail] without
+    // materializing the concatenation (the N-segment generalization of
+    // `two_part_softmax`, same pass order per lane).
+    let mut m = [f32::NEG_INFINITY; MAX_GROUP];
+    let mut off = 0;
+    for (k, _) in segs {
+        let nc = k.tokens;
+        if nc == 0 {
+            continue;
+        }
+        for (l, ml) in m.iter_mut().enumerate().take(g) {
+            for &x in &s_comp[off + l * nc..off + (l + 1) * nc] {
+                *ml = ml.max(x);
+            }
+        }
+        off += g * nc;
+    }
+    for (l, ml) in m.iter_mut().enumerate().take(g) {
+        for &x in &s_tail[l * tail_len..(l + 1) * tail_len] {
+            *ml = ml.max(x);
+        }
+    }
+
+    let mut denom = [0.0f32; MAX_GROUP];
+    let mut off = 0;
+    for (k, _) in segs {
+        let nc = k.tokens;
+        if nc == 0 {
+            continue;
+        }
+        for l in 0..g {
+            if !m[l].is_finite() {
+                continue;
+            }
+            for x in &mut s_comp[off + l * nc..off + (l + 1) * nc] {
+                *x = (*x - m[l]).exp();
+                denom[l] += *x;
+            }
+        }
+        off += g * nc;
+    }
     for l in 0..g {
-        two_part_softmax(
-            &mut s_comp[l * nc..(l + 1) * nc],
-            &mut s_tail[l * tail_len..(l + 1) * tail_len],
-        );
+        if !m[l].is_finite() {
+            continue;
+        }
+        for x in &mut s_tail[l * tail_len..(l + 1) * tail_len] {
+            *x = (*x - m[l]).exp();
+            denom[l] += *x;
+        }
+    }
+
+    let mut off = 0;
+    for (k, _) in segs {
+        let nc = k.tokens;
+        if nc == 0 {
+            continue;
+        }
+        for l in 0..g {
+            if !m[l].is_finite() {
+                continue;
+            }
+            let inv = 1.0 / denom[l];
+            for x in &mut s_comp[off + l * nc..off + (l + 1) * nc] {
+                *x *= inv;
+            }
+        }
+        off += g * nc;
+    }
+    for l in 0..g {
+        if !m[l].is_finite() {
+            continue;
+        }
+        let inv = 1.0 / denom[l];
+        for x in &mut s_tail[l * tail_len..(l + 1) * tail_len] {
+            *x *= inv;
+        }
     }
 
     out.iter_mut().for_each(|x| *x = 0.0);
-    spmv_value_multi(v_comp, s_comp, g, out);
+    let mut off = 0;
+    for (_, v) in segs {
+        let nc = v.tokens;
+        if nc == 0 {
+            continue;
+        }
+        spmv_value_multi(v, &s_comp[off..off + g * nc], g, out);
+        off += g * nc;
+    }
     dense_value_multi(tail_v, tail_len, hd, s_tail, g, out);
 }
 
@@ -389,7 +518,8 @@ mod tests {
         for seed in 0..8 {
             let mut rng = Pcg32::seeded(seed + 700);
             let g = [1, 2, 4, 8][rng.below(4) as usize];
-            let (t_comp, tail, hd) = (64 * (1 + rng.below(3) as usize), 1 + rng.below(40) as usize, 64);
+            let (t_comp, tail) = (64 * (1 + rng.below(3) as usize), 1 + rng.below(40) as usize);
+            let hd = 64;
             let kk = 16 + rng.below(40) as usize;
             let k = randv((t_comp + tail) * hd, &mut rng);
             let v = randv((t_comp + tail) * hd, &mut rng);
@@ -422,6 +552,63 @@ mod tests {
     }
 
     #[test]
+    fn segmented_decode_bitexact_vs_concatenated() {
+        // Splitting the compressed region at a 64-token group boundary
+        // (shared prefix | private groups) must not change a single bit:
+        // the segment walk reproduces the merged tile stream exactly.
+        for seed in 0..6 {
+            let mut rng = Pcg32::seeded(seed + 900);
+            let g = [1, 2, 4][rng.below(3) as usize];
+            let hd = [32usize, 64][rng.below(2) as usize];
+            let (t_a, t_b) = (64 * (1 + rng.below(3) as usize), 64 * (1 + rng.below(2) as usize));
+            let t_comp = t_a + t_b;
+            let tail = 1 + rng.below(40) as usize;
+            let kk = 8 + rng.below((hd / 2) as u32) as usize;
+            let k = randv((t_comp + tail) * hd, &mut rng);
+            let v = randv((t_comp + tail) * hd, &mut rng);
+            let qs = randv(g * hd, &mut rng);
+            let scale = 1.0 / (hd as f32).sqrt();
+
+            let kp = per_token_magnitude(&k[..t_comp * hd], t_comp, hd, kk);
+            let vp = per_token_magnitude(&v[..t_comp * hd], t_comp, hd, kk);
+            let k_full = BitmapMatrix::compress(&kp, t_comp, hd, PackAxis::Token).unwrap();
+            let v_full = BitmapMatrix::compress(&vp, t_comp, hd, PackAxis::Channel).unwrap();
+            let k_a = BitmapMatrix::compress(&kp[..t_a * hd], t_a, hd, PackAxis::Token).unwrap();
+            let v_a = BitmapMatrix::compress(&vp[..t_a * hd], t_a, hd, PackAxis::Channel).unwrap();
+            let k_b = BitmapMatrix::compress(&kp[t_a * hd..], t_b, hd, PackAxis::Token).unwrap();
+            let v_b = BitmapMatrix::compress(&vp[t_a * hd..], t_b, hd, PackAxis::Channel).unwrap();
+            let (tail_k, tail_v) =
+                (to_f16_vec(&k[t_comp * hd..]), to_f16_vec(&v[t_comp * hd..]));
+
+            let mut one = vec![0.0f32; g * hd];
+            let (mut sc, mut st) = (Vec::new(), Vec::new());
+            decode_sparse_group(
+                &qs, g, &k_full, &v_full, &tail_k, &tail_v, tail,
+                scale, &mut one, &mut sc, &mut st,
+            );
+
+            let mut two = vec![0.0f32; g * hd];
+            let segs = [(&k_a, &v_a), (&k_b, &v_b)];
+            decode_sparse_group_segments(
+                &qs, g, &segs, &tail_k, &tail_v, tail,
+                scale, &mut two, &mut sc, &mut st,
+            );
+            assert_eq!(one, two, "seed {seed} g={g} hd={hd} split {t_a}+{t_b}");
+
+            // an interposed empty segment must be a no-op
+            let k_e = BitmapMatrix::empty(hd, PackAxis::Token);
+            let v_e = BitmapMatrix::empty(hd, PackAxis::Channel);
+            let mut three = vec![0.0f32; g * hd];
+            let segs3 = [(&k_a, &v_a), (&k_e, &v_e), (&k_b, &v_b)];
+            decode_sparse_group_segments(
+                &qs, g, &segs3, &tail_k, &tail_v, tail,
+                scale, &mut three, &mut sc, &mut st,
+            );
+            assert_eq!(one, three, "empty segment changed the result");
+        }
+    }
+
+    #[test]
     fn decode_sparse_group_empty_compressed_region() {
         // Before any group has been compressed the whole history lives in
         // the tail; the fused path must handle nc == 0.
@@ -440,7 +627,8 @@ mod tests {
         );
         for l in 0..g {
             let mut lane = vec![0.0f32; hd];
-            decode_dense(&qs[l * hd..(l + 1) * hd], &f16_ref(&k), &f16_ref(&v), tail, 0.2, &mut lane);
+            let ql = &qs[l * hd..(l + 1) * hd];
+            decode_dense(ql, &f16_ref(&k), &f16_ref(&v), tail, 0.2, &mut lane);
             for (a, b) in fused[l * hd..(l + 1) * hd].iter().zip(&lane) {
                 assert!((a - b).abs() < 1e-5, "lane {l}: {a} vs {b}");
             }

@@ -156,10 +156,22 @@ pub struct EngineConfig {
     pub queue_cap: usize,
     /// Max generated tokens per request (safety cap).
     pub max_new_tokens: usize,
-    /// KV pool budget in bytes (0 = unlimited) — admission control uses
-    /// this to decide how many sequences fit, which is how Mustafar's
-    /// compression buys larger batches (Fig 7).
+    /// KV pool budget in bytes (0 = unlimited). All compressed-KV
+    /// storage — sequence regions, dense tails, shared prefix-cache
+    /// pages — reserves fixed-size pages from one `kvpool::KvPool`
+    /// under this budget; admission and decode growth are gated on real
+    /// pool occupancy, which is how Mustafar's compression buys larger
+    /// batches (Fig 7).
     pub kv_budget_bytes: usize,
+    /// Page size for the KV pool.
+    pub kv_page_bytes: usize,
+    /// Enable the prefill prefix cache (shared immutable compressed
+    /// pages keyed by a hash chain over prompt tokens).
+    pub prefix_cache: bool,
+    /// Pressure-controller re-prune ladder: sparsity tiers the coldest
+    /// resident sequences are moved through before anything is
+    /// preempted or rejected.
+    pub reprune_tiers: Vec<f64>,
     /// Worker threads for per-head attention parallelism.
     pub threads: usize,
 }
@@ -173,6 +185,9 @@ impl Default for EngineConfig {
             queue_cap: 256,
             max_new_tokens: 64,
             kv_budget_bytes: 0,
+            kv_page_bytes: crate::kvpool::DEFAULT_PAGE_BYTES,
+            prefix_cache: true,
+            reprune_tiers: vec![0.75, 0.9],
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
         }
     }

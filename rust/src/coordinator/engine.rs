@@ -1,6 +1,16 @@
 //! The serving engine: continuous batching over the native or PJRT
 //! backends, with the Mustafar compressed-KV lifecycle owned by the
 //! coordinator (prune + compress on local-window exit).
+//!
+//! All compressed-KV storage reserves pages from one `kvpool::KvPool`
+//! under a global byte budget. Admission checks *real pool occupancy*
+//! (head-of-line estimate against free pages, then an exact post-prefill
+//! reservation); prefill work is shared through the kvpool prefix cache
+//! (full hits skip prefill entirely and decode token-identically to the
+//! cold path); and when a reservation cannot be satisfied the pressure
+//! ladder runs — evict idle prefix pages, re-prune the coldest resident
+//! sequences to a higher sparsity tier, preempt the youngest sequence
+//! back onto the queue — before anything is rejected.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -12,7 +22,8 @@ use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::request::{ActiveSeq, Completion, FinishReason, Request};
 use crate::coordinator::scheduler::Scheduler;
 use crate::error::Result;
-use crate::kvcache::{KvPolicy, SequenceKV};
+use crate::kvcache::{build_shared_prefill, KvPolicy, SequenceKV};
+use crate::kvpool::{self, KvPool, OwnerId, PoolConfig, PoolStats, PrefixCache, PrefixHit};
 use crate::model::{argmax, DecodeScratch, NativeModel};
 
 /// Per-sequence backend state.
@@ -37,6 +48,12 @@ pub struct Engine {
     /// Persistent decode workers (lazily created on the first batched
     /// round) — replaces per-round `std::thread::scope` spawning.
     pool: Option<WorkerPool>,
+    /// The paged compressed-KV pool every byte of KV state reserves
+    /// against.
+    kvpool: KvPool,
+    prefix_cache: PrefixCache,
+    /// Monotone admission counter (pressure-controller coldness order).
+    admit_stamp: u64,
 }
 
 impl Engine {
@@ -52,6 +69,11 @@ impl Engine {
             },
         };
         let scheduler = Scheduler::new(cfg.clone(), model.cfg().clone(), policy);
+        let kvpool = KvPool::new(PoolConfig {
+            budget_bytes: cfg.kv_budget_bytes,
+            page_bytes: cfg.kv_page_bytes,
+        });
+        let prefix_cache = PrefixCache::new(cfg.prefix_cache);
         Engine {
             cfg,
             model: Arc::new(model),
@@ -62,6 +84,9 @@ impl Engine {
             metrics: Metrics::default(),
             pjrt: None,
             pool: None,
+            kvpool,
+            prefix_cache,
+            admit_stamp: 0,
         }
     }
 
@@ -76,8 +101,30 @@ impl Engine {
         &self.policy
     }
 
-    /// Submit a request to the admission queue.
+    /// Pool occupancy snapshot (served by the TCP stats endpoint).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.kvpool.stats()
+    }
+
+    pub fn prefix_cache(&self) -> &PrefixCache {
+        &self.prefix_cache
+    }
+
+    /// Recompute the pool's live bytes from the actual buffers (active
+    /// sequences' private state + prefix-cache entries). The pool's own
+    /// `stats().live_bytes` must equal this exactly at step boundaries —
+    /// asserted by the accounting tests.
+    pub fn measured_live_bytes(&self) -> usize {
+        let seqs: usize =
+            self.active.iter().map(|s| Self::state_bytes(&s.state, self.pjrt.as_ref())).sum();
+        seqs + self.prefix_cache.measured_bytes()
+    }
+
+    /// Submit a request to the admission queue (stamping its submission
+    /// time, the base of `Completion::queue_ms`).
     pub fn submit(&mut self, req: Request) -> bool {
+        let mut req = req;
+        req.submitted = Instant::now();
         let ok = self.scheduler.submit(req);
         if !ok {
             self.metrics.rejected += 1;
@@ -90,11 +137,13 @@ impl Engine {
         self.active.is_empty() && self.scheduler.pending() == 0
     }
 
-    /// Admit + prefill new sequences, then run one decode round.
+    /// Admit + prefill new sequences, run one decode round, then settle
+    /// every sequence's pool reservation against its actual growth.
     pub fn step(&mut self) -> Result<()> {
         let t0 = Instant::now();
         self.admit_and_prefill()?;
         self.decode_round()?;
+        self.sync_pool();
         self.metrics.wall_s += t0.elapsed().as_secs_f64();
         Ok(())
     }
@@ -114,58 +163,351 @@ impl Engine {
         std::mem::take(&mut self.completions)
     }
 
-    fn admit_and_prefill(&mut self) -> Result<()> {
-        let admitted = self.scheduler.admit(self.active.len());
-        for req in admitted {
-            let enqueue = Instant::now(); // queue time measured from admission call in server mode
-            let t0 = Instant::now();
-            let (state, first_logits) = match (self.cfg.backend, &mut self.pjrt) {
-                (Backend::NativeDense | Backend::NativeSparse, _) => {
-                    let r = self.model.prefill(&req.prompt, false);
-                    let mut kv = SequenceKV::new(
-                        self.policy,
-                        self.model.cfg().n_layers,
-                        self.model.cfg().n_kv_heads,
-                        self.model.cfg().head_dim,
-                    )?;
-                    kv.ingest_prefill(&r.k, &r.v, r.t, None)?;
-                    (SeqState::Native(Box::new(kv)), r.logits_last)
-                }
-                (Backend::PjrtDense | Backend::PjrtSparse, Some(pj)) => {
-                    let (seq, logits) = pj.prefill(&req.prompt, self.cfg.backend)?;
-                    (SeqState::Pjrt(Box::new(seq)), logits)
-                }
-                (_, None) => {
-                    return Err(crate::Error::Engine(
-                        "pjrt backend selected but not constructed".into(),
-                    ))
-                }
-            };
-            let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-            self.metrics.prefill_tokens += req.prompt.len();
+    /// Estimated pool footprint of a full prefix-cache hit: private
+    /// dense tails only (the shared compressed pages are already
+    /// charged to the cache).
+    fn full_hit_need(&self) -> usize {
+        let window = self.policy.local_window + crate::sparse::TILE;
+        crate::coordinator::scheduler::estimate_seq_bytes(&self.policy, self.model.cfg(), window)
+    }
 
-            let first = argmax(&first_logits);
-            let pos = req.prompt.len();
-            let mut seq = ActiveSeq {
-                req,
-                generated: vec![first],
-                pos,
-                enqueue,
-                prefill_ms,
-                queue_ms: 0.0,
-                decode_start: Instant::now(),
-                state,
-                scratch: DecodeScratch::new(),
-            };
-            self.metrics.generated_tokens += 1;
-            if self.seq_finished(&seq) {
-                self.finish(seq);
-            } else {
-                seq.decode_start = Instant::now();
-                self.active.push(seq);
+    fn admit_and_prefill(&mut self) -> Result<()> {
+        while self.active.len() < self.cfg.max_batch {
+            let Some(mut need) = self.scheduler.peek_need() else { break };
+            // a fully-cached head only charges its tails — don't evict
+            // or re-prune residents against the whole-prompt estimate
+            if self.scheduler.peek().is_some_and(|r| self.prefix_cache.has_full(&r.prompt)) {
+                need = need.min(self.full_hit_need());
             }
+            if !self.kvpool.fits_extra(need) && !self.reclaim(need, None, false) {
+                // Head-of-line wait while anything is running (retiring
+                // sequences will free pages). With an empty batch the
+                // head is admitted anyway: the exact reservation below
+                // — which may preempt nothing — decides for real, so an
+                // oversized request rejects instead of stalling the
+                // queue forever.
+                if !self.active.is_empty() {
+                    break;
+                }
+            }
+            let req = self.scheduler.pop_front().expect("peeked head vanished");
+            self.start_request(req)?;
         }
         Ok(())
+    }
+
+    /// Prefill (or restore from the prefix cache), reserve exact pool
+    /// bytes, and activate one admitted request.
+    fn start_request(&mut self, req: Request) -> Result<()> {
+        let admitted = Instant::now();
+        let queue_ms = admitted.duration_since(req.submitted).as_secs_f64() * 1e3;
+        let t0 = Instant::now();
+        let cacheable = self.prefix_cache.enabled()
+            && self.policy.prefix_shareable()
+            && matches!(self.cfg.backend, Backend::NativeDense | Backend::NativeSparse);
+
+        let (state, first) = match (self.cfg.backend, &mut self.pjrt) {
+            (Backend::NativeDense | Backend::NativeSparse, _) => {
+                let hit = if cacheable {
+                    self.prefix_cache.lookup(&req.prompt, self.policy.local_window)
+                } else {
+                    None
+                };
+                match hit {
+                    Some(PrefixHit::Full { prefix, tail_k, tail_v, first_token }) => {
+                        // the whole prefill is cached: reconstruct the
+                        // exact post-prefill state and skip the forward
+                        self.metrics.prefix_full_hits += 1;
+                        self.metrics.prefix_tokens_reused += req.prompt.len();
+                        let kv = SequenceKV::restore_full(
+                            self.policy,
+                            prefix,
+                            tail_k,
+                            tail_v,
+                            req.prompt.len(),
+                        )?;
+                        (SeqState::Native(Box::new(kv)), first_token)
+                    }
+                    Some(PrefixHit::Partial { prefix }) => {
+                        // shared pages cover [0, b); run only the prompt
+                        // suffix, token by token, over the compressed
+                        // prefix (chunked prefill)
+                        let b = prefix.tokens;
+                        self.metrics.prefix_partial_hits += 1;
+                        self.metrics.prefix_tokens_reused += b;
+                        self.metrics.prefill_tokens += req.prompt.len() - b;
+                        let mut kv = SequenceKV::with_prefix(self.policy, prefix)?;
+                        let mut scratch = DecodeScratch::new();
+                        for (j, &tok) in req.prompt.iter().enumerate().skip(b) {
+                            self.model.decode_into(tok, j, &mut kv, &mut scratch)?;
+                        }
+                        // only the final suffix position's logits matter
+                        let first = argmax(&scratch.logits);
+                        (SeqState::Native(Box::new(kv)), first)
+                    }
+                    None => {
+                        if cacheable {
+                            self.metrics.prefix_misses += 1;
+                        }
+                        self.metrics.prefill_tokens += req.prompt.len();
+                        let r = self.model.prefill(&req.prompt, false);
+                        let first = argmax(&r.logits_last);
+                        let mcfg = self.model.cfg();
+                        let (l, nkv, hd) = (mcfg.n_layers, mcfg.n_kv_heads, mcfg.head_dim);
+                        let kv = if cacheable {
+                            // cacheable split: immutable compressed
+                            // prefix (shared pages) + private tails
+                            let (prefix, tk, tv) =
+                                build_shared_prefill(&self.policy, l, nkv, hd, &r.k, &r.v, r.t)?;
+                            let ev0 = self.prefix_cache.evictions;
+                            let canonical = self.prefix_cache.insert(
+                                &req.prompt,
+                                Arc::new(prefix),
+                                &tk,
+                                &tv,
+                                first,
+                                &mut self.kvpool,
+                            );
+                            self.metrics.prefix_evictions += self.prefix_cache.evictions - ev0;
+                            if let Some(p) = canonical {
+                                SequenceKV::restore_full(self.policy, p, tk, tv, r.t)?
+                            } else {
+                                // no room to cache: keep everything
+                                // private so each byte has one owner
+                                let mut kv = SequenceKV::new(self.policy, l, nkv, hd)?;
+                                kv.ingest_prefill(&r.k, &r.v, r.t, None)?;
+                                kv
+                            }
+                        } else {
+                            let mut kv = SequenceKV::new(self.policy, l, nkv, hd)?;
+                            kv.ingest_prefill(&r.k, &r.v, r.t, None)?;
+                            kv
+                        };
+                        (SeqState::Native(Box::new(kv)), first)
+                    }
+                }
+            }
+            (Backend::PjrtDense | Backend::PjrtSparse, Some(pj)) => {
+                self.metrics.prefill_tokens += req.prompt.len();
+                let (seq, logits) = pj.prefill(&req.prompt, self.cfg.backend)?;
+                (SeqState::Pjrt(Box::new(seq)), argmax(&logits))
+            }
+            (_, None) => {
+                return Err(crate::Error::Engine(
+                    "pjrt backend selected but not constructed".into(),
+                ))
+            }
+        };
+        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // Exact reservation against the pool. This is the issue's
+        // "reservation would exceed the budget" moment: the full ladder
+        // (evict → re-prune → preempt) may run; only a request that
+        // cannot fit even with the pool to itself is rejected.
+        let owner = self.kvpool.register();
+        let bytes = Self::state_bytes(&state, self.pjrt.as_ref());
+        if let Err(sf) = self.kvpool.set_live_bytes(owner, bytes) {
+            let ok = self.reclaim(sf.bytes, None, true)
+                && self.kvpool.set_live_bytes(owner, bytes).is_ok();
+            if !ok {
+                self.kvpool.release(owner);
+                self.metrics.rejected += 1;
+                self.metrics.rejected_capacity += 1;
+                self.completions.push(Completion {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    finish: FinishReason::Rejected,
+                    queue_ms,
+                    prefill_ms,
+                    decode_ms: 0.0,
+                    kv_bytes: 0,
+                    kv_dense_bytes: 0,
+                });
+                return Ok(());
+            }
+        }
+
+        let pos = req.prompt.len();
+        self.admit_stamp += 1;
+        let mut seq = ActiveSeq {
+            req,
+            generated: vec![first],
+            pos,
+            prefill_ms,
+            queue_ms,
+            decode_start: Instant::now(),
+            state,
+            owner,
+            admitted_seq: self.admit_stamp,
+            reprune_tier: 0,
+            scratch: DecodeScratch::new(),
+        };
+        self.metrics.generated_tokens += 1;
+        if self.seq_finished(&seq) {
+            self.finish(seq);
+        } else {
+            seq.decode_start = Instant::now();
+            self.active.push(seq);
+        }
+        Ok(())
+    }
+
+    fn state_bytes(state: &SeqState, pjrt: Option<&PjrtBackend>) -> usize {
+        match state {
+            SeqState::Native(kv) => kv.private_bytes(),
+            SeqState::Pjrt(seq) => pjrt.map(|p| p.seq_memory_bytes(seq).0).unwrap_or(0),
+        }
+    }
+
+    /// The pressure ladder: make `need` extra pool bytes fit. Steps, in
+    /// order: (1) evict idle LRU prefix-cache entries; (2) re-prune the
+    /// coldest resident sequence's compressed regions to the next
+    /// sparsity tier (pages shrink in place); (3) if allowed, preempt
+    /// the youngest sequence back onto the admission queue
+    /// (recompute-style, FIFO re-entry; `protect` is never the victim).
+    /// Returns true once the reservation fits.
+    fn reclaim(&mut self, need: usize, protect: Option<u64>, allow_preempt: bool) -> bool {
+        loop {
+            if self.kvpool.fits_extra(need) {
+                return true;
+            }
+            if self.prefix_cache.evict_lru(&mut self.kvpool) {
+                self.metrics.prefix_evictions += 1;
+                continue;
+            }
+            if self.reprune_one() {
+                continue;
+            }
+            if allow_preempt {
+                let cands = self.reclaim_candidates();
+                if let Some(i) = kvpool::pick_preempt_victim(&cands, protect) {
+                    self.preempt_at(i);
+                    continue;
+                }
+            }
+            return false;
+        }
+    }
+
+    fn reclaim_candidates(&self) -> Vec<kvpool::ReclaimCandidate> {
+        self.active
+            .iter()
+            .map(|s| kvpool::ReclaimCandidate {
+                admitted_seq: s.admitted_seq,
+                tier: s.reprune_tier,
+                compressed_bytes: match &s.state {
+                    SeqState::Native(kv) => kv.compressed_region_bytes(),
+                    SeqState::Pjrt(_) => 0,
+                },
+                reprunable: matches!(&s.state, SeqState::Native(kv) if kv.policy.compress),
+            })
+            .collect()
+    }
+
+    /// Re-prune one resident sequence to its next sparsity tier.
+    /// Returns true when it made progress (freed bytes or retired a
+    /// candidate), false when no sequence has tiers left.
+    fn reprune_one(&mut self) -> bool {
+        let tiers = self.cfg.reprune_tiers.clone();
+        let cands = self.reclaim_candidates();
+        let Some(i) = kvpool::pick_reprune_victim(&cands, tiers.len()) else {
+            return false;
+        };
+        let s = &mut self.active[i];
+        let SeqState::Native(kv) = &mut s.state else {
+            s.reprune_tier = tiers.len();
+            return true;
+        };
+        // Gate the ladder on the *less* sparse side: as long as either
+        // cache still sits below a remaining tier there are bytes to
+        // reclaim (`reprune` raises each side independently and never
+        // lowers one already above the tier).
+        let cur = kv.policy.sparsity.key_sparsity.min(kv.policy.sparsity.value_sparsity);
+        let Some((next_tier, sparsity)) = kvpool::next_reprune_tier(&tiers, s.reprune_tier, cur)
+        else {
+            // already sparser than every remaining tier
+            s.reprune_tier = tiers.len();
+            return true;
+        };
+        s.reprune_tier = next_tier;
+        if kv.reprune(sparsity, sparsity).is_err() {
+            return false;
+        }
+        let owner = s.owner;
+        let bytes = kv.private_bytes();
+        // a re-prune only shrinks, so this reservation cannot fail
+        let _ = self.kvpool.set_live_bytes(owner, bytes);
+        self.metrics.repruned += 1;
+        true
+    }
+
+    /// Recompute-style preemption: drop the sequence's state (pages and
+    /// generated tokens) and put its request back at the queue head.
+    /// The discarded tokens leave `generated_tokens` too — the re-run
+    /// counts them again, so keeping them would double-count throughput
+    /// exactly in the pressure regimes being measured (the invariant
+    /// `generated_tokens == Σ completion lengths` holds regardless of
+    /// preemptions).
+    fn preempt_at(&mut self, idx: usize) {
+        let s = self.active.swap_remove(idx);
+        self.kvpool.release(s.owner);
+        self.metrics.generated_tokens -= s.generated.len();
+        self.scheduler.requeue_front(s.req);
+        self.metrics.preempted += 1;
+    }
+
+    /// Settle every active sequence's reservation against its actual
+    /// post-round footprint, running the pressure ladder on growth that
+    /// no longer fits. A sequence that cannot fit even after the full
+    /// ladder is preempted (peers remain) or reject-finished (it has the
+    /// pool to itself and still cannot grow).
+    fn sync_pool(&mut self) {
+        let owners: Vec<(OwnerId, u64)> =
+            self.active.iter().map(|s| (s.owner, s.admitted_seq)).collect();
+        for (owner, stamp) in owners {
+            loop {
+                let Some(idx) = self.active.iter().position(|s| s.owner == owner) else {
+                    break; // preempted by an earlier sequence's reclaim
+                };
+                let bytes = Self::state_bytes(&self.active[idx].state, self.pjrt.as_ref());
+                match self.kvpool.set_live_bytes(owner, bytes) {
+                    Ok(()) => break,
+                    Err(sf) => {
+                        if self.reclaim(sf.bytes, Some(stamp), true) {
+                            continue; // retry the reservation
+                        }
+                        let Some(idx) = self.active.iter().position(|s| s.owner == owner) else {
+                            break;
+                        };
+                        if self.active.len() > 1 {
+                            self.preempt_at(idx);
+                        } else {
+                            let s = self.active.swap_remove(idx);
+                            self.kvpool.release(s.owner);
+                            self.reject_finish(s);
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Finish a sequence that ran out of pool even with the whole budget
+    /// to itself (nothing reclaimable remains).
+    fn reject_finish(&mut self, s: ActiveSeq) {
+        self.metrics.rejected += 1;
+        self.metrics.rejected_capacity += 1;
+        self.completions.push(Completion {
+            id: s.req.id,
+            tokens: s.generated,
+            finish: FinishReason::Rejected,
+            queue_ms: s.queue_ms,
+            prefill_ms: s.prefill_ms,
+            decode_ms: s.decode_start.elapsed().as_secs_f64() * 1e3,
+            kv_bytes: 0,
+            kv_dense_bytes: 0,
+        });
     }
 
     fn seq_finished(&self, s: &ActiveSeq) -> bool {
@@ -247,7 +589,7 @@ impl Engine {
     }
 
     fn finish(&mut self, s: ActiveSeq) {
-        self.scheduler.release(&s.req);
+        self.kvpool.release(s.owner);
         let (kv_bytes, kv_dense) = match &s.state {
             SeqState::Native(kv) => kv.memory_bytes(),
             SeqState::Pjrt(seq) => self
@@ -259,7 +601,8 @@ impl Engine {
         self.metrics.peak_kv_bytes = self.metrics.peak_kv_bytes.max(kv_bytes);
         self.metrics.peak_kv_dense_bytes = self.metrics.peak_kv_dense_bytes.max(kv_dense);
         let decode_ms = s.decode_start.elapsed().as_secs_f64() * 1e3;
-        let total_ms = s.enqueue.elapsed().as_secs_f64() * 1e3;
+        // end-to-end latency from submission (includes queue time)
+        let total_ms = s.req.submitted.elapsed().as_secs_f64() * 1e3;
         self.metrics.request_ms.push(total_ms);
         self.metrics.completions += 1;
 
@@ -299,16 +642,11 @@ fn decode_one_native(model: &NativeModel, s: &mut ActiveSeq) -> Result<u16> {
 mod tests {
     use super::*;
     use crate::config::{Backend, ModelConfig};
+    use crate::coordinator::scheduler::estimate_seq_bytes;
     use crate::model::Weights;
 
-    fn tiny_engine_gqa(
-        backend: Backend,
-        sparsity: (f64, f64),
-        n_heads: usize,
-        n_kv_heads: usize,
-        head_dim: usize,
-    ) -> Engine {
-        let cfg = ModelConfig {
+    fn tiny_model_cfg(n_heads: usize, n_kv_heads: usize, head_dim: usize) -> ModelConfig {
+        ModelConfig {
             name: "tiny".into(),
             d_model: 64,
             n_layers: 2,
@@ -318,9 +656,19 @@ mod tests {
             ff: 128,
             vocab: 512,
             rope_theta: 10000.0,
-            max_seq: 256,
+            max_seq: 1024,
             norm_eps: 1e-5,
-        };
+        }
+    }
+
+    fn tiny_engine_gqa(
+        backend: Backend,
+        sparsity: (f64, f64),
+        n_heads: usize,
+        n_kv_heads: usize,
+        head_dim: usize,
+    ) -> Engine {
+        let cfg = tiny_model_cfg(n_heads, n_kv_heads, head_dim);
         let model = NativeModel::new(Weights::random_for_tests(cfg, 42));
         let mut ec = EngineConfig::default();
         ec.backend = backend;
@@ -337,7 +685,8 @@ mod tests {
     fn reqs(n: u64, prompt_len: usize, gen: usize) -> Vec<Request> {
         (0..n)
             .map(|i| {
-                let prompt: Vec<u16> = (0..prompt_len).map(|j| ((i as usize * 31 + j) % 400 + 16) as u16).collect();
+                let prompt: Vec<u16> =
+                    (0..prompt_len).map(|j| ((i as usize * 31 + j) % 400 + 16) as u16).collect();
                 Request::new(i, prompt, gen)
             })
             .collect()
@@ -437,5 +786,130 @@ mod tests {
                 assert!(c.kv_bytes < c.kv_dense_bytes, "hd={hd}");
             }
         }
+    }
+
+    #[test]
+    fn prefix_cache_full_hit_is_token_identical_and_skips_prefill() {
+        let mut e = tiny_engine(Backend::NativeSparse, (0.5, 0.5));
+        let r = reqs(1, 160, 8);
+        let cold = e.run_trace(r.clone()).unwrap();
+        assert_eq!(e.metrics.prefix_misses, 1);
+        assert_eq!(e.metrics.prefix_full_hits, 0);
+        let prefill_after_cold = e.metrics.prefill_tokens;
+
+        // same prompt again: full hit, no prefill work, identical tokens
+        let mut again = r.clone();
+        again[0].id = 1;
+        let hot = e.run_trace(again).unwrap();
+        assert_eq!(e.metrics.prefix_full_hits, 1);
+        assert_eq!(e.metrics.prefill_tokens, prefill_after_cold, "prefill was not skipped");
+        assert_eq!(e.metrics.prefix_tokens_reused, 160);
+        assert_eq!(hot[0].tokens, cold[0].tokens, "full hit must be token-identical");
+        assert!(e.metrics.prefix_hit_rate() > 0.4);
+    }
+
+    #[test]
+    fn prefix_cache_partial_hit_reuses_shared_pages() {
+        let mut e = tiny_engine(Backend::NativeSparse, (0.5, 0.5));
+        let base = reqs(1, 224, 4);
+        e.run_trace(base.clone()).unwrap();
+        // (224 - 32) -> prefix boundary at 192 tokens
+
+        // an extending prompt: shares the first 224 tokens, adds 64 more
+        let mut longer = base[0].prompt.clone();
+        longer.extend((0..64).map(|i| (i * 3 % 300 + 20) as u16));
+        let out = e.run_trace(vec![Request::new(9, longer, 4)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens.len(), 4);
+        assert_eq!(out[0].finish, FinishReason::Length);
+        assert_eq!(e.metrics.prefix_partial_hits, 1);
+        assert_eq!(e.metrics.prefix_tokens_reused, 192);
+        // only the suffix beyond the shared boundary was prefilled
+        assert_eq!(e.metrics.prefill_tokens, 224 + (288 - 192));
+    }
+
+    #[test]
+    fn pool_accounting_is_exact_at_every_step() {
+        let mut e = tiny_engine(Backend::NativeSparse, (0.5, 0.5));
+        for r in reqs(5, 128, 6) {
+            e.submit(r);
+        }
+        while !e.idle() {
+            e.step().unwrap();
+            assert_eq!(
+                e.pool_stats().live_bytes,
+                e.measured_live_bytes(),
+                "pool charge drifted from measured bytes"
+            );
+        }
+        // all sequences retired: whatever remains is the prefix cache
+        assert_eq!(e.pool_stats().live_bytes, e.prefix_cache().measured_bytes());
+        assert_eq!(e.pool_stats().live_bytes, e.prefix_cache().charged_bytes(&e.kvpool));
+    }
+
+    #[test]
+    fn over_budget_trace_completes_via_reprune_and_preempt() {
+        // Acceptance: aggregate KV far exceeds the pool budget, yet every
+        // request completes — the pressure ladder degrades and reorders
+        // instead of rejecting.
+        let cfg = tiny_model_cfg(2, 1, 32);
+        let policy = crate::kvcache::KvPolicy::mustafar(0.5, 0.5);
+        let per_seq = estimate_seq_bytes(&policy, &cfg, 96 + 160);
+        let model = NativeModel::new(Weights::random_for_tests(cfg, 42));
+        let mut ec = EngineConfig::default();
+        ec.backend = Backend::NativeSparse;
+        ec.sparsity = crate::config::SparsityConfig::mustafar(0.5, 0.5);
+        ec.max_batch = 3;
+        ec.max_new_tokens = 256;
+        ec.kv_budget_bytes = per_seq * 2; // 3 full sequences cannot coexist
+        ec.kv_page_bytes = 1024;
+        let mut e = Engine::new_native(model, ec);
+
+        for r in reqs(3, 96, 160) {
+            assert!(e.submit(r), "submit-time rejection defeats the test");
+        }
+        while !e.idle() {
+            e.step().unwrap();
+            assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+            assert!(
+                e.pool_stats().reserved_bytes <= e.pool_stats().budget_bytes + 1024,
+                "budget exceeded: {} > {}",
+                e.pool_stats().reserved_bytes,
+                e.pool_stats().budget_bytes
+            );
+        }
+        let out = e.take_completions();
+        assert_eq!(out.len(), 3);
+        for c in &out {
+            assert_eq!(c.finish, FinishReason::Length, "id {} finished {:?}", c.id, c.finish);
+            assert_eq!(c.tokens.len(), 160, "id {}", c.id);
+        }
+        assert_eq!(e.metrics.rejected, 0);
+        assert!(
+            e.metrics.repruned + e.metrics.preempted > 0,
+            "pressure ladder never ran (repruned {}, preempted {})",
+            e.metrics.repruned,
+            e.metrics.preempted
+        );
+    }
+
+    #[test]
+    fn queue_ms_reports_admission_minus_submission() {
+        let cfg = tiny_model_cfg(2, 1, 32);
+        let model = NativeModel::new(Weights::random_for_tests(cfg, 42));
+        let mut ec = EngineConfig::default();
+        ec.backend = Backend::NativeDense;
+        ec.max_batch = 1; // the second request must wait for the first
+        let mut e = Engine::new_native(model, ec);
+        let out = e.run_trace(reqs(2, 64, 8)).unwrap();
+        let c0 = out.iter().find(|c| c.id == 0).unwrap();
+        let c1 = out.iter().find(|c| c.id == 1).unwrap();
+        assert!(c1.queue_ms > 0.0, "queued request reports zero queue time");
+        assert!(
+            c1.queue_ms > c0.queue_ms,
+            "request 1 waited a full request ({} vs {})",
+            c1.queue_ms,
+            c0.queue_ms
+        );
     }
 }

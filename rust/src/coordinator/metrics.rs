@@ -19,6 +19,21 @@ pub struct Metrics {
     pub peak_kv_bytes: usize,
     /// Peak dense-equivalent KV bytes.
     pub peak_kv_dense_bytes: usize,
+    /// Prefix-cache outcomes among cache-eligible admissions.
+    pub prefix_full_hits: usize,
+    pub prefix_partial_hits: usize,
+    pub prefix_misses: usize,
+    /// Entries dropped by the pressure controller / insert path.
+    pub prefix_evictions: usize,
+    /// Prompt tokens whose prefill was skipped via shared pages.
+    pub prefix_tokens_reused: usize,
+    /// Pressure-controller actions: compressed regions re-pruned to a
+    /// higher sparsity tier, and sequences preempted back to the queue.
+    pub repruned: usize,
+    pub preempted: usize,
+    /// Requests that reached admission but could not fit the pool even
+    /// after the full reclaim ladder (subset of `rejected`).
+    pub rejected_capacity: usize,
 }
 
 impl Metrics {
@@ -50,6 +65,18 @@ impl Metrics {
             1.0
         } else {
             self.peak_kv_bytes as f64 / self.peak_kv_dense_bytes as f64
+        }
+    }
+
+    /// Fraction of cache-eligible admissions that hit the prefix cache
+    /// (full or partial).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let hits = self.prefix_full_hits + self.prefix_partial_hits;
+        let total = hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
         }
     }
 }

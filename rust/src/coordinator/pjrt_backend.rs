@@ -187,8 +187,10 @@ impl PjrtBackend {
                         let krows = &kflat[src..src + self.s * hd];
                         let vrows = &vflat[src..src + self.s * hd];
                         // prune + pack the compressed region
-                        let kp = prune::per_token_magnitude(&krows[..n_comp * hd], n_comp, hd, self.kk);
-                        let vp = prune::per_token_magnitude(&vrows[..n_comp * hd], n_comp, hd, self.kk);
+                        let kc = &krows[..n_comp * hd];
+                        let vc = &vrows[..n_comp * hd];
+                        let kp = prune::per_token_magnitude(kc, n_comp, hd, self.kk);
+                        let vp = prune::per_token_magnitude(vc, n_comp, hd, self.kk);
                         let kpair = TokenPairs::from_dense(&kp, n_comp, hd, self.kk)?;
                         let vpair = TokenPairs::from_dense(&vp, n_comp, hd, self.kk)?;
                         let base = (li * kv + h) * self.tc * self.kk;

@@ -10,11 +10,16 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Stop generation at this token (the language's SEP by default).
     pub stop_token: Option<u16>,
+    /// When the request entered the system. Stamped at construction and
+    /// re-stamped by `Engine::submit`; `Completion::queue_ms` reports
+    /// admission − submission against it. Preserved across preemption
+    /// so re-queued requests report their full queue time.
+    pub submitted: Instant,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<u16>, max_new_tokens: usize) -> Request {
-        Request { id, prompt, max_new_tokens, stop_token: None }
+        Request { id, prompt, max_new_tokens, stop_token: None, submitted: Instant::now() }
     }
 }
 
@@ -50,11 +55,16 @@ pub(crate) struct ActiveSeq {
     pub generated: Vec<u16>,
     /// Next RoPE position (= tokens processed so far).
     pub pos: usize,
-    pub enqueue: Instant,
     pub prefill_ms: f64,
     pub queue_ms: f64,
     pub decode_start: Instant,
     pub state: crate::coordinator::engine::SeqState,
+    /// This sequence's page-table owner in the kvpool.
+    pub owner: crate::kvpool::OwnerId,
+    /// Monotone admission stamp (pressure-controller coldness order).
+    pub admitted_seq: u64,
+    /// Next re-prune tier index into `EngineConfig::reprune_tiers`.
+    pub reprune_tier: usize,
     /// Per-sequence decode workspace: buffers persist across tokens so
     /// the native decode hot path allocates nothing in steady state.
     pub scratch: crate::model::DecodeScratch,

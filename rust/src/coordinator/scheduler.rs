@@ -73,31 +73,31 @@ pub fn estimate_seq_bytes(policy: &KvPolicy, cfg: &ModelConfig, tokens: usize) -
     heads * (k_bytes + v_bytes + tail_tokens * dense_per_tok)
 }
 
-/// FIFO admission queue with capacity + KV-budget gating.
+/// FIFO admission queue.
+///
+/// Byte gating moved to the `kvpool` with the paged-pool refactor: the
+/// engine admits against *real pool occupancy* (free pages plus what
+/// the pressure ladder can reclaim), not a reserved-estimate model. The
+/// scheduler keeps the estimate only for (a) rejecting requests that
+/// could never fit the budget even alone and (b) `peek_need`, the
+/// prefill-footprint hint the engine checks headroom against before
+/// popping the head.
 pub struct Scheduler {
     pub cfg: EngineConfig,
     model_cfg: ModelConfig,
     policy: KvPolicy,
     queue: VecDeque<Request>,
-    /// Bytes currently reserved by running sequences.
-    reserved: usize,
     pub rejected: Vec<Request>,
 }
 
 impl Scheduler {
     pub fn new(cfg: EngineConfig, model_cfg: ModelConfig, policy: KvPolicy) -> Scheduler {
-        Scheduler {
-            cfg,
-            model_cfg,
-            policy,
-            queue: VecDeque::new(),
-            reserved: 0,
-            rejected: Vec::new(),
-        }
+        Scheduler { cfg, model_cfg, policy, queue: VecDeque::new(), rejected: Vec::new() }
     }
 
     /// Enqueue a request; returns false (and records it) when the queue is
-    /// full or the request can never fit the budget.
+    /// full or the request can never fit the budget even with the whole
+    /// pool to itself.
     pub fn submit(&mut self, req: Request) -> bool {
         if self.queue.len() >= self.cfg.queue_cap {
             self.rejected.push(req);
@@ -120,34 +120,48 @@ impl Scheduler {
         )
     }
 
-    /// Admit requests into the running batch (`running` = current size).
-    /// Returns the admitted requests and reserves their KV budget.
+    /// Estimated *post-prefill* pool footprint of the head request (the
+    /// admission headroom check; decode growth is paged in on demand
+    /// and handled by the pressure ladder). None when the queue is
+    /// empty.
+    pub fn peek_need(&self) -> Option<usize> {
+        self.queue
+            .front()
+            .map(|r| estimate_seq_bytes(&self.policy, &self.model_cfg, r.prompt.len() + 1))
+    }
+
+    /// Head of the queue (admission gating inspects its prompt).
+    pub fn peek(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
+    /// Pop the head request for admission.
+    pub fn pop_front(&mut self) -> Option<Request> {
+        self.queue.pop_front()
+    }
+
+    /// Re-enqueue a preempted request at the *front* of the queue (it
+    /// was admitted once; FIFO fairness says it goes next). Bypasses
+    /// `queue_cap` — a preempted request must never be dropped.
+    pub fn requeue_front(&mut self, req: Request) {
+        self.queue.push_front(req);
+    }
+
+    /// Capacity-only admission (`running` = current batch size): pops up
+    /// to `max_batch` requests without byte gating. Callers holding a
+    /// `KvPool` (the engine) admit one at a time through `peek_need` /
+    /// `pop_front` instead, so reservations check real occupancy.
     pub fn admit(&mut self, running: usize) -> Vec<Request> {
         let mut out = Vec::new();
         while running + out.len() < self.cfg.max_batch {
-            let Some(front) = self.queue.front() else { break };
-            let need = self.estimate(front);
-            if self.cfg.kv_budget_bytes > 0 && self.reserved + need > self.cfg.kv_budget_bytes {
-                break; // head-of-line blocking by design (FIFO fairness)
-            }
-            self.reserved += need;
-            out.push(self.queue.pop_front().unwrap());
+            let Some(req) = self.queue.pop_front() else { break };
+            out.push(req);
         }
         out
     }
 
-    /// Release a finished sequence's reservation.
-    pub fn release(&mut self, req: &Request) {
-        let need = self.estimate(req);
-        self.reserved = self.reserved.saturating_sub(need);
-    }
-
     pub fn pending(&self) -> usize {
         self.queue.len()
-    }
-
-    pub fn reserved_bytes(&self) -> usize {
-        self.reserved
     }
 }
 
@@ -223,24 +237,36 @@ mod tests {
     }
 
     #[test]
-    fn budget_admits_more_compressed_sequences() {
+    fn peek_need_reflects_compression() {
+        // The admission hint is the prefill footprint, and compressed
+        // policies need fewer bytes for the same prompt — the mechanism
+        // that lets the engine pack more sequences into one pool.
         let cfg = mc();
-        let budget = estimate_seq_bytes(&KvPolicy::dense(), &cfg, 1024) * 6; // fits 6 dense
         let mk = |policy: KvPolicy| {
-            let mut ec = EngineConfig::default();
-            ec.max_batch = 16;
-            ec.kv_budget_bytes = budget;
-            let mut s = Scheduler::new(ec, cfg.clone(), policy);
-            for i in 0..16 {
-                let ok = s.submit(Request::new(i, vec![0; 896], 128));
-                assert!(ok);
-            }
-            s.admit(0).len()
+            let mut s = Scheduler::new(EngineConfig::default(), cfg.clone(), policy);
+            assert!(s.peek_need().is_none());
+            s.submit(Request::new(0, vec![0; 896], 128));
+            s.peek_need().unwrap()
         };
-        let dense_batch = mk(KvPolicy::dense());
-        let sparse_batch = mk(KvPolicy::mustafar(0.7, 0.7));
-        assert_eq!(dense_batch, 6);
-        assert!(sparse_batch > dense_batch, "{sparse_batch} vs {dense_batch}");
+        let dense = mk(KvPolicy::dense());
+        let sparse = mk(KvPolicy::mustafar(0.7, 0.7));
+        assert!(sparse < dense, "{sparse} vs {dense}");
+        // prefill-only: far below the whole-lifetime estimate
+        assert!(dense <= estimate_seq_bytes(&KvPolicy::dense(), &cfg, 896 + 128));
+    }
+
+    #[test]
+    fn submit_rejects_impossible_requests() {
+        // A request whose whole-lifetime KV exceeds the entire pool can
+        // never complete; it is rejected at submit instead of cycling
+        // through the pressure ladder forever.
+        let cfg = mc();
+        let mut ec = EngineConfig::default();
+        ec.kv_budget_bytes = estimate_seq_bytes(&KvPolicy::dense(), &cfg, 64);
+        let mut s = Scheduler::new(ec, cfg, KvPolicy::dense());
+        assert!(s.submit(Request::new(0, vec![0; 32], 8)));
+        assert!(!s.submit(Request::new(1, vec![0; 512], 128)));
+        assert_eq!(s.rejected.len(), 1);
     }
 
     #[test]
@@ -257,22 +283,19 @@ mod tests {
     }
 
     #[test]
-    fn release_frees_budget() {
+    fn requeue_front_takes_priority_and_bypasses_cap() {
         let cfg = mc();
-        let per = estimate_seq_bytes(&KvPolicy::dense(), &cfg, 40);
         let mut ec = EngineConfig::default();
-        ec.max_batch = 1;
-        ec.kv_budget_bytes = per; // fits exactly one
+        ec.queue_cap = 2;
         let mut s = Scheduler::new(ec, cfg, KvPolicy::dense());
-        let r0 = Request::new(0, vec![0; 32], 8);
-        let r1 = Request::new(1, vec![0; 32], 8);
-        assert!(s.submit(r0.clone()));
-        assert!(s.submit(r1));
-        let adm = s.admit(0);
-        assert_eq!(adm.len(), 1);
-        assert_eq!(s.admit(0).len(), 0); // budget exhausted even with room
-        s.release(&r0);
-        assert_eq!(s.admit(0).len(), 1);
+        s.submit(Request::new(0, vec![0; 8], 4));
+        s.submit(Request::new(1, vec![0; 8], 4));
+        // a preempted request re-enters at the head even when the queue
+        // is at capacity
+        s.requeue_front(Request::new(7, vec![0; 8], 4));
+        assert_eq!(s.pending(), 3);
+        assert_eq!(s.pop_front().unwrap().id, 7);
+        assert_eq!(s.pop_front().unwrap().id, 0);
     }
 
     #[test]

@@ -145,7 +145,8 @@ fn fig2(ctx: &ExpCtx) -> Result<()> {
          uniform. Metric: max/mean ratio of per-channel mean |x| (1.0 = \
          perfectly uniform).\n\n",
     );
-    let mut t = Table::new("Channel outlier ratios", &["model", "Key cache", "Value cache", "K/V ratio"]);
+    let cols = ["model", "Key cache", "Value cache", "K/V ratio"];
+    let mut t = Table::new("Channel outlier ratios", &cols);
     for name in ["gqa-small", "mha-small", "gqa-medium"] {
         let Ok(model) = ctx.model(name) else {
             crate::info!("fig2: skipping {name} (weights missing)");
@@ -414,7 +415,13 @@ fn table12(ctx: &ExpCtx) -> Result<()> {
         EvalConfig::methods("V0.5 (2:4)", Method::None, 0.0, Method::Semi24, 0.5),
         EvalConfig::methods("V0.5 (Unstr)", Method::None, 0.0, Method::TokenMagnitude, 0.5),
         EvalConfig::methods("KV0.5 (2:4)", Method::Semi24, 0.5, Method::Semi24, 0.5),
-        EvalConfig::methods("KV0.5 (Unstr)", Method::TokenMagnitude, 0.5, Method::TokenMagnitude, 0.5),
+        EvalConfig::methods(
+            "KV0.5 (Unstr)",
+            Method::TokenMagnitude,
+            0.5,
+            Method::TokenMagnitude,
+            0.5,
+        ),
     ];
     let sweep = run_sweep(&model, &cfgs, None, ctx.n_samples, ctx.ctx_len);
     let body = render_grid_table("table12 — 2:4 vs unstructured (gqa-small)", &sweep);
@@ -430,14 +437,22 @@ fn table12(ctx: &ExpCtx) -> Result<()> {
 /// target (dense < unstructured magnitude/OA < 2:4 < structured).
 fn ppl_study(ctx: &ExpCtx) -> Result<()> {
     let mut out = String::from(
-        "# Supplementary — held-out NLL (nats/token) under KV pruning\n\n         Lower is better; Dense is the floor. This signal does not depend\n         on task mastery, so it is meaningful at any training budget.\n\n",
+        "# Supplementary — held-out NLL (nats/token) under KV pruning\n\n         \
+         Lower is better; Dense is the floor. This signal does not depend\n         \
+         on task mastery, so it is meaningful at any training budget.\n\n",
     );
     for name in ["gqa-small", "mha-small"] {
         let Ok(model) = ctx.model(name) else { continue };
         let cfgs = vec![
             EvalConfig::dense(),
             EvalConfig::mustafar(0.5, 0.5),
-            EvalConfig::methods("OA-K0.5 V0.5", Method::TokenOutputAware, 0.5, Method::TokenMagnitude, 0.5),
+            EvalConfig::methods(
+                "OA-K0.5 V0.5",
+                Method::TokenOutputAware,
+                0.5,
+                Method::TokenMagnitude,
+                0.5,
+            ),
             EvalConfig::methods("2:4 KV", Method::Semi24, 0.5, Method::Semi24, 0.5),
             EvalConfig::methods("ChMag V0.5", Method::None, 0.0, Method::ChannelMagnitude, 0.5),
             EvalConfig::think(0.5),
@@ -445,8 +460,10 @@ fn ppl_study(ctx: &ExpCtx) -> Result<()> {
             EvalConfig::think(0.7),
             EvalConfig::mustafar(0.9, 0.9),
         ];
-        let nll = crate::eval::ppl::sweep_nll(&model, &cfgs, ctx.n_samples.min(12), ctx.ctx_len.min(384));
-        let mut t = Table::new(&format!("ppl — {name}"), &["config", "NLL (nats/tok)", "Δ vs dense"]);
+        let (ns, cl) = (ctx.n_samples.min(12), ctx.ctx_len.min(384));
+        let nll = crate::eval::ppl::sweep_nll(&model, &cfgs, ns, cl);
+        let cols = ["config", "NLL (nats/tok)", "Δ vs dense"];
+        let mut t = Table::new(&format!("ppl — {name}"), &cols);
         for (c, cfg) in cfgs.iter().enumerate() {
             t.row(vec![
                 cfg.label.clone(),

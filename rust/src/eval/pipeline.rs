@@ -128,7 +128,8 @@ fn eval_one(
         let mut aux_f = PruneAux::default();
         let mut kept_len = 0;
         for idx in 0..pre.k.len() {
-            let sel = h2o_select(&pre.att_total[idx].iter().map(|&x| x as f64).collect::<Vec<_>>(), t_pre, rb, hb);
+            let att: Vec<f64> = pre.att_total[idx].iter().map(|&x| x as f64).collect();
+            let sel = h2o_select(&att, t_pre, rb, hb);
             kept_len = sel.kept.len();
             let mut km = Vec::with_capacity(sel.kept.len() * hd);
             let mut vm = Vec::with_capacity(sel.kept.len() * hd);
@@ -219,7 +220,13 @@ mod tests {
             EvalConfig::dense(),
             EvalConfig::mustafar(0.5, 0.5),
             EvalConfig::think(0.5),
-            EvalConfig::methods("oa", Method::TokenOutputAware, 0.5, Method::ChannelOutputAware, 0.5),
+            EvalConfig::methods(
+                "oa",
+                Method::TokenOutputAware,
+                0.5,
+                Method::ChannelOutputAware,
+                0.5,
+            ),
             EvalConfig {
                 label: "kivi".into(),
                 sparsity: SparsityConfig::mustafar(0.5, 0.5),

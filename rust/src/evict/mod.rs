@@ -55,7 +55,12 @@ impl HeavyHitterTracker {
 /// the `recent_budget` most recent tokens plus the `hh_budget` highest
 /// accumulated-attention tokens among the rest (ties -> more recent wins,
 /// matching H2O's greedy oracle on streaming ties).
-pub fn h2o_select(scores: &[f64], n: usize, recent_budget: usize, hh_budget: usize) -> H2oSelection {
+pub fn h2o_select(
+    scores: &[f64],
+    n: usize,
+    recent_budget: usize,
+    hh_budget: usize,
+) -> H2oSelection {
     assert!(scores.len() >= n || scores.is_empty() || scores.len() == n);
     let recent_start = n.saturating_sub(recent_budget);
     let mut candidates: Vec<usize> = (0..recent_start).collect();

@@ -16,6 +16,8 @@
 //!    region (tile ordering makes this an O(group) append);
 //!  * optional KIVI-style fake quantization after pruning (§4.2.2).
 
+use std::sync::Arc;
+
 use crate::config::SparsityConfig;
 use crate::error::{Error, Result};
 use crate::prune::{self, Method, OutputAwareCtx};
@@ -62,6 +64,102 @@ impl KvPolicy {
             local_window: prune::LOCAL_WINDOW,
         }
     }
+
+    /// True when prefill compression under this policy is a pure
+    /// per-token function of each token's own K/V row. Causal attention
+    /// makes a token's K/V depend only on the tokens before it, so under
+    /// a token-local policy the compressed form of a shared prompt
+    /// prefix is *byte-identical* across every prompt extending it —
+    /// the property the prefix cache relies on to share pages. Output-
+    /// aware / channel-wise methods and span-wise fake quantization mix
+    /// information across tokens and are not shareable.
+    pub fn prefix_shareable(&self) -> bool {
+        self.compress
+            && self.quant.is_none()
+            && matches!(self.sparsity.key_method, Method::None | Method::TokenMagnitude)
+            && matches!(self.sparsity.value_method, Method::None | Method::TokenMagnitude)
+    }
+}
+
+/// Immutable compressed prefill prefix, shared across sequences through
+/// the `kvpool` prefix cache (refcounted via `Arc`). Covers `tokens`
+/// prompt tokens (a multiple of the 64-token group), one (K, V)
+/// compressed pair per (layer, kv-head), in the same bitmap format as a
+/// sequence's private region. Never mutated after construction: sharers
+/// append their own private groups *after* it (copy-on-write at the
+/// divergence point — the shared pages stay untouched, divergence lives
+/// entirely in per-sequence storage).
+#[derive(Clone, Debug)]
+pub struct SharedPrefix {
+    pub n_layers: usize,
+    pub n_kv: usize,
+    pub hd: usize,
+    /// Prompt tokens covered (multiple of `TILE`).
+    pub tokens: usize,
+    k: Vec<BitmapMatrix>,
+    v: Vec<BitmapMatrix>,
+}
+
+impl SharedPrefix {
+    /// Compressed (K, V) pair of one (layer, kv-head).
+    #[inline]
+    pub fn head(&self, layer: usize, kv: usize) -> (&BitmapMatrix, &BitmapMatrix) {
+        let idx = layer * self.n_kv + kv;
+        (&self.k[idx], &self.v[idx])
+    }
+
+    /// Actually-stored bytes across all heads (the pool-charged figure).
+    pub fn bytes(&self) -> usize {
+        self.k.iter().map(|m| m.compressed_bytes()).sum::<usize>()
+            + self.v.iter().map(|m| m.compressed_bytes()).sum::<usize>()
+    }
+}
+
+/// Split a prefill's dense K/V into a shareable compressed prefix plus
+/// per-head binary16 dense tails — the cacheable decomposition of
+/// `ingest_prefill`. Caller must have checked `policy.prefix_shareable()`
+/// (token-local pruning), which is what makes the produced prefix
+/// byte-identical for every prompt sharing those tokens.
+///
+/// Returns `(prefix, tail_k, tail_v)` with `tail_k[layer * n_kv + kv]`
+/// holding the `[tail_tokens x hd]` rows not covered by the prefix.
+pub fn build_shared_prefill(
+    policy: &KvPolicy,
+    n_layers: usize,
+    n_kv: usize,
+    hd: usize,
+    k_dense: &[Vec<f32>],
+    v_dense: &[Vec<f32>],
+    t: usize,
+) -> Result<(SharedPrefix, Vec<Vec<u16>>, Vec<Vec<u16>>)> {
+    let heads = n_layers * n_kv;
+    assert_eq!(k_dense.len(), heads);
+    let w = policy.local_window;
+    let n_comp = if policy.compress && t > w { ((t - w) / TILE) * TILE } else { 0 };
+
+    let mut k_comp = Vec::with_capacity(heads);
+    let mut v_comp = Vec::with_capacity(heads);
+    let mut tail_k = Vec::with_capacity(heads);
+    let mut tail_v = Vec::with_capacity(heads);
+    for idx in 0..heads {
+        let k = &k_dense[idx];
+        let v = &v_dense[idx];
+        assert_eq!(k.len(), t * hd);
+        let mut km = BitmapMatrix::empty(hd, PackAxis::Token);
+        let mut vm = BitmapMatrix::empty(hd, PackAxis::Channel);
+        if n_comp > 0 {
+            let (kp, vp) =
+                prune_span(policy, hd, &k[..n_comp * hd], &v[..n_comp * hd], n_comp, idx, None);
+            km.append_groups(&kp, n_comp)?;
+            vm.append_groups(&vp, n_comp)?;
+        }
+        k_comp.push(km);
+        v_comp.push(vm);
+        tail_k.push(f16::to_f16_vec(&k[n_comp * hd..]));
+        tail_v.push(f16::to_f16_vec(&v[n_comp * hd..]));
+    }
+    let prefix = SharedPrefix { n_layers, n_kv, hd, tokens: n_comp, k: k_comp, v: v_comp };
+    Ok((prefix, tail_k, tail_v))
 }
 
 /// How many dead 64-token groups may accumulate ahead of the tail cursor
@@ -174,6 +272,42 @@ pub struct PruneAux {
     pub att_win: Vec<Vec<f32>>,
 }
 
+/// Apply `policy`'s pruning (+ optional quantization) to a span of K and
+/// V rows for head index `idx` (shared by `ingest_prefill` and
+/// `build_shared_prefill`).
+fn prune_span(
+    policy: &KvPolicy,
+    hd: usize,
+    k: &[f32],
+    v: &[f32],
+    t: usize,
+    idx: usize,
+    aux: Option<&PruneAux>,
+) -> (Vec<f32>, Vec<f32>) {
+    let sp = &policy.sparsity;
+
+    let kctx = OutputAwareCtx {
+        q_abs_sum: aux.map(|a| a.q_abs_win[idx].as_slice()),
+        att_sum: None,
+    };
+    let mut kp = prune::apply(sp.key_method, k, t, hd, sp.key_sparsity, &kctx);
+
+    let vctx = OutputAwareCtx {
+        q_abs_sum: None,
+        // only the rows being pruned (the compressed span) are scored
+        att_sum: aux.map(|a| &a.att_win[idx][..t]),
+    };
+    let mut vp = prune::apply(sp.value_method, v, t, hd, sp.value_sparsity, &vctx);
+
+    if let Some(q) = policy.quant {
+        // Harma et al. ordering (as the paper follows): prune first,
+        // then quantize the survivors.
+        quant::kivi_fake_quant(&mut kp, t, hd, q.key_bits, quant::Axis::PerChannel, true);
+        quant::kivi_fake_quant(&mut vp, t, hd, q.value_bits, quant::Axis::PerToken, true);
+    }
+    (kp, vp)
+}
+
 /// Full per-sequence KV cache across layers and kv-heads.
 #[derive(Clone, Debug)]
 pub struct SequenceKV {
@@ -182,7 +316,12 @@ pub struct SequenceKV {
     pub n_kv: usize,
     pub hd: usize,
     heads: Vec<HeadKV>,
-    /// Total tokens represented (compressed + tail); uniform across heads.
+    /// Shared immutable compressed prefill prefix (prefix-cache hit);
+    /// covers tokens `[0, prefix.tokens)`. Private state holds
+    /// everything after it.
+    prefix: Option<Arc<SharedPrefix>>,
+    /// Total tokens represented (prefix + compressed + tail); uniform
+    /// across heads.
     pub tokens: usize,
 }
 
@@ -190,7 +329,76 @@ impl SequenceKV {
     pub fn new(policy: KvPolicy, n_layers: usize, n_kv: usize, hd: usize) -> Result<SequenceKV> {
         let heads =
             (0..n_layers * n_kv).map(|_| HeadKV::new(hd)).collect::<Result<Vec<HeadKV>>>()?;
-        Ok(SequenceKV { policy, n_layers, n_kv, hd, heads, tokens: 0 })
+        Ok(SequenceKV { policy, n_layers, n_kv, hd, heads, prefix: None, tokens: 0 })
+    }
+
+    /// Build a sequence on top of a shared compressed prefix (partial
+    /// prefix-cache hit): the prefix supplies tokens `[0, prefix.tokens)`
+    /// and the caller drives the remaining prompt through the decode
+    /// path to fill the dense tail. An empty prefix degrades to `new`.
+    pub fn with_prefix(policy: KvPolicy, prefix: Arc<SharedPrefix>) -> Result<SequenceKV> {
+        if !policy.compress {
+            return Err(Error::Invalid(
+                "with_prefix: shared compressed prefixes require a compressing policy".into(),
+            ));
+        }
+        let (n_layers, n_kv, hd) = (prefix.n_layers, prefix.n_kv, prefix.hd);
+        let mut seq = SequenceKV::new(policy, n_layers, n_kv, hd)?;
+        if prefix.tokens > 0 {
+            seq.tokens = prefix.tokens;
+            seq.prefix = Some(prefix);
+        }
+        Ok(seq)
+    }
+
+    /// Reconstruct a full post-prefill sequence from a prefix-cache
+    /// *full* hit: shared compressed prefix + this prompt's own binary16
+    /// dense tails (`tail_k[layer * n_kv + kv]`, `[tail_tokens x hd]`).
+    /// The result is bit-identical to the state `ingest_prefill` would
+    /// have produced for the same prompt, so subsequent decode is
+    /// token-identical to the cold path.
+    pub fn restore_full(
+        policy: KvPolicy,
+        prefix: Arc<SharedPrefix>,
+        tail_k: Vec<Vec<u16>>,
+        tail_v: Vec<Vec<u16>>,
+        total_tokens: usize,
+    ) -> Result<SequenceKV> {
+        let mut seq = SequenceKV::with_prefix(policy, prefix)?;
+        let hd = seq.hd;
+        if tail_k.len() != seq.heads.len() || tail_v.len() != seq.heads.len() {
+            return Err(Error::Shape("restore_full: per-head tail count mismatch".into()));
+        }
+        if total_tokens < seq.tokens {
+            return Err(Error::Shape(format!(
+                "restore_full: total tokens {total_tokens} < prefix tokens {}",
+                seq.tokens
+            )));
+        }
+        let tail_tokens = total_tokens - seq.tokens;
+        // tails move in (no copy): the caller either owns a fresh clone
+        // from the cache entry or built them for this sequence anyway
+        let pairs = tail_k.into_iter().zip(tail_v);
+        for (idx, (h, (tk, tv))) in seq.heads.iter_mut().zip(pairs).enumerate() {
+            if tk.len() != tail_tokens * hd || tv.len() != tail_tokens * hd {
+                return Err(Error::Shape(format!(
+                    "restore_full: head {idx} tail len {} != {} tokens x {hd}",
+                    tk.len(),
+                    tail_tokens
+                )));
+            }
+            h.tail_k_buf = tk;
+            h.tail_v_buf = tv;
+            h.tail_start = 0;
+        }
+        seq.tokens = total_tokens;
+        Ok(seq)
+    }
+
+    /// Shared prefix, if this sequence rides on one.
+    #[inline]
+    pub fn prefix(&self) -> Option<&Arc<SharedPrefix>> {
+        self.prefix.as_ref()
     }
 
     #[inline]
@@ -227,7 +435,9 @@ impl SequenceKV {
             assert_eq!(k.len(), t * hd);
 
             if n_comp > 0 {
-                let (kp, vp) = self.prune_pair(&k[..n_comp * hd], &v[..n_comp * hd], n_comp, idx, aux);
+                let policy = self.policy;
+                let (kp, vp) =
+                    prune_span(&policy, hd, &k[..n_comp * hd], &v[..n_comp * hd], n_comp, idx, aux);
                 let h = &mut self.heads[idx];
                 h.k_comp.append_groups(&kp, n_comp)?;
                 h.v_comp.append_groups(&vp, n_comp)?;
@@ -237,41 +447,6 @@ impl SequenceKV {
         }
         self.tokens = t;
         Ok(())
-    }
-
-    /// Apply the policy's pruning (+ optional quantization) to a span of
-    /// K and V rows for head index `idx`.
-    fn prune_pair(
-        &self,
-        k: &[f32],
-        v: &[f32],
-        t: usize,
-        idx: usize,
-        aux: Option<&PruneAux>,
-    ) -> (Vec<f32>, Vec<f32>) {
-        let hd = self.hd;
-        let sp = &self.policy.sparsity;
-
-        let kctx = OutputAwareCtx {
-            q_abs_sum: aux.map(|a| a.q_abs_win[idx].as_slice()),
-            att_sum: None,
-        };
-        let mut kp = prune::apply(sp.key_method, k, t, hd, sp.key_sparsity, &kctx);
-
-        let vctx = OutputAwareCtx {
-            q_abs_sum: None,
-            // only the rows being pruned (the compressed span) are scored
-            att_sum: aux.map(|a| &a.att_win[idx][..t]),
-        };
-        let mut vp = prune::apply(sp.value_method, v, t, hd, sp.value_sparsity, &vctx);
-
-        if let Some(q) = self.policy.quant {
-            // Harma et al. ordering (as the paper follows): prune first,
-            // then quantize the survivors.
-            quant::kivi_fake_quant(&mut kp, t, hd, q.key_bits, quant::Axis::PerChannel, true);
-            quant::kivi_fake_quant(&mut vp, t, hd, q.value_bits, quant::Axis::PerToken, true);
-        }
-        (kp, vp)
     }
 
     /// Append one decoded token's K/V for (layer, kv) — narrowed to
@@ -328,8 +503,9 @@ impl SequenceKV {
                 (kp, vp)
             };
             if let Some(q) = self.policy.quant {
-                quant::kivi_fake_quant(&mut kp, TILE, hd, q.key_bits, quant::Axis::PerChannel, true);
-                quant::kivi_fake_quant(&mut vp, TILE, hd, q.value_bits, quant::Axis::PerToken, true);
+                let (kb, vb) = (q.key_bits, q.value_bits);
+                quant::kivi_fake_quant(&mut kp, TILE, hd, kb, quant::Axis::PerChannel, true);
+                quant::kivi_fake_quant(&mut vp, TILE, hd, vb, quant::Axis::PerToken, true);
             }
             let h = &mut self.heads[idx];
             h.k_comp.append_groups(&kp, TILE)?;
@@ -342,17 +518,73 @@ impl SequenceKV {
     /// (compressed_bytes, dense_equivalent_bytes) — the Fig 6b metric,
     /// aggregated over layers and heads. Since the cache stores real
     /// binary16, the compressed figure is the sum of actually-stored
-    /// bytes (`HeadKV::mem_usage`); the dense equivalent counts the same
-    /// token count at dense fp16.
+    /// bytes (`HeadKV::mem_usage`, plus the shared prefix this sequence
+    /// logically includes); the dense equivalent counts the same token
+    /// count at dense fp16.
     pub fn memory_bytes(&self) -> (usize, usize) {
         let hd = self.hd;
-        let mut comp = 0usize;
+        let mut comp = self.prefix.as_ref().map_or(0, |p| p.bytes());
         let mut dense = 0usize;
         for h in &self.heads {
             comp += h.mem_usage();
             dense += 2 * self.tokens * hd * crate::sparse::bitmap::VALUE_BYTES;
         }
         (comp, dense)
+    }
+
+    /// Bytes privately owned by this sequence: compressed regions + live
+    /// dense tails, *excluding* any shared prefix (the prefix cache
+    /// charges those pages to the pool exactly once for all sharers).
+    /// This is the figure the engine reserves against the kvpool.
+    pub fn private_bytes(&self) -> usize {
+        self.heads.iter().map(|h| h.mem_usage()).sum()
+    }
+
+    /// Bytes of the private *compressed regions* only — the part a
+    /// re-prune can shrink (dense tails and shared prefixes are not
+    /// re-prunable). The pressure controller ranks victims by this.
+    pub fn compressed_region_bytes(&self) -> usize {
+        self.heads
+            .iter()
+            .map(|h| h.k_comp.compressed_bytes() + h.v_comp.compressed_bytes())
+            .sum()
+    }
+
+    /// Pressure-adaptive re-prune (the kvpool pressure controller's
+    /// step 2): raise the *private* compressed regions to `ks`/`vs`
+    /// sparsity by decompress → per-token magnitude → recompress, pages
+    /// shrinking in place. The dense tail (local window) and any shared
+    /// prefix stay untouched, and the policy is updated so groups
+    /// compressed from now on match the new tier. Sides whose sparsity
+    /// would not increase are left alone. Returns the bytes freed.
+    pub fn reprune(&mut self, ks: f64, vs: f64) -> Result<usize> {
+        let before = self.private_bytes();
+        let hd = self.hd;
+        let raise_k = self.policy.compress && ks > self.policy.sparsity.key_sparsity;
+        let raise_v = self.policy.compress && vs > self.policy.sparsity.value_sparsity;
+        let kk_k = prune::keep_count(hd, ks);
+        let kk_v = prune::keep_count(hd, vs);
+        for h in &mut self.heads {
+            if raise_k && h.k_comp.tokens > 0 {
+                let t = h.k_comp.tokens;
+                let pruned = prune::per_token_magnitude(&h.k_comp.decompress(), t, hd, kk_k);
+                h.k_comp = BitmapMatrix::compress(&pruned, t, hd, PackAxis::Token)?;
+            }
+            if raise_v && h.v_comp.tokens > 0 {
+                let t = h.v_comp.tokens;
+                let pruned = prune::per_token_magnitude(&h.v_comp.decompress(), t, hd, kk_v);
+                h.v_comp = BitmapMatrix::compress(&pruned, t, hd, PackAxis::Channel)?;
+            }
+        }
+        if raise_k {
+            self.policy.sparsity.key_sparsity = ks;
+            self.policy.sparsity.key_method = Method::TokenMagnitude;
+        }
+        if raise_v {
+            self.policy.sparsity.value_sparsity = vs;
+            self.policy.sparsity.value_method = Method::TokenMagnitude;
+        }
+        Ok(before.saturating_sub(self.private_bytes()))
     }
 
     /// Fig 6b compression rate for this sequence (1.0 = dense).
@@ -551,6 +783,119 @@ mod tests {
             }
         }
         assert!(diffs > 100, "quant had no effect ({diffs})");
+    }
+
+    #[test]
+    fn restore_full_is_bit_identical_to_ingest() {
+        // A prefix-cache full hit reconstructs exactly the state the
+        // cold path builds: same compressed tiles, same f16 tails.
+        let (l, kv, hd, t) = (2, 2, 64, 448);
+        let policy = KvPolicy::mustafar(0.5, 0.5);
+        let k = rand_heads(l * kv, t, hd, 40);
+        let v = rand_heads(l * kv, t, hd, 41);
+
+        let mut cold = SequenceKV::new(policy, l, kv, hd).unwrap();
+        cold.ingest_prefill(&k, &v, t, None).unwrap();
+
+        let (prefix, tk, tv) = build_shared_prefill(&policy, l, kv, hd, &k, &v, t).unwrap();
+        assert_eq!(prefix.tokens, 384);
+        let prefix = std::sync::Arc::new(prefix);
+        let hit = SequenceKV::restore_full(policy, prefix, tk, tv, t).unwrap();
+
+        assert_eq!(hit.tokens, cold.tokens);
+        for layer in 0..l {
+            for h in 0..kv {
+                let (pk, pv) = hit.prefix().unwrap().head(layer, h);
+                assert_eq!(pk, &cold.head(layer, h).k_comp);
+                assert_eq!(pv, &cold.head(layer, h).v_comp);
+                assert_eq!(hit.head(layer, h).tail_k(), cold.head(layer, h).tail_k());
+                assert_eq!(hit.head(layer, h).tail_v(), cold.head(layer, h).tail_v());
+                // the hit sequence's private compressed region is empty
+                assert_eq!(hit.head(layer, h).k_comp.tokens, 0);
+            }
+        }
+        // logical footprint identical; private footprint excludes prefix
+        assert_eq!(hit.memory_bytes(), cold.memory_bytes());
+        assert!(hit.private_bytes() < cold.private_bytes());
+    }
+
+    #[test]
+    fn shared_prefix_is_byte_identical_across_extending_prompts() {
+        // Token-local pruning makes the compressed form of a shared
+        // prompt prefix independent of what follows it — the invariant
+        // the prefix cache relies on.
+        let (l, kv, hd) = (1, 1, 64);
+        let policy = KvPolicy::mustafar(0.6, 0.6);
+        let long_k = rand_heads(1, 512, hd, 50);
+        let long_v = rand_heads(1, 512, hd, 51);
+        let short_k = vec![long_k[0][..448 * hd].to_vec()];
+        let short_v = vec![long_v[0][..448 * hd].to_vec()];
+
+        let (pa, _, _) = build_shared_prefill(&policy, l, kv, hd, &short_k, &short_v, 448).unwrap();
+        let (pb, _, _) = build_shared_prefill(&policy, l, kv, hd, &long_k, &long_v, 512).unwrap();
+        assert_eq!(pa.tokens, 384);
+        assert_eq!(pb.tokens, 448);
+        let da = pa.head(0, 0).0.decompress();
+        let db = pb.head(0, 0).0.decompress();
+        assert_eq!(da[..], db[..384 * hd], "shared K prefix diverged");
+        let va = pa.head(0, 0).1.decompress();
+        let vb = pb.head(0, 0).1.decompress();
+        assert_eq!(va[..], vb[..384 * hd], "shared V prefix diverged");
+    }
+
+    #[test]
+    fn with_prefix_supports_decode_appends() {
+        let (l, kv, hd, t) = (1, 1, 32, 448);
+        let policy = KvPolicy::mustafar(0.5, 0.5);
+        let k = rand_heads(1, t, hd, 60);
+        let v = rand_heads(1, t, hd, 61);
+        let (prefix, _, _) = build_shared_prefill(&policy, l, kv, hd, &k, &v, t).unwrap();
+        let b = prefix.tokens;
+        let mut seq = SequenceKV::with_prefix(policy, std::sync::Arc::new(prefix)).unwrap();
+        assert_eq!(seq.tokens, b);
+        let mut rng = Pcg32::seeded(62);
+        for i in 0..TAIL_CAP + 5 {
+            let kr: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+            let vr: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+            seq.append(0, 0, &kr, &vr);
+            seq.commit_token().unwrap();
+            assert_eq!(seq.tokens, b + i + 1);
+        }
+        // one group exited the window into the *private* compressed region
+        assert_eq!(seq.head(0, 0).k_comp.tokens, TILE);
+        assert!(seq.private_bytes() > 0);
+        let (comp, _) = seq.memory_bytes();
+        assert!(comp > seq.private_bytes(), "logical bytes include the shared prefix");
+    }
+
+    #[test]
+    fn reprune_raises_sparsity_and_frees_bytes() {
+        let (l, kv, hd, t) = (2, 1, 64, 448);
+        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.5, 0.5), l, kv, hd).unwrap();
+        let k = rand_heads(l * kv, t, hd, 70);
+        let v = rand_heads(l * kv, t, hd, 71);
+        seq.ingest_prefill(&k, &v, t, None).unwrap();
+
+        let before = seq.private_bytes();
+        let old_dec = seq.head(0, 0).k_comp.decompress();
+        let freed = seq.reprune(0.75, 0.75).unwrap();
+        assert!(freed > 0);
+        assert_eq!(seq.private_bytes(), before - freed);
+
+        // survivors are exactly the magnitude top-k of the old contents
+        let kk = prune::keep_count(hd, 0.75);
+        let want = crate::prune::per_token_magnitude(&old_dec, 384, hd, kk);
+        assert_eq!(seq.head(0, 0).k_comp.decompress(), f16::f16_round_vec(&want));
+        let rate = seq.head(0, 0).k_comp.nnz() as f64 / (384.0 * hd as f64);
+        assert!((rate - 0.25).abs() < 0.03, "{rate}");
+
+        // policy follows the tier, so future groups compress at 0.75
+        assert_eq!(seq.policy.sparsity.key_sparsity, 0.75);
+
+        // re-pruning at a lower sparsity is a no-op
+        let freed2 = seq.reprune(0.6, 0.6).unwrap();
+        assert_eq!(freed2, 0);
+        assert_eq!(seq.policy.sparsity.key_sparsity, 0.75);
     }
 
     #[test]

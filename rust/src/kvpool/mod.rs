@@ -1,0 +1,337 @@
+//! Paged compressed-KV pool: one global byte budget for every byte of
+//! compressed-KV state the serving layer holds.
+//!
+//! The bitmap format (`sparse::bitmap`) makes a sequence's KV footprint
+//! small but *irregular* — per-tile value segments grow with whatever
+//! survives pruning — so the pool allocates fixed-size **pages** and
+//! keeps a per-owner page table plus an exact live-byte count:
+//!
+//!  * **pages** are the reservation granularity (budget enforcement,
+//!    fragmentation bound, and the unit a device allocator would map);
+//!  * **live bytes** are the exact `size_of_val`-style footprint of the
+//!    owner's buffers, so occupancy numbers are measurements rather than
+//!    an estimate model.
+//!
+//! Owners are sequences (their private compressed regions + dense
+//! tails) and prefix-cache entries (`prefix::PrefixCache`, which charges
+//! shared prefill pages exactly once no matter how many sequences
+//! reference them). The pressure ladder that runs when a reservation
+//! fails (re-prune → preempt → reject) lives in `pressure` and is
+//! orchestrated by `coordinator::engine`.
+
+pub mod prefix;
+pub mod pressure;
+
+pub use prefix::{PrefixCache, PrefixHit};
+pub use pressure::{next_reprune_tier, pick_preempt_victim, pick_reprune_victim, ReclaimCandidate};
+
+use std::collections::HashMap;
+
+/// Default page size: 16 KiB — small enough that a short sequence's
+/// rounding waste stays low, large enough that page-table churn is
+/// negligible next to the 64-token compression-group granularity.
+pub const DEFAULT_PAGE_BYTES: usize = 16 * 1024;
+
+/// Pool-wide configuration. The pressure-ladder knobs (re-prune tiers,
+/// prefix-cache enable) live in `config::EngineConfig` with their
+/// consumers — the pool itself only allocates and accounts.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Global byte budget across all owners; 0 = unbounded (accounting
+    /// still runs, reservations never fail).
+    pub budget_bytes: usize,
+    /// Fixed page size in bytes.
+    pub page_bytes: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig { budget_bytes: 0, page_bytes: DEFAULT_PAGE_BYTES }
+    }
+}
+
+/// Handle to one pool occupant (a sequence or a prefix-cache entry).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct OwnerId(u64);
+
+/// A failed reservation: the *total* extra bytes the grow needs
+/// (page-granular — `grow_pages * page_bytes`, not merely the missing
+/// headroom). The caller runs the pressure ladder until
+/// `fits_extra(bytes)` holds, which is exactly the condition for the
+/// retried reservation to succeed; reporting only the missing delta
+/// would let a reclaim "succeed" against space the retry still cannot
+/// use, spinning the retry loop forever.
+#[derive(Clone, Copy, Debug)]
+pub struct Shortfall {
+    pub bytes: usize,
+}
+
+/// Per-owner page table: the frames backing this owner's buffers plus
+/// the exact number of bytes actually live inside them.
+#[derive(Clone, Debug, Default)]
+pub struct PageTable {
+    pages: Vec<u32>,
+    live_bytes: usize,
+}
+
+impl PageTable {
+    pub fn page_count(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn live_bytes(&self) -> usize {
+        self.live_bytes
+    }
+
+    pub fn pages(&self) -> &[u32] {
+        &self.pages
+    }
+}
+
+/// Aggregate pool occupancy snapshot (served by the TCP stats endpoint
+/// and asserted exactly in tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    pub budget_bytes: usize,
+    pub page_bytes: usize,
+    /// Pages currently allocated to owners.
+    pub used_pages: usize,
+    /// `used_pages * page_bytes` — the reservation-granular footprint.
+    pub reserved_bytes: usize,
+    /// Exact bytes live inside those pages.
+    pub live_bytes: usize,
+    pub owners: usize,
+    pub peak_live_bytes: usize,
+    pub peak_used_pages: usize,
+}
+
+/// Slab/page allocator owning all compressed-KV storage reservations
+/// under one byte budget.
+#[derive(Debug)]
+pub struct KvPool {
+    cfg: PoolConfig,
+    /// Total frames under the budget; `usize::MAX` when unbounded.
+    total_pages: usize,
+    /// Recycled frame ids (LIFO, so freed pages are reused first).
+    free: Vec<u32>,
+    /// High-water mark for never-used frame ids.
+    next_page: u32,
+    used_pages: usize,
+    owners: HashMap<u64, PageTable>,
+    next_owner: u64,
+    live_bytes: usize,
+    peak_live_bytes: usize,
+    peak_used_pages: usize,
+}
+
+impl KvPool {
+    pub fn new(cfg: PoolConfig) -> KvPool {
+        let page = cfg.page_bytes.max(1);
+        let total_pages = if cfg.budget_bytes == 0 {
+            usize::MAX
+        } else {
+            // a budget smaller than one page still grants one page
+            cfg.budget_bytes.div_ceil(page).max(1)
+        };
+        KvPool {
+            cfg: PoolConfig { page_bytes: page, ..cfg },
+            total_pages,
+            free: Vec::new(),
+            next_page: 0,
+            used_pages: 0,
+            owners: HashMap::new(),
+            next_owner: 0,
+            live_bytes: 0,
+            peak_live_bytes: 0,
+            peak_used_pages: 0,
+        }
+    }
+
+    pub fn config(&self) -> &PoolConfig {
+        &self.cfg
+    }
+
+    /// Register a new (empty) owner.
+    pub fn register(&mut self) -> OwnerId {
+        let id = self.next_owner;
+        self.next_owner += 1;
+        self.owners.insert(id, PageTable::default());
+        OwnerId(id)
+    }
+
+    /// Set `owner`'s live footprint to exactly `bytes`, growing or
+    /// shrinking its page table to `ceil(bytes / page_bytes)` frames.
+    /// On insufficient free pages nothing changes and the missing
+    /// headroom comes back as a `Shortfall`. Shrinks never fail.
+    pub fn set_live_bytes(
+        &mut self,
+        owner: OwnerId,
+        bytes: usize,
+    ) -> std::result::Result<(), Shortfall> {
+        let page = self.cfg.page_bytes;
+        let need = bytes.div_ceil(page);
+        let table = self.owners.get_mut(&owner.0).expect("unknown pool owner");
+        let cur = table.pages.len();
+        if need > cur {
+            let grow = need - cur;
+            let avail = self.total_pages - self.used_pages;
+            if grow > avail {
+                return Err(Shortfall { bytes: grow * page });
+            }
+            for _ in 0..grow {
+                let frame = match self.free.pop() {
+                    Some(f) => f,
+                    None => {
+                        let f = self.next_page;
+                        self.next_page += 1;
+                        f
+                    }
+                };
+                table.pages.push(frame);
+            }
+            self.used_pages += grow;
+        } else if need < cur {
+            for _ in 0..cur - need {
+                self.free.push(table.pages.pop().expect("page table underflow"));
+            }
+            self.used_pages -= cur - need;
+        }
+        self.live_bytes = self.live_bytes - table.live_bytes + bytes;
+        table.live_bytes = bytes;
+        self.peak_live_bytes = self.peak_live_bytes.max(self.live_bytes);
+        self.peak_used_pages = self.peak_used_pages.max(self.used_pages);
+        Ok(())
+    }
+
+    /// Release an owner, returning all of its pages to the free list.
+    pub fn release(&mut self, owner: OwnerId) {
+        if let Some(table) = self.owners.remove(&owner.0) {
+            self.used_pages -= table.pages.len();
+            self.live_bytes -= table.live_bytes;
+            self.free.extend(table.pages);
+        }
+    }
+
+    /// Would a *new* reservation of `bytes` fit without reclaim?
+    pub fn fits_extra(&self, bytes: usize) -> bool {
+        bytes.div_ceil(self.cfg.page_bytes) <= self.total_pages - self.used_pages
+    }
+
+    /// Free headroom in bytes (page-granular; `usize::MAX` if unbounded).
+    pub fn free_bytes(&self) -> usize {
+        (self.total_pages - self.used_pages).saturating_mul(self.cfg.page_bytes)
+    }
+
+    pub fn owner_live_bytes(&self, owner: OwnerId) -> usize {
+        self.owners.get(&owner.0).map_or(0, |t| t.live_bytes)
+    }
+
+    pub fn owner_pages(&self, owner: OwnerId) -> usize {
+        self.owners.get(&owner.0).map_or(0, |t| t.pages.len())
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            budget_bytes: self.cfg.budget_bytes,
+            page_bytes: self.cfg.page_bytes,
+            used_pages: self.used_pages,
+            reserved_bytes: self.used_pages * self.cfg.page_bytes,
+            live_bytes: self.live_bytes,
+            owners: self.owners.len(),
+            peak_live_bytes: self.peak_live_bytes,
+            peak_used_pages: self.peak_used_pages,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(budget: usize, page: usize) -> KvPool {
+        KvPool::new(PoolConfig { budget_bytes: budget, page_bytes: page })
+    }
+
+    #[test]
+    fn pages_track_exact_live_bytes() {
+        let mut p = pool(1 << 20, 1024);
+        let a = p.register();
+        p.set_live_bytes(a, 2500).unwrap();
+        assert_eq!(p.owner_pages(a), 3); // ceil(2500/1024)
+        assert_eq!(p.owner_live_bytes(a), 2500);
+        let s = p.stats();
+        assert_eq!(s.live_bytes, 2500);
+        assert_eq!(s.reserved_bytes, 3 * 1024);
+
+        // shrink releases pages but keeps exact bytes
+        p.set_live_bytes(a, 900).unwrap();
+        assert_eq!(p.owner_pages(a), 1);
+        assert_eq!(p.stats().live_bytes, 900);
+        p.release(a);
+        assert_eq!(p.stats().used_pages, 0);
+        assert_eq!(p.stats().live_bytes, 0);
+    }
+
+    #[test]
+    fn budget_is_enforced_with_shortfall() {
+        let mut p = pool(4 * 1024, 1024); // 4 pages total
+        let a = p.register();
+        let b = p.register();
+        p.set_live_bytes(a, 3 * 1024).unwrap();
+        // b wants 3 pages with only 1 free: the shortfall reports the
+        // full grow (3 pages) — once fits_extra(err.bytes) holds, the
+        // retried reservation is guaranteed to succeed
+        let err = p.set_live_bytes(b, 3 * 1024).unwrap_err();
+        assert_eq!(err.bytes, 3 * 1024);
+        assert!(!p.fits_extra(err.bytes));
+        // failed reservation changed nothing
+        assert_eq!(p.owner_pages(b), 0);
+        assert_eq!(p.stats().used_pages, 3);
+        // after a shrinks, b fits
+        p.set_live_bytes(a, 1024).unwrap();
+        p.set_live_bytes(b, 3 * 1024).unwrap();
+        assert!(!p.fits_extra(1));
+        assert_eq!(p.free_bytes(), 0);
+    }
+
+    #[test]
+    fn freed_pages_are_reused_in_place() {
+        let mut p = pool(16 * 1024, 1024);
+        let a = p.register();
+        p.set_live_bytes(a, 4 * 1024).unwrap();
+        let frames_a: Vec<u32> = p.owners.get(&0).unwrap().pages().to_vec();
+        p.release(a);
+        // the next owner's pages come from the free list, not fresh ids
+        let b = p.register();
+        p.set_live_bytes(b, 4 * 1024).unwrap();
+        let frames_b: Vec<u32> = p.owners.get(&1).unwrap().pages().to_vec();
+        let mut sa = frames_a.clone();
+        let mut sb = frames_b.clone();
+        sa.sort_unstable();
+        sb.sort_unstable();
+        assert_eq!(sa, sb, "recycled frames expected");
+        assert_eq!(p.next_page, 4, "no fresh frames minted");
+    }
+
+    #[test]
+    fn unbounded_pool_never_fails_but_still_accounts() {
+        let mut p = pool(0, 4096);
+        let a = p.register();
+        p.set_live_bytes(a, 100 << 20).unwrap();
+        assert!(p.fits_extra(usize::MAX / 2));
+        assert_eq!(p.stats().live_bytes, 100 << 20);
+        assert_eq!(p.free_bytes(), usize::MAX);
+    }
+
+    #[test]
+    fn peaks_are_monotone() {
+        let mut p = pool(1 << 20, 1024);
+        let a = p.register();
+        p.set_live_bytes(a, 10_000).unwrap();
+        p.set_live_bytes(a, 100).unwrap();
+        let s = p.stats();
+        assert_eq!(s.peak_live_bytes, 10_000);
+        assert_eq!(s.peak_used_pages, 10);
+        assert_eq!(s.live_bytes, 100);
+    }
+}

@@ -1,0 +1,571 @@
+//! Prefill prefix cache: compressed prompt prefixes shared across
+//! requests as refcounted immutable pages.
+//!
+//! Keys are a **hash chain** over prompt tokens: `h_i = mix(h_{i-1},
+//! tok_i)`, so one left-to-right pass yields a key for every 64-token
+//! group boundary plus the full prompt. Two entry kinds:
+//!
+//!  * **full** — keyed by the whole prompt's chain hash; stores the
+//!    shared compressed prefix, this prompt's binary16 dense tails, and
+//!    the first greedy token. A hit reconstructs the exact post-prefill
+//!    state (`SequenceKV::restore_full`), so decode is token-identical
+//!    to the cold path and the entire prefill is skipped.
+//!  * **partial** — keyed by the chain hash at the prefix's group
+//!    boundary; stores only the shared compressed prefix. A hit reuses
+//!    the prefix pages and rebuilds just the prompt suffix through the
+//!    decode path (chunked prefill over the compressed prefix).
+//!
+//! Sharing is sound because token-local pruning (per-token magnitude)
+//! plus causal attention make the compressed form of a prompt prefix
+//! byte-identical under every prompt extending it
+//! (`KvPolicy::prefix_shareable`); candidate hits are verified against
+//! the stored tokens, so hash collisions degrade to misses. Entries
+//! charge their exact byte footprint to the `KvPool`; shared prefix
+//! pages are charged once regardless of how many sequences reference
+//! them. Eviction is LRU and refcount-safe: a prefix still referenced
+//! by a live sequence is never dropped (its pages would not actually be
+//! freed), which doubles as the copy-on-write guarantee — shared pages
+//! outlive the cache entry while anyone still reads them.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::kvcache::SharedPrefix;
+use crate::kvpool::{KvPool, OwnerId};
+use crate::sparse::TILE;
+
+/// Chain-hash seed (FNV-1a offset basis).
+pub const CHAIN_SEED: u64 = 0xcbf29ce484222325;
+
+/// One chain step: fold the next token into the running hash.
+#[inline]
+pub fn chain_push(h: u64, tok: u16) -> u64 {
+    let mut x = (h ^ tok as u64).wrapping_mul(0x100000001b3);
+    x ^= x >> 29;
+    x.wrapping_mul(0xbf58476d1ce4e5b9)
+}
+
+/// Chain hash of a whole token slice.
+pub fn chain_hash(tokens: &[u16]) -> u64 {
+    tokens.iter().fold(CHAIN_SEED, |h, &t| chain_push(h, t))
+}
+
+/// Successful lookup.
+pub enum PrefixHit {
+    /// Exact prompt match: full post-prefill state, token-identical to
+    /// the cold path.
+    Full {
+        prefix: Arc<SharedPrefix>,
+        tail_k: Vec<Vec<u16>>,
+        tail_v: Vec<Vec<u16>>,
+        first_token: u16,
+    },
+    /// Shared compressed prefix covering `prefix.tokens` prompt tokens;
+    /// the caller rebuilds the suffix through the decode path.
+    Partial { prefix: Arc<SharedPrefix> },
+}
+
+struct FullEntry {
+    prompt: Vec<u16>,
+    prefix: Arc<SharedPrefix>,
+    tail_k: Vec<Vec<u16>>,
+    tail_v: Vec<Vec<u16>>,
+    first_token: u16,
+    owner: OwnerId,
+    last_used: u64,
+}
+
+impl FullEntry {
+    /// Exact private footprint (the shared prefix is charged by its
+    /// partial entry): tails + prompt bookkeeping.
+    fn bytes(&self) -> usize {
+        let tails: usize = self
+            .tail_k
+            .iter()
+            .chain(self.tail_v.iter())
+            .map(|t| std::mem::size_of_val(t.as_slice()))
+            .sum();
+        tails + std::mem::size_of_val(self.prompt.as_slice())
+    }
+}
+
+struct PartialEntry {
+    /// The covered prompt tokens (hit verification).
+    tokens: Vec<u16>,
+    prefix: Arc<SharedPrefix>,
+    owner: OwnerId,
+    last_used: u64,
+}
+
+impl PartialEntry {
+    fn bytes(&self) -> usize {
+        self.prefix.bytes() + std::mem::size_of_val(self.tokens.as_slice())
+    }
+}
+
+/// The cache proper. All mutation goes through the engine thread, so no
+/// interior locking; the shared payloads are `Arc<SharedPrefix>`.
+pub struct PrefixCache {
+    enabled: bool,
+    full: HashMap<u64, FullEntry>,
+    partial: HashMap<u64, PartialEntry>,
+    clock: u64,
+    /// Entries dropped under pressure or to make room for newer ones.
+    pub evictions: usize,
+}
+
+impl PrefixCache {
+    pub fn new(enabled: bool) -> PrefixCache {
+        PrefixCache {
+            enabled,
+            full: HashMap::new(),
+            partial: HashMap::new(),
+            clock: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn len(&self) -> usize {
+        self.full.len() + self.partial.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Non-mutating probe: is there an exact full-prompt entry? Used by
+    /// admission gating to avoid reclaiming (evicting / re-pruning) for
+    /// a whole-prompt estimate when the hit will only charge tails.
+    pub fn has_full(&self, prompt: &[u16]) -> bool {
+        self.enabled
+            && self.full.get(&chain_hash(prompt)).is_some_and(|e| e.prompt == prompt)
+    }
+
+    /// Longest usable cached state for `prompt`: an exact full-prompt
+    /// entry, else the longest verified group-boundary prefix no longer
+    /// than `prompt.len() - 1` (at least one suffix token must remain to
+    /// produce the first logits) and within what prefill would compress
+    /// (`prompt.len() - local_window`, rounded down to a group). Partial
+    /// hits must cover at least half the prompt: rebuilding the suffix
+    /// runs token-by-token through the decode path, so a short shared
+    /// prefix on a long prompt would cost more than the batched cold
+    /// prefill it replaces.
+    pub fn lookup(&mut self, prompt: &[u16], local_window: usize) -> Option<PrefixHit> {
+        if !self.enabled || prompt.is_empty() {
+            return None;
+        }
+        // one pass: boundary hashes + full hash
+        let mut boundary = Vec::with_capacity(prompt.len() / TILE);
+        let mut h = CHAIN_SEED;
+        for (i, &t) in prompt.iter().enumerate() {
+            h = chain_push(h, t);
+            if (i + 1) % TILE == 0 {
+                boundary.push(h); // hash of prompt[..i+1]
+            }
+        }
+        let now = self.tick();
+
+        if let Some(e) = self.full.get_mut(&h) {
+            if e.prompt == prompt {
+                e.last_used = now;
+                if let Some(p) = self.partial.get_mut(&chain_hash(&prompt[..e.prefix.tokens])) {
+                    p.last_used = now; // keep the backing prefix warm too
+                }
+                return Some(PrefixHit::Full {
+                    prefix: Arc::clone(&e.prefix),
+                    tail_k: e.tail_k.clone(),
+                    tail_v: e.tail_v.clone(),
+                    first_token: e.first_token,
+                });
+            }
+        }
+
+        let b_max = prompt.len().saturating_sub(local_window).min(prompt.len() - 1) / TILE * TILE;
+        // minimum-coverage gate (see doc comment): suffix ≤ prefix
+        let b_min = TILE.max(prompt.len().div_ceil(2));
+        let mut b = b_max;
+        while b >= b_min {
+            let key = boundary[b / TILE - 1];
+            if let Some(e) = self.partial.get_mut(&key) {
+                if e.tokens.len() == b && e.tokens[..] == prompt[..b] {
+                    e.last_used = now;
+                    return Some(PrefixHit::Partial { prefix: Arc::clone(&e.prefix) });
+                }
+            }
+            b -= TILE;
+        }
+        None
+    }
+
+    /// Cache a cold prefill: the shared compressed prefix under its
+    /// group-boundary key, and the full post-prefill state under the
+    /// whole-prompt key. Charges exact bytes to the pool, evicting idle
+    /// LRU entries to make room.
+    ///
+    /// Returns the *canonical* pool-charged prefix `Arc` the caller's
+    /// sequence must reference — when an identical partial entry already
+    /// exists (e.g. a prior prompt shared the prefix but the coverage
+    /// gate blocked a partial hit), that existing allocation is returned
+    /// and the freshly built duplicate is dropped, so no unaccounted
+    /// prefix copy outlives this call. `None` means the pool could not
+    /// host the prefix: nothing was cached and the caller must keep its
+    /// state fully private (every byte needs exactly one owner).
+    pub fn insert(
+        &mut self,
+        prompt: &[u16],
+        prefix: Arc<SharedPrefix>,
+        tail_k: &[Vec<u16>],
+        tail_v: &[Vec<u16>],
+        first_token: u16,
+        pool: &mut KvPool,
+    ) -> Option<Arc<SharedPrefix>> {
+        if !self.enabled {
+            return None;
+        }
+        let now = self.tick();
+        let b = prefix.tokens;
+        debug_assert!(b <= prompt.len());
+        let mut prefix = prefix;
+
+        if b > 0 {
+            let key = chain_hash(&prompt[..b]);
+            let exists = self
+                .partial
+                .get(&key)
+                .is_some_and(|e| e.tokens[..] == prompt[..b]);
+            if exists {
+                let e = self.partial.get_mut(&key).unwrap();
+                e.last_used = now;
+                // dedup: reuse the charged allocation, drop the duplicate
+                prefix = Arc::clone(&e.prefix);
+            } else {
+                if let Some(old) = self.partial.get(&key) {
+                    // chain-hash collision (different tokens, same key).
+                    // Replaceable only if nothing references the old
+                    // prefix — releasing its charge while a full entry
+                    // or live sequence still pins the Arc would leave
+                    // resident pages accounted to no owner.
+                    if Arc::strong_count(&old.prefix) != 1 {
+                        return None;
+                    }
+                    let old = self.partial.remove(&key).unwrap();
+                    pool.release(old.owner);
+                    self.evictions += 1;
+                }
+                let entry = PartialEntry {
+                    tokens: prompt[..b].to_vec(),
+                    prefix: Arc::clone(&prefix),
+                    owner: pool.register(),
+                    last_used: now,
+                };
+                let bytes = entry.bytes();
+                if !self.make_room(pool, bytes) || pool.set_live_bytes(entry.owner, bytes).is_err()
+                {
+                    pool.release(entry.owner);
+                    return None;
+                }
+                self.partial.insert(key, entry);
+            }
+        }
+
+        let key = chain_hash(prompt);
+        if let Some(e) = self.full.get_mut(&key) {
+            if e.prompt == prompt {
+                e.last_used = now;
+                return Some(prefix);
+            }
+            let old = self.full.remove(&key).unwrap();
+            pool.release(old.owner);
+            self.evictions += 1;
+        }
+        let entry = FullEntry {
+            prompt: prompt.to_vec(),
+            prefix: Arc::clone(&prefix),
+            tail_k: tail_k.to_vec(),
+            tail_v: tail_v.to_vec(),
+            first_token,
+            owner: pool.register(),
+            last_used: now,
+        };
+        let bytes = entry.bytes();
+        if !self.make_room(pool, bytes) || pool.set_live_bytes(entry.owner, bytes).is_err() {
+            pool.release(entry.owner);
+            // the charged partial (if any) stays and is still the
+            // canonical prefix for the caller's sequence — only for
+            // prefix-less prompts (b == 0) is there nothing cached
+            return if b > 0 { Some(prefix) } else { None };
+        }
+        self.full.insert(key, entry);
+        Some(prefix)
+    }
+
+    fn make_room(&mut self, pool: &mut KvPool, bytes: usize) -> bool {
+        while !pool.fits_extra(bytes) {
+            if !self.evict_lru(pool) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Drop the least-recently-used *idle* entry and free its pages.
+    /// Full entries are always droppable (their tails are private);
+    /// a partial entry is droppable only when no live sequence and no
+    /// full entry still references its prefix — evicting it earlier
+    /// would free nothing (the `Arc` keeps the pages alive) and would
+    /// break the pool's exact accounting. Returns false when nothing
+    /// is reclaimable.
+    pub fn evict_lru(&mut self, pool: &mut KvPool) -> bool {
+        enum Kind {
+            Full(u64),
+            Partial(u64),
+        }
+        let mut best: Option<(u64, Kind)> = None;
+        for (&k, e) in &self.full {
+            if best.as_ref().is_none_or(|(t, _)| e.last_used < *t) {
+                best = Some((e.last_used, Kind::Full(k)));
+            }
+        }
+        for (&k, e) in &self.partial {
+            // droppable only when this entry holds the sole reference:
+            // a live sequence or a sibling full entry would keep the
+            // pages alive, so "freeing" them would only corrupt the
+            // accounting (the full entry unblocks it once evicted).
+            if Arc::strong_count(&e.prefix) != 1 {
+                continue;
+            }
+            if best.as_ref().is_none_or(|(t, _)| e.last_used < *t) {
+                best = Some((e.last_used, Kind::Partial(k)));
+            }
+        }
+        match best {
+            Some((_, Kind::Full(k))) => {
+                let e = self.full.remove(&k).unwrap();
+                pool.release(e.owner);
+                self.evictions += 1;
+                true
+            }
+            Some((_, Kind::Partial(k))) => {
+                let e = self.partial.remove(&k).unwrap();
+                pool.release(e.owner);
+                self.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Recompute the cache's exact byte footprint from its actual
+    /// buffers (the figure its pool charges must equal — asserted by
+    /// the accounting tests).
+    pub fn measured_bytes(&self) -> usize {
+        self.full.values().map(|e| e.bytes()).sum::<usize>()
+            + self.partial.values().map(|e| e.bytes()).sum::<usize>()
+    }
+
+    /// Sum of this cache's live-byte charges in the pool.
+    pub fn charged_bytes(&self, pool: &KvPool) -> usize {
+        self.full.values().map(|e| pool.owner_live_bytes(e.owner)).sum::<usize>()
+            + self.partial.values().map(|e| pool.owner_live_bytes(e.owner)).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{build_shared_prefill, KvPolicy};
+    use crate::kvpool::PoolConfig;
+    use crate::util::Pcg32;
+
+    fn heads(n: usize, t: usize, hd: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| (0..t * hd).map(|_| rng.normal_f32()).collect()).collect()
+    }
+
+    fn built(
+        prompt_len: usize,
+        seed: u64,
+    ) -> (Vec<u16>, Arc<SharedPrefix>, Vec<Vec<u16>>, Vec<Vec<u16>>) {
+        let policy = KvPolicy::mustafar(0.5, 0.5);
+        let (l, kv, hd) = (2, 1, 32);
+        let k = heads(l * kv, prompt_len, hd, seed);
+        let v = heads(l * kv, prompt_len, hd, seed + 1);
+        let (p, tk, tv) = build_shared_prefill(&policy, l, kv, hd, &k, &v, prompt_len).unwrap();
+        let prompt: Vec<u16> =
+            (0..prompt_len).map(|i| ((seed as usize + i * 7) % 400 + 16) as u16).collect();
+        (prompt, Arc::new(p), tk, tv)
+    }
+
+    fn pool() -> KvPool {
+        KvPool::new(PoolConfig { budget_bytes: 0, page_bytes: 1024 })
+    }
+
+    #[test]
+    fn chain_hash_is_prefix_consistent() {
+        let a = [1u16, 2, 3, 4];
+        let h2 = chain_hash(&a[..2]);
+        assert_eq!(chain_push(chain_push(h2, 3), 4), chain_hash(&a));
+        assert_ne!(chain_hash(&[1, 2]), chain_hash(&[2, 1]));
+    }
+
+    #[test]
+    fn full_hit_roundtrip_and_partial_probe() {
+        let mut c = PrefixCache::new(true);
+        let mut p = pool();
+        let (prompt, prefix, tk, tv) = built(160, 7);
+        assert_eq!(prefix.tokens, 128);
+        assert!(c.insert(&prompt, Arc::clone(&prefix), &tk, &tv, 42, &mut p).is_some());
+        assert_eq!(c.len(), 2); // full + partial
+
+        // exact prompt: full hit with the stored first token
+        match c.lookup(&prompt, 32) {
+            Some(PrefixHit::Full { first_token, prefix: fp, .. }) => {
+                assert_eq!(first_token, 42);
+                assert!(Arc::ptr_eq(&fp, &prefix));
+            }
+            _ => panic!("expected full hit"),
+        }
+
+        // an extending prompt: partial hit on the 128-token boundary
+        let mut longer = prompt.clone();
+        longer.extend((0..96).map(|i| (i % 100 + 20) as u16));
+        match c.lookup(&longer, 32) {
+            Some(PrefixHit::Partial { prefix: pp }) => {
+                assert_eq!(pp.tokens, 128);
+                assert!(Arc::ptr_eq(&pp, &prefix));
+            }
+            _ => panic!("expected partial hit"),
+        }
+
+        // a diverging prompt: miss (verification beats hash luck)
+        let mut diverged = prompt.clone();
+        diverged[10] ^= 1;
+        assert!(c.lookup(&diverged, 32).is_none());
+    }
+
+    #[test]
+    fn pool_charge_matches_measured_bytes() {
+        let mut c = PrefixCache::new(true);
+        let mut p = pool();
+        for seed in 0..4 {
+            let (prompt, prefix, tk, tv) = built(96 + 64 * seed as usize, 100 + seed);
+            c.insert(&prompt, prefix, &tk, &tv, 1, &mut p);
+        }
+        assert_eq!(p.stats().live_bytes, c.measured_bytes());
+        assert_eq!(c.charged_bytes(&p), c.measured_bytes());
+        // evict everything; the pool must drain to zero
+        while c.evict_lru(&mut p) {}
+        assert_eq!(c.len(), 0);
+        assert_eq!(p.stats().live_bytes, 0);
+        assert_eq!(p.stats().used_pages, 0);
+    }
+
+    #[test]
+    fn eviction_is_lru_and_refcount_safe() {
+        let mut c = PrefixCache::new(true);
+        let mut p = pool();
+        let (prompt_a, prefix_a, tka, tva) = built(160, 11);
+        let (prompt_b, prefix_b, tkb, tvb) = built(160, 23);
+        let b_key = chain_hash(&prompt_b[..prefix_b.tokens]);
+        c.insert(&prompt_a, prefix_a, &tka, &tva, 1, &mut p);
+        c.insert(&prompt_b, prefix_b, &tkb, &tvb, 2, &mut p);
+
+        // hold a "live sequence" reference to B's prefix, as the engine
+        // would after a hit
+        let held = match c.lookup(&prompt_b, 32) {
+            Some(PrefixHit::Full { prefix, .. }) => prefix,
+            _ => panic!("expected full hit"),
+        };
+        // touch A so B's entries are the LRU
+        c.lookup(&prompt_a, 32);
+
+        let before = c.len();
+        assert!(c.evict_lru(&mut p)); // B full (tails are private) goes
+        assert_eq!(c.len(), before - 1);
+        // B partial is pinned by `held`: the next LRU eviction must pick
+        // one of A's entries instead of freeing pages someone still
+        // reads.
+        assert!(c.evict_lru(&mut p));
+        assert!(c.partial.contains_key(&b_key), "pinned prefix was evicted");
+        drop(held);
+        // now everything drains and the pool empties exactly
+        while c.evict_lru(&mut p) {}
+        assert_eq!(c.len(), 0);
+        assert_eq!(p.stats().live_bytes, 0);
+    }
+
+
+    #[test]
+    fn insert_dedups_prefix_against_existing_partial_entry() {
+        // Two 144-token prompts share their first 64 tokens. The
+        // coverage gate (b_min = 72 > 64) blocks a partial hit for the
+        // second, so its cold prefill builds a duplicate prefix; insert
+        // must hand back the *charged* allocation and drop the
+        // duplicate, or real memory silently exceeds the accounting.
+        let mut c = PrefixCache::new(true);
+        let mut p = pool();
+        let policy = KvPolicy::mustafar(0.5, 0.5);
+        let (l, kv, hd, t) = (1, 1, 32, 144);
+        let shared: Vec<u16> = (0..64).map(|i| (i * 5 % 300 + 16) as u16).collect();
+        let mk_prompt = |salt: u16| {
+            let mut v = shared.clone();
+            v.extend((0..t as u16 - 64).map(|i| (i * 7 + salt) % 300 + 16));
+            v
+        };
+        let build = |seed: u64| {
+            let ka = heads(l * kv, t, hd, seed);
+            let va = heads(l * kv, t, hd, seed + 1);
+            build_shared_prefill(&policy, l, kv, hd, &ka, &va, t).unwrap()
+        };
+
+        let prompt_a = mk_prompt(1);
+        let (pa, tka, tva) = build(500);
+        assert_eq!(pa.tokens, 64);
+        let arc_a = Arc::new(pa);
+        let got_a = c.insert(&prompt_a, Arc::clone(&arc_a), &tka, &tva, 1, &mut p).unwrap();
+        assert!(Arc::ptr_eq(&got_a, &arc_a));
+
+        let prompt_b = mk_prompt(2);
+        assert!(c.lookup(&prompt_b, 32).is_none(), "coverage gate should block this hit");
+        let (pb, tkb, tvb) = build(600);
+        let arc_b = Arc::new(pb);
+        let got_b = c.insert(&prompt_b, Arc::clone(&arc_b), &tkb, &tvb, 2, &mut p).unwrap();
+        assert!(Arc::ptr_eq(&got_b, &arc_a), "canonical charged prefix expected");
+        assert!(!Arc::ptr_eq(&got_b, &arc_b), "duplicate prefix must be dropped");
+
+        // exactly one partial entry charged; accounting stays exact
+        assert_eq!(c.len(), 3); // 2 full + 1 shared partial
+        assert_eq!(p.stats().live_bytes, c.measured_bytes());
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let mut c = PrefixCache::new(false);
+        let mut p = pool();
+        let (prompt, prefix, tk, tv) = built(160, 5);
+        assert!(c.insert(&prompt, prefix, &tk, &tv, 0, &mut p).is_none());
+        assert!(c.lookup(&prompt, 32).is_none());
+        assert_eq!(p.stats().live_bytes, 0);
+    }
+
+    #[test]
+    fn short_prompt_full_entry_without_prefix() {
+        // prompts too short to compress still cache their full state
+        let mut c = PrefixCache::new(true);
+        let mut p = pool();
+        let (prompt, prefix, tk, tv) = built(48, 9);
+        assert_eq!(prefix.tokens, 0);
+        assert!(c.insert(&prompt, prefix, &tk, &tv, 3, &mut p).is_some());
+        assert_eq!(c.len(), 1); // no partial entry
+        assert!(matches!(c.lookup(&prompt, 32), Some(PrefixHit::Full { .. })));
+    }
+}

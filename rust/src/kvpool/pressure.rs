@@ -1,0 +1,115 @@
+//! Pressure-controller policy: who gives memory back, and how, when a
+//! pool reservation cannot be satisfied.
+//!
+//! The ladder (orchestrated by `coordinator::engine::Engine::reclaim`):
+//!
+//!  1. **evict** idle prefix-cache entries (LRU; only entries no live
+//!     sequence references — `prefix::PrefixCache::evict_lru`);
+//!  2. **re-prune** a resident sequence's compressed regions to the next
+//!     sparsity tier (decompress → magnitude-prune → recompress, pages
+//!     shrink in place) — the response unstructured sparsity uniquely
+//!     enables: the cache *degrades* instead of dying;
+//!  3. **preempt** the youngest resident sequence back onto the
+//!     admission queue (recompute-style preemption, FIFO re-entry);
+//!  4. only then reject.
+//!
+//! This module holds the pure victim-selection policy so it can be
+//! tested without an engine.
+
+/// One resident sequence as the pressure controller sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct ReclaimCandidate {
+    /// Monotone admission stamp: lower = admitted earlier ("colder" —
+    /// an older sequence has the largest compressed region and the most
+    /// pruning headroom, so it is both the cheapest and the highest-yield
+    /// re-prune target).
+    pub admitted_seq: u64,
+    /// Next re-prune tier index (== tiers.len() when exhausted).
+    pub tier: usize,
+    /// Private compressed-region bytes (excludes shared prefix pages).
+    pub compressed_bytes: usize,
+    /// False for sequences whose state cannot be re-pruned (dense
+    /// policies, PJRT-backed device caches).
+    pub reprunable: bool,
+}
+
+/// Next sparsity tier for a sequence currently at `tier`, skipping tiers
+/// that would not actually raise sparsity above `current` (a K0.8 cache
+/// gains nothing from a 0.75 tier). Returns `(new_tier_index, sparsity)`.
+pub fn next_reprune_tier(tiers: &[f64], tier: usize, current: f64) -> Option<(usize, f64)> {
+    for (i, &s) in tiers.iter().enumerate().skip(tier) {
+        if s > current {
+            return Some((i + 1, s));
+        }
+    }
+    None
+}
+
+/// Pick the sequence to re-prune: the coldest (earliest-admitted)
+/// candidate that still has tiers left and a non-empty compressed
+/// region. Returns an index into `cands`.
+pub fn pick_reprune_victim(cands: &[ReclaimCandidate], n_tiers: usize) -> Option<usize> {
+    cands
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.reprunable && c.tier < n_tiers && c.compressed_bytes > 0)
+        .min_by_key(|(_, c)| c.admitted_seq)
+        .map(|(i, _)| i)
+}
+
+/// Pick the sequence to preempt: the youngest (latest-admitted)
+/// candidate, excluding `protect` (the sequence whose reservation is
+/// being satisfied must not be its own victim). Returns an index into
+/// `cands`.
+pub fn pick_preempt_victim(cands: &[ReclaimCandidate], protect: Option<u64>) -> Option<usize> {
+    cands
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| Some(c.admitted_seq) != protect)
+        .max_by_key(|(_, c)| c.admitted_seq)
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(stamp: u64, tier: usize, bytes: usize) -> ReclaimCandidate {
+        ReclaimCandidate { admitted_seq: stamp, tier, compressed_bytes: bytes, reprunable: true }
+    }
+
+    #[test]
+    fn tier_ladder_skips_non_raising_steps() {
+        let tiers = [0.75, 0.9];
+        assert_eq!(next_reprune_tier(&tiers, 0, 0.5), Some((1, 0.75)));
+        // already sparser than tier 0: jump straight to 0.9
+        assert_eq!(next_reprune_tier(&tiers, 0, 0.8), Some((2, 0.9)));
+        assert_eq!(next_reprune_tier(&tiers, 2, 0.5), None);
+        assert_eq!(next_reprune_tier(&tiers, 0, 0.95), None);
+    }
+
+    #[test]
+    fn reprune_picks_coldest_with_headroom() {
+        let cands = [cand(5, 0, 1000), cand(2, 0, 500), cand(1, 2, 900), cand(3, 1, 0)];
+        // stamp 1 is exhausted (tier 2 of 2), stamp 3 has nothing
+        // compressed; stamp 2 is the coldest remaining.
+        assert_eq!(pick_reprune_victim(&cands, 2), Some(1));
+        // nothing eligible
+        assert_eq!(pick_reprune_victim(&cands[2..], 2), None);
+    }
+
+    #[test]
+    fn non_reprunable_states_are_skipped() {
+        let mut c = cand(1, 0, 1000);
+        c.reprunable = false;
+        assert_eq!(pick_reprune_victim(&[c], 2), None);
+    }
+
+    #[test]
+    fn preempt_picks_youngest_and_respects_protect() {
+        let cands = [cand(5, 0, 0), cand(9, 0, 0), cand(2, 0, 0)];
+        assert_eq!(pick_preempt_victim(&cands, None), Some(1));
+        assert_eq!(pick_preempt_victim(&cands, Some(9)), Some(0));
+        assert_eq!(pick_preempt_victim(&cands[..1], Some(5)), None);
+    }
+}

@@ -120,7 +120,8 @@ fn cmd_exp(args: &Args) -> mustafar::Result<()> {
         .first()
         .cloned()
         .ok_or_else(|| mustafar::Error::Invalid("exp: missing experiment id".into()))?;
-    let mut ctx = ExpCtx::new(artifacts_dir(args), PathBuf::from(args.get("report-dir", "reports")));
+    let report_dir = PathBuf::from(args.get("report-dir", "reports"));
+    let mut ctx = ExpCtx::new(artifacts_dir(args), report_dir);
     ctx.n_samples = args.get_usize("samples", 20);
     ctx.ctx_len = args.get_usize("ctx", 448);
     // Sweeps parallelize across samples; keep per-matmul threading off to

@@ -139,10 +139,12 @@ impl NativeModel {
             for i in 0..t {
                 let (cos, sin) = &ropes[i];
                 for h in 0..nh {
-                    attention::apply_rope(&mut q[i * cfg.q_dim() + h * hd..i * cfg.q_dim() + (h + 1) * hd], cos, sin);
+                    let span = i * cfg.q_dim() + h * hd..i * cfg.q_dim() + (h + 1) * hd;
+                    attention::apply_rope(&mut q[span], cos, sin);
                 }
                 for h in 0..nkv {
-                    attention::apply_rope(&mut k[i * cfg.kv_dim() + h * hd..i * cfg.kv_dim() + (h + 1) * hd], cos, sin);
+                    let span = i * cfg.kv_dim() + h * hd..i * cfg.kv_dim() + (h + 1) * hd;
+                    attention::apply_rope(&mut k[span], cos, sin);
                 }
             }
 
@@ -151,10 +153,9 @@ impl NativeModel {
             let mut v_heads: Vec<Vec<f32>> = vec![vec![0.0; t * hd]; nkv];
             for i in 0..t {
                 for h in 0..nkv {
-                    k_heads[h][i * hd..(i + 1) * hd]
-                        .copy_from_slice(&k[i * cfg.kv_dim() + h * hd..i * cfg.kv_dim() + (h + 1) * hd]);
-                    v_heads[h][i * hd..(i + 1) * hd]
-                        .copy_from_slice(&v[i * cfg.kv_dim() + h * hd..i * cfg.kv_dim() + (h + 1) * hd]);
+                    let span = i * cfg.kv_dim() + h * hd..i * cfg.kv_dim() + (h + 1) * hd;
+                    k_heads[h][i * hd..(i + 1) * hd].copy_from_slice(&k[span.clone()]);
+                    v_heads[h][i * hd..(i + 1) * hd].copy_from_slice(&v[span]);
                 }
             }
 
@@ -170,11 +171,13 @@ impl NativeModel {
             for h in 0..nh {
                 let kvh = h / group;
                 for i in 0..t {
-                    q_head[i * hd..(i + 1) * hd]
-                        .copy_from_slice(&q[i * cfg.q_dim() + h * hd..i * cfg.q_dim() + (h + 1) * hd]);
+                    let span = i * cfg.q_dim() + h * hd..i * cfg.q_dim() + (h + 1) * hd;
+                    q_head[i * hd..(i + 1) * hd].copy_from_slice(&q[span]);
                 }
                 let probs_opt = if capture_aux { Some(&mut probs_buf) } else { None };
-                attention::causal_prefill(&q_head, &k_heads[kvh], &v_heads[kvh], t, hd, scale, &mut o_head, probs_opt);
+                attention::causal_prefill(
+                    &q_head, &k_heads[kvh], &v_heads[kvh], t, hd, scale, &mut o_head, probs_opt,
+                );
                 for i in 0..t {
                     o[i * cfg.q_dim() + h * hd..i * cfg.q_dim() + (h + 1) * hd]
                         .copy_from_slice(&o_head[i * hd..(i + 1) * hd]);
@@ -234,7 +237,8 @@ impl NativeModel {
 
         // final norm + lm head on the last position only
         let mut last = vec![0.0f32; d];
-        rmsnorm(&x[(t - 1) * d..], 1, d, self.w.get("final_norm").data(), cfg.norm_eps as f32, &mut last);
+        let fnorm = self.w.get("final_norm");
+        rmsnorm(&x[(t - 1) * d..], 1, d, fnorm.data(), cfg.norm_eps as f32, &mut last);
         let mut logits = vec![0.0f32; cfg.vocab];
         matmul(&last, 1, d, self.w.get("lm_head").data(), cfg.vocab, &mut logits);
 
@@ -285,11 +289,12 @@ impl NativeModel {
             matmul(&scratch.hn, 1, d, self.w.layer(l, "wq").data(), cfg.q_dim(), &mut scratch.q);
             matmul(&scratch.hn, 1, d, self.w.layer(l, "wk").data(), cfg.kv_dim(), &mut scratch.k);
             matmul(&scratch.hn, 1, d, self.w.layer(l, "wv").data(), cfg.kv_dim(), &mut scratch.v);
+            let (cos, sin) = (&scratch.cos, &scratch.sin);
             for h in 0..nh {
-                attention::apply_rope(&mut scratch.q[h * hd..(h + 1) * hd], &scratch.cos, &scratch.sin);
+                attention::apply_rope(&mut scratch.q[h * hd..(h + 1) * hd], cos, sin);
             }
             for h in 0..nkv {
-                attention::apply_rope(&mut scratch.k[h * hd..(h + 1) * hd], &scratch.cos, &scratch.sin);
+                attention::apply_rope(&mut scratch.k[h * hd..(h + 1) * hd], cos, sin);
             }
             for h in 0..nkv {
                 kv.append(l, h, &scratch.k[h * hd..(h + 1) * hd], &scratch.v[h * hd..(h + 1) * hd]);
@@ -299,23 +304,31 @@ impl NativeModel {
             // The `group` query lanes sharing KV head `kvh` are contiguous
             // in `q` (heads kvh*group .. (kvh+1)*group), so each group is
             // one flat [group x hd] slab — one multi-query call per KV
-            // head walks its compressed stream exactly once. Groups wider
-            // than the kernels' MAX_GROUP lane cap (extreme MQA) are
-            // chunked; each chunk still amortizes the stream walk over up
-            // to MAX_GROUP lanes.
+            // head walks its compressed stream exactly once. The
+            // compressed region may span two segments in token order: a
+            // shared prefill prefix (prefix-cache hit, refcounted pages)
+            // followed by the sequence's own groups. Groups wider than
+            // the kernels' MAX_GROUP lane cap (extreme MQA) are chunked;
+            // each chunk still amortizes the stream walk over up to
+            // MAX_GROUP lanes.
             for kvh in 0..nkv {
                 let head = kv.head(l, kvh);
                 let tail_len = head.tail_len(hd);
+                let own = (&head.k_comp, &head.v_comp);
+                let (segs_buf, n_segs) = match kv.prefix() {
+                    Some(p) => ([p.head(l, kvh), own], 2),
+                    None => ([own, own], 1),
+                };
+                let segs = &segs_buf[..n_segs];
                 let mut lane0 = 0;
                 while lane0 < group {
                     let lanes = (group - lane0).min(crate::sparse::MAX_GROUP);
                     let start = (kvh * group + lane0) * hd;
                     let span = start..start + lanes * hd;
-                    attention::decode_sparse_group(
+                    attention::decode_sparse_group_segments(
                         &scratch.q[span.clone()],
                         lanes,
-                        &head.k_comp,
-                        &head.v_comp,
+                        segs,
                         head.tail_k(),
                         head.tail_v(),
                         tail_len,
@@ -328,7 +341,8 @@ impl NativeModel {
                 }
             }
 
-            matmul(&scratch.o, 1, cfg.q_dim(), self.w.layer(l, "wo").data(), d, &mut scratch.attn_out);
+            let wo = self.w.layer(l, "wo");
+            matmul(&scratch.o, 1, cfg.q_dim(), wo.data(), d, &mut scratch.attn_out);
             for (xi, ai) in scratch.x.iter_mut().zip(&scratch.attn_out) {
                 *xi += ai;
             }
@@ -344,7 +358,8 @@ impl NativeModel {
             for (gi, ui) in scratch.gate.iter_mut().zip(&scratch.up) {
                 *gi = silu(*gi) * ui;
             }
-            matmul(&scratch.gate, 1, cfg.ff, self.w.layer(l, "w_down").data(), d, &mut scratch.down);
+            let wd = self.w.layer(l, "w_down");
+            matmul(&scratch.gate, 1, cfg.ff, wd.data(), d, &mut scratch.down);
             for (xi, di) in scratch.x.iter_mut().zip(&scratch.down) {
                 *xi += di;
             }
@@ -490,6 +505,43 @@ mod tests {
             tok_a = argmax(&la);
             tok_b = argmax(&fresh.logits);
         }
+    }
+
+    #[test]
+    fn decode_over_shared_prefix_is_bit_identical_to_private_cache() {
+        // A prefix-cache full hit (shared compressed prefix + restored
+        // tails) must decode bit-identically to the cold-path private
+        // cache — the engine's token-identity guarantee rests on this.
+        use crate::kvcache::build_shared_prefill;
+        use std::sync::Arc;
+
+        let m = tiny_model();
+        let t = 160;
+        let tokens: Vec<u16> = (0..t).map(|i| (i * 17 % 400 + 16) as u16).collect();
+        let r = m.prefill(&tokens, false);
+        let policy = KvPolicy::mustafar(0.6, 0.6);
+
+        let mut cold = SequenceKV::new(policy, 2, 1, 32).unwrap();
+        cold.ingest_prefill(&r.k, &r.v, t, None).unwrap();
+
+        let (prefix, tk, tv) = build_shared_prefill(&policy, 2, 1, 32, &r.k, &r.v, t).unwrap();
+        assert!(prefix.tokens > 0, "test needs a non-empty shared prefix");
+        let mut hot = SequenceKV::restore_full(policy, Arc::new(prefix), tk, tv, t).unwrap();
+
+        let mut sc = DecodeScratch::new();
+        let mut sh = DecodeScratch::new();
+        let (mut tok_c, mut tok_h) = (99u16, 99u16);
+        // 80 decode steps push a 64-token group through compression
+        // (tail 32 + 80 > TAIL_CAP), so the hot path also exercises the
+        // [shared prefix | private groups] two-segment walk.
+        for i in 0..80 {
+            m.decode_into(tok_c, t + i, &mut cold, &mut sc).unwrap();
+            m.decode_into(tok_h, t + i, &mut hot, &mut sh).unwrap();
+            assert_eq!(sc.logits, sh.logits, "token {i}");
+            tok_c = argmax(&sc.logits);
+            tok_h = argmax(&sh.logits);
+        }
+        assert!(hot.head(0, 0).k_comp.tokens > 0, "private groups never compressed");
     }
 
     #[test]

@@ -28,7 +28,8 @@ impl Weights {
         let meta_path = dir.join(format!("weights_{name}.json"));
         let bin_path = dir.join(format!("weights_{name}.bin"));
         let meta = Json::parse(&std::fs::read_to_string(&meta_path).map_err(|e| {
-            Error::Runtime(format!("cannot read {} ({e}) — run `make artifacts`", meta_path.display()))
+            let p = meta_path.display();
+            Error::Runtime(format!("cannot read {p} ({e}) — run `make artifacts`"))
         })?)?;
         let cfg = ModelConfig::from_json(&meta)?;
         cfg.validate()?;

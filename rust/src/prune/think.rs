@@ -30,7 +30,12 @@ pub fn think_key(
 }
 
 /// Structured Value-cache pruning: drop whole channels by L2 magnitude.
-pub fn think_value(v: &[f32], tokens: usize, channels: usize, sparsity: f64) -> (Vec<f32>, Vec<bool>) {
+pub fn think_value(
+    v: &[f32],
+    tokens: usize,
+    channels: usize,
+    sparsity: f64,
+) -> (Vec<f32>, Vec<bool>) {
     assert_eq!(v.len(), tokens * channels);
     let mut score = vec![0.0f64; channels];
     for c in 0..channels {

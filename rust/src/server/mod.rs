@@ -3,11 +3,17 @@
 //!
 //!   -> {"id": 1, "prompt": [1, 17, 300, ...], "max_new_tokens": 32}
 //!   <- {"id": 1, "tokens": [...], "finish": "length", ...}
+//!   -> {"stats": true}
+//!   <- {"pool_live_bytes": ..., "prefix_hit_rate": ..., ...}
 //!
 //! The engine runs on a dedicated thread; connections feed the admission
-//! queue through an mpsc channel and a dispatcher routes completions
-//! back. tokio is not available offline — std::net + threads suffice for
-//! the workloads this serves.
+//! queue through an mpsc channel and completions route back to the
+//! originating connection by request id. Connections are *pipelined*: a
+//! client may write many requests before reading; a per-connection
+//! writer thread streams completions back as they finish. An idle
+//! engine thread parks on a blocking `recv` (no try_recv + sleep spin).
+//! tokio is not available offline — std::net + threads suffice for the
+//! workloads this serves.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -15,13 +21,25 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::{Completion, Engine, Request};
+use crate::coordinator::{Completion, Engine, FinishReason, Request};
 use crate::error::{Error, Result};
 use crate::fmt::Json;
 
+/// Messages from connection handlers to the engine thread.
+enum Inbound {
+    Req(Request),
+    /// Stats query; the rendered JSON line comes back on the sender.
+    Stats(Sender<String>),
+}
+
 /// Parse one request line.
 pub fn parse_request(line: &str) -> Result<Request> {
-    let v = Json::parse(line)?;
+    request_from_json(&Json::parse(line)?)
+}
+
+/// Build a request from an already-parsed line (the per-connection
+/// reader parses each line exactly once and branches from the value).
+pub fn request_from_json(v: &Json) -> Result<Request> {
     let id = v.get("id")?.as_usize()? as u64;
     let prompt: Vec<u16> = v
         .get("prompt")?
@@ -37,6 +55,16 @@ pub fn parse_request(line: &str) -> Result<Request> {
     Ok(req)
 }
 
+/// True when the parsed line is a stats query rather than a request.
+pub fn is_stats_json(v: &Json) -> bool {
+    v.opt("stats").and_then(|s| s.as_bool().ok()).unwrap_or(false)
+}
+
+/// True when the line is a stats query rather than a request.
+pub fn is_stats_request(line: &str) -> bool {
+    Json::parse(line).ok().as_ref().map(is_stats_json).unwrap_or(false)
+}
+
 /// Serialize a completion line.
 pub fn render_completion(c: &Completion) -> String {
     Json::obj(vec![
@@ -48,26 +76,58 @@ pub fn render_completion(c: &Completion) -> String {
         (
             "finish",
             Json::str(match c.finish {
-                crate::coordinator::FinishReason::Length => "length",
-                crate::coordinator::FinishReason::Stop => "stop",
-                crate::coordinator::FinishReason::Rejected => "rejected",
+                FinishReason::Length => "length",
+                FinishReason::Stop => "stop",
+                FinishReason::Rejected => "rejected",
             }),
         ),
+        ("queue_ms", Json::num(c.queue_ms)),
         ("prefill_ms", Json::num(c.prefill_ms)),
         ("decode_ms", Json::num(c.decode_ms)),
         ("kv_bytes", Json::num(c.kv_bytes as f64)),
+        ("kv_dense_bytes", Json::num(c.kv_dense_bytes as f64)),
     ])
     .to_string()
 }
 
-/// Serve `engine` on `addr` until the process exits. Each accepted
-/// connection may pipeline many requests; responses return on the same
-/// connection in completion order.
+/// Serialize the engine's pool + prefix-cache + serving counters.
+pub fn render_stats(engine: &Engine) -> String {
+    let p = engine.pool_stats();
+    let m = &engine.metrics;
+    Json::obj(vec![
+        ("pool_budget_bytes", Json::num(p.budget_bytes as f64)),
+        ("pool_page_bytes", Json::num(p.page_bytes as f64)),
+        ("pool_used_pages", Json::num(p.used_pages as f64)),
+        ("pool_reserved_bytes", Json::num(p.reserved_bytes as f64)),
+        ("pool_live_bytes", Json::num(p.live_bytes as f64)),
+        ("pool_peak_live_bytes", Json::num(p.peak_live_bytes as f64)),
+        ("prefix_entries", Json::num(engine.prefix_cache().len() as f64)),
+        ("prefix_full_hits", Json::num(m.prefix_full_hits as f64)),
+        ("prefix_partial_hits", Json::num(m.prefix_partial_hits as f64)),
+        ("prefix_misses", Json::num(m.prefix_misses as f64)),
+        ("prefix_hit_rate", Json::num(m.prefix_hit_rate())),
+        ("prefix_evictions", Json::num(m.prefix_evictions as f64)),
+        ("prefix_tokens_reused", Json::num(m.prefix_tokens_reused as f64)),
+        ("repruned", Json::num(m.repruned as f64)),
+        ("preempted", Json::num(m.preempted as f64)),
+        ("completions", Json::num(m.completions as f64)),
+        ("rejected", Json::num(m.rejected as f64)),
+        ("generated_tokens", Json::num(m.generated_tokens as f64)),
+    ])
+    .to_string()
+}
+
+/// Serve `engine` on `addr` until the process exits.
 pub fn serve(engine: Engine, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr).map_err(Error::Io)?;
     crate::info!("mustafar server listening on {addr}");
+    serve_listener(engine, listener)
+}
 
-    let (req_tx, req_rx): (Sender<Request>, Receiver<Request>) = channel();
+/// Serve on an already-bound listener (tests bind 127.0.0.1:0 and read
+/// the ephemeral address back before calling this).
+pub fn serve_listener(engine: Engine, listener: TcpListener) -> Result<()> {
+    let (req_tx, req_rx): (Sender<Inbound>, Receiver<Inbound>) = channel();
     type Waiters = Arc<Mutex<HashMap<u64, Sender<Completion>>>>;
     let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
 
@@ -76,32 +136,63 @@ pub fn serve(engine: Engine, addr: &str) -> Result<()> {
         let waiters = Arc::clone(&waiters);
         std::thread::spawn(move || {
             let mut engine = engine;
-            loop {
-                // drain incoming requests without blocking the decode loop
-                loop {
-                    match req_rx.try_recv() {
-                        Ok(r) => {
-                            engine.submit(r);
-                        }
-                        Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                        Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
-                    }
-                }
-                if engine.idle() {
-                    // park briefly; a condvar would be nicer but this path
-                    // is idle-only
-                    std::thread::sleep(std::time::Duration::from_millis(2));
-                    continue;
-                }
-                if let Err(e) = engine.step() {
-                    eprintln!("[server] engine error: {e}");
-                }
+            let route = |engine: &mut Engine, waiters: &Waiters| {
                 for c in engine.take_completions() {
                     let tx = waiters.lock().unwrap().remove(&c.id);
                     if let Some(tx) = tx {
                         let _ = tx.send(c);
                     }
                 }
+            };
+            let handle = |engine: &mut Engine, waiters: &Waiters, m: Inbound| match m {
+                Inbound::Req(r) => {
+                    let (id, queued) = (r.id, r.submitted);
+                    if !engine.submit(r) {
+                        // tell the waiting client instead of hanging it
+                        let tx = waiters.lock().unwrap().remove(&id);
+                        if let Some(tx) = tx {
+                            let _ = tx.send(Completion {
+                                id,
+                                tokens: Vec::new(),
+                                finish: FinishReason::Rejected,
+                                queue_ms: queued.elapsed().as_secs_f64() * 1e3,
+                                prefill_ms: 0.0,
+                                decode_ms: 0.0,
+                                kv_bytes: 0,
+                                kv_dense_bytes: 0,
+                            });
+                        }
+                    }
+                }
+                Inbound::Stats(tx) => {
+                    let _ = tx.send(render_stats(engine));
+                }
+            };
+            loop {
+                if engine.idle() {
+                    // Blocking receive: an idle server parks here until
+                    // work (or a stats probe) arrives instead of
+                    // spinning on try_recv + sleep.
+                    match req_rx.recv() {
+                        Ok(m) => handle(&mut engine, &waiters, m),
+                        Err(_) => return,
+                    }
+                }
+                // drain whatever else arrived without blocking decode
+                loop {
+                    match req_rx.try_recv() {
+                        Ok(m) => handle(&mut engine, &waiters, m),
+                        Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                        Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
+                    }
+                }
+                if engine.idle() {
+                    continue;
+                }
+                if let Err(e) = engine.step() {
+                    eprintln!("[server] engine error: {e}");
+                }
+                route(&mut engine, &waiters);
             }
         });
     }
@@ -119,31 +210,82 @@ pub fn serve(engine: Engine, addr: &str) -> Result<()> {
     Ok(())
 }
 
+/// One client connection. The reader half (this thread) parses lines
+/// and registers each request's waiter; a writer thread streams rendered
+/// completions back as they arrive, so many requests can be in flight
+/// per connection (pipelining). Error and stats lines go through the
+/// same write lock so responses never interleave mid-line.
 fn handle_conn(
     stream: TcpStream,
-    req_tx: Sender<Request>,
+    req_tx: Sender<Inbound>,
     waiters: &Mutex<HashMap<u64, Sender<Completion>>>,
 ) -> Result<()> {
-    let mut writer = stream.try_clone().map_err(Error::Io)?;
+    let writer = Arc::new(Mutex::new(stream.try_clone().map_err(Error::Io)?));
     let reader = BufReader::new(stream);
+
+    // completion fan-in for this connection; the writer thread exits
+    // once every sender clone (per-request waiters + the reader's
+    // master, dropped at EOF) is gone
+    let (comp_tx, comp_rx): (Sender<Completion>, Receiver<Completion>) = channel();
+    let writer_thread = {
+        let writer = Arc::clone(&writer);
+        std::thread::spawn(move || {
+            for c in comp_rx {
+                let mut w = writer.lock().unwrap();
+                if writeln!(w, "{}", render_completion(&c)).is_err() {
+                    return; // client went away; drain silently
+                }
+            }
+        })
+    };
+
     for line in reader.lines() {
         let line = line.map_err(Error::Io)?;
         if line.trim().is_empty() {
             continue;
         }
-        let req = match parse_request(&line) {
-            Ok(r) => r,
+        // parse each line exactly once; branch on the parsed value
+        let parsed = match Json::parse(&line) {
+            Ok(v) => v,
             Err(e) => {
-                writeln!(writer, "{{\"error\": \"{e}\"}}").map_err(Error::Io)?;
+                writeln!(writer.lock().unwrap(), "{{\"error\": \"{e}\"}}").map_err(Error::Io)?;
                 continue;
             }
         };
-        let (tx, rx) = channel();
-        waiters.lock().unwrap().insert(req.id, tx);
-        req_tx.send(req).map_err(|_| Error::Engine("engine gone".into()))?;
-        let comp = rx.recv().map_err(|_| Error::Engine("engine dropped request".into()))?;
-        writeln!(writer, "{}", render_completion(&comp)).map_err(Error::Io)?;
+        if is_stats_json(&parsed) {
+            let (tx, rx) = channel();
+            req_tx.send(Inbound::Stats(tx)).map_err(|_| Error::Engine("engine gone".into()))?;
+            let stats = rx.recv().map_err(|_| Error::Engine("engine gone".into()))?;
+            writeln!(writer.lock().unwrap(), "{stats}").map_err(Error::Io)?;
+            continue;
+        }
+        let req = match request_from_json(&parsed) {
+            Ok(r) => r,
+            Err(e) => {
+                writeln!(writer.lock().unwrap(), "{{\"error\": \"{e}\"}}").map_err(Error::Io)?;
+                continue;
+            }
+        };
+        {
+            let mut w = waiters.lock().unwrap();
+            if w.contains_key(&req.id) {
+                drop(w);
+                writeln!(
+                    writer.lock().unwrap(),
+                    "{{\"error\": \"duplicate in-flight request id {}\"}}",
+                    req.id
+                )
+                .map_err(Error::Io)?;
+                continue;
+            }
+            w.insert(req.id, comp_tx.clone());
+        }
+        req_tx.send(Inbound::Req(req)).map_err(|_| Error::Engine("engine gone".into()))?;
     }
+    // EOF: drop the master sender; the writer drains any in-flight
+    // completions (their waiters still hold clones) and then exits
+    drop(comp_tx);
+    let _ = writer_thread.join();
     Ok(())
 }
 
@@ -162,12 +304,20 @@ mod tests {
     }
 
     #[test]
+    fn stats_line_is_recognized() {
+        assert!(is_stats_request(r#"{"stats": true}"#));
+        assert!(!is_stats_request(r#"{"stats": false}"#));
+        assert!(!is_stats_request(r#"{"id": 1, "prompt": [], "max_new_tokens": 1}"#));
+        assert!(!is_stats_request("not json"));
+    }
+
+    #[test]
     fn completion_renders_json() {
         let c = Completion {
             id: 9,
             tokens: vec![5, 6],
-            finish: crate::coordinator::FinishReason::Length,
-            queue_ms: 0.0,
+            finish: FinishReason::Length,
+            queue_ms: 0.5,
             prefill_ms: 1.5,
             decode_ms: 2.5,
             kv_bytes: 100,
@@ -177,5 +327,7 @@ mod tests {
         let v = Json::parse(&s).unwrap();
         assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 9);
         assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "length");
+        assert!((v.get("queue_ms").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
+        assert_eq!(v.get("kv_dense_bytes").unwrap().as_usize().unwrap(), 200);
     }
 }

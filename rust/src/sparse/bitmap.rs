@@ -95,7 +95,12 @@ impl BitmapMatrix {
     /// whole 64-token groups, matching the kernel's warp-tile granularity).
     /// `PackAxis::Channel` accepts any channel count — the trailing
     /// channel tile is partial when `channels % 64 != 0`.
-    pub fn compress(dense: &[f32], tokens: usize, channels: usize, axis: PackAxis) -> Result<BitmapMatrix> {
+    pub fn compress(
+        dense: &[f32],
+        tokens: usize,
+        channels: usize,
+        axis: PackAxis,
+    ) -> Result<BitmapMatrix> {
         if dense.len() != tokens * channels {
             return Err(Error::Shape(format!(
                 "dense len {} != {}x{}",
@@ -432,7 +437,8 @@ mod tests {
         for d in [32usize, 64, 96] {
             let dense = random_pruned(100, d, 0.4, 12);
             let full = BitmapMatrix::compress(&dense, 100, d, PackAxis::Channel).unwrap();
-            let mut inc = BitmapMatrix::compress(&dense[..60 * d], 60, d, PackAxis::Channel).unwrap();
+            let mut inc =
+                BitmapMatrix::compress(&dense[..60 * d], 60, d, PackAxis::Channel).unwrap();
             inc.append_groups(&dense[60 * d..], 40).unwrap();
             assert_eq!(inc, full, "d={d}");
         }

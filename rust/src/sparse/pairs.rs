@@ -27,7 +27,12 @@ pub struct TokenPairs {
 impl TokenPairs {
     /// Build from a dense (pruned) row-major `[tokens x channels]` matrix.
     /// Errors if any token has more than `kk` non-zeros.
-    pub fn from_dense(dense: &[f32], tokens: usize, channels: usize, kk: usize) -> Result<TokenPairs> {
+    pub fn from_dense(
+        dense: &[f32],
+        tokens: usize,
+        channels: usize,
+        kk: usize,
+    ) -> Result<TokenPairs> {
         if dense.len() != tokens * channels {
             return Err(Error::Shape(format!(
                 "dense len {} != {tokens}x{channels}",

@@ -214,7 +214,13 @@ fn dot_unrolled<E: KvElem>(row: &[E], q: &[f32], channels: usize) -> f32 {
 
 /// Dense MV baseline: scores[t] = Σ_c K[t,c]·q[c] (row-major K [T x D],
 /// f32 or stored-f16 elements).
-pub fn dense_key<E: KvElem>(k: &[E], tokens: usize, channels: usize, q: &[f32], scores: &mut [f32]) {
+pub fn dense_key<E: KvElem>(
+    k: &[E],
+    tokens: usize,
+    channels: usize,
+    q: &[f32],
+    scores: &mut [f32],
+) {
     assert_eq!(k.len(), tokens * channels);
     assert_eq!(q.len(), channels);
     assert_eq!(scores.len(), tokens);
@@ -226,7 +232,13 @@ pub fn dense_key<E: KvElem>(k: &[E], tokens: usize, channels: usize, q: &[f32], 
 
 /// Dense MV baseline: out[c] = Σ_t α[t]·V[t,c] (row-major V [T x D],
 /// f32 or stored-f16 elements).
-pub fn dense_value<E: KvElem>(v: &[E], tokens: usize, channels: usize, att: &[f32], out: &mut [f32]) {
+pub fn dense_value<E: KvElem>(
+    v: &[E],
+    tokens: usize,
+    channels: usize,
+    att: &[f32],
+    out: &mut [f32],
+) {
     assert_eq!(v.len(), tokens * channels);
     assert_eq!(att.len(), tokens);
     assert_eq!(out.len(), channels);

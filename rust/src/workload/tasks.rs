@@ -248,7 +248,8 @@ fn spread_count(rng: &mut Pcg32, ctx_len: usize, ntypes: usize) -> TaskSample {
     }
     let mut context = weave(rng, &blocks, ctx_len - 3);
     context.extend_from_slice(&[lang::CNT, items[ask], lang::ANS]);
-    TaskSample { context, answer: vec![lang::VAL0 + counts[ask] as u16], forced: false, query_len: 3 }
+    let answer = vec![lang::VAL0 + counts[ask] as u16];
+    TaskSample { context, answer, forced: false, query_len: 3 }
 }
 
 fn passkey(rng: &mut Pcg32, ctx_len: usize) -> TaskSample {
@@ -267,7 +268,8 @@ fn passkey(rng: &mut Pcg32, ctx_len: usize) -> TaskSample {
 fn code_ident(rng: &mut Pcg32, ctx_len: usize) -> TaskSample {
     // A fixed 6-ident motif repeated throughout the context ("API usage
     // pattern"); the model completes the final, truncated occurrence.
-    let motif: Vec<u16> = (0..6).map(|_| lang::IDENT0 + rng.below(lang::N_IDENTS as u32) as u16).collect();
+    let motif: Vec<u16> =
+        (0..6).map(|_| lang::IDENT0 + rng.below(lang::N_IDENTS as u32) as u16).collect();
     let mut blocks: Vec<(f64, Vec<u16>)> = Vec::new();
     for r in 0..4 {
         let mut b = motif.clone();

@@ -30,6 +30,29 @@ pub fn uniform_trace(seed: u64, n: usize, input_len: usize, gen_len: usize) -> V
         .collect()
 }
 
+/// A shared-prefix trace (EXPERIMENTS §6): every request's prompt opens
+/// with the same `prefix_len`-token document (a shared system prompt /
+/// few-shot header) followed by a per-request `suffix_len`-token
+/// continuation — the workload the kvpool prefix cache is built for.
+pub fn shared_prefix_trace(
+    seed: u64,
+    n: usize,
+    prefix_len: usize,
+    suffix_len: usize,
+    gen_len: usize,
+) -> Vec<TraceRequest> {
+    let mut prng = Pcg32::new(seed.wrapping_mul(6151).wrapping_add(13), 77);
+    let prefix = lang::gen_document(&mut prng, prefix_len);
+    (0..n)
+        .map(|i| {
+            let mut rng = Pcg32::new(seed.wrapping_mul(389).wrapping_add(i as u64), 55);
+            let mut prompt = prefix.clone();
+            prompt.extend(lang::gen_document(&mut rng, suffix_len));
+            TraceRequest { id: i as u64, prompt, max_new_tokens: gen_len }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -49,5 +72,19 @@ mod tests {
     #[test]
     fn trace_deterministic() {
         assert_eq!(uniform_trace(2, 2, 64, 8)[1].prompt, uniform_trace(2, 2, 64, 8)[1].prompt);
+    }
+
+    #[test]
+    fn shared_prefix_trace_shares_exactly_the_prefix() {
+        let tr = shared_prefix_trace(3, 4, 192, 64, 16);
+        assert_eq!(tr.len(), 4);
+        for r in &tr {
+            assert_eq!(r.prompt.len(), 256);
+            assert_eq!(r.prompt[..192], tr[0].prompt[..192], "prefix diverged");
+        }
+        // suffixes differ between requests
+        assert_ne!(tr[0].prompt[192..], tr[1].prompt[192..]);
+        // deterministic
+        assert_eq!(shared_prefix_trace(3, 4, 192, 64, 16)[2].prompt, tr[2].prompt);
     }
 }

@@ -1,3 +1,16 @@
+// Shared lint policy with the library crate (rust/src/lib.rs): these
+// allows cover numeric-harness idioms (indexed loops, config structs
+// mutated after Default::default(), positional format args).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::field_reassign_with_default,
+    clippy::uninlined_format_args,
+    clippy::manual_div_ceil,
+    clippy::type_complexity
+)]
+
 //! Engine + server integration over the real trained model (random
 //! weights fallback keeps the test meaningful without artifacts).
 

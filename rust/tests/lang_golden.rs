@@ -1,3 +1,16 @@
+// Shared lint policy with the library crate (rust/src/lib.rs): these
+// allows cover numeric-harness idioms (indexed loops, config structs
+// mutated after Default::default(), positional format args).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::field_reassign_with_default,
+    clippy::uninlined_format_args,
+    clippy::manual_div_ceil,
+    clippy::type_complexity
+)]
+
 //! Golden-file lock between the Rust and Python synthetic-language
 //! implementations. The golden file is produced by the python side
 //! (python/tests/golden_lang.json); if this test fails the two mirrors
@@ -10,7 +23,8 @@ use mustafar::workload::lang;
 
 fn golden() -> Json {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/python/tests/golden_lang.json");
-    let text = std::fs::read_to_string(path).expect("golden_lang.json missing — run python goldens first");
+    let text = std::fs::read_to_string(path)
+        .expect("golden_lang.json missing — run python goldens first");
     Json::parse(&text).unwrap()
 }
 

@@ -1,0 +1,165 @@
+// Shared lint policy with the library crate (rust/src/lib.rs): these
+// allows cover numeric-harness idioms (indexed loops, config structs
+// mutated after Default::default(), positional format args).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::field_reassign_with_default,
+    clippy::uninlined_format_args,
+    clippy::manual_div_ceil,
+    clippy::type_complexity
+)]
+
+//! End-to-end TCP server tests (satellite of the kvpool PR): bind an
+//! ephemeral port, drive pipelined and concurrent connections through
+//! `serve_listener`, and assert completions route back to the right
+//! connection. The older tests only covered parse/render.
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use mustafar::config::{Backend, EngineConfig, ModelConfig, SparsityConfig};
+use mustafar::coordinator::Engine;
+use mustafar::fmt::Json;
+use mustafar::model::{NativeModel, Weights};
+use mustafar::server;
+
+fn tiny_engine() -> Engine {
+    let cfg = ModelConfig {
+        name: "tiny".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        head_dim: 32,
+        ff: 128,
+        vocab: 512,
+        rope_theta: 10000.0,
+        max_seq: 512,
+        norm_eps: 1e-5,
+    };
+    let mut ec = EngineConfig::default();
+    ec.backend = Backend::NativeSparse;
+    ec.sparsity = SparsityConfig::mustafar(0.5, 0.5);
+    ec.max_batch = 4;
+    Engine::new_native(NativeModel::new(Weights::random_for_tests(cfg, 7)), ec)
+}
+
+/// Bind 127.0.0.1:0, spawn the server on the ephemeral listener, return
+/// the address to connect to.
+fn spawn_server() -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+    let addr = listener.local_addr().unwrap();
+    let engine = tiny_engine();
+    std::thread::spawn(move || {
+        let _ = server::serve_listener(engine, listener);
+    });
+    addr
+}
+
+fn req_line(id: u64, prompt_len: usize, gen: usize) -> String {
+    let prompt: Vec<String> =
+        (0..prompt_len).map(|j| ((id as usize * 37 + j) % 400 + 16).to_string()).collect();
+    format!(
+        "{{\"id\": {id}, \"prompt\": [{}], \"max_new_tokens\": {gen}}}",
+        prompt.join(", ")
+    )
+}
+
+#[test]
+fn pipelined_requests_on_one_connection_route_by_id() {
+    let addr = spawn_server();
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    // write three requests back-to-back before reading anything
+    for id in [10u64, 11, 12] {
+        writeln!(stream, "{}", req_line(id, 48, 4)).unwrap();
+    }
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut seen = HashSet::new();
+    for _ in 0..3 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(&line).unwrap();
+        let id = v.get("id").unwrap().as_usize().unwrap() as u64;
+        assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 4, "id {id}");
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "length");
+        assert!(v.get("queue_ms").unwrap().as_f64().unwrap() >= 0.0);
+        seen.insert(id);
+    }
+    assert_eq!(seen, HashSet::from([10, 11, 12]), "a completion was lost or misrouted");
+}
+
+#[test]
+fn concurrent_connections_each_get_only_their_completions() {
+    let addr = spawn_server();
+    let mut handles = Vec::new();
+    for conn in 0..3u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            let ids: Vec<u64> = (0..3).map(|k| 100 + conn * 10 + k).collect();
+            for &id in &ids {
+                writeln!(stream, "{}", req_line(id, 40, 3)).unwrap();
+            }
+            let mut reader = BufReader::new(stream);
+            let mut got = HashSet::new();
+            for _ in 0..ids.len() {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let v = Json::parse(&line).unwrap();
+                got.insert(v.get("id").unwrap().as_usize().unwrap() as u64);
+            }
+            (ids.into_iter().collect::<HashSet<u64>>(), got)
+        }));
+    }
+    for h in handles {
+        let (want, got) = h.join().unwrap();
+        assert_eq!(want, got, "a connection received someone else's completion");
+    }
+}
+
+#[test]
+fn stats_and_error_lines_interleave_with_completions() {
+    let addr = spawn_server();
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+
+    // malformed request: error object, not a hang
+    writeln!(stream, "not json").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+
+    // a real request...
+    writeln!(stream, "{}", req_line(1, 160, 4)).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(Json::parse(&line).unwrap().get("id").unwrap().as_usize().unwrap(), 1);
+
+    // ...then the same prompt again: the prefix cache serves it, and the
+    // stats endpoint reports the hit and live pool bytes
+    writeln!(stream, "{}", req_line(1, 160, 4)).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+
+    writeln!(stream, "{{\"stats\": true}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    assert_eq!(v.get("completions").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(v.get("prefix_full_hits").unwrap().as_usize().unwrap(), 1);
+    assert!(v.get("pool_live_bytes").unwrap().as_f64().unwrap() > 0.0);
+    assert!(v.get("prefix_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+
+    // duplicate in-flight id: error line instead of a clobbered waiter
+    writeln!(stream, "{}", req_line(500, 400, 64)).unwrap();
+    writeln!(stream, "{}", req_line(500, 8, 1)).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let first = line.clone();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let both = format!("{first}{line}");
+    assert!(both.contains("duplicate"), "expected a duplicate-id error, got: {both}");
+}
