@@ -15,8 +15,9 @@
 //! latency by backend, and KV-manager append/compress cost — the L3
 //! coordinator pieces (ablation support for DESIGN.md §Perf).
 
-use mustafar::bench::{bench, BenchOpts};
+use mustafar::bench::{bench, BenchOpts, BenchReport};
 use mustafar::config::{Backend, EngineConfig, SparsityConfig};
+use mustafar::fmt::Json;
 use mustafar::coordinator::{Engine, Request, Scheduler};
 use mustafar::kvcache::{KvPolicy, SequenceKV};
 use mustafar::model::{NativeModel, Weights};
@@ -51,6 +52,8 @@ fn main() {
     });
     println!("scheduler: {:>9.1} us / 256 requests ({:.2} us/req)",
         adm.median_us(), adm.median_us() / 256.0);
+    let mut report = BenchReport::new("engine_micro");
+    report.timing("scheduler_admit_256", &adm, None, None);
 
     // -- KV manager append + group compression ------------------------------
     let mut rng = Pcg32::seeded(3);
@@ -70,6 +73,7 @@ fn main() {
     });
     println!("kv manager: {:>9.1} us / 128 decode tokens ({:.1} us/token)",
         kv_bench.median_us(), kv_bench.median_us() / 128.0);
+    report.timing("kv_append_128_tokens", &kv_bench, None, None);
 
     // -- decode round by backend (needs trained weights) ---------------------
     let dir = std::path::Path::new("artifacts");
@@ -96,9 +100,14 @@ fn main() {
                 "engine {label:<18}: {:>8.1} tok/s (batch 4, in 448, gen 16)",
                 e.metrics.tokens_per_sec()
             );
+            report.case(vec![
+                ("name", Json::str(format!("engine/{label}"))),
+                ("tok_per_sec", Json::num(e.metrics.tokens_per_sec())),
+            ]);
             let _ = t0;
         }
     } else {
         println!("(gqa-small weights missing; engine decode bench skipped)");
     }
+    report.write_or_warn();
 }

@@ -26,7 +26,8 @@
 //! Paper numbers (Fig 6a): SpMV 50% -> 81.1% of dense; 70% -> 61.9%;
 //! prune 1.84%, compress 6.25%, local window 0.62% (MHA).
 
-use mustafar::bench::{bench, BenchOpts};
+use mustafar::bench::{bench, BenchOpts, BenchReport};
+use mustafar::fmt::Json;
 use mustafar::prune::{keep_count, per_token_magnitude};
 use mustafar::sparse::{dense_key, dense_value, spmv_key, spmv_value, BitmapMatrix, PackAxis, TILE};
 use mustafar::util::Pcg32;
@@ -42,7 +43,7 @@ fn randv(n: usize, rng: &mut Pcg32) -> Vec<f32> {
     (0..n).map(|_| rng.normal_f32()).collect()
 }
 
-fn run_setup(s: &Setup, sparsity: f64) {
+fn run_setup(s: &Setup, sparsity: f64, report: &mut BenchReport) {
     let mut rng = Pcg32::seeded(42);
     let hd = s.hd;
     let t = s.t;
@@ -141,6 +142,15 @@ fn run_setup(s: &Setup, sparsity: f64) {
         total,
         total / d * 100.0
     );
+    report.case(vec![
+        ("name", Json::str(format!("{}/s{sparsity:.1}", s.name))),
+        ("dense_us", Json::num(d)),
+        ("spmv_us", Json::num(spmv.median_us())),
+        ("local_us", Json::num(local.median_us())),
+        ("prune_us", Json::num(prune_us)),
+        ("compress_us", Json::num(comp_us)),
+        ("total_pct_of_dense", Json::num(total / d * 100.0)),
+    ]);
 }
 
 fn main() {
@@ -149,9 +159,11 @@ fn main() {
         Setup { name: "MHA (llama-2 role)", kv_heads: 8, t: 3072, hd: 128 },
         Setup { name: "GQA (llama-3 role)", kv_heads: 2, t: 5120, hd: 128 },
     ];
+    let mut report = BenchReport::new("fig6a_kernel_breakdown");
     for s in &setups {
         for sp in [0.5, 0.7] {
-            run_setup(s, sp);
+            run_setup(s, sp, &mut report);
         }
     }
+    report.write_or_warn();
 }

@@ -22,8 +22,10 @@
 //! models (in 448 / gen 96) and the budget sweep reproduces the
 //! batch-admission effect through the scheduler's KV-budget model.
 
+use mustafar::bench::BenchReport;
 use mustafar::config::{Backend, EngineConfig, SparsityConfig};
 use mustafar::coordinator::{estimate_seq_bytes, Engine, Request};
+use mustafar::fmt::Json;
 use mustafar::kvcache::KvPolicy;
 use mustafar::model::{NativeModel, Weights};
 use mustafar::workload::trace::uniform_trace;
@@ -42,7 +44,15 @@ fn engine(model_name: &str, backend: Backend, ks: f64, vs: f64, batch: usize) ->
     Some(Engine::new_native(NativeModel::new(weights), ec))
 }
 
-fn run_point(model_name: &str, label: &str, backend: Backend, ks: f64, vs: f64, batch: usize) {
+fn run_point(
+    model_name: &str,
+    label: &str,
+    backend: Backend,
+    ks: f64,
+    vs: f64,
+    batch: usize,
+    report: &mut BenchReport,
+) {
     let Some(mut e) = engine(model_name, backend, ks, vs, batch) else {
         println!("  (weights for {model_name} missing — run `make artifacts`)");
         return;
@@ -59,6 +69,12 @@ fn run_point(model_name: &str, label: &str, backend: Backend, ks: f64, vs: f64, 
         m.kv_compression_rate() * 100.0,
         m.mean_batch()
     );
+    report.case(vec![
+        ("name", Json::str(format!("{model_name}/{label}/b{batch}"))),
+        ("tok_per_sec", Json::num(m.tokens_per_sec())),
+        ("kv_rate", Json::num(m.kv_compression_rate())),
+        ("mean_batch", Json::num(m.mean_batch())),
+    ]);
 }
 
 fn budget_sweep(model_name: &str) {
@@ -82,14 +98,16 @@ fn budget_sweep(model_name: &str) {
 
 fn main() {
     println!("=== Fig 7 — tokens/s vs batch size (in {INPUT_LEN} / gen {GEN_LEN}) ===\n");
+    let mut report = BenchReport::new("fig7_throughput");
     for model_name in ["mha-small", "gqa-small"] {
         for batch in [1usize, 2, 4, 6, 8] {
-            run_point(model_name, "dense", Backend::NativeDense, 0.0, 0.0, batch);
-            run_point(model_name, "K0.5 V0.5", Backend::NativeSparse, 0.5, 0.5, batch);
-            run_point(model_name, "K0.7 V0.7", Backend::NativeSparse, 0.7, 0.7, batch);
+            run_point(model_name, "dense", Backend::NativeDense, 0.0, 0.0, batch, &mut report);
+            run_point(model_name, "K0.5 V0.5", Backend::NativeSparse, 0.5, 0.5, batch, &mut report);
+            run_point(model_name, "K0.7 V0.7", Backend::NativeSparse, 0.7, 0.7, batch, &mut report);
             println!();
         }
         budget_sweep(model_name);
         println!();
     }
+    report.write_or_warn();
 }

@@ -16,6 +16,8 @@
 //! bitmaps — trade compression rate against the alternatives, measured
 //! on real pruned KV matrices across sparsities.
 
+use mustafar::bench::BenchReport;
+use mustafar::fmt::Json;
 use mustafar::prune::{keep_count, per_token_magnitude};
 use mustafar::sparse::bitmap::{BITMAP_BYTES, OFFSET_BYTES, VALUE_BYTES};
 use mustafar::sparse::{BitmapMatrix, PackAxis, TILE};
@@ -51,6 +53,7 @@ fn main() {
         "{:<10} {:>12} {:>12} {:>12} {:>12} {:>12}",
         "sparsity", "pad=8(paper)", "pad=1", "pad=16", "csr(1B idx)", "dense=100%"
     );
+    let mut report = BenchReport::new("format_ablation");
     for s in [0.3, 0.5, 0.7, 0.9] {
         let kk = keep_count(hd, s);
         let kp = per_token_magnitude(&k, t, hd, kk);
@@ -64,7 +67,16 @@ fn main() {
             rate_csr_like(&m, VALUE_BYTES) * 100.0,
             "100%"
         );
+        report.case(vec![
+            ("name", Json::str(format!("rate/s{s:.1}"))),
+            ("pad8", Json::num(m.compression_rate())),
+            ("pad1", Json::num(rate_with(&m, 1, VALUE_BYTES))),
+            ("pad16", Json::num(rate_with(&m, 16, VALUE_BYTES))),
+            ("csr_1b", Json::num(rate_csr_like(&m, VALUE_BYTES))),
+            ("bytes", Json::num(m.compressed_bytes() as f64)),
+        ]);
     }
+    report.write_or_warn();
 
     println!("\n(The paper's pad=8 costs a few points vs pad=1 — the GPU");
     println!("coalescing tax quantified — and the bitmap beats a byte-index");

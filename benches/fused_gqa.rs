@@ -14,15 +14,19 @@
 //! Fused GQA decode benchmark: the multi-query sparse attention path
 //! (`decode_sparse_group`, one compressed-stream walk per KV head) vs
 //! the per-query-head path (`decode_sparse` called G times), across
-//! GQA group sizes and sparsity levels. Companion to `engine_micro`;
-//! results are recorded in EXPERIMENTS.md §Perf iteration log.
+//! GQA group sizes and sparsity levels — plus, per case, the fused path
+//! pinned to the scalar oracle, so the table reports the runtime
+//! dispatch (AVX2/F16C on stable) speedup directly. Companion to
+//! `engine_micro`; results land in EXPERIMENTS.md §Perf iteration log
+//! and machine-readably in `BENCH_fused_gqa.json`.
 
-use mustafar::attention::{decode_sparse, decode_sparse_group};
-use mustafar::bench::{bench, smoke_mode, BenchOpts};
+use mustafar::attention::{decode_sparse, decode_sparse_group_with};
+use mustafar::bench::{bench, smoke_mode, BenchOpts, BenchReport};
 use mustafar::config::{Backend, EngineConfig, SparsityConfig};
 use mustafar::coordinator::{Engine, Request};
+use mustafar::fmt::Json;
 use mustafar::model::{NativeModel, Weights};
-use mustafar::sparse::{f32_to_f16, BitmapMatrix, PackAxis};
+use mustafar::sparse::{f32_to_f16, kernels, BitmapMatrix, KernelTable, PackAxis};
 use mustafar::util::Pcg32;
 
 fn random_pruned(t: usize, d: usize, keep: f32, rng: &mut Pcg32) -> Vec<f32> {
@@ -46,15 +50,23 @@ fn main() {
     let tail = 33usize;
     let scale = 1.0 / (hd as f32).sqrt();
 
+    let kt = kernels();
+    let oracle = KernelTable::scalar();
+    let mut report = BenchReport::new("fused_gqa");
+    report.meta("t_comp", Json::num(t_comp as f64));
+    report.meta("tail", Json::num(tail as f64));
+    report.meta("hd", Json::num(hd as f64));
+
     println!(
-        "## fused GQA decode kernel (t_comp={t_comp}, tail={tail}, hd={hd}, f16 storage, simd={})",
-        if cfg!(feature = "simd") { "on" } else { "off" }
+        "## fused GQA decode kernel (t_comp={t_comp}, tail={tail}, hd={hd}, f16 storage, \
+         backend={})",
+        kt.backend.name()
     );
     // "calls/s" = fused decode_sparse_group invocations per second; one
     // generated token costs n_layers x n_kv_heads such calls plus matmuls.
     println!(
-        "{:<10} {:>6} {:>14} {:>14} {:>9} {:>13}",
-        "sparsity", "group", "fused (us)", "per-head (us)", "speedup", "calls/s fused"
+        "{:<10} {:>6} {:>14} {:>14} {:>9} {:>11} {:>13}",
+        "sparsity", "group", "fused (us)", "per-head (us)", "speedup", "vs scalar", "calls/s fused"
     );
 
     for &sparsity in &[0.5f32, 0.7] {
@@ -73,8 +85,16 @@ fn main() {
             let (mut sc, mut st) = (Vec::new(), Vec::new());
 
             let fused = bench("fused", opts, || {
-                decode_sparse_group(
-                    &qs, g, &k_comp, &v_comp, &tail_k, &tail_v, tail, scale,
+                decode_sparse_group_with(
+                    kt, &qs, g, &k_comp, &v_comp, &tail_k, &tail_v, tail, scale,
+                    &mut out, &mut sc, &mut st,
+                );
+                std::hint::black_box(&out);
+            });
+
+            let fused_scalar = bench("fused/scalar", opts, || {
+                decode_sparse_group_with(
+                    &oracle, &qs, g, &k_comp, &v_comp, &tail_k, &tail_v, tail, scale,
                     &mut out, &mut sc, &mut st,
                 );
                 std::hint::black_box(&out);
@@ -97,15 +117,24 @@ fn main() {
                 std::hint::black_box(&out);
             });
 
+            let vs_scalar = fused_scalar.median_us() / fused.median_us();
             println!(
-                "{:<10} {:>6} {:>14.1} {:>14.1} {:>8.2}x {:>13.0}",
+                "{:<10} {:>6} {:>14.1} {:>14.1} {:>8.2}x {:>10.2}x {:>13.0}",
                 sparsity,
                 g,
                 fused.median_us(),
                 per_head.median_us(),
                 per_head.median_us() / fused.median_us(),
+                vs_scalar,
                 1e6 / fused.median_us()
             );
+            report.timing(
+                &format!("fused/s{sparsity:.1}/g{g}"),
+                &fused,
+                Some(k_comp.compressed_bytes() + v_comp.compressed_bytes()),
+                Some(vs_scalar),
+            );
+            report.timing(&format!("per_head/s{sparsity:.1}/g{g}"), &per_head, None, None);
         }
     }
 
@@ -146,5 +175,10 @@ fn main() {
             .collect();
         let _ = e.run_trace(reqs).unwrap();
         println!("engine {label:<18}: {:>8.1} tok/s", e.metrics.tokens_per_sec());
+        report.case(vec![
+            ("name", Json::str(format!("engine/{label}"))),
+            ("tok_per_sec", Json::num(e.metrics.tokens_per_sec())),
+        ]);
     }
+    report.write_or_warn();
 }

@@ -14,7 +14,7 @@
 //! Pruning + compression throughput microbenchmark — the runtime-overhead
 //! side of the Fig 6a story, across methods and keep-counts.
 
-use mustafar::bench::{bench, BenchOpts};
+use mustafar::bench::{bench, BenchOpts, BenchReport};
 use mustafar::prune::{
     keep_count, per_channel_magnitude, per_token_magnitude, per_token_output_aware, semi_24,
 };
@@ -29,6 +29,7 @@ fn main() {
     let qw: Vec<f32> = (0..hd).map(|_| rng.unit_f32()).collect();
     let opts = BenchOpts { warmup_iters: 5, iters: 50, min_time_s: 0.2 };
 
+    let mut report = BenchReport::new("prune_micro");
     println!("=== prune+compress micro — one 64-token group, hd={hd} ===");
     for s in [0.5, 0.7] {
         let kk = keep_count(hd, s);
@@ -53,9 +54,15 @@ fn main() {
             cmp.median_us(),
             t as f64 / pm.median_us(),
         );
+        report.timing(&format!("token_magnitude/s{s}"), &pm, None, None);
+        report.timing(&format!("token_output_aware/s{s}"), &poa, None, None);
+        report.timing(&format!("channel_magnitude/s{s}"), &pcm, None, None);
+        report.timing(&format!("bitmap_compress/s{s}"), &cmp, None, None);
     }
     let sm = bench("2:4", opts, || {
         std::hint::black_box(semi_24(&x, t, hd));
     });
     println!("2:4 semi-structured: {:.1} us", sm.median_us());
+    report.timing("semi_24", &sm, None, None);
+    report.write_or_warn();
 }

@@ -18,13 +18,23 @@
 //! bytes (2-byte values), so the bytes column is the real stream size the
 //! kernel walks.
 //!
+//! Every case runs twice — through the runtime-dispatched kernel table
+//! (AVX2+FMA+F16C on hardware that has it, even on the default stable
+//! build) and through the pinned scalar oracle — so the printed speedup
+//! is the stable-dispatch win, measured in-process. A machine-readable
+//! `BENCH_spmv_micro.json` lands next to the table.
+//!
 //! `MUSTAFAR_BENCH_SMOKE=1` shrinks the problem and iteration counts so
 //! CI can keep both the default and `--features simd` code paths green
 //! without burning minutes.
 
-use mustafar::bench::{bench, smoke_mode, BenchOpts};
+use mustafar::bench::{bench, smoke_mode, BenchOpts, BenchReport};
+use mustafar::fmt::Json;
 use mustafar::prune::{keep_count, per_token_magnitude};
-use mustafar::sparse::{dense_key, dense_value, spmv_key, spmv_value, BitmapMatrix, PackAxis};
+use mustafar::sparse::{
+    dense_key_with, dense_value_with, kernels, spmv_key_with, spmv_value_with, BitmapMatrix,
+    KernelTable, PackAxis,
+};
 use mustafar::util::Pcg32;
 
 fn main() {
@@ -41,32 +51,49 @@ fn main() {
     } else {
         BenchOpts { warmup_iters: 3, iters: 30, min_time_s: 0.3 }
     };
+    let kt = kernels();
+    let sc = KernelTable::scalar();
+    let mut report = BenchReport::new("spmv_micro");
+    report.meta("t", Json::num(t as f64));
+    report.meta("hd", Json::num(hd as f64));
 
     let mut scores = vec![0.0f32; t];
     let mut out = vec![0.0f32; hd];
     let dense_k = bench("dense_key", opts, || {
         scores.iter_mut().for_each(|x| *x = 0.0);
-        dense_key(&k, t, hd, &q, &mut scores);
+        dense_key_with(kt, &k, t, hd, &q, &mut scores);
+    });
+    let dense_k_sc = bench("dense_key/scalar", opts, || {
+        scores.iter_mut().for_each(|x| *x = 0.0);
+        dense_key_with(&sc, &k, t, hd, &q, &mut scores);
     });
     let dense_v = bench("dense_value", opts, || {
         out.iter_mut().for_each(|x| *x = 0.0);
-        dense_value(&v, t, hd, &att, &mut out);
+        dense_value_with(kt, &v, t, hd, &att, &mut out);
     });
-    let dense_bytes = std::mem::size_of_val(k.as_slice()) as f64;
+    let dense_bytes = std::mem::size_of_val(k.as_slice());
     println!(
-        "=== SpMV micro — T={t}, hd={hd}, f16 compressed storage, simd={} ===",
-        if cfg!(feature = "simd") { "on" } else { "off (scalar fallback)" }
+        "=== SpMV micro — T={t}, hd={hd}, f16 compressed storage, backend={} ===",
+        kt.backend.name()
     );
     println!(
-        "dense_key   {:>9.1} us  ({:.1} GB/s, f32 host buffer)",
+        "dense_key   {:>9.1} us  ({:.1} GB/s, f32 host buffer; {:.2}x vs forced-scalar)",
         dense_k.median_us(),
-        dense_bytes / dense_k.median_us() / 1e3
+        dense_bytes as f64 / dense_k.median_us() / 1e3,
+        dense_k_sc.median_us() / dense_k.median_us()
     );
     println!(
         "dense_value {:>9.1} us  ({:.1} GB/s, f32 host buffer)",
         dense_v.median_us(),
-        dense_bytes / dense_v.median_us() / 1e3
+        dense_bytes as f64 / dense_v.median_us() / 1e3
     );
+    report.timing(
+        "dense_key",
+        &dense_k,
+        Some(dense_bytes),
+        Some(dense_k_sc.median_us() / dense_k.median_us()),
+    );
+    report.timing("dense_value", &dense_v, Some(dense_bytes), None);
 
     for s in [0.3, 0.5, 0.7, 0.9] {
         let kk = keep_count(hd, s);
@@ -81,19 +108,40 @@ fn main() {
 
         let sk = bench("spmv_key", opts, || {
             scores.iter_mut().for_each(|x| *x = 0.0);
-            spmv_key(&kc, &q, &mut scores);
+            spmv_key_with(kt, &kc, &q, &mut scores);
+        });
+        let sk_sc = bench("spmv_key/scalar", opts, || {
+            scores.iter_mut().for_each(|x| *x = 0.0);
+            spmv_key_with(&sc, &kc, &q, &mut scores);
         });
         let sv = bench("spmv_value", opts, || {
             out.iter_mut().for_each(|x| *x = 0.0);
-            spmv_value(&vc, &att, &mut out);
+            spmv_value_with(kt, &vc, &att, &mut out);
         });
+        let sv_sc = bench("spmv_value/scalar", opts, || {
+            out.iter_mut().for_each(|x| *x = 0.0);
+            spmv_value_with(&sc, &vc, &att, &mut out);
+        });
+        let sk_speed = sk_sc.median_us() / sk.median_us();
+        let sv_speed = sv_sc.median_us() / sv.median_us();
         println!(
-            "s={s:.1}  spmv_key {:>8.1} us ({:>5.1}% of dense, bytes {:>5.1}%) | spmv_value {:>8.1} us ({:>5.1}%)",
+            "s={s:.1}  spmv_key {:>8.1} us ({:>5.1}% of dense, bytes {:>5.1}%, {:.2}x vs scalar) \
+             | spmv_value {:>8.1} us ({:>5.1}%, {:.2}x vs scalar)",
             sk.median_us(),
             sk.median_us() / dense_k.median_us() * 100.0,
-            comp_bytes as f64 / dense_bytes * 100.0,
+            comp_bytes as f64 / dense_bytes as f64 * 100.0,
+            sk_speed,
             sv.median_us(),
             sv.median_us() / dense_v.median_us() * 100.0,
+            sv_speed,
+        );
+        report.timing(&format!("spmv_key/s{s:.1}"), &sk, Some(comp_bytes), Some(sk_speed));
+        report.timing(
+            &format!("spmv_value/s{s:.1}"),
+            &sv,
+            Some(vc.compressed_bytes()),
+            Some(sv_speed),
         );
     }
+    report.write_or_warn();
 }

@@ -3,9 +3,11 @@
 //! path (bitmap SpMV over the compressed region + dense MV over the local
 //! window, Fig 5a).
 
+use crate::sparse::dispatch::{kernels, KernelTable};
 use crate::sparse::{
-    dense_key, dense_key_multi, dense_value, dense_value_multi, spmv_key, spmv_key_multi,
-    spmv_value, spmv_value_multi, BitmapMatrix, KvElem, MAX_GROUP,
+    dense_key, dense_key_multi_with, dense_key_with, dense_value, dense_value_multi_with,
+    dense_value_with, spmv_key, spmv_key_multi_with, spmv_value, spmv_value_multi_with,
+    BitmapMatrix, KvElem, MAX_GROUP,
 };
 
 /// Precomputed RoPE table for one position: (cos, sin) of length hd/2.
@@ -200,6 +202,38 @@ pub fn decode_sparse_group<E: KvElem>(
     );
 }
 
+/// `decode_sparse_group` through an explicit dispatch table (benches pin
+/// the scalar oracle to report the stable-dispatch speedup).
+#[allow(clippy::too_many_arguments)]
+pub fn decode_sparse_group_with<E: KvElem>(
+    kt: &KernelTable,
+    qs: &[f32],
+    g: usize,
+    k_comp: &BitmapMatrix,
+    v_comp: &BitmapMatrix,
+    tail_k: &[E],
+    tail_v: &[E],
+    tail_len: usize,
+    scale: f32,
+    out: &mut [f32],
+    s_comp: &mut Vec<f32>,
+    s_tail: &mut Vec<f32>,
+) {
+    decode_sparse_group_segments_with(
+        kt,
+        qs,
+        g,
+        &[(k_comp, v_comp)],
+        tail_k,
+        tail_v,
+        tail_len,
+        scale,
+        out,
+        s_comp,
+        s_tail,
+    );
+}
+
 /// Multi-segment fused GQA sparse decode: `decode_sparse_group` where
 /// the compressed region is a *sequence of segments in token order* —
 /// e.g. a shared prefill prefix (`kvcache::SharedPrefix`) followed by
@@ -216,6 +250,38 @@ pub fn decode_sparse_group<E: KvElem>(
 /// on the concatenation (and, with one segment, to `decode_sparse`).
 #[allow(clippy::too_many_arguments)]
 pub fn decode_sparse_group_segments<E: KvElem>(
+    qs: &[f32],
+    g: usize,
+    segs: &[(&BitmapMatrix, &BitmapMatrix)],
+    tail_k: &[E],
+    tail_v: &[E],
+    tail_len: usize,
+    scale: f32,
+    out: &mut [f32],
+    s_comp: &mut Vec<f32>,
+    s_tail: &mut Vec<f32>,
+) {
+    decode_sparse_group_segments_with(
+        kernels(),
+        qs,
+        g,
+        segs,
+        tail_k,
+        tail_v,
+        tail_len,
+        scale,
+        out,
+        s_comp,
+        s_tail,
+    );
+}
+
+/// `decode_sparse_group_segments` through an explicit dispatch table;
+/// one table serves the entire call so a single decode never mixes
+/// kernel tiers.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_sparse_group_segments_with<E: KvElem>(
+    kt: &KernelTable,
     qs: &[f32],
     g: usize,
     segs: &[(&BitmapMatrix, &BitmapMatrix)],
@@ -247,10 +313,10 @@ pub fn decode_sparse_group_segments<E: KvElem>(
         if nc == 0 {
             continue;
         }
-        spmv_key_multi(k, qs, g, &mut s_comp[off..off + g * nc]);
+        spmv_key_multi_with(kt, k, qs, g, &mut s_comp[off..off + g * nc]);
         off += g * nc;
     }
-    dense_key_multi(tail_k, tail_len, hd, qs, g, s_tail);
+    dense_key_multi_with(kt, tail_k, tail_len, hd, qs, g, s_tail);
     for s in s_comp.iter_mut() {
         *s *= scale;
     }
@@ -343,10 +409,10 @@ pub fn decode_sparse_group_segments<E: KvElem>(
         if nc == 0 {
             continue;
         }
-        spmv_value_multi(v, &s_comp[off..off + g * nc], g, out);
+        spmv_value_multi_with(kt, v, &s_comp[off..off + g * nc], g, out);
         off += g * nc;
     }
-    dense_value_multi(tail_v, tail_len, hd, s_tail, g, out);
+    dense_value_multi_with(kt, tail_v, tail_len, hd, s_tail, g, out);
 }
 
 /// Full causal self-attention for prefill, one head.
@@ -365,25 +431,89 @@ pub fn causal_prefill(
     mut att_probs: Option<&mut Vec<f32>>,
 ) {
     debug_assert_eq!(q.len(), t * hd);
-    if let Some(p) = att_probs.as_deref_mut() {
-        p.clear();
-        p.resize(t * t, 0.0);
+    let kt = kernels();
+    let probs: Option<&mut [f32]> = match att_probs.take() {
+        Some(p) => {
+            p.clear();
+            p.resize(t * t, 0.0);
+            Some(&mut p[..])
+        }
+        None => None,
+    };
+
+    // Row blocks are independent (each query row attends over its own
+    // causal span), so long prompts fan out across threads — previously
+    // this loop was single-pass even for multi-thousand-token prefills.
+    // The threshold is deliberately high: prefill calls this once per
+    // (layer, query head), each call spawning scoped OS threads, so only
+    // prompts where the per-call work dwarfs the spawn cost fan out.
+    // Blocks stay smallish (~threads x 2) because row cost grows with
+    // the row index; per-row math is identical either way, so threading
+    // never changes a bit of output.
+    let flops = t * (t + 1) * hd * 2; // two MVs per row, ~2*n*hd each
+    let threads = crate::util::threads();
+    if flops < 16_000_000 || threads <= 1 {
+        causal_prefill_rows(kt, q, k, v, t, hd, scale, 0, out, probs);
+        return;
     }
-    let mut scores = vec![0.0f32; t];
-    for i in 0..t {
+    let rows_per = t.div_ceil(threads * 2).max(16);
+    std::thread::scope(|scope| {
+        let mut out_rest = &mut out[..];
+        let mut probs_rest = probs;
+        let mut r0 = 0usize;
+        while r0 < t {
+            let rows = rows_per.min(t - r0);
+            let (chunk, rest) = out_rest.split_at_mut(rows * hd);
+            out_rest = rest;
+            let pchunk = match probs_rest.take() {
+                Some(p) => {
+                    let (c, rest) = p.split_at_mut(rows * t);
+                    probs_rest = Some(rest);
+                    Some(c)
+                }
+                None => None,
+            };
+            scope.spawn(move || {
+                causal_prefill_rows(kt, q, k, v, t, hd, scale, r0, chunk, pchunk);
+            });
+            r0 += rows;
+        }
+    });
+}
+
+/// One block of causal-prefill rows `[r0, r0 + out_rows.len()/hd)`:
+/// `out_rows` holds those rows of the output, `probs_rows` (if given)
+/// the matching rows of the `[t x t]` post-softmax matrix.
+#[allow(clippy::too_many_arguments)]
+fn causal_prefill_rows(
+    kt: &KernelTable,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    t: usize,
+    hd: usize,
+    scale: f32,
+    r0: usize,
+    out_rows: &mut [f32],
+    mut probs_rows: Option<&mut [f32]>,
+) {
+    let rr = out_rows.len() / hd;
+    let mut scores = vec![0.0f32; r0 + rr];
+    for j in 0..rr {
+        let i = r0 + j;
         let qi = &q[i * hd..(i + 1) * hd];
         let n = i + 1;
         scores[..n].iter_mut().for_each(|s| *s = 0.0);
-        dense_key(&k[..n * hd], n, hd, qi, &mut scores[..n]);
+        dense_key_with(kt, &k[..n * hd], n, hd, qi, &mut scores[..n]);
         for s in scores[..n].iter_mut() {
             *s *= scale;
         }
         softmax(&mut scores[..n]);
-        let oi = &mut out[i * hd..(i + 1) * hd];
+        let oi = &mut out_rows[j * hd..(j + 1) * hd];
         oi.iter_mut().for_each(|x| *x = 0.0);
-        dense_value(&v[..n * hd], n, hd, &scores[..n], oi);
-        if let Some(p) = att_probs.as_deref_mut() {
-            p[i * t..i * t + n].copy_from_slice(&scores[..n]);
+        dense_value_with(kt, &v[..n * hd], n, hd, &scores[..n], oi);
+        if let Some(p) = probs_rows.as_deref_mut() {
+            p[j * t..j * t + n].copy_from_slice(&scores[..n]);
         }
     }
 }
@@ -633,6 +763,34 @@ mod tests {
                 assert!((a - b).abs() < 1e-5, "lane {l}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn causal_prefill_threaded_matches_row_blocks() {
+        // t is large enough to trigger the threaded row fan-out on
+        // multi-core machines; the result (and the captured prob matrix)
+        // must be bit-identical to one serial row walk.
+        let mut rng = Pcg32::seeded(27);
+        let (t, hd) = (384, 64); // past the flop threshold -> threaded
+        let q = randv(t * hd, &mut rng);
+        let k = randv(t * hd, &mut rng);
+        let v = randv(t * hd, &mut rng);
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let mut out = vec![0.0f32; t * hd];
+        let mut probs = Vec::new();
+        causal_prefill(&q, &k, &v, t, hd, scale, &mut out, Some(&mut probs));
+
+        let mut out2 = vec![0.0f32; t * hd];
+        let mut probs2 = vec![0.0f32; t * t];
+        causal_prefill_rows(
+            crate::sparse::kernels(),
+            &q, &k, &v, t, hd, scale, 0,
+            &mut out2,
+            Some(&mut probs2[..]),
+        );
+        assert_eq!(out, out2);
+        assert_eq!(probs, probs2);
     }
 
     #[test]

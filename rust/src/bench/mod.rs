@@ -1,7 +1,15 @@
 //! Hand-rolled micro-benchmark harness (criterion is not available in
 //! the offline vendor set). Warmup + timed iterations + summary stats;
 //! used by every `benches/*.rs` target (`harness = false`).
+//!
+//! Besides the human-readable table each harness prints, `BenchReport`
+//! writes a machine-readable `BENCH_<name>.json` (median ns, bytes
+//! touched, speedup vs the forced-scalar oracle, kernel backend) so the
+//! perf trajectory is tracked across PRs as data, not EXPERIMENTS.md
+//! prose. CI currently runs (and archives the JSON of) the spmv_micro
+//! and fused_gqa harnesses; the rest emit the same files on local runs.
 
+use crate::fmt::Json;
 use crate::util::{Stopwatch, Summary};
 
 /// Benchmark runner configuration.
@@ -88,6 +96,97 @@ pub fn print_normalized(title: &str, baseline: &BenchResult, components: &[&Benc
     }
 }
 
+/// Machine-readable summary for one bench target: a flat list of cases,
+/// each a small map of metric name → number/string. Written as
+/// `BENCH_<name>.json` into `MUSTAFAR_BENCH_JSON_DIR` (default: the
+/// working directory) so CI can archive the perf trajectory across PRs.
+pub struct BenchReport {
+    bench: String,
+    meta: Vec<(String, Json)>,
+    cases: Vec<Json>,
+}
+
+impl BenchReport {
+    /// Start a report for bench target `bench`. Records the selected
+    /// kernel backend and the smoke flag automatically — every consumer
+    /// of these files needs both to interpret the numbers.
+    pub fn new(bench: &str) -> BenchReport {
+        BenchReport {
+            bench: bench.to_string(),
+            meta: vec![
+                (
+                    "backend".to_string(),
+                    Json::str(crate::sparse::kernels().backend.name()),
+                ),
+                ("smoke".to_string(), Json::Bool(smoke_mode())),
+            ],
+            cases: Vec::new(),
+        }
+    }
+
+    /// Attach a report-level metadata field.
+    pub fn meta(&mut self, key: &str, value: Json) {
+        self.meta.push((key.to_string(), value));
+    }
+
+    /// Record one case as (field, value) pairs. Conventional fields:
+    /// `name`, `median_ns`, `bytes`, `speedup_vs_scalar`.
+    pub fn case(&mut self, fields: Vec<(&str, Json)>) {
+        self.cases.push(Json::obj(fields));
+    }
+
+    /// Shorthand for the common shape: a named timing with optional
+    /// bytes-touched and speedup-vs-scalar columns.
+    pub fn timing(
+        &mut self,
+        name: &str,
+        r: &BenchResult,
+        bytes: Option<usize>,
+        speedup: Option<f64>,
+    ) {
+        let mut fields = vec![
+            ("name", Json::str(name)),
+            ("median_ns", Json::num(r.median_us() * 1e3)),
+            ("iters", Json::num(r.us.n as f64)),
+        ];
+        if let Some(b) = bytes {
+            fields.push(("bytes", Json::num(b as f64)));
+        }
+        if let Some(s) = speedup {
+            fields.push(("speedup_vs_scalar", Json::num(s)));
+        }
+        self.case(fields);
+    }
+
+    /// Serialize to `BENCH_<name>.json` in `MUSTAFAR_BENCH_JSON_DIR`
+    /// (default: the working directory); returns the path written.
+    pub fn write(&self) -> std::io::Result<String> {
+        let dir = std::env::var("MUSTAFAR_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        self.write_to(&dir)
+    }
+
+    /// Serialize to `<dir>/BENCH_<name>.json`; returns the path written.
+    pub fn write_to(&self, dir: &str) -> std::io::Result<String> {
+        let path = format!("{dir}/BENCH_{}.json", self.bench);
+        let mut top = vec![("bench", Json::str(self.bench.as_str()))];
+        for (k, v) in &self.meta {
+            top.push((k.as_str(), v.clone()));
+        }
+        top.push(("cases", Json::Arr(self.cases.clone())));
+        std::fs::write(&path, Json::obj(top).to_pretty())?;
+        Ok(path)
+    }
+
+    /// `write`, logging the outcome instead of failing the bench run
+    /// (an unwritable directory should not kill a measurement).
+    pub fn write_or_warn(&self) {
+        match self.write() {
+            Ok(path) => println!("[bench-json] wrote {path}"),
+            Err(e) => eprintln!("[bench-json] could not write BENCH_{}.json: {e}", self.bench),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +200,34 @@ mod tests {
         );
         assert!(r.median_us() >= 1500.0, "{}", r.median_us());
         assert_eq!(r.us.n, 3);
+    }
+
+    #[test]
+    fn bench_report_roundtrips_through_json() {
+        let r = bench("fast", BenchOpts { warmup_iters: 0, iters: 2, min_time_s: 0.0 }, || {
+            std::hint::black_box(1 + 1);
+        });
+        let mut rep = BenchReport::new("unit_test");
+        rep.meta("sparsity", Json::num(0.5));
+        rep.timing("case_a", &r, Some(4096), Some(1.25));
+        let dir = std::env::temp_dir();
+        let path = rep.write_to(dir.to_str().unwrap()).unwrap();
+        assert!(path.ends_with("BENCH_unit_test.json"));
+
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "unit_test");
+        // backend name recorded for every report
+        let backend = parsed.get("backend").unwrap().as_str().unwrap().to_string();
+        assert_eq!(backend, crate::sparse::kernels().backend.name());
+        let cases = parsed.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").unwrap().as_str().unwrap(), "case_a");
+        assert!(cases[0].get("median_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(cases[0].get("bytes").unwrap().as_usize().unwrap(), 4096);
+        assert!(
+            (cases[0].get("speedup_vs_scalar").unwrap().as_f64().unwrap() - 1.25).abs() < 1e-9
+        );
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

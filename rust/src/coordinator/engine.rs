@@ -243,6 +243,28 @@ impl Engine {
                         }
                         // only the final suffix position's logits matter
                         let first = argmax(&scratch.logits);
+                        // Re-insert the extended state: the suffix rebuild
+                        // compressed fresh groups past the hit boundary, so
+                        // a lineage of ever-longer shared prompts gets an
+                        // ever-longer partial hit (plus a full entry for
+                        // exact repeats) instead of re-prefilling its new
+                        // tail forever. On success the sequence is promoted
+                        // onto the canonical (cache-charged) prefix and its
+                        // private group copies are dropped.
+                        let (snap, tk, tv) = kv.shareable_snapshot()?;
+                        let ev0 = self.prefix_cache.evictions;
+                        let canonical = self.prefix_cache.insert(
+                            &req.prompt,
+                            snap,
+                            &tk,
+                            &tv,
+                            first,
+                            &mut self.kvpool,
+                        );
+                        self.metrics.prefix_evictions += self.prefix_cache.evictions - ev0;
+                        if let Some(p) = canonical {
+                            kv.promote_prefix(p)?;
+                        }
                         (SeqState::Native(Box::new(kv)), first)
                     }
                     None => {
@@ -826,6 +848,46 @@ mod tests {
         assert_eq!(e.metrics.prefix_tokens_reused, 192);
         // only the suffix beyond the shared boundary was prefilled
         assert_eq!(e.metrics.prefill_tokens, 224 + (288 - 192));
+    }
+
+    #[test]
+    fn prefix_cache_partial_hits_extend_down_a_lineage() {
+        // Satellite acceptance: partial-hit sequences populate the cache
+        // too, so the *second* partial hit on an extended prompt reuses
+        // a longer prefix (previously only cold misses inserted, and a
+        // lineage of ever-longer prompts re-prefilled its new tail every
+        // time against the original boundary).
+        let mut e = tiny_engine(Backend::NativeSparse, (0.5, 0.5));
+        let base = reqs(1, 224, 4); // cold: boundary at 192
+        e.run_trace(base.clone()).unwrap();
+
+        let mut p2 = base[0].prompt.clone();
+        p2.extend((0..64).map(|i| (i * 3 % 300 + 20) as u16)); // 288 tokens
+        let run2 = e.run_trace(vec![Request::new(1, p2.clone(), 4)]).unwrap();
+        assert_eq!(e.metrics.prefix_partial_hits, 1);
+        assert_eq!(e.metrics.prefix_tokens_reused, 192);
+
+        // the partial-hit rebuild extends coverage to the 256 boundary
+        // ((288 - 32) rounded down to a group); the next prompt in the
+        // lineage must hit *that*, not the original 192.
+        let mut p3 = p2.clone();
+        p3.extend((0..64).map(|i| (i * 7 % 300 + 20) as u16)); // 352 tokens
+        e.run_trace(vec![Request::new(2, p3, 4)]).unwrap();
+        assert_eq!(e.metrics.prefix_partial_hits, 2);
+        assert_eq!(
+            e.metrics.prefix_tokens_reused,
+            192 + 256,
+            "second partial hit should cover the extended boundary"
+        );
+
+        // and an exact repeat of the partial-hit prompt is now a *full*
+        // hit that decodes token-identically to its first run
+        let again = e.run_trace(vec![Request::new(3, p2, 4)]).unwrap();
+        assert_eq!(e.metrics.prefix_full_hits, 1);
+        assert_eq!(again[0].tokens, run2[0].tokens, "full hit must be token-identical");
+
+        // accounting stays exact with promoted sequences in play
+        assert_eq!(e.pool_stats().live_bytes, e.prefix_cache().measured_bytes());
     }
 
     #[test]

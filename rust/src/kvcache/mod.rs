@@ -401,6 +401,82 @@ impl SequenceKV {
         self.prefix.as_ref()
     }
 
+    /// Snapshot this sequence's cacheable decomposition: a
+    /// `SharedPrefix` covering every compressed token — the current
+    /// shared prefix (if any) structurally concatenated with the private
+    /// compressed groups — plus clones of the per-head dense tails.
+    /// Under a token-local policy (`KvPolicy::prefix_shareable`) this is
+    /// byte-identical to what `build_shared_prefill` would produce for
+    /// the same tokens, which is what lets the engine insert *partial-
+    /// hit* sequences back into the prefix cache after their suffix
+    /// rebuild (previously only cold misses populated it). When no new
+    /// groups were compressed the existing prefix `Arc` is returned
+    /// as-is (no copy).
+    pub fn shareable_snapshot(&self) -> Result<(Arc<SharedPrefix>, Vec<Vec<u16>>, Vec<Vec<u16>>)> {
+        let tail_k: Vec<Vec<u16>> = self.heads.iter().map(|h| h.tail_k().to_vec()).collect();
+        let tail_v: Vec<Vec<u16>> = self.heads.iter().map(|h| h.tail_v().to_vec()).collect();
+        let comp_tokens = self.heads.first().map_or(0, |h| h.k_comp.tokens);
+        let prefix = match (&self.prefix, comp_tokens) {
+            (Some(p), 0) => Arc::clone(p),
+            (pfx, _) => {
+                let hd = self.hd;
+                let base = pfx.as_ref().map_or(0, |p| p.tokens);
+                let mut k = Vec::with_capacity(self.heads.len());
+                let mut v = Vec::with_capacity(self.heads.len());
+                for (idx, h) in self.heads.iter().enumerate() {
+                    let (mut km, mut vm) = match pfx {
+                        Some(p) => (p.k[idx].clone(), p.v[idx].clone()),
+                        None => (
+                            BitmapMatrix::empty(hd, PackAxis::Token),
+                            BitmapMatrix::empty(hd, PackAxis::Channel),
+                        ),
+                    };
+                    km.append_compressed(&h.k_comp)?;
+                    vm.append_compressed(&h.v_comp)?;
+                    k.push(km);
+                    v.push(vm);
+                }
+                Arc::new(SharedPrefix {
+                    n_layers: self.n_layers,
+                    n_kv: self.n_kv,
+                    hd,
+                    tokens: base + comp_tokens,
+                    k,
+                    v,
+                })
+            }
+        };
+        Ok((prefix, tail_k, tail_v))
+    }
+
+    /// Swap this sequence onto a shared prefix covering exactly its
+    /// current prefix plus all private compressed groups, dropping the
+    /// now-redundant private copies (the canonical pages are charged to
+    /// the prefix cache; see `shareable_snapshot`). Decode is
+    /// bit-identical before and after: the segmented attention walk over
+    /// `[prefix | private]` reproduces the merged tile stream exactly.
+    pub fn promote_prefix(&mut self, p: Arc<SharedPrefix>) -> Result<()> {
+        let comp_tokens = self.heads.first().map_or(0, |h| h.k_comp.tokens);
+        let covered = self.prefix.as_ref().map_or(0, |x| x.tokens) + comp_tokens;
+        let same_geom = p.n_layers == self.n_layers && p.n_kv == self.n_kv && p.hd == self.hd;
+        if p.tokens != covered || !same_geom {
+            return Err(Error::Shape(format!(
+                "promote_prefix: prefix covers {} tokens / geometry ({},{},{}), sequence has \
+                 {covered} compressed tokens / ({},{},{})",
+                p.tokens, p.n_layers, p.n_kv, p.hd, self.n_layers, self.n_kv, self.hd
+            )));
+        }
+        if p.tokens == 0 {
+            return Ok(());
+        }
+        for h in &mut self.heads {
+            h.k_comp = BitmapMatrix::empty(self.hd, PackAxis::Token);
+            h.v_comp = BitmapMatrix::empty(self.hd, PackAxis::Channel);
+        }
+        self.prefix = Some(p);
+        Ok(())
+    }
+
     #[inline]
     pub fn head(&self, layer: usize, kv: usize) -> &HeadKV {
         &self.heads[layer * self.n_kv + kv]
@@ -477,39 +553,35 @@ impl SequenceKV {
         // output-aware scores are a prefill-time notion.
         let kk_k = prune::keep_count(hd, sp.key_sparsity);
         let kk_v = prune::keep_count(hd, sp.value_sparsity);
-        // One widening scratch reused across heads: the only remaining
-        // group-boundary allocations are the pruned copies themselves
-        // (matching the seed's allocation envelope).
+        // Two widening scratches reused across heads; the group is
+        // widened, pruned, and (optionally) quantized *in place*, so a
+        // commit performs no per-head allocations — the former
+        // `kg.clone()` / pruned-copy per head every 64 tokens is gone.
         let mut kg = vec![0.0f32; TILE * hd];
         let mut vg = vec![0.0f32; TILE * hd];
         for idx in 0..self.heads.len() {
             // Widen the exiting group to f32 for pruning/quantization;
             // appending narrows back — a no-op for values already rounded
             // through f16 once.
-            let (mut kp, mut vp) = {
+            {
                 let h = &self.heads[idx];
                 f16::widen_into(&mut kg, &h.tail_k()[..TILE * hd]);
                 f16::widen_into(&mut vg, &h.tail_v()[..TILE * hd]);
-                let kp = if sp.key_method == Method::None {
-                    kg.clone()
-                } else {
-                    prune::per_token_magnitude(&kg, TILE, hd, kk_k)
-                };
-                let vp = if sp.value_method == Method::None {
-                    vg.clone()
-                } else {
-                    prune::per_token_magnitude(&vg, TILE, hd, kk_v)
-                };
-                (kp, vp)
-            };
+            }
+            if sp.key_method != Method::None {
+                prune::per_token_magnitude_inplace(&mut kg, TILE, hd, kk_k);
+            }
+            if sp.value_method != Method::None {
+                prune::per_token_magnitude_inplace(&mut vg, TILE, hd, kk_v);
+            }
             if let Some(q) = self.policy.quant {
                 let (kb, vb) = (q.key_bits, q.value_bits);
-                quant::kivi_fake_quant(&mut kp, TILE, hd, kb, quant::Axis::PerChannel, true);
-                quant::kivi_fake_quant(&mut vp, TILE, hd, vb, quant::Axis::PerToken, true);
+                quant::kivi_fake_quant(&mut kg, TILE, hd, kb, quant::Axis::PerChannel, true);
+                quant::kivi_fake_quant(&mut vg, TILE, hd, vb, quant::Axis::PerToken, true);
             }
             let h = &mut self.heads[idx];
-            h.k_comp.append_groups(&kp, TILE)?;
-            h.v_comp.append_groups(&vp, TILE)?;
+            h.k_comp.append_groups(&kg, TILE)?;
+            h.v_comp.append_groups(&vg, TILE)?;
             h.advance_tail(TILE * hd);
         }
         Ok(())
@@ -896,6 +968,74 @@ mod tests {
         let freed2 = seq.reprune(0.6, 0.6).unwrap();
         assert_eq!(freed2, 0);
         assert_eq!(seq.policy.sparsity.key_sparsity, 0.75);
+    }
+
+    #[test]
+    fn shareable_snapshot_merges_prefix_and_private_groups_bitexact() {
+        // A sequence that started from a shared prefix and compressed
+        // more groups through the decode path must snapshot to *exactly*
+        // the state a cold sequence over the same token stream holds —
+        // the identity the engine's partial-hit cache insert relies on.
+        let (l, kv, hd, t1) = (2, 1, 32, 160);
+        let policy = KvPolicy::mustafar(0.5, 0.5);
+        let k = rand_heads(l * kv, t1, hd, 80);
+        let v = rand_heads(l * kv, t1, hd, 81);
+
+        let mut cold = SequenceKV::new(policy, l, kv, hd).unwrap();
+        cold.ingest_prefill(&k, &v, t1, None).unwrap();
+
+        let (prefix, tk, tv) = build_shared_prefill(&policy, l, kv, hd, &k, &v, t1).unwrap();
+        assert!(prefix.tokens > 0);
+        let mut hot =
+            SequenceKV::restore_full(policy, std::sync::Arc::new(prefix), tk, tv, t1).unwrap();
+
+        // identical decode-path appends on both (enough to push private
+        // groups through compression on the hot sequence)
+        let mut rng = Pcg32::seeded(82);
+        for _ in 0..TAIL_CAP + 8 {
+            let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..l * kv)
+                .map(|_| {
+                    let kr: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+                    let vr: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+                    (kr, vr)
+                })
+                .collect();
+            for seq_ref in [&mut cold, &mut hot] {
+                for layer in 0..l {
+                    for h in 0..kv {
+                        let (kr, vr) = &rows[layer * kv + h];
+                        seq_ref.append(layer, h, kr, vr);
+                    }
+                }
+                seq_ref.commit_token().unwrap();
+            }
+        }
+        assert!(hot.head(0, 0).k_comp.tokens > 0, "no private groups compressed");
+
+        let (pa, tka, tva) = cold.shareable_snapshot().unwrap();
+        let (pb, tkb, tvb) = hot.shareable_snapshot().unwrap();
+        assert_eq!(pa.tokens, pb.tokens);
+        assert_eq!((tka, tva), (tkb, tvb), "tails diverged");
+        for idx in 0..l * kv {
+            assert_eq!(pa.k[idx], pb.k[idx], "merged K head {idx} diverged");
+            assert_eq!(pa.v[idx], pb.v[idx], "merged V head {idx} diverged");
+        }
+
+        // Promotion drops the private copies without changing the
+        // logical state, and shrinks the private footprint.
+        let before = hot.memory_bytes();
+        let private_before = hot.private_bytes();
+        let tokens_before = hot.tokens;
+        hot.promote_prefix(std::sync::Arc::clone(&pb)).unwrap();
+        assert_eq!(hot.tokens, tokens_before);
+        assert_eq!(hot.head(0, 0).k_comp.tokens, 0);
+        assert_eq!(hot.prefix().unwrap().tokens, pb.tokens);
+        assert_eq!(hot.memory_bytes(), before, "logical bytes must not change");
+        assert!(hot.private_bytes() < private_before);
+
+        // a stale (wrong-coverage) prefix is rejected loudly
+        let (short, _, _) = build_shared_prefill(&policy, l, kv, hd, &k, &v, t1).unwrap();
+        assert!(hot.promote_prefix(std::sync::Arc::new(short)).is_err());
     }
 
     #[test]

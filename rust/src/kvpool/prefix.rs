@@ -548,6 +548,48 @@ mod tests {
     }
 
     #[test]
+    fn partial_hit_lineage_gets_longer_hits() {
+        // Satellite acceptance: once partial-hit sequences re-insert
+        // their extended state (as the engine now does after the suffix
+        // rebuild), the *second* partial hit down a lineage of
+        // ever-longer prompts covers the extended boundary instead of
+        // re-prefilling the tail against the original one.
+        let mut c = PrefixCache::new(true);
+        let mut p = pool();
+        // cold insert: 160-token prompt, prefix boundary 128
+        let (prompt1, prefix1, tk1, tv1) = built(160, 33);
+        assert_eq!(prefix1.tokens, 128);
+        assert!(c.insert(&prompt1, Arc::clone(&prefix1), &tk1, &tv1, 1, &mut p).is_some());
+
+        // extended prompt: the first partial hit covers only 128
+        let (prompt2, prefix2, tk2, tv2) = built(224, 33);
+        assert_eq!(&prompt2[..160], &prompt1[..]);
+        match c.lookup(&prompt2, 32) {
+            Some(PrefixHit::Partial { prefix }) => assert_eq!(prefix.tokens, 128),
+            _ => panic!("expected partial hit"),
+        }
+        // ... after which the engine rebuilds the suffix and inserts the
+        // extended coverage ((224 - 32) rounded down to a group = 192)
+        assert_eq!(prefix2.tokens, 192);
+        assert!(c.insert(&prompt2, Arc::clone(&prefix2), &tk2, &tv2, 2, &mut p).is_some());
+
+        // a further-extended prompt now gets the *longer* prefix
+        let (prompt3, _, _, _) = built(288, 33);
+        assert_eq!(&prompt3[..224], &prompt2[..]);
+        match c.lookup(&prompt3, 32) {
+            Some(PrefixHit::Partial { prefix }) => {
+                assert_eq!(prefix.tokens, 192, "second partial hit should be longer");
+                assert!(Arc::ptr_eq(&prefix, &prefix2));
+            }
+            _ => panic!("expected partial hit"),
+        }
+        // and an exact repeat of the partial-hit prompt is a full hit
+        assert!(matches!(c.lookup(&prompt2, 32), Some(PrefixHit::Full { .. })));
+        // accounting stays exact with the lineage entries in place
+        assert_eq!(p.stats().live_bytes, c.measured_bytes());
+    }
+
+    #[test]
     fn disabled_cache_is_inert() {
         let mut c = PrefixCache::new(false);
         let mut p = pool();

@@ -1,6 +1,8 @@
-// Portable SIMD for the widening tile kernels (sparse::f16::simd) is
-// nightly-only; the `simd` cargo feature opts in, the default build stays
-// stable with the bit-identical scalar fallback.
+// Portable SIMD (sparse::f16::simd) is nightly-only; the `simd` cargo
+// feature opts in and folds into the runtime dispatch table
+// (sparse::dispatch) as just another tier. The default stable build
+// dispatches to std::arch AVX2/FMA/F16C kernels at runtime when the CPU
+// has them, with the bit-identical scalar oracle as the fallback.
 #![cfg_attr(feature = "simd", feature(portable_simd))]
 // Lint policy for the CI `cargo clippy -- -D warnings` gate. The allowed
 // lints are idioms this codebase uses on purpose: indexed loops mirror

@@ -2,10 +2,32 @@
 //! RMSNorm, SiLU. The native path exists for fast accuracy sweeps and as
 //! a numerics cross-check against the PJRT artifacts; the serving hot
 //! path's sparse attention lives in `sparse::spmv`.
+//!
+//! The matmul inner sweeps route through the runtime SIMD dispatch table
+//! (`sparse::dispatch`): the 4-way-unrolled axpy row update is one
+//! `axpy4` call per k-block, so the prefill hot loop reaches AVX2 on the
+//! default stable build. Per output element the dispatched sweep performs
+//! the identical operation order to the scalar oracle, so results are
+//! bit-for-bit independent of the selected tier.
+
+use crate::sparse::dispatch::{kernels, KernelTable};
 
 /// out[m x n] = x[m x k] @ w[k x n], row-major. Accumulates into zeroed
 /// output. Parallelizes over row blocks when the work is large enough.
 pub fn matmul(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    matmul_with(kernels(), x, m, k, w, n, out)
+}
+
+/// `matmul` through an explicit kernel table (dispatch parity tests).
+pub fn matmul_with(
+    kt: &KernelTable,
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), k * n);
     assert_eq!(out.len(), m * n);
@@ -13,7 +35,7 @@ pub fn matmul(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32
     let flops = 2 * m * k * n;
     let threads = crate::util::threads();
     if flops < 4_000_000 || threads <= 1 || m == 1 {
-        matmul_rows(x, m, k, w, n, out);
+        matmul_rows(kt, x, m, k, w, n, out);
         return;
     }
 
@@ -27,7 +49,7 @@ pub fn matmul(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32
             out_rest = rest;
             let xs = &x[r0 * k..(r0 + rows) * k];
             scope.spawn(move || {
-                matmul_rows(xs, rows, k, w, n, chunk);
+                matmul_rows(kt, xs, rows, k, w, n, chunk);
             });
             r0 += rows;
         }
@@ -35,31 +57,36 @@ pub fn matmul(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32
 }
 
 /// Single-threaded kernel: axpy form (sequential access on both w rows
-/// and the output row), 4-way unrolled over k.
-fn matmul_rows(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+/// and the output row), 4-way unrolled over k via the dispatched `axpy4`
+/// sweep.
+fn matmul_rows(
+    kt: &KernelTable,
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
     for r in 0..m {
         let xr = &x[r * k..(r + 1) * k];
         let or = &mut out[r * n..(r + 1) * n];
         or.iter_mut().for_each(|v| *v = 0.0);
         let mut kk = 0;
         while kk + 4 <= k {
-            let (a0, a1, a2, a3) = (xr[kk], xr[kk + 1], xr[kk + 2], xr[kk + 3]);
+            let a = [xr[kk], xr[kk + 1], xr[kk + 2], xr[kk + 3]];
             let w0 = &w[kk * n..(kk + 1) * n];
             let w1 = &w[(kk + 1) * n..(kk + 2) * n];
             let w2 = &w[(kk + 2) * n..(kk + 3) * n];
             let w3 = &w[(kk + 3) * n..(kk + 4) * n];
-            for c in 0..n {
-                or[c] += a0 * w0[c] + a1 * w1[c] + a2 * w2[c] + a3 * w3[c];
-            }
+            (kt.axpy4)(or, w0, w1, w2, w3, a);
             kk += 4;
         }
         while kk < k {
             let a = xr[kk];
             if a != 0.0 {
                 let wr = &w[kk * n..(kk + 1) * n];
-                for c in 0..n {
-                    or[c] += a * wr[c];
-                }
+                (kt.fma_f32)(or, wr, a);
             }
             kk += 1;
         }
@@ -130,6 +157,27 @@ mod tests {
         let want = naive_matmul(&x, m, k, &w, n);
         for (g, wv) in got.iter().zip(&want) {
             assert!((g - wv).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn matmul_dispatch_parity_all_backends() {
+        // Every dispatch tier must produce bit-identical matmul output
+        // (the axpy sweeps are element-wise, so vectorization cannot
+        // change per-element operation order). Covers the single- and
+        // multi-threaded paths plus ragged k/n remainders.
+        let sc = crate::sparse::dispatch::KernelTable::scalar();
+        let mut rng = Pcg32::seeded(23);
+        for kt in crate::sparse::dispatch::available() {
+            for &(m, k, n) in &[(1, 8, 8), (3, 7, 5), (17, 33, 9), (64, 64, 64), (256, 128, 128)] {
+                let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+                let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+                let mut a = vec![0.0f32; m * n];
+                let mut b = vec![0.0f32; m * n];
+                matmul_with(&kt, &x, m, k, &w, n, &mut a);
+                matmul_with(&sc, &x, m, k, &w, n, &mut b);
+                assert_eq!(a, b, "{:?} ({m},{k},{n})", kt.backend);
+            }
         }
     }
 

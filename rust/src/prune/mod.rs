@@ -9,7 +9,9 @@ pub mod semi;
 pub mod think;
 
 pub use per_channel::{per_channel_magnitude, per_channel_output_aware, CHANNEL_GROUP};
-pub use per_token::{per_token_magnitude, per_token_output_aware, select_top_per_row};
+pub use per_token::{
+    per_token_magnitude, per_token_magnitude_inplace, per_token_output_aware, select_top_per_row,
+};
 pub use semi::semi_24;
 pub use think::{structured_compression_rate, think_key, think_value};
 

@@ -52,6 +52,38 @@ pub fn per_token_magnitude(x: &[f32], tokens: usize, channels: usize, kk: usize)
     select_top_per_row(x, &score, tokens, channels, kk)
 }
 
+/// In-place `per_token_magnitude`: zero everything but the `kk`
+/// largest-|.| elements of each row. Bit-identical to the copying
+/// variant (same selection comparator incl. the lower-index tie-break),
+/// but allocation-free apart from one index scratch — the decode
+/// group-commit hot path (`SequenceKV::commit_token`) prunes its
+/// widened scratch directly instead of materializing a pruned copy per
+/// head every 64 tokens.
+pub fn per_token_magnitude_inplace(x: &mut [f32], tokens: usize, channels: usize, kk: usize) {
+    assert_eq!(x.len(), tokens * channels);
+    assert!(kk >= 1 && kk <= channels);
+    if kk == channels {
+        return;
+    }
+    let mut idx: Vec<u32> = Vec::with_capacity(channels);
+    for t in 0..tokens {
+        let r = &mut x[t * channels..(t + 1) * channels];
+        idx.clear();
+        idx.extend(0..channels as u32);
+        // same ordering as `select_top_per_row`: |x| desc, index asc
+        idx.select_nth_unstable_by(kk - 1, |&a, &b| {
+            r[b as usize]
+                .abs()
+                .partial_cmp(&r[a as usize].abs())
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for &c in &idx[kk..] {
+            r[c as usize] = 0.0;
+        }
+    }
+}
+
 /// Per-token *output-aware* Key pruning (Fig 3):
 /// `S = |K| ⊙ broadcast(Σ_w |Q_w|)`; keep the per-token top-kk by S.
 ///
@@ -113,6 +145,23 @@ mod tests {
         let q = vec![0.5, 0.1, 0.9, 0.2];
         let p = per_token_output_aware(&k, 1, 4, &q, 2);
         assert_eq!(p, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn inplace_matches_copying_variant_bitexact() {
+        let mut rng = Pcg32::seeded(5);
+        for &(t, d, kk) in &[(8, 32, 10), (3, 7, 1), (16, 64, 64), (1, 4, 2), (5, 100, 31)] {
+            let x: Vec<f32> = (0..t * d).map(|_| rng.normal_f32()).collect();
+            let want = per_token_magnitude(&x, t, d, kk);
+            let mut got = x.clone();
+            per_token_magnitude_inplace(&mut got, t, d, kk);
+            assert_eq!(got, want, "t={t} d={d} kk={kk}");
+        }
+        // ties resolve identically too
+        let x = vec![1.0f32, -1.0, 1.0, 1.0];
+        let mut got = x.clone();
+        per_token_magnitude_inplace(&mut got, 1, 4, 2);
+        assert_eq!(got, per_token_magnitude(&x, 1, 4, 2));
     }
 
     #[test]

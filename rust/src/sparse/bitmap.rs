@@ -189,6 +189,35 @@ impl BitmapMatrix {
         Ok(())
     }
 
+    /// Structurally append another compressed matrix's tiles (same axis
+    /// and channel geometry): bitmaps and padded value segments are
+    /// copied verbatim, offsets rebased. Because tile order is
+    /// append-friendly on both axes (App. C requirement (2)), the result
+    /// is byte-identical to compressing the concatenated dense rows in
+    /// one pass — the prefix-promotion path relies on this to merge
+    /// `[shared prefix | private groups]` without a decompress round
+    /// trip.
+    pub fn append_compressed(&mut self, other: &BitmapMatrix) -> Result<()> {
+        if other.axis != self.axis || other.channels != self.channels {
+            return Err(Error::Shape(format!(
+                "append_compressed: geometry mismatch ({:?}/{} vs {:?}/{})",
+                self.axis, self.channels, other.axis, other.channels
+            )));
+        }
+        if self.axis == PackAxis::Token && other.tokens % TILE != 0 {
+            return Err(Error::Shape(format!(
+                "append_compressed: other.tokens {} not a multiple of {TILE}",
+                other.tokens
+            )));
+        }
+        let base = *self.offsets.last().unwrap();
+        self.bitmaps.extend_from_slice(&other.bitmaps);
+        self.values.extend_from_slice(&other.values);
+        self.offsets.extend(other.offsets[1..].iter().map(|&o| base + o));
+        self.tokens += other.tokens;
+        Ok(())
+    }
+
     fn push_tile(&mut self, bitmap: u64, vals: &[u16]) {
         debug_assert_eq!(bitmap.count_ones() as usize, vals.len());
         self.bitmaps.push(bitmap);
@@ -442,6 +471,40 @@ mod tests {
             inc.append_groups(&dense[60 * d..], 40).unwrap();
             assert_eq!(inc, full, "d={d}");
         }
+    }
+
+    #[test]
+    fn append_compressed_equals_full_compress() {
+        // structural concat == one-pass compression, bit for bit
+        for &(axis, d) in &[
+            (PackAxis::Token, 32usize),
+            (PackAxis::Token, 64),
+            (PackAxis::Channel, 32),
+            (PackAxis::Channel, 96),
+            (PackAxis::Channel, 100),
+        ] {
+            let (ta, tb) = match axis {
+                PackAxis::Token => (128, 64),
+                PackAxis::Channel => (37, 21),
+            };
+            let dense = random_pruned(ta + tb, d, 0.4, 17 + d as u64);
+            let full = BitmapMatrix::compress(&dense, ta + tb, d, axis).unwrap();
+            let mut a = BitmapMatrix::compress(&dense[..ta * d], ta, d, axis).unwrap();
+            let b = BitmapMatrix::compress(&dense[ta * d..], tb, d, axis).unwrap();
+            a.append_compressed(&b).unwrap();
+            a.validate().unwrap();
+            assert_eq!(a, full, "{axis:?} d={d}");
+            // and onto an empty matrix it is the identity
+            let mut e = BitmapMatrix::empty(d, axis);
+            e.append_compressed(&full).unwrap();
+            assert_eq!(e, full, "{axis:?} d={d} from empty");
+        }
+        // geometry mismatches are loud
+        let m64 = BitmapMatrix::empty(64, PackAxis::Token);
+        let mut m32 = BitmapMatrix::empty(32, PackAxis::Token);
+        assert!(m32.append_compressed(&m64).is_err());
+        let chan = BitmapMatrix::empty(32, PackAxis::Channel);
+        assert!(m32.append_compressed(&chan).is_err());
     }
 
     #[test]

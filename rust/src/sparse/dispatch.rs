@@ -1,0 +1,736 @@
+//! Runtime SIMD dispatch for the decode and prefill hot kernels.
+//!
+//! The paper's throughput claim rests on the decode SpMV being
+//! memory-bound — which only holds if the compute side keeps up. Until
+//! this module existed the *default stable build* ran every tile FMA and
+//! every f16→f32 widening as scalar code: explicit SIMD lived exclusively
+//! behind the nightly-only `portable_simd` feature, so CI's stable gate
+//! and any stable-toolchain deployment shipped the slow path.
+//!
+//! This module detects CPU features **once at runtime**
+//! (`is_x86_feature_detected!`) and caches a table of kernel function
+//! pointers in a `OnceLock`. The surface is backend-shaped, not
+//! x86-shaped — every tier fills the same `KernelTable`:
+//!
+//! * `Backend::Scalar` — always compiled; the bit-exact parity oracle
+//!   every other tier is property-tested against.
+//! * `Backend::Avx2` — stable-Rust `std::arch` implementations behind
+//!   `#[target_feature(enable = "avx2,fma,f16c")]`, selected at runtime.
+//!   The f16→f32 widening uses hardware `_mm256_cvtph_ps` (one
+//!   instruction; bit-identical to the scalar multiply trick since both
+//!   are exact).
+//! * `Backend::Portable` — the nightly `std::simd` kernels (cargo
+//!   feature `simd`), folded into the same table as just another tier.
+//! * `Backend::Neon` — reserved aarch64 tier: the slot exists so NEON
+//!   kernels drop into the same table; until they land aarch64 serves
+//!   the scalar oracle.
+//!
+//! **Bit-exactness contract.** Every non-scalar kernel preserves the
+//! scalar oracle's *per-lane floating-point operation order*: tile FMAs
+//! stay separate mul-then-add (Rust never contracts, and the intrinsic
+//! paths use `_mm256_mul_ps` + `_mm256_add_ps`, not `_mm256_fmadd_ps`);
+//! dot products accumulate 8 stride-8 partial sums and combine them in
+//! one fixed order (`combine8`, shared by every tier). The dispatch
+//! parity tests therefore assert `==` on bits, not tolerance.
+//!
+//! Env overrides (testing / benchmarking):
+//! * `MUSTAFAR_FORCE_SCALAR=1` — pin the scalar oracle regardless of CPU.
+//! * `MUSTAFAR_SIMD=scalar|avx2|portable` — request one tier; a tier the
+//!   build or CPU cannot serve falls back to the scalar oracle (never
+//!   silently to a different SIMD tier).
+
+use std::sync::OnceLock;
+
+/// Which kernel tier a `KernelTable` routes to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Plain Rust loops — the bit-exact parity oracle.
+    Scalar,
+    /// Nightly `std::simd` (cargo feature `simd`).
+    Portable,
+    /// Stable `std::arch` AVX2 + FMA + F16C, runtime-detected.
+    Avx2,
+    /// Reserved aarch64 tier (kernels not yet implemented).
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Portable => "portable-simd",
+            Backend::Avx2 => "avx2+fma+f16c",
+            Backend::Neon => "neon",
+        }
+    }
+}
+
+/// Function-pointer table of the hot kernels. All entries obey the
+/// bit-exactness contract in the module docs; callers pick one table and
+/// thread it through a whole kernel invocation (`*_with` variants), so a
+/// single computation never mixes tiers.
+#[derive(Clone, Copy)]
+pub struct KernelTable {
+    pub backend: Backend,
+    /// `out[i] += widen(vals[i]) * w` — the 64-wide dense-tile sweep.
+    pub fma_f16: fn(&mut [f32], &[u16], f32),
+    /// `out[i] += buf[i] * w` — the expand-then-FMA sweep.
+    pub fma_f32: fn(&mut [f32], &[f32], f32),
+    /// `dst[i] = widen(src[i])` — bulk f16→f32 widening.
+    pub widen: fn(&mut [f32], &[u16]),
+    /// Stride-8 eight-accumulator dot product (combine order fixed by
+    /// `combine8`).
+    pub dot_f32: fn(&[f32], &[f32]) -> f32,
+    /// Same dot with an f16 row widened in-register.
+    pub dot_f16: fn(&[u16], &[f32]) -> f32,
+    /// `out[c] += a[0]*w0[c] + a[1]*w1[c] + a[2]*w2[c] + a[3]*w3[c]` —
+    /// the 4-way-unrolled matmul axpy sweep.
+    pub axpy4: fn(&mut [f32], &[f32], &[f32], &[f32], &[f32], [f32; 4]),
+}
+
+impl KernelTable {
+    /// The scalar oracle tier (always available).
+    pub fn scalar() -> KernelTable {
+        KernelTable {
+            backend: Backend::Scalar,
+            fma_f16: scalar::fma_f16,
+            fma_f32: scalar::fma_f32,
+            widen: scalar::widen,
+            dot_f32: scalar::dot_f32,
+            dot_f16: scalar::dot_f16,
+            axpy4: scalar::axpy4,
+        }
+    }
+
+    /// The AVX2+FMA+F16C tier, if this build targets x86-64 and the CPU
+    /// has the features.
+    #[cfg(target_arch = "x86_64")]
+    pub fn avx2() -> Option<KernelTable> {
+        x86::table()
+    }
+
+    /// The AVX2+FMA+F16C tier (never available off x86-64).
+    #[cfg(not(target_arch = "x86_64"))]
+    pub fn avx2() -> Option<KernelTable> {
+        None
+    }
+
+    /// The nightly portable-SIMD tier (cargo feature `simd`).
+    #[cfg(feature = "simd")]
+    pub fn portable() -> KernelTable {
+        portable::table()
+    }
+
+    /// The aarch64 NEON tier, once its kernels exist.
+    #[cfg(target_arch = "aarch64")]
+    pub fn neon() -> Option<KernelTable> {
+        neon::table()
+    }
+
+    /// The NEON tier (never available off aarch64).
+    #[cfg(not(target_arch = "aarch64"))]
+    pub fn neon() -> Option<KernelTable> {
+        None
+    }
+}
+
+/// Every tier available in this build on this CPU (scalar first). The
+/// dispatch parity tests run each kernel through all of these and assert
+/// bit-identical outputs.
+pub fn available() -> Vec<KernelTable> {
+    let mut v = vec![KernelTable::scalar()];
+    #[cfg(feature = "simd")]
+    v.push(KernelTable::portable());
+    if let Some(t) = KernelTable::avx2() {
+        v.push(t);
+    }
+    if let Some(t) = KernelTable::neon() {
+        v.push(t);
+    }
+    v
+}
+
+/// The process-wide dispatched table: detected once, cached forever.
+pub fn kernels() -> &'static KernelTable {
+    static TABLE: OnceLock<KernelTable> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        select(
+            std::env::var("MUSTAFAR_FORCE_SCALAR").ok().as_deref(),
+            std::env::var("MUSTAFAR_SIMD").ok().as_deref(),
+        )
+    })
+}
+
+/// Resolve the env overrides into a table (factored out of `kernels` so
+/// the override logic is testable without mutating process env).
+fn select(force_scalar: Option<&str>, request: Option<&str>) -> KernelTable {
+    if force_scalar.is_some_and(|v| !v.is_empty() && v != "0") {
+        return KernelTable::scalar();
+    }
+    match request {
+        Some("avx2") => KernelTable::avx2().unwrap_or_else(KernelTable::scalar),
+        Some("portable") => portable_or_scalar(),
+        Some("neon") => KernelTable::neon().unwrap_or_else(KernelTable::scalar),
+        Some("scalar") => KernelTable::scalar(),
+        Some(other) => {
+            // A typo'd tier silently running everything scalar would be
+            // the exact slowdown this module removes — say so once.
+            eprintln!(
+                "[mustafar] unknown MUSTAFAR_SIMD value {other:?}; \
+                 falling back to the scalar oracle"
+            );
+            KernelTable::scalar()
+        }
+        None => auto(),
+    }
+}
+
+/// Auto-detection order: hardware intrinsics first (F16C widening beats
+/// the portable multiply trick), then the portable tier if compiled in,
+/// then scalar.
+fn auto() -> KernelTable {
+    if let Some(t) = KernelTable::avx2() {
+        return t;
+    }
+    if let Some(t) = KernelTable::neon() {
+        return t;
+    }
+    portable_or_scalar()
+}
+
+#[cfg(feature = "simd")]
+fn portable_or_scalar() -> KernelTable {
+    KernelTable::portable()
+}
+
+#[cfg(not(feature = "simd"))]
+fn portable_or_scalar() -> KernelTable {
+    KernelTable::scalar()
+}
+
+/// The one fixed reduction order every tier's dot product ends with:
+/// eight stride-8 partial sums combined left to right, then the scalar
+/// remainder. Shared so the order cannot drift between tiers.
+#[inline(always)]
+pub(crate) fn combine8(l: [f32; 8], tail: f32) -> f32 {
+    ((((((l[0] + l[1]) + l[2]) + l[3]) + l[4]) + l[5]) + l[6]) + l[7] + tail
+}
+
+// ---------------------------------------------------------------------------
+// Scalar oracle tier.
+// ---------------------------------------------------------------------------
+
+pub mod scalar {
+    use super::combine8;
+    use crate::sparse::f16::f16_to_f32;
+
+    /// out[i] += widen(vals[i]) * w
+    pub fn fma_f16(out: &mut [f32], vals: &[u16], w: f32) {
+        debug_assert_eq!(out.len(), vals.len());
+        for (o, &v) in out.iter_mut().zip(vals) {
+            *o += f16_to_f32(v) * w;
+        }
+    }
+
+    /// out[i] += buf[i] * w
+    pub fn fma_f32(out: &mut [f32], buf: &[f32], w: f32) {
+        debug_assert_eq!(out.len(), buf.len());
+        for (o, &x) in out.iter_mut().zip(buf) {
+            *o += x * w;
+        }
+    }
+
+    /// dst[i] = widen(src[i])
+    pub fn widen(dst: &mut [f32], src: &[u16]) {
+        debug_assert_eq!(dst.len(), src.len());
+        for (d, &h) in dst.iter_mut().zip(src) {
+            *d = f16_to_f32(h);
+        }
+    }
+
+    #[inline]
+    fn dot8(widen_at: impl Fn(usize) -> f32, q: &[f32], n: usize) -> f32 {
+        let lim = n & !7;
+        let mut l = [0.0f32; 8];
+        let mut c = 0;
+        while c < lim {
+            for (i, li) in l.iter_mut().enumerate() {
+                *li += widen_at(c + i) * q[c + i];
+            }
+            c += 8;
+        }
+        let mut tail = 0.0f32;
+        while c < n {
+            tail += widen_at(c) * q[c];
+            c += 1;
+        }
+        combine8(l, tail)
+    }
+
+    /// Σ_i row[i]·q[i], eight stride-8 accumulators.
+    pub fn dot_f32(row: &[f32], q: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), q.len());
+        dot8(|i| row[i], q, row.len())
+    }
+
+    /// Σ_i widen(row[i])·q[i], eight stride-8 accumulators.
+    pub fn dot_f16(row: &[u16], q: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), q.len());
+        dot8(|i| f16_to_f32(row[i]), q, row.len())
+    }
+
+    /// out[c] += a[0]*w0[c] + a[1]*w1[c] + a[2]*w2[c] + a[3]*w3[c]
+    pub fn axpy4(out: &mut [f32], w0: &[f32], w1: &[f32], w2: &[f32], w3: &[f32], a: [f32; 4]) {
+        let n = out.len();
+        debug_assert!(w0.len() >= n && w1.len() >= n && w2.len() >= n && w3.len() >= n);
+        for c in 0..n {
+            out[c] += a[0] * w0[c] + a[1] * w1[c] + a[2] * w2[c] + a[3] * w3[c];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portable-SIMD tier (nightly `std::simd`, cargo feature `simd`).
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "simd")]
+mod portable {
+    use super::{combine8, scalar, Backend, KernelTable};
+    use crate::sparse::f16::simd::{widen as widen8, F32S, U16S, LANES};
+
+    pub fn table() -> KernelTable {
+        KernelTable {
+            backend: Backend::Portable,
+            fma_f16,
+            fma_f32,
+            widen,
+            dot_f32,
+            dot_f16,
+            axpy4,
+        }
+    }
+
+    fn fma_f16(out: &mut [f32], vals: &[u16], w: f32) {
+        debug_assert_eq!(out.len(), vals.len());
+        let wv = F32S::splat(w);
+        let mut oc = out.chunks_exact_mut(LANES);
+        let mut vc = vals.chunks_exact(LANES);
+        for (o, v) in (&mut oc).zip(&mut vc) {
+            let acc = F32S::from_slice(o) + widen8(U16S::from_slice(v)) * wv;
+            acc.copy_to_slice(o);
+        }
+        scalar::fma_f16(oc.into_remainder(), vc.remainder(), w);
+    }
+
+    fn fma_f32(out: &mut [f32], buf: &[f32], w: f32) {
+        debug_assert_eq!(out.len(), buf.len());
+        let wv = F32S::splat(w);
+        let mut oc = out.chunks_exact_mut(LANES);
+        let mut bc = buf.chunks_exact(LANES);
+        for (o, b) in (&mut oc).zip(&mut bc) {
+            let acc = F32S::from_slice(o) + F32S::from_slice(b) * wv;
+            acc.copy_to_slice(o);
+        }
+        scalar::fma_f32(oc.into_remainder(), bc.remainder(), w);
+    }
+
+    fn widen(dst: &mut [f32], src: &[u16]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let mut dc = dst.chunks_exact_mut(LANES);
+        let mut sc = src.chunks_exact(LANES);
+        for (d, s) in (&mut dc).zip(&mut sc) {
+            widen8(U16S::from_slice(s)).copy_to_slice(d);
+        }
+        scalar::widen(dc.into_remainder(), sc.remainder());
+    }
+
+    fn dot_f32(row: &[f32], q: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), q.len());
+        let n = row.len();
+        let lim = n & !(LANES - 1);
+        let mut vacc = F32S::splat(0.0);
+        let mut c = 0;
+        while c < lim {
+            vacc += F32S::from_slice(&row[c..c + LANES]) * F32S::from_slice(&q[c..c + LANES]);
+            c += LANES;
+        }
+        let mut tail = 0.0f32;
+        while c < n {
+            tail += row[c] * q[c];
+            c += 1;
+        }
+        combine8(vacc.to_array(), tail)
+    }
+
+    fn dot_f16(row: &[u16], q: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), q.len());
+        let n = row.len();
+        let lim = n & !(LANES - 1);
+        let mut vacc = F32S::splat(0.0);
+        let mut c = 0;
+        while c < lim {
+            let r = widen8(U16S::from_slice(&row[c..c + LANES]));
+            vacc += r * F32S::from_slice(&q[c..c + LANES]);
+            c += LANES;
+        }
+        let mut tail = 0.0f32;
+        while c < n {
+            tail += crate::sparse::f16::f16_to_f32(row[c]) * q[c];
+            c += 1;
+        }
+        combine8(vacc.to_array(), tail)
+    }
+
+    fn axpy4(out: &mut [f32], w0: &[f32], w1: &[f32], w2: &[f32], w3: &[f32], a: [f32; 4]) {
+        let n = out.len();
+        debug_assert!(w0.len() >= n && w1.len() >= n && w2.len() >= n && w3.len() >= n);
+        let (a0, a1, a2) = (F32S::splat(a[0]), F32S::splat(a[1]), F32S::splat(a[2]));
+        let a3 = F32S::splat(a[3]);
+        let lim = n & !(LANES - 1);
+        let mut c = 0;
+        while c < lim {
+            let mut t = a0 * F32S::from_slice(&w0[c..c + LANES]);
+            t += a1 * F32S::from_slice(&w1[c..c + LANES]);
+            t += a2 * F32S::from_slice(&w2[c..c + LANES]);
+            t += a3 * F32S::from_slice(&w3[c..c + LANES]);
+            let acc = F32S::from_slice(&out[c..c + LANES]) + t;
+            acc.copy_to_slice(&mut out[c..c + LANES]);
+            c += LANES;
+        }
+        scalar::axpy4(&mut out[c..], &w0[c..n], &w1[c..n], &w2[c..n], &w3[c..n], a);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stable x86-64 tier: AVX2 + FMA + F16C, runtime-detected.
+//
+// Every `unsafe fn` below is sound to call only on a CPU with those
+// features; the safe wrappers are placed into a table exclusively by
+// `table()`, which verifies them with `is_x86_feature_detected!` first.
+// The mul/add pairs are deliberately NOT fused into `_mm256_fmadd_ps`:
+// the scalar oracle rounds the product and the sum separately, and the
+// bit-exactness contract wins over the last ~10% of FLOPs (the kernels
+// are memory-bound regardless — that is the paper's whole argument).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{combine8, scalar, Backend, KernelTable};
+    use core::arch::x86_64::*;
+
+    pub fn table() -> Option<KernelTable> {
+        if is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+            && is_x86_feature_detected!("f16c")
+        {
+            Some(KernelTable {
+                backend: Backend::Avx2,
+                fma_f16,
+                fma_f32,
+                widen,
+                dot_f32,
+                dot_f16,
+                axpy4,
+            })
+        } else {
+            None
+        }
+    }
+
+    // Safe wrappers: sound because `table()` gated on runtime detection.
+
+    fn fma_f16(out: &mut [f32], vals: &[u16], w: f32) {
+        unsafe { fma_f16_impl(out, vals, w) }
+    }
+
+    fn fma_f32(out: &mut [f32], buf: &[f32], w: f32) {
+        unsafe { fma_f32_impl(out, buf, w) }
+    }
+
+    fn widen(dst: &mut [f32], src: &[u16]) {
+        unsafe { widen_impl(dst, src) }
+    }
+
+    fn dot_f32(row: &[f32], q: &[f32]) -> f32 {
+        unsafe { dot_f32_impl(row, q) }
+    }
+
+    fn dot_f16(row: &[u16], q: &[f32]) -> f32 {
+        unsafe { dot_f16_impl(row, q) }
+    }
+
+    fn axpy4(out: &mut [f32], w0: &[f32], w1: &[f32], w2: &[f32], w3: &[f32], a: [f32; 4]) {
+        unsafe { axpy4_impl(out, w0, w1, w2, w3, a) }
+    }
+
+    /// Load 8 packed binary16 and widen to 8 f32 (hardware F16C — exact,
+    /// hence bit-identical to the scalar multiply trick).
+    #[target_feature(enable = "avx2,fma,f16c")]
+    #[inline]
+    unsafe fn widen8(p: *const u16) -> __m256 {
+        _mm256_cvtph_ps(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    #[target_feature(enable = "avx2,fma,f16c")]
+    unsafe fn fma_f16_impl(out: &mut [f32], vals: &[u16], w: f32) {
+        debug_assert_eq!(out.len(), vals.len());
+        let n = out.len();
+        let wv = _mm256_set1_ps(w);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = widen8(vals.as_ptr().add(i));
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            let r = _mm256_add_ps(o, _mm256_mul_ps(v, wv));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        scalar::fma_f16(&mut out[i..], &vals[i..], w);
+    }
+
+    #[target_feature(enable = "avx2,fma,f16c")]
+    unsafe fn fma_f32_impl(out: &mut [f32], buf: &[f32], w: f32) {
+        debug_assert_eq!(out.len(), buf.len());
+        let n = out.len();
+        let wv = _mm256_set1_ps(w);
+        let mut i = 0;
+        while i + 8 <= n {
+            let b = _mm256_loadu_ps(buf.as_ptr().add(i));
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            let r = _mm256_add_ps(o, _mm256_mul_ps(b, wv));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        scalar::fma_f32(&mut out[i..], &buf[i..], w);
+    }
+
+    #[target_feature(enable = "avx2,fma,f16c")]
+    unsafe fn widen_impl(dst: &mut [f32], src: &[u16]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), widen8(src.as_ptr().add(i)));
+            i += 8;
+        }
+        scalar::widen(&mut dst[i..], &src[i..]);
+    }
+
+    #[target_feature(enable = "avx2,fma,f16c")]
+    unsafe fn dot_f32_impl(row: &[f32], q: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), q.len());
+        let n = row.len();
+        let lim = n & !7;
+        let mut vacc = _mm256_setzero_ps();
+        let mut c = 0;
+        while c < lim {
+            let r = _mm256_loadu_ps(row.as_ptr().add(c));
+            let qq = _mm256_loadu_ps(q.as_ptr().add(c));
+            vacc = _mm256_add_ps(vacc, _mm256_mul_ps(r, qq));
+            c += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), vacc);
+        let mut tail = 0.0f32;
+        while c < n {
+            tail += row[c] * q[c];
+            c += 1;
+        }
+        combine8(lanes, tail)
+    }
+
+    #[target_feature(enable = "avx2,fma,f16c")]
+    unsafe fn dot_f16_impl(row: &[u16], q: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), q.len());
+        let n = row.len();
+        let lim = n & !7;
+        let mut vacc = _mm256_setzero_ps();
+        let mut c = 0;
+        while c < lim {
+            let r = widen8(row.as_ptr().add(c));
+            let qq = _mm256_loadu_ps(q.as_ptr().add(c));
+            vacc = _mm256_add_ps(vacc, _mm256_mul_ps(r, qq));
+            c += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), vacc);
+        let mut tail = 0.0f32;
+        while c < n {
+            tail += crate::sparse::f16::f16_to_f32(row[c]) * q[c];
+            c += 1;
+        }
+        combine8(lanes, tail)
+    }
+
+    #[target_feature(enable = "avx2,fma,f16c")]
+    unsafe fn axpy4_impl(
+        out: &mut [f32],
+        w0: &[f32],
+        w1: &[f32],
+        w2: &[f32],
+        w3: &[f32],
+        a: [f32; 4],
+    ) {
+        let n = out.len();
+        debug_assert!(w0.len() >= n && w1.len() >= n && w2.len() >= n && w3.len() >= n);
+        let a0 = _mm256_set1_ps(a[0]);
+        let a1 = _mm256_set1_ps(a[1]);
+        let a2 = _mm256_set1_ps(a[2]);
+        let a3 = _mm256_set1_ps(a[3]);
+        let mut c = 0;
+        while c + 8 <= n {
+            let mut t = _mm256_mul_ps(a0, _mm256_loadu_ps(w0.as_ptr().add(c)));
+            t = _mm256_add_ps(t, _mm256_mul_ps(a1, _mm256_loadu_ps(w1.as_ptr().add(c))));
+            t = _mm256_add_ps(t, _mm256_mul_ps(a2, _mm256_loadu_ps(w2.as_ptr().add(c))));
+            t = _mm256_add_ps(t, _mm256_mul_ps(a3, _mm256_loadu_ps(w3.as_ptr().add(c))));
+            let o = _mm256_loadu_ps(out.as_ptr().add(c));
+            _mm256_storeu_ps(out.as_mut_ptr().add(c), _mm256_add_ps(o, t));
+            c += 8;
+        }
+        scalar::axpy4(&mut out[c..], &w0[c..n], &w1[c..n], &w2[c..n], &w3[c..n], a);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64 NEON tier (reserved).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::KernelTable;
+
+    /// NEON kernels have not been written yet; returning `None` routes
+    /// aarch64 through the scalar oracle while keeping the tier a
+    /// first-class member of the dispatch surface (the table shape and
+    /// the `MUSTAFAR_SIMD=neon` override already exist).
+    pub fn table() -> Option<KernelTable> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::f16::{f16_to_f32, f32_to_f16};
+    use crate::util::Pcg32;
+
+    fn non_scalar() -> Vec<KernelTable> {
+        available().into_iter().filter(|t| t.backend != Backend::Scalar).collect()
+    }
+
+    #[test]
+    fn force_scalar_env_wins() {
+        assert_eq!(select(Some("1"), None).backend, Backend::Scalar);
+        assert_eq!(select(Some("1"), Some("avx2")).backend, Backend::Scalar);
+        // unset / "0" / empty do not force
+        assert_eq!(select(Some("0"), Some("scalar")).backend, Backend::Scalar);
+        assert_eq!(select(None, Some("scalar")).backend, Backend::Scalar);
+    }
+
+    #[test]
+    fn unavailable_request_falls_back_to_scalar() {
+        // "neon" is never available on x86 builds, and unknown names
+        // must not silently pick a SIMD tier.
+        #[cfg(not(target_arch = "aarch64"))]
+        assert_eq!(select(None, Some("neon")).backend, Backend::Scalar);
+        assert_eq!(select(None, Some("bogus")).backend, Backend::Scalar);
+    }
+
+    #[test]
+    fn auto_selects_an_available_backend() {
+        let t = select(None, None);
+        assert!(
+            available().iter().any(|a| a.backend == t.backend),
+            "auto picked {:?} which is not in available()",
+            t.backend
+        );
+    }
+
+    #[test]
+    fn widen_parity_exhaustive_every_backend() {
+        // All 65536 binary16 patterns through every tier's bulk widen
+        // must match the scalar multiply trick bit for bit (NaNs must at
+        // least stay NaN — on x86 the payloads also agree, but the
+        // contract is only "both NaN").
+        for kt in non_scalar() {
+            let src: Vec<u16> = (0..=u16::MAX).collect();
+            let mut got = vec![0.0f32; src.len()];
+            (kt.widen)(&mut got, &src);
+            for (&h, &g) in src.iter().zip(&got) {
+                let want = f16_to_f32(h);
+                if want.is_nan() {
+                    assert!(g.is_nan(), "{:?} h={h:#06x}: {g} should be NaN", kt.backend);
+                } else {
+                    assert_eq!(
+                        g.to_bits(),
+                        want.to_bits(),
+                        "{:?} h={h:#06x}: {g} vs {want}",
+                        kt.backend
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_primitives_bitexact_every_backend_every_length() {
+        // Partial lengths (1..=130) cover the vector body, the scalar
+        // remainder, and the empty case for every primitive.
+        let sc = KernelTable::scalar();
+        let mut rng = Pcg32::seeded(9090);
+        for kt in non_scalar() {
+            for len in 0..=130usize {
+                let vals: Vec<u16> = (0..len).map(|_| f32_to_f16(rng.normal_f32())).collect();
+                let buf: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                let q: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                let acc0: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                let w = rng.normal_f32();
+
+                let mut a = acc0.clone();
+                let mut b = acc0.clone();
+                (kt.fma_f16)(&mut a, &vals, w);
+                (sc.fma_f16)(&mut b, &vals, w);
+                assert_eq!(a, b, "{:?} fma_f16 len {len}", kt.backend);
+
+                let mut a = acc0.clone();
+                let mut b = acc0.clone();
+                (kt.fma_f32)(&mut a, &buf, w);
+                (sc.fma_f32)(&mut b, &buf, w);
+                assert_eq!(a, b, "{:?} fma_f32 len {len}", kt.backend);
+
+                let mut a = vec![0.0f32; len];
+                let mut b = vec![0.0f32; len];
+                (kt.widen)(&mut a, &vals);
+                (sc.widen)(&mut b, &vals);
+                assert_eq!(a, b, "{:?} widen len {len}", kt.backend);
+
+                let da = (kt.dot_f32)(&buf, &q);
+                let db = (sc.dot_f32)(&buf, &q);
+                assert_eq!(da.to_bits(), db.to_bits(), "{:?} dot_f32 len {len}", kt.backend);
+
+                let da = (kt.dot_f16)(&vals, &q);
+                let db = (sc.dot_f16)(&vals, &q);
+                assert_eq!(da.to_bits(), db.to_bits(), "{:?} dot_f16 len {len}", kt.backend);
+
+                let w0: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                let w1: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                let w2: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                let w3: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                let ax = [rng.normal_f32(), rng.normal_f32(), rng.normal_f32(), rng.normal_f32()];
+                let mut a = acc0.clone();
+                let mut b = acc0.clone();
+                (kt.axpy4)(&mut a, &w0, &w1, &w2, &w3, ax);
+                (sc.axpy4)(&mut b, &w0, &w1, &w2, &w3, ax);
+                assert_eq!(a, b, "{:?} axpy4 len {len}", kt.backend);
+            }
+        }
+    }
+
+    #[test]
+    fn backend_names_are_stable() {
+        // bench JSON and CI logs key on these strings
+        assert_eq!(Backend::Scalar.name(), "scalar");
+        assert_eq!(Backend::Avx2.name(), "avx2+fma+f16c");
+        assert_eq!(Backend::Portable.name(), "portable-simd");
+        assert_eq!(Backend::Neon.name(), "neon");
+    }
+}

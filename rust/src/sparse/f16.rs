@@ -22,6 +22,8 @@
 //! scalar decode are bit-for-bit interchangeable (the kernels' parity
 //! tests rely on this).
 
+use crate::sparse::dispatch::KernelTable;
+
 /// 2^112 as f32 bits: rescales a half's exponent field, pre-shifted into
 /// f32 position, onto the f32 bias (`(254 - 15) << 23`).
 const WIDEN_SCALE_BITS: u32 = (254 - 15) << 23;
@@ -112,11 +114,12 @@ pub fn to_f32_vec(hs: &[u16]) -> Vec<f32> {
 
 /// Widen `src` into a caller-owned buffer (no allocation; lengths must
 /// match). The group-compression path reuses one scratch across heads.
+/// Routed through the runtime dispatch table (`sparse::dispatch`): on
+/// AVX2+F16C hardware this is one `_mm256_cvtph_ps` per 8 elements,
+/// bit-identical to the scalar multiply trick.
 pub fn widen_into(dst: &mut [f32], src: &[u16]) {
     assert_eq!(dst.len(), src.len());
-    for (d, &h) in dst.iter_mut().zip(src) {
-        *d = f16_to_f32(h);
-    }
+    (crate::sparse::dispatch::kernels().widen)(dst, src);
 }
 
 /// Round every element of `xs` through binary16 — the reference
@@ -135,9 +138,19 @@ pub fn extend_f16(dst: &mut Vec<u16>, xs: &[f32]) {
 /// baselines) or binary16 bits in a `u16` (the compressed region and the
 /// dense-tail storage). The dense MV kernels are generic over this so the
 /// same code serves full-precision prefill buffers and the f16 tail.
+///
+/// `dot` and `fma_row` pick the element type's entry in a dispatch
+/// `KernelTable`, so the generic dense kernels reach the runtime-selected
+/// SIMD tier without monomorphizing over the backend.
 pub trait KvElem: Copy {
     /// Widen to f32 (identity for f32, f16 decode for u16).
     fn widen(self) -> f32;
+
+    /// Dispatched Σ_i row[i]·q[i] (the dense-Key hot loop).
+    fn dot(kt: &KernelTable, row: &[Self], q: &[f32]) -> f32;
+
+    /// Dispatched out[i] += row[i]·w (the dense-Value hot loop).
+    fn fma_row(kt: &KernelTable, out: &mut [f32], row: &[Self], w: f32);
 }
 
 impl KvElem for f32 {
@@ -145,12 +158,32 @@ impl KvElem for f32 {
     fn widen(self) -> f32 {
         self
     }
+
+    #[inline(always)]
+    fn dot(kt: &KernelTable, row: &[f32], q: &[f32]) -> f32 {
+        (kt.dot_f32)(row, q)
+    }
+
+    #[inline(always)]
+    fn fma_row(kt: &KernelTable, out: &mut [f32], row: &[f32], w: f32) {
+        (kt.fma_f32)(out, row, w)
+    }
 }
 
 impl KvElem for u16 {
     #[inline(always)]
     fn widen(self) -> f32 {
         f16_to_f32(self)
+    }
+
+    #[inline(always)]
+    fn dot(kt: &KernelTable, row: &[u16], q: &[f32]) -> f32 {
+        (kt.dot_f16)(row, q)
+    }
+
+    #[inline(always)]
+    fn fma_row(kt: &KernelTable, out: &mut [f32], row: &[u16], w: f32) {
+        (kt.fma_f16)(out, row, w)
     }
 }
 

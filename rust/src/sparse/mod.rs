@@ -7,6 +7,9 @@
 //! * `f16` — hand-rolled f32↔binary16 conversion (round-to-nearest-even
 //!   narrowing, exact multiply-trick widening) plus the feature-gated
 //!   SIMD widening used by the tile kernels.
+//! * `dispatch` — runtime-detected SIMD kernel table (scalar oracle,
+//!   stable AVX2+FMA+F16C, nightly portable-SIMD, reserved NEON tier);
+//!   every hot kernel routes through it on the default stable build.
 //! * `spmv` — load-as-compressed/compute-as-dense matrix-vector products
 //!   for the two decode-phase attention MVs, plus dense baselines generic
 //!   over the stored element type (`KvElem`).
@@ -14,14 +17,18 @@
 //!   XLA/PJRT boundary (static shapes, f32 at the FFI surface).
 
 pub mod bitmap;
+pub mod dispatch;
 pub mod f16;
 pub mod pairs;
 pub mod spmv;
 
 pub use bitmap::{BitmapMatrix, PackAxis, PAD, TILE};
+pub use dispatch::{kernels, Backend, KernelTable};
 pub use f16::{f16_round, f16_to_f32, f32_to_f16, KvElem};
 pub use pairs::TokenPairs;
 pub use spmv::{
-    dense_key, dense_key_multi, dense_value, dense_value_multi, spmv_key, spmv_key_multi,
-    spmv_value, spmv_value_multi, MAX_GROUP,
+    dense_key, dense_key_multi, dense_key_multi_with, dense_key_with, dense_value,
+    dense_value_multi, dense_value_multi_with, dense_value_with, spmv_key, spmv_key_multi,
+    spmv_key_multi_with, spmv_key_with, spmv_value, spmv_value_multi, spmv_value_multi_with,
+    spmv_value_with, MAX_GROUP,
 };

@@ -15,82 +15,23 @@
 //! baseline role of Fig 6a. They are generic over `KvElem`, serving both
 //! full-precision prefill buffers (`f32`) and the f16 dense tail (`u16`).
 //!
-//! The 64-wide dense-tile and expand-then-FMA sweeps have explicit SIMD
-//! widening-FMA paths (`std::simd` behind the `simd` cargo feature,
-//! nightly only); the scalar fallback is always compiled and doubles as
-//! the parity oracle — per output element both paths perform the
-//! identical `acc += widen(v) * w`, and the f16 widening itself is exact,
-//! so SIMD and scalar results are bit-for-bit equal.
+//! The 64-wide dense-tile sweeps, the expand-then-FMA sweeps, and the
+//! dense-row dot/FMA loops all route through the **runtime dispatch
+//! table** (`sparse::dispatch`): the default stable build reaches
+//! AVX2+FMA+F16C intrinsics on hardware that has them, the nightly
+//! `simd` feature supplies the portable tier, and the scalar path — the
+//! bit-exact parity oracle — always exists. Every kernel has a `*_with`
+//! variant taking an explicit `KernelTable` so tests and benches can pin
+//! a tier; the plain names use the process-wide detected table.
 
 use super::bitmap::{BitmapMatrix, PackAxis, TILE};
+use super::dispatch::{kernels, KernelTable};
 use super::f16::{f16_to_f32, KvElem};
 
 // §Perf note: a byte-LUT decode (table of set-bit positions per byte) was
 // tried and REGRESSED ~4x vs the tzcnt bit-walk on this CPU (indirect
 // table loads + data-dependent inner loops beat by hardware tzcnt);
 // recorded in EXPERIMENTS.md §Perf iteration log.
-
-// ---------------------------------------------------------------------------
-// Tile sweep primitives (scalar fallback = SIMD parity oracle).
-// ---------------------------------------------------------------------------
-
-/// out[i] += widen(vals[i]) * w — the dense-tile fast path sweep.
-#[inline]
-fn fma_tile_f16_scalar(out: &mut [f32], vals: &[u16], w: f32) {
-    for (o, &v) in out.iter_mut().zip(vals) {
-        *o += f16_to_f32(v) * w;
-    }
-}
-
-/// out[i] += buf[i] * w — the expand-then-FMA sweep over a decoded tile.
-#[inline]
-fn fma_tile_f32_scalar(out: &mut [f32], buf: &[f32], w: f32) {
-    for (o, &x) in out.iter_mut().zip(buf) {
-        *o += x * w;
-    }
-}
-
-#[cfg(not(feature = "simd"))]
-#[inline(always)]
-fn fma_tile_f16(out: &mut [f32], vals: &[u16], w: f32) {
-    fma_tile_f16_scalar(out, vals, w)
-}
-
-#[cfg(not(feature = "simd"))]
-#[inline(always)]
-fn fma_tile_f32(out: &mut [f32], buf: &[f32], w: f32) {
-    fma_tile_f32_scalar(out, buf, w)
-}
-
-#[cfg(feature = "simd")]
-#[inline]
-fn fma_tile_f16(out: &mut [f32], vals: &[u16], w: f32) {
-    use super::f16::simd::{widen, F32S, U16S, LANES};
-    debug_assert_eq!(out.len(), vals.len());
-    let wv = F32S::splat(w);
-    let mut oc = out.chunks_exact_mut(LANES);
-    let mut vc = vals.chunks_exact(LANES);
-    for (o, v) in (&mut oc).zip(&mut vc) {
-        let acc = F32S::from_slice(o) + widen(U16S::from_slice(v)) * wv;
-        acc.copy_to_slice(o);
-    }
-    fma_tile_f16_scalar(oc.into_remainder(), vc.remainder(), w);
-}
-
-#[cfg(feature = "simd")]
-#[inline]
-fn fma_tile_f32(out: &mut [f32], buf: &[f32], w: f32) {
-    use super::f16::simd::{F32S, LANES};
-    debug_assert_eq!(out.len(), buf.len());
-    let wv = F32S::splat(w);
-    let mut oc = out.chunks_exact_mut(LANES);
-    let mut bc = buf.chunks_exact(LANES);
-    for (o, b) in (&mut oc).zip(&mut bc) {
-        let acc = F32S::from_slice(o) + F32S::from_slice(b) * wv;
-        acc.copy_to_slice(o);
-    }
-    fma_tile_f32_scalar(oc.into_remainder(), bc.remainder(), w);
-}
 
 // ---------------------------------------------------------------------------
 // Single-query kernels.
@@ -101,6 +42,11 @@ fn fma_tile_f32(out: &mut [f32], buf: &[f32], w: f32) {
 /// `scores` must have length `k.tokens` and is *accumulated into* (callers
 /// zero it or seed it with the local-window contribution separately).
 pub fn spmv_key(k: &BitmapMatrix, q: &[f32], scores: &mut [f32]) {
+    spmv_key_with(kernels(), k, q, scores)
+}
+
+/// `spmv_key` through an explicit kernel table.
+pub fn spmv_key_with(kt: &KernelTable, k: &BitmapMatrix, q: &[f32], scores: &mut [f32]) {
     assert_eq!(k.axis, PackAxis::Token, "key cache must be token-packed");
     assert_eq!(q.len(), k.channels);
     assert_eq!(scores.len(), k.tokens);
@@ -122,7 +68,7 @@ pub fn spmv_key(k: &BitmapMatrix, q: &[f32], scores: &mut [f32]) {
             let mut off = k.offsets[ti] as usize;
             if bits == u64::MAX {
                 // dense tile fast path: one 64-wide widening FMA
-                fma_tile_f16(out, &values[off..off + TILE], qc);
+                (kt.fma_f16)(out, &values[off..off + TILE], qc);
                 continue;
             }
             // bit-walk decode (tzcnt); bounds hoisted — `validate()`
@@ -145,6 +91,11 @@ pub fn spmv_key(k: &BitmapMatrix, q: &[f32], scores: &mut [f32]) {
 /// `out` must have length `v.channels` and is accumulated into. The
 /// trailing channel block may be partial (`channels % 64 != 0`).
 pub fn spmv_value(v: &BitmapMatrix, att: &[f32], out: &mut [f32]) {
+    spmv_value_with(kernels(), v, att, out)
+}
+
+/// `spmv_value` through an explicit kernel table.
+pub fn spmv_value_with(kt: &KernelTable, v: &BitmapMatrix, att: &[f32], out: &mut [f32]) {
     assert_eq!(v.axis, PackAxis::Channel, "value cache must be channel-packed");
     assert_eq!(att.len(), v.tokens);
     assert_eq!(out.len(), v.channels);
@@ -167,7 +118,7 @@ pub fn spmv_value(v: &BitmapMatrix, att: &[f32], out: &mut [f32]) {
             let out_block = &mut out[cb * TILE..(cb * TILE + TILE).min(d)];
             if bits == u64::MAX {
                 // only possible for full-width blocks
-                fma_tile_f16(out_block, &values[off..off + TILE], at);
+                (kt.fma_f16)(out_block, &values[off..off + TILE], at);
                 continue;
             }
             // expand-then-FMA ("compute-as-dense", Fig 8): scatter the
@@ -185,31 +136,9 @@ pub fn spmv_value(v: &BitmapMatrix, att: &[f32], out: &mut [f32]) {
                 }
             }
             let w = out_block.len();
-            fma_tile_f32(out_block, &buf[..w], at);
+            (kt.fma_f32)(out_block, &buf[..w], at);
         }
     }
-}
-
-/// 4-lane unrolled dot product — shared by the dense single- and
-/// multi-query MVs so their per-lane rounding is identical.
-#[inline]
-fn dot_unrolled<E: KvElem>(row: &[E], q: &[f32], channels: usize) -> f32 {
-    let mut acc = 0.0f32;
-    let mut c = 0;
-    let lim = channels & !3;
-    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    while c < lim {
-        a0 += row[c].widen() * q[c];
-        a1 += row[c + 1].widen() * q[c + 1];
-        a2 += row[c + 2].widen() * q[c + 2];
-        a3 += row[c + 3].widen() * q[c + 3];
-        c += 4;
-    }
-    while c < channels {
-        acc += row[c].widen() * q[c];
-        c += 1;
-    }
-    acc + a0 + a1 + a2 + a3
 }
 
 /// Dense MV baseline: scores[t] = Σ_c K[t,c]·q[c] (row-major K [T x D],
@@ -221,18 +150,42 @@ pub fn dense_key<E: KvElem>(
     q: &[f32],
     scores: &mut [f32],
 ) {
+    dense_key_with(kernels(), k, tokens, channels, q, scores)
+}
+
+/// `dense_key` through an explicit kernel table.
+pub fn dense_key_with<E: KvElem>(
+    kt: &KernelTable,
+    k: &[E],
+    tokens: usize,
+    channels: usize,
+    q: &[f32],
+    scores: &mut [f32],
+) {
     assert_eq!(k.len(), tokens * channels);
     assert_eq!(q.len(), channels);
     assert_eq!(scores.len(), tokens);
     for t in 0..tokens {
         let row = &k[t * channels..(t + 1) * channels];
-        scores[t] += dot_unrolled(row, q, channels);
+        scores[t] += E::dot(kt, row, q);
     }
 }
 
 /// Dense MV baseline: out[c] = Σ_t α[t]·V[t,c] (row-major V [T x D],
 /// f32 or stored-f16 elements).
 pub fn dense_value<E: KvElem>(
+    v: &[E],
+    tokens: usize,
+    channels: usize,
+    att: &[f32],
+    out: &mut [f32],
+) {
+    dense_value_with(kernels(), v, tokens, channels, att, out)
+}
+
+/// `dense_value` through an explicit kernel table.
+pub fn dense_value_with<E: KvElem>(
+    kt: &KernelTable,
     v: &[E],
     tokens: usize,
     channels: usize,
@@ -248,9 +201,7 @@ pub fn dense_value<E: KvElem>(
             continue;
         }
         let row = &v[t * channels..(t + 1) * channels];
-        for c in 0..channels {
-            out[c] += at * row[c].widen();
-        }
+        E::fma_row(kt, out, row, at);
     }
 }
 
@@ -277,6 +228,17 @@ pub const MAX_GROUP: usize = 16;
 /// Multi-query `spmv_key`: scores[l*tokens + t] += Σ_c K[t,c]·q[l*channels + c]
 /// for `g` query lanes, walking the compressed Key stream once.
 pub fn spmv_key_multi(k: &BitmapMatrix, qs: &[f32], g: usize, scores: &mut [f32]) {
+    spmv_key_multi_with(kernels(), k, qs, g, scores)
+}
+
+/// `spmv_key_multi` through an explicit kernel table.
+pub fn spmv_key_multi_with(
+    kt: &KernelTable,
+    k: &BitmapMatrix,
+    qs: &[f32],
+    g: usize,
+    scores: &mut [f32],
+) {
     assert_eq!(k.axis, PackAxis::Token, "key cache must be token-packed");
     assert!(g >= 1 && g <= MAX_GROUP, "group size {g} out of range");
     assert_eq!(qs.len(), g * k.channels);
@@ -304,7 +266,7 @@ pub fn spmv_key_multi(k: &BitmapMatrix, qs: &[f32], g: usize, scores: &mut [f32]
                 // dense tile fast path: per lane, one 64-wide widening FMA
                 for (l, &w) in qc[..g].iter().enumerate() {
                     let out = &mut scores[l * nt + base..l * nt + base + TILE];
-                    fma_tile_f16(out, &values[off..off + TILE], w);
+                    (kt.fma_f16)(out, &values[off..off + TILE], w);
                 }
                 continue;
             }
@@ -330,6 +292,17 @@ pub fn spmv_key_multi(k: &BitmapMatrix, qs: &[f32], g: usize, scores: &mut [f32]
 /// Each partial tile is scattered into a stack buffer once and then FMA'd
 /// into every lane (amortizing the decode across the GQA group).
 pub fn spmv_value_multi(v: &BitmapMatrix, att: &[f32], g: usize, out: &mut [f32]) {
+    spmv_value_multi_with(kernels(), v, att, g, out)
+}
+
+/// `spmv_value_multi` through an explicit kernel table.
+pub fn spmv_value_multi_with(
+    kt: &KernelTable,
+    v: &BitmapMatrix,
+    att: &[f32],
+    g: usize,
+    out: &mut [f32],
+) {
     assert_eq!(v.axis, PackAxis::Channel, "value cache must be channel-packed");
     assert!(g >= 1 && g <= MAX_GROUP, "group size {g} out of range");
     assert_eq!(att.len(), g * v.tokens);
@@ -365,7 +338,7 @@ pub fn spmv_value_multi(v: &BitmapMatrix, att: &[f32], g: usize, out: &mut [f32]
                         continue;
                     }
                     let ob = &mut out[l * d + blk.start..l * d + blk.end];
-                    fma_tile_f16(ob, seg, at);
+                    (kt.fma_f16)(ob, seg, at);
                 }
                 continue;
             }
@@ -386,7 +359,7 @@ pub fn spmv_value_multi(v: &BitmapMatrix, att: &[f32], g: usize, out: &mut [f32]
                     continue;
                 }
                 let ob = &mut out[l * d + blk.start..l * d + blk.end];
-                fma_tile_f32(ob, &buf[..width], at);
+                (kt.fma_f32)(ob, &buf[..width], at);
             }
         }
     }
@@ -402,6 +375,19 @@ pub fn dense_key_multi<E: KvElem>(
     g: usize,
     scores: &mut [f32],
 ) {
+    dense_key_multi_with(kernels(), k, tokens, channels, qs, g, scores)
+}
+
+/// `dense_key_multi` through an explicit kernel table.
+pub fn dense_key_multi_with<E: KvElem>(
+    kt: &KernelTable,
+    k: &[E],
+    tokens: usize,
+    channels: usize,
+    qs: &[f32],
+    g: usize,
+    scores: &mut [f32],
+) {
     assert_eq!(k.len(), tokens * channels);
     assert!(g >= 1 && g <= MAX_GROUP, "group size {g} out of range");
     assert_eq!(qs.len(), g * channels);
@@ -410,7 +396,7 @@ pub fn dense_key_multi<E: KvElem>(
         let row = &k[t * channels..(t + 1) * channels];
         for l in 0..g {
             let q = &qs[l * channels..(l + 1) * channels];
-            scores[l * tokens + t] += dot_unrolled(row, q, channels);
+            scores[l * tokens + t] += E::dot(kt, row, q);
         }
     }
 }
@@ -418,6 +404,19 @@ pub fn dense_key_multi<E: KvElem>(
 /// Multi-query dense Value MV for the local-window tail: each V row is
 /// read once and accumulated into all `g` output lanes.
 pub fn dense_value_multi<E: KvElem>(
+    v: &[E],
+    tokens: usize,
+    channels: usize,
+    att: &[f32],
+    g: usize,
+    out: &mut [f32],
+) {
+    dense_value_multi_with(kernels(), v, tokens, channels, att, g, out)
+}
+
+/// `dense_value_multi` through an explicit kernel table.
+pub fn dense_value_multi_with<E: KvElem>(
+    kt: &KernelTable,
     v: &[E],
     tokens: usize,
     channels: usize,
@@ -437,9 +436,7 @@ pub fn dense_value_multi<E: KvElem>(
                 continue;
             }
             let ob = &mut out[l * channels..(l + 1) * channels];
-            for (o, &x) in ob.iter_mut().zip(row) {
-                *o += at * x.widen();
-            }
+            E::fma_row(kt, ob, row, at);
         }
     }
 }
@@ -447,6 +444,7 @@ pub fn dense_value_multi<E: KvElem>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::dispatch;
     use crate::sparse::f16::f16_round_vec as f16_ref;
     use crate::util::Pcg32;
 
@@ -675,30 +673,90 @@ mod tests {
         }
     }
 
+    /// Satellite acceptance: every kernel through every available
+    /// dispatch tier (scalar oracle, portable-SIMD when the feature is
+    /// on, AVX2/F16C when the CPU has it) must produce bit-identical
+    /// outputs — across partial channel tiles (`head_dim = 32`), ragged
+    /// group counts, and `MAX_GROUP` lane chunking. The forced-scalar
+    /// env override is exercised by the CI leg that reruns the whole
+    /// suite under `MUSTAFAR_FORCE_SCALAR=1` (and by the unit tests on
+    /// `dispatch::select`).
     #[test]
-    fn tile_fma_dispatch_matches_scalar_bitexact() {
-        // The dispatched fma_tile_* (SIMD when the `simd` feature is on,
-        // scalar otherwise) must be bit-identical to the scalar oracle for
-        // every length, including non-multiples of the lane count.
-        let mut rng = Pcg32::seeded(8080);
-        for len in 1..=TILE {
-            let vals: Vec<u16> =
-                (0..len).map(|_| crate::sparse::f16::f32_to_f16(rng.normal_f32())).collect();
-            let buf: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
-            let acc0: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
-            let w = rng.normal_f32();
+    fn dispatch_parity_all_backends_all_kernels() {
+        let sc = dispatch::KernelTable::scalar();
+        let tiers: Vec<_> = dispatch::available()
+            .into_iter()
+            .filter(|t| t.backend != dispatch::Backend::Scalar)
+            .collect();
+        for kt in &tiers {
+            for seed in 0..8u64 {
+                let mut rng = Pcg32::seeded(seed + 7700);
+                // ragged group counts and partial channel tiles
+                let groups = 1 + rng.below(4) as usize;
+                let t = TILE * groups;
+                let d = [32usize, 64, 100, 128][rng.below(4) as usize];
+                let g = [1usize, 3, MAX_GROUP][rng.below(3) as usize];
+                let keep = if seed % 4 == 0 { 1.0 } else { 0.1 + 0.8 * rng.unit_f32() };
+                let dense = random_pruned(t, d, keep, seed + 7800);
+                let qs: Vec<f32> = (0..g * d).map(|_| rng.normal_f32()).collect();
+                let att: Vec<f32> = (0..g * t)
+                    .map(|i| if i % 9 == 0 { 0.0 } else { rng.unit_f32() })
+                    .collect();
+                let tail: Vec<u16> =
+                    (0..t * d).map(|_| crate::sparse::f16::f32_to_f16(rng.normal_f32())).collect();
 
-            let mut a = acc0.clone();
-            let mut b = acc0.clone();
-            fma_tile_f16(&mut a, &vals, w);
-            fma_tile_f16_scalar(&mut b, &vals, w);
-            assert_eq!(a, b, "f16 len {len}");
+                let km = BitmapMatrix::compress(&dense, t, d, PackAxis::Token).unwrap();
+                let vm = BitmapMatrix::compress(&dense, t, d, PackAxis::Channel).unwrap();
+                let ctx = format!("{:?} seed {seed} t={t} d={d} g={g}", kt.backend);
 
-            let mut a = acc0.clone();
-            let mut b = acc0;
-            fma_tile_f32(&mut a, &buf, w);
-            fma_tile_f32_scalar(&mut b, &buf, w);
-            assert_eq!(a, b, "f32 len {len}");
+                let mut a = vec![0.0f32; t];
+                let mut b = vec![0.0f32; t];
+                spmv_key_with(kt, &km, &qs[..d], &mut a);
+                spmv_key_with(&sc, &km, &qs[..d], &mut b);
+                assert_eq!(a, b, "spmv_key {ctx}");
+
+                let mut a = vec![0.0f32; d];
+                let mut b = vec![0.0f32; d];
+                spmv_value_with(kt, &vm, &att[..t], &mut a);
+                spmv_value_with(&sc, &vm, &att[..t], &mut b);
+                assert_eq!(a, b, "spmv_value {ctx}");
+
+                let mut a = vec![0.0f32; g * t];
+                let mut b = vec![0.0f32; g * t];
+                spmv_key_multi_with(kt, &km, &qs, g, &mut a);
+                spmv_key_multi_with(&sc, &km, &qs, g, &mut b);
+                assert_eq!(a, b, "spmv_key_multi {ctx}");
+
+                let mut a = vec![0.0f32; g * d];
+                let mut b = vec![0.0f32; g * d];
+                spmv_value_multi_with(kt, &vm, &att, g, &mut a);
+                spmv_value_multi_with(&sc, &vm, &att, g, &mut b);
+                assert_eq!(a, b, "spmv_value_multi {ctx}");
+
+                let mut a = vec![0.0f32; t];
+                let mut b = vec![0.0f32; t];
+                dense_key_with(kt, &tail, t, d, &qs[..d], &mut a);
+                dense_key_with(&sc, &tail, t, d, &qs[..d], &mut b);
+                assert_eq!(a, b, "dense_key(u16) {ctx}");
+
+                let mut a = vec![0.0f32; d];
+                let mut b = vec![0.0f32; d];
+                dense_value_with(kt, &dense, t, d, &att[..t], &mut a);
+                dense_value_with(&sc, &dense, t, d, &att[..t], &mut b);
+                assert_eq!(a, b, "dense_value(f32) {ctx}");
+
+                let mut a = vec![0.0f32; g * t];
+                let mut b = vec![0.0f32; g * t];
+                dense_key_multi_with(kt, &dense, t, d, &qs, g, &mut a);
+                dense_key_multi_with(&sc, &dense, t, d, &qs, g, &mut b);
+                assert_eq!(a, b, "dense_key_multi(f32) {ctx}");
+
+                let mut a = vec![0.0f32; g * d];
+                let mut b = vec![0.0f32; g * d];
+                dense_value_multi_with(kt, &tail, t, d, &att, g, &mut a);
+                dense_value_multi_with(&sc, &tail, t, d, &att, g, &mut b);
+                assert_eq!(a, b, "dense_value_multi(u16) {ctx}");
+            }
         }
     }
 }
