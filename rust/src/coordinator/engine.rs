@@ -11,6 +11,15 @@
 //! ladder runs — evict idle prefix pages, re-prune the coldest resident
 //! sequences to a higher sparsity tier, preempt the youngest sequence
 //! back onto the queue — before anything is rejected.
+//!
+//! Request lifetime is cancellable end to end: `cancel` removes a
+//! request from the queue or drops its sequence from the active batch
+//! and releases its pool pages immediately (shared prefixes decref
+//! without freeing cache-charged pages), so a disconnected client stops
+//! costing the pool the moment the server notices — instead of decoding
+//! to completion while the pressure ladder re-prunes or preempts *live*
+//! requests to make room. `fail_inflight` is the companion for engine
+//! errors: every waiter is answered, none hang.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -121,8 +130,19 @@ impl Engine {
     }
 
     /// Submit a request to the admission queue (stamping its submission
-    /// time, the base of `Completion::queue_ms`).
+    /// time, the base of `Completion::queue_ms`). Rejects empty
+    /// prompts and out-of-vocab token ids here, at the boundary:
+    /// either would otherwise panic the engine thread inside the
+    /// forward pass (`prefill` slices `(t - 1) * d..`; `Tensor::row`
+    /// asserts the embedding index) — remotely triggerable hangs of
+    /// every waiter that the `fail_inflight` error path cannot catch,
+    /// since they are panics rather than `Err`s.
     pub fn submit(&mut self, req: Request) -> bool {
+        let vocab = self.model.cfg().vocab;
+        if req.prompt.is_empty() || req.prompt.iter().any(|&t| t as usize >= vocab) {
+            self.metrics.rejected += 1;
+            return false;
+        }
         let mut req = req;
         req.submitted = Instant::now();
         let ok = self.scheduler.submit(req);
@@ -149,9 +169,26 @@ impl Engine {
     }
 
     /// Drive a whole trace to completion and return the completions.
+    /// A request `submit` refuses (queue cap, impossible budget,
+    /// out-of-vocab tokens) still gets a Rejected completion — the
+    /// same answer the server gives — so callers' completion counts
+    /// keep the full trace as their denominator instead of requests
+    /// silently vanishing.
     pub fn run_trace(&mut self, reqs: Vec<Request>) -> Result<Vec<Completion>> {
         for r in reqs {
-            self.submit(r);
+            let (id, route) = (r.id, r.route);
+            if !self.submit(r) {
+                // stamp now, not the request's construction time: the
+                // rejection was instant, and accepted requests have
+                // their `submitted` reset by submit() the same way
+                self.completions.push(Completion::queued(
+                    id,
+                    route,
+                    Instant::now(),
+                    FinishReason::Rejected,
+                    None,
+                ));
+            }
         }
         while !self.idle() {
             self.step()?;
@@ -191,7 +228,22 @@ impl Engine {
                 }
             }
             let req = self.scheduler.pop_front().expect("peeked head vanished");
-            self.start_request(req)?;
+            let (id, route, submitted) = (req.id, req.route, req.submitted);
+            if let Err(e) = self.start_request(req) {
+                // The popped request must not vanish into the error: its
+                // waiter gets an Error finish (nobody hangs), then the
+                // step error still propagates so the server can fail the
+                // rest of the batch too.
+                self.metrics.failed += 1;
+                self.completions.push(Completion::queued(
+                    id,
+                    route,
+                    submitted,
+                    FinishReason::Error,
+                    Some(e.to_string()),
+                ));
+                return Err(e);
+            }
         }
         Ok(())
     }
@@ -335,16 +387,19 @@ impl Engine {
                 self.kvpool.release(owner);
                 self.metrics.rejected += 1;
                 self.metrics.rejected_capacity += 1;
-                self.completions.push(Completion {
-                    id: req.id,
-                    tokens: Vec::new(),
-                    finish: FinishReason::Rejected,
-                    queue_ms,
-                    prefill_ms,
-                    decode_ms: 0.0,
-                    kv_bytes: 0,
-                    kv_dense_bytes: 0,
-                });
+                // shared constructor, with the two timings this path
+                // knows more precisely (admission-stamped queue time
+                // and the prefill that ran before the reject)
+                let mut c = Completion::queued(
+                    req.id,
+                    req.route,
+                    req.submitted,
+                    FinishReason::Rejected,
+                    None,
+                );
+                c.queue_ms = queue_ms;
+                c.prefill_ms = prefill_ms;
+                self.completions.push(c);
                 return Ok(());
             }
         }
@@ -520,16 +575,25 @@ impl Engine {
     fn reject_finish(&mut self, s: ActiveSeq) {
         self.metrics.rejected += 1;
         self.metrics.rejected_capacity += 1;
-        self.completions.push(Completion {
-            id: s.req.id,
-            tokens: s.generated,
-            finish: FinishReason::Rejected,
-            queue_ms: s.queue_ms,
-            prefill_ms: s.prefill_ms,
-            decode_ms: s.decode_start.elapsed().as_secs_f64() * 1e3,
-            kv_bytes: 0,
-            kv_dense_bytes: 0,
-        });
+        self.completions.push(s.into_completion(FinishReason::Rejected, None, (0, 0)));
+    }
+
+    /// (compressed, dense-equivalent) KV bytes a sequence state holds.
+    fn seq_kv_bytes(&self, state: &SeqState) -> (usize, usize) {
+        match state {
+            SeqState::Native(kv) => kv.memory_bytes(),
+            SeqState::Pjrt(seq) => {
+                self.pjrt.as_ref().map(|p| p.seq_memory_bytes(seq)).unwrap_or((0, 0))
+            }
+        }
+    }
+
+    /// Fold a retiring sequence's footprint into the peak metrics —
+    /// every exit path (finish, cancel, fail) must do this, or
+    /// cancel-heavy runs under-report the memory the pool really held.
+    fn note_kv_peaks(&mut self, kv: (usize, usize)) {
+        self.metrics.peak_kv_bytes = self.metrics.peak_kv_bytes.max(kv.0);
+        self.metrics.peak_kv_dense_bytes = self.metrics.peak_kv_dense_bytes.max(kv.1);
     }
 
     fn seq_finished(&self, s: &ActiveSeq) -> bool {
@@ -578,10 +642,16 @@ impl Engine {
                     let model = Arc::clone(&self.model);
                     self.active.iter_mut().map(|s| decode_one_native(&model, s)).collect()
                 };
+                // count each token as it lands: a mid-batch decode error
+                // propagates with the earlier sequences' new tokens
+                // already in `generated`, and `fail_inflight` will carry
+                // them in Error completions — the `generated_tokens ==
+                // Σ completion lengths` invariant must include them
                 for (s, r) in self.active.iter_mut().zip(results) {
                     let tok = r?;
                     s.generated.push(tok);
                     s.pos += 1;
+                    self.metrics.generated_tokens += 1;
                 }
             }
             Backend::PjrtDense | Backend::PjrtSparse => {
@@ -592,10 +662,10 @@ impl Engine {
                     let logits = pj.decode(seq, last, s.pos)?;
                     s.generated.push(argmax(&logits));
                     s.pos += 1;
+                    self.metrics.generated_tokens += 1;
                 }
             }
         }
-        self.metrics.generated_tokens += self.active.len();
 
         // retire finished sequences
         let mut i = 0;
@@ -612,17 +682,8 @@ impl Engine {
 
     fn finish(&mut self, s: ActiveSeq) {
         self.kvpool.release(s.owner);
-        let (kv_bytes, kv_dense) = match &s.state {
-            SeqState::Native(kv) => kv.memory_bytes(),
-            SeqState::Pjrt(seq) => self
-                .pjrt
-                .as_ref()
-                .map(|p| p.seq_memory_bytes(seq))
-                .unwrap_or((0, 0)),
-        };
-        self.metrics.peak_kv_bytes = self.metrics.peak_kv_bytes.max(kv_bytes);
-        self.metrics.peak_kv_dense_bytes = self.metrics.peak_kv_dense_bytes.max(kv_dense);
-        let decode_ms = s.decode_start.elapsed().as_secs_f64() * 1e3;
+        let kv = self.seq_kv_bytes(&s.state);
+        self.note_kv_peaks(kv);
         // end-to-end latency from submission (includes queue time)
         let total_ms = s.req.submitted.elapsed().as_secs_f64() * 1e3;
         self.metrics.request_ms.push(total_ms);
@@ -638,16 +699,101 @@ impl Engine {
         } else {
             FinishReason::Length
         };
-        self.completions.push(Completion {
-            id: s.req.id,
-            tokens: s.generated,
-            finish,
-            queue_ms: s.queue_ms,
-            prefill_ms: s.prefill_ms,
-            decode_ms,
-            kv_bytes,
-            kv_dense_bytes: kv_dense,
-        });
+        self.completions.push(s.into_completion(finish, None, kv));
+    }
+
+    /// Cancel a request anywhere in its lifetime, keyed by
+    /// `Request::route`. A queued request (including one a preemption
+    /// put back at the head — it must not be resurrected by
+    /// `requeue_front`) is removed from the scheduler; an active
+    /// sequence is dropped from the batch mid-round and its pool pages
+    /// are released *immediately* — private compressed regions and
+    /// dense tails are freed, while a refcounted shared prefix is only
+    /// decref'd (dropping the `Arc`), leaving the cache-charged pages
+    /// resident for other sequences but unpinned for LRU eviction.
+    ///
+    /// Emits a `FinishReason::Cancelled` completion carrying whatever
+    /// tokens were generated (keeping the `generated_tokens == Σ
+    /// completion lengths` invariant). Returns false when the request
+    /// is not in flight — a cancel racing the natural completion is a
+    /// no-op, so the client is answered exactly once.
+    pub fn cancel(&mut self, route: u64) -> bool {
+        if let Some(req) = self.scheduler.remove_by_id(route) {
+            self.metrics.cancelled += 1;
+            self.completions.push(Completion::queued(
+                req.id,
+                req.route,
+                req.submitted,
+                FinishReason::Cancelled,
+                None,
+            ));
+            return true;
+        }
+        let Some(idx) = self.active.iter().position(|s| s.req.route == route) else {
+            return false;
+        };
+        let s = self.active.swap_remove(idx);
+        let kv = self.seq_kv_bytes(&s.state);
+        self.note_kv_peaks(kv);
+        let freed = self.kvpool.release(s.owner);
+        self.metrics.cancelled += 1;
+        self.metrics.cancelled_freed_bytes += freed;
+        // s.state drops inside into_completion: private buffers are
+        // gone (their pool charge was released above) and any shared
+        // prefix decrefs without freeing the cache-charged pages
+        self.completions.push(s.into_completion(FinishReason::Cancelled, None, kv));
+        true
+    }
+
+    /// Fail every in-flight request — queued and active — back to its
+    /// waiter with a `FinishReason::Error` completion carrying `err`,
+    /// releasing all held pool pages. The server calls this when
+    /// `step()` errors so no client hangs forever on a wedged batch;
+    /// the engine itself is left empty and can keep serving. Returns
+    /// how many requests were failed.
+    pub fn fail_inflight(&mut self, err: &str) -> usize {
+        let mut n = 0;
+        while let Some(req) = self.scheduler.pop_front() {
+            self.completions.push(Completion::queued(
+                req.id,
+                req.route,
+                req.submitted,
+                FinishReason::Error,
+                Some(err.to_string()),
+            ));
+            n += 1;
+        }
+        for s in std::mem::take(&mut self.active) {
+            let kv = self.seq_kv_bytes(&s.state);
+            self.note_kv_peaks(kv);
+            self.kvpool.release(s.owner);
+            self.completions
+                .push(s.into_completion(FinishReason::Error, Some(err.to_string()), kv));
+            n += 1;
+        }
+        self.metrics.failed += n;
+        n
+    }
+
+    /// Generated-token count of an in-flight request by routing key:
+    /// `Some(0)` while queued, `Some(n)` while active, `None` once
+    /// finished/cancelled (or never submitted). Drives disconnect
+    /// traces ("cancel after k tokens") and cancellation tests.
+    pub fn progress(&self, route: u64) -> Option<usize> {
+        if self.scheduler.contains(route) {
+            return Some(0);
+        }
+        self.active.iter().find(|s| s.req.route == route).map(|s| s.generated.len())
+    }
+
+    /// Number of sequences currently decoding (stats endpoint).
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Number of requests waiting in the admission queue.
+    pub fn queued_count(&self) -> usize {
+        self.scheduler.pending()
     }
 }
 
@@ -953,6 +1099,316 @@ mod tests {
             e.metrics.repruned,
             e.metrics.preempted
         );
+    }
+
+    /// Drive a disconnect trace: submit everything, then between steps
+    /// cancel each request whose `cancel_after` threshold its progress
+    /// has reached (`honor = false` replays the identical trace with
+    /// clients that never hang up — the baseline). Asserts exact pool
+    /// accounting around every step, so a cancel that failed to release
+    /// its pages (or released shared pages it didn't own) fails here.
+    fn run_with_disconnects(
+        e: &mut Engine,
+        trace: Vec<crate::workload::trace::TraceRequest>,
+        honor: bool,
+    ) -> Vec<Completion> {
+        let mut cancels: Vec<(u64, usize)> = trace
+            .iter()
+            .filter_map(|t| t.cancel_after.filter(|_| honor).map(|k| (t.id, k)))
+            .collect();
+        for t in trace {
+            assert!(e.submit(Request::new(t.id, t.prompt, t.max_new_tokens)), "submit rejected");
+        }
+        loop {
+            cancels.retain(|&(id, k)| match e.progress(id) {
+                Some(g) if g >= k => {
+                    assert!(e.cancel(id));
+                    false
+                }
+                Some(_) => true,
+                None => false, // finished before the client hung up
+            });
+            assert_eq!(
+                e.pool_stats().live_bytes,
+                e.measured_live_bytes(),
+                "cancel left the pool charge out of sync"
+            );
+            if e.idle() {
+                break;
+            }
+            e.step().unwrap();
+            assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+        }
+        e.take_completions()
+    }
+
+    #[test]
+    fn cancel_queued_and_active_requests_end_to_end() {
+        let mut e = tiny_engine(Backend::NativeSparse, (0.5, 0.5));
+        // max_batch = 4: four go active, the fifth waits in the queue
+        for r in reqs(5, 64, 64) {
+            assert!(e.submit(r));
+        }
+        e.step().unwrap();
+        assert_eq!(e.active_count(), 4);
+        assert_eq!(e.queued_count(), 1);
+        assert_eq!(e.progress(4), Some(0), "queued request reports zero progress");
+
+        // cancel the queued request: removed before it ever prefills
+        assert!(e.cancel(4));
+        assert_eq!(e.progress(4), None);
+        assert_eq!(e.queued_count(), 0);
+
+        // cancel an active request: its pages come back immediately
+        let live_before = e.pool_stats().live_bytes;
+        assert!(e.cancel(2));
+        assert!(e.pool_stats().live_bytes < live_before, "pages not released");
+        assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+        assert!(!e.cancel(2), "double cancel is a no-op");
+        assert!(e.metrics.cancelled_freed_bytes > 0);
+
+        let out = e.run_trace(Vec::new()).unwrap(); // drain the rest
+        assert_eq!(out.len(), 5, "every request answered exactly once");
+        for c in &out {
+            match c.id {
+                4 => {
+                    assert_eq!(c.finish, FinishReason::Cancelled);
+                    assert!(c.tokens.is_empty(), "queued cancel generated nothing");
+                }
+                2 => {
+                    assert_eq!(c.finish, FinishReason::Cancelled);
+                    assert!(!c.tokens.is_empty(), "active cancel keeps partial tokens");
+                    assert!(c.tokens.len() < 64);
+                }
+                _ => {
+                    assert_eq!(c.finish, FinishReason::Length);
+                    assert_eq!(c.tokens.len(), 64);
+                }
+            }
+        }
+        assert_eq!(e.metrics.cancelled, 2);
+        // invariant: generated tokens == Σ completion lengths, with
+        // cancelled completions carrying their partial output
+        let total: usize = out.iter().map(|c| c.tokens.len()).sum();
+        assert_eq!(e.metrics.generated_tokens, total);
+    }
+
+    #[test]
+    fn cancel_racing_completion_is_a_silent_noop() {
+        let mut e = tiny_engine(Backend::NativeDense, (0.0, 0.0));
+        let out = e.run_trace(reqs(1, 24, 4)).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(!e.cancel(0), "already answered");
+        assert!(e.take_completions().is_empty(), "no second completion");
+        assert_eq!(e.metrics.cancelled, 0);
+    }
+
+    #[test]
+    fn cancel_decrefs_shared_prefix_without_freeing_it() {
+        let mut e = tiny_engine(Backend::NativeSparse, (0.5, 0.5));
+        let r = reqs(1, 160, 48);
+        e.run_trace(r.clone()).unwrap(); // cold run populates the cache
+        let entries = e.prefix_cache().len();
+        let cache_bytes = e.prefix_cache().measured_bytes();
+        assert_eq!(e.prefix_cache().pinned_partial_entries(), 0);
+
+        // an identical prompt: full hit, the live sequence pins the
+        // shared prefix pages
+        assert!(e.submit(Request::new(9, r[0].prompt.clone(), 48)));
+        e.step().unwrap();
+        assert_eq!(e.metrics.prefix_full_hits, 1);
+        assert_eq!(e.prefix_cache().pinned_partial_entries(), 1);
+
+        // cancel mid-decode: the shared prefix must decref (unpin) but
+        // keep its cache-charged pages; only private state is freed
+        assert!(e.cancel(9));
+        assert_eq!(e.prefix_cache().pinned_partial_entries(), 0, "prefix not decref'd");
+        assert_eq!(e.prefix_cache().len(), entries, "cache entries must survive the cancel");
+        assert_eq!(e.prefix_cache().measured_bytes(), cache_bytes);
+        assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+        assert_eq!(
+            e.pool_stats().live_bytes,
+            cache_bytes,
+            "after the cancel only the cache is charged"
+        );
+        assert_eq!(e.metrics.cancelled, 1);
+    }
+
+    #[test]
+    fn cancelled_request_is_not_resurrected_by_preemption_requeue() {
+        // Over-budget setup forces preemption (the youngest goes back
+        // to the queue head); cancelling the re-queued victim must
+        // remove it for good — requeue_front never resurrects it.
+        let cfg = tiny_model_cfg(2, 1, 32);
+        let policy = crate::kvcache::KvPolicy::mustafar(0.5, 0.5);
+        let per_seq = estimate_seq_bytes(&policy, &cfg, 96 + 160);
+        let model = NativeModel::new(Weights::random_for_tests(cfg, 42));
+        let mut ec = EngineConfig::default();
+        ec.backend = Backend::NativeSparse;
+        ec.sparsity = crate::config::SparsityConfig::mustafar(0.5, 0.5);
+        ec.max_batch = 3;
+        ec.max_new_tokens = 256;
+        ec.kv_budget_bytes = per_seq * 2;
+        ec.kv_page_bytes = 1024;
+        let mut e = Engine::new_native(model, ec);
+        for r in reqs(3, 96, 160) {
+            assert!(e.submit(r));
+        }
+        // step until a preemption leaves its victim waiting in the queue
+        let mut victim = None;
+        for _ in 0..2000 {
+            if e.idle() {
+                break;
+            }
+            e.step().unwrap();
+            if e.metrics.preempted > 0 {
+                // progress == Some(0) can only mean "queued" (an active
+                // sequence always has its first token already)
+                if let Some(id) = (0..3u64).find(|&id| e.progress(id) == Some(0)) {
+                    victim = Some(id);
+                    break;
+                }
+            }
+        }
+        let victim = victim.expect("pressure never left a preempted request queued");
+        assert!(e.cancel(victim));
+        while !e.idle() {
+            e.step().unwrap();
+            assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+        }
+        let out = e.take_completions();
+        assert_eq!(out.iter().filter(|c| c.id == victim).count(), 1, "answered exactly once");
+        for c in &out {
+            if c.id == victim {
+                assert_eq!(c.finish, FinishReason::Cancelled);
+            } else {
+                assert_eq!(c.finish, FinishReason::Length, "id {}", c.id);
+                assert_eq!(c.tokens.len(), 160);
+            }
+        }
+        assert_eq!(e.metrics.cancelled, 1);
+    }
+
+    #[test]
+    fn disconnect_trace_frees_pages_and_reduces_pressure_events() {
+        // EXPERIMENTS §8 / acceptance: under the same over-budget
+        // disconnect-heavy trace, honoring cancellation must strictly
+        // reduce repruned + preempted — dead requests release their
+        // pages instead of forcing the ladder to degrade live ones.
+        let mk = || {
+            let cfg = tiny_model_cfg(2, 1, 32);
+            let policy = crate::kvcache::KvPolicy::mustafar(0.5, 0.5);
+            let per_seq = estimate_seq_bytes(&policy, &cfg, 96 + 160);
+            let model = NativeModel::new(Weights::random_for_tests(cfg, 42));
+            let mut ec = EngineConfig::default();
+            ec.backend = Backend::NativeSparse;
+            ec.sparsity = crate::config::SparsityConfig::mustafar(0.5, 0.5);
+            ec.max_batch = 4;
+            ec.max_new_tokens = 256;
+            ec.kv_budget_bytes = per_seq * 2;
+            ec.kv_page_bytes = 1024;
+            Engine::new_native(model, ec)
+        };
+        let trace = crate::workload::trace::disconnect_trace(3, 8, 96, 160);
+        let n_cancel = trace.iter().filter(|t| t.cancel_after.is_some()).count();
+        assert_eq!(n_cancel, 6);
+
+        let mut base_engine = mk();
+        let base = run_with_disconnects(&mut base_engine, trace.clone(), false);
+        assert_eq!(base.len(), 8);
+        assert!(base.iter().all(|c| c.finish == FinishReason::Length));
+        let base_pressure = base_engine.metrics.repruned + base_engine.metrics.preempted;
+        assert!(base_pressure > 0, "baseline never hit the pressure ladder");
+
+        let mut e = mk();
+        let out = run_with_disconnects(&mut e, trace, true);
+        assert_eq!(out.len(), 8, "every request answered exactly once");
+        assert_eq!(e.metrics.cancelled, 6);
+        assert!(e.metrics.cancelled_freed_bytes > 0, "active cancels must free pages");
+        assert_eq!(
+            out.iter().filter(|c| c.finish == FinishReason::Cancelled).count(),
+            6,
+            "every disconnect yields a cancelled completion"
+        );
+        assert_eq!(out.iter().filter(|c| c.finish == FinishReason::Length).count(), 2);
+        let pressure = e.metrics.repruned + e.metrics.preempted;
+        assert!(
+            pressure < base_pressure,
+            "cancellation must strictly reduce pressure events ({pressure} vs {base_pressure})"
+        );
+        // generated == Σ completion lengths even across cancels
+        let total: usize = out.iter().map(|c| c.tokens.len()).sum();
+        assert_eq!(e.metrics.generated_tokens, total);
+    }
+
+    #[test]
+    fn fail_inflight_answers_every_waiter_and_drains_the_pool() {
+        let mut e = tiny_engine(Backend::NativeSparse, (0.5, 0.5));
+        for r in reqs(5, 64, 32) {
+            assert!(e.submit(r));
+        }
+        e.step().unwrap(); // 4 active (max_batch), 1 queued
+        assert!(e.active_count() > 0 && e.queued_count() > 0);
+        let n = e.fail_inflight("engine step failed: test");
+        assert_eq!(n, 5);
+        assert_eq!(e.metrics.failed, 5);
+        assert!(e.idle(), "engine drained");
+        let out = e.take_completions();
+        assert_eq!(out.len(), 5);
+        for c in &out {
+            assert_eq!(c.finish, FinishReason::Error);
+            assert_eq!(c.error.as_deref(), Some("engine step failed: test"));
+        }
+        // every sequence's pages came back; only the prefix cache remains
+        assert_eq!(e.pool_stats().live_bytes, e.prefix_cache().measured_bytes());
+        assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+    }
+
+    #[test]
+    fn out_of_vocab_prompt_is_rejected_at_submit_not_panicking_the_forward() {
+        // One bad token id would assert inside the embedding lookup
+        // and panic the engine thread — a remotely triggerable hang of
+        // every waiter (a panic, not the Err that fail_inflight
+        // handles). The boundary check must refuse it instead.
+        let mut e = tiny_engine(Backend::NativeDense, (0.0, 0.0));
+        let vocab = e.model.cfg().vocab as u16;
+        assert!(!e.submit(Request::new(1, vec![1, 2, vocab], 4)));
+        assert!(!e.submit(Request::new(2, vec![u16::MAX], 4)));
+        // an empty prompt would slice (t - 1) * d in prefill — same
+        // panic class, same boundary rejection
+        assert!(!e.submit(Request::new(3, Vec::new(), 4)));
+        assert_eq!(e.metrics.rejected, 3);
+        assert!(e.idle(), "rejected requests must not enter the queue");
+        // a valid request still runs on the same engine
+        let out = e.run_trace(reqs(1, 16, 3)).unwrap();
+        assert_eq!(out[0].finish, FinishReason::Length);
+        // trace mode answers the rejection instead of dropping it
+        let out = e.run_trace(vec![Request::new(9, vec![u16::MAX], 2)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 9);
+        assert_eq!(out[0].finish, FinishReason::Rejected);
+    }
+
+    #[test]
+    fn step_error_fails_the_popped_request_instead_of_losing_it() {
+        // A PJRT backend selected but never constructed makes
+        // start_request fail — the canonical reachable step() error.
+        // The popped request must get an Error completion (its waiter
+        // is answered), not silently vanish into the propagated error.
+        let cfg = tiny_model_cfg(2, 1, 32);
+        let model = NativeModel::new(Weights::random_for_tests(cfg, 42));
+        let mut ec = EngineConfig::default();
+        ec.backend = Backend::PjrtSparse;
+        let mut e = Engine::new_native(model, ec);
+        assert!(e.submit(Request::new(1, vec![5; 32], 4)));
+        assert!(e.step().is_err());
+        let out = e.take_completions();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 1);
+        assert_eq!(out[0].finish, FinishReason::Error);
+        assert!(out[0].error.as_deref().unwrap_or("").contains("pjrt"));
+        assert_eq!(e.metrics.failed, 1);
+        assert!(e.idle(), "the failed request is not stuck in the engine");
     }
 
     #[test]

@@ -34,6 +34,16 @@ pub struct Metrics {
     /// Requests that reached admission but could not fit the pool even
     /// after the full reclaim ladder (subset of `rejected`).
     pub rejected_capacity: usize,
+    /// Requests cancelled by the client (explicit cancel line or a
+    /// dropped connection) while queued or decoding.
+    pub cancelled: usize,
+    /// Live pool bytes released by cancellations of *active* sequences
+    /// — memory that would otherwise have been reclaimed from live
+    /// requests via re-prune/preempt or held to completion.
+    pub cancelled_freed_bytes: usize,
+    /// Requests failed back to their clients because the engine errored
+    /// while they were in flight (`Engine::fail_inflight`).
+    pub failed: usize,
 }
 
 impl Metrics {

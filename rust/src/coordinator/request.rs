@@ -5,7 +5,16 @@ use std::time::Instant;
 /// Inference request as submitted by a client (router or trace).
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Client-chosen id, echoed back on the completion line. Only
+    /// meaningful within one connection — different connections may
+    /// reuse the same id freely.
     pub id: u64,
+    /// Engine-wide routing key. Defaults to `id` (trace harnesses
+    /// address requests directly); the TCP server overwrites it with a
+    /// server-assigned unique value so same-id requests from different
+    /// connections never collide in the waiter map, and cancellation
+    /// (`Engine::cancel`) targets exactly one request.
+    pub route: u64,
     pub prompt: Vec<u16>,
     pub max_new_tokens: usize,
     /// Stop generation at this token (the language's SEP by default).
@@ -19,7 +28,14 @@ pub struct Request {
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<u16>, max_new_tokens: usize) -> Request {
-        Request { id, prompt, max_new_tokens, stop_token: None, submitted: Instant::now() }
+        Request {
+            id,
+            route: id,
+            prompt,
+            max_new_tokens,
+            stop_token: None,
+            submitted: Instant::now(),
+        }
     }
 }
 
@@ -30,16 +46,29 @@ pub enum FinishReason {
     Length,
     /// Produced the stop token.
     Stop,
-    /// Rejected at admission (prompt too long / over budget).
+    /// Rejected at admission (prompt too long / over budget / token
+    /// ids outside the model vocab).
     Rejected,
+    /// Cancelled by the client (explicit `{"cancel": id}` line or a
+    /// dropped connection) before finishing; pool pages were released
+    /// at cancel time.
+    Cancelled,
+    /// The engine failed while this request was in flight (`step()`
+    /// errored); the request was failed back instead of hanging its
+    /// waiter. `Completion::error` carries the message.
+    Error,
 }
 
 /// Completed request with timing breakdown.
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub id: u64,
+    /// Routing key copied from `Request::route` (see there).
+    pub route: u64,
     pub tokens: Vec<u16>,
     pub finish: FinishReason,
+    /// Engine error message for `FinishReason::Error` completions.
+    pub error: Option<String>,
     pub queue_ms: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
@@ -47,6 +76,33 @@ pub struct Completion {
     pub kv_bytes: usize,
     /// Dense-equivalent KV bytes at completion.
     pub kv_dense_bytes: usize,
+}
+
+impl Completion {
+    /// Terminal answer for a request that never became (or no longer
+    /// is) an active sequence — rejection at submit, cancel while
+    /// queued, engine error before activation. No tokens, no KV, no
+    /// prefill/decode time; `queue_ms` runs from submission to now.
+    pub fn queued(
+        id: u64,
+        route: u64,
+        submitted: Instant,
+        finish: FinishReason,
+        error: Option<String>,
+    ) -> Completion {
+        Completion {
+            id,
+            route,
+            tokens: Vec::new(),
+            finish,
+            error,
+            queue_ms: submitted.elapsed().as_secs_f64() * 1e3,
+            prefill_ms: 0.0,
+            decode_ms: 0.0,
+            kv_bytes: 0,
+            kv_dense_bytes: 0,
+        }
+    }
 }
 
 /// Internal per-sequence decode state.
@@ -70,6 +126,33 @@ pub(crate) struct ActiveSeq {
     pub scratch: crate::model::DecodeScratch,
 }
 
+impl ActiveSeq {
+    /// Terminal completion for this sequence, carrying whatever tokens
+    /// it generated (finish, cancel, error, and reject paths all build
+    /// through here so the field set cannot drift between them). `kv`
+    /// is the (compressed, dense-equivalent) byte pair the caller
+    /// measured from the state — zero where the footprint is moot.
+    pub(crate) fn into_completion(
+        self,
+        finish: FinishReason,
+        error: Option<String>,
+        kv: (usize, usize),
+    ) -> Completion {
+        Completion {
+            id: self.req.id,
+            route: self.req.route,
+            tokens: self.generated,
+            finish,
+            error,
+            queue_ms: self.queue_ms,
+            prefill_ms: self.prefill_ms,
+            decode_ms: self.decode_start.elapsed().as_secs_f64() * 1e3,
+            kv_bytes: kv.0,
+            kv_dense_bytes: kv.1,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,6 +161,7 @@ mod tests {
     fn request_defaults() {
         let r = Request::new(7, vec![1, 2, 3], 16);
         assert_eq!(r.id, 7);
+        assert_eq!(r.route, 7, "route defaults to the client id");
         assert_eq!(r.stop_token, None);
     }
 }

@@ -87,25 +87,26 @@ pub struct Scheduler {
     model_cfg: ModelConfig,
     policy: KvPolicy,
     queue: VecDeque<Request>,
-    pub rejected: Vec<Request>,
 }
 
 impl Scheduler {
     pub fn new(cfg: EngineConfig, model_cfg: ModelConfig, policy: KvPolicy) -> Scheduler {
-        Scheduler { cfg, model_cfg, policy, queue: VecDeque::new(), rejected: Vec::new() }
+        Scheduler { cfg, model_cfg, policy, queue: VecDeque::new() }
     }
 
-    /// Enqueue a request; returns false (and records it) when the queue is
-    /// full or the request can never fit the budget even with the whole
-    /// pool to itself.
+    /// Enqueue a request; returns false when the queue is full or the
+    /// request can never fit the budget even with the whole pool to
+    /// itself. The refusal is *only* signalled through the return
+    /// value: the caller (`Engine::submit`) owns the rejection counter
+    /// (`Metrics::rejected`), and a rejected request must not be
+    /// retained — that would be an unbounded, client-drivable memory
+    /// leak in a long-running server.
     pub fn submit(&mut self, req: Request) -> bool {
         if self.queue.len() >= self.cfg.queue_cap {
-            self.rejected.push(req);
             return false;
         }
         let need = self.estimate(&req);
         if self.cfg.kv_budget_bytes > 0 && need > self.cfg.kv_budget_bytes {
-            self.rejected.push(req);
             return false;
         }
         self.queue.push_back(req);
@@ -142,9 +143,27 @@ impl Scheduler {
 
     /// Re-enqueue a preempted request at the *front* of the queue (it
     /// was admitted once; FIFO fairness says it goes next). Bypasses
-    /// `queue_cap` — a preempted request must never be dropped.
+    /// `queue_cap` — a preempted request must never be dropped. The
+    /// engine cancels a request *before* this can resurrect it
+    /// (`Engine::cancel` removes queued requests via `remove_by_id`,
+    /// and cancellation is only processed between steps, so a cancelled
+    /// request is never in the active set when preemption runs).
     pub fn requeue_front(&mut self, req: Request) {
         self.queue.push_front(req);
+    }
+
+    /// Remove a queued request by its routing key (client cancellation
+    /// of a request that has not been admitted yet — including one
+    /// preemption put back at the head). Preserves the order of the
+    /// remaining queue. `None` when no queued request has that key.
+    pub fn remove_by_id(&mut self, route: u64) -> Option<Request> {
+        let i = self.queue.iter().position(|r| r.route == route)?;
+        self.queue.remove(i)
+    }
+
+    /// Is a request with this routing key waiting in the queue?
+    pub fn contains(&self, route: u64) -> bool {
+        self.queue.iter().any(|r| r.route == route)
     }
 
     /// Capacity-only admission (`running` = current batch size): pops up
@@ -266,7 +285,7 @@ mod tests {
         let mut s = Scheduler::new(ec, cfg, KvPolicy::dense());
         assert!(s.submit(Request::new(0, vec![0; 32], 8)));
         assert!(!s.submit(Request::new(1, vec![0; 512], 128)));
-        assert_eq!(s.rejected.len(), 1);
+        assert_eq!(s.pending(), 1, "rejected request must not be retained");
     }
 
     #[test]
@@ -278,8 +297,7 @@ mod tests {
         assert!(s.submit(Request::new(0, vec![0; 8], 4)));
         assert!(s.submit(Request::new(1, vec![0; 8], 4)));
         assert!(!s.submit(Request::new(2, vec![0; 8], 4)));
-        assert_eq!(s.rejected.len(), 1);
-        assert_eq!(s.pending(), 2);
+        assert_eq!(s.pending(), 2, "rejected request must not be retained");
     }
 
     #[test]
@@ -296,6 +314,36 @@ mod tests {
         assert_eq!(s.pending(), 3);
         assert_eq!(s.pop_front().unwrap().id, 7);
         assert_eq!(s.pop_front().unwrap().id, 0);
+    }
+
+    #[test]
+    fn remove_by_id_preserves_order_of_the_rest() {
+        let cfg = mc();
+        let mut s = Scheduler::new(EngineConfig::default(), cfg, KvPolicy::dense());
+        for i in 0..4 {
+            s.submit(Request::new(i, vec![0; 8], 4));
+        }
+        assert!(s.contains(2));
+        let r = s.remove_by_id(2).expect("queued request");
+        assert_eq!(r.id, 2);
+        assert!(!s.contains(2));
+        assert!(s.remove_by_id(2).is_none(), "second removal finds nothing");
+        let ids: Vec<u64> = std::iter::from_fn(|| s.pop_front()).map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn remove_by_id_reaches_a_requeued_head() {
+        // a preempted request re-queued at the head must still be
+        // cancellable — this is the "cancelled sequence must not be
+        // resurrected by requeue_front" guarantee at the queue level
+        let cfg = mc();
+        let mut s = Scheduler::new(EngineConfig::default(), cfg, KvPolicy::dense());
+        s.submit(Request::new(0, vec![0; 8], 4));
+        s.requeue_front(Request::new(9, vec![0; 8], 4));
+        assert_eq!(s.remove_by_id(9).unwrap().id, 9);
+        assert_eq!(s.pop_front().unwrap().id, 0);
+        assert_eq!(s.pending(), 0);
     }
 
     #[test]

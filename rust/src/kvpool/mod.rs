@@ -204,11 +204,18 @@ impl KvPool {
     }
 
     /// Release an owner, returning all of its pages to the free list.
-    pub fn release(&mut self, owner: OwnerId) {
-        if let Some(table) = self.owners.remove(&owner.0) {
-            self.used_pages -= table.pages.len();
-            self.live_bytes -= table.live_bytes;
-            self.free.extend(table.pages);
+    /// Returns the owner's live bytes at release time (0 for an unknown
+    /// owner) — the cancellation path reports this as memory handed
+    /// back to the pool instead of being reclaimed from live requests.
+    pub fn release(&mut self, owner: OwnerId) -> usize {
+        match self.owners.remove(&owner.0) {
+            Some(table) => {
+                self.used_pages -= table.pages.len();
+                self.live_bytes -= table.live_bytes;
+                self.free.extend(table.pages);
+                table.live_bytes
+            }
+            None => 0,
         }
     }
 
@@ -267,9 +274,10 @@ mod tests {
         p.set_live_bytes(a, 900).unwrap();
         assert_eq!(p.owner_pages(a), 1);
         assert_eq!(p.stats().live_bytes, 900);
-        p.release(a);
+        assert_eq!(p.release(a), 900, "release reports the freed live bytes");
         assert_eq!(p.stats().used_pages, 0);
         assert_eq!(p.stats().live_bytes, 0);
+        assert_eq!(p.release(a), 0, "double release is a no-op");
     }
 
     #[test]

@@ -372,6 +372,25 @@ impl PrefixCache {
             + self.partial.values().map(|e| e.bytes()).sum::<usize>()
     }
 
+    /// Partial entries currently pinned from *outside* the cache (live
+    /// sequences holding the `Arc`; references from sibling full
+    /// entries are internal and excluded). A cancelled or finished
+    /// sequence must *decref* its shared prefix — dropping its
+    /// `SequenceKV` — without freeing the cache-charged pages; this
+    /// probe lets the cancellation tests assert exactly that: the entry
+    /// count and pool charge are unchanged while the pin count falls
+    /// back to zero.
+    pub fn pinned_partial_entries(&self) -> usize {
+        self.partial
+            .values()
+            .filter(|e| {
+                let internal =
+                    1 + self.full.values().filter(|f| Arc::ptr_eq(&f.prefix, &e.prefix)).count();
+                Arc::strong_count(&e.prefix) > internal
+            })
+            .count()
+    }
+
     /// Sum of this cache's live-byte charges in the pool.
     pub fn charged_bytes(&self, pool: &KvPool) -> usize {
         self.full.values().map(|e| pool.owner_live_bytes(e.owner)).sum::<usize>()
@@ -587,6 +606,36 @@ mod tests {
         assert!(matches!(c.lookup(&prompt2, 32), Some(PrefixHit::Full { .. })));
         // accounting stays exact with the lineage entries in place
         assert_eq!(p.stats().live_bytes, c.measured_bytes());
+    }
+
+    #[test]
+    fn dropping_a_holder_unpins_without_freeing_pages() {
+        // The cancellation contract at the cache level: a sequence that
+        // goes away (cancel, finish) drops its Arc — the partial entry
+        // stays resident and charged, only its external pin count falls,
+        // so the pages become reclaimable by LRU eviction instead of
+        // leaking or being freed out from under the cache's accounting.
+        let mut c = PrefixCache::new(true);
+        let mut p = pool();
+        let (prompt, prefix, tk, tv) = built(160, 41);
+        let canonical = c.insert(&prompt, Arc::clone(&prefix), &tk, &tv, 7, &mut p).unwrap();
+        drop(prefix);
+        let charged = p.stats().live_bytes;
+        // `canonical` plays the live sequence's reference
+        assert_eq!(c.pinned_partial_entries(), 1);
+        drop(canonical);
+        // decref: nothing freed, nothing evicted — just unpinned (the
+        // sibling full entry's reference is internal, not a pin)
+        assert_eq!(c.pinned_partial_entries(), 0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(p.stats().live_bytes, charged, "decref must not free pages");
+        assert_eq!(p.stats().live_bytes, c.measured_bytes(), "accounting exact throughout");
+        // with no outside holder the whole lineage is reclaimable (the
+        // full entry first — it blocks the partial while it holds the Arc)
+        assert!(c.evict_lru(&mut p));
+        assert!(c.evict_lru(&mut p));
+        assert_eq!(c.len(), 0);
+        assert_eq!(p.stats().live_bytes, 0);
     }
 
     #[test]

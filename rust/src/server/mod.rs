@@ -3,12 +3,45 @@
 //!
 //!   -> {"id": 1, "prompt": [1, 17, 300, ...], "max_new_tokens": 32}
 //!   <- {"id": 1, "tokens": [...], "finish": "length", ...}
+//!   -> {"cancel": 1}
+//!   <- {"id": 1, "tokens": [...], "finish": "cancelled", ...}
 //!   -> {"stats": true}
 //!   <- {"pool_live_bytes": ..., "prefix_hit_rate": ..., ...}
 //!
+//! Finish reasons: `"length"` (hit max_new_tokens), `"stop"` (stop
+//! token), `"rejected"` (admission), `"cancelled"` (client cancel line
+//! or disconnect), `"error"` (the engine failed mid-flight; the line
+//! carries an `"error"` message field). Request ids are namespaced per
+//! connection — two connections may use the same id; internally every
+//! request gets a server-assigned routing key (`Request::route`).
+//!
+//! Cancellation is first-class: a `{"cancel": id}` line aborts an
+//! in-flight request (queued or decoding) and yields a `"cancelled"`
+//! finish line; a cancel that races the natural completion is a no-op
+//! — the client is answered exactly once either way. Cancel is
+//! therefore fire-and-forget: a cancel for an id that is not in
+//! flight (already answered, or never submitted — the server cannot
+//! tell these apart without retaining every past id) is silently
+//! ignored, and clients must not block waiting for a cancel-specific
+//! acknowledgement. Only a *malformed* cancel line gets an error
+//! response. A dropped connection (reader EOF/error, or a write
+//! failure) implicitly cancels everything the connection still has in
+//! flight, so the engine releases those sequences' kvpool pages
+//! immediately instead of decoding to completion for a client that is
+//! gone.
+//!
+//! **Protocol rule (deliberate break from the pre-cancellation
+//! server):** reader EOF *is* the disconnect signal — TCP cannot
+//! distinguish `shutdown(WR)` from a vanished client, and waiting for
+//! a write failure would let a closed-without-reading client hold
+//! pool pages for an entire decode. Pipelined clients must therefore
+//! keep the connection open until they have read all their responses;
+//! a write-then-half-close client (`printf ... | nc`) now gets
+//! `"cancelled"` finishes instead of results.
+//!
 //! The engine runs on a dedicated thread; connections feed the admission
 //! queue through an mpsc channel and completions route back to the
-//! originating connection by request id. Connections are *pipelined*: a
+//! originating connection by routing key. Connections are *pipelined*: a
 //! client may write many requests before reading; a per-connection
 //! writer thread streams completions back as they finish. An idle
 //! engine thread parks on a blocking `recv` (no try_recv + sleep spin).
@@ -18,6 +51,7 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
@@ -28,6 +62,9 @@ use crate::fmt::Json;
 /// Messages from connection handlers to the engine thread.
 enum Inbound {
     Req(Request),
+    /// Cancel the request with this routing key (an explicit client
+    /// `{"cancel": id}` line, or a connection noticing a disconnect).
+    Abort(u64),
     /// Stats query; the rendered JSON line comes back on the sender.
     Stats(Sender<String>),
 }
@@ -40,17 +77,20 @@ pub fn parse_request(line: &str) -> Result<Request> {
 /// Build a request from an already-parsed line (the per-connection
 /// reader parses each line exactly once and branches from the value).
 pub fn request_from_json(v: &Json) -> Result<Request> {
+    // Token ids must round-trip into u16 exactly — a silent `as u16`
+    // here would wrap ids >= 65536 into the valid range and bypass the
+    // engine's out-of-vocab boundary rejection.
+    let tok = |x: &Json| -> Result<u16> {
+        let t = x.as_usize()?;
+        u16::try_from(t).map_err(|_| Error::Json(format!("token id {t} out of range")))
+    };
     let id = v.get("id")?.as_usize()? as u64;
-    let prompt: Vec<u16> = v
-        .get("prompt")?
-        .as_arr()?
-        .iter()
-        .map(|x| Ok(x.as_usize()? as u16))
-        .collect::<Result<Vec<_>>>()?;
+    let prompt: Vec<u16> =
+        v.get("prompt")?.as_arr()?.iter().map(tok).collect::<Result<Vec<_>>>()?;
     let max_new = v.get("max_new_tokens")?.as_usize()?;
     let mut req = Request::new(id, prompt, max_new);
     if let Some(stop) = v.opt("stop_token") {
-        req.stop_token = Some(stop.as_usize()? as u16);
+        req.stop_token = Some(tok(stop)?);
     }
     Ok(req)
 }
@@ -65,9 +105,22 @@ pub fn is_stats_request(line: &str) -> bool {
     Json::parse(line).ok().as_ref().map(is_stats_json).unwrap_or(false)
 }
 
+/// The id a `{"cancel": <id>}` line targets, if the parsed line is a
+/// cancel message.
+pub fn cancel_target(v: &Json) -> Option<u64> {
+    v.opt("cancel").and_then(|c| c.as_usize().ok()).map(|id| id as u64)
+}
+
+/// Render one `{"error": ...}` line. Every error string goes through
+/// the JSON serializer — a message containing `"` or `\` must still
+/// emit a well-formed line (raw `writeln!` interpolation did not).
+pub fn error_line(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
 /// Serialize a completion line.
 pub fn render_completion(c: &Completion) -> String {
-    Json::obj(vec![
+    let mut fields = vec![
         ("id", Json::num(c.id as f64)),
         (
             "tokens",
@@ -79,6 +132,8 @@ pub fn render_completion(c: &Completion) -> String {
                 FinishReason::Length => "length",
                 FinishReason::Stop => "stop",
                 FinishReason::Rejected => "rejected",
+                FinishReason::Cancelled => "cancelled",
+                FinishReason::Error => "error",
             }),
         ),
         ("queue_ms", Json::num(c.queue_ms)),
@@ -86,8 +141,11 @@ pub fn render_completion(c: &Completion) -> String {
         ("decode_ms", Json::num(c.decode_ms)),
         ("kv_bytes", Json::num(c.kv_bytes as f64)),
         ("kv_dense_bytes", Json::num(c.kv_dense_bytes as f64)),
-    ])
-    .to_string()
+    ];
+    if let Some(e) = &c.error {
+        fields.push(("error", Json::str(e.clone())));
+    }
+    Json::obj(fields).to_string()
 }
 
 /// Serialize the engine's pool + prefix-cache + serving counters.
@@ -101,6 +159,8 @@ pub fn render_stats(engine: &Engine) -> String {
         ("pool_reserved_bytes", Json::num(p.reserved_bytes as f64)),
         ("pool_live_bytes", Json::num(p.live_bytes as f64)),
         ("pool_peak_live_bytes", Json::num(p.peak_live_bytes as f64)),
+        ("active", Json::num(engine.active_count() as f64)),
+        ("queued", Json::num(engine.queued_count() as f64)),
         ("prefix_entries", Json::num(engine.prefix_cache().len() as f64)),
         ("prefix_full_hits", Json::num(m.prefix_full_hits as f64)),
         ("prefix_partial_hits", Json::num(m.prefix_partial_hits as f64)),
@@ -112,6 +172,9 @@ pub fn render_stats(engine: &Engine) -> String {
         ("preempted", Json::num(m.preempted as f64)),
         ("completions", Json::num(m.completions as f64)),
         ("rejected", Json::num(m.rejected as f64)),
+        ("cancelled", Json::num(m.cancelled as f64)),
+        ("cancelled_freed_bytes", Json::num(m.cancelled_freed_bytes as f64)),
+        ("failed", Json::num(m.failed as f64)),
         ("generated_tokens", Json::num(m.generated_tokens as f64)),
     ])
     .to_string()
@@ -124,12 +187,19 @@ pub fn serve(engine: Engine, addr: &str) -> Result<()> {
     serve_listener(engine, listener)
 }
 
+type Waiters = Arc<Mutex<HashMap<u64, Sender<Completion>>>>;
+/// This connection's in-flight requests: client id → routing key.
+type Inflight = Arc<Mutex<HashMap<u64, u64>>>;
+
 /// Serve on an already-bound listener (tests bind 127.0.0.1:0 and read
 /// the ephemeral address back before calling this).
 pub fn serve_listener(engine: Engine, listener: TcpListener) -> Result<()> {
     let (req_tx, req_rx): (Sender<Inbound>, Receiver<Inbound>) = channel();
-    type Waiters = Arc<Mutex<HashMap<u64, Sender<Completion>>>>;
     let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
+    // Server-assigned routing keys, unique across connections: two
+    // clients reusing the same request id never collide in `waiters`,
+    // and an abort targets exactly one request.
+    let next_route = Arc::new(AtomicU64::new(1));
 
     // engine thread: pull requests, step, route completions
     {
@@ -138,7 +208,7 @@ pub fn serve_listener(engine: Engine, listener: TcpListener) -> Result<()> {
             let mut engine = engine;
             let route = |engine: &mut Engine, waiters: &Waiters| {
                 for c in engine.take_completions() {
-                    let tx = waiters.lock().unwrap().remove(&c.id);
+                    let tx = waiters.lock().unwrap().remove(&c.route);
                     if let Some(tx) = tx {
                         let _ = tx.send(c);
                     }
@@ -146,23 +216,28 @@ pub fn serve_listener(engine: Engine, listener: TcpListener) -> Result<()> {
             };
             let handle = |engine: &mut Engine, waiters: &Waiters, m: Inbound| match m {
                 Inbound::Req(r) => {
-                    let (id, queued) = (r.id, r.submitted);
+                    let (id, key, queued) = (r.id, r.route, r.submitted);
                     if !engine.submit(r) {
                         // tell the waiting client instead of hanging it
-                        let tx = waiters.lock().unwrap().remove(&id);
+                        let tx = waiters.lock().unwrap().remove(&key);
                         if let Some(tx) = tx {
-                            let _ = tx.send(Completion {
+                            let _ = tx.send(Completion::queued(
                                 id,
-                                tokens: Vec::new(),
-                                finish: FinishReason::Rejected,
-                                queue_ms: queued.elapsed().as_secs_f64() * 1e3,
-                                prefill_ms: 0.0,
-                                decode_ms: 0.0,
-                                kv_bytes: 0,
-                                kv_dense_bytes: 0,
-                            });
+                                key,
+                                queued,
+                                FinishReason::Rejected,
+                                None,
+                            ));
                         }
                     }
+                }
+                Inbound::Abort(key) => {
+                    // In flight → a Cancelled completion routes back
+                    // below (a disconnected waiter silently drops it
+                    // and the pages are freed regardless). Not found →
+                    // the request already completed and was answered:
+                    // exactly-once semantics, nothing more to say.
+                    engine.cancel(key);
                 }
                 Inbound::Stats(tx) => {
                     let _ = tx.send(render_stats(engine));
@@ -186,11 +261,20 @@ pub fn serve_listener(engine: Engine, listener: TcpListener) -> Result<()> {
                         Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
                     }
                 }
+                // Cancels and rejections emit completions without a
+                // step; deliver them even when the engine is idle now
+                // (an explicit cancel must answer, not hang).
+                route(&mut engine, &waiters);
                 if engine.idle() {
                     continue;
                 }
                 if let Err(e) = engine.step() {
+                    // A failed step must not strand its waiters: fail
+                    // every in-flight request back to its connection
+                    // with an error finish instead of looping forever
+                    // over clients blocked on `read_line`.
                     eprintln!("[server] engine error: {e}");
+                    engine.fail_inflight(&format!("engine step failed: {e}"));
                 }
                 route(&mut engine, &waiters);
             }
@@ -201,8 +285,9 @@ pub fn serve_listener(engine: Engine, listener: TcpListener) -> Result<()> {
         let stream = stream.map_err(Error::Io)?;
         let req_tx = req_tx.clone();
         let waiters = Arc::clone(&waiters);
+        let next_route = Arc::clone(&next_route);
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, req_tx, &waiters) {
+            if let Err(e) = handle_conn(stream, req_tx, &waiters, &next_route) {
                 eprintln!("[server] connection error: {e}");
             }
         });
@@ -210,18 +295,52 @@ pub fn serve_listener(engine: Engine, listener: TcpListener) -> Result<()> {
     Ok(())
 }
 
+/// Abort everything a connection still has in flight (disconnect or
+/// write failure): mark the connection dead and drain its id → route
+/// map, sending one `Abort` per route — all inside the inflight lock,
+/// so this is mutually exclusive with request registration. A request
+/// was either registered before the drain (its `Req` send happened in
+/// that critical section, so the `Abort` here lands after it) or
+/// registers afterwards and is refused by the dead flag — no request
+/// can slip through un-aborted. Idempotent — aborts for
+/// already-answered requests are engine no-ops.
+fn abort_all(inflight: &Inflight, dead: &AtomicBool, req_tx: &Sender<Inbound>) {
+    let mut inf = inflight.lock().unwrap();
+    dead.store(true, Ordering::SeqCst);
+    for (_, r) in inf.drain() {
+        let _ = req_tx.send(Inbound::Abort(r));
+    }
+}
+
 /// One client connection. The reader half (this thread) parses lines
 /// and registers each request's waiter; a writer thread streams rendered
 /// completions back as they arrive, so many requests can be in flight
 /// per connection (pipelining). Error and stats lines go through the
-/// same write lock so responses never interleave mid-line.
+/// same write lock so responses never interleave mid-line. Both halves
+/// detect the client going away — reader EOF/error, writer write
+/// failure — and abort every request still in flight so the engine
+/// frees its pool pages instead of decoding to completion.
 fn handle_conn(
     stream: TcpStream,
     req_tx: Sender<Inbound>,
     waiters: &Mutex<HashMap<u64, Sender<Completion>>>,
+    next_route: &AtomicU64,
 ) -> Result<()> {
-    let writer = Arc::new(Mutex::new(stream.try_clone().map_err(Error::Io)?));
+    let writer_stream = stream.try_clone().map_err(Error::Io)?;
+    // Bound every write (completions from the writer thread AND the
+    // reader's own error/stats lines): a silent client that fills the
+    // socket send buffer turns a would-be indefinite block into a
+    // write error, which feeds the normal teardown (abort in-flight
+    // work, shut the socket down) instead of pinning this connection's
+    // threads and fd forever. 30s of zero TCP progress means the
+    // client is gone or wedged, not merely slow.
+    let _ = writer_stream.set_write_timeout(Some(std::time::Duration::from_secs(30)));
+    let writer = Arc::new(Mutex::new(writer_stream));
     let reader = BufReader::new(stream);
+    let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
+    // set by `abort_all` (writer write-failure, or final cleanup) under
+    // the inflight lock; the reader stops accepting new work once set
+    let dead = Arc::new(AtomicBool::new(false));
 
     // completion fan-in for this connection; the writer thread exits
     // once every sender clone (per-request waiters + the reader's
@@ -229,18 +348,82 @@ fn handle_conn(
     let (comp_tx, comp_rx): (Sender<Completion>, Receiver<Completion>) = channel();
     let writer_thread = {
         let writer = Arc::clone(&writer);
+        let inflight = Arc::clone(&inflight);
+        let dead = Arc::clone(&dead);
+        let req_tx = req_tx.clone();
         std::thread::spawn(move || {
-            for c in comp_rx {
-                let mut w = writer.lock().unwrap();
-                if writeln!(w, "{}", render_completion(&c)).is_err() {
-                    return; // client went away; drain silently
+            while let Ok(c) = comp_rx.recv() {
+                {
+                    // answered: the client may reuse this id from here
+                    // on (retire before the write so a pipelined reuse
+                    // racing the response line can never hit a stale
+                    // duplicate check; guard on the route so a newer
+                    // same-id request survives)
+                    let mut inf = inflight.lock().unwrap();
+                    if inf.get(&c.id) == Some(&c.route) {
+                        inf.remove(&c.id);
+                    }
+                }
+                let ok = {
+                    let mut w = writer.lock().unwrap();
+                    writeln!(w, "{}", render_completion(&c)).is_ok()
+                };
+                if !ok {
+                    // Write failure = the client went away: cancel its
+                    // remaining work, shut the socket down so the
+                    // reader parked in read_line unblocks (a half-open,
+                    // silent client would otherwise pin this
+                    // connection's reader thread and fd forever), and
+                    // exit, dropping comp_rx. No drain loop: the
+                    // channel is unbounded and route() tolerates the
+                    // closed receiver.
+                    abort_all(&inflight, &dead, &req_tx);
+                    let _ = writer.lock().unwrap().shutdown(std::net::Shutdown::Both);
+                    return;
                 }
             }
         })
     };
 
+    let res = read_loop(reader, &writer, &req_tx, waiters, next_route, &inflight, &dead, &comp_tx);
+    // EOF, read error, or writer-detected death: abort whatever this
+    // connection still has in flight — its pool pages are released by
+    // the engine instead of being held to completion (and then clawed
+    // back from *live* requests by the pressure ladder)
+    abort_all(&inflight, &dead, &req_tx);
+    drop(comp_tx);
+    let _ = writer_thread.join();
+    res
+}
+
+#[allow(clippy::too_many_arguments)]
+fn read_loop(
+    reader: BufReader<TcpStream>,
+    writer: &Mutex<TcpStream>,
+    req_tx: &Sender<Inbound>,
+    waiters: &Mutex<HashMap<u64, Sender<Completion>>>,
+    next_route: &AtomicU64,
+    inflight: &Inflight,
+    dead: &AtomicBool,
+    comp_tx: &Sender<Completion>,
+) -> Result<()> {
     for line in reader.lines() {
-        let line = line.map_err(Error::Io)?;
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                // The writer's engineered shutdown(Both) after a write
+                // failure surfaces here as a read error: that is the
+                // intended quiet teardown of a dead connection, not a
+                // connection error worth logging.
+                if dead.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                return Err(Error::Io(e));
+            }
+        };
+        if dead.load(Ordering::SeqCst) {
+            return Ok(());
+        }
         if line.trim().is_empty() {
             continue;
         }
@@ -248,7 +431,8 @@ fn handle_conn(
         let parsed = match Json::parse(&line) {
             Ok(v) => v,
             Err(e) => {
-                writeln!(writer.lock().unwrap(), "{{\"error\": \"{e}\"}}").map_err(Error::Io)?;
+                let msg = error_line(&e.to_string());
+                writeln!(writer.lock().unwrap(), "{msg}").map_err(Error::Io)?;
                 continue;
             }
         };
@@ -259,33 +443,64 @@ fn handle_conn(
             writeln!(writer.lock().unwrap(), "{stats}").map_err(Error::Io)?;
             continue;
         }
-        let req = match request_from_json(&parsed) {
+        // A cancel message is an object carrying "cancel" and no
+        // request body — a request with a stray "cancel" field must
+        // still be submitted (and answered), not silently swallowed.
+        if parsed.opt("cancel").is_some() && parsed.opt("prompt").is_none() {
+            // {"cancel": id}: abort without hanging up. In flight → the
+            // engine emits a "cancelled" finish line for it; already
+            // answered (cancel racing completion) → no-op, the client
+            // was answered exactly once by the original completion. A
+            // malformed id gets an explicit error instead of falling
+            // through to request parsing's misleading missing-field one.
+            match cancel_target(&parsed) {
+                Some(id) => {
+                    let route = inflight.lock().unwrap().get(&id).copied();
+                    if let Some(r) = route {
+                        req_tx
+                            .send(Inbound::Abort(r))
+                            .map_err(|_| Error::Engine("engine gone".into()))?;
+                    }
+                }
+                None => {
+                    let msg =
+                        error_line("malformed cancel: \"cancel\" must be a numeric request id");
+                    writeln!(writer.lock().unwrap(), "{msg}").map_err(Error::Io)?;
+                }
+            }
+            continue;
+        }
+        let mut req = match request_from_json(&parsed) {
             Ok(r) => r,
             Err(e) => {
-                writeln!(writer.lock().unwrap(), "{{\"error\": \"{e}\"}}").map_err(Error::Io)?;
+                let msg = error_line(&e.to_string());
+                writeln!(writer.lock().unwrap(), "{msg}").map_err(Error::Io)?;
                 continue;
             }
         };
+        req.route = next_route.fetch_add(1, Ordering::Relaxed);
         {
-            let mut w = waiters.lock().unwrap();
-            if w.contains_key(&req.id) {
-                drop(w);
-                writeln!(
-                    writer.lock().unwrap(),
-                    "{{\"error\": \"duplicate in-flight request id {}\"}}",
-                    req.id
-                )
-                .map_err(Error::Io)?;
+            // Registration and `abort_all` exclude each other on the
+            // inflight lock, and the `Req` send happens inside the
+            // critical section: a disconnect abort either sees this
+            // entry (its Abort then lands after the Req on the engine
+            // channel) or has already marked the connection dead and
+            // nothing new starts. No request slips through un-aborted.
+            let mut inf = inflight.lock().unwrap();
+            if dead.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            if inf.contains_key(&req.id) {
+                drop(inf);
+                let msg = error_line(&format!("duplicate in-flight request id {}", req.id));
+                writeln!(writer.lock().unwrap(), "{msg}").map_err(Error::Io)?;
                 continue;
             }
-            w.insert(req.id, comp_tx.clone());
+            waiters.lock().unwrap().insert(req.route, comp_tx.clone());
+            inf.insert(req.id, req.route);
+            req_tx.send(Inbound::Req(req)).map_err(|_| Error::Engine("engine gone".into()))?;
         }
-        req_tx.send(Inbound::Req(req)).map_err(|_| Error::Engine("engine gone".into()))?;
     }
-    // EOF: drop the master sender; the writer drains any in-flight
-    // completions (their waiters still hold clones) and then exits
-    drop(comp_tx);
-    let _ = writer_thread.join();
     Ok(())
 }
 
@@ -304,6 +519,21 @@ mod tests {
     }
 
     #[test]
+    fn token_ids_beyond_u16_are_rejected_not_wrapped() {
+        // 66000 as u16 would wrap to 464 and sail through the engine's
+        // vocab check; the parse layer must refuse it instead
+        let e = parse_request(r#"{"id": 1, "prompt": [66000], "max_new_tokens": 4}"#);
+        assert!(e.unwrap_err().to_string().contains("out of range"));
+        let e = parse_request(
+            r#"{"id": 1, "prompt": [3], "max_new_tokens": 4, "stop_token": 70000}"#,
+        );
+        assert!(e.unwrap_err().to_string().contains("out of range"));
+        // the boundary value still parses
+        let r = parse_request(r#"{"id": 1, "prompt": [65535], "max_new_tokens": 4}"#).unwrap();
+        assert_eq!(r.prompt, vec![65535]);
+    }
+
+    #[test]
     fn stats_line_is_recognized() {
         assert!(is_stats_request(r#"{"stats": true}"#));
         assert!(!is_stats_request(r#"{"stats": false}"#));
@@ -312,11 +542,37 @@ mod tests {
     }
 
     #[test]
+    fn cancel_line_is_recognized() {
+        assert_eq!(cancel_target(&Json::parse(r#"{"cancel": 7}"#).unwrap()), Some(7));
+        assert_eq!(cancel_target(&Json::parse(r#"{"cancel": "x"}"#).unwrap()), None);
+        let req = Json::parse(r#"{"id": 1, "prompt": [], "max_new_tokens": 1}"#).unwrap();
+        assert_eq!(cancel_target(&req), None);
+    }
+
+    #[test]
+    fn error_lines_are_json_safe() {
+        // raw interpolation used to emit malformed lines for messages
+        // containing quotes/backslashes; everything must parse back
+        for msg in [
+            r#"expected ':' at byte 6, found '"'"#,
+            "a\\path\\with\\backslashes",
+            "newline\nand\ttab",
+            "plain",
+        ] {
+            let line = error_line(msg);
+            let v = Json::parse(&line).expect("error line must be well-formed JSON");
+            assert_eq!(v.get("error").unwrap().as_str().unwrap(), msg);
+        }
+    }
+
+    #[test]
     fn completion_renders_json() {
-        let c = Completion {
+        let mut c = Completion {
             id: 9,
+            route: 1001,
             tokens: vec![5, 6],
             finish: FinishReason::Length,
+            error: None,
             queue_ms: 0.5,
             prefill_ms: 1.5,
             decode_ms: 2.5,
@@ -329,5 +585,16 @@ mod tests {
         assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "length");
         assert!((v.get("queue_ms").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
         assert_eq!(v.get("kv_dense_bytes").unwrap().as_usize().unwrap(), 200);
+        assert!(v.opt("error").is_none(), "no error field on clean finishes");
+
+        c.finish = FinishReason::Cancelled;
+        let v = Json::parse(&render_completion(&c)).unwrap();
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "cancelled");
+
+        c.finish = FinishReason::Error;
+        c.error = Some(r#"engine step failed: bad "state""#.into());
+        let v = Json::parse(&render_completion(&c)).unwrap();
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "error");
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("bad \"state\""));
     }
 }

@@ -11,6 +11,14 @@ pub struct TraceRequest {
     pub id: u64,
     pub prompt: Vec<u16>,
     pub max_new_tokens: usize,
+    /// Client disconnect model: cancel this request once it has
+    /// generated this many tokens (`Some(0)` = the client hangs up
+    /// while the request is still queued or being prefilled). `None` =
+    /// the client stays until completion. Drivers poll
+    /// `Engine::progress` against this and call `Engine::cancel` when
+    /// the threshold is reached; ignoring the field replays the same
+    /// trace without cancellation (the before/after baseline).
+    pub cancel_after: Option<usize>,
 }
 
 /// A batch-throughput trace: `n` requests of `input_len` prompt tokens,
@@ -25,6 +33,7 @@ pub fn uniform_trace(seed: u64, n: usize, input_len: usize, gen_len: usize) -> V
                 id: i as u64,
                 prompt: lang::gen_document(&mut rng, input_len),
                 max_new_tokens: gen_len,
+                cancel_after: None,
             }
         })
         .collect()
@@ -48,7 +57,35 @@ pub fn shared_prefix_trace(
             let mut rng = Pcg32::new(seed.wrapping_mul(389).wrapping_add(i as u64), 55);
             let mut prompt = prefix.clone();
             prompt.extend(lang::gen_document(&mut rng, suffix_len));
-            TraceRequest { id: i as u64, prompt, max_new_tokens: gen_len }
+            TraceRequest { id: i as u64, prompt, max_new_tokens: gen_len, cancel_after: None }
+        })
+        .collect()
+}
+
+/// A disconnect-heavy trace (EXPERIMENTS §8): three out of every four
+/// clients hang up before their request completes — one while still
+/// queued/prefilling (`cancel_after = 0`), one early in decode
+/// (`gen_len / 8`), one mid-decode (`gen_len / 2`) — and one stays to
+/// the end. Replayed twice (honoring vs ignoring `cancel_after`) it
+/// measures how much pressure-ladder damage (re-prunes of, and
+/// preemptions against, *live* requests) first-class cancellation
+/// avoids by releasing dead requests' pages immediately.
+pub fn disconnect_trace(
+    seed: u64,
+    n: usize,
+    input_len: usize,
+    gen_len: usize,
+) -> Vec<TraceRequest> {
+    uniform_trace(seed, n, input_len, gen_len)
+        .into_iter()
+        .map(|mut r| {
+            r.cancel_after = match r.id % 4 {
+                1 => Some(0),
+                2 => Some((gen_len / 8).max(1)),
+                3 => Some((gen_len / 2).max(1)),
+                _ => None,
+            };
+            r
         })
         .collect()
 }
@@ -72,6 +109,23 @@ mod tests {
     #[test]
     fn trace_deterministic() {
         assert_eq!(uniform_trace(2, 2, 64, 8)[1].prompt, uniform_trace(2, 2, 64, 8)[1].prompt);
+    }
+
+    #[test]
+    fn disconnect_trace_is_disconnect_heavy_and_deterministic() {
+        let tr = disconnect_trace(5, 8, 96, 64);
+        assert_eq!(tr.len(), 8);
+        let cancels: Vec<Option<usize>> = tr.iter().map(|r| r.cancel_after).collect();
+        assert_eq!(cancels.iter().filter(|c| c.is_none()).count(), 2, "1 in 4 survives");
+        assert!(cancels.contains(&Some(0)), "some clients hang up before prefill");
+        assert!(cancels.contains(&Some(8)) && cancels.contains(&Some(32)));
+        // prompts match the uniform trace (same seed): only the
+        // disconnect schedule differs between the two replays
+        let base = uniform_trace(5, 8, 96, 64);
+        for (a, b) in tr.iter().zip(&base) {
+            assert_eq!(a.prompt, b.prompt);
+        }
+        assert_eq!(disconnect_trace(5, 8, 96, 64)[3].cancel_after, tr[3].cancel_after);
     }
 
     #[test]

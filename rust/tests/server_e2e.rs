@@ -11,14 +11,20 @@
     clippy::type_complexity
 )]
 
-//! End-to-end TCP server tests (satellite of the kvpool PR): bind an
-//! ephemeral port, drive pipelined and concurrent connections through
-//! `serve_listener`, and assert completions route back to the right
-//! connection. The older tests only covered parse/render.
+//! End-to-end TCP server tests: bind an ephemeral port, drive
+//! pipelined and concurrent connections through `serve_listener`, and
+//! assert completions route back to the right connection — including
+//! the cancellation paths (explicit `{"cancel": id}` lines, dropped
+//! connections freeing pool pages, cancel racing completion) and the
+//! engine-failure path (waiters get an error finish, never a hang).
+//! Every stream carries a read timeout so a hung-waiter regression
+//! fails fast instead of wedging the job (CI additionally wraps this
+//! test binary in a hard `timeout`).
 
 use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
 
 use mustafar::config::{Backend, EngineConfig, ModelConfig, SparsityConfig};
 use mustafar::coordinator::Engine;
@@ -26,7 +32,7 @@ use mustafar::fmt::Json;
 use mustafar::model::{NativeModel, Weights};
 use mustafar::server;
 
-fn tiny_engine() -> Engine {
+fn tiny_engine_with_backend(backend: Backend) -> Engine {
     let cfg = ModelConfig {
         name: "tiny".into(),
         d_model: 64,
@@ -41,22 +47,44 @@ fn tiny_engine() -> Engine {
         norm_eps: 1e-5,
     };
     let mut ec = EngineConfig::default();
-    ec.backend = Backend::NativeSparse;
+    ec.backend = backend;
     ec.sparsity = SparsityConfig::mustafar(0.5, 0.5);
     ec.max_batch = 4;
     Engine::new_native(NativeModel::new(Weights::random_for_tests(cfg, 7)), ec)
 }
 
-/// Bind 127.0.0.1:0, spawn the server on the ephemeral listener, return
-/// the address to connect to.
-fn spawn_server() -> std::net::SocketAddr {
+fn tiny_engine() -> Engine {
+    tiny_engine_with_backend(Backend::NativeSparse)
+}
+
+/// Spawn the server on an ephemeral listener, return the address.
+fn spawn_server_with(engine: Engine) -> std::net::SocketAddr {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
     let addr = listener.local_addr().unwrap();
-    let engine = tiny_engine();
     std::thread::spawn(move || {
         let _ = server::serve_listener(engine, listener);
     });
     addr
+}
+
+/// Bind 127.0.0.1:0, spawn the server on the ephemeral listener, return
+/// the address to connect to.
+fn spawn_server() -> std::net::SocketAddr {
+    spawn_server_with(tiny_engine())
+}
+
+/// Connect with the anti-wedge read timeout applied.
+fn connect(addr: std::net::SocketAddr) -> TcpStream {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    stream
+}
+
+/// Read one line and parse it (panics — failing the test — on timeout).
+fn read_json(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("response before read timeout");
+    Json::parse(&line).unwrap_or_else(|e| panic!("malformed response line {line:?}: {e}"))
 }
 
 fn req_line(id: u64, prompt_len: usize, gen: usize) -> String {
@@ -71,7 +99,7 @@ fn req_line(id: u64, prompt_len: usize, gen: usize) -> String {
 #[test]
 fn pipelined_requests_on_one_connection_route_by_id() {
     let addr = spawn_server();
-    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut stream = connect(addr);
     // write three requests back-to-back before reading anything
     for id in [10u64, 11, 12] {
         writeln!(stream, "{}", req_line(id, 48, 4)).unwrap();
@@ -97,7 +125,7 @@ fn concurrent_connections_each_get_only_their_completions() {
     let mut handles = Vec::new();
     for conn in 0..3u64 {
         handles.push(std::thread::spawn(move || {
-            let mut stream = TcpStream::connect(addr).expect("connect");
+            let mut stream = connect(addr);
             let ids: Vec<u64> = (0..3).map(|k| 100 + conn * 10 + k).collect();
             for &id in &ids {
                 writeln!(stream, "{}", req_line(id, 40, 3)).unwrap();
@@ -122,7 +150,7 @@ fn concurrent_connections_each_get_only_their_completions() {
 #[test]
 fn stats_and_error_lines_interleave_with_completions() {
     let addr = spawn_server();
-    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut stream = connect(addr);
     let mut reader = BufReader::new(stream.try_clone().unwrap());
     let mut line = String::new();
 
@@ -162,4 +190,199 @@ fn stats_and_error_lines_interleave_with_completions() {
     reader.read_line(&mut line).unwrap();
     let both = format!("{first}{line}");
     assert!(both.contains("duplicate"), "expected a duplicate-id error, got: {both}");
+}
+
+#[test]
+fn explicit_cancel_yields_cancelled_finish_line() {
+    let addr = spawn_server();
+    let mut stream = connect(addr);
+    // A long-running request, then an explicit cancel line behind it.
+    // Generation length is deliberately huge (seconds of decode on the
+    // tiny model) so the cancel always lands while the request is in
+    // flight, even with the reader thread preempted on a loaded runner
+    // — the cancel stops it long before the length limit.
+    writeln!(stream, "{}", req_line(1, 48, 5000)).unwrap();
+    writeln!(stream, "{{\"cancel\": 1}}").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let v = read_json(&mut reader);
+    assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "cancelled");
+    assert!(
+        v.get("tokens").unwrap().as_arr().unwrap().len() < 5000,
+        "a cancelled request must not decode to completion"
+    );
+    // the connection (and the id) keep working after a cancel
+    writeln!(stream, "{}", req_line(1, 32, 3)).unwrap();
+    let v = read_json(&mut reader);
+    assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "length");
+    assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+}
+
+#[test]
+fn dropped_connection_frees_pool_pages() {
+    let addr = spawn_server();
+    let probe = connect(addr); // stats side-channel on its own conn
+    let mut probe_w = probe.try_clone().unwrap();
+    let mut probe_r = BufReader::new(probe);
+    let mut stats = move || -> Json {
+        writeln!(probe_w, "{{\"stats\": true}}").unwrap();
+        read_json(&mut probe_r)
+    };
+
+    let mut victim = connect(addr);
+    for id in 0..2u64 {
+        writeln!(victim, "{}", req_line(100 + id, 64, 1000)).unwrap();
+    }
+    // wait until both sequences are decoding and holding pool pages
+    let mut live_before = 0.0;
+    for i in 0.. {
+        let v = stats();
+        if v.get("active").unwrap().as_usize().unwrap() == 2 {
+            live_before = v.get("pool_live_bytes").unwrap().as_f64().unwrap();
+            break;
+        }
+        assert!(i < 3000, "requests never became active");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(live_before > 0.0);
+
+    // the client vanishes mid-decode: the reader sees EOF and aborts
+    // everything the connection had in flight
+    drop(victim);
+    for i in 0.. {
+        let v = stats();
+        if v.get("cancelled").unwrap().as_usize().unwrap() == 2 {
+            assert_eq!(v.get("active").unwrap().as_usize().unwrap(), 0);
+            assert_eq!(v.get("completions").unwrap().as_usize().unwrap(), 0);
+            assert!(v.get("cancelled_freed_bytes").unwrap().as_f64().unwrap() > 0.0);
+            let live = v.get("pool_live_bytes").unwrap().as_f64().unwrap();
+            assert!(
+                live < live_before,
+                "disconnect must free the sequences' pages ({live} vs {live_before})"
+            );
+            break;
+        }
+        assert!(i < 3000, "disconnect never cancelled the in-flight work");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn cancel_racing_completion_is_answered_exactly_once() {
+    let addr = spawn_server();
+    let mut stream = connect(addr);
+    // a tiny request that may well complete before the cancel lands:
+    // whichever side wins, exactly one line answers id 7
+    writeln!(stream, "{}", req_line(7, 16, 1)).unwrap();
+    writeln!(stream, "{{\"cancel\": 7}}").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let v = read_json(&mut reader);
+    assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 7);
+    let finish = v.get("finish").unwrap().as_str().unwrap().to_string();
+    assert!(finish == "length" || finish == "cancelled", "unexpected finish {finish}");
+    // no stray second answer: the next line on the wire belongs to the
+    // next request
+    writeln!(stream, "{}", req_line(8, 16, 2)).unwrap();
+    let v = read_json(&mut reader);
+    assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 8, "duplicate answer for id 7");
+}
+
+#[test]
+fn same_request_id_on_two_connections_does_not_collide() {
+    let addr = spawn_server();
+    let mut a = connect(addr);
+    let mut b = connect(addr);
+    // both connections use id 5; distinct generation lengths prove the
+    // completions route back to their own socket
+    writeln!(a, "{}", req_line(5, 40, 3)).unwrap();
+    writeln!(b, "{}", req_line(5, 40, 6)).unwrap();
+    let mut ra = BufReader::new(a.try_clone().unwrap());
+    let mut rb = BufReader::new(b.try_clone().unwrap());
+    let va = read_json(&mut ra);
+    let vb = read_json(&mut rb);
+    assert_eq!(va.get("id").unwrap().as_usize().unwrap(), 5);
+    assert_eq!(va.get("finish").unwrap().as_str().unwrap(), "length");
+    assert_eq!(va.get("tokens").unwrap().as_arr().unwrap().len(), 3, "conn A got B's answer");
+    assert_eq!(vb.get("id").unwrap().as_usize().unwrap(), 5);
+    assert_eq!(vb.get("tokens").unwrap().as_arr().unwrap().len(), 6, "conn B got A's answer");
+}
+
+#[test]
+fn engine_step_failure_fails_inflight_requests_with_error_finish() {
+    // A PJRT backend selected but never constructed makes the first
+    // admission error out of step(). Every waiter must get an "error"
+    // finish line — previously the engine thread just eprintln!'d and
+    // looped, leaving the clients blocked on read_line forever.
+    let addr = spawn_server_with(tiny_engine_with_backend(Backend::PjrtSparse));
+    let mut stream = connect(addr);
+    writeln!(stream, "{}", req_line(1, 32, 4)).unwrap();
+    writeln!(stream, "{}", req_line(2, 32, 4)).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut ids = HashSet::new();
+    for _ in 0..2 {
+        let v = read_json(&mut reader);
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "error");
+        assert!(
+            v.get("error").unwrap().as_str().unwrap().contains("pjrt"),
+            "error line should carry the engine message"
+        );
+        ids.insert(v.get("id").unwrap().as_usize().unwrap() as u64);
+    }
+    assert_eq!(ids, HashSet::from([1, 2]));
+}
+
+#[test]
+fn malformed_lines_get_json_safe_error_responses() {
+    // `{"id" "x"}` produces a parse error whose message contains a `"`
+    // — raw interpolation used to emit a malformed error line; every
+    // error response must parse back as JSON
+    let addr = spawn_server();
+    let mut stream = connect(addr);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, "{{\"id\" \"x\"}}").unwrap();
+    let v = read_json(&mut reader);
+    let msg = v.get("error").unwrap().as_str().unwrap();
+    assert!(msg.contains('"'), "this probe needs a quote-bearing message, got {msg:?}");
+
+    // a well-formed line that fails request validation also answers
+    // with a parseable error object
+    writeln!(stream, "{{\"id\": 1, \"prompt\": \"nope\", \"max_new_tokens\": 1}}").unwrap();
+    let v = read_json(&mut reader);
+    assert!(!v.get("error").unwrap().as_str().unwrap().is_empty());
+
+    // a cancel line with a non-numeric id is answered as a malformed
+    // cancel, not misreported as a request missing prompt/id fields
+    writeln!(stream, "{{\"cancel\": \"7\"}}").unwrap();
+    let v = read_json(&mut reader);
+    assert!(
+        v.get("error").unwrap().as_str().unwrap().contains("cancel"),
+        "malformed cancel should say so"
+    );
+
+    // an out-of-vocab token id (vocab is 512 here) must be rejected at
+    // the engine boundary, not panic the engine thread mid-forward and
+    // hang every waiter forever
+    writeln!(stream, "{{\"id\": 3, \"prompt\": [65535], \"max_new_tokens\": 1}}").unwrap();
+    let v = read_json(&mut reader);
+    assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "rejected");
+
+    // same class: an empty prompt would panic prefill's slicing
+    writeln!(stream, "{{\"id\": 5, \"prompt\": [], \"max_new_tokens\": 1}}").unwrap();
+    let v = read_json(&mut reader);
+    assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "rejected");
+
+    // ... and the server is still alive for well-formed work
+    writeln!(stream, "{}", req_line(4, 16, 2)).unwrap();
+    let v = read_json(&mut reader);
+    assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "length");
+
+    // a request carrying a stray "cancel" field is still a request —
+    // submitted and answered, not swallowed as a cancel message
+    writeln!(stream, "{{\"id\": 9, \"prompt\": [5, 6], \"max_new_tokens\": 1, \"cancel\": 0}}")
+        .unwrap();
+    let v = read_json(&mut reader);
+    assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 9);
+    assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "length");
 }
