@@ -154,8 +154,15 @@ pub struct EngineConfig {
     pub max_batch: usize,
     /// Admission queue capacity.
     pub queue_cap: usize,
-    /// Max generated tokens per request (safety cap).
+    /// Max generated tokens per request (safety cap). Enforced at
+    /// `Engine::submit`: a request asking for more is *clamped* to this
+    /// cap rather than rejected (it finishes `Length` at the cap).
     pub max_new_tokens: usize,
+    /// Queued-request TTL in milliseconds: a request still waiting for
+    /// admission after this long self-cancels with a `Timeout` finish
+    /// instead of occupying a queue slot nobody is waiting on.
+    /// 0 disables the TTL (the default).
+    pub max_queue_ms: u64,
     /// KV pool budget in bytes (0 = unlimited). All compressed-KV
     /// storage — sequence regions, dense tails, shared prefix-cache
     /// pages — reserves fixed-size pages from one `kvpool::KvPool`
@@ -184,6 +191,7 @@ impl Default for EngineConfig {
             max_batch: 8,
             queue_cap: 256,
             max_new_tokens: 64,
+            max_queue_ms: 0,
             kv_budget_bytes: 0,
             kv_page_bytes: crate::kvpool::DEFAULT_PAGE_BYTES,
             prefix_cache: true,

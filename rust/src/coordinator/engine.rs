@@ -20,7 +20,18 @@
 //! to completion while the pressure ladder re-prunes or preempts *live*
 //! requests to make room. `fail_inflight` is the companion for engine
 //! errors: every waiter is answered, none hang.
+//!
+//! Failure behavior is part of the engine's contract: per-sequence
+//! prefill and decode run under `catch_unwind`, so a panic (or an
+//! injected fault — see `crate::faults`) poisons exactly one request,
+//! which finishes `Error` with its pages released, instead of killing
+//! the engine thread and hanging every waiter. Deadline admission
+//! (`max_queue_ms` TTL + per-request `deadline_ms`) self-cancels
+//! requests nobody is waiting on, and a saturated queue sheds new
+//! arrivals immediately with a `retry_after_ms` hint instead of
+//! queueing unboundedly.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -31,6 +42,7 @@ use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::request::{ActiveSeq, Completion, FinishReason, Request};
 use crate::coordinator::scheduler::Scheduler;
 use crate::error::Result;
+use crate::faults::Injector;
 use crate::kvcache::{build_shared_prefill, KvPolicy, SequenceKV};
 use crate::kvpool::{self, KvPool, OwnerId, PoolConfig, PoolStats, PrefixCache, PrefixHit};
 use crate::model::{argmax, DecodeScratch, NativeModel};
@@ -63,6 +75,23 @@ pub struct Engine {
     prefix_cache: PrefixCache,
     /// Monotone admission counter (pressure-controller coldness order).
     admit_stamp: u64,
+    /// Fault injection (disabled unless `MUSTAFAR_FAULTS` is set or a
+    /// test installs an injector). The kvpool shares the same handle.
+    faults: Injector,
+}
+
+/// What `Engine::submit_full` did with a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Accepted into the admission queue.
+    Queued,
+    /// Permanently refused (empty/out-of-vocab prompt, or a KV
+    /// footprint that could never fit the budget). Retrying the same
+    /// request cannot succeed.
+    Rejected,
+    /// Shed under overload: the queue is saturated. Retryable — the
+    /// hint estimates when a slot should open.
+    Shed { retry_after_ms: u64 },
 }
 
 impl Engine {
@@ -78,10 +107,12 @@ impl Engine {
             },
         };
         let scheduler = Scheduler::new(cfg.clone(), model.cfg().clone(), policy);
-        let kvpool = KvPool::new(PoolConfig {
+        let faults = Injector::from_env();
+        let mut kvpool = KvPool::new(PoolConfig {
             budget_bytes: cfg.kv_budget_bytes,
             page_bytes: cfg.kv_page_bytes,
         });
+        kvpool.set_fault_injector(faults.clone());
         let prefix_cache = PrefixCache::new(cfg.prefix_cache);
         Engine {
             cfg,
@@ -96,7 +127,23 @@ impl Engine {
             kvpool,
             prefix_cache,
             admit_stamp: 0,
+            faults,
         }
+    }
+
+    /// Install a fault injector programmatically (tests and the chaos
+    /// harness; servers arm theirs from `MUSTAFAR_FAULTS` at
+    /// construction). The kvpool shares the same handle so every fault
+    /// point draws from one deterministic stream.
+    pub fn set_fault_injector(&mut self, inj: Injector) {
+        self.kvpool.set_fault_injector(inj.clone());
+        self.faults = inj;
+    }
+
+    /// The engine's fault-injector handle (the server clones it so its
+    /// `server.io` point shares the same deterministic stream).
+    pub fn fault_injector(&self) -> &Injector {
+        &self.faults
     }
 
     /// PJRT-backend engine (XLA artifacts on the hot path).
@@ -129,27 +176,79 @@ impl Engine {
         seqs + self.prefix_cache.measured_bytes()
     }
 
-    /// Submit a request to the admission queue (stamping its submission
-    /// time, the base of `Completion::queue_ms`). Rejects empty
-    /// prompts and out-of-vocab token ids here, at the boundary:
-    /// either would otherwise panic the engine thread inside the
-    /// forward pass (`prefill` slices `(t - 1) * d..`; `Tensor::row`
+    /// Submit a request to the admission queue; `true` = queued. The
+    /// boolean view of [`Engine::submit_full`] for callers that treat
+    /// shed and rejected alike.
+    pub fn submit(&mut self, req: Request) -> bool {
+        matches!(self.submit_full(req), SubmitOutcome::Queued)
+    }
+
+    /// Submit a request, distinguishing overload shedding from
+    /// permanent rejection (stamping the submission time, the base of
+    /// `Completion::queue_ms`).
+    ///
+    /// Rejects empty prompts and out-of-vocab token ids here, at the
+    /// boundary: either would otherwise panic the engine thread inside
+    /// the forward pass (`prefill` slices `(t - 1) * d..`; `Tensor::row`
     /// asserts the embedding index) — remotely triggerable hangs of
     /// every waiter that the `fail_inflight` error path cannot catch,
     /// since they are panics rather than `Err`s.
-    pub fn submit(&mut self, req: Request) -> bool {
+    ///
+    /// A saturated queue *sheds* instead of rejecting: the refusal is
+    /// immediate and retryable, with a backoff hint derived from
+    /// observed throughput — bounded queueing beats letting clients
+    /// wait on a queue that cannot drain in time.
+    ///
+    /// `max_new_tokens` over the config cap is clamped, not rejected:
+    /// the cap is a deployment-advertised ceiling, and a truncated
+    /// `Length` answer at the cap serves the client strictly better
+    /// than a hard error for asking optimistically.
+    pub fn submit_full(&mut self, req: Request) -> SubmitOutcome {
         let vocab = self.model.cfg().vocab;
         if req.prompt.is_empty() || req.prompt.iter().any(|&t| t as usize >= vocab) {
             self.metrics.rejected += 1;
-            return false;
+            return SubmitOutcome::Rejected;
+        }
+        if self.scheduler.pending() >= self.cfg.queue_cap {
+            self.metrics.shed += 1;
+            return SubmitOutcome::Shed { retry_after_ms: self.retry_after_hint_ms() };
         }
         let mut req = req;
+        req.max_new_tokens = req.max_new_tokens.min(self.cfg.max_new_tokens.max(1));
         req.submitted = Instant::now();
-        let ok = self.scheduler.submit(req);
-        if !ok {
+        if self.scheduler.submit(req) {
+            SubmitOutcome::Queued
+        } else {
+            // queue_cap was checked above, so this is the scheduler's
+            // impossible-budget refusal: permanent, not retryable
             self.metrics.rejected += 1;
+            SubmitOutcome::Rejected
         }
-        ok
+    }
+
+    /// Milliseconds a shed client should wait before retrying, from
+    /// observed service time: the queue drains roughly one request per
+    /// `mean request latency / max_batch`. Falls back to a small
+    /// constant before any request has completed.
+    pub fn retry_after_hint_ms(&self) -> u64 {
+        if self.metrics.request_ms.is_empty() {
+            return 50;
+        }
+        let mean_ms = crate::util::stats::mean(&self.metrics.request_ms);
+        let per_slot = mean_ms / self.cfg.max_batch.max(1) as f64;
+        per_slot.clamp(10.0, 60_000.0) as u64
+    }
+
+    /// Estimated milliseconds of work queued ahead of a new arrival
+    /// (stats endpoint): pending requests times mean service time,
+    /// divided by the batch width draining them. 0.0 before any
+    /// request has completed.
+    pub fn queue_depth_ms_estimate(&self) -> f64 {
+        if self.metrics.request_ms.is_empty() {
+            return 0.0;
+        }
+        let mean_ms = crate::util::stats::mean(&self.metrics.request_ms);
+        self.scheduler.pending() as f64 * mean_ms / self.cfg.max_batch.max(1) as f64
     }
 
     /// True when nothing is queued or running.
@@ -159,8 +258,12 @@ impl Engine {
 
     /// Admit + prefill new sequences, run one decode round, then settle
     /// every sequence's pool reservation against its actual growth.
+    /// Deadlines are enforced first, so a stale queued request never
+    /// spends prefill compute and an expired active one frees its pages
+    /// before the round.
     pub fn step(&mut self) -> Result<()> {
         let t0 = Instant::now();
+        self.enforce_deadlines();
         self.admit_and_prefill()?;
         self.decode_round()?;
         self.sync_pool();
@@ -168,26 +271,92 @@ impl Engine {
         Ok(())
     }
 
+    /// Timeout sweep, run at the top of every step.
+    ///
+    /// Queued requests past the `max_queue_ms` TTL or their own
+    /// `deadline_ms` self-cancel with a `Timeout` finish — a client
+    /// that bounded its wait has stopped listening, and holding its
+    /// queue slot only delays requests that are still live. Active
+    /// sequences are cut only by their *own* deadline (the TTL governs
+    /// queue wait, not service time); the completion carries whatever
+    /// tokens were generated before the cut and the pages come back
+    /// immediately.
+    fn enforce_deadlines(&mut self) {
+        let ttl = self.cfg.max_queue_ms;
+        let stale = self.scheduler.remove_where(|r| {
+            let waited = r.submitted.elapsed().as_millis() as u64;
+            (ttl > 0 && waited > ttl) || r.deadline_ms.is_some_and(|d| waited > d)
+        });
+        for req in stale {
+            let waited = req.submitted.elapsed().as_millis() as u64;
+            if req.deadline_ms.is_some_and(|d| waited > d) {
+                self.metrics.deadline_exceeded += 1;
+            } else {
+                self.metrics.timed_out_queued += 1;
+            }
+            self.completions.push(Completion::queued(
+                req.id,
+                req.route,
+                req.submitted,
+                FinishReason::Timeout,
+                None,
+            ));
+        }
+
+        let mut i = 0;
+        while i < self.active.len() {
+            let s = &self.active[i];
+            let expired = s
+                .req
+                .deadline_ms
+                .is_some_and(|d| s.req.submitted.elapsed().as_millis() as u64 > d);
+            if !expired {
+                i += 1;
+                continue;
+            }
+            let s = self.active.swap_remove(i);
+            let kv = self.seq_kv_bytes(&s.state);
+            self.note_kv_peaks(kv);
+            self.kvpool.release(s.owner);
+            self.metrics.deadline_exceeded += 1;
+            self.completions.push(s.into_completion(FinishReason::Timeout, None, kv));
+        }
+    }
+
     /// Drive a whole trace to completion and return the completions.
-    /// A request `submit` refuses (queue cap, impossible budget,
-    /// out-of-vocab tokens) still gets a Rejected completion — the
-    /// same answer the server gives — so callers' completion counts
-    /// keep the full trace as their denominator instead of requests
-    /// silently vanishing.
+    /// A request `submit_full` refuses (shed under queue saturation,
+    /// impossible budget, out-of-vocab tokens) still gets a terminal
+    /// completion — the same answer the server gives — so callers'
+    /// completion counts keep the full trace as their denominator
+    /// instead of requests silently vanishing.
     pub fn run_trace(&mut self, reqs: Vec<Request>) -> Result<Vec<Completion>> {
         for r in reqs {
             let (id, route) = (r.id, r.route);
-            if !self.submit(r) {
-                // stamp now, not the request's construction time: the
-                // rejection was instant, and accepted requests have
-                // their `submitted` reset by submit() the same way
-                self.completions.push(Completion::queued(
-                    id,
-                    route,
-                    Instant::now(),
-                    FinishReason::Rejected,
-                    None,
-                ));
+            // stamp now, not the request's construction time: the
+            // refusal was instant, and accepted requests have their
+            // `submitted` reset by submit_full() the same way
+            match self.submit_full(r) {
+                SubmitOutcome::Queued => {}
+                SubmitOutcome::Rejected => {
+                    self.completions.push(Completion::queued(
+                        id,
+                        route,
+                        Instant::now(),
+                        FinishReason::Rejected,
+                        None,
+                    ));
+                }
+                SubmitOutcome::Shed { retry_after_ms } => {
+                    let mut c = Completion::queued(
+                        id,
+                        route,
+                        Instant::now(),
+                        FinishReason::Shed,
+                        None,
+                    );
+                    c.retry_after_ms = Some(retry_after_ms);
+                    self.completions.push(c);
+                }
             }
         }
         while !self.idle() {
@@ -227,7 +396,9 @@ impl Engine {
                     break;
                 }
             }
-            let req = self.scheduler.pop_front().expect("peeked head vanished");
+            // peek_need was Some above, but prefer a graceful stop over
+            // trusting that nothing drained the queue in between
+            let Some(req) = self.scheduler.pop_front() else { break };
             let (id, route, submitted) = (req.id, req.route, req.submitted);
             if let Err(e) = self.start_request(req) {
                 // The popped request must not vanish into the error: its
@@ -250,15 +421,64 @@ impl Engine {
 
     /// Prefill (or restore from the prefix cache), reserve exact pool
     /// bytes, and activate one admitted request.
+    ///
+    /// The state build runs under `catch_unwind`: a panic anywhere in
+    /// prefill (kernel stack, cache restore, or an injected
+    /// `seq.prefill` fault) is isolated to this request — its waiter
+    /// gets an `Error` completion and the engine keeps serving.
+    /// Genuine `Err` returns keep their old semantics (the completion
+    /// is pushed by `admit_and_prefill` and the step error
+    /// propagates): an `Err` is the engine *reporting* a failure it
+    /// understands, a panic is the failure escaping it.
     fn start_request(&mut self, req: Request) -> Result<()> {
         let admitted = Instant::now();
         let queue_ms = admitted.duration_since(req.submitted).as_secs_f64() * 1e3;
         let t0 = Instant::now();
+        let built = catch_unwind(AssertUnwindSafe(|| self.build_seq_state(&req)));
+        let (state, first) = match built {
+            Ok(Ok(built)) => built,
+            Ok(Err(e)) => return Err(e),
+            Err(payload) => {
+                // No pool owner is registered until after the build, and
+                // any prefix-cache insert that completed before the
+                // panic left the cache internally consistent (it owns
+                // its charge) — so accounting stays exact.
+                self.metrics.isolated_panics += 1;
+                self.metrics.failed += 1;
+                let mut c = Completion::queued(
+                    req.id,
+                    req.route,
+                    req.submitted,
+                    FinishReason::Error,
+                    Some(format!(
+                        "isolated panic during prefill: {}",
+                        panic_message(payload.as_ref())
+                    )),
+                );
+                c.queue_ms = queue_ms;
+                c.prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+                self.completions.push(c);
+                return Ok(());
+            }
+        };
+        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.activate(req, state, first, queue_ms, prefill_ms)
+    }
+
+    /// The post-prefill `(state, first_token)` build — prefix-cache
+    /// fast paths or the full forward. Extracted from `start_request`
+    /// so it can run under `catch_unwind`; the injected `seq.prefill`
+    /// fault fires before any state is touched, so an injected panic
+    /// never leaves partial mutations behind.
+    fn build_seq_state(&mut self, req: &Request) -> Result<(SeqState, u16)> {
+        if self.faults.fire("seq.prefill") {
+            panic!("injected fault: seq.prefill");
+        }
         let cacheable = self.prefix_cache.enabled()
             && self.policy.prefix_shareable()
             && matches!(self.cfg.backend, Backend::NativeDense | Backend::NativeSparse);
 
-        let (state, first) = match (self.cfg.backend, &mut self.pjrt) {
+        let out = match (self.cfg.backend, &mut self.pjrt) {
             (Backend::NativeDense | Backend::NativeSparse, _) => {
                 let hit = if cacheable {
                     self.prefix_cache.lookup(&req.prompt, self.policy.local_window)
@@ -305,14 +525,21 @@ impl Engine {
                         // private group copies are dropped.
                         let (snap, tk, tv) = kv.shareable_snapshot()?;
                         let ev0 = self.prefix_cache.evictions;
-                        let canonical = self.prefix_cache.insert(
-                            &req.prompt,
-                            snap,
-                            &tk,
-                            &tv,
-                            first,
-                            &mut self.kvpool,
-                        );
+                        // an injected insert fault models the cache
+                        // declining (its no-room path) — the sequence
+                        // keeps its private state, accounting exact
+                        let canonical = if self.faults.fire("prefix.insert") {
+                            None
+                        } else {
+                            self.prefix_cache.insert(
+                                &req.prompt,
+                                snap,
+                                &tk,
+                                &tv,
+                                first,
+                                &mut self.kvpool,
+                            )
+                        };
                         self.metrics.prefix_evictions += self.prefix_cache.evictions - ev0;
                         if let Some(p) = canonical {
                             kv.promote_prefix(p)?;
@@ -334,14 +561,18 @@ impl Engine {
                             let (prefix, tk, tv) =
                                 build_shared_prefill(&self.policy, l, nkv, hd, &r.k, &r.v, r.t)?;
                             let ev0 = self.prefix_cache.evictions;
-                            let canonical = self.prefix_cache.insert(
-                                &req.prompt,
-                                Arc::new(prefix),
-                                &tk,
-                                &tv,
-                                first,
-                                &mut self.kvpool,
-                            );
+                            let canonical = if self.faults.fire("prefix.insert") {
+                                None
+                            } else {
+                                self.prefix_cache.insert(
+                                    &req.prompt,
+                                    Arc::new(prefix),
+                                    &tk,
+                                    &tv,
+                                    first,
+                                    &mut self.kvpool,
+                                )
+                            };
                             self.metrics.prefix_evictions += self.prefix_cache.evictions - ev0;
                             if let Some(p) = canonical {
                                 SequenceKV::restore_full(self.policy, p, tk, tv, r.t)?
@@ -372,8 +603,19 @@ impl Engine {
                 ))
             }
         };
-        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+        Ok(out)
+    }
 
+    /// Reserve exact pool bytes for a freshly built sequence state and
+    /// activate it (the second half of `start_request`).
+    fn activate(
+        &mut self,
+        req: Request,
+        state: SeqState,
+        first: u16,
+        queue_ms: f64,
+        prefill_ms: f64,
+    ) -> Result<()> {
         // Exact reservation against the pool. This is the issue's
         // "reservation would exceed the budget" moment: the full ladder
         // (evict → re-prune → preempt) may run; only a request that
@@ -542,6 +784,7 @@ impl Engine {
         let owners: Vec<(OwnerId, u64)> =
             self.active.iter().map(|s| (s.owner, s.admitted_seq)).collect();
         for (owner, stamp) in owners {
+            let mut attempts = 0;
             loop {
                 let Some(idx) = self.active.iter().position(|s| s.owner == owner) else {
                     break; // preempted by an earlier sequence's reclaim
@@ -550,7 +793,12 @@ impl Engine {
                 match self.kvpool.set_live_bytes(owner, bytes) {
                     Ok(()) => break,
                     Err(sf) => {
-                        if self.reclaim(sf.bytes, Some(stamp), true) {
+                        // Bounded retries: under fault injection the
+                        // pool can keep refusing a reservation that
+                        // headroom says fits, and an unbounded
+                        // reclaim-retry cycle would never terminate.
+                        attempts += 1;
+                        if attempts <= 3 && self.reclaim(sf.bytes, Some(stamp), true) {
                             continue; // retry the reservation
                         }
                         let Some(idx) = self.active.iter().position(|s| s.owner == owner) else {
@@ -620,45 +868,106 @@ impl Engine {
                 // Sequences are independent: decode them in parallel
                 // (the CPU analogue of GPU batch parallelism) on the
                 // persistent worker pool — no per-round thread spawning.
+                // Each sequence's step runs under catch_unwind, so a
+                // panic or decode error poisons only that sequence.
                 let n = self.active.len();
-                let results: Vec<Result<u16>> = if n > 1 {
+                let outcomes: Vec<DecodeOutcome> = if n > 1 {
                     let workers = crate::util::threads().min(self.cfg.max_batch.max(1));
                     let pool = self.pool.get_or_insert_with(|| WorkerPool::new(workers));
                     let model: &NativeModel = &self.model;
-                    let mut slots: Vec<Option<Result<u16>>> = (0..n).map(|_| None).collect();
+                    let faults = &self.faults;
+                    let mut slots: Vec<Option<DecodeOutcome>> = (0..n).map(|_| None).collect();
                     let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
                         .active
                         .iter_mut()
                         .zip(slots.iter_mut())
                         .map(|(s, slot)| {
-                            let job: Box<dyn FnOnce() + Send + '_> =
-                                Box::new(move || *slot = Some(decode_one_native(model, s)));
+                            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                                *slot = Some(decode_step_isolated(model, faults, s, true))
+                            });
                             job
                         })
                         .collect();
                     pool.run_scoped(jobs);
-                    slots.into_iter().map(|r| r.expect("decode job dropped")).collect()
+                    slots
+                        .into_iter()
+                        .map(|r| {
+                            // a dropped job (worker died before writing
+                            // its slot) fails one sequence, not the batch
+                            r.unwrap_or_else(|| {
+                                DecodeOutcome::Failed(crate::Error::Engine(
+                                    "decode job dropped".into(),
+                                ))
+                            })
+                        })
+                        .collect()
                 } else {
                     let model = Arc::clone(&self.model);
-                    self.active.iter_mut().map(|s| decode_one_native(&model, s)).collect()
+                    let faults = self.faults.clone();
+                    self.active
+                        .iter_mut()
+                        .map(|s| decode_step_isolated(&model, &faults, s, false))
+                        .collect()
                 };
-                // count each token as it lands: a mid-batch decode error
-                // propagates with the earlier sequences' new tokens
-                // already in `generated`, and `fail_inflight` will carry
-                // them in Error completions — the `generated_tokens ==
+                // count each token as it lands: failed sequences leave
+                // their earlier tokens in `generated`, and their Error
+                // completions carry them — the `generated_tokens ==
                 // Σ completion lengths` invariant must include them
-                for (s, r) in self.active.iter_mut().zip(results) {
-                    let tok = r?;
-                    s.generated.push(tok);
-                    s.pos += 1;
-                    self.metrics.generated_tokens += 1;
+                let mut casualties: Vec<(OwnerId, String, bool)> = Vec::new();
+                for (s, o) in self.active.iter_mut().zip(outcomes) {
+                    match o {
+                        DecodeOutcome::Token(tok) => {
+                            s.generated.push(tok);
+                            s.pos += 1;
+                            self.metrics.generated_tokens += 1;
+                        }
+                        DecodeOutcome::Failed(e) => {
+                            casualties.push((s.owner, e.to_string(), false));
+                        }
+                        DecodeOutcome::Panicked(msg) => {
+                            let msg = format!("isolated panic during decode: {msg}");
+                            casualties.push((s.owner, msg, true));
+                        }
+                    }
+                }
+                // retire poisoned sequences: pages released, waiter
+                // answered with an Error finish, the batch keeps going
+                for (owner, msg, panicked) in casualties {
+                    let Some(idx) = self.active.iter().position(|s| s.owner == owner) else {
+                        continue;
+                    };
+                    let s = self.active.swap_remove(idx);
+                    let kv = self.seq_kv_bytes(&s.state);
+                    self.note_kv_peaks(kv);
+                    self.kvpool.release(s.owner);
+                    self.metrics.failed += 1;
+                    if panicked {
+                        self.metrics.isolated_panics += 1;
+                    }
+                    self.completions.push(s.into_completion(
+                        FinishReason::Error,
+                        Some(msg),
+                        kv,
+                    ));
                 }
             }
             Backend::PjrtDense | Backend::PjrtSparse => {
-                let pj = self.pjrt.as_ref().unwrap();
+                let Some(pj) = self.pjrt.as_ref() else {
+                    return Err(crate::Error::Engine(
+                        "pjrt backend selected but not constructed".into(),
+                    ));
+                };
                 for s in self.active.iter_mut() {
-                    let last = *s.generated.last().unwrap();
-                    let SeqState::Pjrt(seq) = &mut s.state else { unreachable!() };
+                    let Some(&last) = s.generated.last() else {
+                        return Err(crate::Error::Engine(
+                            "active sequence has no seed token".into(),
+                        ));
+                    };
+                    let SeqState::Pjrt(seq) = &mut s.state else {
+                        return Err(crate::Error::Engine(
+                            "pjrt decode on a non-pjrt sequence state".into(),
+                        ));
+                    };
                     let logits = pj.decode(seq, last, s.pos)?;
                     s.generated.push(argmax(&logits));
                     s.pos += 1;
@@ -797,11 +1106,60 @@ impl Engine {
     }
 }
 
+/// One sequence's decode step, every failure as data.
+enum DecodeOutcome {
+    Token(u16),
+    Failed(crate::Error),
+    Panicked(String),
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "opaque panic payload"
+    }
+}
+
+/// Run one sequence's decode step under `catch_unwind`: panics (from
+/// the kernel stack or an injected `worker.task` fault on the pooled
+/// path) and `Err`s (including injected `seq.decode` faults) come back
+/// as data for per-sequence retirement instead of unwinding the engine
+/// or a worker thread.
+fn decode_step_isolated(
+    model: &NativeModel,
+    faults: &Injector,
+    s: &mut ActiveSeq,
+    pooled: bool,
+) -> DecodeOutcome {
+    let out = catch_unwind(AssertUnwindSafe(|| {
+        if pooled && faults.fire("worker.task") {
+            panic!("injected fault: worker.task");
+        }
+        if faults.fire("seq.decode") {
+            return Err(crate::Error::Engine("injected fault: seq.decode".into()));
+        }
+        decode_one_native(model, s)
+    }));
+    match out {
+        Ok(Ok(tok)) => DecodeOutcome::Token(tok),
+        Ok(Err(e)) => DecodeOutcome::Failed(e),
+        Err(payload) => DecodeOutcome::Panicked(panic_message(payload.as_ref()).to_string()),
+    }
+}
+
 fn decode_one_native(model: &NativeModel, s: &mut ActiveSeq) -> Result<u16> {
-    let last = *s.generated.last().unwrap();
+    let Some(&last) = s.generated.last() else {
+        return Err(crate::Error::Engine("active sequence has no seed token".into()));
+    };
     let pos = s.pos;
     let ActiveSeq { state, scratch, .. } = s;
-    let SeqState::Native(kv) = state else { unreachable!() };
+    let SeqState::Native(kv) = state else {
+        return Err(crate::Error::Engine("native decode on a non-native sequence state".into()));
+    };
     model.decode_into(last, pos, kv, scratch)?;
     Ok(argmax(&scratch.logits))
 }
@@ -1145,6 +1503,9 @@ mod tests {
     #[test]
     fn cancel_queued_and_active_requests_end_to_end() {
         let mut e = tiny_engine(Backend::NativeSparse, (0.5, 0.5));
+        // the tiny-engine cap (8) would clamp these 64-token requests
+        // before the mid-decode cancel below could land; raise it
+        e.cfg.max_new_tokens = 64;
         // max_batch = 4: four go active, the fifth waits in the queue
         for r in reqs(5, 64, 64) {
             assert!(e.submit(r));
@@ -1409,6 +1770,178 @@ mod tests {
         assert!(out[0].error.as_deref().unwrap_or("").contains("pjrt"));
         assert_eq!(e.metrics.failed, 1);
         assert!(e.idle(), "the failed request is not stuck in the engine");
+    }
+
+    #[test]
+    fn max_new_tokens_is_clamped_to_the_config_cap() {
+        // tiny_engine caps max_new_tokens at 8: a request asking for 64
+        // is clamped (finishes Length at the cap), not rejected
+        let mut e = tiny_engine(Backend::NativeDense, (0.0, 0.0));
+        let out = e.run_trace(reqs(1, 24, 64)).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].finish, FinishReason::Length);
+        assert_eq!(out[0].tokens.len(), 8, "clamped to the cap, not the request");
+        assert_eq!(e.metrics.rejected, 0);
+    }
+
+    #[test]
+    fn stale_queued_requests_time_out_via_ttl() {
+        let cfg = tiny_model_cfg(2, 1, 32);
+        let model = NativeModel::new(Weights::random_for_tests(cfg, 42));
+        let mut ec = EngineConfig::default();
+        ec.backend = Backend::NativeDense;
+        ec.max_batch = 1; // the second request waits in the queue
+        ec.max_queue_ms = 1;
+        let mut e = Engine::new_native(model, ec);
+        for r in reqs(2, 48, 8) {
+            assert!(e.submit(r));
+        }
+        e.step().unwrap(); // admits request 0 before any wait accrues
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        while !e.idle() {
+            e.step().unwrap();
+            assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+        }
+        let out = e.take_completions();
+        assert_eq!(out.len(), 2, "every request answered exactly once");
+        let c0 = out.iter().find(|c| c.id == 0).unwrap();
+        let c1 = out.iter().find(|c| c.id == 1).unwrap();
+        assert_eq!(c0.finish, FinishReason::Length, "the running request is untouched");
+        assert_eq!(c1.finish, FinishReason::Timeout);
+        assert!(c1.tokens.is_empty(), "timed out while queued: nothing generated");
+        assert_eq!(e.metrics.timed_out_queued, 1);
+        assert_eq!(e.metrics.deadline_exceeded, 0);
+    }
+
+    #[test]
+    fn per_request_deadline_cuts_an_active_sequence() {
+        let mut e = tiny_engine(Backend::NativeSparse, (0.5, 0.5));
+        e.cfg.max_new_tokens = 10_000; // decode long enough to expire
+        let mut r = reqs(1, 64, 10_000).remove(0);
+        r.deadline_ms = Some(30);
+        assert!(e.submit(r));
+        let deadline = Instant::now() + std::time::Duration::from_secs(60);
+        while !e.idle() {
+            assert!(Instant::now() < deadline, "deadline never enforced");
+            e.step().unwrap();
+            assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+        }
+        let out = e.take_completions();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].finish, FinishReason::Timeout);
+        assert!(!out[0].tokens.is_empty(), "partial tokens ride the timeout completion");
+        assert!(out[0].tokens.len() < 10_000);
+        assert_eq!(e.metrics.deadline_exceeded, 1);
+        // the partial tokens keep the throughput invariant exact
+        assert_eq!(e.metrics.generated_tokens, out[0].tokens.len());
+        assert_eq!(e.pool_stats().live_bytes, e.prefix_cache().measured_bytes());
+    }
+
+    #[test]
+    fn saturated_queue_sheds_with_a_retry_hint() {
+        let cfg = tiny_model_cfg(2, 1, 32);
+        let model = NativeModel::new(Weights::random_for_tests(cfg, 42));
+        let mut ec = EngineConfig::default();
+        ec.backend = Backend::NativeDense;
+        ec.queue_cap = 1;
+        let mut e = Engine::new_native(model, ec);
+        let mut rs = reqs(3, 16, 2).into_iter();
+        assert_eq!(e.submit_full(rs.next().unwrap()), SubmitOutcome::Queued);
+        match e.submit_full(rs.next().unwrap()) {
+            SubmitOutcome::Shed { retry_after_ms } => {
+                assert!(retry_after_ms > 0, "hint must be actionable");
+            }
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        assert_eq!(e.metrics.shed, 1);
+        assert_eq!(e.metrics.rejected, 0, "shed is retryable, not a rejection");
+        // trace mode answers a shed request with a Shed completion
+        let out = e.run_trace(vec![rs.next().unwrap()]).unwrap();
+        let shed: Vec<_> =
+            out.iter().filter(|c| c.finish == FinishReason::Shed).collect();
+        assert_eq!(shed.len(), 1);
+        assert!(shed[0].retry_after_ms.is_some());
+        assert_eq!(e.metrics.shed, 2);
+    }
+
+    #[test]
+    fn injected_decode_fault_isolates_one_round_not_the_engine() {
+        let mut e = tiny_engine(Backend::NativeSparse, (0.5, 0.5));
+        // every seq.decode consult after the 4th fails: the first round
+        // of a 2-sequence batch passes, later rounds poison sequences
+        e.set_fault_injector(
+            crate::faults::Injector::parse("seq.decode:after=4", 7).unwrap(),
+        );
+        let out = e.run_trace(reqs(2, 40, 8)).unwrap();
+        assert_eq!(out.len(), 2, "every request answered exactly once");
+        for c in &out {
+            assert_eq!(c.finish, FinishReason::Error);
+            assert!(c.error.as_deref().unwrap_or("").contains("seq.decode"));
+            assert!(!c.tokens.is_empty(), "pre-fault tokens ride the Error completion");
+        }
+        assert_eq!(e.metrics.failed, 2);
+        assert_eq!(e.metrics.isolated_panics, 0, "an Err is not a panic");
+        let total: usize = out.iter().map(|c| c.tokens.len()).sum();
+        assert_eq!(e.metrics.generated_tokens, total);
+        assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+        // the engine survives: a fresh fault-free run still completes
+        e.set_fault_injector(crate::faults::Injector::disabled());
+        let ok = e.run_trace(reqs(1, 24, 3)).unwrap();
+        assert_eq!(ok[0].finish, FinishReason::Length);
+    }
+
+    #[test]
+    fn injected_worker_panic_is_contained_to_its_sequence() {
+        let mut e = tiny_engine(Backend::NativeSparse, (0.5, 0.5));
+        // 4 sequences/round on the pooled path: hits 1-6 pass, so the
+        // first rounds are clean, then panics start landing mid-batch
+        e.set_fault_injector(
+            crate::faults::Injector::parse("worker.task:after=6", 11).unwrap(),
+        );
+        let out = e.run_trace(reqs(4, 40, 8)).unwrap();
+        assert_eq!(out.len(), 4, "every request answered exactly once");
+        let errs = out.iter().filter(|c| c.finish == FinishReason::Error).count();
+        assert!(errs >= 1, "injected panics must surface as Error completions");
+        for c in out.iter().filter(|c| c.finish == FinishReason::Error) {
+            assert!(c.error.as_deref().unwrap_or("").contains("isolated panic"));
+        }
+        assert_eq!(e.metrics.isolated_panics, errs);
+        let total: usize = out.iter().map(|c| c.tokens.len()).sum();
+        assert_eq!(e.metrics.generated_tokens, total);
+        assert_eq!(
+            e.pool_stats().live_bytes,
+            e.prefix_cache().measured_bytes(),
+            "poisoned sequences released their pages"
+        );
+    }
+
+    #[test]
+    fn injected_prefill_panic_is_contained_to_its_request() {
+        let mut e = tiny_engine(Backend::NativeSparse, (0.5, 0.5));
+        // first prefill passes, every later one panics
+        e.set_fault_injector(
+            crate::faults::Injector::parse("seq.prefill:after=1", 5).unwrap(),
+        );
+        let out = e.run_trace(reqs(3, 40, 4)).unwrap();
+        assert_eq!(out.len(), 3, "every request answered exactly once");
+        let mut ok = 0;
+        for c in &out {
+            match c.finish {
+                FinishReason::Length => ok += 1,
+                FinishReason::Error => {
+                    assert!(c
+                        .error
+                        .as_deref()
+                        .unwrap_or("")
+                        .contains("isolated panic during prefill"));
+                    assert!(c.tokens.is_empty());
+                }
+                other => panic!("unexpected finish {other:?}"),
+            }
+        }
+        assert_eq!(ok, 1);
+        assert_eq!(e.metrics.isolated_panics, 2);
+        assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
     }
 
     #[test]

@@ -42,8 +42,20 @@ pub struct Metrics {
     /// requests via re-prune/preempt or held to completion.
     pub cancelled_freed_bytes: usize,
     /// Requests failed back to their clients because the engine errored
-    /// while they were in flight (`Engine::fail_inflight`).
+    /// while they were in flight (`Engine::fail_inflight`), or because
+    /// their own prefill/decode failed and was isolated.
     pub failed: usize,
+    /// Queued requests self-cancelled by the `max_queue_ms` TTL before
+    /// admission.
+    pub timed_out_queued: usize,
+    /// Requests (queued or active) cut by their own `deadline_ms`.
+    pub deadline_exceeded: usize,
+    /// Requests shed at admission under overload (queue saturated);
+    /// answered immediately with a retryable `Shed` completion.
+    pub shed: usize,
+    /// Panics caught and contained to a single sequence (prefill or
+    /// decode) instead of killing the engine thread.
+    pub isolated_panics: usize,
 }
 
 impl Metrics {

@@ -9,7 +9,7 @@ pub mod pool;
 pub mod request;
 pub mod scheduler;
 
-pub use engine::Engine;
+pub use engine::{Engine, SubmitOutcome};
 pub use metrics::Metrics;
 pub use pool::WorkerPool;
 pub use request::{Completion, FinishReason, Request};

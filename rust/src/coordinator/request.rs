@@ -24,6 +24,11 @@ pub struct Request {
     /// admission − submission against it. Preserved across preemption
     /// so re-queued requests report their full queue time.
     pub submitted: Instant,
+    /// Optional end-to-end deadline in milliseconds from submission.
+    /// Checked every engine round: a request past its deadline finishes
+    /// `Timeout` (with whatever tokens it generated) instead of holding
+    /// pool pages for an answer the client has stopped waiting for.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Request {
@@ -35,6 +40,7 @@ impl Request {
             max_new_tokens,
             stop_token: None,
             submitted: Instant::now(),
+            deadline_ms: None,
         }
     }
 }
@@ -57,6 +63,15 @@ pub enum FinishReason {
     /// errored); the request was failed back instead of hanging its
     /// waiter. `Completion::error` carries the message.
     Error,
+    /// The request outlived its time allowance: either it sat queued
+    /// past `EngineConfig::max_queue_ms`, or it blew through its own
+    /// `Request::deadline_ms` (queued or mid-decode — the completion
+    /// carries any tokens generated before the cut).
+    Timeout,
+    /// Shed at admission under overload (queue saturated). Unlike
+    /// `Rejected` this is retryable: `Completion::retry_after_ms`
+    /// carries a backoff hint derived from observed throughput.
+    Shed,
 }
 
 /// Completed request with timing breakdown.
@@ -76,6 +91,9 @@ pub struct Completion {
     pub kv_bytes: usize,
     /// Dense-equivalent KV bytes at completion.
     pub kv_dense_bytes: usize,
+    /// For `FinishReason::Shed`: how long the client should wait before
+    /// retrying, derived from current decode throughput and queue depth.
+    pub retry_after_ms: Option<u64>,
 }
 
 impl Completion {
@@ -101,6 +119,7 @@ impl Completion {
             decode_ms: 0.0,
             kv_bytes: 0,
             kv_dense_bytes: 0,
+            retry_after_ms: None,
         }
     }
 }
@@ -149,6 +168,7 @@ impl ActiveSeq {
             decode_ms: self.decode_start.elapsed().as_secs_f64() * 1e3,
             kv_bytes: kv.0,
             kv_dense_bytes: kv.1,
+            retry_after_ms: None,
         }
     }
 }

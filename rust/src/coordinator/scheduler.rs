@@ -166,6 +166,24 @@ impl Scheduler {
         self.queue.iter().any(|r| r.route == route)
     }
 
+    /// Remove and return every queued request matching `pred`,
+    /// preserving the order of both the removed set and the remainder
+    /// (deadline sweep: the engine answers each removed request with a
+    /// `Timeout` completion).
+    pub fn remove_where<F: FnMut(&Request) -> bool>(&mut self, mut pred: F) -> Vec<Request> {
+        let mut removed = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        for r in self.queue.drain(..) {
+            if pred(&r) {
+                removed.push(r);
+            } else {
+                kept.push_back(r);
+            }
+        }
+        self.queue = kept;
+        removed
+    }
+
     /// Capacity-only admission (`running` = current batch size): pops up
     /// to `max_batch` requests without byte gating. Callers holding a
     /// `KvPool` (the engine) admit one at a time through `peek_need` /
@@ -344,6 +362,19 @@ mod tests {
         assert_eq!(s.remove_by_id(9).unwrap().id, 9);
         assert_eq!(s.pop_front().unwrap().id, 0);
         assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn remove_where_splits_queue_in_order() {
+        let cfg = mc();
+        let mut s = Scheduler::new(EngineConfig::default(), cfg, KvPolicy::dense());
+        for i in 0..6 {
+            s.submit(Request::new(i, vec![0; 8], 4));
+        }
+        let removed = s.remove_where(|r| r.id % 2 == 0);
+        assert_eq!(removed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 4]);
+        let rest: Vec<u64> = std::iter::from_fn(|| s.pop_front()).map(|r| r.id).collect();
+        assert_eq!(rest, vec![1, 3, 5]);
     }
 
     #[test]

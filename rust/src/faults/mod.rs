@@ -1,0 +1,259 @@
+//! Deterministic fault injection for robustness testing.
+//!
+//! A fault *point* is a named site in the engine (`"kvpool.alloc"`,
+//! `"seq.decode"`, ...) that asks its [`Injector`] whether to fail this
+//! time. Points are armed from a spec string — usually the
+//! `MUSTAFAR_FAULTS` environment variable — of comma-separated
+//! `name:trigger` pairs, where a trigger is either a probability
+//! (`kvpool.alloc:0.05` → fail ~5% of hits) or a counter
+//! (`worker.task:after=200` → the first 200 hits pass, every later hit
+//! fails). `MUSTAFAR_FAULT_SEED` fixes the probability draws.
+//!
+//! Two properties the chaos tests rely on:
+//!
+//! - **Zero-cost when disabled.** An injector built without a spec holds
+//!   no state and `fire` returns `false` without taking a lock, so
+//!   production binaries and fault-free tests behave byte-identically to
+//!   a build without the subsystem.
+//! - **Interleaving-independent determinism.** Each point owns its own
+//!   PCG stream seeded from `seed ^ fnv1a(name)`, so whether a given hit
+//!   of `seq.decode` fails depends only on the seed and that point's hit
+//!   index — not on how many times other points fired in between, nor on
+//!   worker-thread scheduling (each decision is taken under the lock).
+//!
+//! Injectors are handles: cloning shares the underlying counters, which
+//! is what lets the engine and its kvpool draw from one stream and lets
+//! a test read back `fired()` tallies after a run. Tests install
+//! injectors programmatically via `Engine::set_fault_injector` rather
+//! than through the environment, so parallel tests never interfere.
+
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+/// How a fault point decides whether a given hit fails.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Trigger {
+    /// Fail each hit independently with this probability.
+    Prob(f32),
+    /// Hits `1..=n` pass; every hit after the first `n` fails.
+    After(u64),
+}
+
+#[derive(Clone, Debug)]
+struct FaultPoint {
+    name: String,
+    trigger: Trigger,
+    /// Times this point was consulted.
+    hits: u64,
+    /// Times it answered "fail".
+    fires: u64,
+    rng: crate::util::Pcg32,
+}
+
+#[derive(Debug)]
+struct Inner {
+    points: Vec<FaultPoint>,
+}
+
+/// Tally of one fault point after a run: `(name, hits, fires)`.
+pub type FaultReport = (String, u64, u64);
+
+/// A handle to a set of armed fault points. Cheap to clone (shared
+/// state); a default/disabled injector carries no allocation at all.
+#[derive(Clone, Debug, Default)]
+pub struct Injector {
+    inner: Option<Arc<Mutex<Inner>>>,
+}
+
+/// FNV-1a, used to give each point a name-derived PCG stream.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Injector {
+    /// An injector with no armed points: every `fire` is `false`.
+    pub fn disabled() -> Self {
+        Injector { inner: None }
+    }
+
+    /// Parse a spec string (`"kvpool.alloc:0.05,worker.task:after=200"`)
+    /// into an armed injector. An empty spec yields a disabled injector.
+    pub fn parse(spec: &str, seed: u64) -> Result<Self> {
+        let mut points = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((name, trig)) = part.split_once(':') else {
+                return Err(Error::Config(format!(
+                    "fault spec entry '{part}' is not name:trigger"
+                )));
+            };
+            let trigger = if let Some(n) = trig.strip_prefix("after=") {
+                let n: u64 = n
+                    .parse()
+                    .map_err(|_| Error::Config(format!("fault spec '{part}': bad counter")))?;
+                Trigger::After(n)
+            } else {
+                let p: f32 = trig
+                    .parse()
+                    .map_err(|_| Error::Config(format!("fault spec '{part}': bad probability")))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(Error::Config(format!(
+                        "fault spec '{part}': probability outside [0, 1]"
+                    )));
+                }
+                Trigger::Prob(p)
+            };
+            points.push(FaultPoint {
+                name: name.to_string(),
+                trigger,
+                hits: 0,
+                fires: 0,
+                rng: crate::util::Pcg32::new(seed ^ fnv1a(name), 54),
+            });
+        }
+        if points.is_empty() {
+            return Ok(Self::disabled());
+        }
+        Ok(Injector { inner: Some(Arc::new(Mutex::new(Inner { points }))) })
+    }
+
+    /// Build from `MUSTAFAR_FAULTS` / `MUSTAFAR_FAULT_SEED`. Unset (or
+    /// unparseable — a server should not die to a typo'd chaos knob)
+    /// yields a disabled injector.
+    pub fn from_env() -> Self {
+        let Ok(spec) = std::env::var("MUSTAFAR_FAULTS") else {
+            return Self::disabled();
+        };
+        let seed = std::env::var("MUSTAFAR_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5eed);
+        Self::parse(&spec, seed).unwrap_or_else(|_| Self::disabled())
+    }
+
+    /// Whether any point is armed. Lets hot paths skip building fault
+    /// payloads entirely when injection is off.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Consult the point called `name`: returns `true` when the caller
+    /// should fail this time. Unarmed names (and a disabled injector)
+    /// always return `false`.
+    pub fn fire(&self, name: &str) -> bool {
+        let Some(inner) = &self.inner else {
+            return false;
+        };
+        let mut inner = inner.lock().unwrap_or_else(|p| p.into_inner());
+        let Some(p) = inner.points.iter_mut().find(|p| p.name == name) else {
+            return false;
+        };
+        p.hits += 1;
+        let fired = match p.trigger {
+            Trigger::Prob(prob) => p.rng.unit_f32() < prob,
+            Trigger::After(n) => p.hits > n,
+        };
+        if fired {
+            p.fires += 1;
+        }
+        fired
+    }
+
+    /// Per-point `(name, hits, fires)` tallies, in spec order. Empty for
+    /// a disabled injector. The chaos harness turns this into the
+    /// EXPERIMENTS.md fault-matrix table.
+    pub fn fired(&self) -> Vec<FaultReport> {
+        let Some(inner) = &self.inner else {
+            return Vec::new();
+        };
+        let inner = inner.lock().unwrap_or_else(|p| p.into_inner());
+        inner.points.iter().map(|p| (p.name.clone(), p.hits, p.fires)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_injector_never_fires_and_reports_nothing() {
+        let inj = Injector::disabled();
+        assert!(!inj.enabled());
+        for _ in 0..100 {
+            assert!(!inj.fire("kvpool.alloc"));
+        }
+        assert!(inj.fired().is_empty());
+        // Default is disabled too.
+        assert!(!Injector::default().enabled());
+    }
+
+    #[test]
+    fn empty_spec_is_disabled() {
+        assert!(!Injector::parse("", 1).unwrap().enabled());
+        assert!(!Injector::parse(" , ", 1).unwrap().enabled());
+    }
+
+    #[test]
+    fn bad_specs_are_config_errors() {
+        assert!(Injector::parse("noseparator", 1).is_err());
+        assert!(Injector::parse("a:notanumber", 1).is_err());
+        assert!(Injector::parse("a:1.5", 1).is_err());
+        assert!(Injector::parse("a:after=x", 1).is_err());
+    }
+
+    #[test]
+    fn after_counter_passes_then_always_fires() {
+        let inj = Injector::parse("p:after=3", 9).unwrap();
+        let fires: Vec<bool> = (0..6).map(|_| inj.fire("p")).collect();
+        assert_eq!(fires, [false, false, false, true, true, true]);
+        assert_eq!(inj.fired(), vec![("p".to_string(), 6, 3)]);
+    }
+
+    #[test]
+    fn probability_extremes() {
+        let always = Injector::parse("p:1.0", 4).unwrap();
+        let never = Injector::parse("p:0.0", 4).unwrap();
+        for _ in 0..50 {
+            assert!(always.fire("p"));
+            assert!(!never.fire("p"));
+        }
+    }
+
+    #[test]
+    fn unarmed_point_names_never_fire() {
+        let inj = Injector::parse("p:1.0", 4).unwrap();
+        assert!(!inj.fire("other.point"));
+        // the unarmed consult is not tallied
+        assert_eq!(inj.fired(), vec![("p".to_string(), 0, 0)]);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_interleaving_independent() {
+        // Same seed → same per-point decision sequence, regardless of
+        // how hits to *other* points interleave.
+        let a = Injector::parse("x:0.4,y:0.4", 77).unwrap();
+        let b = Injector::parse("x:0.4,y:0.4", 77).unwrap();
+        let seq_a: Vec<bool> = (0..64).map(|_| a.fire("x")).collect();
+        let seq_b: Vec<bool> = (0..64)
+            .map(|_| {
+                b.fire("y"); // extra traffic on another point
+                b.fire("x")
+            })
+            .collect();
+        assert_eq!(seq_a, seq_b);
+        assert!(seq_a.iter().any(|&f| f) && seq_a.iter().any(|&f| !f));
+        // And clones share state: counters accumulate across handles.
+        let c = a.clone();
+        c.fire("x");
+        assert_eq!(a.fired()[0].1, 65);
+    }
+}

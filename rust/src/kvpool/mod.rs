@@ -122,6 +122,16 @@ pub struct KvPool {
     live_bytes: usize,
     peak_live_bytes: usize,
     peak_used_pages: usize,
+    /// Fault injection (`kvpool.alloc` / `kvpool.release` points).
+    /// Disabled by default; `Engine::set_fault_injector` shares the
+    /// engine's injector here.
+    faults: crate::faults::Injector,
+    /// Pages whose release was deferred by a `kvpool.release` fault:
+    /// they hold no live bytes but still count against the budget until
+    /// the next pool mutation flushes them — modelling a device
+    /// allocator that frees asynchronously. Live-byte accounting stays
+    /// exact throughout; only *reservation* headroom lags.
+    quarantine: Vec<u32>,
 }
 
 impl KvPool {
@@ -144,11 +154,28 @@ impl KvPool {
             live_bytes: 0,
             peak_live_bytes: 0,
             peak_used_pages: 0,
+            faults: crate::faults::Injector::disabled(),
+            quarantine: Vec::new(),
         }
     }
 
     pub fn config(&self) -> &PoolConfig {
         &self.cfg
+    }
+
+    /// Arm the pool's fault points with a (usually engine-shared)
+    /// injector.
+    pub fn set_fault_injector(&mut self, inj: crate::faults::Injector) {
+        self.faults = inj;
+    }
+
+    /// Return quarantined (fault-deferred) pages to the free list.
+    fn flush_quarantine(&mut self) {
+        if self.quarantine.is_empty() {
+            return;
+        }
+        self.used_pages -= self.quarantine.len();
+        self.free.append(&mut self.quarantine);
     }
 
     /// Register a new (empty) owner.
@@ -168,6 +195,7 @@ impl KvPool {
         owner: OwnerId,
         bytes: usize,
     ) -> std::result::Result<(), Shortfall> {
+        self.flush_quarantine();
         let page = self.cfg.page_bytes;
         let need = bytes.div_ceil(page);
         let table = self.owners.get_mut(&owner.0).expect("unknown pool owner");
@@ -176,6 +204,12 @@ impl KvPool {
             let grow = need - cur;
             let avail = self.total_pages - self.used_pages;
             if grow > avail {
+                return Err(Shortfall { bytes: grow * page });
+            }
+            // Injected allocation failure: surfaces as an ordinary
+            // shortfall so callers exercise the same pressure ladder a
+            // genuine out-of-pages condition would.
+            if self.faults.fire("kvpool.alloc") {
                 return Err(Shortfall { bytes: grow * page });
             }
             for _ in 0..grow {
@@ -208,11 +242,20 @@ impl KvPool {
     /// owner) — the cancellation path reports this as memory handed
     /// back to the pool instead of being reclaimed from live requests.
     pub fn release(&mut self, owner: OwnerId) -> usize {
+        self.flush_quarantine();
         match self.owners.remove(&owner.0) {
             Some(table) => {
-                self.used_pages -= table.pages.len();
                 self.live_bytes -= table.live_bytes;
-                self.free.extend(table.pages);
+                if self.faults.fire("kvpool.release") {
+                    // Injected deferred free: the pages stay reserved
+                    // (budget pressure) until the next mutation flushes
+                    // them, but the owner and its live bytes are gone —
+                    // exactly-once accounting is unaffected.
+                    self.quarantine.extend(table.pages);
+                } else {
+                    self.used_pages -= table.pages.len();
+                    self.free.extend(table.pages);
+                }
                 table.live_bytes
             }
             None => 0,
@@ -329,6 +372,39 @@ mod tests {
         assert!(p.fits_extra(usize::MAX / 2));
         assert_eq!(p.stats().live_bytes, 100 << 20);
         assert_eq!(p.free_bytes(), usize::MAX);
+    }
+
+    #[test]
+    fn injected_alloc_fault_is_an_ordinary_shortfall() {
+        let mut p = pool(1 << 20, 1024);
+        p.set_fault_injector(crate::faults::Injector::parse("kvpool.alloc:after=1", 3).unwrap());
+        let a = p.register();
+        p.set_live_bytes(a, 1024).unwrap(); // hit 1 passes
+        let err = p.set_live_bytes(a, 4096).unwrap_err();
+        assert_eq!(err.bytes, 3 * 1024, "full grow reported, like a real shortfall");
+        // nothing changed on the faulted reservation
+        assert_eq!(p.owner_pages(a), 1);
+        assert_eq!(p.stats().live_bytes, 1024);
+        // shrinks never consult the alloc point
+        p.set_live_bytes(a, 100).unwrap();
+        assert_eq!(p.stats().live_bytes, 100);
+    }
+
+    #[test]
+    fn injected_release_fault_quarantines_pages_but_keeps_bytes_exact() {
+        let mut p = pool(4 * 1024, 1024); // 4 pages
+        p.set_fault_injector(crate::faults::Injector::parse("kvpool.release:after=0", 3).unwrap());
+        let a = p.register();
+        p.set_live_bytes(a, 3 * 1024).unwrap();
+        assert_eq!(p.release(a), 3 * 1024, "released bytes reported exactly");
+        let s = p.stats();
+        assert_eq!(s.live_bytes, 0, "live-byte accounting is exact despite the fault");
+        assert_eq!(s.used_pages, 3, "quarantined pages still pressure the budget");
+        assert!(!p.fits_extra(2 * 1024));
+        // the next mutation flushes the quarantine and the space returns
+        let b = p.register();
+        p.set_live_bytes(b, 4 * 1024).unwrap();
+        assert_eq!(p.stats().used_pages, 4);
     }
 
     #[test]

@@ -48,6 +48,7 @@ pub mod coordinator;
 pub mod error;
 pub mod eval;
 pub mod evict;
+pub mod faults;
 pub mod fmt;
 pub mod kvcache;
 pub mod kvpool;

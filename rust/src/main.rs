@@ -69,7 +69,7 @@ USAGE:
   mustafar exp <table1..table12|fig2|fig6b|all> [--samples N] [--ctx N]
            [--artifacts DIR] [--report-dir DIR]
   mustafar serve    [--model M] [--backend B] [--ks S] [--vs S]
-           [--addr HOST:PORT] [--max-batch N] [--artifacts DIR]
+           [--addr HOST:PORT] [--max-batch N] [--max-queue-ms N] [--artifacts DIR]
   mustafar generate [--model M] [--backend B] [--ks S] [--vs S]
            [--prompt-seed N] [--prompt-len N] [--max-new N] [--artifacts DIR]
   mustafar info     [--artifacts DIR]
@@ -146,6 +146,7 @@ fn build_engine(args: &Args) -> mustafar::Result<Engine> {
     ec.sparsity = SparsityConfig::mustafar(ks, vs);
     ec.max_batch = args.get_usize("max-batch", 8);
     ec.max_new_tokens = args.get_usize("max-new", 64);
+    ec.max_queue_ms = args.get_usize("max-queue-ms", 0) as u64;
     ec.kv_budget_bytes = args.get_usize("kv-budget", 0);
 
     let model = NativeModel::new(weights.clone());

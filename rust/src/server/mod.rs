@@ -11,7 +11,10 @@
 //! Finish reasons: `"length"` (hit max_new_tokens), `"stop"` (stop
 //! token), `"rejected"` (admission), `"cancelled"` (client cancel line
 //! or disconnect), `"error"` (the engine failed mid-flight; the line
-//! carries an `"error"` message field). Request ids are namespaced per
+//! carries an `"error"` message field), `"timeout"` (queued-TTL or the
+//! request's own `deadline_ms` expired), `"shed"` (admission queue
+//! saturated; the line carries a `"retry_after_ms"` hint and the
+//! request is safe to resubmit). Request ids are namespaced per
 //! connection — two connections may use the same id; internally every
 //! request gets a server-assigned routing key (`Request::route`).
 //!
@@ -55,18 +58,33 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::{Completion, Engine, FinishReason, Request};
+use crate::coordinator::{Completion, Engine, FinishReason, Request, SubmitOutcome};
 use crate::error::{Error, Result};
+use crate::faults::Injector;
 use crate::fmt::Json;
 
 /// Messages from connection handlers to the engine thread.
 enum Inbound {
     Req(Request),
     /// Cancel the request with this routing key (an explicit client
-    /// `{"cancel": id}` line, or a connection noticing a disconnect).
+    /// `{"cancel": id}` line).
     Abort(u64),
+    /// Cancel every routing key a dying connection still had in flight
+    /// — one message per disconnect instead of one per request, so a
+    /// pipelined connection's teardown cannot interleave with other
+    /// traffic on the engine channel.
+    AbortMany(Vec<u64>),
     /// Stats query; the rendered JSON line comes back on the sender.
     Stats(Sender<String>),
+}
+
+/// Lock a shared map/stream, recovering from poisoning. Connection
+/// state here is plain data (id maps, a TcpStream): if some thread
+/// panicked mid-update the worst case is a stale entry, which the
+/// normal disconnect teardown already tolerates — propagating the
+/// poison would instead take down every connection sharing the map.
+fn lck<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 /// Parse one request line.
@@ -91,6 +109,9 @@ pub fn request_from_json(v: &Json) -> Result<Request> {
     let mut req = Request::new(id, prompt, max_new);
     if let Some(stop) = v.opt("stop_token") {
         req.stop_token = Some(tok(stop)?);
+    }
+    if let Some(d) = v.opt("deadline_ms") {
+        req.deadline_ms = Some(d.as_usize()? as u64);
     }
     Ok(req)
 }
@@ -134,6 +155,8 @@ pub fn render_completion(c: &Completion) -> String {
                 FinishReason::Rejected => "rejected",
                 FinishReason::Cancelled => "cancelled",
                 FinishReason::Error => "error",
+                FinishReason::Timeout => "timeout",
+                FinishReason::Shed => "shed",
             }),
         ),
         ("queue_ms", Json::num(c.queue_ms)),
@@ -144,6 +167,9 @@ pub fn render_completion(c: &Completion) -> String {
     ];
     if let Some(e) = &c.error {
         fields.push(("error", Json::str(e.clone())));
+    }
+    if let Some(ms) = c.retry_after_ms {
+        fields.push(("retry_after_ms", Json::num(ms as f64)));
     }
     Json::obj(fields).to_string()
 }
@@ -175,6 +201,11 @@ pub fn render_stats(engine: &Engine) -> String {
         ("cancelled", Json::num(m.cancelled as f64)),
         ("cancelled_freed_bytes", Json::num(m.cancelled_freed_bytes as f64)),
         ("failed", Json::num(m.failed as f64)),
+        ("shed", Json::num(m.shed as f64)),
+        ("timed_out_queued", Json::num(m.timed_out_queued as f64)),
+        ("deadline_exceeded", Json::num(m.deadline_exceeded as f64)),
+        ("isolated_panics", Json::num(m.isolated_panics as f64)),
+        ("queue_depth_ms_estimate", Json::num(engine.queue_depth_ms_estimate())),
         ("generated_tokens", Json::num(m.generated_tokens as f64)),
     ])
     .to_string()
@@ -196,6 +227,9 @@ type Inflight = Arc<Mutex<HashMap<u64, u64>>>;
 pub fn serve_listener(engine: Engine, listener: TcpListener) -> Result<()> {
     let (req_tx, req_rx): (Sender<Inbound>, Receiver<Inbound>) = channel();
     let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
+    // The connections' `server.io` fault point shares the engine's
+    // injector so one MUSTAFAR_FAULTS spec arms the whole stack.
+    let faults = engine.fault_injector().clone();
     // Server-assigned routing keys, unique across connections: two
     // clients reusing the same request id never collide in `waiters`,
     // and an abort targets exactly one request.
@@ -208,26 +242,33 @@ pub fn serve_listener(engine: Engine, listener: TcpListener) -> Result<()> {
             let mut engine = engine;
             let route = |engine: &mut Engine, waiters: &Waiters| {
                 for c in engine.take_completions() {
-                    let tx = waiters.lock().unwrap().remove(&c.route);
+                    let tx = lck(waiters).remove(&c.route);
                     if let Some(tx) = tx {
                         let _ = tx.send(c);
                     }
                 }
             };
+            // Answer a refused submission immediately instead of
+            // hanging the waiting client.
+            let refuse = |waiters: &Waiters, id: u64, key: u64, queued, fin, retry: Option<u64>| {
+                let tx = lck(waiters).remove(&key);
+                if let Some(tx) = tx {
+                    let mut c = Completion::queued(id, key, queued, fin, None);
+                    c.retry_after_ms = retry;
+                    let _ = tx.send(c);
+                }
+            };
             let handle = |engine: &mut Engine, waiters: &Waiters, m: Inbound| match m {
                 Inbound::Req(r) => {
                     let (id, key, queued) = (r.id, r.route, r.submitted);
-                    if !engine.submit(r) {
-                        // tell the waiting client instead of hanging it
-                        let tx = waiters.lock().unwrap().remove(&key);
-                        if let Some(tx) = tx {
-                            let _ = tx.send(Completion::queued(
-                                id,
-                                key,
-                                queued,
-                                FinishReason::Rejected,
-                                None,
-                            ));
+                    match engine.submit_full(r) {
+                        SubmitOutcome::Queued => {}
+                        SubmitOutcome::Rejected => {
+                            refuse(waiters, id, key, queued, FinishReason::Rejected, None);
+                        }
+                        SubmitOutcome::Shed { retry_after_ms } => {
+                            let retry = Some(retry_after_ms);
+                            refuse(waiters, id, key, queued, FinishReason::Shed, retry);
                         }
                     }
                 }
@@ -238,6 +279,11 @@ pub fn serve_listener(engine: Engine, listener: TcpListener) -> Result<()> {
                     // the request already completed and was answered:
                     // exactly-once semantics, nothing more to say.
                     engine.cancel(key);
+                }
+                Inbound::AbortMany(keys) => {
+                    for key in keys {
+                        engine.cancel(key);
+                    }
                 }
                 Inbound::Stats(tx) => {
                     let _ = tx.send(render_stats(engine));
@@ -286,8 +332,9 @@ pub fn serve_listener(engine: Engine, listener: TcpListener) -> Result<()> {
         let req_tx = req_tx.clone();
         let waiters = Arc::clone(&waiters);
         let next_route = Arc::clone(&next_route);
+        let faults = faults.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, req_tx, &waiters, &next_route) {
+            if let Err(e) = handle_conn(stream, req_tx, &waiters, &next_route, faults) {
                 eprintln!("[server] connection error: {e}");
             }
         });
@@ -296,19 +343,22 @@ pub fn serve_listener(engine: Engine, listener: TcpListener) -> Result<()> {
 }
 
 /// Abort everything a connection still has in flight (disconnect or
-/// write failure): mark the connection dead and drain its id → route
-/// map, sending one `Abort` per route — all inside the inflight lock,
-/// so this is mutually exclusive with request registration. A request
-/// was either registered before the drain (its `Req` send happened in
-/// that critical section, so the `Abort` here lands after it) or
-/// registers afterwards and is refused by the dead flag — no request
-/// can slip through un-aborted. Idempotent — aborts for
-/// already-answered requests are engine no-ops.
+/// write failure): mark the connection dead, drain its id → route map,
+/// and send ONE `AbortMany` carrying every route — all inside the
+/// inflight lock, so this is mutually exclusive with request
+/// registration. A request was either registered before the drain (its
+/// `Req` send happened in that critical section, so the batched abort
+/// here lands after it) or registers afterwards and is refused by the
+/// dead flag — no request can slip through un-aborted. Batching keeps
+/// a pipelined connection's teardown atomic on the engine channel
+/// (other connections' messages cannot interleave between its aborts).
+/// Idempotent — aborts for already-answered requests are engine no-ops.
 fn abort_all(inflight: &Inflight, dead: &AtomicBool, req_tx: &Sender<Inbound>) {
-    let mut inf = inflight.lock().unwrap();
+    let mut inf = lck(inflight);
     dead.store(true, Ordering::SeqCst);
-    for (_, r) in inf.drain() {
-        let _ = req_tx.send(Inbound::Abort(r));
+    let routes: Vec<u64> = inf.drain().map(|(_, r)| r).collect();
+    if !routes.is_empty() {
+        let _ = req_tx.send(Inbound::AbortMany(routes));
     }
 }
 
@@ -325,6 +375,7 @@ fn handle_conn(
     req_tx: Sender<Inbound>,
     waiters: &Mutex<HashMap<u64, Sender<Completion>>>,
     next_route: &AtomicU64,
+    faults: Injector,
 ) -> Result<()> {
     let writer_stream = stream.try_clone().map_err(Error::Io)?;
     // Bound every write (completions from the writer thread AND the
@@ -351,6 +402,7 @@ fn handle_conn(
         let inflight = Arc::clone(&inflight);
         let dead = Arc::clone(&dead);
         let req_tx = req_tx.clone();
+        let faults = faults.clone();
         std::thread::spawn(move || {
             while let Ok(c) = comp_rx.recv() {
                 {
@@ -359,13 +411,18 @@ fn handle_conn(
                     // racing the response line can never hit a stale
                     // duplicate check; guard on the route so a newer
                     // same-id request survives)
-                    let mut inf = inflight.lock().unwrap();
+                    let mut inf = lck(&inflight);
                     if inf.get(&c.id) == Some(&c.route) {
                         inf.remove(&c.id);
                     }
                 }
-                let ok = {
-                    let mut w = writer.lock().unwrap();
+                // `server.io` simulates the socket dying mid-response:
+                // the write "fails" and the normal dead-client teardown
+                // below must leave the engine clean.
+                let ok = if faults.fire("server.io") {
+                    false
+                } else {
+                    let mut w = lck(&writer);
                     writeln!(w, "{}", render_completion(&c)).is_ok()
                 };
                 if !ok {
@@ -378,14 +435,24 @@ fn handle_conn(
                     // channel is unbounded and route() tolerates the
                     // closed receiver.
                     abort_all(&inflight, &dead, &req_tx);
-                    let _ = writer.lock().unwrap().shutdown(std::net::Shutdown::Both);
+                    let _ = lck(&writer).shutdown(std::net::Shutdown::Both);
                     return;
                 }
             }
         })
     };
 
-    let res = read_loop(reader, &writer, &req_tx, waiters, next_route, &inflight, &dead, &comp_tx);
+    let res = read_loop(
+        reader,
+        &writer,
+        &req_tx,
+        waiters,
+        next_route,
+        &inflight,
+        &dead,
+        &comp_tx,
+        &faults,
+    );
     // EOF, read error, or writer-detected death: abort whatever this
     // connection still has in flight — its pool pages are released by
     // the engine instead of being held to completion (and then clawed
@@ -406,8 +473,15 @@ fn read_loop(
     inflight: &Inflight,
     dead: &AtomicBool,
     comp_tx: &Sender<Completion>,
+    faults: &Injector,
 ) -> Result<()> {
     for line in reader.lines() {
+        // `server.io` on the read side simulates the connection dying
+        // between lines: exit as a read error so handle_conn runs the
+        // same disconnect teardown a real broken socket would.
+        if faults.fire("server.io") {
+            return Err(Error::Engine("injected fault: server.io".into()));
+        }
         let line = match line {
             Ok(l) => l,
             Err(e) => {
@@ -432,7 +506,7 @@ fn read_loop(
             Ok(v) => v,
             Err(e) => {
                 let msg = error_line(&e.to_string());
-                writeln!(writer.lock().unwrap(), "{msg}").map_err(Error::Io)?;
+                writeln!(lck(writer), "{msg}").map_err(Error::Io)?;
                 continue;
             }
         };
@@ -440,7 +514,7 @@ fn read_loop(
             let (tx, rx) = channel();
             req_tx.send(Inbound::Stats(tx)).map_err(|_| Error::Engine("engine gone".into()))?;
             let stats = rx.recv().map_err(|_| Error::Engine("engine gone".into()))?;
-            writeln!(writer.lock().unwrap(), "{stats}").map_err(Error::Io)?;
+            writeln!(lck(writer), "{stats}").map_err(Error::Io)?;
             continue;
         }
         // A cancel message is an object carrying "cancel" and no
@@ -455,7 +529,7 @@ fn read_loop(
             // through to request parsing's misleading missing-field one.
             match cancel_target(&parsed) {
                 Some(id) => {
-                    let route = inflight.lock().unwrap().get(&id).copied();
+                    let route = lck(inflight).get(&id).copied();
                     if let Some(r) = route {
                         req_tx
                             .send(Inbound::Abort(r))
@@ -465,7 +539,7 @@ fn read_loop(
                 None => {
                     let msg =
                         error_line("malformed cancel: \"cancel\" must be a numeric request id");
-                    writeln!(writer.lock().unwrap(), "{msg}").map_err(Error::Io)?;
+                    writeln!(lck(writer), "{msg}").map_err(Error::Io)?;
                 }
             }
             continue;
@@ -474,7 +548,7 @@ fn read_loop(
             Ok(r) => r,
             Err(e) => {
                 let msg = error_line(&e.to_string());
-                writeln!(writer.lock().unwrap(), "{msg}").map_err(Error::Io)?;
+                writeln!(lck(writer), "{msg}").map_err(Error::Io)?;
                 continue;
             }
         };
@@ -486,17 +560,17 @@ fn read_loop(
             // entry (its Abort then lands after the Req on the engine
             // channel) or has already marked the connection dead and
             // nothing new starts. No request slips through un-aborted.
-            let mut inf = inflight.lock().unwrap();
+            let mut inf = lck(inflight);
             if dead.load(Ordering::SeqCst) {
                 return Ok(());
             }
             if inf.contains_key(&req.id) {
                 drop(inf);
                 let msg = error_line(&format!("duplicate in-flight request id {}", req.id));
-                writeln!(writer.lock().unwrap(), "{msg}").map_err(Error::Io)?;
+                writeln!(lck(writer), "{msg}").map_err(Error::Io)?;
                 continue;
             }
-            waiters.lock().unwrap().insert(req.route, comp_tx.clone());
+            lck(waiters).insert(req.route, comp_tx.clone());
             inf.insert(req.id, req.route);
             req_tx.send(Inbound::Req(req)).map_err(|_| Error::Engine("engine gone".into()))?;
         }
@@ -578,6 +652,7 @@ mod tests {
             decode_ms: 2.5,
             kv_bytes: 100,
             kv_dense_bytes: 200,
+            retry_after_ms: None,
         };
         let s = render_completion(&c);
         let v = Json::parse(&s).unwrap();
@@ -596,5 +671,33 @@ mod tests {
         let v = Json::parse(&render_completion(&c)).unwrap();
         assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "error");
         assert!(v.get("error").unwrap().as_str().unwrap().contains("bad \"state\""));
+
+        c.error = None;
+        c.finish = FinishReason::Timeout;
+        let v = Json::parse(&render_completion(&c)).unwrap();
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "timeout");
+        assert!(v.opt("retry_after_ms").is_none(), "timeouts carry no retry hint");
+
+        c.finish = FinishReason::Shed;
+        c.retry_after_ms = Some(120);
+        let v = Json::parse(&render_completion(&c)).unwrap();
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "shed");
+        assert_eq!(v.get("retry_after_ms").unwrap().as_usize().unwrap(), 120);
+    }
+
+    #[test]
+    fn deadline_ms_parses_into_the_request() {
+        let r = parse_request(
+            r#"{"id": 4, "prompt": [1], "max_new_tokens": 2, "deadline_ms": 250}"#,
+        )
+        .unwrap();
+        assert_eq!(r.deadline_ms, Some(250));
+        let r = parse_request(r#"{"id": 4, "prompt": [1], "max_new_tokens": 2}"#).unwrap();
+        assert_eq!(r.deadline_ms, None);
+        // a malformed deadline is a parse error, not a silent default
+        assert!(parse_request(
+            r#"{"id": 4, "prompt": [1], "max_new_tokens": 2, "deadline_ms": "soon"}"#
+        )
+        .is_err());
     }
 }

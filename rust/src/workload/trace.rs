@@ -90,6 +90,36 @@ pub fn disconnect_trace(
         .collect()
 }
 
+/// A chaos trace for the fault-injection acceptance test (EXPERIMENTS
+/// §9): varied prompt and generation lengths (so admission, prefill,
+/// decode growth, and completion all interleave under pressure) plus a
+/// mix of clients that hang up while queued (`Some(0)`), mid-decode
+/// (`gen/2`), or stay to the end. Fully deterministic in `seed` — the
+/// chaos comes from the fault injector layered on top by the driver,
+/// not from the trace itself, so a failing seed replays exactly.
+pub fn chaos_trace(seed: u64, n: usize, input_len: usize, gen_len: usize) -> Vec<TraceRequest> {
+    let mut shape = Pcg32::new(seed.wrapping_mul(4241).wrapping_add(17), 91);
+    (0..n)
+        .map(|i| {
+            let mut rng = Pcg32::new(seed.wrapping_mul(9173).wrapping_add(i as u64), 33);
+            // 1/4 .. 5/4 of the nominal lengths, never zero
+            let ilen = (input_len / 4 + shape.below(input_len.max(1) as u32) as usize).max(1);
+            let glen = (gen_len / 4 + shape.below(gen_len.max(1) as u32) as usize).max(1);
+            let cancel_after = match shape.below(5) {
+                0 => Some(0),
+                1 => Some((glen / 2).max(1)),
+                _ => None,
+            };
+            TraceRequest {
+                id: i as u64,
+                prompt: lang::gen_document(&mut rng, ilen),
+                max_new_tokens: glen,
+                cancel_after,
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,6 +156,32 @@ mod tests {
             assert_eq!(a.prompt, b.prompt);
         }
         assert_eq!(disconnect_trace(5, 8, 96, 64)[3].cancel_after, tr[3].cancel_after);
+    }
+
+    #[test]
+    fn chaos_trace_is_varied_and_deterministic() {
+        let tr = chaos_trace(11, 24, 64, 16);
+        assert_eq!(tr.len(), 24);
+        for r in &tr {
+            assert!(!r.prompt.is_empty());
+            assert!(r.max_new_tokens >= 1);
+            assert!(r.prompt.len() <= 64 / 4 + 64, "input stays within 5/4 of nominal");
+        }
+        // lengths actually vary
+        let lens: std::collections::HashSet<usize> = tr.iter().map(|r| r.prompt.len()).collect();
+        assert!(lens.len() > 4, "prompt lengths should vary, got {lens:?}");
+        // a mix of stay-to-the-end and hang-up clients
+        assert!(tr.iter().any(|r| r.cancel_after.is_none()));
+        assert!(tr.iter().any(|r| r.cancel_after.is_some()));
+        // deterministic replay
+        let again = chaos_trace(11, 24, 64, 16);
+        for (a, b) in tr.iter().zip(&again) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.cancel_after, b.cancel_after);
+        }
+        // different seeds diverge
+        assert_ne!(chaos_trace(12, 24, 64, 16)[0].prompt, tr[0].prompt);
     }
 
     #[test]

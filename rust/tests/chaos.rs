@@ -1,0 +1,226 @@
+// Shared lint policy with the library crate (rust/src/lib.rs): these
+// allows cover numeric-harness idioms (indexed loops, config structs
+// mutated after Default::default(), positional format args).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::field_reassign_with_default,
+    clippy::uninlined_format_args,
+    clippy::manual_div_ceil,
+    clippy::type_complexity
+)]
+
+//! Chaos acceptance: replay realistic traces while a fault injector
+//! randomly breaks kvpool allocation/release, worker tasks, per-sequence
+//! prefill/decode, and prefix-cache inserts. Whatever fires, the engine
+//! must answer every request exactly once (some with `error`/`rejected`
+//! finishes — never silently lost, never twice), keep pool accounting
+//! exact at every step, and never deadlock.
+//!
+//! The trace and the injector are both deterministic in
+//! `MUSTAFAR_FAULT_SEED` (default 20260807), so a failing run replays
+//! exactly: `MUSTAFAR_FAULT_SEED=<seed> cargo test --test chaos`.
+
+use std::collections::{BTreeMap, HashSet};
+
+use mustafar::config::{Backend, EngineConfig, SparsityConfig};
+use mustafar::coordinator::{estimate_seq_bytes, Completion, Engine, Request, SubmitOutcome};
+use mustafar::faults::Injector;
+use mustafar::kvcache::KvPolicy;
+use mustafar::model::{NativeModel, Weights};
+use mustafar::workload::trace::{chaos_trace, disconnect_trace, TraceRequest};
+
+/// Every request-reachable fault point, armed with low per-call
+/// probabilities so runs see a mix of clean and broken behavior.
+const SPEC: &str = "kvpool.alloc:0.02,kvpool.release:0.02,worker.task:0.01,\
+                    seq.decode:0.02,seq.prefill:0.02,prefix.insert:0.05";
+
+fn base_seed() -> u64 {
+    std::env::var("MUSTAFAR_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20260807)
+}
+
+fn tiny_cfg() -> mustafar::config::ModelConfig {
+    mustafar::config::ModelConfig {
+        name: "tiny".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        head_dim: 32,
+        ff: 128,
+        vocab: 512,
+        rope_theta: 10000.0,
+        max_seq: 512,
+        norm_eps: 1e-5,
+    }
+}
+
+/// A pressured engine: sparse backend, small pool budget (two full
+/// sequences out of a four-slot batch), prefix cache on — so alloc
+/// faults land on real reclaim paths, not an uncontended pool.
+fn pressured_engine(seed: u64) -> Engine {
+    let cfg = tiny_cfg();
+    let policy = KvPolicy::mustafar(0.7, 0.7);
+    let per_seq = estimate_seq_bytes(&policy, &cfg, 48 + 48);
+    let mut ec = EngineConfig::default();
+    ec.backend = Backend::NativeSparse;
+    ec.sparsity = SparsityConfig::mustafar(0.7, 0.7);
+    ec.max_batch = 4;
+    ec.max_new_tokens = 64;
+    ec.kv_budget_bytes = per_seq * 2;
+    ec.kv_page_bytes = 1024;
+    Engine::new_native(NativeModel::new(Weights::random_for_tests(cfg, seed)), ec)
+}
+
+/// Drive one trace to quiescence under whatever injector the engine
+/// carries: submit everything, honor `cancel_after` thresholds between
+/// steps, convert step-level errors into failed-inflight completions
+/// (what the server does), and assert exact pool accounting after every
+/// step. Returns (completions, refused ids, steps taken).
+fn drive(e: &mut Engine, trace: Vec<TraceRequest>) -> (Vec<Completion>, Vec<u64>, usize) {
+    let mut cancels: Vec<(u64, usize)> = trace
+        .iter()
+        .filter_map(|t| t.cancel_after.map(|k| (t.id, k)))
+        .collect();
+    let mut refused = Vec::new();
+    for t in trace {
+        match e.submit_full(Request::new(t.id, t.prompt, t.max_new_tokens)) {
+            SubmitOutcome::Queued => {}
+            SubmitOutcome::Rejected | SubmitOutcome::Shed { .. } => refused.push(t.id),
+        }
+    }
+    let mut out = Vec::new();
+    let mut steps = 0usize;
+    while !e.idle() {
+        cancels.retain(|&(id, k)| match e.progress(id) {
+            Some(g) if g >= k => {
+                // may race a fault-induced finish; either way the
+                // request is answered exactly once
+                let _ = e.cancel(id);
+                false
+            }
+            Some(_) => true,
+            None => false,
+        });
+        if e.idle() {
+            break;
+        }
+        if let Err(err) = e.step() {
+            // the server's recovery: fail everything in flight back to
+            // its client rather than stranding waiters
+            e.fail_inflight(&err.to_string());
+        }
+        assert_eq!(
+            e.pool_stats().live_bytes,
+            e.measured_live_bytes(),
+            "pool accounting diverged at step {steps}"
+        );
+        out.extend(e.take_completions());
+        steps += 1;
+        assert!(steps < 20_000, "engine failed to quiesce (deadlock/livelock)");
+    }
+    out.extend(e.take_completions());
+    (out, refused, steps)
+}
+
+/// Exactly-once check: completions + refusals cover every trace id,
+/// no id twice.
+fn assert_exactly_once(n: usize, out: &[Completion], refused: &[u64], ctx: &str) {
+    let mut answered: Vec<u64> =
+        out.iter().map(|c| c.id).chain(refused.iter().copied()).collect();
+    answered.sort_unstable();
+    let dup = answered.windows(2).find(|w| w[0] == w[1]);
+    assert!(dup.is_none(), "{ctx}: request {} answered twice", dup.unwrap()[0]);
+    let want: Vec<u64> = (0..n as u64).collect();
+    assert_eq!(answered, want, "{ctx}: lost requests");
+}
+
+#[test]
+fn chaos_trace_exactly_once_under_randomized_faults() {
+    let seed0 = base_seed();
+    let mut fired: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+    let mut total_steps = 0usize;
+    let mut finishes: BTreeMap<String, usize> = BTreeMap::new();
+    let mut run = 0u64;
+    while total_steps < 2000 {
+        assert!(run < 30, "chaos runs are not accumulating steps ({total_steps})");
+        let seed = seed0.wrapping_add(run);
+        let mut e = pressured_engine(seed);
+        e.set_fault_injector(Injector::parse(SPEC, seed).unwrap());
+        let trace = chaos_trace(seed, 32, 48, 24);
+        let n = trace.len();
+        let (out, refused, steps) = drive(&mut e, trace);
+        total_steps += steps;
+        assert_exactly_once(n, &out, &refused, &format!("seed {seed}"));
+        assert_eq!(e.active_count(), 0, "seed {seed}: sequences left active");
+        assert_eq!(e.queued_count(), 0, "seed {seed}: requests left queued");
+        for c in &out {
+            *finishes.entry(format!("{:?}", c.finish)).or_default() += 1;
+        }
+        for (name, hits, fires) in e.fault_injector().fired() {
+            let ent = fired.entry(name).or_default();
+            ent.0 += hits;
+            ent.1 += fires;
+        }
+        run += 1;
+    }
+
+    // the paper-style fault matrix for EXPERIMENTS §9 (shows up in CI
+    // logs; `--nocapture` locally)
+    eprintln!("\n| fault point | evaluations | injected | outcome |");
+    eprintln!("|---|---|---|---|");
+    for (name, (hits, fires)) in &fired {
+        eprintln!("| `{name}` | {hits} | {fires} | survived, exactly-once |");
+    }
+    eprintln!("runs: {run}, steps: {total_steps}, finishes: {finishes:?}\n");
+
+    let distinct_fired: HashSet<&String> =
+        fired.iter().filter(|(_, v)| v.1 > 0).map(|(k, _)| k).collect();
+    assert!(
+        distinct_fired.len() >= 5,
+        "expected >= 5 distinct fault points to fire, got {distinct_fired:?}"
+    );
+    assert!(total_steps >= 2000, "acceptance requires >= 2000 steps, got {total_steps}");
+}
+
+#[test]
+fn disconnect_trace_survives_faults() {
+    // the PR-5 cancellation workload with the injector armed on top:
+    // hangs-up and injected faults interleave, everything still answers
+    let seed = base_seed().wrapping_mul(31).wrapping_add(7);
+    let mut e = pressured_engine(seed);
+    e.set_fault_injector(Injector::parse(SPEC, seed).unwrap());
+    let trace = disconnect_trace(seed, 16, 48, 32);
+    let n = trace.len();
+    let (out, refused, _) = drive(&mut e, trace);
+    assert_exactly_once(n, &out, &refused, "disconnect+faults");
+    assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+}
+
+#[test]
+fn unarmed_injector_changes_nothing() {
+    // with no faults armed the chaos driver is a plain replay: two
+    // engines over the same trace produce identical token streams
+    // (determinism is what makes a failing chaos seed replayable)
+    let run = |seed: u64| {
+        let mut e = pressured_engine(seed);
+        let trace: Vec<TraceRequest> = chaos_trace(seed, 12, 48, 16)
+            .into_iter()
+            .map(|mut t| {
+                t.cancel_after = None; // pure decode determinism
+                t
+            })
+            .collect();
+        let (mut out, refused, _) = drive(&mut e, trace);
+        assert!(refused.is_empty(), "nothing should be refused unfaulted");
+        assert!(e.fault_injector().fired().is_empty(), "disabled injector must not tally");
+        out.sort_by_key(|c| c.id);
+        out.iter().map(|c| c.tokens.clone()).collect::<Vec<_>>()
+    };
+    let seed = base_seed();
+    assert_eq!(run(seed), run(seed));
+}

@@ -99,6 +99,73 @@ fn random_traces_preserve_all_invariants() {
 }
 
 #[test]
+fn fault_seeded_random_traces_still_answer_exactly_once() {
+    // the fuzz above, with a randomly-armed fault injector layered in:
+    // some requests now finish `Error`/`Rejected`, but every id is
+    // still answered exactly once and pool accounting never drifts
+    use mustafar::coordinator::SubmitOutcome;
+    use mustafar::faults::Injector;
+
+    for case in 0..4u64 {
+        let mut rng = Pcg32::seeded(3000 + case);
+        // five probabilities in [0, 0.04), rendered into a spec string
+        // exactly like an operator's MUSTAFAR_FAULTS value
+        let ps: Vec<String> =
+            (0..5).map(|_| format!("{:.3}", rng.below(40) as f64 / 1000.0)).collect();
+        let spec = format!(
+            "kvpool.alloc:{},seq.decode:{},seq.prefill:{},worker.task:{},prefix.insert:{}",
+            ps[0], ps[1], ps[2], ps[3], ps[4]
+        );
+
+        let mut ec = EngineConfig::default();
+        ec.backend = Backend::NativeSparse;
+        ec.sparsity = SparsityConfig::mustafar(0.5, 0.5);
+        ec.max_batch = 1 + rng.below(4) as usize;
+        let mut engine = Engine::new_native(tiny_model(case), ec);
+        engine.set_fault_injector(Injector::parse(&spec, 9000 + case).unwrap());
+
+        let n_reqs = 4 + rng.below(8) as usize;
+        let mut refused: Vec<u64> = Vec::new();
+        for i in 0..n_reqs as u64 {
+            let plen = 8 + rng.below(100) as usize;
+            let gen = 1 + rng.below(12) as usize;
+            let prompt: Vec<u16> = (0..plen).map(|_| 16 + rng.below(400) as u16).collect();
+            match engine.submit_full(Request::new(i, prompt, gen)) {
+                SubmitOutcome::Queued => {}
+                SubmitOutcome::Rejected | SubmitOutcome::Shed { .. } => refused.push(i),
+            }
+        }
+
+        let mut out = Vec::new();
+        let mut steps = 0usize;
+        while !engine.idle() {
+            if let Err(e) = engine.step() {
+                engine.fail_inflight(&e.to_string());
+            }
+            assert_eq!(
+                engine.pool_stats().live_bytes,
+                engine.measured_live_bytes(),
+                "case {case}: accounting drifted under faults"
+            );
+            out.extend(engine.take_completions());
+            steps += 1;
+            assert!(steps < 10_000, "case {case}: failed to quiesce under faults");
+        }
+        out.extend(engine.take_completions());
+
+        let mut answered: Vec<u64> = out.iter().map(|c| c.id).chain(refused).collect();
+        answered.sort_unstable();
+        let expect: Vec<u64> = (0..n_reqs as u64).collect();
+        assert_eq!(answered, expect, "case {case}: exactly-once violated");
+        for c in &out {
+            if c.finish == FinishReason::Error {
+                assert!(c.error.is_some(), "case {case}: error finish without a message");
+            }
+        }
+    }
+}
+
+#[test]
 fn sparse_and_dense_engines_equal_within_window() {
     // prompts short enough that nothing exits the local window must give
     // IDENTICAL generations regardless of sparsity config

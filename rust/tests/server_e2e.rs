@@ -50,6 +50,10 @@ fn tiny_engine_with_backend(backend: Backend) -> Engine {
     ec.backend = backend;
     ec.sparsity = SparsityConfig::mustafar(0.5, 0.5);
     ec.max_batch = 4;
+    // several tests rely on deliberately huge generation lengths (5000,
+    // 1000) staying in flight long enough to cancel/disconnect; the
+    // submit-time clamp must not shorten them
+    ec.max_new_tokens = 8192;
     Engine::new_native(NativeModel::new(Weights::random_for_tests(cfg, 7)), ec)
 }
 
@@ -179,6 +183,11 @@ fn stats_and_error_lines_interleave_with_completions() {
     assert_eq!(v.get("prefix_full_hits").unwrap().as_usize().unwrap(), 1);
     assert!(v.get("pool_live_bytes").unwrap().as_f64().unwrap() > 0.0);
     assert!(v.get("prefix_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+    // the robustness counters parse back and are quiet on a healthy run
+    for key in ["shed", "timed_out_queued", "deadline_exceeded", "isolated_panics"] {
+        assert_eq!(v.get(key).unwrap().as_usize().unwrap(), 0, "{key} on a clean run");
+    }
+    assert!(v.get("queue_depth_ms_estimate").unwrap().as_f64().unwrap() >= 0.0);
 
     // duplicate in-flight id: error line instead of a clobbered waiter
     writeln!(stream, "{}", req_line(500, 400, 64)).unwrap();
