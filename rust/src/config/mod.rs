@@ -175,6 +175,15 @@ pub struct EngineConfig {
     /// Enable the prefill prefix cache (shared immutable compressed
     /// pages keyed by a hash chain over prompt tokens).
     pub prefix_cache: bool,
+    /// Prefix-cache capacity in bytes, *separate* from the pool byte
+    /// budget (0 = bounded only by the pool): the cache evicts LRU
+    /// entries to stay under this before an insert, so cached prefixes
+    /// cannot crowd live sequences out of a shared budget.
+    pub prefix_cache_bytes: usize,
+    /// TTL for idle prefix-cache entries in milliseconds (0 = no TTL):
+    /// an entry not used for this long is evicted by a sweep on the
+    /// engine step path, returning its pool pages.
+    pub prefix_ttl_ms: u64,
     /// Pressure-controller re-prune ladder: sparsity tiers the coldest
     /// resident sequences are moved through before anything is
     /// preempted or rejected.
@@ -195,8 +204,60 @@ impl Default for EngineConfig {
             kv_budget_bytes: 0,
             kv_page_bytes: crate::kvpool::DEFAULT_PAGE_BYTES,
             prefix_cache: true,
+            prefix_cache_bytes: 0,
+            prefix_ttl_ms: 0,
             reprune_tiers: vec![0.75, 0.9],
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+/// TCP front-end (reactor) settings — every per-connection resource
+/// bound the server enforces. See `server`'s module docs for how each
+/// limit behaves when hit.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Fixed reactor thread count; every connection is multiplexed
+    /// onto one of these (total server threads = reactors + 1 engine
+    /// thread + the engine's worker pool, independent of connection
+    /// count).
+    pub reactor_threads: usize,
+    /// Global connection cap: accepts beyond it are answered with one
+    /// `{"error", "retry_after_ms"}` line and closed.
+    pub max_conns: usize,
+    /// Longest request line accepted; beyond it the line is dropped
+    /// with one `error` reply and the connection survives.
+    pub max_line_bytes: usize,
+    /// Per-connection userspace write-queue high-water mark: a reader
+    /// stalled past it is declared dead and torn down.
+    pub write_hwm_bytes: usize,
+    /// Close connections with nothing in flight after this long
+    /// without traffic (0 = never).
+    pub idle_timeout_ms: u64,
+    /// A partial request line must complete within this window,
+    /// measured from its first byte — dribbled bytes do not reset it
+    /// (slowloris defense; 0 = no deadline).
+    pub read_deadline_ms: u64,
+    /// Graceful-drain window: on shutdown every in-flight request's
+    /// deadline is clamped to this, so the server exits once all work
+    /// finishes or times out (plus a small flush grace).
+    pub drain_deadline_ms: u64,
+    /// Pin accepted sockets' kernel send buffer (0 = kernel default);
+    /// test hook for deterministic write backpressure.
+    pub sock_sndbuf_bytes: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            reactor_threads: 2,
+            max_conns: 1024,
+            max_line_bytes: 1 << 20,
+            write_hwm_bytes: 1 << 20,
+            idle_timeout_ms: 300_000,
+            read_deadline_ms: 30_000,
+            drain_deadline_ms: 5_000,
+            sock_sndbuf_bytes: 0,
         }
     }
 }

@@ -113,7 +113,8 @@ impl Engine {
             page_bytes: cfg.kv_page_bytes,
         });
         kvpool.set_fault_injector(faults.clone());
-        let prefix_cache = PrefixCache::new(cfg.prefix_cache);
+        let prefix_cache =
+            PrefixCache::with_limits(cfg.prefix_cache, cfg.prefix_cache_bytes, cfg.prefix_ttl_ms);
         Engine {
             cfg,
             model: Arc::new(model),
@@ -264,6 +265,10 @@ impl Engine {
     pub fn step(&mut self) -> Result<()> {
         let t0 = Instant::now();
         self.enforce_deadlines();
+        // TTL decay for idle prefix-cache entries (no-op unless
+        // `prefix_ttl_ms` is set) — before admission so the freed pages
+        // are available to this step's arrivals.
+        self.metrics.prefix_ttl_evictions += self.prefix_cache.expire_idle(&mut self.kvpool);
         self.admit_and_prefill()?;
         self.decode_round()?;
         self.sync_pool();
@@ -320,6 +325,27 @@ impl Engine {
             self.kvpool.release(s.owner);
             self.metrics.deadline_exceeded += 1;
             self.completions.push(s.into_completion(FinishReason::Timeout, None, kv));
+        }
+    }
+
+    /// Clamp every in-flight request (queued and active) to finish
+    /// within `ms` from now: each deadline becomes the *minimum* of its
+    /// existing value and `elapsed + ms`, so a tighter client deadline
+    /// is never loosened. The next `enforce_deadlines` sweep then cuts
+    /// whatever outlives the clamp with the ordinary `Timeout` finish —
+    /// this is how graceful drain guarantees a bounded quiescence time
+    /// without inventing a second cancellation path.
+    pub fn impose_deadline(&mut self, ms: u64) {
+        let clamp = |req: &mut Request| {
+            let elapsed = req.submitted.elapsed().as_millis() as u64;
+            let nd = elapsed + ms;
+            req.deadline_ms = Some(req.deadline_ms.map_or(nd, |d| d.min(nd)));
+        };
+        self.scheduler.for_each_mut(clamp);
+        for s in self.active.iter_mut() {
+            let elapsed = s.req.submitted.elapsed().as_millis() as u64;
+            let nd = elapsed + ms;
+            s.req.deadline_ms = Some(s.req.deadline_ms.map_or(nd, |d| d.min(nd)));
         }
     }
 

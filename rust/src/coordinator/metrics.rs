@@ -25,6 +25,9 @@ pub struct Metrics {
     pub prefix_misses: usize,
     /// Entries dropped by the pressure controller / insert path.
     pub prefix_evictions: usize,
+    /// Prefix-cache entries dropped by TTL decay (idle longer than
+    /// `prefix_ttl_ms`), counted apart from pressure evictions.
+    pub prefix_ttl_evictions: usize,
     /// Prompt tokens whose prefill was skipped via shared pages.
     pub prefix_tokens_reused: usize,
     /// Pressure-controller actions: compressed regions re-pruned to a

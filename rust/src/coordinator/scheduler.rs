@@ -200,6 +200,15 @@ impl Scheduler {
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
+
+    /// Visit every queued request mutably, in queue order. Used by the
+    /// drain path to clamp deadlines on work that has not been admitted
+    /// yet.
+    pub fn for_each_mut<F: FnMut(&mut Request)>(&mut self, mut f: F) {
+        for r in self.queue.iter_mut() {
+            f(r);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -29,6 +29,7 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::kvcache::SharedPrefix;
 use crate::kvpool::{KvPool, OwnerId};
@@ -73,6 +74,8 @@ struct FullEntry {
     first_token: u16,
     owner: OwnerId,
     last_used: u64,
+    /// Wall-clock of the last insert/refresh/hit, for TTL decay.
+    last_touch: Instant,
 }
 
 impl FullEntry {
@@ -95,6 +98,8 @@ struct PartialEntry {
     prefix: Arc<SharedPrefix>,
     owner: OwnerId,
     last_used: u64,
+    /// Wall-clock of the last insert/refresh/hit, for TTL decay.
+    last_touch: Instant,
 }
 
 impl PartialEntry {
@@ -110,18 +115,39 @@ pub struct PrefixCache {
     full: HashMap<u64, FullEntry>,
     partial: HashMap<u64, PartialEntry>,
     clock: u64,
+    /// Cache-private byte cap, separate from the pool budget
+    /// (0 = bounded only by the pool). Enforced by `make_room`.
+    capacity_bytes: usize,
+    /// Idle-entry TTL in milliseconds (0 = entries never expire).
+    /// Enforced by `expire_idle`, which the engine calls on its step
+    /// path.
+    ttl_ms: u64,
     /// Entries dropped under pressure or to make room for newer ones.
     pub evictions: usize,
+    /// Entries dropped by TTL decay (`expire_idle`), counted apart from
+    /// pressure `evictions` so callers watching eviction deltas for
+    /// capacity pressure are not confused by idle decay.
+    pub ttl_evictions: usize,
 }
 
 impl PrefixCache {
+    /// Unlimited cache (no byte cap beyond the pool, no TTL).
     pub fn new(enabled: bool) -> PrefixCache {
+        PrefixCache::with_limits(enabled, 0, 0)
+    }
+
+    /// Cache with its own byte capacity (0 = bounded only by the pool)
+    /// and an idle-entry TTL in milliseconds (0 = no TTL).
+    pub fn with_limits(enabled: bool, capacity_bytes: usize, ttl_ms: u64) -> PrefixCache {
         PrefixCache {
             enabled,
             full: HashMap::new(),
             partial: HashMap::new(),
             clock: 0,
+            capacity_bytes,
+            ttl_ms,
             evictions: 0,
+            ttl_evictions: 0,
         }
     }
 
@@ -173,12 +199,15 @@ impl PrefixCache {
             }
         }
         let now = self.tick();
+        let wall = Instant::now();
 
         if let Some(e) = self.full.get_mut(&h) {
             if e.prompt == prompt {
                 e.last_used = now;
+                e.last_touch = wall;
                 if let Some(p) = self.partial.get_mut(&chain_hash(&prompt[..e.prefix.tokens])) {
                     p.last_used = now; // keep the backing prefix warm too
+                    p.last_touch = wall;
                 }
                 return Some(PrefixHit::Full {
                     prefix: Arc::clone(&e.prefix),
@@ -198,6 +227,7 @@ impl PrefixCache {
             if let Some(e) = self.partial.get_mut(&key) {
                 if e.tokens.len() == b && e.tokens[..] == prompt[..b] {
                     e.last_used = now;
+                    e.last_touch = wall;
                     return Some(PrefixHit::Partial { prefix: Arc::clone(&e.prefix) });
                 }
             }
@@ -232,6 +262,7 @@ impl PrefixCache {
             return None;
         }
         let now = self.tick();
+        let wall = Instant::now();
         let b = prefix.tokens;
         debug_assert!(b <= prompt.len());
         let mut prefix = prefix;
@@ -245,6 +276,7 @@ impl PrefixCache {
             if exists {
                 let e = self.partial.get_mut(&key).unwrap();
                 e.last_used = now;
+                e.last_touch = wall;
                 // dedup: reuse the charged allocation, drop the duplicate
                 prefix = Arc::clone(&e.prefix);
             } else {
@@ -266,6 +298,7 @@ impl PrefixCache {
                     prefix: Arc::clone(&prefix),
                     owner: pool.register(),
                     last_used: now,
+                    last_touch: wall,
                 };
                 let bytes = entry.bytes();
                 if !self.make_room(pool, bytes) || pool.set_live_bytes(entry.owner, bytes).is_err()
@@ -281,6 +314,7 @@ impl PrefixCache {
         if let Some(e) = self.full.get_mut(&key) {
             if e.prompt == prompt {
                 e.last_used = now;
+                e.last_touch = wall;
                 return Some(prefix);
             }
             let old = self.full.remove(&key).unwrap();
@@ -295,6 +329,7 @@ impl PrefixCache {
             first_token,
             owner: pool.register(),
             last_used: now,
+            last_touch: wall,
         };
         let bytes = entry.bytes();
         if !self.make_room(pool, bytes) || pool.set_live_bytes(entry.owner, bytes).is_err() {
@@ -308,13 +343,63 @@ impl PrefixCache {
         Some(prefix)
     }
 
+    /// True when `bytes` more cache bytes would exceed the cache's own
+    /// capacity cap. Recomputed from `measured_bytes` so the check can
+    /// never drift from the real footprint.
+    fn over_capacity(&self, bytes: usize) -> bool {
+        self.capacity_bytes > 0 && self.measured_bytes() + bytes > self.capacity_bytes
+    }
+
     fn make_room(&mut self, pool: &mut KvPool, bytes: usize) -> bool {
-        while !pool.fits_extra(bytes) {
+        while !pool.fits_extra(bytes) || self.over_capacity(bytes) {
             if !self.evict_lru(pool) {
                 return false;
             }
         }
         true
+    }
+
+    /// TTL sweep: drop every entry idle longer than `ttl_ms` and free
+    /// its pages, returning how many entries were evicted. Expired full
+    /// entries go first — they are always droppable and may be the sole
+    /// pin keeping a sibling partial's `Arc` count above one — then
+    /// expired partials whose prefix nothing else references (a partial
+    /// still pinned by a live sequence or a fresh full entry stays; it
+    /// will expire on a later sweep once unpinned, exactly like LRU
+    /// eviction). No-op when `ttl_ms` is 0.
+    pub fn expire_idle(&mut self, pool: &mut KvPool) -> usize {
+        if self.ttl_ms == 0 || self.is_empty() {
+            return 0;
+        }
+        let now = Instant::now();
+        let ttl = self.ttl_ms;
+        let expired = move |touch: Instant| now.duration_since(touch).as_millis() as u64 > ttl;
+        let mut dropped = 0;
+
+        let stale: Vec<u64> = self
+            .full
+            .iter()
+            .filter(|(_, e)| expired(e.last_touch))
+            .map(|(&k, _)| k)
+            .collect();
+        for k in stale {
+            let e = self.full.remove(&k).unwrap();
+            pool.release(e.owner);
+            dropped += 1;
+        }
+        let stale: Vec<u64> = self
+            .partial
+            .iter()
+            .filter(|(_, e)| expired(e.last_touch) && Arc::strong_count(&e.prefix) == 1)
+            .map(|(&k, _)| k)
+            .collect();
+        for k in stale {
+            let e = self.partial.remove(&k).unwrap();
+            pool.release(e.owner);
+            dropped += 1;
+        }
+        self.ttl_evictions += dropped;
+        dropped
     }
 
     /// Drop the least-recently-used *idle* entry and free its pages.
@@ -646,6 +731,58 @@ mod tests {
         assert!(c.insert(&prompt, prefix, &tk, &tv, 0, &mut p).is_none());
         assert!(c.lookup(&prompt, 32).is_none());
         assert_eq!(p.stats().live_bytes, 0);
+    }
+
+    #[test]
+    fn capacity_knob_bounds_cache_bytes() {
+        // measure one lineage's exact footprint in an unlimited cache
+        let mut probe = PrefixCache::new(true);
+        let mut p = pool();
+        let (prompt_a, prefix_a, tka, tva) = built(160, 51);
+        probe.insert(&prompt_a, prefix_a, &tka, &tva, 1, &mut p);
+        let one = probe.measured_bytes();
+        while probe.evict_lru(&mut p) {}
+        assert_eq!(p.stats().live_bytes, 0);
+
+        // capacity for ~1.5 lineages: caching a second prompt must
+        // LRU-evict the first to stay under the cache's own cap, even
+        // though the pool budget (unlimited here) would happily fit both
+        let cap = one + one / 2;
+        let mut c = PrefixCache::with_limits(true, cap, 0);
+        let (prompt_a, prefix_a, tka, tva) = built(160, 51);
+        let (prompt_b, prefix_b, tkb, tvb) = built(160, 52);
+        assert!(c.insert(&prompt_a, prefix_a, &tka, &tva, 1, &mut p).is_some());
+        assert!(c.insert(&prompt_b, prefix_b, &tkb, &tvb, 2, &mut p).is_some());
+        assert!(c.measured_bytes() <= cap, "capacity cap must hold after insert");
+        assert!(c.evictions >= 1, "second lineage must evict under the cap");
+        assert_eq!(p.stats().live_bytes, c.measured_bytes(), "accounting exact under the cap");
+        // the newer lineage is the one that survived
+        assert!(matches!(c.lookup(&prompt_b, 32), Some(PrefixHit::Full { .. })));
+    }
+
+    #[test]
+    fn ttl_decay_expires_idle_entries_and_respects_pins() {
+        let mut c = PrefixCache::with_limits(true, 0, 25);
+        let mut p = pool();
+        let (prompt, prefix, tk, tv) = built(160, 61);
+        let canonical = c.insert(&prompt, Arc::clone(&prefix), &tk, &tv, 1, &mut p).unwrap();
+        drop(prefix);
+        assert_eq!(c.expire_idle(&mut p), 0, "fresh entries must not expire");
+
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        // the partial is pinned by `canonical` (a live sequence's
+        // reference): only the full entry may expire on this sweep
+        assert_eq!(c.expire_idle(&mut p), 1);
+        assert_eq!(c.len(), 1);
+        assert_eq!(p.stats().live_bytes, c.measured_bytes(), "accounting exact after sweep");
+        drop(canonical);
+        // unpinned now: the next sweep drains the partial and the pool
+        assert_eq!(c.expire_idle(&mut p), 1);
+        assert_eq!(c.ttl_evictions, 2);
+        assert_eq!(c.evictions, 0, "TTL decay must not count as pressure eviction");
+        assert_eq!(c.len(), 0);
+        assert_eq!(p.stats().live_bytes, 0);
+        assert_eq!(p.stats().used_pages, 0);
     }
 
     #[test]

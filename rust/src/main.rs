@@ -70,6 +70,9 @@ USAGE:
            [--artifacts DIR] [--report-dir DIR]
   mustafar serve    [--model M] [--backend B] [--ks S] [--vs S]
            [--addr HOST:PORT] [--max-batch N] [--max-queue-ms N] [--artifacts DIR]
+           [--reactor-threads N] [--max-conns N] [--max-line-bytes N]
+           [--write-hwm N] [--idle-timeout-ms N] [--read-deadline-ms N]
+           [--drain-deadline-ms N] [--prefix-cache-bytes N] [--prefix-ttl-ms N]
   mustafar generate [--model M] [--backend B] [--ks S] [--vs S]
            [--prompt-seed N] [--prompt-len N] [--max-new N] [--artifacts DIR]
   mustafar info     [--artifacts DIR]
@@ -148,6 +151,8 @@ fn build_engine(args: &Args) -> mustafar::Result<Engine> {
     ec.max_new_tokens = args.get_usize("max-new", 64);
     ec.max_queue_ms = args.get_usize("max-queue-ms", 0) as u64;
     ec.kv_budget_bytes = args.get_usize("kv-budget", 0);
+    ec.prefix_cache_bytes = args.get_usize("prefix-cache-bytes", 0);
+    ec.prefix_ttl_ms = args.get_usize("prefix-ttl-ms", 0) as u64;
 
     let model = NativeModel::new(weights.clone());
     match backend {
@@ -162,7 +167,19 @@ fn build_engine(args: &Args) -> mustafar::Result<Engine> {
 fn cmd_serve(args: &Args) -> mustafar::Result<()> {
     let engine = build_engine(args)?;
     let addr = args.get("addr", "127.0.0.1:7777");
-    mustafar::server::serve(engine, &addr)
+    let d = mustafar::config::ServerConfig::default();
+    let sc = mustafar::config::ServerConfig {
+        reactor_threads: args.get_usize("reactor-threads", d.reactor_threads),
+        max_conns: args.get_usize("max-conns", d.max_conns),
+        max_line_bytes: args.get_usize("max-line-bytes", d.max_line_bytes),
+        write_hwm_bytes: args.get_usize("write-hwm", d.write_hwm_bytes),
+        idle_timeout_ms: args.get_usize("idle-timeout-ms", d.idle_timeout_ms as usize) as u64,
+        read_deadline_ms: args.get_usize("read-deadline-ms", d.read_deadline_ms as usize) as u64,
+        drain_deadline_ms: args.get_usize("drain-deadline-ms", d.drain_deadline_ms as usize)
+            as u64,
+        ..d
+    };
+    mustafar::server::serve_with(engine, &addr, sc)
 }
 
 fn cmd_generate(args: &Args) -> mustafar::Result<()> {

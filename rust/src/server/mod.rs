@@ -1,22 +1,23 @@
-//! Minimal TCP front-end for the serving engine (the "router" face of
-//! the L3 coordinator). Line-delimited JSON protocol:
+//! Nonblocking TCP front-end for the serving engine (the "router"
+//! face of the L3 coordinator). Line-delimited JSON protocol:
 //!
 //!   -> {"id": 1, "prompt": [1, 17, 300, ...], "max_new_tokens": 32}
 //!   <- {"id": 1, "tokens": [...], "finish": "length", ...}
 //!   -> {"cancel": 1}
 //!   <- {"id": 1, "tokens": [...], "finish": "cancelled", ...}
 //!   -> {"stats": true}
-//!   <- {"pool_live_bytes": ..., "prefix_hit_rate": ..., ...}
+//!   <- {"pool_live_bytes": ..., "open_conns": ..., ...}
 //!
 //! Finish reasons: `"length"` (hit max_new_tokens), `"stop"` (stop
 //! token), `"rejected"` (admission), `"cancelled"` (client cancel line
 //! or disconnect), `"error"` (the engine failed mid-flight; the line
-//! carries an `"error"` message field), `"timeout"` (queued-TTL or the
-//! request's own `deadline_ms` expired), `"shed"` (admission queue
-//! saturated; the line carries a `"retry_after_ms"` hint and the
-//! request is safe to resubmit). Request ids are namespaced per
-//! connection — two connections may use the same id; internally every
-//! request gets a server-assigned routing key (`Request::route`).
+//! carries an `"error"` message field), `"timeout"` (queued-TTL, the
+//! request's own `deadline_ms`, or the drain deadline expired),
+//! `"shed"` (admission queue saturated or the server is draining; the
+//! line carries a `"retry_after_ms"` hint and the request is safe to
+//! resubmit). Request ids are namespaced per connection — two
+//! connections may use the same id; internally every request gets a
+//! server-assigned routing key (`Request::route`).
 //!
 //! Cancellation is first-class: a `{"cancel": id}` line aborts an
 //! in-flight request (queued or decoding) and yields a `"cancelled"`
@@ -42,30 +43,84 @@
 //! a write-then-half-close client (`printf ... | nc`) now gets
 //! `"cancelled"` finishes instead of results.
 //!
-//! The engine runs on a dedicated thread; connections feed the admission
-//! queue through an mpsc channel and completions route back to the
-//! originating connection by routing key. Connections are *pipelined*: a
-//! client may write many requests before reading; a per-connection
-//! writer thread streams completions back as they finish. An idle
-//! engine thread parks on a blocking `recv` (no try_recv + sleep spin).
-//! tokio is not available offline — std::net + threads suffice for the
-//! workloads this serves.
+//! # Architecture
+//!
+//! Connections are multiplexed onto a small fixed set of reactor
+//! threads (`ServerConfig::reactor_threads`, see `reactor.rs`) over a
+//! `poll(2)`-based readiness loop written in-repo (`poll.rs`) — no
+//! per-connection threads, no external async framework. The engine
+//! runs on one dedicated thread; reactors feed it over an mpsc channel
+//! and completions route back to the owning reactor by
+//! `(reactor, token)` address, with a socketpair waker so a parked
+//! reactor notices. An idle engine thread parks on a blocking `recv`.
+//! Total server thread count is `reactor_threads + 1` (engine) plus
+//! the engine's own worker pool — independent of connection count.
+//!
+//! Every per-connection resource is bounded and observable: read
+//! buffer (`max_line_bytes` — an oversized line is answered with one
+//! `error` line and the connection survives), write queue
+//! (`write_hwm_bytes` — a reader stalled past the high-water mark is
+//! torn down through the batched abort path), a per-line read deadline
+//! (`read_deadline_ms`, slowloris defense), an idle timeout
+//! (`idle_timeout_ms`), and a global connection cap (`max_conns`,
+//! excess accepts shed with `retry_after_ms`).
+//!
+//! # Drain protocol
+//!
+//! [`ShutdownHandle::shutdown`] flips the server to draining:
+//! 1. the listener closes (new connects are refused by the kernel;
+//!    anything racing the transition is shed with `retry_after_ms`),
+//! 2. the engine stops admitting (`"shed"` replies for late submits)
+//!    and clamps every in-flight request's deadline to
+//!    `drain_deadline_ms`, so each finishes naturally or completes
+//!    with a `"timeout"` finish inside the window,
+//! 3. connections close as they quiesce (nothing in flight, reply
+//!    bytes flushed); stragglers are force-closed at
+//!    `drain_deadline_ms` plus a flush grace,
+//! 4. reactor threads exit once their connections are gone, the
+//!    engine thread exits when the last reactor disconnects, and
+//!    `serve_listener_cfg` returns.
+//!
+//! # Stats
+//!
+//! `{"stats": true}` answers the engine/pool counters plus the
+//! connection-level gauges `open_conns`, `conns_shed`,
+//! `write_backpressure_closes`, `idle_closes`, `read_deadline_closes`,
+//! `oversize_lines`, `io_fault_closes`, and `drain_state`
+//! (`"serving"` | `"draining"`), and the prefix-cache capacity knobs
+//! (`prefix_charged_bytes`, `prefix_capacity_bytes`, `prefix_ttl_ms`,
+//! `prefix_ttl_evictions`).
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::{Completion, Engine, FinishReason, Request, SubmitOutcome};
 use crate::error::{Error, Result};
-use crate::faults::Injector;
 use crate::fmt::Json;
 
-/// Messages from connection handlers to the engine thread.
-enum Inbound {
-    Req(Request),
+mod poll;
+mod reactor;
+
+use reactor::{Control, Gauges, Reactor, ReactorHandle, Waker};
+
+pub use crate::config::ServerConfig;
+
+/// Address of one connection: which reactor owns it, and its token
+/// within that reactor (tokens are never reused).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct ConnAddr {
+    pub reactor: usize,
+    pub token: u64,
+}
+
+/// Messages from the reactors to the engine thread.
+pub(crate) enum Inbound {
+    Req(Request, ConnAddr),
     /// Cancel the request with this routing key (an explicit client
     /// `{"cancel": id}` line).
     Abort(u64),
@@ -74,17 +129,74 @@ enum Inbound {
     /// pipelined connection's teardown cannot interleave with other
     /// traffic on the engine channel.
     AbortMany(Vec<u64>),
-    /// Stats query; the rendered JSON line comes back on the sender.
-    Stats(Sender<String>),
+    /// Stats query; the rendered JSON line comes back as a
+    /// `Control::Line` addressed to the connection.
+    Stats(ConnAddr),
+    /// A reactor observed the shutdown flag: stop admitting, clamp
+    /// in-flight deadlines to the drain window. Idempotent.
+    Drain,
 }
 
-/// Lock a shared map/stream, recovering from poisoning. Connection
-/// state here is plain data (id maps, a TcpStream): if some thread
-/// panicked mid-update the worst case is a stale entry, which the
-/// normal disconnect teardown already tolerates — propagating the
-/// poison would instead take down every connection sharing the map.
+/// Lock a shared structure, recovering from poisoning. The state here
+/// is plain data (the shutdown waker list): if some thread panicked
+/// mid-update the worst case is a stale entry — propagating the poison
+/// would instead take down every user of the handle.
 fn lck<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Cooperative shutdown signal for [`serve_listener_cfg`]. Clone it
+/// before handing it to the server; calling [`ShutdownHandle::shutdown`]
+/// from any thread flips the server to draining (see the module docs
+/// for the drain protocol).
+#[derive(Clone, Default)]
+pub struct ShutdownHandle {
+    inner: Arc<ShutdownInner>,
+}
+
+#[derive(Default)]
+struct ShutdownInner {
+    flag: AtomicBool,
+    wakers: Mutex<Vec<Waker>>,
+}
+
+impl ShutdownHandle {
+    pub fn new() -> ShutdownHandle {
+        ShutdownHandle::default()
+    }
+
+    /// Begin draining. Idempotent; returns immediately (the server
+    /// quiesces in the background and `serve_listener_cfg` returns
+    /// when the drain completes).
+    pub fn shutdown(&self) {
+        self.inner.flag.store(true, Ordering::SeqCst);
+        for w in lck(&self.inner.wakers).iter() {
+            w.wake();
+        }
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.inner.flag.load(Ordering::SeqCst)
+    }
+
+    fn register(&self, w: Waker) {
+        lck(&self.inner.wakers).push(w.clone());
+        if self.is_shutdown() {
+            w.wake();
+        }
+    }
+}
+
+/// Pin a stream's kernel send/receive buffer sizes. Test hook: kernel
+/// buffer autotuning on loopback absorbs megabytes, which would make
+/// write-backpressure behavior timing-dependent; shrinking the buffers
+/// makes it deterministic. No-op off linux.
+pub fn set_stream_buffers(
+    stream: &TcpStream,
+    sndbuf: Option<usize>,
+    rcvbuf: Option<usize>,
+) -> std::io::Result<()> {
+    poll::set_sock_buf(stream.as_raw_fd(), sndbuf, rcvbuf)
 }
 
 /// Parse one request line.
@@ -174,11 +286,11 @@ pub fn render_completion(c: &Completion) -> String {
     Json::obj(fields).to_string()
 }
 
-/// Serialize the engine's pool + prefix-cache + serving counters.
-pub fn render_stats(engine: &Engine) -> String {
+/// Engine-side stats fields (pool + prefix-cache + serving counters).
+fn stats_fields(engine: &Engine) -> Vec<(&'static str, Json)> {
     let p = engine.pool_stats();
     let m = &engine.metrics;
-    Json::obj(vec![
+    vec![
         ("pool_budget_bytes", Json::num(p.budget_bytes as f64)),
         ("pool_page_bytes", Json::num(p.page_bytes as f64)),
         ("pool_used_pages", Json::num(p.used_pages as f64)),
@@ -193,7 +305,11 @@ pub fn render_stats(engine: &Engine) -> String {
         ("prefix_misses", Json::num(m.prefix_misses as f64)),
         ("prefix_hit_rate", Json::num(m.prefix_hit_rate())),
         ("prefix_evictions", Json::num(m.prefix_evictions as f64)),
+        ("prefix_ttl_evictions", Json::num(m.prefix_ttl_evictions as f64)),
         ("prefix_tokens_reused", Json::num(m.prefix_tokens_reused as f64)),
+        ("prefix_charged_bytes", Json::num(engine.prefix_cache().measured_bytes() as f64)),
+        ("prefix_capacity_bytes", Json::num(engine.cfg.prefix_cache_bytes as f64)),
+        ("prefix_ttl_ms", Json::num(engine.cfg.prefix_ttl_ms as f64)),
         ("repruned", Json::num(m.repruned as f64)),
         ("preempted", Json::num(m.preempted as f64)),
         ("completions", Json::num(m.completions as f64)),
@@ -207,375 +323,277 @@ pub fn render_stats(engine: &Engine) -> String {
         ("isolated_panics", Json::num(m.isolated_panics as f64)),
         ("queue_depth_ms_estimate", Json::num(engine.queue_depth_ms_estimate())),
         ("generated_tokens", Json::num(m.generated_tokens as f64)),
-    ])
-    .to_string()
+    ]
 }
 
-/// Serve `engine` on `addr` until the process exits.
+/// Serialize the engine's pool + prefix-cache + serving counters.
+pub fn render_stats(engine: &Engine) -> String {
+    Json::obj(stats_fields(engine)).to_string()
+}
+
+/// Stats line with the connection-level gauges appended (what a live
+/// server actually answers to `{"stats": true}`).
+fn render_stats_full(engine: &Engine, g: &Gauges) -> String {
+    let mut fields = stats_fields(engine);
+    let o = Ordering::Relaxed;
+    fields.push(("open_conns", Json::num(g.open_conns.load(o) as f64)));
+    fields.push(("conns_shed", Json::num(g.conns_shed.load(o) as f64)));
+    fields.push((
+        "write_backpressure_closes",
+        Json::num(g.write_backpressure_closes.load(o) as f64),
+    ));
+    fields.push(("idle_closes", Json::num(g.idle_closes.load(o) as f64)));
+    fields.push(("read_deadline_closes", Json::num(g.read_deadline_closes.load(o) as f64)));
+    fields.push(("oversize_lines", Json::num(g.oversize_lines.load(o) as f64)));
+    fields.push(("io_fault_closes", Json::num(g.io_fault_closes.load(o) as f64)));
+    fields.push((
+        "drain_state",
+        Json::str(if g.drain_state.load(o) == 0 { "serving" } else { "draining" }),
+    ));
+    Json::obj(fields).to_string()
+}
+
+/// Serve `engine` on `addr` with default limits until the process
+/// exits.
 pub fn serve(engine: Engine, addr: &str) -> Result<()> {
+    serve_with(engine, addr, ServerConfig::default())
+}
+
+/// Serve `engine` on `addr` with explicit connection limits.
+pub fn serve_with(engine: Engine, addr: &str, cfg: ServerConfig) -> Result<()> {
     let listener = TcpListener::bind(addr).map_err(Error::Io)?;
     crate::info!("mustafar server listening on {addr}");
-    serve_listener(engine, listener)
+    serve_listener_cfg(engine, listener, cfg, ShutdownHandle::new())
 }
 
-type Waiters = Arc<Mutex<HashMap<u64, Sender<Completion>>>>;
-/// This connection's in-flight requests: client id → routing key.
-type Inflight = Arc<Mutex<HashMap<u64, u64>>>;
-
-/// Serve on an already-bound listener (tests bind 127.0.0.1:0 and read
-/// the ephemeral address back before calling this).
+/// Serve on an already-bound listener with default limits and no
+/// external shutdown (tests bind 127.0.0.1:0 and read the ephemeral
+/// address back before calling this).
 pub fn serve_listener(engine: Engine, listener: TcpListener) -> Result<()> {
-    let (req_tx, req_rx): (Sender<Inbound>, Receiver<Inbound>) = channel();
-    let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
-    // The connections' `server.io` fault point shares the engine's
+    serve_listener_cfg(engine, listener, ServerConfig::default(), ShutdownHandle::new())
+}
+
+/// Serve on an already-bound listener. The calling thread becomes
+/// reactor 0 (it owns the listener); `cfg.reactor_threads - 1` extra
+/// reactor threads and one engine thread are spawned. Returns after
+/// `shutdown.shutdown()` completes the drain protocol (module docs).
+pub fn serve_listener_cfg(
+    engine: Engine,
+    listener: TcpListener,
+    cfg: ServerConfig,
+    shutdown: ShutdownHandle,
+) -> Result<()> {
+    listener.set_nonblocking(true).map_err(Error::Io)?;
+    let n = cfg.reactor_threads.max(1);
+    let gauges = Arc::new(Gauges::default());
+    // Server-assigned routing keys, unique across connections: two
+    // clients reusing the same request id never collide in the
+    // waiter map, and an abort targets exactly one request.
+    let next_route = Arc::new(AtomicU64::new(1));
+    // The reactors' `server.io` fault point shares the engine's
     // injector so one MUSTAFAR_FAULTS spec arms the whole stack.
     let faults = engine.fault_injector().clone();
-    // Server-assigned routing keys, unique across connections: two
-    // clients reusing the same request id never collide in `waiters`,
-    // and an abort targets exactly one request.
-    let next_route = Arc::new(AtomicU64::new(1));
+    let (engine_tx, engine_rx): (Sender<Inbound>, Receiver<Inbound>) = channel();
 
-    // engine thread: pull requests, step, route completions
-    {
-        let waiters = Arc::clone(&waiters);
-        std::thread::spawn(move || {
-            let mut engine = engine;
-            let route = |engine: &mut Engine, waiters: &Waiters| {
-                for c in engine.take_completions() {
-                    let tx = lck(waiters).remove(&c.route);
-                    if let Some(tx) = tx {
-                        let _ = tx.send(c);
-                    }
-                }
-            };
-            // Answer a refused submission immediately instead of
-            // hanging the waiting client.
-            let refuse = |waiters: &Waiters, id: u64, key: u64, queued, fin, retry: Option<u64>| {
-                let tx = lck(waiters).remove(&key);
-                if let Some(tx) = tx {
-                    let mut c = Completion::queued(id, key, queued, fin, None);
-                    c.retry_after_ms = retry;
-                    let _ = tx.send(c);
-                }
-            };
-            let handle = |engine: &mut Engine, waiters: &Waiters, m: Inbound| match m {
-                Inbound::Req(r) => {
-                    let (id, key, queued) = (r.id, r.route, r.submitted);
-                    match engine.submit_full(r) {
-                        SubmitOutcome::Queued => {}
-                        SubmitOutcome::Rejected => {
-                            refuse(waiters, id, key, queued, FinishReason::Rejected, None);
-                        }
-                        SubmitOutcome::Shed { retry_after_ms } => {
-                            let retry = Some(retry_after_ms);
-                            refuse(waiters, id, key, queued, FinishReason::Shed, retry);
-                        }
-                    }
-                }
-                Inbound::Abort(key) => {
-                    // In flight → a Cancelled completion routes back
-                    // below (a disconnected waiter silently drops it
-                    // and the pages are freed regardless). Not found →
-                    // the request already completed and was answered:
-                    // exactly-once semantics, nothing more to say.
-                    engine.cancel(key);
-                }
-                Inbound::AbortMany(keys) => {
-                    for key in keys {
-                        engine.cancel(key);
-                    }
-                }
-                Inbound::Stats(tx) => {
-                    let _ = tx.send(render_stats(engine));
-                }
-            };
-            loop {
-                if engine.idle() {
-                    // Blocking receive: an idle server parks here until
-                    // work (or a stats probe) arrives instead of
-                    // spinning on try_recv + sleep.
-                    match req_rx.recv() {
-                        Ok(m) => handle(&mut engine, &waiters, m),
-                        Err(_) => return,
-                    }
-                }
-                // drain whatever else arrived without blocking decode
-                loop {
-                    match req_rx.try_recv() {
-                        Ok(m) => handle(&mut engine, &waiters, m),
-                        Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                        Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
-                    }
-                }
-                // Cancels and rejections emit completions without a
-                // step; deliver them even when the engine is idle now
-                // (an explicit cancel must answer, not hang).
-                route(&mut engine, &waiters);
-                if engine.idle() {
-                    continue;
-                }
-                if let Err(e) = engine.step() {
-                    // A failed step must not strand its waiters: fail
-                    // every in-flight request back to its connection
-                    // with an error finish instead of looping forever
-                    // over clients blocked on `read_line`.
-                    eprintln!("[server] engine error: {e}");
-                    engine.fail_inflight(&format!("engine step failed: {e}"));
-                }
-                route(&mut engine, &waiters);
-            }
-        });
+    let mut handles: Vec<ReactorHandle> = Vec::with_capacity(n);
+    let mut parts: Vec<(Receiver<Control>, UnixStream)> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (ctl_tx, ctl_rx) = channel();
+        let (wake_rx, wake_tx) = UnixStream::pair().map_err(Error::Io)?;
+        wake_rx.set_nonblocking(true).map_err(Error::Io)?;
+        wake_tx.set_nonblocking(true).map_err(Error::Io)?;
+        let waker = Waker::new(wake_tx);
+        shutdown.register(waker.clone());
+        handles.push(ReactorHandle { ctl_tx, waker });
+        parts.push((ctl_rx, wake_rx));
     }
 
-    for stream in listener.incoming() {
-        let stream = stream.map_err(Error::Io)?;
-        let req_tx = req_tx.clone();
-        let waiters = Arc::clone(&waiters);
-        let next_route = Arc::clone(&next_route);
-        let faults = faults.clone();
-        std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, req_tx, &waiters, &next_route, faults) {
-                eprintln!("[server] connection error: {e}");
-            }
-        });
+    let engine_thread = {
+        let reactors = handles.clone();
+        let cfg = cfg.clone();
+        let gauges = Arc::clone(&gauges);
+        std::thread::spawn(move || engine_loop(engine, engine_rx, reactors, cfg, gauges))
+    };
+
+    let mut reactors: Vec<Reactor> = parts
+        .into_iter()
+        .enumerate()
+        .map(|(idx, (ctl_rx, wake_rx))| {
+            Reactor::new(
+                idx,
+                cfg.clone(),
+                ctl_rx,
+                wake_rx,
+                engine_tx.clone(),
+                Arc::clone(&gauges),
+                Arc::clone(&next_route),
+                faults.clone(),
+                shutdown.clone(),
+                handles.clone(),
+            )
+        })
+        .collect();
+    // The engine thread must observe channel disconnect once every
+    // reactor exits — drop the construction-time sender now.
+    drop(engine_tx);
+
+    let mut r0 = reactors.remove(0);
+    r0.set_listener(listener);
+    let peers: Vec<_> =
+        reactors.into_iter().map(|r| std::thread::spawn(move || r.run())).collect();
+    r0.run();
+    for p in peers {
+        let _ = p.join();
     }
+    let _ = engine_thread.join();
     Ok(())
 }
 
-/// Abort everything a connection still has in flight (disconnect or
-/// write failure): mark the connection dead, drain its id → route map,
-/// and send ONE `AbortMany` carrying every route — all inside the
-/// inflight lock, so this is mutually exclusive with request
-/// registration. A request was either registered before the drain (its
-/// `Req` send happened in that critical section, so the batched abort
-/// here lands after it) or registers afterwards and is refused by the
-/// dead flag — no request can slip through un-aborted. Batching keeps
-/// a pipelined connection's teardown atomic on the engine channel
-/// (other connections' messages cannot interleave between its aborts).
-/// Idempotent — aborts for already-answered requests are engine no-ops.
-fn abort_all(inflight: &Inflight, dead: &AtomicBool, req_tx: &Sender<Inbound>) {
-    let mut inf = lck(inflight);
-    dead.store(true, Ordering::SeqCst);
-    let routes: Vec<u64> = inf.drain().map(|(_, r)| r).collect();
-    if !routes.is_empty() {
-        let _ = req_tx.send(Inbound::AbortMany(routes));
+/// Send a completion to the reactor that owns its connection, waking
+/// the reactor so the reply flushes promptly.
+fn deliver(reactors: &[ReactorHandle], addr: ConnAddr, c: Completion) {
+    let h = &reactors[addr.reactor];
+    if h.ctl_tx.send(Control::Done(addr.token, c)).is_ok() {
+        h.waker.wake();
     }
 }
 
-/// One client connection. The reader half (this thread) parses lines
-/// and registers each request's waiter; a writer thread streams rendered
-/// completions back as they arrive, so many requests can be in flight
-/// per connection (pipelining). Error and stats lines go through the
-/// same write lock so responses never interleave mid-line. Both halves
-/// detect the client going away — reader EOF/error, writer write
-/// failure — and abort every request still in flight so the engine
-/// frees its pool pages instead of decoding to completion.
-fn handle_conn(
-    stream: TcpStream,
-    req_tx: Sender<Inbound>,
-    waiters: &Mutex<HashMap<u64, Sender<Completion>>>,
-    next_route: &AtomicU64,
-    faults: Injector,
-) -> Result<()> {
-    let writer_stream = stream.try_clone().map_err(Error::Io)?;
-    // Bound every write (completions from the writer thread AND the
-    // reader's own error/stats lines): a silent client that fills the
-    // socket send buffer turns a would-be indefinite block into a
-    // write error, which feeds the normal teardown (abort in-flight
-    // work, shut the socket down) instead of pinning this connection's
-    // threads and fd forever. 30s of zero TCP progress means the
-    // client is gone or wedged, not merely slow.
-    let _ = writer_stream.set_write_timeout(Some(std::time::Duration::from_secs(30)));
-    let writer = Arc::new(Mutex::new(writer_stream));
-    let reader = BufReader::new(stream);
-    let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
-    // set by `abort_all` (writer write-failure, or final cleanup) under
-    // the inflight lock; the reader stops accepting new work once set
-    let dead = Arc::new(AtomicBool::new(false));
-
-    // completion fan-in for this connection; the writer thread exits
-    // once every sender clone (per-request waiters + the reader's
-    // master, dropped at EOF) is gone
-    let (comp_tx, comp_rx): (Sender<Completion>, Receiver<Completion>) = channel();
-    let writer_thread = {
-        let writer = Arc::clone(&writer);
-        let inflight = Arc::clone(&inflight);
-        let dead = Arc::clone(&dead);
-        let req_tx = req_tx.clone();
-        let faults = faults.clone();
-        std::thread::spawn(move || {
-            while let Ok(c) = comp_rx.recv() {
-                {
-                    // answered: the client may reuse this id from here
-                    // on (retire before the write so a pipelined reuse
-                    // racing the response line can never hit a stale
-                    // duplicate check; guard on the route so a newer
-                    // same-id request survives)
-                    let mut inf = lck(&inflight);
-                    if inf.get(&c.id) == Some(&c.route) {
-                        inf.remove(&c.id);
-                    }
-                }
-                // `server.io` simulates the socket dying mid-response:
-                // the write "fails" and the normal dead-client teardown
-                // below must leave the engine clean.
-                let ok = if faults.fire("server.io") {
-                    false
-                } else {
-                    let mut w = lck(&writer);
-                    writeln!(w, "{}", render_completion(&c)).is_ok()
-                };
-                if !ok {
-                    // Write failure = the client went away: cancel its
-                    // remaining work, shut the socket down so the
-                    // reader parked in read_line unblocks (a half-open,
-                    // silent client would otherwise pin this
-                    // connection's reader thread and fd forever), and
-                    // exit, dropping comp_rx. No drain loop: the
-                    // channel is unbounded and route() tolerates the
-                    // closed receiver.
-                    abort_all(&inflight, &dead, &req_tx);
-                    let _ = lck(&writer).shutdown(std::net::Shutdown::Both);
-                    return;
-                }
-            }
-        })
-    };
-
-    let res = read_loop(
-        reader,
-        &writer,
-        &req_tx,
-        waiters,
-        next_route,
-        &inflight,
-        &dead,
-        &comp_tx,
-        &faults,
-    );
-    // EOF, read error, or writer-detected death: abort whatever this
-    // connection still has in flight — its pool pages are released by
-    // the engine instead of being held to completion (and then clawed
-    // back from *live* requests by the pressure ladder)
-    abort_all(&inflight, &dead, &req_tx);
-    drop(comp_tx);
-    let _ = writer_thread.join();
-    res
+/// Route finished completions back to their waiting connections.
+fn route_completions(
+    engine: &mut Engine,
+    waiters: &mut HashMap<u64, ConnAddr>,
+    reactors: &[ReactorHandle],
+) {
+    for c in engine.take_completions() {
+        if let Some(addr) = waiters.remove(&c.route) {
+            deliver(reactors, addr, c);
+        }
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
-fn read_loop(
-    reader: BufReader<TcpStream>,
-    writer: &Mutex<TcpStream>,
-    req_tx: &Sender<Inbound>,
-    waiters: &Mutex<HashMap<u64, Sender<Completion>>>,
-    next_route: &AtomicU64,
-    inflight: &Inflight,
-    dead: &AtomicBool,
-    comp_tx: &Sender<Completion>,
-    faults: &Injector,
-) -> Result<()> {
-    for line in reader.lines() {
-        // `server.io` on the read side simulates the connection dying
-        // between lines: exit as a read error so handle_conn runs the
-        // same disconnect teardown a real broken socket would.
-        if faults.fire("server.io") {
-            return Err(Error::Engine("injected fault: server.io".into()));
-        }
-        let line = match line {
-            Ok(l) => l,
-            Err(e) => {
-                // The writer's engineered shutdown(Both) after a write
-                // failure surfaces here as a read error: that is the
-                // intended quiet teardown of a dead connection, not a
-                // connection error worth logging.
-                if dead.load(Ordering::SeqCst) {
-                    return Ok(());
-                }
-                return Err(Error::Io(e));
+fn handle_msg(
+    engine: &mut Engine,
+    waiters: &mut HashMap<u64, ConnAddr>,
+    reactors: &[ReactorHandle],
+    cfg: &ServerConfig,
+    gauges: &Gauges,
+    draining: &mut bool,
+    m: Inbound,
+) {
+    match m {
+        Inbound::Req(r, addr) => {
+            let (id, key, queued) = (r.id, r.route, r.submitted);
+            if *draining {
+                // Late submit on a surviving connection: shed with a
+                // hint that outlives the drain window.
+                engine.metrics.shed += 1;
+                let mut c = Completion::queued(id, key, queued, FinishReason::Shed, None);
+                c.retry_after_ms = Some(engine.retry_after_hint_ms().max(cfg.drain_deadline_ms));
+                deliver(reactors, addr, c);
+                return;
             }
-        };
-        if dead.load(Ordering::SeqCst) {
-            return Ok(());
-        }
-        if line.trim().is_empty() {
-            continue;
-        }
-        // parse each line exactly once; branch on the parsed value
-        let parsed = match Json::parse(&line) {
-            Ok(v) => v,
-            Err(e) => {
-                let msg = error_line(&e.to_string());
-                writeln!(lck(writer), "{msg}").map_err(Error::Io)?;
-                continue;
-            }
-        };
-        if is_stats_json(&parsed) {
-            let (tx, rx) = channel();
-            req_tx.send(Inbound::Stats(tx)).map_err(|_| Error::Engine("engine gone".into()))?;
-            let stats = rx.recv().map_err(|_| Error::Engine("engine gone".into()))?;
-            writeln!(lck(writer), "{stats}").map_err(Error::Io)?;
-            continue;
-        }
-        // A cancel message is an object carrying "cancel" and no
-        // request body — a request with a stray "cancel" field must
-        // still be submitted (and answered), not silently swallowed.
-        if parsed.opt("cancel").is_some() && parsed.opt("prompt").is_none() {
-            // {"cancel": id}: abort without hanging up. In flight → the
-            // engine emits a "cancelled" finish line for it; already
-            // answered (cancel racing completion) → no-op, the client
-            // was answered exactly once by the original completion. A
-            // malformed id gets an explicit error instead of falling
-            // through to request parsing's misleading missing-field one.
-            match cancel_target(&parsed) {
-                Some(id) => {
-                    let route = lck(inflight).get(&id).copied();
-                    if let Some(r) = route {
-                        req_tx
-                            .send(Inbound::Abort(r))
-                            .map_err(|_| Error::Engine("engine gone".into()))?;
-                    }
+            match engine.submit_full(r) {
+                SubmitOutcome::Queued => {
+                    waiters.insert(key, addr);
                 }
-                None => {
-                    let msg =
-                        error_line("malformed cancel: \"cancel\" must be a numeric request id");
-                    writeln!(lck(writer), "{msg}").map_err(Error::Io)?;
+                // Answer a refused submission immediately instead of
+                // hanging the waiting client.
+                SubmitOutcome::Rejected => {
+                    let c = Completion::queued(id, key, queued, FinishReason::Rejected, None);
+                    deliver(reactors, addr, c);
+                }
+                SubmitOutcome::Shed { retry_after_ms } => {
+                    let mut c = Completion::queued(id, key, queued, FinishReason::Shed, None);
+                    c.retry_after_ms = Some(retry_after_ms);
+                    deliver(reactors, addr, c);
                 }
             }
-            continue;
         }
-        let mut req = match request_from_json(&parsed) {
-            Ok(r) => r,
-            Err(e) => {
-                let msg = error_line(&e.to_string());
-                writeln!(lck(writer), "{msg}").map_err(Error::Io)?;
-                continue;
+        Inbound::Abort(key) => {
+            // In flight → a Cancelled completion routes back (a dead
+            // connection's completion is dropped at the reactor and
+            // the pages are freed regardless). Not found → the request
+            // already completed and was answered: exactly-once
+            // semantics, nothing more to say.
+            engine.cancel(key);
+        }
+        Inbound::AbortMany(keys) => {
+            for key in keys {
+                engine.cancel(key);
             }
-        };
-        req.route = next_route.fetch_add(1, Ordering::Relaxed);
-        {
-            // Registration and `abort_all` exclude each other on the
-            // inflight lock, and the `Req` send happens inside the
-            // critical section: a disconnect abort either sees this
-            // entry (its Abort then lands after the Req on the engine
-            // channel) or has already marked the connection dead and
-            // nothing new starts. No request slips through un-aborted.
-            let mut inf = lck(inflight);
-            if dead.load(Ordering::SeqCst) {
-                return Ok(());
+        }
+        Inbound::Stats(addr) => {
+            let line = render_stats_full(engine, gauges);
+            let h = &reactors[addr.reactor];
+            if h.ctl_tx.send(Control::Line(addr.token, line)).is_ok() {
+                h.waker.wake();
             }
-            if inf.contains_key(&req.id) {
-                drop(inf);
-                let msg = error_line(&format!("duplicate in-flight request id {}", req.id));
-                writeln!(lck(writer), "{msg}").map_err(Error::Io)?;
-                continue;
+        }
+        Inbound::Drain => {
+            if !*draining {
+                *draining = true;
+                // Finish-or-deadline-cancel every in-flight request:
+                // clamping deadlines to the drain window turns
+                // stragglers into `timeout` finishes the existing
+                // deadline sweep delivers.
+                engine.impose_deadline(cfg.drain_deadline_ms);
             }
-            lck(waiters).insert(req.route, comp_tx.clone());
-            inf.insert(req.id, req.route);
-            req_tx.send(Inbound::Req(req)).map_err(|_| Error::Engine("engine gone".into()))?;
         }
     }
-    Ok(())
+}
+
+/// The engine thread: pull requests, step, route completions.
+fn engine_loop(
+    mut engine: Engine,
+    rx: Receiver<Inbound>,
+    reactors: Vec<ReactorHandle>,
+    cfg: ServerConfig,
+    gauges: Arc<Gauges>,
+) {
+    let mut waiters: HashMap<u64, ConnAddr> = HashMap::new();
+    let mut draining = false;
+    loop {
+        if engine.idle() {
+            // Blocking receive: an idle server parks here until work
+            // (or a stats probe) arrives instead of spinning on
+            // try_recv + sleep.
+            match rx.recv() {
+                Ok(m) => {
+                    let d = &mut draining;
+                    handle_msg(&mut engine, &mut waiters, &reactors, &cfg, &gauges, d, m);
+                }
+                Err(_) => return,
+            }
+        }
+        // drain whatever else arrived without blocking decode
+        loop {
+            match rx.try_recv() {
+                Ok(m) => {
+                    let d = &mut draining;
+                    handle_msg(&mut engine, &mut waiters, &reactors, &cfg, &gauges, d, m);
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
+            }
+        }
+        // Cancels and rejections emit completions without a step;
+        // deliver them even when the engine is idle now (an explicit
+        // cancel must answer, not hang).
+        route_completions(&mut engine, &mut waiters, &reactors);
+        if engine.idle() {
+            continue;
+        }
+        if let Err(e) = engine.step() {
+            // A failed step must not strand its waiters: fail every
+            // in-flight request back to its connection with an error
+            // finish instead of looping forever over clients blocked
+            // on a read.
+            eprintln!("[server] engine error: {e}");
+            engine.fail_inflight(&format!("engine step failed: {e}"));
+        }
+        route_completions(&mut engine, &mut waiters, &reactors);
+    }
 }
 
 #[cfg(test)]

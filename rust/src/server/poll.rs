@@ -1,0 +1,229 @@
+//! Minimal readiness poller over the `poll(2)` syscall — the in-repo
+//! substitute for mio that the reactor multiplexes every connection
+//! through. No external crates: one `extern "C"` declaration against
+//! the platform libc, a `#[repr(C)]` pollfd mirror, and a reusable
+//! fd/token table rebuilt each loop iteration.
+//!
+//! `poll(2)` over `epoll(7)` is a deliberate choice: the struct layout
+//! is identical across Linux and the BSDs (no packed-struct ABI edge
+//! like `epoll_event` on x86_64), the fd set is rebuilt per iteration
+//! so there is no registration state to desynchronize from the
+//! reactor's connection table, and an O(conns) scan per wakeup is
+//! irrelevant next to a token's worth of decode work at the scale this
+//! server targets (thousands of connections, not millions).
+
+use std::io;
+use std::os::unix::io::RawFd;
+
+/// Interest/readiness bits, identical values on every unix we target.
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+/// Mirror of the C `struct pollfd` (same layout on linux/macos/bsd).
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+#[cfg(target_os = "linux")]
+type Nfds = std::os::raw::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type Nfds = std::os::raw::c_uint;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: Nfds, timeout: std::os::raw::c_int) -> std::os::raw::c_int;
+}
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token the fd was registered under.
+    pub token: u64,
+    /// Readable — includes hangup/error/invalid so a dying socket
+    /// always surfaces through the read path, where EOF/read-error
+    /// feeds the normal disconnect teardown.
+    pub readable: bool,
+    /// Writable (only reported when write interest was registered).
+    pub writable: bool,
+}
+
+/// A reusable `poll(2)` fd set. The reactor clears and repopulates it
+/// every loop iteration from its live connection table; `wait` blocks
+/// until readiness or timeout and the results are read back with
+/// [`Poller::events`].
+pub struct Poller {
+    fds: Vec<PollFd>,
+    tokens: Vec<u64>,
+}
+
+impl Default for Poller {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Poller {
+    pub fn new() -> Poller {
+        Poller { fds: Vec::new(), tokens: Vec::new() }
+    }
+
+    /// Drop every registration (the backing allocations are kept).
+    pub fn clear(&mut self) {
+        self.fds.clear();
+        self.tokens.clear();
+    }
+
+    /// Register `fd` under `token` with the given interest set.
+    pub fn register(&mut self, fd: RawFd, token: u64, readable: bool, writable: bool) {
+        let mut events = 0i16;
+        if readable {
+            events |= POLLIN;
+        }
+        if writable {
+            events |= POLLOUT;
+        }
+        self.fds.push(PollFd { fd, events, revents: 0 });
+        self.tokens.push(token);
+    }
+
+    /// Block until at least one registered fd is ready or `timeout_ms`
+    /// elapses (`-1` = block indefinitely, `0` = poll without
+    /// blocking). Returns the number of ready fds; `EINTR` is treated
+    /// as a timeout (zero events) — the caller's loop re-polls.
+    pub fn wait(&mut self, timeout_ms: i32) -> io::Result<usize> {
+        for f in &mut self.fds {
+            f.revents = 0;
+        }
+        let n = unsafe { poll(self.fds.as_mut_ptr(), self.fds.len() as Nfds, timeout_ms) };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(e);
+        }
+        Ok(n as usize)
+    }
+
+    /// Readiness reports from the last [`Poller::wait`], skipping fds
+    /// with no pending events.
+    pub fn events(&self) -> impl Iterator<Item = Event> + '_ {
+        self.fds.iter().zip(self.tokens.iter()).filter_map(|(f, &token)| {
+            let r = f.revents;
+            if r == 0 {
+                return None;
+            }
+            Some(Event {
+                token,
+                readable: r & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0,
+                writable: r & POLLOUT != 0,
+            })
+        })
+    }
+}
+
+/// Shrink/grow a socket's kernel buffers (`SO_SNDBUF`/`SO_RCVBUF`).
+/// Loopback autotuning gives multi-megabyte buffers, which would make
+/// write-backpressure tests absorb an entire workload before the
+/// userspace high-water mark ever engages; pinning the buffers small
+/// makes the backpressure path deterministic. Linux-only — a no-op
+/// elsewhere (the tests that rely on it are linux-gated).
+#[cfg(target_os = "linux")]
+pub fn set_sock_buf(fd: RawFd, sndbuf: Option<usize>, rcvbuf: Option<usize>) -> io::Result<()> {
+    const SOL_SOCKET: i32 = 1;
+    const SO_SNDBUF: i32 = 7;
+    const SO_RCVBUF: i32 = 8;
+    extern "C" {
+        fn setsockopt(
+            fd: i32,
+            level: i32,
+            name: i32,
+            value: *const std::os::raw::c_void,
+            len: u32,
+        ) -> i32;
+    }
+    let mut set = |name: i32, v: usize| -> io::Result<()> {
+        let v = v as i32;
+        let rc = unsafe {
+            setsockopt(
+                fd,
+                SOL_SOCKET,
+                name,
+                &v as *const i32 as *const std::os::raw::c_void,
+                std::mem::size_of::<i32>() as u32,
+            )
+        };
+        if rc != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    };
+    if let Some(v) = sndbuf {
+        set(SO_SNDBUF, v)?;
+    }
+    if let Some(v) = rcvbuf {
+        set(SO_RCVBUF, v)?;
+    }
+    Ok(())
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn set_sock_buf(_fd: RawFd, _sndbuf: Option<usize>, _rcvbuf: Option<usize>) -> io::Result<()> {
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn readiness_and_timeout() {
+        let (mut a, mut b) = UnixStream::pair().unwrap();
+        let mut p = Poller::new();
+
+        // nothing pending: a zero-timeout wait reports no events
+        p.clear();
+        p.register(b.as_raw_fd(), 7, true, false);
+        assert_eq!(p.wait(0).unwrap(), 0);
+        assert_eq!(p.events().count(), 0);
+
+        // write on one end -> the other polls readable under its token
+        a.write_all(b"x").unwrap();
+        p.clear();
+        p.register(b.as_raw_fd(), 7, true, false);
+        assert_eq!(p.wait(1000).unwrap(), 1);
+        let evs: Vec<Event> = p.events().collect();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].token, 7);
+        assert!(evs[0].readable);
+        let mut buf = [0u8; 8];
+        assert_eq!(b.read(&mut buf).unwrap(), 1);
+
+        // write interest on an unsaturated socket reports writable
+        p.clear();
+        p.register(a.as_raw_fd(), 9, false, true);
+        assert_eq!(p.wait(1000).unwrap(), 1);
+        let evs: Vec<Event> = p.events().collect();
+        assert!(evs[0].writable && evs[0].token == 9);
+    }
+
+    #[test]
+    fn hangup_reports_readable() {
+        let (a, b) = UnixStream::pair().unwrap();
+        drop(a);
+        let mut p = Poller::new();
+        p.register(b.as_raw_fd(), 3, true, false);
+        assert!(p.wait(1000).unwrap() >= 1);
+        let evs: Vec<Event> = p.events().collect();
+        assert!(evs[0].readable, "peer hangup must surface through the read path");
+    }
+}

@@ -1,0 +1,778 @@
+//! The readiness-polling reactor: every connection's reads, writes,
+//! deadlines, and teardown run on a small fixed set of reactor threads
+//! (no per-connection threads, no per-connection locks — each
+//! connection is owned by exactly one reactor).
+//!
+//! Layout: reactor 0 runs on the `serve_listener_cfg` caller thread
+//! and owns the nonblocking listener; accepted sockets are dealt
+//! round-robin to all reactors over each reactor's control channel.
+//! The engine thread routes completions back as `Control::Done`
+//! messages addressed by `(reactor, token)` and nudges the target
+//! reactor's [`Waker`] (a nonblocking socketpair registered in the
+//! poll set) so a parked reactor wakes without busy-polling.
+//!
+//! Every per-connection resource is bounded:
+//! - read buffer: at most `max_line_bytes` of an unterminated line is
+//!   ever held; beyond that the line is discarded, one `error` line is
+//!   answered, and the connection survives,
+//! - write queue: completions buffer in userspace only up to
+//!   `write_hwm_bytes`; past the high-water mark the connection is
+//!   declared dead and torn down through the batched `AbortMany` path
+//!   (a slow reader stalls only its own completions),
+//! - time: a partial request line must complete within
+//!   `read_deadline_ms` (slowloris defense — the clock starts at the
+//!   first byte of the line and does *not* reset on later dribbled
+//!   bytes), and a connection with nothing in flight closes after
+//!   `idle_timeout_ms`,
+//! - count: accepts beyond `max_conns` are shed with a
+//!   `retry_after_ms` hint before the socket is closed.
+//!
+//! The `server.io` fault point fires inside the real read and write
+//! paths here: a fire is treated exactly like the socket dying
+//! (teardown, batched abort), so the chaos suite exercises the same
+//! code a broken peer would.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::poll::{self, Poller};
+use super::{
+    cancel_target, error_line, is_stats_json, render_completion, request_from_json, ConnAddr,
+    Inbound, ShutdownHandle,
+};
+use crate::config::ServerConfig;
+use crate::coordinator::Completion;
+use crate::faults::Injector;
+use crate::fmt::Json;
+
+/// Reserved poll tokens (connection tokens count up from zero and are
+/// never reused, so the top of the space is safe to reserve).
+const WAKE_TOKEN: u64 = u64::MAX;
+const LISTEN_TOKEN: u64 = u64::MAX - 1;
+
+/// Retry hint attached to capacity/drain sheds at the accept edge.
+const SHED_RETRY_MS: u64 = 250;
+
+/// How many 8 KiB read chunks one readiness event may consume before
+/// yielding to the next connection (level-triggered poll re-reports).
+const READ_CHUNKS_PER_EVENT: usize = 16;
+
+/// Grace beyond `drain_deadline_ms` before a draining reactor
+/// force-closes surviving connections: the engine needs a moment to
+/// turn imposed deadlines into `timeout` completions and the reactor
+/// a moment to flush them.
+const DRAIN_FLUSH_GRACE_MS: u64 = 2_000;
+
+/// Connection-level gauges surfaced through `{"stats": true}`.
+#[derive(Default)]
+pub(crate) struct Gauges {
+    pub open_conns: AtomicUsize,
+    pub conns_shed: AtomicU64,
+    pub write_backpressure_closes: AtomicU64,
+    pub idle_closes: AtomicU64,
+    pub read_deadline_closes: AtomicU64,
+    pub oversize_lines: AtomicU64,
+    pub io_fault_closes: AtomicU64,
+    /// 0 = serving, 1 = draining.
+    pub drain_state: AtomicU64,
+}
+
+/// Cross-thread wakeup for a parked reactor: one byte down a
+/// nonblocking socketpair whose read end sits in the poll set.
+/// `WouldBlock` on write means a wake is already pending — exactly the
+/// coalescing we want.
+#[derive(Clone)]
+pub(crate) struct Waker {
+    tx: Arc<UnixStream>,
+}
+
+impl Waker {
+    pub fn new(tx: UnixStream) -> Waker {
+        Waker { tx: Arc::new(tx) }
+    }
+
+    /// Best-effort, amount deliberately ignored: a short/failed write
+    /// means a wake is already pending (`WouldBlock`) or the reactor is
+    /// gone — both are fine.
+    #[allow(clippy::unused_io_amount)]
+    pub fn wake(&self) {
+        let _ = (&*self.tx).write(&[1u8]);
+    }
+}
+
+/// Messages addressed to one reactor.
+pub(crate) enum Control {
+    /// A freshly accepted connection dealt to this reactor.
+    Conn(TcpStream),
+    /// A completion for `(token, completion)` from the engine thread.
+    Done(u64, Completion),
+    /// A pre-rendered reply line (stats) for `token`.
+    Line(u64, String),
+}
+
+#[derive(Clone)]
+pub(crate) struct ReactorHandle {
+    pub ctl_tx: Sender<Control>,
+    pub waker: Waker,
+}
+
+/// Reactor-owned per-connection state. No locks: the owning reactor
+/// thread is the only reader and writer, which is what retires the old
+/// registration-vs-abort race the thread-per-connection server needed
+/// a critical section for.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes read but not yet consumed as complete lines (bounded by
+    /// `max_line_bytes` + one read chunk).
+    rbuf: Vec<u8>,
+    /// Scan resume offset into `rbuf` (bytes before it hold no '\n').
+    scan_from: usize,
+    /// Swallowing the tail of an oversized line until its newline.
+    discarding: bool,
+    /// Rendered-but-unsent reply bytes (bounded by `write_hwm_bytes`).
+    wbuf: Vec<u8>,
+    /// Consumed prefix of `wbuf` (compacted opportunistically).
+    wpos: usize,
+    /// In-flight requests: client id -> engine routing key.
+    inflight: HashMap<u64, u64>,
+    /// Stats queries sent to the engine but not yet answered.
+    pending_stats: usize,
+    last_activity: Instant,
+    /// Deadline for the current partial request line (slowloris
+    /// defense); armed at the first byte of a line, cleared when the
+    /// buffer empties, and *not* refreshed by dribbled bytes.
+    line_deadline: Option<Instant>,
+}
+
+impl Conn {
+    fn pending_out(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+}
+
+pub(crate) struct Reactor {
+    idx: usize,
+    cfg: ServerConfig,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    ctl_rx: Receiver<Control>,
+    wake_rx: UnixStream,
+    engine_tx: Sender<Inbound>,
+    gauges: Arc<Gauges>,
+    next_route: Arc<AtomicU64>,
+    faults: Injector,
+    shutdown: ShutdownHandle,
+    /// Every reactor's handle (self included) for round-robin dealing.
+    handles: Vec<ReactorHandle>,
+    /// Reactor 0 owns the listener; dropped when draining begins so
+    /// the kernel refuses new connections during drain.
+    listener: Option<TcpListener>,
+    rr: usize,
+    draining: bool,
+    drain_started: Option<Instant>,
+    poller: Poller,
+}
+
+impl Reactor {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        idx: usize,
+        cfg: ServerConfig,
+        ctl_rx: Receiver<Control>,
+        wake_rx: UnixStream,
+        engine_tx: Sender<Inbound>,
+        gauges: Arc<Gauges>,
+        next_route: Arc<AtomicU64>,
+        faults: Injector,
+        shutdown: ShutdownHandle,
+        handles: Vec<ReactorHandle>,
+    ) -> Reactor {
+        Reactor {
+            idx,
+            cfg,
+            conns: HashMap::new(),
+            next_token: 0,
+            ctl_rx,
+            wake_rx,
+            engine_tx,
+            gauges,
+            next_route,
+            faults,
+            shutdown,
+            handles,
+            listener: None,
+            rr: idx,
+            draining: false,
+            drain_started: None,
+            poller: Poller::new(),
+        }
+    }
+
+    pub fn set_listener(&mut self, l: TcpListener) {
+        self.listener = Some(l);
+    }
+
+    /// The event loop. Returns once draining is complete (every owned
+    /// connection closed); dropping `self` then drops this reactor's
+    /// `engine_tx` clone, and the engine thread exits when the last
+    /// reactor's clone is gone.
+    pub fn run(mut self) {
+        loop {
+            if !self.draining && self.shutdown.is_shutdown() {
+                self.begin_drain();
+            }
+            loop {
+                match self.ctl_rx.try_recv() {
+                    Ok(m) => self.handle_control(m),
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+            }
+            if self.draining {
+                self.close_quiesced();
+                if self.conns.is_empty() {
+                    return;
+                }
+            }
+            self.poller.clear();
+            self.poller.register(self.wake_rx.as_raw_fd(), WAKE_TOKEN, true, false);
+            if let Some(l) = &self.listener {
+                self.poller.register(l.as_raw_fd(), LISTEN_TOKEN, true, false);
+            }
+            for (&tok, c) in &self.conns {
+                self.poller.register(c.stream.as_raw_fd(), tok, true, c.pending_out() > 0);
+            }
+            let timeout = self.poll_timeout_ms();
+            if self.poller.wait(timeout).is_err() {
+                // poll(2) itself failing is unrecoverable for this
+                // reactor: tear every connection down so the engine
+                // releases their pages, then exit.
+                let all: Vec<u64> = self.conns.keys().copied().collect();
+                for tok in all {
+                    self.teardown(tok);
+                }
+                return;
+            }
+            let events: Vec<poll::Event> = self.poller.events().collect();
+            for ev in events {
+                match ev.token {
+                    WAKE_TOKEN => self.drain_wakes(),
+                    LISTEN_TOKEN => self.accept_ready(),
+                    tok => {
+                        if ev.readable {
+                            self.conn_readable(tok);
+                        }
+                        if ev.writable {
+                            self.conn_writable(tok);
+                        }
+                    }
+                }
+            }
+            self.sweep_deadlines();
+        }
+    }
+
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        self.drain_started = Some(Instant::now());
+        self.gauges.drain_state.store(1, Ordering::Relaxed);
+        // Closing the listener fd makes the kernel refuse new
+        // connections for the rest of the drain.
+        self.listener = None;
+        // Idempotent on the engine side; every reactor announces so
+        // the signal survives any one of them being wedged.
+        let _ = self.engine_tx.send(Inbound::Drain);
+    }
+
+    /// During drain, close every connection with nothing left to say:
+    /// no requests in flight, no pending stats reply, nothing buffered
+    /// to write. Connections still owed an answer stay open until the
+    /// engine finishes (or deadline-cancels) their requests and the
+    /// reply bytes flush — or until the hard drain deadline.
+    fn close_quiesced(&mut self) {
+        let victims: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.inflight.is_empty() && c.pending_stats == 0 && c.pending_out() == 0)
+            .map(|(&t, _)| t)
+            .collect();
+        for tok in victims {
+            self.teardown(tok);
+        }
+    }
+
+    fn drain_hard_ms(&self) -> u64 {
+        self.cfg.drain_deadline_ms + DRAIN_FLUSH_GRACE_MS
+    }
+
+    /// Next poll timeout: the soonest per-connection deadline (line
+    /// deadline, idle timeout) or the hard drain deadline, clamped to
+    /// [0, 500] ms; block indefinitely only when there is truly
+    /// nothing timed to watch.
+    fn poll_timeout_ms(&self) -> i32 {
+        let now = Instant::now();
+        let mut next: Option<Instant> = None;
+        let mut consider = |t: Instant| {
+            next = Some(match next {
+                Some(n) if n <= t => n,
+                _ => t,
+            });
+        };
+        let idle_ms = self.cfg.idle_timeout_ms;
+        for c in self.conns.values() {
+            if let Some(d) = c.line_deadline {
+                consider(d);
+            }
+            if idle_ms > 0 && c.inflight.is_empty() && c.pending_stats == 0 {
+                consider(c.last_activity + Duration::from_millis(idle_ms));
+            }
+        }
+        if let Some(t0) = self.drain_started {
+            consider(t0 + Duration::from_millis(self.drain_hard_ms()));
+        }
+        match next {
+            Some(t) => (t.saturating_duration_since(now).as_millis() as u64).min(500) as i32,
+            None if self.conns.is_empty() && !self.draining => -1,
+            None => 500,
+        }
+    }
+
+    fn drain_wakes(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match (&self.wake_rx).read(&mut buf) {
+                Ok(0) => return,
+                Ok(_) => {}
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn handle_control(&mut self, m: Control) {
+        match m {
+            Control::Conn(stream) => self.install(stream),
+            Control::Done(tok, c) => {
+                let line = {
+                    let Some(conn) = self.conns.get_mut(&tok) else { return };
+                    // Retire the id before the reply is queued, guarded
+                    // on the route so a pipelined same-id reuse racing
+                    // this completion can never evict the newer entry.
+                    if conn.inflight.get(&c.id) == Some(&c.route) {
+                        conn.inflight.remove(&c.id);
+                    }
+                    render_completion(&c)
+                };
+                self.push_line(tok, &line);
+            }
+            Control::Line(tok, s) => {
+                match self.conns.get_mut(&tok) {
+                    Some(conn) => conn.pending_stats = conn.pending_stats.saturating_sub(1),
+                    None => return,
+                }
+                self.push_line(tok, &s);
+            }
+        }
+    }
+
+    /// Accept everything pending on the listener, shedding beyond the
+    /// global connection cap and dealing survivors round-robin.
+    fn accept_ready(&mut self) {
+        loop {
+            let accepted = match &self.listener {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _)) => self.dispatch(stream),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                // Transient accept failure (ECONNABORTED, EMFILE):
+                // yield; poll re-reports the listener when ready.
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn dispatch(&mut self, stream: TcpStream) {
+        if self.draining {
+            self.shed(stream, "server draining");
+            return;
+        }
+        // Reserve the slot before handing off so a same-instant burst
+        // cannot overshoot the cap.
+        let prev = self.gauges.open_conns.fetch_add(1, Ordering::Relaxed);
+        if prev >= self.cfg.max_conns {
+            self.gauges.open_conns.fetch_sub(1, Ordering::Relaxed);
+            self.shed(stream, "server at connection capacity");
+            return;
+        }
+        let target = self.rr % self.handles.len();
+        self.rr = self.rr.wrapping_add(1);
+        let h = &self.handles[target];
+        if h.ctl_tx.send(Control::Conn(stream)).is_ok() {
+            h.waker.wake();
+        } else {
+            self.gauges.open_conns.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Refuse a connection at the accept edge: one best-effort
+    /// `{"error", "retry_after_ms"}` line, then close. Mirrors the
+    /// engine's queue shedding so clients handle both identically.
+    fn shed(&mut self, stream: TcpStream, why: &str) {
+        self.gauges.conns_shed.fetch_add(1, Ordering::Relaxed);
+        let line = Json::obj(vec![
+            ("error", Json::str(why)),
+            ("retry_after_ms", Json::num(SHED_RETRY_MS as f64)),
+        ])
+        .to_string();
+        let _ = stream.set_nonblocking(false);
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
+        let mut s = stream;
+        let _ = writeln!(s, "{line}");
+    }
+
+    fn install(&mut self, stream: TcpStream) {
+        if self.draining {
+            // Raced a drain transition between accept and dealing.
+            self.gauges.open_conns.fetch_sub(1, Ordering::Relaxed);
+            self.shed(stream, "server draining");
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            self.gauges.open_conns.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        if self.cfg.sock_sndbuf_bytes > 0 {
+            let snd = Some(self.cfg.sock_sndbuf_bytes);
+            let _ = poll::set_sock_buf(stream.as_raw_fd(), snd, None);
+        }
+        let tok = self.next_token;
+        self.next_token += 1;
+        self.conns.insert(
+            tok,
+            Conn {
+                stream,
+                rbuf: Vec::new(),
+                scan_from: 0,
+                discarding: false,
+                wbuf: Vec::new(),
+                wpos: 0,
+                inflight: HashMap::new(),
+                pending_stats: 0,
+                last_activity: Instant::now(),
+                line_deadline: None,
+            },
+        );
+    }
+
+    /// Remove a connection and batch-abort everything it had in
+    /// flight. One `AbortMany` per teardown: mpsc preserves per-sender
+    /// order, so the abort always lands after this connection's own
+    /// `Req` sends and never interleaves with other connections'
+    /// teardowns.
+    fn teardown(&mut self, tok: u64) {
+        let Some(c) = self.conns.remove(&tok) else { return };
+        self.gauges.open_conns.fetch_sub(1, Ordering::Relaxed);
+        let routes: Vec<u64> = c.inflight.values().copied().collect();
+        if !routes.is_empty() {
+            let _ = self.engine_tx.send(Inbound::AbortMany(routes));
+        }
+        // dropping `c.stream` closes the fd; any Done/Line still in
+        // flight for this token is dropped on arrival (never reused)
+    }
+
+    fn conn_readable(&mut self, tok: u64) {
+        // `server.io` on the read side simulates the socket dying
+        // between reads: identical teardown to a real broken peer.
+        if self.conns.contains_key(&tok) && self.faults.fire("server.io") {
+            self.gauges.io_fault_closes.fetch_add(1, Ordering::Relaxed);
+            self.teardown(tok);
+            return;
+        }
+        let mut chunk = [0u8; 8192];
+        for _ in 0..READ_CHUNKS_PER_EVENT {
+            let r = match self.conns.get_mut(&tok) {
+                Some(c) => (&c.stream).read(&mut chunk),
+                None => return,
+            };
+            match r {
+                Ok(0) => {
+                    // Reader EOF *is* the disconnect signal (see the
+                    // module docs): abort everything still in flight.
+                    self.teardown(tok);
+                    return;
+                }
+                Ok(n) => {
+                    if !self.ingest(tok, &chunk[..n]) {
+                        return;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.teardown(tok);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Buffer freshly read bytes, consume complete lines, enforce the
+    /// line-length bound, and maintain the line deadline. Returns
+    /// false if the connection was torn down.
+    fn ingest(&mut self, tok: u64, data: &[u8]) -> bool {
+        let now = Instant::now();
+        {
+            let Some(c) = self.conns.get_mut(&tok) else { return false };
+            c.last_activity = now;
+            c.rbuf.extend_from_slice(data);
+        }
+        let mut consumed_line = false;
+        loop {
+            let (line, discard) = {
+                let Some(c) = self.conns.get_mut(&tok) else { return false };
+                let Some(rel) = c.rbuf[c.scan_from..].iter().position(|&b| b == b'\n') else {
+                    c.scan_from = c.rbuf.len();
+                    break;
+                };
+                let end = c.scan_from + rel;
+                let line: Vec<u8> = c.rbuf.drain(..=end).collect();
+                c.scan_from = 0;
+                (line, std::mem::take(&mut c.discarding))
+            };
+            consumed_line = true;
+            if discard {
+                // Tail of an oversized line; the error was already
+                // answered when the bound tripped.
+                continue;
+            }
+            if !self.handle_line(tok, &line[..line.len() - 1]) {
+                return false;
+            }
+        }
+        let max_line = self.cfg.max_line_bytes;
+        let dl_ms = self.cfg.read_deadline_ms;
+        let oversize = {
+            let Some(c) = self.conns.get_mut(&tok) else { return false };
+            let over = !c.discarding && c.rbuf.len() > max_line;
+            if over {
+                // Drop the partial line but keep the connection: one
+                // error reply, then swallow until the next newline.
+                c.discarding = true;
+                c.rbuf.clear();
+                c.scan_from = 0;
+            }
+            if c.rbuf.is_empty() && !c.discarding {
+                c.line_deadline = None;
+            } else if consumed_line || c.line_deadline.is_none() {
+                // A new partial line just began (or progress was made
+                // through a complete line): restart its clock. Dribbled
+                // bytes into the *same* partial line do not reset it.
+                c.line_deadline = (dl_ms > 0).then(|| now + Duration::from_millis(dl_ms));
+            }
+            over
+        };
+        if oversize {
+            self.gauges.oversize_lines.fetch_add(1, Ordering::Relaxed);
+            let msg = error_line(&format!(
+                "request line exceeds max_line_bytes ({max_line}); line dropped"
+            ));
+            return self.push_line(tok, &msg);
+        }
+        true
+    }
+
+    /// Parse and act on one complete line. Returns false if the
+    /// connection was torn down (e.g. the reply tripped the
+    /// write high-water mark).
+    fn handle_line(&mut self, tok: u64, raw: &[u8]) -> bool {
+        let line = match std::str::from_utf8(raw) {
+            Ok(s) => s.trim(),
+            Err(_) => return self.push_line(tok, &error_line("request line is not valid UTF-8")),
+        };
+        if line.is_empty() {
+            return true;
+        }
+        // parse each line exactly once; branch on the parsed value
+        let parsed = match Json::parse(line) {
+            Ok(v) => v,
+            Err(e) => return self.push_line(tok, &error_line(&e.to_string())),
+        };
+        if is_stats_json(&parsed) {
+            if let Some(c) = self.conns.get_mut(&tok) {
+                c.pending_stats += 1;
+            }
+            let addr = ConnAddr { reactor: self.idx, token: tok };
+            let _ = self.engine_tx.send(Inbound::Stats(addr));
+            return true;
+        }
+        // A cancel message is an object carrying "cancel" and no
+        // request body — a request with a stray "cancel" field must
+        // still be submitted (and answered), not silently swallowed.
+        if parsed.opt("cancel").is_some() && parsed.opt("prompt").is_none() {
+            match cancel_target(&parsed) {
+                Some(id) => {
+                    // Fire-and-forget (module docs): in flight → the
+                    // engine answers with a "cancelled" finish; unknown
+                    // id → silently ignored.
+                    let route = self.conns.get(&tok).and_then(|c| c.inflight.get(&id).copied());
+                    if let Some(r) = route {
+                        let _ = self.engine_tx.send(Inbound::Abort(r));
+                    }
+                }
+                None => {
+                    let msg = "malformed cancel: \"cancel\" must be a numeric request id";
+                    return self.push_line(tok, &error_line(msg));
+                }
+            }
+            return true;
+        }
+        let mut req = match request_from_json(&parsed) {
+            Ok(r) => r,
+            Err(e) => return self.push_line(tok, &error_line(&e.to_string())),
+        };
+        let dup = match self.conns.get(&tok) {
+            Some(c) => c.inflight.contains_key(&req.id),
+            None => return false,
+        };
+        if dup {
+            let msg = error_line(&format!("duplicate in-flight request id {}", req.id));
+            return self.push_line(tok, &msg);
+        }
+        req.route = self.next_route.fetch_add(1, Ordering::Relaxed);
+        if let Some(c) = self.conns.get_mut(&tok) {
+            c.inflight.insert(req.id, req.route);
+        }
+        let addr = ConnAddr { reactor: self.idx, token: tok };
+        let _ = self.engine_tx.send(Inbound::Req(req, addr));
+        true
+    }
+
+    /// Queue one reply line, enforcing the write high-water mark, and
+    /// opportunistically flush. Returns false if the connection was
+    /// torn down.
+    fn push_line(&mut self, tok: u64, line: &str) -> bool {
+        let hwm = self.cfg.write_hwm_bytes;
+        let over = {
+            let Some(c) = self.conns.get_mut(&tok) else { return false };
+            if c.pending_out() + line.len() + 1 > hwm {
+                true
+            } else {
+                c.wbuf.extend_from_slice(line.as_bytes());
+                c.wbuf.push(b'\n');
+                false
+            }
+        };
+        if over {
+            // The client stopped reading long enough to back the
+            // socket *and* the userspace queue up past the high-water
+            // mark: declare it dead rather than buffer unboundedly.
+            self.gauges.write_backpressure_closes.fetch_add(1, Ordering::Relaxed);
+            self.teardown(tok);
+            return false;
+        }
+        self.flush(tok)
+    }
+
+    /// Write as much buffered output as the socket accepts. Returns
+    /// false if the connection was torn down.
+    fn flush(&mut self, tok: u64) -> bool {
+        {
+            let Some(c) = self.conns.get(&tok) else { return false };
+            if c.pending_out() == 0 {
+                return true;
+            }
+        }
+        // `server.io` on the write side simulates the socket dying
+        // mid-response; same teardown as a real write failure.
+        if self.faults.fire("server.io") {
+            self.gauges.io_fault_closes.fetch_add(1, Ordering::Relaxed);
+            self.teardown(tok);
+            return false;
+        }
+        loop {
+            let Some(c) = self.conns.get_mut(&tok) else { return false };
+            if c.wpos == c.wbuf.len() {
+                c.wbuf.clear();
+                c.wpos = 0;
+                return true;
+            }
+            match (&c.stream).write(&c.wbuf[c.wpos..]) {
+                Ok(0) => {
+                    self.teardown(tok);
+                    return false;
+                }
+                Ok(n) => c.wpos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    // Compact a large consumed prefix so a slowly
+                    // draining buffer does not pin memory.
+                    if c.wpos > 64 * 1024 {
+                        c.wbuf.drain(..c.wpos);
+                        c.wpos = 0;
+                    }
+                    return true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.teardown(tok);
+                    return false;
+                }
+            }
+        }
+    }
+
+    fn conn_writable(&mut self, tok: u64) {
+        self.flush(tok);
+    }
+
+    /// Enforce line deadlines, idle timeouts, and the hard drain
+    /// deadline.
+    fn sweep_deadlines(&mut self) {
+        let now = Instant::now();
+        let idle_ms = self.cfg.idle_timeout_ms;
+        let mut line_expired: Vec<u64> = Vec::new();
+        let mut idle_expired: Vec<u64> = Vec::new();
+        for (&tok, c) in &self.conns {
+            if c.line_deadline.map(|d| now >= d).unwrap_or(false) {
+                line_expired.push(tok);
+            } else if idle_ms > 0
+                && c.inflight.is_empty()
+                && c.pending_stats == 0
+                && c.rbuf.is_empty()
+                && !c.discarding
+                && c.pending_out() == 0
+                && now.duration_since(c.last_activity).as_millis() as u64 > idle_ms
+            {
+                idle_expired.push(tok);
+            }
+        }
+        for tok in line_expired {
+            self.gauges.read_deadline_closes.fetch_add(1, Ordering::Relaxed);
+            self.teardown(tok);
+        }
+        for tok in idle_expired {
+            self.gauges.idle_closes.fetch_add(1, Ordering::Relaxed);
+            self.teardown(tok);
+        }
+        if let Some(t0) = self.drain_started {
+            if now.duration_since(t0).as_millis() as u64 > self.drain_hard_ms() {
+                // Bounded quiescence: whatever could not finish and
+                // flush inside the drain window is cut off now.
+                let all: Vec<u64> = self.conns.keys().copied().collect();
+                for tok in all {
+                    self.teardown(tok);
+                }
+            }
+        }
+    }
+}

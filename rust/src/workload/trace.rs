@@ -120,6 +120,33 @@ pub fn chaos_trace(seed: u64, n: usize, input_len: usize, gen_len: usize) -> Vec
         .collect()
 }
 
+/// A connection-storm trace (EXPERIMENTS §10): `conns` client
+/// connections each pipelining `per_conn` small requests at the server
+/// at once. Flat request list in connection-major order — request `k`
+/// of connection `c` has id `c * per_conn + k`, so a driver can slice
+/// per-connection workloads out of one deterministic trace and every
+/// (connection, pipeline-slot) pair maps to a unique id for
+/// exactly-once accounting across hundreds of sockets.
+pub fn storm_trace(
+    seed: u64,
+    conns: usize,
+    per_conn: usize,
+    input_len: usize,
+    gen_len: usize,
+) -> Vec<TraceRequest> {
+    (0..conns * per_conn)
+        .map(|i| {
+            let mut rng = Pcg32::new(seed.wrapping_mul(2887).wrapping_add(i as u64), 61);
+            TraceRequest {
+                id: i as u64,
+                prompt: lang::gen_document(&mut rng, input_len),
+                max_new_tokens: gen_len,
+                cancel_after: None,
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,6 +209,22 @@ mod tests {
         }
         // different seeds diverge
         assert_ne!(chaos_trace(12, 24, 64, 16)[0].prompt, tr[0].prompt);
+    }
+
+    #[test]
+    fn storm_trace_is_connection_major_and_deterministic() {
+        let tr = storm_trace(9, 4, 3, 48, 8);
+        assert_eq!(tr.len(), 12);
+        for (i, r) in tr.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "ids are connection-major");
+            assert_eq!(r.prompt.len(), 48);
+            assert_eq!(r.max_new_tokens, 8);
+            assert!(r.cancel_after.is_none());
+        }
+        // connection 2's slice is [6, 9) and its prompts are distinct
+        assert_ne!(tr[6].prompt, tr[7].prompt);
+        assert_eq!(storm_trace(9, 4, 3, 48, 8)[7].prompt, tr[7].prompt);
+        assert_ne!(storm_trace(10, 4, 3, 48, 8)[7].prompt, tr[7].prompt);
     }
 
     #[test]

@@ -24,9 +24,10 @@
 use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
 use std::time::Duration;
 
-use mustafar::config::{Backend, EngineConfig, ModelConfig, SparsityConfig};
+use mustafar::config::{Backend, EngineConfig, ModelConfig, ServerConfig, SparsityConfig};
 use mustafar::coordinator::Engine;
 use mustafar::fmt::Json;
 use mustafar::model::{NativeModel, Weights};
@@ -75,6 +76,25 @@ fn spawn_server_with(engine: Engine) -> std::net::SocketAddr {
 /// the address to connect to.
 fn spawn_server() -> std::net::SocketAddr {
     spawn_server_with(tiny_engine())
+}
+
+/// Spawn the server with explicit limits, returning the address, the
+/// shutdown handle, and a channel that fires when `serve_listener_cfg`
+/// returns (drain tests bound quiescence on it).
+fn spawn_server_cfg(
+    engine: Engine,
+    cfg: ServerConfig,
+) -> (std::net::SocketAddr, server::ShutdownHandle, mpsc::Receiver<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+    let addr = listener.local_addr().unwrap();
+    let shutdown = server::ShutdownHandle::new();
+    let handle = shutdown.clone();
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = server::serve_listener_cfg(engine, listener, cfg, handle);
+        let _ = done_tx.send(());
+    });
+    (addr, shutdown, done_rx)
 }
 
 /// Connect with the anti-wedge read timeout applied.
@@ -394,4 +414,211 @@ fn malformed_lines_get_json_safe_error_responses() {
     let v = read_json(&mut reader);
     assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 9);
     assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "length");
+}
+
+#[test]
+fn oversized_line_gets_one_error_and_the_connection_survives() {
+    let mut cfg = ServerConfig::default();
+    cfg.max_line_bytes = 4096;
+    let (addr, _shutdown, _done) = spawn_server_cfg(tiny_engine(), cfg);
+    let mut stream = connect(addr);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // 12 KiB of unterminated junk: more than one 8 KiB read chunk, so
+    // the bound trips on a partial line no matter how the reads batch
+    let junk = [b'x'; 12288];
+    stream.write_all(&junk).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let v = read_json(&mut reader);
+    assert!(
+        v.get("error").unwrap().as_str().unwrap().contains("max_line_bytes"),
+        "oversize reply should name the bound"
+    );
+
+    // same connection, normal request: the line was dropped, not the conn
+    writeln!(stream, "{}", req_line(1, 16, 2)).unwrap();
+    let v = read_json(&mut reader);
+    assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "length");
+
+    writeln!(stream, "{{\"stats\": true}}").unwrap();
+    let v = read_json(&mut reader);
+    assert!(v.get("oversize_lines").unwrap().as_usize().unwrap() >= 1);
+}
+
+#[test]
+fn slowloris_partial_line_is_cut_at_the_read_deadline() {
+    let mut cfg = ServerConfig::default();
+    cfg.read_deadline_ms = 400;
+    let (addr, _shutdown, _done) = spawn_server_cfg(tiny_engine(), cfg);
+
+    let slow = connect(addr);
+    let mut slow_r = BufReader::new(slow.try_clone().unwrap());
+    // dribble bytes of one never-terminated line: each write is fresh
+    // socket activity, but the deadline is keyed to the line's first
+    // byte, so activity alone must not keep the connection alive
+    let mut slow_w = slow.try_clone().unwrap();
+    let dribbler = std::thread::spawn(move || {
+        for _ in 0..200 {
+            if slow_w.write_all(b"\"").is_err() {
+                return; // server already cut us
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    });
+
+    // a well-behaved client on another connection is unaffected
+    let fast = std::thread::spawn(move || {
+        let mut s = connect(addr);
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        writeln!(s, "{}", req_line(1, 32, 2)).unwrap();
+        let v = read_json(&mut r);
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "length");
+    });
+
+    let mut line = String::new();
+    match slow_r.read_line(&mut line) {
+        Ok(0) | Err(_) => {} // clean EOF, or RST from writing past the close
+        Ok(n) => panic!("server should cut the slowloris, got {n} bytes: {line:?}"),
+    }
+    dribbler.join().unwrap();
+    fast.join().unwrap();
+
+    let mut probe = connect(addr);
+    let mut pr = BufReader::new(probe.try_clone().unwrap());
+    writeln!(probe, "{{\"stats\": true}}").unwrap();
+    let v = read_json(&mut pr);
+    assert!(v.get("read_deadline_closes").unwrap().as_usize().unwrap() >= 1);
+}
+
+/// Linux-gated: pins kernel socket buffers so the write path backs up
+/// deterministically instead of vanishing into loopback autotuning.
+#[cfg(target_os = "linux")]
+#[test]
+fn stalled_reader_is_cut_at_the_write_high_water_mark() {
+    let mut cfg = ServerConfig::default();
+    cfg.write_hwm_bytes = 16 * 1024;
+    cfg.sock_sndbuf_bytes = 8 * 1024;
+    let (addr, _shutdown, _done) = spawn_server_cfg(tiny_engine(), cfg);
+
+    // the staller: a small receive window, a pile of long completions
+    // headed its way, and it never reads a byte
+    let staller = connect(addr);
+    server::set_stream_buffers(&staller, None, Some(4096)).unwrap();
+    let mut sw = staller.try_clone().unwrap();
+    for id in 0..24u64 {
+        writeln!(sw, "{}", req_line(id, 32, 512)).unwrap();
+    }
+
+    // a fast client shares the server: its small requests complete even
+    // while the staller's replies back up (FIFO admission means it
+    // waits its turn in the queue, but never on the stalled socket)
+    let t0 = std::time::Instant::now();
+    let mut fastc = connect(addr);
+    let mut fr = BufReader::new(fastc.try_clone().unwrap());
+    for id in 100..104u64 {
+        writeln!(fastc, "{}", req_line(id, 24, 2)).unwrap();
+        let v = read_json(&mut fr);
+        assert_eq!(v.get("id").unwrap().as_usize().unwrap() as u64, id);
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "length");
+    }
+    assert!(t0.elapsed() < Duration::from_secs(60), "fast client starved by stalled reader");
+
+    // the staller eventually trips the high-water mark and is torn down
+    for i in 0.. {
+        writeln!(fastc, "{{\"stats\": true}}").unwrap();
+        let v = read_json(&mut fr);
+        if v.get("write_backpressure_closes").unwrap().as_usize().unwrap() >= 1 {
+            break;
+        }
+        assert!(i < 3000, "staller never hit the write high-water mark");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    drop(staller);
+}
+
+#[test]
+fn graceful_drain_finishes_inflight_sheds_late_and_returns() {
+    let mut cfg = ServerConfig::default();
+    cfg.drain_deadline_ms = 5000;
+    let (addr, shutdown, done_rx) = spawn_server_cfg(tiny_engine(), cfg);
+
+    let mut a = connect(addr);
+    let mut ra = BufReader::new(a.try_clone().unwrap());
+    // id 1 runs far past the drain window (deadline-cancelled unless
+    // the host is fast enough to finish it); id 3 finishes inside it
+    writeln!(a, "{}", req_line(1, 48, 8000)).unwrap();
+    writeln!(a, "{}", req_line(3, 32, 30)).unwrap();
+    // let both reach the engine before draining starts
+    std::thread::sleep(Duration::from_millis(300));
+
+    shutdown.shutdown();
+    std::thread::sleep(Duration::from_millis(300));
+    // a late submit on the surviving connection: shed with a retry hint
+    writeln!(a, "{}", req_line(2, 16, 4)).unwrap();
+
+    let mut finishes = std::collections::HashMap::new();
+    for _ in 0..3 {
+        let v = read_json(&mut ra);
+        let id = v.get("id").unwrap().as_usize().unwrap() as u64;
+        let f = v.get("finish").unwrap().as_str().unwrap().to_string();
+        if f == "shed" {
+            assert!(v.get("retry_after_ms").unwrap().as_usize().unwrap() > 0);
+        }
+        finishes.insert(id, f);
+    }
+    assert_eq!(finishes.get(&2).map(String::as_str), Some("shed"));
+    assert_eq!(finishes.get(&3).map(String::as_str), Some("length"));
+    let f1 = finishes.get(&1).map(String::as_str).unwrap();
+    assert!(f1 == "timeout" || f1 == "length", "id 1 finished {f1}");
+
+    // once everything it is owed has been flushed, the drained server
+    // closes the connection...
+    let mut line = String::new();
+    match ra.read_line(&mut line) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => panic!("drained server should close, got {n} bytes: {line:?}"),
+    }
+    // ...refuses (or sheds) fresh connections...
+    match TcpStream::connect(addr) {
+        Err(_) => {}
+        Ok(s) => {
+            s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+            let mut r = BufReader::new(s);
+            let mut l = String::new();
+            let n = r.read_line(&mut l).unwrap_or(0);
+            assert!(n == 0 || l.contains("error"), "unexpected greeting {l:?}");
+        }
+    }
+    // ...and serve_listener_cfg returns within the quiescence bound
+    done_rx.recv_timeout(Duration::from_secs(20)).expect("server failed to quiesce");
+}
+
+#[test]
+fn connection_cap_sheds_excess_with_retry_hint() {
+    let mut cfg = ServerConfig::default();
+    cfg.max_conns = 2;
+    let (addr, _shutdown, _done) = spawn_server_cfg(tiny_engine(), cfg);
+    let a = connect(addr);
+    let b = connect(addr);
+    // both slots held: the third connection gets one shed line, then EOF
+    let c = connect(addr);
+    let mut rc = BufReader::new(c);
+    let v = read_json(&mut rc);
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("capacity"));
+    assert!(v.get("retry_after_ms").unwrap().as_usize().unwrap() > 0);
+    let mut line = String::new();
+    match rc.read_line(&mut line) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => panic!("shed conn should close, got {n} bytes: {line:?}"),
+    }
+
+    // the held connections still work, and the gauges say so
+    let mut aw = a.try_clone().unwrap();
+    let mut ar = BufReader::new(a);
+    writeln!(aw, "{{\"stats\": true}}").unwrap();
+    let v = read_json(&mut ar);
+    assert_eq!(v.get("open_conns").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(v.get("conns_shed").unwrap().as_usize().unwrap(), 1);
+    drop(b);
 }

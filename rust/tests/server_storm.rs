@@ -1,0 +1,165 @@
+// Shared lint policy with the library crate (rust/src/lib.rs): these
+// allows cover numeric-harness idioms (indexed loops, config structs
+// mutated after Default::default(), positional format args).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::field_reassign_with_default,
+    clippy::uninlined_format_args,
+    clippy::manual_div_ceil,
+    clippy::type_complexity
+)]
+
+//! Connection-storm smoke (EXPERIMENTS §10): 256 concurrent pipelined
+//! connections — plus one deliberately stalled reader — served from a
+//! fixed reactor thread set. The old thread-per-connection front-end
+//! spent two threads per socket (513+ threads for this storm); the
+//! reactor must hold the process to `reactor_threads` + one engine
+//! thread + the engine's bounded worker pool, verified against
+//! `/proc/self/status` on linux. Every request must come back on its
+//! own connection with a `length` finish, and shutdown must drain the
+//! whole storm within the quiescence bound.
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use mustafar::config::{Backend, EngineConfig, ModelConfig, ServerConfig, SparsityConfig};
+use mustafar::coordinator::Engine;
+use mustafar::fmt::Json;
+use mustafar::model::{NativeModel, Weights};
+use mustafar::server;
+use mustafar::workload::trace::{storm_trace, TraceRequest};
+
+const CONNS: usize = 256;
+const PER_CONN: usize = 2;
+
+fn storm_engine() -> Engine {
+    let cfg = ModelConfig {
+        name: "tiny".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        head_dim: 32,
+        ff: 128,
+        vocab: 512,
+        rope_theta: 10000.0,
+        max_seq: 512,
+        norm_eps: 1e-5,
+    };
+    let mut ec = EngineConfig::default();
+    ec.backend = Backend::NativeSparse;
+    ec.sparsity = SparsityConfig::mustafar(0.5, 0.5);
+    ec.max_batch = 8;
+    // the whole storm (512 requests) pipelines in before the first
+    // completion; nothing may be shed for queue depth
+    ec.queue_cap = 1024;
+    ec.max_new_tokens = 512;
+    Engine::new_native(NativeModel::new(Weights::random_for_tests(cfg, 7)), ec)
+}
+
+fn req_json(r: &TraceRequest) -> String {
+    let prompt: Vec<String> = r.prompt.iter().map(|t| t.to_string()).collect();
+    format!(
+        "{{\"id\": {}, \"prompt\": [{}], \"max_new_tokens\": {}}}",
+        r.id,
+        prompt.join(", "),
+        r.max_new_tokens
+    )
+}
+
+/// Thread count of this process from `/proc/self/status` (linux-only;
+/// `None` elsewhere, which skips the thread-budget assertions).
+fn process_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status.lines().find_map(|l| l.strip_prefix("Threads:").and_then(|v| v.trim().parse().ok()))
+}
+
+/// Read `PER_CONN` completion lines off one storm socket and check
+/// they are exactly the connection's own ids, each a `length` finish
+/// of the expected token count.
+fn read_conn(sock: &TcpStream, c: usize) {
+    let want: HashSet<u64> = (0..PER_CONN).map(|k| (c * PER_CONN + k) as u64).collect();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut got = HashSet::new();
+    for _ in 0..PER_CONN {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("completion before read timeout");
+        let v = Json::parse(&line).unwrap_or_else(|e| panic!("bad line {line:?}: {e}"));
+        let id = v.get("id").unwrap().as_usize().unwrap() as u64;
+        assert!(want.contains(&id), "conn {c} got id {id}, not its own");
+        assert!(got.insert(id), "conn {c}: id {id} answered twice");
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "length", "conn {c} id {id}");
+        assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 3, "conn {c} id {id}");
+    }
+    assert_eq!(got, want, "conn {c} lost a completion");
+}
+
+#[test]
+fn storm_of_pipelined_connections_on_a_fixed_thread_set() {
+    let trace = storm_trace(20260807, CONNS, PER_CONN, 24, 3);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+    let addr = listener.local_addr().unwrap();
+    let shutdown = server::ShutdownHandle::new();
+    let handle = shutdown.clone();
+    let scfg = ServerConfig { reactor_threads: 2, max_conns: 2048, ..ServerConfig::default() };
+    let reactors = scfg.reactor_threads;
+
+    let before = process_threads();
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = server::serve_listener_cfg(storm_engine(), listener, scfg, handle);
+        let _ = done_tx.send(());
+    });
+
+    // one hostile stalled reader amid the storm: it submits work whose
+    // reply it never reads, and must not slow anyone else down
+    let staller = TcpStream::connect(addr).expect("connect staller");
+    let mut stw = staller.try_clone().unwrap();
+    writeln!(stw, "{{\"id\": 999, \"prompt\": [20, 21, 22], \"max_new_tokens\": 256}}").unwrap();
+
+    // the storm: every connection opened and fully pipelined from this
+    // one thread, so client threads never pollute the process's thread
+    // count
+    let mut socks = Vec::with_capacity(CONNS);
+    for c in 0..CONNS {
+        let sock = TcpStream::connect(addr).expect("connect storm conn");
+        sock.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let mut w = sock.try_clone().unwrap();
+        for r in &trace[c * PER_CONN..(c + 1) * PER_CONN] {
+            writeln!(w, "{}", req_json(r)).unwrap();
+        }
+        socks.push(sock);
+    }
+
+    // after the first connection's answers, the engine's lazy worker
+    // pool exists: measure the steady-state thread count under load
+    read_conn(&socks[0], 0);
+    if let (Some(b), Some(d)) = (before, process_threads()) {
+        // serve thread = reactor 0, peers, engine thread, worker pool;
+        // +2 slack for the runtime's own bookkeeping threads
+        let workers = mustafar::util::threads().min(8);
+        let allowed = reactors + 1 + workers + 2;
+        assert!(
+            d.saturating_sub(b) <= allowed,
+            "serving 257 sockets grew the process by {} threads (allowed {allowed}): \
+             the reactor is not multiplexing",
+            d.saturating_sub(b)
+        );
+        assert!(d < 50, "absolute thread count {d} is thread-per-connection territory");
+    }
+
+    for (c, sock) in socks.iter().enumerate().skip(1) {
+        read_conn(sock, c);
+    }
+
+    // drain the storm: the staller still holds an unread reply, but the
+    // kernel absorbs it, so the whole server quiesces within the bound
+    shutdown.shutdown();
+    done_rx.recv_timeout(Duration::from_secs(30)).expect("storm drain never completed");
+    drop(staller);
+}
