@@ -1,0 +1,111 @@
+// Shared lint policy with the library crate (rust/src/lib.rs): these
+// allows cover numeric-harness idioms (indexed loops, config structs
+// mutated after Default::default(), positional format args).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::field_reassign_with_default,
+    clippy::uninlined_format_args,
+    clippy::manual_div_ceil,
+    clippy::type_complexity
+)]
+
+//! Telemetry overhead gate: the same decode workload with the registry
+//! on vs `--no-telemetry`, compared on the engine's own decode timer
+//! (Σ `Completion::decode_ms` — prefill and engine construction are
+//! excluded, so the ratio isolates the per-round recording cost).
+//!
+//! The acceptance bound is 3%: instrumented decode must stay within
+//! 1.03× of uninstrumented (plus a 1 ms absolute allowance so the gate
+//! is meaningful on sub-millisecond noise floors, e.g. smoke runs on
+//! loaded CI hosts). Min-of-iterations on both sides, interleaved, so
+//! slow-host drift hits both variants alike.
+
+use mustafar::bench::{smoke_mode, BenchReport};
+use mustafar::config::{Backend, EngineConfig, ModelConfig, SparsityConfig};
+use mustafar::coordinator::{Engine, Request};
+use mustafar::fmt::Json;
+use mustafar::model::{NativeModel, Weights};
+use mustafar::util::Pcg32;
+use mustafar::workload::lang;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        head_dim: 32,
+        ff: 128,
+        vocab: 512,
+        rope_theta: 10000.0,
+        max_seq: 512,
+        norm_eps: 1e-5,
+    }
+}
+
+/// One full workload replay; returns Σ decode_ms over all completions.
+fn run_decode_ms(w: &Weights, telemetry: bool, prompts: &[Vec<u16>], gen: usize) -> f64 {
+    let mut ec = EngineConfig::default();
+    ec.backend = Backend::NativeSparse;
+    ec.sparsity = SparsityConfig::mustafar(0.5, 0.5);
+    ec.max_batch = 4;
+    ec.max_new_tokens = gen;
+    ec.telemetry = telemetry;
+    let mut e = Engine::new_native(NativeModel::new(w.clone()), ec);
+    let reqs: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request::new(i as u64, p.clone(), gen))
+        .collect();
+    let out = e.run_trace(reqs).expect("bench trace must not fail");
+    out.iter().map(|c| c.decode_ms).sum()
+}
+
+fn main() {
+    let (iters, n_reqs, gen): (usize, usize, usize) =
+        if smoke_mode() { (3, 4, 8) } else { (9, 8, 24) };
+    let w = Weights::random_for_tests(tiny_cfg(), 7);
+    let prompts: Vec<Vec<u16>> = (0..n_reqs)
+        .map(|i| lang::gen_document(&mut Pcg32::seeded(100 + i as u64), 96))
+        .collect();
+
+    // warmup both paths once (page in weights, spawn/park worker pools)
+    let _ = run_decode_ms(&w, true, &prompts, gen);
+    let _ = run_decode_ms(&w, false, &prompts, gen);
+
+    // interleave the variants so ambient slowdowns bias neither side
+    let (mut on_min, mut off_min) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..iters {
+        off_min = off_min.min(run_decode_ms(&w, false, &prompts, gen));
+        on_min = on_min.min(run_decode_ms(&w, true, &prompts, gen));
+    }
+
+    let ratio = on_min / off_min;
+    println!(
+        "telemetry overhead: decode {on_min:.2} ms instrumented vs {off_min:.2} ms bare \
+         ({:+.2}%)",
+        (ratio - 1.0) * 100.0
+    );
+
+    let mut report = BenchReport::new("telemetry_overhead");
+    report.meta("gate", Json::str("on <= 1.03 * off + 1ms"));
+    report.case(vec![
+        ("name", Json::str("decode_sum_ms")),
+        ("instrumented_ms", Json::num(on_min)),
+        ("bare_ms", Json::num(off_min)),
+        ("overhead_ratio", Json::num(ratio)),
+    ]);
+    report.write_or_warn();
+
+    if on_min > off_min * 1.03 + 1.0 {
+        eprintln!(
+            "FAIL: instrumented decode {on_min:.2} ms exceeds the 3% overhead gate \
+             (bare {off_min:.2} ms)"
+        );
+        std::process::exit(1);
+    }
+    println!("telemetry overhead gate: PASS (<= 3% + 1ms)");
+}

@@ -190,6 +190,15 @@ pub struct EngineConfig {
     pub reprune_tiers: Vec<f64>,
     /// Worker threads for per-head attention parallelism.
     pub threads: usize,
+    /// Master switch for the telemetry registry (histograms + trace
+    /// spans). `--no-telemetry` turns it off; the flight recorder stays
+    /// on regardless (it is the post-mortem black box and its cost is
+    /// per lifecycle event, not per token).
+    pub telemetry: bool,
+    /// Trace-span ring capacity (spans retained for `{"trace": n}`).
+    pub trace_ring: usize,
+    /// Flight-recorder ring capacity (events retained for `{"dump"}`).
+    pub recorder_ring: usize,
 }
 
 impl Default for EngineConfig {
@@ -208,6 +217,9 @@ impl Default for EngineConfig {
             prefix_ttl_ms: 0,
             reprune_tiers: vec![0.75, 0.9],
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            telemetry: true,
+            trace_ring: 4096,
+            recorder_ring: 1024,
         }
     }
 }
@@ -245,6 +257,13 @@ pub struct ServerConfig {
     /// Pin accepted sockets' kernel send buffer (0 = kernel default);
     /// test hook for deterministic write backpressure.
     pub sock_sndbuf_bytes: usize,
+    /// Optional `HOST:PORT` for a plain-HTTP Prometheus scrape
+    /// listener serving the same exposition as the `{"metrics"}` line
+    /// (`None` = line protocol only).
+    pub metrics_addr: Option<String>,
+    /// Optional path: at engine-loop exit the full retained span ring
+    /// is written here as chrome://tracing JSON.
+    pub trace_out: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -258,6 +277,8 @@ impl Default for ServerConfig {
             read_deadline_ms: 30_000,
             drain_deadline_ms: 5_000,
             sock_sndbuf_bytes: 0,
+            metrics_addr: None,
+            trace_out: None,
         }
     }
 }

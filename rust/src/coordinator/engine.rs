@@ -46,6 +46,7 @@ use crate::faults::Injector;
 use crate::kvcache::{build_shared_prefill, KvPolicy, SequenceKV};
 use crate::kvpool::{self, KvPool, OwnerId, PoolConfig, PoolStats, PrefixCache, PrefixHit};
 use crate::model::{argmax, DecodeScratch, NativeModel};
+use crate::telemetry::{self, FlightRecorder, Span, SpanRing, Telemetry};
 
 /// Per-sequence backend state.
 pub enum SeqState {
@@ -78,6 +79,20 @@ pub struct Engine {
     /// Fault injection (disabled unless `MUSTAFAR_FAULTS` is set or a
     /// test installs an injector). The kvpool shares the same handle.
     faults: Injector,
+    /// Shared cross-thread metrics registry (latency histograms; the
+    /// Prometheus surface). Worker and reactor threads record into
+    /// their own shards; reads merge.
+    pub telemetry: Arc<Telemetry>,
+    /// Trace-span ring (engine-thread owned; rendered for
+    /// `{"trace": n}` and `--trace-out`).
+    spans: SpanRing,
+    /// Flight recorder (engine-thread owned; deterministic event ring
+    /// dumped on panics/faults and `{"dump"}`).
+    recorder: FlightRecorder,
+    /// Injector fire tallies as of the previous step end, for folding
+    /// worker-thread fault fires into recorder events deterministically
+    /// (diffed and sorted on the engine thread).
+    fault_fires: Vec<(String, u64)>,
 }
 
 /// What `Engine::submit_full` did with a request.
@@ -115,7 +130,15 @@ impl Engine {
         kvpool.set_fault_injector(faults.clone());
         let prefix_cache =
             PrefixCache::with_limits(cfg.prefix_cache, cfg.prefix_cache_bytes, cfg.prefix_ttl_ms);
+        let tel = Arc::new(Telemetry::new(cfg.telemetry));
+        kvpool.set_telemetry(Arc::clone(&tel));
+        let spans = SpanRing::new(cfg.trace_ring);
+        let recorder = FlightRecorder::new(cfg.recorder_ring);
         Engine {
+            telemetry: tel,
+            spans,
+            recorder,
+            fault_fires: Vec::new(),
             cfg,
             model: Arc::new(model),
             policy,
@@ -139,6 +162,8 @@ impl Engine {
     pub fn set_fault_injector(&mut self, inj: Injector) {
         self.kvpool.set_fault_injector(inj.clone());
         self.faults = inj;
+        // fresh injector, fresh tallies: recorder fault diffs restart
+        self.fault_fires.clear();
     }
 
     /// The engine's fault-injector handle (the server clones it so its
@@ -208,48 +233,54 @@ impl Engine {
         let vocab = self.model.cfg().vocab;
         if req.prompt.is_empty() || req.prompt.iter().any(|&t| t as usize >= vocab) {
             self.metrics.rejected += 1;
+            self.recorder.note("reject", req.id, 0);
             return SubmitOutcome::Rejected;
         }
         if self.scheduler.pending() >= self.cfg.queue_cap {
             self.metrics.shed += 1;
+            self.recorder.note("shed", req.id, self.scheduler.pending() as u64);
             return SubmitOutcome::Shed { retry_after_ms: self.retry_after_hint_ms() };
         }
         let mut req = req;
         req.max_new_tokens = req.max_new_tokens.min(self.cfg.max_new_tokens.max(1));
         req.submitted = Instant::now();
+        let (id, plen) = (req.id, req.prompt.len());
         if self.scheduler.submit(req) {
+            self.recorder.note("queued", id, plen as u64);
             SubmitOutcome::Queued
         } else {
             // queue_cap was checked above, so this is the scheduler's
             // impossible-budget refusal: permanent, not retryable
             self.metrics.rejected += 1;
+            self.recorder.note("reject", id, plen as u64);
             SubmitOutcome::Rejected
         }
     }
 
     /// Milliseconds a shed client should wait before retrying, from
     /// observed service time: the queue drains roughly one request per
-    /// `mean request latency / max_batch`. Falls back to a small
-    /// constant before any request has completed.
+    /// `recent request latency / max_batch`. Uses the decaying EWMA,
+    /// not the lifetime mean — one slow cold-start request must not
+    /// skew hints for the rest of the process lifetime. Falls back to
+    /// a small constant before any request has completed.
     pub fn retry_after_hint_ms(&self) -> u64 {
-        if self.metrics.request_ms.is_empty() {
+        if self.metrics.request_latency.is_empty() {
             return 50;
         }
-        let mean_ms = crate::util::stats::mean(&self.metrics.request_ms);
-        let per_slot = mean_ms / self.cfg.max_batch.max(1) as f64;
+        let per_slot = self.metrics.request_ms_ewma / self.cfg.max_batch.max(1) as f64;
         per_slot.clamp(10.0, 60_000.0) as u64
     }
 
     /// Estimated milliseconds of work queued ahead of a new arrival
-    /// (stats endpoint): pending requests times mean service time,
-    /// divided by the batch width draining them. 0.0 before any
+    /// (stats endpoint): pending requests times *recent* (EWMA) service
+    /// time, divided by the batch width draining them. 0.0 before any
     /// request has completed.
     pub fn queue_depth_ms_estimate(&self) -> f64 {
-        if self.metrics.request_ms.is_empty() {
+        if self.metrics.request_latency.is_empty() {
             return 0.0;
         }
-        let mean_ms = crate::util::stats::mean(&self.metrics.request_ms);
-        self.scheduler.pending() as f64 * mean_ms / self.cfg.max_batch.max(1) as f64
+        self.scheduler.pending() as f64 * self.metrics.request_ms_ewma
+            / self.cfg.max_batch.max(1) as f64
     }
 
     /// True when nothing is queued or running.
@@ -272,8 +303,44 @@ impl Engine {
         self.admit_and_prefill()?;
         self.decode_round()?;
         self.sync_pool();
+        if self.telemetry.on() {
+            self.telemetry.pool_occupancy_bytes.record(self.kvpool.stats().live_bytes as u64);
+        }
+        self.absorb_fault_fires();
         self.metrics.wall_s += t0.elapsed().as_secs_f64();
         Ok(())
+    }
+
+    /// Fold injector fires since the last step into flight-recorder
+    /// events. Runs on the engine thread over the injector's own
+    /// tallies, sorted by point name — so worker-thread interleaving
+    /// within a round can never change the recorded event sequence
+    /// (per-point fire *counts* per step are deterministic under a
+    /// pinned seed; which worker observed them is not).
+    fn absorb_fault_fires(&mut self) {
+        if !self.faults.enabled() {
+            return;
+        }
+        let mut cur: Vec<(String, u64)> =
+            self.faults.fired().into_iter().map(|(name, _hits, fires)| (name, fires)).collect();
+        cur.sort();
+        let mut fired_now = false;
+        for (name, fires) in &cur {
+            let prev = self
+                .fault_fires
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, f)| *f)
+                .unwrap_or(0);
+            if *fires > prev {
+                self.recorder.note_owned(format!("fault:{name}"), *fires - prev, *fires);
+                fired_now = true;
+            }
+        }
+        self.fault_fires = cur;
+        if fired_now {
+            self.recorder.trigger_auto_dump("chaos fault fired");
+        }
     }
 
     /// Timeout sweep, run at the top of every step.
@@ -299,6 +366,7 @@ impl Engine {
             } else {
                 self.metrics.timed_out_queued += 1;
             }
+            self.recorder.note("timeout", req.id, 0);
             self.completions.push(Completion::queued(
                 req.id,
                 req.route,
@@ -324,6 +392,7 @@ impl Engine {
             self.note_kv_peaks(kv);
             self.kvpool.release(s.owner);
             self.metrics.deadline_exceeded += 1;
+            self.recorder.note("timeout", s.req.id, s.generated.len() as u64);
             self.completions.push(s.into_completion(FinishReason::Timeout, None, kv));
         }
     }
@@ -336,6 +405,8 @@ impl Engine {
     /// this is how graceful drain guarantees a bounded quiescence time
     /// without inventing a second cancellation path.
     pub fn impose_deadline(&mut self, ms: u64) {
+        let inflight = (self.active.len() + self.scheduler.pending()) as u64;
+        self.recorder.note("impose_deadline", ms, inflight);
         let clamp = |req: &mut Request| {
             let elapsed = req.submitted.elapsed().as_millis() as u64;
             let nd = elapsed + ms;
@@ -471,6 +542,8 @@ impl Engine {
                 // its charge) — so accounting stays exact.
                 self.metrics.isolated_panics += 1;
                 self.metrics.failed += 1;
+                self.recorder.note("prefill_panic", req.id, 0);
+                self.recorder.trigger_auto_dump("panic isolated in prefill");
                 let mut c = Completion::queued(
                     req.id,
                     req.route,
@@ -655,6 +728,7 @@ impl Engine {
                 self.kvpool.release(owner);
                 self.metrics.rejected += 1;
                 self.metrics.rejected_capacity += 1;
+                self.recorder.note("reject_capacity", req.id, bytes as u64);
                 // shared constructor, with the two timings this path
                 // knows more precisely (admission-stamped queue time
                 // and the prefill that ran before the reject)
@@ -672,6 +746,13 @@ impl Engine {
             }
         }
 
+        if self.telemetry.on() {
+            self.telemetry.queue_wait_us.record((queue_ms * 1e3).max(0.0) as u64);
+            self.telemetry.prefill_us.record((prefill_ms * 1e3).max(0.0) as u64);
+            // TTFT: the first token exists as soon as prefill finishes
+            self.telemetry.ttft_us.record(((queue_ms + prefill_ms) * 1e3).max(0.0) as u64);
+        }
+        self.recorder.note("admit", req.id, req.prompt.len() as u64);
         let pos = req.prompt.len();
         self.admit_stamp += 1;
         let mut seq = ActiveSeq {
@@ -718,6 +799,7 @@ impl Engine {
             }
             if self.prefix_cache.evict_lru(&mut self.kvpool) {
                 self.metrics.prefix_evictions += 1;
+                self.recorder.note("prefix_evict", need as u64, 0);
                 continue;
             }
             if self.reprune_one() {
@@ -775,14 +857,20 @@ impl Engine {
             return true;
         };
         s.reprune_tier = next_tier;
+        let t0 = Instant::now();
         if kv.reprune(sparsity, sparsity).is_err() {
             return false;
         }
         let owner = s.owner;
+        let id = s.req.id;
         let bytes = kv.private_bytes();
+        if self.telemetry.on() {
+            self.telemetry.prune_us.record(telemetry::us(t0.elapsed()));
+        }
         // a re-prune only shrinks, so this reservation cannot fail
         let _ = self.kvpool.set_live_bytes(owner, bytes);
         self.metrics.repruned += 1;
+        self.recorder.note("reprune", id, next_tier as u64);
         true
     }
 
@@ -797,6 +885,7 @@ impl Engine {
         let s = self.active.swap_remove(idx);
         self.kvpool.release(s.owner);
         self.metrics.generated_tokens -= s.generated.len();
+        self.recorder.note("preempt", s.req.id, s.generated.len() as u64);
         self.scheduler.requeue_front(s.req);
         self.metrics.preempted += 1;
     }
@@ -887,7 +976,10 @@ impl Engine {
             return Ok(());
         }
         self.metrics.decode_rounds += 1;
-        self.metrics.batch_sizes.push(self.active.len());
+        self.metrics.note_batch(self.active.len());
+        let batch = self.active.len();
+        let round_t0 = Instant::now();
+        let mut landed = 0usize;
 
         match self.cfg.backend {
             Backend::NativeDense | Backend::NativeSparse => {
@@ -899,7 +991,9 @@ impl Engine {
                 let n = self.active.len();
                 let outcomes: Vec<DecodeOutcome> = if n > 1 {
                     let workers = crate::util::threads().min(self.cfg.max_batch.max(1));
-                    let pool = self.pool.get_or_insert_with(|| WorkerPool::new(workers));
+                    let tel = Arc::clone(&self.telemetry);
+                    let pool =
+                        self.pool.get_or_insert_with(|| WorkerPool::new_with_telemetry(workers, tel));
                     let model: &NativeModel = &self.model;
                     let faults = &self.faults;
                     let mut slots: Vec<Option<DecodeOutcome>> = (0..n).map(|_| None).collect();
@@ -946,6 +1040,7 @@ impl Engine {
                             s.generated.push(tok);
                             s.pos += 1;
                             self.metrics.generated_tokens += 1;
+                            landed += 1;
                         }
                         DecodeOutcome::Failed(e) => {
                             casualties.push((s.owner, e.to_string(), false));
@@ -967,8 +1062,11 @@ impl Engine {
                     self.note_kv_peaks(kv);
                     self.kvpool.release(s.owner);
                     self.metrics.failed += 1;
+                    let kind = if panicked { "decode_panic" } else { "decode_fail" };
+                    self.recorder.note(kind, s.req.id, s.generated.len() as u64);
                     if panicked {
                         self.metrics.isolated_panics += 1;
+                        self.recorder.trigger_auto_dump("panic isolated in decode");
                     }
                     self.completions.push(s.into_completion(
                         FinishReason::Error,
@@ -998,8 +1096,28 @@ impl Engine {
                     s.generated.push(argmax(&logits));
                     s.pos += 1;
                     self.metrics.generated_tokens += 1;
+                    landed += 1;
                 }
             }
+        }
+
+        if self.telemetry.on() {
+            let round_us = telemetry::us(round_t0.elapsed());
+            self.telemetry.decode_round_us.record(round_us);
+            // inter-token latency: with continuous batching every
+            // sequence that landed a token this round waited one round
+            // for it, so the round time is each token's inter-arrival
+            for _ in 0..landed {
+                self.telemetry.inter_token_us.record(round_us);
+            }
+            let end_us = self.telemetry.now_us();
+            self.spans.push(Span {
+                name: "decode_round",
+                tid: 0,
+                ts_us: end_us.saturating_sub(round_us),
+                dur_us: round_us,
+                args: vec![("batch", batch as u64), ("landed", landed as u64)],
+            });
         }
 
         // retire finished sequences
@@ -1021,8 +1139,12 @@ impl Engine {
         self.note_kv_peaks(kv);
         // end-to-end latency from submission (includes queue time)
         let total_ms = s.req.submitted.elapsed().as_secs_f64() * 1e3;
-        self.metrics.request_ms.push(total_ms);
+        self.metrics.note_request_ms(total_ms);
         self.metrics.completions += 1;
+        self.recorder.note("finish", s.req.id, s.generated.len() as u64);
+        if self.telemetry.on() {
+            self.push_request_spans(&s, total_ms);
+        }
 
         let finish = if s
             .req
@@ -1035,6 +1157,50 @@ impl Engine {
             FinishReason::Length
         };
         self.completions.push(s.into_completion(finish, None, kv));
+    }
+
+    /// Stamp one finished request's lifecycle onto the span ring:
+    /// `request` ⊇ `queued` → `prefill` → `decode`, all on the
+    /// request's route lane. Child boundaries are clamped inside the
+    /// parent so nesting is monotone even when the rounded phase
+    /// timings disagree by a microsecond.
+    fn push_request_spans(&mut self, s: &ActiveSeq, total_ms: f64) {
+        let end_us = self.telemetry.now_us();
+        let total_us = (total_ms * 1e3).max(0.0) as u64;
+        let start_us = end_us.saturating_sub(total_us);
+        let tid = s.req.route;
+        let id = s.req.id;
+        let q_end = (start_us + (s.queue_ms * 1e3).max(0.0) as u64).min(end_us);
+        let p_end = (q_end + (s.prefill_ms * 1e3).max(0.0) as u64).min(end_us);
+        let tokens = s.generated.len() as u64;
+        self.spans.push(Span {
+            name: "request",
+            tid,
+            ts_us: start_us,
+            dur_us: total_us,
+            args: vec![("id", id), ("tokens", tokens)],
+        });
+        self.spans.push(Span {
+            name: "queued",
+            tid,
+            ts_us: start_us,
+            dur_us: q_end - start_us,
+            args: vec![("id", id)],
+        });
+        self.spans.push(Span {
+            name: "prefill",
+            tid,
+            ts_us: q_end,
+            dur_us: p_end - q_end,
+            args: vec![("id", id)],
+        });
+        self.spans.push(Span {
+            name: "decode",
+            tid,
+            ts_us: p_end,
+            dur_us: end_us - p_end,
+            args: vec![("id", id), ("tokens", tokens)],
+        });
     }
 
     /// Cancel a request anywhere in its lifetime, keyed by
@@ -1055,6 +1221,7 @@ impl Engine {
     pub fn cancel(&mut self, route: u64) -> bool {
         if let Some(req) = self.scheduler.remove_by_id(route) {
             self.metrics.cancelled += 1;
+            self.recorder.note("cancel", req.id, 0);
             self.completions.push(Completion::queued(
                 req.id,
                 req.route,
@@ -1073,6 +1240,7 @@ impl Engine {
         let freed = self.kvpool.release(s.owner);
         self.metrics.cancelled += 1;
         self.metrics.cancelled_freed_bytes += freed;
+        self.recorder.note("cancel", s.req.id, s.generated.len() as u64);
         // s.state drops inside into_completion: private buffers are
         // gone (their pool charge was released above) and any shared
         // prefix decrefs without freeing the cache-charged pages
@@ -1107,7 +1275,38 @@ impl Engine {
             n += 1;
         }
         self.metrics.failed += n;
+        if n > 0 {
+            self.recorder.note("fail_inflight", n as u64, 0);
+        }
         n
+    }
+
+    /// chrome://tracing JSON of the most recent `n` spans (0 = all
+    /// retained). Serves the `{"trace": n}` line and `--trace-out`.
+    pub fn trace_json(&self, n: usize) -> crate::fmt::Json {
+        self.telemetry.trace_queries.inc();
+        self.spans.chrome_json(n)
+    }
+
+    /// Flight-recorder dump (the `{"dump"}` line).
+    pub fn dump_json(&self) -> crate::fmt::Json {
+        self.telemetry.dump_queries.inc();
+        self.recorder.dump_json()
+    }
+
+    /// The retained trace-span ring (tests/introspection).
+    pub fn spans(&self) -> &SpanRing {
+        &self.spans
+    }
+
+    /// The flight recorder (tests/introspection).
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
+    /// High-water mark of the admission queue since startup.
+    pub fn peak_queued(&self) -> usize {
+        self.scheduler.peak_pending()
     }
 
     /// Generated-token count of an in-flight request by routing key:
@@ -1256,7 +1455,8 @@ mod tests {
         assert_eq!(e.metrics.completions, 6);
         assert_eq!(e.metrics.generated_tokens, 30);
         // continuous batching: max 4 at a time
-        assert!(e.metrics.batch_sizes.iter().all(|&b| b <= 4));
+        assert!(e.metrics.batch_hist.max() <= 4);
+        assert!(e.metrics.batch_hist.count() > 0);
     }
 
     #[test]

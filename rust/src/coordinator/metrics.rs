@@ -1,6 +1,19 @@
 //! Serving metrics: token throughput, latency percentiles, KV memory.
+//!
+//! Latency and batch-size distributions are bounded log₂ histograms
+//! ([`Hist`]) — a long-lived server accumulates them in O(1) memory.
+//! (They used to be ever-growing `Vec`s, which leaked linearly in
+//! request count; `latency_summary()` / `mean_batch()` keep their old
+//! signatures on top of the histograms for the eval harness callers.)
 
+use crate::telemetry::Hist;
 use crate::util::Summary;
+
+/// EWMA smoothing for the per-request latency estimate that drives
+/// `retry_after_ms` hints and queue-depth estimates: 0.2 weights the
+/// last ~10 completions, so one slow cold-start request stops skewing
+/// hints after a handful of normal ones.
+const LATENCY_EWMA_ALPHA: f64 = 0.2;
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -11,10 +24,16 @@ pub struct Metrics {
     pub decode_rounds: usize,
     pub completions: usize,
     pub rejected: usize,
-    /// Per-decode-round batch sizes (for utilization analysis).
-    pub batch_sizes: Vec<usize>,
-    /// Per-request end-to-end latencies (ms).
-    pub request_ms: Vec<f64>,
+    /// Per-decode-round batch sizes (bounded histogram; for
+    /// utilization analysis).
+    pub batch_hist: Hist,
+    /// Per-request end-to-end latencies, recorded in µs (bounded
+    /// histogram; summarized in ms).
+    pub request_latency: Hist,
+    /// Exponentially-weighted mean of recent end-to-end latencies (ms).
+    /// Unlike the histogram mean this *decays*, so admission hints
+    /// track current conditions instead of process-lifetime history.
+    pub request_ms_ewma: f64,
     /// Peak KV bytes across the run (compressed accounting).
     pub peak_kv_bytes: usize,
     /// Peak dense-equivalent KV bytes.
@@ -71,18 +90,29 @@ impl Metrics {
         }
     }
 
+    /// Record one decode round's batch size.
+    pub fn note_batch(&mut self, n: usize) {
+        self.batch_hist.record(n as u64);
+    }
+
+    /// Record one request's end-to-end latency: into the bounded
+    /// histogram (for percentiles) and the decaying EWMA (for
+    /// admission hints).
+    pub fn note_request_ms(&mut self, ms: f64) {
+        if self.request_latency.is_empty() {
+            self.request_ms_ewma = ms;
+        } else {
+            self.request_ms_ewma += LATENCY_EWMA_ALPHA * (ms - self.request_ms_ewma);
+        }
+        self.request_latency.record((ms * 1e3).max(0.0) as u64);
+    }
+
     pub fn mean_batch(&self) -> f64 {
-        crate::util::stats::mean(
-            &self.batch_sizes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
-        )
+        self.batch_hist.mean()
     }
 
     pub fn latency_summary(&self) -> Option<Summary> {
-        if self.request_ms.is_empty() {
-            None
-        } else {
-            Some(Summary::of(&self.request_ms))
-        }
+        self.request_latency.summary(1e-3)
     }
 
     pub fn kv_compression_rate(&self) -> f64 {
@@ -120,5 +150,45 @@ mod tests {
     #[test]
     fn latency_summary_empty() {
         assert!(Metrics::default().latency_summary().is_none());
+    }
+
+    #[test]
+    fn latency_summary_from_histogram_is_ms() {
+        let mut m = Metrics::default();
+        for ms in [10.0, 20.0, 30.0, 40.0] {
+            m.note_request_ms(ms);
+        }
+        let s = m.latency_summary().unwrap();
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 25.0).abs() < 1e-6);
+        assert!((s.min - 10.0).abs() < 1e-6);
+        assert!((s.max - 40.0).abs() < 1e-6);
+        assert!(s.p50 >= s.min && s.p50 <= s.max);
+    }
+
+    #[test]
+    fn mean_batch_from_histogram() {
+        let mut m = Metrics::default();
+        for b in [2usize, 4, 4, 6] {
+            m.note_batch(b);
+        }
+        assert!((m.mean_batch() - 4.0).abs() < 1e-9);
+        assert_eq!(m.batch_hist.max(), 6);
+        assert_eq!(m.batch_hist.min(), 2);
+    }
+
+    #[test]
+    fn ewma_forgets_cold_start() {
+        let mut m = Metrics::default();
+        // one pathological cold-start completion...
+        m.note_request_ms(10_000.0);
+        assert!((m.request_ms_ewma - 10_000.0).abs() < 1e-9);
+        // ...decays toward steady state after a burst of normal ones
+        for _ in 0..30 {
+            m.note_request_ms(20.0);
+        }
+        assert!(m.request_ms_ewma < 40.0, "ewma stuck at {}", m.request_ms_ewma);
+        // while the histogram still remembers the outlier exactly
+        assert!(m.latency_summary().unwrap().max >= 9_999.0);
     }
 }

@@ -11,6 +11,9 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::telemetry::{self, Telemetry};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 /// Panic payload carried back from a worker (`None` = job completed).
@@ -29,14 +32,29 @@ pub struct WorkerPool {
 impl WorkerPool {
     /// Spawn `size` parked workers (at least 1).
     pub fn new(size: usize) -> WorkerPool {
+        WorkerPool::spawn(size, None)
+    }
+
+    /// Like [`WorkerPool::new`], but each completed job's wall time is
+    /// recorded into `telemetry.worker_task_us` (sharded atomic
+    /// histogram — one relaxed record per job, no locking on the decode
+    /// hot path). A disabled registry short-circuits to plain
+    /// execution.
+    pub fn new_with_telemetry(size: usize, telemetry: Arc<Telemetry>) -> WorkerPool {
+        WorkerPool::spawn(size, Some(telemetry))
+    }
+
+    fn spawn(size: usize, tel: Option<Arc<Telemetry>>) -> WorkerPool {
         let size = size.max(1);
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let (done_tx, done_rx) = channel::<Option<PanicPayload>>();
+        let tel = tel.filter(|t| t.on());
         let handles = (0..size)
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 let done = done_tx.clone();
+                let tel = tel.clone();
                 std::thread::Builder::new()
                     .name(format!("decode-worker-{i}"))
                     .spawn(move || loop {
@@ -49,10 +67,14 @@ impl WorkerPool {
                             Ok(job) => {
                                 // carry the payload back so run_scoped can
                                 // resume_unwind with the original message
+                                let t0 = tel.as_ref().map(|_| Instant::now());
                                 let payload = std::panic::catch_unwind(
                                     std::panic::AssertUnwindSafe(job),
                                 )
                                 .err();
+                                if let (Some(tel), Some(t0)) = (tel.as_ref(), t0) {
+                                    tel.worker_task_us.record(telemetry::us(t0.elapsed()));
+                                }
                                 if done.send(payload).is_err() {
                                     break;
                                 }
@@ -181,5 +203,33 @@ mod tests {
         let pool = WorkerPool::new(1);
         pool.run_scoped(Vec::new());
         assert_eq!(pool.size(), 1);
+    }
+
+    #[test]
+    fn telemetry_pool_times_every_job() {
+        let tel = Arc::new(Telemetry::new(true));
+        let pool = WorkerPool::new_with_telemetry(2, Arc::clone(&tel));
+        for _ in 0..3 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|_| {
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(|| {
+                        std::hint::black_box(0u64);
+                    });
+                    job
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }
+        assert_eq!(tel.worker_task_us.snapshot().count(), 12);
+    }
+
+    #[test]
+    fn disabled_telemetry_pool_records_nothing() {
+        let tel = Arc::new(Telemetry::new(false));
+        let pool = WorkerPool::new_with_telemetry(2, Arc::clone(&tel));
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            (0..4).map(|_| Box::new(|| {}) as Box<dyn FnOnce() + Send + '_>).collect();
+        pool.run_scoped(jobs);
+        assert!(tel.worker_task_us.snapshot().is_empty());
     }
 }

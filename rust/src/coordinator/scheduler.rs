@@ -87,11 +87,14 @@ pub struct Scheduler {
     model_cfg: ModelConfig,
     policy: KvPolicy,
     queue: VecDeque<Request>,
+    /// High-water mark of `pending()` across the scheduler's lifetime
+    /// (telemetry: how deep did the admission queue ever get).
+    peak_pending: usize,
 }
 
 impl Scheduler {
     pub fn new(cfg: EngineConfig, model_cfg: ModelConfig, policy: KvPolicy) -> Scheduler {
-        Scheduler { cfg, model_cfg, policy, queue: VecDeque::new() }
+        Scheduler { cfg, model_cfg, policy, queue: VecDeque::new(), peak_pending: 0 }
     }
 
     /// Enqueue a request; returns false when the queue is full or the
@@ -110,6 +113,7 @@ impl Scheduler {
             return false;
         }
         self.queue.push_back(req);
+        self.peak_pending = self.peak_pending.max(self.queue.len());
         true
     }
 
@@ -150,6 +154,7 @@ impl Scheduler {
     /// request is never in the active set when preemption runs).
     pub fn requeue_front(&mut self, req: Request) {
         self.queue.push_front(req);
+        self.peak_pending = self.peak_pending.max(self.queue.len());
     }
 
     /// Remove a queued request by its routing key (client cancellation
@@ -199,6 +204,11 @@ impl Scheduler {
 
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Deepest the queue has ever been (monotone high-water mark).
+    pub fn peak_pending(&self) -> usize {
+        self.peak_pending
     }
 
     /// Visit every queued request mutably, in queue order. Used by the
@@ -384,6 +394,26 @@ mod tests {
         assert_eq!(removed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 4]);
         let rest: Vec<u64> = std::iter::from_fn(|| s.pop_front()).map(|r| r.id).collect();
         assert_eq!(rest, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn peak_pending_is_a_high_water_mark() {
+        let cfg = mc();
+        let mut s = Scheduler::new(EngineConfig::default(), cfg, KvPolicy::dense());
+        assert_eq!(s.peak_pending(), 0);
+        for i in 0..3 {
+            s.submit(Request::new(i, vec![0; 8], 4));
+        }
+        assert_eq!(s.peak_pending(), 3);
+        // draining does not lower the mark
+        while s.pop_front().is_some() {}
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.peak_pending(), 3);
+        // requeue_front past the old peak raises it
+        for i in 0..4 {
+            s.requeue_front(Request::new(10 + i, vec![0; 8], 4));
+        }
+        assert_eq!(s.peak_pending(), 4);
     }
 
     #[test]

@@ -132,6 +132,11 @@ pub struct KvPool {
     /// allocator that frees asynchronously. Live-byte accounting stays
     /// exact throughout; only *reservation* headroom lags.
     quarantine: Vec<u32>,
+    /// Optional telemetry registry: every successful occupancy mutation
+    /// records the new `live_bytes` into the pool-occupancy histogram
+    /// (one relaxed atomic record; `None` or a disabled registry costs
+    /// one branch).
+    telemetry: Option<std::sync::Arc<crate::telemetry::Telemetry>>,
 }
 
 impl KvPool {
@@ -156,6 +161,7 @@ impl KvPool {
             peak_used_pages: 0,
             faults: crate::faults::Injector::disabled(),
             quarantine: Vec::new(),
+            telemetry: None,
         }
     }
 
@@ -167,6 +173,19 @@ impl KvPool {
     /// injector.
     pub fn set_fault_injector(&mut self, inj: crate::faults::Injector) {
         self.faults = inj;
+    }
+
+    /// Share the engine's telemetry registry: occupancy mutations start
+    /// recording into `pool_occupancy_bytes`. A disabled registry is
+    /// dropped here so the hot path pays only an `Option` check.
+    pub fn set_telemetry(&mut self, tel: std::sync::Arc<crate::telemetry::Telemetry>) {
+        self.telemetry = tel.on().then_some(tel);
+    }
+
+    fn note_occupancy(&self) {
+        if let Some(tel) = &self.telemetry {
+            tel.pool_occupancy_bytes.record(self.live_bytes as u64);
+        }
     }
 
     /// Return quarantined (fault-deferred) pages to the free list.
@@ -234,6 +253,7 @@ impl KvPool {
         table.live_bytes = bytes;
         self.peak_live_bytes = self.peak_live_bytes.max(self.live_bytes);
         self.peak_used_pages = self.peak_used_pages.max(self.used_pages);
+        self.note_occupancy();
         Ok(())
     }
 
@@ -246,6 +266,7 @@ impl KvPool {
         match self.owners.remove(&owner.0) {
             Some(table) => {
                 self.live_bytes -= table.live_bytes;
+                self.note_occupancy();
                 if self.faults.fire("kvpool.release") {
                     // Injected deferred free: the pages stay reserved
                     // (budget pressure) until the next mutation flushes
@@ -405,6 +426,29 @@ mod tests {
         let b = p.register();
         p.set_live_bytes(b, 4 * 1024).unwrap();
         assert_eq!(p.stats().used_pages, 4);
+    }
+
+    #[test]
+    fn telemetry_sees_every_occupancy_mutation() {
+        let mut p = pool(1 << 20, 1024);
+        let tel = std::sync::Arc::new(crate::telemetry::Telemetry::new(true));
+        p.set_telemetry(std::sync::Arc::clone(&tel));
+        let a = p.register();
+        p.set_live_bytes(a, 3000).unwrap();
+        p.set_live_bytes(a, 500).unwrap();
+        p.release(a);
+        let h = tel.pool_occupancy_bytes.snapshot();
+        assert_eq!(h.count(), 3, "grow, shrink, release each recorded");
+        assert_eq!(h.max(), 3000);
+        assert_eq!(h.min(), 0, "release records the post-release occupancy");
+
+        // a disabled registry is dropped at set_telemetry
+        let mut q = pool(1 << 20, 1024);
+        let off = std::sync::Arc::new(crate::telemetry::Telemetry::new(false));
+        q.set_telemetry(std::sync::Arc::clone(&off));
+        let b = q.register();
+        q.set_live_bytes(b, 100).unwrap();
+        assert!(off.pool_occupancy_bytes.snapshot().is_empty());
     }
 
     #[test]

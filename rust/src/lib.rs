@@ -58,6 +58,7 @@ pub mod quant;
 pub mod runtime;
 pub mod server;
 pub mod sparse;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
 pub mod workload;

@@ -73,6 +73,7 @@ USAGE:
            [--reactor-threads N] [--max-conns N] [--max-line-bytes N]
            [--write-hwm N] [--idle-timeout-ms N] [--read-deadline-ms N]
            [--drain-deadline-ms N] [--prefix-cache-bytes N] [--prefix-ttl-ms N]
+           [--no-telemetry] [--trace-out FILE] [--metrics-addr HOST:PORT]
   mustafar generate [--model M] [--backend B] [--ks S] [--vs S]
            [--prompt-seed N] [--prompt-len N] [--max-new N] [--artifacts DIR]
   mustafar info     [--artifacts DIR]
@@ -153,6 +154,7 @@ fn build_engine(args: &Args) -> mustafar::Result<Engine> {
     ec.kv_budget_bytes = args.get_usize("kv-budget", 0);
     ec.prefix_cache_bytes = args.get_usize("prefix-cache-bytes", 0);
     ec.prefix_ttl_ms = args.get_usize("prefix-ttl-ms", 0) as u64;
+    ec.telemetry = !args.flags.contains_key("no-telemetry");
 
     let model = NativeModel::new(weights.clone());
     match backend {
@@ -177,6 +179,8 @@ fn cmd_serve(args: &Args) -> mustafar::Result<()> {
         read_deadline_ms: args.get_usize("read-deadline-ms", d.read_deadline_ms as usize) as u64,
         drain_deadline_ms: args.get_usize("drain-deadline-ms", d.drain_deadline_ms as usize)
             as u64,
+        metrics_addr: args.flags.get("metrics-addr").cloned(),
+        trace_out: args.flags.get("trace-out").cloned(),
         ..d
     };
     mustafar::server::serve_with(engine, &addr, sc)

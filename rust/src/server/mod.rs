@@ -81,23 +81,37 @@
 //!    engine thread exits when the last reactor disconnects, and
 //!    `serve_listener_cfg` returns.
 //!
-//! # Stats
+//! # Stats and telemetry
 //!
 //! `{"stats": true}` answers the engine/pool counters plus the
 //! connection-level gauges `open_conns`, `conns_shed`,
 //! `write_backpressure_closes`, `idle_closes`, `read_deadline_closes`,
 //! `oversize_lines`, `io_fault_closes`, and `drain_state`
-//! (`"serving"` | `"draining"`), and the prefix-cache capacity knobs
+//! (`"serving"` | `"draining"`), the prefix-cache capacity knobs
 //! (`prefix_charged_bytes`, `prefix_capacity_bytes`, `prefix_ttl_ms`,
-//! `prefix_ttl_evictions`).
+//! `prefix_ttl_evictions`), and latency quantiles (p50/p99/p999 for
+//! TTFT, inter-token, and queue wait, from the bounded telemetry
+//! histograms).
+//!
+//! Three more query lines ride the same reactor path as stats (each is
+//! answered with exactly one JSON line, in submission order relative
+//! to the connection's other traffic):
+//! - `{"trace": <n>}` — the most recent `n` trace spans (`0`/`true` =
+//!   all retained) as chrome://tracing JSON,
+//! - `{"dump": true}` — the flight recorder's event ring,
+//! - `{"metrics": true}` — Prometheus text exposition wrapped as
+//!   `{"metrics": "<text>"}`; the same exposition is served over plain
+//!   HTTP when `ServerConfig::metrics_addr` is set.
 
 use std::collections::HashMap;
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::coordinator::{Completion, Engine, FinishReason, Request, SubmitOutcome};
 use crate::error::{Error, Result};
@@ -132,6 +146,17 @@ pub(crate) enum Inbound {
     /// Stats query; the rendered JSON line comes back as a
     /// `Control::Line` addressed to the connection.
     Stats(ConnAddr),
+    /// Trace query: the most recent `n` spans (0 = all retained) as
+    /// chrome://tracing JSON, answered like a stats line.
+    Trace(ConnAddr, usize),
+    /// Flight-recorder dump query, answered like a stats line.
+    Dump(ConnAddr),
+    /// Prometheus exposition query over the line protocol, answered as
+    /// one `{"metrics": "<text>"}` line.
+    MetricsQ(ConnAddr),
+    /// Prometheus exposition for the HTTP scrape listener; the raw
+    /// text comes back over the one-shot channel.
+    Scrape(Sender<String>),
     /// A reactor observed the shutdown flag: stop admitting, clamp
     /// in-flight deadlines to the drain window. Idempotent.
     Drain,
@@ -244,6 +269,27 @@ pub fn cancel_target(v: &Json) -> Option<u64> {
     v.opt("cancel").and_then(|c| c.as_usize().ok()).map(|id| id as u64)
 }
 
+/// The span count a `{"trace": <n>}` line requests, if the parsed line
+/// is a trace query. `{"trace": true}` and `{"trace": 0}` both mean
+/// "all retained spans".
+pub fn trace_request_depth(v: &Json) -> Option<usize> {
+    let t = v.opt("trace")?;
+    if let Ok(b) = t.as_bool() {
+        return b.then_some(0);
+    }
+    t.as_usize().ok()
+}
+
+/// True when the parsed line is a flight-recorder dump query.
+pub fn is_dump_json(v: &Json) -> bool {
+    v.opt("dump").and_then(|s| s.as_bool().ok()).unwrap_or(false)
+}
+
+/// True when the parsed line is a Prometheus-exposition query.
+pub fn is_metrics_json(v: &Json) -> bool {
+    v.opt("metrics").and_then(|s| s.as_bool().ok()).unwrap_or(false)
+}
+
 /// Render one `{"error": ...}` line. Every error string goes through
 /// the JSON serializer — a message containing `"` or `\` must still
 /// emit a well-formed line (raw `writeln!` interpolation did not).
@@ -286,44 +332,58 @@ pub fn render_completion(c: &Completion) -> String {
     Json::obj(fields).to_string()
 }
 
-/// Engine-side stats fields (pool + prefix-cache + serving counters).
-fn stats_fields(engine: &Engine) -> Vec<(&'static str, Json)> {
+/// Engine-side stats scalars (pool + prefix-cache + serving counters +
+/// telemetry quantiles) as plain numbers. One list feeds both the
+/// `{"stats"}` JSON object and the Prometheus exposition, so the two
+/// surfaces cannot drift apart.
+fn stats_scalars(engine: &Engine) -> Vec<(&'static str, f64)> {
     let p = engine.pool_stats();
     let m = &engine.metrics;
-    vec![
-        ("pool_budget_bytes", Json::num(p.budget_bytes as f64)),
-        ("pool_page_bytes", Json::num(p.page_bytes as f64)),
-        ("pool_used_pages", Json::num(p.used_pages as f64)),
-        ("pool_reserved_bytes", Json::num(p.reserved_bytes as f64)),
-        ("pool_live_bytes", Json::num(p.live_bytes as f64)),
-        ("pool_peak_live_bytes", Json::num(p.peak_live_bytes as f64)),
-        ("active", Json::num(engine.active_count() as f64)),
-        ("queued", Json::num(engine.queued_count() as f64)),
-        ("prefix_entries", Json::num(engine.prefix_cache().len() as f64)),
-        ("prefix_full_hits", Json::num(m.prefix_full_hits as f64)),
-        ("prefix_partial_hits", Json::num(m.prefix_partial_hits as f64)),
-        ("prefix_misses", Json::num(m.prefix_misses as f64)),
-        ("prefix_hit_rate", Json::num(m.prefix_hit_rate())),
-        ("prefix_evictions", Json::num(m.prefix_evictions as f64)),
-        ("prefix_ttl_evictions", Json::num(m.prefix_ttl_evictions as f64)),
-        ("prefix_tokens_reused", Json::num(m.prefix_tokens_reused as f64)),
-        ("prefix_charged_bytes", Json::num(engine.prefix_cache().measured_bytes() as f64)),
-        ("prefix_capacity_bytes", Json::num(engine.cfg.prefix_cache_bytes as f64)),
-        ("prefix_ttl_ms", Json::num(engine.cfg.prefix_ttl_ms as f64)),
-        ("repruned", Json::num(m.repruned as f64)),
-        ("preempted", Json::num(m.preempted as f64)),
-        ("completions", Json::num(m.completions as f64)),
-        ("rejected", Json::num(m.rejected as f64)),
-        ("cancelled", Json::num(m.cancelled as f64)),
-        ("cancelled_freed_bytes", Json::num(m.cancelled_freed_bytes as f64)),
-        ("failed", Json::num(m.failed as f64)),
-        ("shed", Json::num(m.shed as f64)),
-        ("timed_out_queued", Json::num(m.timed_out_queued as f64)),
-        ("deadline_exceeded", Json::num(m.deadline_exceeded as f64)),
-        ("isolated_panics", Json::num(m.isolated_panics as f64)),
-        ("queue_depth_ms_estimate", Json::num(engine.queue_depth_ms_estimate())),
-        ("generated_tokens", Json::num(m.generated_tokens as f64)),
-    ]
+    let mut out = vec![
+        ("pool_budget_bytes", p.budget_bytes as f64),
+        ("pool_page_bytes", p.page_bytes as f64),
+        ("pool_used_pages", p.used_pages as f64),
+        ("pool_reserved_bytes", p.reserved_bytes as f64),
+        ("pool_live_bytes", p.live_bytes as f64),
+        ("pool_peak_live_bytes", p.peak_live_bytes as f64),
+        ("active", engine.active_count() as f64),
+        ("queued", engine.queued_count() as f64),
+        ("queue_peak_pending", engine.peak_queued() as f64),
+        ("prefix_entries", engine.prefix_cache().len() as f64),
+        ("prefix_full_hits", m.prefix_full_hits as f64),
+        ("prefix_partial_hits", m.prefix_partial_hits as f64),
+        ("prefix_misses", m.prefix_misses as f64),
+        ("prefix_hit_rate", m.prefix_hit_rate()),
+        ("prefix_evictions", m.prefix_evictions as f64),
+        ("prefix_ttl_evictions", m.prefix_ttl_evictions as f64),
+        ("prefix_tokens_reused", m.prefix_tokens_reused as f64),
+        ("prefix_charged_bytes", engine.prefix_cache().measured_bytes() as f64),
+        ("prefix_capacity_bytes", engine.cfg.prefix_cache_bytes as f64),
+        ("prefix_ttl_ms", engine.cfg.prefix_ttl_ms as f64),
+        ("repruned", m.repruned as f64),
+        ("preempted", m.preempted as f64),
+        ("completions", m.completions as f64),
+        ("rejected", m.rejected as f64),
+        ("cancelled", m.cancelled as f64),
+        ("cancelled_freed_bytes", m.cancelled_freed_bytes as f64),
+        ("failed", m.failed as f64),
+        ("shed", m.shed as f64),
+        ("timed_out_queued", m.timed_out_queued as f64),
+        ("deadline_exceeded", m.deadline_exceeded as f64),
+        ("isolated_panics", m.isolated_panics as f64),
+        ("queue_depth_ms_estimate", engine.queue_depth_ms_estimate()),
+        ("generated_tokens", m.generated_tokens as f64),
+        ("trace_queries", engine.telemetry.trace_queries.get() as f64),
+        ("dump_queries", engine.telemetry.dump_queries.get() as f64),
+        ("metrics_queries", engine.telemetry.metrics_queries.get() as f64),
+    ];
+    out.extend(engine.telemetry.quantile_fields());
+    out
+}
+
+/// Engine-side stats fields (JSON view of [`stats_scalars`]).
+fn stats_fields(engine: &Engine) -> Vec<(&'static str, Json)> {
+    stats_scalars(engine).into_iter().map(|(k, v)| (k, Json::num(v))).collect()
 }
 
 /// Serialize the engine's pool + prefix-cache + serving counters.
@@ -331,26 +391,43 @@ pub fn render_stats(engine: &Engine) -> String {
     Json::obj(stats_fields(engine)).to_string()
 }
 
+/// Connection-level gauges as plain numbers (`drain_state` is 0/1
+/// here; the `{"stats"}` line renders it as a string).
+fn gauge_scalars(g: &Gauges) -> Vec<(&'static str, f64)> {
+    let o = Ordering::Relaxed;
+    vec![
+        ("open_conns", g.open_conns.load(o) as f64),
+        ("conns_shed", g.conns_shed.load(o) as f64),
+        ("write_backpressure_closes", g.write_backpressure_closes.load(o) as f64),
+        ("idle_closes", g.idle_closes.load(o) as f64),
+        ("read_deadline_closes", g.read_deadline_closes.load(o) as f64),
+        ("oversize_lines", g.oversize_lines.load(o) as f64),
+        ("io_fault_closes", g.io_fault_closes.load(o) as f64),
+        ("drain_state", g.drain_state.load(o) as f64),
+    ]
+}
+
 /// Stats line with the connection-level gauges appended (what a live
 /// server actually answers to `{"stats": true}`).
 fn render_stats_full(engine: &Engine, g: &Gauges) -> String {
     let mut fields = stats_fields(engine);
-    let o = Ordering::Relaxed;
-    fields.push(("open_conns", Json::num(g.open_conns.load(o) as f64)));
-    fields.push(("conns_shed", Json::num(g.conns_shed.load(o) as f64)));
-    fields.push((
-        "write_backpressure_closes",
-        Json::num(g.write_backpressure_closes.load(o) as f64),
-    ));
-    fields.push(("idle_closes", Json::num(g.idle_closes.load(o) as f64)));
-    fields.push(("read_deadline_closes", Json::num(g.read_deadline_closes.load(o) as f64)));
-    fields.push(("oversize_lines", Json::num(g.oversize_lines.load(o) as f64)));
-    fields.push(("io_fault_closes", Json::num(g.io_fault_closes.load(o) as f64)));
-    fields.push((
-        "drain_state",
-        Json::str(if g.drain_state.load(o) == 0 { "serving" } else { "draining" }),
-    ));
+    for (k, v) in gauge_scalars(g) {
+        if k == "drain_state" {
+            fields.push((k, Json::str(if v == 0.0 { "serving" } else { "draining" })));
+        } else {
+            fields.push((k, Json::num(v)));
+        }
+    }
     Json::obj(fields).to_string()
+}
+
+/// Prometheus text exposition: every stats scalar and connection gauge
+/// as a `mustafar_`-prefixed metric, plus full bucket series for each
+/// telemetry histogram.
+fn render_metrics(engine: &Engine, g: &Gauges) -> String {
+    let mut scalars = stats_scalars(engine);
+    scalars.extend(gauge_scalars(g));
+    crate::telemetry::prometheus::render(&scalars, &engine.telemetry.hist_snapshots())
 }
 
 /// Serve `engine` on `addr` with default limits until the process
@@ -393,6 +470,9 @@ pub fn serve_listener_cfg(
     // The reactors' `server.io` fault point shares the engine's
     // injector so one MUSTAFAR_FAULTS spec arms the whole stack.
     let faults = engine.fault_injector().clone();
+    // Reactors record per-connection telemetry (write-queue depth)
+    // into the engine's registry.
+    let telemetry = Arc::clone(&engine.telemetry);
     let (engine_tx, engine_rx): (Sender<Inbound>, Receiver<Inbound>) = channel();
 
     let mut handles: Vec<ReactorHandle> = Vec::with_capacity(n);
@@ -406,6 +486,19 @@ pub fn serve_listener_cfg(
         shutdown.register(waker.clone());
         handles.push(ReactorHandle { ctl_tx, waker });
         parts.push((ctl_rx, wake_rx));
+    }
+
+    // Optional plain-HTTP Prometheus scrape listener. Spawned before
+    // the construction-time `engine_tx` drops below: it holds its own
+    // clone and exits (releasing it) when shutdown flips, so the engine
+    // thread still observes channel disconnect at the end of a drain.
+    if let Some(maddr) = cfg.metrics_addr.clone() {
+        let scrape_tx = engine_tx.clone();
+        let scrape_shutdown = shutdown.clone();
+        std::thread::Builder::new()
+            .name("metrics-scrape".into())
+            .spawn(move || metrics_scrape_loop(&maddr, scrape_tx, scrape_shutdown))
+            .map_err(Error::Io)?;
     }
 
     let engine_thread = {
@@ -429,6 +522,7 @@ pub fn serve_listener_cfg(
                 Arc::clone(&next_route),
                 faults.clone(),
                 shutdown.clone(),
+                Arc::clone(&telemetry),
                 handles.clone(),
             )
         })
@@ -455,6 +549,61 @@ fn deliver(reactors: &[ReactorHandle], addr: ConnAddr, c: Completion) {
     let h = &reactors[addr.reactor];
     if h.ctl_tx.send(Control::Done(addr.token, c)).is_ok() {
         h.waker.wake();
+    }
+}
+
+/// Send a pre-rendered reply line (stats/trace/dump/metrics) to the
+/// reactor that owns its connection.
+fn send_line(reactors: &[ReactorHandle], addr: ConnAddr, line: String) {
+    let h = &reactors[addr.reactor];
+    if h.ctl_tx.send(Control::Line(addr.token, line)).is_ok() {
+        h.waker.wake();
+    }
+}
+
+/// Minimal HTTP/1.0 responder for Prometheus scrapes: accept, ask the
+/// engine thread for the exposition text, answer, close. Every request
+/// gets the same body regardless of its path — this listener exists
+/// for scrapers, not routing.
+fn metrics_scrape_loop(addr: &str, engine_tx: Sender<Inbound>, shutdown: ShutdownHandle) {
+    let listener = match TcpListener::bind(addr) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("[server] metrics listener bind {addr} failed: {e}");
+            return;
+        }
+    };
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    crate::info!("mustafar metrics listener on {addr}");
+    while !shutdown.is_shutdown() {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                // Drain whatever request bytes arrived (best-effort —
+                // the response does not depend on the request line).
+                let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+                let mut buf = [0u8; 1024];
+                let _ = stream.read(&mut buf);
+                let (tx, rx) = channel();
+                if engine_tx.send(Inbound::Scrape(tx)).is_err() {
+                    return; // engine gone: nothing left to serve
+                }
+                let body = match rx.recv_timeout(Duration::from_secs(2)) {
+                    Ok(b) => b,
+                    Err(_) => continue,
+                };
+                let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+                let _ = write!(
+                    stream,
+                    "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                     Content-Length: {}\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(50)),
+        }
     }
 }
 
@@ -524,11 +673,22 @@ fn handle_msg(
             }
         }
         Inbound::Stats(addr) => {
-            let line = render_stats_full(engine, gauges);
-            let h = &reactors[addr.reactor];
-            if h.ctl_tx.send(Control::Line(addr.token, line)).is_ok() {
-                h.waker.wake();
-            }
+            send_line(reactors, addr, render_stats_full(engine, gauges));
+        }
+        Inbound::Trace(addr, n) => {
+            send_line(reactors, addr, engine.trace_json(n).to_string());
+        }
+        Inbound::Dump(addr) => {
+            send_line(reactors, addr, engine.dump_json().to_string());
+        }
+        Inbound::MetricsQ(addr) => {
+            engine.telemetry.metrics_queries.inc();
+            let text = render_metrics(engine, gauges);
+            send_line(reactors, addr, Json::obj(vec![("metrics", Json::str(text))]).to_string());
+        }
+        Inbound::Scrape(tx) => {
+            engine.telemetry.metrics_queries.inc();
+            let _ = tx.send(render_metrics(engine, gauges));
         }
         Inbound::Drain => {
             if !*draining {
@@ -553,7 +713,7 @@ fn engine_loop(
 ) {
     let mut waiters: HashMap<u64, ConnAddr> = HashMap::new();
     let mut draining = false;
-    loop {
+    'run: loop {
         if engine.idle() {
             // Blocking receive: an idle server parks here until work
             // (or a stats probe) arrives instead of spinning on
@@ -563,7 +723,7 @@ fn engine_loop(
                     let d = &mut draining;
                     handle_msg(&mut engine, &mut waiters, &reactors, &cfg, &gauges, d, m);
                 }
-                Err(_) => return,
+                Err(_) => break 'run,
             }
         }
         // drain whatever else arrived without blocking decode
@@ -574,7 +734,7 @@ fn engine_loop(
                     handle_msg(&mut engine, &mut waiters, &reactors, &cfg, &gauges, d, m);
                 }
                 Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => break 'run,
             }
         }
         // Cancels and rejections emit completions without a step;
@@ -593,6 +753,14 @@ fn engine_loop(
             engine.fail_inflight(&format!("engine step failed: {e}"));
         }
         route_completions(&mut engine, &mut waiters, &reactors);
+    }
+    // Post-mortem trace: the full retained span ring as
+    // chrome://tracing JSON, written once the server has quiesced.
+    if let Some(path) = &cfg.trace_out {
+        let json = engine.trace_json(0).to_string();
+        if let Err(e) = std::fs::write(path, json) {
+            eprintln!("[server] failed to write trace to {path}: {e}");
+        }
     }
 }
 
@@ -631,6 +799,29 @@ mod tests {
         assert!(!is_stats_request(r#"{"stats": false}"#));
         assert!(!is_stats_request(r#"{"id": 1, "prompt": [], "max_new_tokens": 1}"#));
         assert!(!is_stats_request("not json"));
+    }
+
+    #[test]
+    fn telemetry_query_lines_are_recognized() {
+        // trace: numeric depth, true = all, false/absent = not a query
+        let t = Json::parse(r#"{"trace": 16}"#).unwrap();
+        assert_eq!(trace_request_depth(&t), Some(16));
+        let t = Json::parse(r#"{"trace": true}"#).unwrap();
+        assert_eq!(trace_request_depth(&t), Some(0));
+        let t = Json::parse(r#"{"trace": false}"#).unwrap();
+        assert_eq!(trace_request_depth(&t), None);
+        let req = Json::parse(r#"{"id": 1, "prompt": [], "max_new_tokens": 1}"#).unwrap();
+        assert_eq!(trace_request_depth(&req), None);
+
+        assert!(is_dump_json(&Json::parse(r#"{"dump": true}"#).unwrap()));
+        assert!(!is_dump_json(&Json::parse(r#"{"dump": false}"#).unwrap()));
+        assert!(!is_dump_json(&req));
+
+        assert!(is_metrics_json(&Json::parse(r#"{"metrics": true}"#).unwrap()));
+        assert!(!is_metrics_json(&Json::parse(r#"{"metrics": false}"#).unwrap()));
+        assert!(!is_metrics_json(&req));
+        // the recognizers are mutually exclusive with stats
+        assert!(!is_stats_json(&Json::parse(r#"{"metrics": true}"#).unwrap()));
     }
 
     #[test]

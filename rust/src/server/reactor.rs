@@ -44,13 +44,14 @@ use std::time::{Duration, Instant};
 
 use super::poll::{self, Poller};
 use super::{
-    cancel_target, error_line, is_stats_json, render_completion, request_from_json, ConnAddr,
-    Inbound, ShutdownHandle,
+    cancel_target, error_line, is_dump_json, is_metrics_json, is_stats_json, render_completion,
+    request_from_json, trace_request_depth, ConnAddr, Inbound, ShutdownHandle,
 };
 use crate::config::ServerConfig;
 use crate::coordinator::Completion;
 use crate::faults::Injector;
 use crate::fmt::Json;
+use crate::telemetry::Telemetry;
 
 /// Reserved poll tokens (connection tokens count up from zero and are
 /// never reused, so the top of the space is safe to reserve).
@@ -169,6 +170,9 @@ pub(crate) struct Reactor {
     next_route: Arc<AtomicU64>,
     faults: Injector,
     shutdown: ShutdownHandle,
+    /// Engine-shared telemetry registry (per-connection write-queue
+    /// depth is recorded here as reply lines queue).
+    telemetry: Arc<Telemetry>,
     /// Every reactor's handle (self included) for round-robin dealing.
     handles: Vec<ReactorHandle>,
     /// Reactor 0 owns the listener; dropped when draining begins so
@@ -192,6 +196,7 @@ impl Reactor {
         next_route: Arc<AtomicU64>,
         faults: Injector,
         shutdown: ShutdownHandle,
+        telemetry: Arc<Telemetry>,
         handles: Vec<ReactorHandle>,
     ) -> Reactor {
         Reactor {
@@ -206,6 +211,7 @@ impl Reactor {
             next_route,
             faults,
             shutdown,
+            telemetry,
             handles,
             listener: None,
             rr: idx,
@@ -609,12 +615,16 @@ impl Reactor {
             Err(e) => return self.push_line(tok, &error_line(&e.to_string())),
         };
         if is_stats_json(&parsed) {
-            if let Some(c) = self.conns.get_mut(&tok) {
-                c.pending_stats += 1;
-            }
-            let addr = ConnAddr { reactor: self.idx, token: tok };
-            let _ = self.engine_tx.send(Inbound::Stats(addr));
-            return true;
+            return self.send_query(tok, Inbound::Stats);
+        }
+        if let Some(n) = trace_request_depth(&parsed) {
+            return self.send_query(tok, |addr| Inbound::Trace(addr, n));
+        }
+        if is_dump_json(&parsed) {
+            return self.send_query(tok, Inbound::Dump);
+        }
+        if is_metrics_json(&parsed) {
+            return self.send_query(tok, Inbound::MetricsQ);
         }
         // A cancel message is an object carrying "cancel" and no
         // request body — a request with a stray "cancel" field must
@@ -658,6 +668,19 @@ impl Reactor {
         true
     }
 
+    /// Forward one engine-answered query line (stats, trace, dump,
+    /// metrics) to the engine thread. All four share the
+    /// `pending_stats` accounting so drain-time quiescence waits for
+    /// their replies too.
+    fn send_query<F: FnOnce(ConnAddr) -> Inbound>(&mut self, tok: u64, make: F) -> bool {
+        if let Some(c) = self.conns.get_mut(&tok) {
+            c.pending_stats += 1;
+        }
+        let addr = ConnAddr { reactor: self.idx, token: tok };
+        let _ = self.engine_tx.send(make(addr));
+        true
+    }
+
     /// Queue one reply line, enforcing the write high-water mark, and
     /// opportunistically flush. Returns false if the connection was
     /// torn down.
@@ -670,6 +693,9 @@ impl Reactor {
             } else {
                 c.wbuf.extend_from_slice(line.as_bytes());
                 c.wbuf.push(b'\n');
+                if self.telemetry.on() {
+                    self.telemetry.write_queue_depth.record(c.pending_out() as u64);
+                }
                 false
             }
         };

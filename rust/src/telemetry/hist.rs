@@ -1,0 +1,419 @@
+//! Fixed-bucket log₂ histograms: a plain single-writer variant for
+//! engine-thread metrics and a sharded atomic variant for the
+//! cross-thread registry.
+//!
+//! Values are non-negative integers (microseconds, bytes, counts).
+//! Bucket 0 holds exact zeros; bucket `i ≥ 1` holds `[2^(i-1), 2^i)`.
+//! 48 buckets cover everything up to 2^47 (~140 TB as bytes, ~4.5 years
+//! as microseconds); the last bucket absorbs any larger tail. Recording
+//! is O(1) and allocation-free; quantiles interpolate linearly inside
+//! the containing bucket and clamp to the exact observed min/max, so
+//! p50/p99 are never wrong by more than one power of two and the
+//! extremes are exact.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::util::Summary;
+
+/// Number of log₂ buckets; index 0 is the exact-zero bucket.
+pub const BUCKETS: usize = 48;
+
+/// Bucket index for a value: 0 for 0, else `64 - leading_zeros`,
+/// clamped so the largest bucket absorbs the tail.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (the Prometheus `le` label):
+/// bucket 0 → 0, bucket `i` → 2^i − 1.
+pub fn bucket_le(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Exclusive lower / upper value bounds of bucket `i`, as f64, for
+/// interpolation and midpoint estimates.
+fn bucket_span(i: usize) -> (f64, f64) {
+    if i == 0 {
+        (0.0, 0.0)
+    } else {
+        ((1u64 << (i - 1)) as f64, (1u64 << (i - 1)) as f64 * 2.0)
+    }
+}
+
+/// Single-writer histogram. Lives inside engine-thread state
+/// ([`crate::coordinator::Metrics`]) and as the merged snapshot form of
+/// [`AtomicHist`].
+#[derive(Clone, Debug)]
+pub struct Hist {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    sumsq: f64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Hist { buckets: [0; BUCKETS], count: 0, sum: 0.0, sumsq: 0.0, min: u64::MAX, max: 0 }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_of(v)] += 1;
+        self.count += 1;
+        let vf = v as f64;
+        self.sum += vf;
+        self.sumsq += vf * vf;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact observed minimum (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact observed maximum (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn buckets(&self) -> &[u64; BUCKETS] {
+        &self.buckets
+    }
+
+    /// q-quantile (q ∈ [0, 1]) via cumulative bucket walk with linear
+    /// interpolation inside the containing bucket, clamped to the exact
+    /// observed [min, max]. 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if q <= 0.0 {
+            return self.min as f64;
+        }
+        if q >= 1.0 {
+            return self.max as f64;
+        }
+        let rank = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= rank {
+                let (lo, hi) = bucket_span(i);
+                let frac = (rank - cum) as f64 / c as f64;
+                let est = lo + (hi - lo) * frac;
+                return est.clamp(self.min as f64, self.max as f64);
+            }
+            cum += c;
+        }
+        self.max as f64
+    }
+
+    pub fn merge(&mut self, other: &Hist) {
+        for i in 0..BUCKETS {
+            self.buckets[i] += other.buckets[i];
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sumsq += other.sumsq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Reconstruct a [`Summary`] (exact n/mean/std/min/max, interpolated
+    /// percentiles), with values scaled by `scale` — e.g. record µs,
+    /// summarize ms with `scale = 1e-3`. `None` when empty.
+    pub fn summary(&self, scale: f64) -> Option<Summary> {
+        if self.count == 0 {
+            return None;
+        }
+        let n = self.count as f64;
+        let mean = self.sum / n;
+        let var = (self.sumsq / n - mean * mean).max(0.0);
+        Some(Summary {
+            n: self.count as usize,
+            mean: mean * scale,
+            std: var.sqrt() * scale,
+            min: self.min as f64 * scale,
+            p10: self.quantile(0.10) * scale,
+            p50: self.quantile(0.50) * scale,
+            p90: self.quantile(0.90) * scale,
+            p95: self.quantile(0.95) * scale,
+            max: self.max as f64 * scale,
+        })
+    }
+}
+
+// --- sharded atomic histogram -------------------------------------------
+
+/// Shard count for [`AtomicHist`]. Eight shards keep contention
+/// negligible for the thread counts we run (workers + reactors ≤ ~16)
+/// while a snapshot merge stays trivially cheap.
+const SHARDS: usize = 8;
+
+/// One cache-line-aligned shard so two threads recording into adjacent
+/// shards never false-share.
+#[repr(align(64))]
+#[derive(Debug)]
+struct Shard {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Shard {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Per-thread shard assignment: threads round-robin onto shards on
+/// first record, then stick, so a hot thread always hits the same cache
+/// line and never contends with the other shards.
+fn shard_index() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static IDX: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+    }
+    IDX.with(|c| {
+        let mut i = c.get();
+        if i == usize::MAX {
+            i = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS;
+            c.set(i);
+        }
+        i
+    })
+}
+
+/// Sharded multi-writer histogram: `record` is a handful of relaxed
+/// atomic ops on the caller's own shard (O(1), no allocation, no lock);
+/// `snapshot` merges the shards into a plain [`Hist`] on the reader's
+/// side. A snapshot racing concurrent writers can miss records that are
+/// mid-flight — fine for monitoring, and each shard's own fields are
+/// only ever off by those in-flight records.
+#[derive(Debug)]
+pub struct AtomicHist {
+    shards: Vec<Shard>,
+}
+
+impl Default for AtomicHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHist {
+    pub fn new() -> Self {
+        AtomicHist { shards: (0..SHARDS).map(|_| Shard::new()).collect() }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        let s = &self.shards[shard_index()];
+        s.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        s.count.fetch_add(1, Ordering::Relaxed);
+        s.sum.fetch_add(v, Ordering::Relaxed);
+        s.min.fetch_min(v, Ordering::Relaxed);
+        s.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Merge all shards into a plain [`Hist`]. The sum-of-squares (used
+    /// only for the std in summaries) is reconstructed from bucket
+    /// midpoints since squares of µs-scale sums would overflow a u64
+    /// counter.
+    pub fn snapshot(&self) -> Hist {
+        let mut h = Hist::new();
+        for s in &self.shards {
+            let c = s.count.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            for i in 0..BUCKETS {
+                h.buckets[i] += s.buckets[i].load(Ordering::Relaxed);
+            }
+            h.count += c;
+            h.sum += s.sum.load(Ordering::Relaxed) as f64;
+            h.min = h.min.min(s.min.load(Ordering::Relaxed));
+            h.max = h.max.max(s.max.load(Ordering::Relaxed));
+        }
+        for i in 0..BUCKETS {
+            let (lo, hi) = bucket_span(i);
+            let mid = (lo + hi) * 0.5;
+            h.sumsq += h.buckets[i] as f64 * mid * mid;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_le(0), 0);
+        assert_eq!(bucket_le(1), 1);
+        assert_eq!(bucket_le(2), 3);
+        // every value lands in the bucket whose le covers it
+        for v in [0u64, 1, 2, 3, 5, 100, 1 << 20, (1 << 40) + 7] {
+            assert!(v <= bucket_le(bucket_of(v)), "v={v}");
+        }
+    }
+
+    #[test]
+    fn record_and_quantiles() {
+        let mut h = Hist::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 1000);
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+        // log2 buckets: quantiles are right to within one power of two
+        let p50 = h.quantile(0.5);
+        assert!((250.0..=1000.0).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((500.0..=1000.0).contains(&p99), "p99={p99}");
+        // extremes are exact
+        assert_eq!(h.quantile(0.0), 1.0);
+        assert_eq!(h.quantile(1.0), 1000.0);
+        // monotone in q
+        let qs = [0.0, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0];
+        for w in qs.windows(2) {
+            assert!(h.quantile(w[0]) <= h.quantile(w[1]));
+        }
+    }
+
+    #[test]
+    fn empty_hist_is_inert() {
+        let h = Hist::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert!(h.summary(1.0).is_none());
+    }
+
+    #[test]
+    fn merge_matches_sequential() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut all = Hist::new();
+        for v in [3u64, 9, 17, 100, 0] {
+            a.record(v);
+            all.record(v);
+        }
+        for v in [5u64, 5000, 2] {
+            b.record(v);
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        assert_eq!(a.buckets(), all.buckets());
+        assert!((a.sum() - all.sum()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_reconstructs_exact_moments() {
+        let mut h = Hist::new();
+        for v in [10u64, 20, 30, 40] {
+            h.record(v);
+        }
+        let s = h.summary(1.0).unwrap();
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 25.0).abs() < 1e-9);
+        assert!((s.min - 10.0).abs() < 1e-9);
+        assert!((s.max - 40.0).abs() < 1e-9);
+        // std of {10,20,30,40} (population) = sqrt(125)
+        assert!((s.std - 125f64.sqrt()).abs() < 1e-6);
+        // scale applies everywhere
+        let ms = h.summary(1e-3).unwrap();
+        assert!((ms.mean - 0.025).abs() < 1e-12);
+        assert!((ms.max - 0.040).abs() < 1e-12);
+    }
+
+    #[test]
+    fn atomic_hist_merges_across_threads() {
+        let h = std::sync::Arc::new(AtomicHist::new());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record(t * 1000 + i);
+                }
+            }));
+        }
+        for jh in handles {
+            jh.join().unwrap();
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 4000);
+        assert_eq!(snap.min(), 0);
+        assert_eq!(snap.max(), 3999);
+        assert_eq!(snap.buckets().iter().sum::<u64>(), 4000);
+    }
+}

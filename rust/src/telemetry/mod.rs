@@ -1,0 +1,229 @@
+//! Telemetry: the observability layer for the serving stack.
+//!
+//! Four pieces, each in its own submodule:
+//!
+//! - [`hist`] — fixed-bucket log₂ histograms: a plain single-writer
+//!   form for engine-thread metrics and a sharded atomic form
+//!   ([`AtomicHist`]) whose `record` is O(1), allocation-free, and
+//!   lock-free, merged across worker/reactor threads only on read.
+//! - [`spans`] — per-request trace spans (submit → queued → prefill →
+//!   decode → finish) kept in a bounded ring and rendered as
+//!   chrome://tracing JSON for `{"trace": n}` / `--trace-out`.
+//! - [`recorder`] — the flight recorder: a deterministic bounded ring
+//!   of lifecycle/fault/pressure events, auto-dumped on the first
+//!   isolated panic or chaos-fault fire and on demand via `{"dump"}`.
+//! - [`prometheus`] — text exposition of the whole registry for the
+//!   `{"metrics"}` line and the optional `--metrics-addr` listener.
+//!
+//! The [`Telemetry`] registry itself is the shared, thread-safe handle
+//! (`Arc<Telemetry>`): the engine, worker pool, kv pool, and reactors
+//! all record into it. When built disabled (`--no-telemetry`), every
+//! hot-path site skips recording behind one branch on
+//! [`Telemetry::on`], which is how the overhead bench measures the
+//! instrumentation's cost honestly.
+
+pub mod hist;
+pub mod prometheus;
+pub mod recorder;
+pub mod spans;
+
+pub use hist::{AtomicHist, Hist};
+pub use recorder::{Event, FlightRecorder};
+pub use spans::{Span, SpanRing};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonically increasing counter (relaxed atomics; exactness across
+/// a concurrent read is not required for monitoring).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The shared metrics registry. Histogram fields are recorded straight
+/// into from any thread; call sites gate on [`Telemetry::on`] so a
+/// disabled registry costs one predictable branch.
+#[derive(Debug)]
+pub struct Telemetry {
+    enabled: bool,
+    /// Engine-creation epoch: trace-span timestamps are µs since this.
+    pub epoch: Instant,
+    /// Time to first token (queue wait + prefill), µs.
+    pub ttft_us: AtomicHist,
+    /// Decode-round wall time ÷ 1 per token landed that round, µs.
+    pub inter_token_us: AtomicHist,
+    /// Submit → admission, µs.
+    pub queue_wait_us: AtomicHist,
+    /// Prefill wall time per admitted request, µs.
+    pub prefill_us: AtomicHist,
+    /// One full decode round (batched forward + retire), µs.
+    pub decode_round_us: AtomicHist,
+    /// One pressure-ladder re-prune (prune + re-compress), µs.
+    pub prune_us: AtomicHist,
+    /// Live pool bytes sampled once per engine step.
+    pub pool_occupancy_bytes: AtomicHist,
+    /// Reactor per-connection pending-write depth sampled per reply.
+    pub write_queue_depth: AtomicHist,
+    /// Worker-pool job wall time, µs (recorded on worker threads —
+    /// the cross-thread shard-merge path).
+    pub worker_task_us: AtomicHist,
+    /// Observability-surface traffic.
+    pub trace_queries: Counter,
+    pub dump_queries: Counter,
+    pub metrics_queries: Counter,
+}
+
+impl Telemetry {
+    pub fn new(enabled: bool) -> Self {
+        Telemetry {
+            enabled,
+            epoch: Instant::now(),
+            ttft_us: AtomicHist::new(),
+            inter_token_us: AtomicHist::new(),
+            queue_wait_us: AtomicHist::new(),
+            prefill_us: AtomicHist::new(),
+            decode_round_us: AtomicHist::new(),
+            prune_us: AtomicHist::new(),
+            pool_occupancy_bytes: AtomicHist::new(),
+            write_queue_depth: AtomicHist::new(),
+            worker_task_us: AtomicHist::new(),
+            trace_queries: Counter::default(),
+            dump_queries: Counter::default(),
+            metrics_queries: Counter::default(),
+        }
+    }
+
+    /// Whether recording is on. Hot paths check this once and skip all
+    /// timestamping/recording work when it is off.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.enabled
+    }
+
+    /// µs since the engine epoch (span timestamps).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Snapshots of every histogram, in stable exposition order.
+    pub fn hist_snapshots(&self) -> Vec<(&'static str, Hist)> {
+        vec![
+            ("ttft_us", self.ttft_us.snapshot()),
+            ("inter_token_us", self.inter_token_us.snapshot()),
+            ("queue_wait_us", self.queue_wait_us.snapshot()),
+            ("prefill_us", self.prefill_us.snapshot()),
+            ("decode_round_us", self.decode_round_us.snapshot()),
+            ("prune_us", self.prune_us.snapshot()),
+            ("pool_occupancy_bytes", self.pool_occupancy_bytes.snapshot()),
+            ("write_queue_depth", self.write_queue_depth.snapshot()),
+            ("worker_task_us", self.worker_task_us.snapshot()),
+        ]
+    }
+
+    /// The p50/p99/p999 latency quantiles `{"stats"}` reports, in ms.
+    /// Always present (0.0 before any sample) so dashboards and the
+    /// exposition-containment test see a stable key set.
+    pub fn quantile_fields(&self) -> Vec<(&'static str, f64)> {
+        let mut out = Vec::with_capacity(9);
+        for (name_p50, name_p99, name_p999, h) in [
+            ("ttft_ms_p50", "ttft_ms_p99", "ttft_ms_p999", &self.ttft_us),
+            (
+                "inter_token_ms_p50",
+                "inter_token_ms_p99",
+                "inter_token_ms_p999",
+                &self.inter_token_us,
+            ),
+            (
+                "queue_wait_ms_p50",
+                "queue_wait_ms_p99",
+                "queue_wait_ms_p999",
+                &self.queue_wait_us,
+            ),
+        ] {
+            let snap = h.snapshot();
+            out.push((name_p50, snap.quantile(0.50) * 1e-3));
+            out.push((name_p99, snap.quantile(0.99) * 1e-3));
+            out.push((name_p999, snap.quantile(0.999) * 1e-3));
+        }
+        out
+    }
+}
+
+/// Duration → whole microseconds (saturating; 2^64 µs ≫ any run).
+#[inline]
+pub fn us(d: std::time::Duration) -> u64 {
+    d.as_micros() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_is_just_a_flag() {
+        let t = Telemetry::new(false);
+        assert!(!t.on());
+        // recording is the call site's choice; the registry still works
+        t.ttft_us.record(5);
+        assert_eq!(t.ttft_us.snapshot().count(), 1);
+    }
+
+    #[test]
+    fn quantile_fields_cover_the_three_latency_families() {
+        let t = Telemetry::new(true);
+        let names: Vec<&str> = t.quantile_fields().iter().map(|&(n, _)| n).collect();
+        for fam in ["ttft_ms", "inter_token_ms", "queue_wait_ms"] {
+            for q in ["p50", "p99", "p999"] {
+                assert!(names.contains(&format!("{fam}_{q}").as_str()), "{fam}_{q}");
+            }
+        }
+        // empty hists read 0.0, not NaN
+        assert!(t.quantile_fields().iter().all(|&(_, v)| v == 0.0));
+        // µs → ms scaling
+        for _ in 0..100 {
+            t.ttft_us.record(4000);
+        }
+        let q: Vec<(&str, f64)> = t.quantile_fields();
+        let p50 = q.iter().find(|&&(n, _)| n == "ttft_ms_p50").unwrap().1;
+        assert!((p50 - 4.0).abs() < 0.01, "p50={p50}");
+    }
+
+    #[test]
+    fn counters_and_gauges() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+}

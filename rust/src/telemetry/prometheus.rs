@@ -1,0 +1,105 @@
+//! Prometheus text-format exposition (version 0.0.4) of the telemetry
+//! registry plus the engine's scalar stats.
+//!
+//! Scalars render as single `mustafar_<name> <value>` samples — the
+//! same name/value pairs the `{"stats"}` line reports, so the two
+//! surfaces cannot drift (server_e2e asserts the containment). Each
+//! histogram renders the classic `_bucket{le="..."}` cumulative series
+//! plus `_sum`/`_count`, and — because log₂ buckets make client-side
+//! quantile math lossy — explicit `_p50`/`_p99`/`_p999` gauge samples
+//! computed server-side from the exact same buckets.
+
+use std::fmt::Write as _;
+
+use super::hist::{bucket_le, Hist, BUCKETS};
+
+/// Every metric name is prefixed with this.
+pub const PREFIX: &str = "mustafar_";
+
+/// Format a sample value the way Prometheus expects: integers without
+/// a decimal point, everything else as shortest-roundtrip f64.
+fn fmt_num(out: &mut String, x: f64) {
+    if x.fract() == 0.0 && x.abs() < 9.0e15 {
+        let _ = write!(out, "{}", x as i64);
+    } else {
+        let _ = write!(out, "{x}");
+    }
+}
+
+/// Render scalars (counters/gauges) and histograms into one exposition
+/// body. Iteration order is the caller's, so output is deterministic.
+pub fn render(scalars: &[(&str, f64)], hists: &[(&str, Hist)]) -> String {
+    let mut out = String::new();
+    for (name, v) in scalars {
+        let _ = write!(out, "{PREFIX}{name} ");
+        fmt_num(&mut out, *v);
+        out.push('\n');
+    }
+    for (name, h) in hists {
+        let _ = writeln!(out, "# TYPE {PREFIX}{name} histogram");
+        // collapse trailing empty buckets: emit up to the last nonempty
+        // bucket, then +Inf
+        let last = (0..BUCKETS).rev().find(|&i| h.buckets()[i] > 0);
+        let mut cum = 0u64;
+        if let Some(last) = last {
+            for i in 0..=last {
+                cum += h.buckets()[i];
+                let _ = writeln!(out, "{PREFIX}{name}_bucket{{le=\"{}\"}} {cum}", bucket_le(i));
+            }
+        }
+        let _ = writeln!(out, "{PREFIX}{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+        let _ = write!(out, "{PREFIX}{name}_sum ");
+        fmt_num(&mut out, h.sum());
+        out.push('\n');
+        let _ = writeln!(out, "{PREFIX}{name}_count {}", h.count());
+        for (suffix, q) in [("p50", 0.50), ("p99", 0.99), ("p999", 0.999)] {
+            let _ = write!(out, "{PREFIX}{name}_{suffix} ");
+            fmt_num(&mut out, h.quantile(q));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_render_one_line_each() {
+        let text = render(&[("completions", 3.0), ("tokens_per_sec", 12.5)], &[]);
+        assert!(text.contains("mustafar_completions 3\n"));
+        assert!(text.contains("mustafar_tokens_per_sec 12.5\n"));
+    }
+
+    #[test]
+    fn histogram_series_is_cumulative_and_closed() {
+        let mut h = Hist::new();
+        for v in [1u64, 2, 3, 100] {
+            h.record(v);
+        }
+        let text = render(&[], &[("ttft_us", h)]);
+        assert!(text.contains("# TYPE mustafar_ttft_us histogram"));
+        assert!(text.contains("mustafar_ttft_us_bucket{le=\"+Inf\"} 4\n"));
+        assert!(text.contains("mustafar_ttft_us_count 4\n"));
+        assert!(text.contains("mustafar_ttft_us_sum 106\n"));
+        assert!(text.contains("mustafar_ttft_us_p50 "));
+        assert!(text.contains("mustafar_ttft_us_p999 "));
+        // cumulative counts never decrease along the le series
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{le=")) {
+            let n: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(n >= prev, "non-monotone bucket series: {line}");
+            prev = n;
+        }
+        assert_eq!(prev, 4);
+    }
+
+    #[test]
+    fn empty_histogram_still_renders_closed_series() {
+        let text = render(&[], &[("queue_wait_us", Hist::new())]);
+        assert!(text.contains("mustafar_queue_wait_us_bucket{le=\"+Inf\"} 0\n"));
+        assert!(text.contains("mustafar_queue_wait_us_count 0\n"));
+        assert!(text.contains("mustafar_queue_wait_us_sum 0\n"));
+    }
+}

@@ -1,0 +1,172 @@
+//! Flight recorder: a bounded ring of recent lifecycle, fault, and
+//! pressure-ladder events, owned by the engine thread.
+//!
+//! Two design rules keep it cheap and reproducible:
+//!
+//! - **Lock-free by ownership.** Events are recorded only on the engine
+//!   thread (worker-side faults are folded in at step end by diffing
+//!   the injector's tallies), so there is no lock at all — "lock-cheap"
+//!   by construction.
+//! - **Deterministic by content.** Events carry a monotone sequence
+//!   number, a kind, and two integer payloads — never a wall-clock
+//!   timestamp or duration. Two runs of the same pinned-seed chaos
+//!   trace therefore dump byte-identical event sequences, which the
+//!   telemetry test suite asserts.
+//!
+//! The ring dumps automatically (once, to stderr) the first time a
+//! panic is isolated or a chaos fault fires, and on demand via the
+//! server's `{"dump"}` line.
+
+use std::collections::VecDeque;
+
+use crate::fmt::Json;
+
+/// One recorded event. `a`/`b` are kind-specific integer payloads
+/// (typically request id / token count / byte count).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub seq: u64,
+    pub kind: String,
+    pub a: u64,
+    pub b: u64,
+}
+
+#[derive(Debug)]
+pub struct FlightRecorder {
+    ring: VecDeque<Event>,
+    cap: usize,
+    next_seq: u64,
+    dropped: u64,
+    /// Auto-dump latch: the first trigger dumps, later ones only count.
+    auto_dumped: bool,
+    suppressed_dumps: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        FlightRecorder {
+            ring: VecDeque::with_capacity(cap.min(1024)),
+            cap,
+            next_seq: 0,
+            dropped: 0,
+            auto_dumped: false,
+            suppressed_dumps: 0,
+        }
+    }
+
+    /// Record an event with a static kind (the common case).
+    pub fn note(&mut self, kind: &str, a: u64, b: u64) {
+        self.note_owned(kind.to_string(), a, b);
+    }
+
+    /// Record an event with an already-built kind string (fault names).
+    pub fn note_owned(&mut self, kind: String, a: u64, b: u64) {
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(Event { seq: self.next_seq, kind, a, b });
+        self.next_seq += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retained events, oldest first (for tests and determinism checks).
+    pub fn events(&self) -> impl Iterator<Item = &Event> {
+        self.ring.iter()
+    }
+
+    /// Render the retained ring as one JSON object.
+    pub fn dump_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .ring
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("seq", Json::num(e.seq as f64)),
+                    ("kind", Json::str(e.kind.as_str())),
+                    ("a", Json::num(e.a as f64)),
+                    ("b", Json::num(e.b as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("events", Json::arr(events)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("suppressed_dumps", Json::num(self.suppressed_dumps as f64)),
+        ])
+    }
+
+    /// Auto-dump trigger: the first call writes the whole ring to
+    /// stderr tagged with `reason`; every later call is only counted
+    /// (`suppressed_dumps`), so a fault storm cannot flood the log.
+    pub fn trigger_auto_dump(&mut self, reason: &str) {
+        if self.auto_dumped {
+            self.suppressed_dumps += 1;
+            return;
+        }
+        self.auto_dumped = true;
+        eprintln!("mustafar flight-recorder auto-dump ({reason}): {}", self.dump_json().to_string());
+    }
+
+    /// Whether the auto-dump latch has fired (for tests).
+    pub fn auto_dumped(&self) -> bool {
+        self.auto_dumped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_bounds_and_seq_monotone() {
+        let mut r = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            r.note("finish", i, 0);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        let seqs: Vec<u64> = r.events().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn dump_json_parses_back() {
+        let mut r = FlightRecorder::new(8);
+        r.note("admit", 3, 128);
+        r.note_owned("fault:kvpool.alloc".to_string(), 1, 0);
+        let line = r.dump_json().to_string();
+        let v = Json::parse(&line).unwrap();
+        let ev = v.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].get("kind").unwrap().as_str().unwrap(), "admit");
+        assert_eq!(ev[0].get("a").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(ev[1].get("kind").unwrap().as_str().unwrap(), "fault:kvpool.alloc");
+        assert_eq!(v.get("dropped").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn auto_dump_latches_once() {
+        let mut r = FlightRecorder::new(8);
+        r.note("decode_panic", 1, 0);
+        assert!(!r.auto_dumped());
+        r.trigger_auto_dump("panic isolated");
+        assert!(r.auto_dumped());
+        r.trigger_auto_dump("fault fired");
+        r.trigger_auto_dump("fault fired");
+        let v = r.dump_json();
+        assert_eq!(v.get("suppressed_dumps").unwrap().as_usize().unwrap(), 2);
+    }
+}

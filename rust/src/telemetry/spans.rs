@@ -1,0 +1,148 @@
+//! Per-request trace spans, retained in a bounded ring and emitted as
+//! chrome://tracing-compatible JSON (load the output of `{"trace": n}`
+//! or `--trace-out` straight into `chrome://tracing` / Perfetto).
+//!
+//! Spans use the "X" (complete) event phase: one record per span with a
+//! start timestamp and duration, both in microseconds relative to the
+//! engine-creation epoch. The `pid` is always 1 (one engine); the `tid`
+//! lane is the request's client route, so every request from one
+//! connection renders on one row and the engine-wide decode-round spans
+//! render on row 0.
+
+use std::collections::VecDeque;
+
+use crate::fmt::Json;
+
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub name: &'static str,
+    /// chrome://tracing thread lane (we use the client route; 0 for
+    /// engine-wide spans).
+    pub tid: u64,
+    /// Start, µs since the engine-creation epoch.
+    pub ts_us: u64,
+    pub dur_us: u64,
+    /// Extra key/values rendered into the event's `args` object.
+    pub args: Vec<(&'static str, u64)>,
+}
+
+/// Bounded ring of recent spans. Owned by the engine thread (recording
+/// is single-writer and lock-free); readers receive rendered JSON.
+#[derive(Debug)]
+pub struct SpanRing {
+    ring: VecDeque<Span>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl SpanRing {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        SpanRing { ring: VecDeque::with_capacity(cap.min(1024)), cap, dropped: 0 }
+    }
+
+    pub fn push(&mut self, s: Span) {
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Spans evicted by the ring since startup.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// chrome://tracing JSON object holding the most recent `n` spans
+    /// (`n == 0` → everything retained).
+    pub fn chrome_json(&self, n: usize) -> Json {
+        let take = if n == 0 { self.ring.len() } else { n.min(self.ring.len()) };
+        let skip = self.ring.len() - take;
+        let events: Vec<Json> = self.ring.iter().skip(skip).map(span_json).collect();
+        Json::obj(vec![
+            ("traceEvents", Json::arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            ("droppedSpans", Json::num(self.dropped as f64)),
+        ])
+    }
+}
+
+fn span_json(s: &Span) -> Json {
+    let args: Vec<(&str, Json)> =
+        s.args.iter().map(|&(k, v)| (k, Json::num(v as f64))).collect();
+    Json::obj(vec![
+        ("name", Json::str(s.name)),
+        ("ph", Json::str("X")),
+        ("ts", Json::num(s.ts_us as f64)),
+        ("dur", Json::num(s.dur_us as f64)),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(s.tid as f64)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_bounds_and_drops() {
+        let mut r = SpanRing::new(3);
+        for i in 0..5u64 {
+            r.push(Span { name: "s", tid: 1, ts_us: i, dur_us: 1, args: vec![] });
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let j = r.chrome_json(0);
+        let ev = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(ev.len(), 3);
+        // oldest retained span is ts=2
+        assert_eq!(ev[0].get("ts").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn chrome_json_schema() {
+        let mut r = SpanRing::new(8);
+        r.push(Span {
+            name: "request",
+            tid: 7,
+            ts_us: 100,
+            dur_us: 50,
+            args: vec![("id", 3), ("tokens", 8)],
+        });
+        let line = r.chrome_json(1).to_string();
+        let v = Json::parse(&line).unwrap();
+        let ev = &v.get("traceEvents").unwrap().as_arr().unwrap()[0];
+        assert_eq!(ev.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(ev.get("name").unwrap().as_str().unwrap(), "request");
+        assert_eq!(ev.get("pid").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(ev.get("tid").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(ev.get("ts").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(ev.get("dur").unwrap().as_usize().unwrap(), 50);
+        assert_eq!(ev.get("args").unwrap().get("id").unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn trace_n_takes_most_recent() {
+        let mut r = SpanRing::new(16);
+        for i in 0..10u64 {
+            r.push(Span { name: "s", tid: 0, ts_us: i * 10, dur_us: 1, args: vec![] });
+        }
+        let ev_all = r.chrome_json(0);
+        assert_eq!(ev_all.get("traceEvents").unwrap().as_arr().unwrap().len(), 10);
+        let ev2 = r.chrome_json(2);
+        let ev2 = ev2.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(ev2.len(), 2);
+        assert_eq!(ev2[0].get("ts").unwrap().as_f64().unwrap(), 80.0);
+        assert_eq!(ev2[1].get("ts").unwrap().as_f64().unwrap(), 90.0);
+    }
+}

@@ -595,6 +595,117 @@ fn graceful_drain_finishes_inflight_sheds_late_and_returns() {
 }
 
 #[test]
+fn metrics_trace_and_dump_lines_round_trip() {
+    let addr = spawn_server();
+    let mut stream = connect(addr);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // real work first so latency histograms/spans have samples
+    for id in [1u64, 2] {
+        writeln!(stream, "{}", req_line(id, 32, 4)).unwrap();
+    }
+    for _ in 0..2 {
+        let _ = read_json(&mut reader);
+    }
+
+    // the stats line grew the quantile surface
+    writeln!(stream, "{{\"stats\": true}}").unwrap();
+    let stats = read_json(&mut reader);
+    for key in ["ttft_ms", "inter_token_ms", "queue_wait_ms"] {
+        let p50 = stats.get(&format!("{key}_p50")).unwrap().as_f64().unwrap();
+        let p99 = stats.get(&format!("{key}_p99")).unwrap().as_f64().unwrap();
+        let p999 = stats.get(&format!("{key}_p999")).unwrap().as_f64().unwrap();
+        assert!(p50 <= p99 && p99 <= p999, "{key} quantiles not monotone");
+    }
+    assert!(stats.get("ttft_ms_p50").unwrap().as_f64().unwrap() > 0.0);
+    assert!(stats.get("queue_peak_pending").unwrap().as_usize().unwrap() >= 1);
+
+    // metrics-scrape smoke: every scalar the stats line reports must
+    // appear in the Prometheus exposition under the mustafar_ prefix
+    // (both render from one stats_scalars() list — this pins it)
+    writeln!(stream, "{{\"metrics\": true}}").unwrap();
+    let v = read_json(&mut reader);
+    let text = v.get("metrics").unwrap().as_str().unwrap().to_string();
+    for (key, _) in stats.as_obj().unwrap() {
+        assert!(
+            text.contains(&format!("mustafar_{key} ")),
+            "stats key {key} missing from the metrics exposition"
+        );
+    }
+    assert!(text.contains("mustafar_ttft_us_bucket{le=\"+Inf\"}"), "histograms missing");
+
+    // trace line: valid chrome://tracing JSON, bounded by the argument
+    writeln!(stream, "{{\"trace\": 4}}").unwrap();
+    let v = read_json(&mut reader);
+    let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty() && events.len() <= 4, "got {} events", events.len());
+    assert_eq!(events[0].get("ph").unwrap().as_str().unwrap(), "X");
+
+    // dump line: the flight recorder saw the finishes
+    writeln!(stream, "{{\"dump\": true}}").unwrap();
+    let v = read_json(&mut reader);
+    let kinds: Vec<String> = v
+        .get("events")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|e| e.get("kind").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert!(kinds.iter().any(|k| k == "finish"), "no finish events in {kinds:?}");
+
+    // the three telemetry queries count themselves
+    writeln!(stream, "{{\"stats\": true}}").unwrap();
+    let stats = read_json(&mut reader);
+    assert_eq!(stats.get("trace_queries").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(stats.get("dump_queries").unwrap().as_usize().unwrap(), 1);
+    assert!(stats.get("metrics_queries").unwrap().as_usize().unwrap() >= 1);
+}
+
+#[test]
+fn metrics_addr_listener_serves_http_scrapes() {
+    let mut cfg = ServerConfig::default();
+    let scrape_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let scrape_addr = scrape_listener.local_addr().unwrap();
+    drop(scrape_listener); // rebind inside the server (racy but local-only)
+    cfg.metrics_addr = Some(scrape_addr.to_string());
+    let (addr, shutdown, done_rx) = spawn_server_cfg(tiny_engine(), cfg);
+
+    let mut stream = connect(addr);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, "{}", req_line(1, 32, 3)).unwrap();
+    let _ = read_json(&mut reader);
+
+    // plain HTTP GET against the scrape port
+    let mut scrape = None;
+    for i in 0.. {
+        match TcpStream::connect(scrape_addr) {
+            Ok(s) => {
+                scrape = Some(s);
+                break;
+            }
+            Err(_) if i < 100 => std::thread::sleep(Duration::from_millis(20)),
+            Err(e) => panic!("scrape listener never came up: {e}"),
+        }
+    }
+    let mut scrape = scrape.unwrap();
+    scrape.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    scrape.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut body = String::new();
+    use std::io::Read as _;
+    scrape.read_to_string(&mut body).unwrap();
+    assert!(body.starts_with("HTTP/1.0 200 OK"), "bad scrape response: {body:.80}");
+    assert!(body.contains("text/plain; version=0.0.4"));
+    assert!(body.contains("mustafar_completions 1"));
+    assert!(body.contains("mustafar_ttft_us_count 1"));
+    drop(scrape);
+
+    shutdown.shutdown();
+    drop(stream);
+    drop(reader);
+    done_rx.recv_timeout(Duration::from_secs(20)).expect("server failed to quiesce");
+}
+
+#[test]
 fn connection_cap_sheds_excess_with_retry_hint() {
     let mut cfg = ServerConfig::default();
     cfg.max_conns = 2;

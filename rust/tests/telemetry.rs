@@ -1,0 +1,288 @@
+// Shared lint policy with the library crate (rust/src/lib.rs): these
+// allows cover numeric-harness idioms (indexed loops, config structs
+// mutated after Default::default(), positional format args).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::field_reassign_with_default,
+    clippy::uninlined_format_args,
+    clippy::manual_div_ceil,
+    clippy::type_complexity
+)]
+
+//! Telemetry acceptance: the histogram registry fills from a real run,
+//! `{"trace"}` output is schema-valid chrome://tracing JSON with
+//! monotone span nesting, the Prometheus exposition parses back, and —
+//! the determinism contract — two pinned-seed chaos runs dump
+//! byte-identical flight-recorder sequences.
+
+use mustafar::config::{Backend, EngineConfig, ModelConfig, SparsityConfig};
+use mustafar::coordinator::{estimate_seq_bytes, Engine, Request};
+use mustafar::faults::Injector;
+use mustafar::fmt::Json;
+use mustafar::kvcache::KvPolicy;
+use mustafar::model::{NativeModel, Weights};
+use mustafar::telemetry::prometheus;
+use mustafar::workload::trace::chaos_trace;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        head_dim: 32,
+        ff: 128,
+        vocab: 512,
+        rope_theta: 10000.0,
+        max_seq: 512,
+        norm_eps: 1e-5,
+    }
+}
+
+fn tiny_engine(telemetry: bool) -> Engine {
+    let cfg = tiny_cfg();
+    let mut ec = EngineConfig::default();
+    ec.backend = Backend::NativeSparse;
+    ec.sparsity = SparsityConfig::mustafar(0.5, 0.5);
+    ec.max_batch = 4;
+    ec.max_new_tokens = 64;
+    ec.telemetry = telemetry;
+    Engine::new_native(NativeModel::new(Weights::random_for_tests(cfg, 7)), ec)
+}
+
+fn small_requests(n: u64) -> Vec<Request> {
+    (0..n)
+        .map(|id| {
+            let prompt: Vec<u16> =
+                (0..24).map(|j| ((id as usize * 37 + j) % 400 + 16) as u16).collect();
+            Request::new(id, prompt, 6)
+        })
+        .collect()
+}
+
+#[test]
+fn histograms_fill_from_a_live_run_and_quantiles_are_monotone() {
+    let mut e = tiny_engine(true);
+    let n = 4u64;
+    let out = e.run_trace(small_requests(n)).unwrap();
+    assert_eq!(out.len(), n as usize);
+
+    let hists: std::collections::BTreeMap<&str, _> =
+        e.telemetry.hist_snapshots().into_iter().collect();
+    // one TTFT / queue-wait / prefill sample per request
+    for key in ["ttft_us", "queue_wait_us", "prefill_us"] {
+        assert_eq!(hists[key].count(), n, "{key} should have one sample per request");
+    }
+    // 6 tokens each: the first is TTFT, the rest are inter-token gaps
+    assert!(hists["inter_token_us"].count() >= n * 4, "inter-token gaps under-recorded");
+    assert!(hists["decode_round_us"].count() >= 6, "decode rounds under-recorded");
+    // prune_us times the pressure ladder's re-prune; a clean unpressured
+    // run records nothing there, so only assert it exists in the registry
+    assert!(hists.contains_key("prune_us"));
+    assert!(hists["pool_occupancy_bytes"].count() > 0);
+    assert!(hists["worker_task_us"].count() > 0, "decode workers must be timed");
+    assert!(hists["ttft_us"].max() > 0, "TTFT of a real prefill cannot be zero µs");
+
+    // quantile surface: present for the three request-latency axes,
+    // ms-scaled, and monotone in q
+    let q: std::collections::BTreeMap<&str, f64> =
+        e.telemetry.quantile_fields().into_iter().collect();
+    for axis in ["ttft_ms", "inter_token_ms", "queue_wait_ms"] {
+        let (p50, p99, p999) = (
+            q[format!("{axis}_p50").as_str()],
+            q[format!("{axis}_p99").as_str()],
+            q[format!("{axis}_p999").as_str()],
+        );
+        assert!(p50 <= p99 && p99 <= p999, "{axis}: {p50} / {p99} / {p999} not monotone");
+    }
+    assert!(q["ttft_ms_p50"] > 0.0);
+}
+
+#[test]
+fn disabled_telemetry_records_no_histograms_but_recorder_stays_on() {
+    let mut e = tiny_engine(false);
+    e.run_trace(small_requests(3)).unwrap();
+    assert!(!e.telemetry.on());
+    for (name, h) in e.telemetry.hist_snapshots() {
+        assert!(h.is_empty(), "{name} recorded despite --no-telemetry");
+    }
+    assert!(e.spans().is_empty(), "spans recorded despite --no-telemetry");
+    // the flight recorder is a debugging aid, not a metric: it stays on
+    assert!(!e.recorder().is_empty(), "flight recorder must survive --no-telemetry");
+    for q in e.telemetry.quantile_fields() {
+        assert_eq!(q.1, 0.0, "{} nonzero on an empty histogram", q.0);
+    }
+}
+
+/// `{"trace": n}` output loads in chrome://tracing: every event is an
+/// "X" complete event with pid/tid/ts/dur, and each request's child
+/// spans (`queued` → `prefill` → `decode`) tile its `request` span
+/// exactly, in order, with no overlap and no excursion.
+#[test]
+fn trace_json_is_chrome_schema_with_monotone_span_nesting() {
+    let mut e = tiny_engine(true);
+    let n = 4u64;
+    e.run_trace(small_requests(n)).unwrap();
+
+    let line = e.trace_json(0).to_string();
+    let v = Json::parse(&line).expect("trace output must be valid JSON");
+    assert_eq!(v.get("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+    assert_eq!(v.get("droppedSpans").unwrap().as_usize().unwrap(), 0);
+    let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+    // 4 lifecycle spans per request, plus engine-wide decode_round spans
+    assert!(events.len() >= n as usize * 4, "only {} trace events", events.len());
+
+    // (tid, id) -> name -> (ts, end)
+    let mut per_req: std::collections::BTreeMap<(u64, u64), Vec<(String, u64, u64)>> =
+        std::collections::BTreeMap::new();
+    let mut decode_rounds = 0usize;
+    for ev in events {
+        assert_eq!(ev.get("ph").unwrap().as_str().unwrap(), "X", "only complete events");
+        assert_eq!(ev.get("pid").unwrap().as_usize().unwrap(), 1);
+        let name = ev.get("name").unwrap().as_str().unwrap().to_string();
+        let tid = ev.get("tid").unwrap().as_usize().unwrap() as u64;
+        let ts = ev.get("ts").unwrap().as_usize().unwrap() as u64;
+        let dur = ev.get("dur").unwrap().as_usize().unwrap() as u64;
+        if name == "decode_round" {
+            assert_eq!(tid, 0, "engine-wide spans render on lane 0");
+            decode_rounds += 1;
+            continue;
+        }
+        let id = ev.get("args").unwrap().get("id").unwrap().as_usize().unwrap() as u64;
+        per_req.entry((tid, id)).or_default().push((name, ts, ts + dur));
+    }
+    assert!(decode_rounds >= 6, "decode_round spans missing from the trace");
+    assert_eq!(per_req.len(), n as usize, "every request gets a span group");
+
+    for ((tid, id), spans) in per_req {
+        let get = |want: &str| {
+            spans
+                .iter()
+                .find(|(name, _, _)| name == want)
+                .unwrap_or_else(|| panic!("request {id} (lane {tid}) missing {want} span"))
+        };
+        let &(_, r0, r1) = get("request");
+        let &(_, q0, q1) = get("queued");
+        let &(_, p0, p1) = get("prefill");
+        let &(_, d0, d1) = get("decode");
+        assert_eq!(q0, r0, "request {id}: queued must start the request span");
+        assert_eq!(p0, q1, "request {id}: prefill must start where queued ends");
+        assert_eq!(d0, p1, "request {id}: decode must start where prefill ends");
+        assert_eq!(d1, r1, "request {id}: decode must end the request span");
+        for (name, s0, s1) in &spans {
+            assert!(
+                *s0 >= r0 && *s1 <= r1,
+                "request {id}: {name} span [{s0}, {s1}] escapes parent [{r0}, {r1}]"
+            );
+        }
+    }
+}
+
+/// Minimal parse-back of the Prometheus text exposition built from live
+/// engine data: every line is a comment or `name value`, histogram
+/// bucket series are cumulative and agree with `_count`, and explicit
+/// quantile lines are present.
+#[test]
+fn prometheus_exposition_from_live_run_parses_back() {
+    let mut e = tiny_engine(true);
+    e.run_trace(small_requests(3)).unwrap();
+    let scalars = vec![("completions", 3.0), ("queue_peak_pending", 3.0)];
+    let text = prometheus::render(&scalars, &e.telemetry.hist_snapshots());
+
+    let mut values: std::collections::BTreeMap<String, f64> = std::collections::BTreeMap::new();
+    let mut buckets: std::collections::BTreeMap<String, Vec<(f64, f64)>> = Default::default();
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line {line:?}"));
+        let value: f64 =
+            value.parse().unwrap_or_else(|_| panic!("unparseable value in {line:?}"));
+        assert!(name.starts_with("mustafar_"), "unprefixed metric line {line:?}");
+        if let Some((base, rest)) = name.split_once("_bucket{le=\"") {
+            let le = rest.trim_end_matches("\"}");
+            let le = if le == "+Inf" { f64::INFINITY } else { le.parse().unwrap() };
+            buckets.entry(base.to_string()).or_default().push((le, value));
+        } else {
+            values.insert(name.to_string(), value);
+        }
+    }
+
+    assert_eq!(values["mustafar_completions"], 3.0);
+    assert_eq!(values["mustafar_queue_peak_pending"], 3.0);
+    for (base, series) in &buckets {
+        // le thresholds strictly increasing, counts cumulative
+        for w in series.windows(2) {
+            assert!(w[0].0 < w[1].0, "{base}: le thresholds out of order");
+            assert!(w[0].1 <= w[1].1, "{base}: bucket counts not cumulative");
+        }
+        let (last_le, last_count) = *series.last().unwrap();
+        assert!(last_le.is_infinite(), "{base}: missing +Inf bucket");
+        assert_eq!(last_count, values[&format!("{base}_count")], "{base}: +Inf != _count");
+        assert!(values.contains_key(&format!("{base}_sum")), "{base}: missing _sum");
+        for q in ["p50", "p99", "p999"] {
+            assert!(values.contains_key(&format!("{base}_{q}")), "{base}: missing {q}");
+        }
+    }
+    let ttft = buckets.get("mustafar_ttft_us").expect("ttft histogram missing");
+    assert_eq!(ttft.last().unwrap().1, 3.0, "three requests, three TTFT samples");
+}
+
+/// The determinism contract from the flight-recorder design: events
+/// carry no timestamps and are recorded (or folded in) only on the
+/// engine thread, so two chaos runs with the same pinned seed dump
+/// identical event sequences.
+#[test]
+fn pinned_seed_chaos_runs_dump_identical_flight_recorder_sequences() {
+    // Engine-thread-sequenced fault points only (worker.task/seq.decode
+    // fire on pool threads whose interleaving is scheduler-dependent);
+    // 0.25 on prefill makes a fault event a near-certainty per run.
+    const SPEC: &str = "seq.prefill:0.25,kvpool.alloc:0.05,prefix.insert:0.1";
+    let seed: u64 = std::env::var("MUSTAFAR_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20260807);
+
+    let run = |seed: u64| {
+        let cfg = tiny_cfg();
+        let policy = KvPolicy::mustafar(0.7, 0.7);
+        let per_seq = estimate_seq_bytes(&policy, &cfg, 48 + 48);
+        let mut ec = EngineConfig::default();
+        ec.backend = Backend::NativeSparse;
+        ec.sparsity = SparsityConfig::mustafar(0.7, 0.7);
+        ec.max_batch = 4;
+        ec.max_new_tokens = 64;
+        ec.kv_budget_bytes = per_seq * 2;
+        ec.kv_page_bytes = 1024;
+        let mut e =
+            Engine::new_native(NativeModel::new(Weights::random_for_tests(cfg, seed)), ec);
+        e.set_fault_injector(Injector::parse(SPEC, seed).unwrap());
+        for t in chaos_trace(seed, 24, 48, 16) {
+            let _ = e.submit_full(Request::new(t.id, t.prompt, t.max_new_tokens));
+        }
+        let mut steps = 0usize;
+        while !e.idle() {
+            if let Err(err) = e.step() {
+                e.fail_inflight(&err.to_string());
+            }
+            let _ = e.take_completions();
+            steps += 1;
+            assert!(steps < 20_000, "engine failed to quiesce");
+        }
+        let events: Vec<_> = e.recorder().events().cloned().collect();
+        (events, e.dump_json().to_string())
+    };
+
+    let (ev1, dump1) = run(seed);
+    let (ev2, dump2) = run(seed);
+    assert!(!ev1.is_empty());
+    assert!(
+        ev1.iter().any(|e| e.kind.starts_with("fault:")),
+        "chaos run recorded no fault events — the spec/seed no longer bites"
+    );
+    assert_eq!(ev1, ev2, "pinned-seed chaos runs diverged in the flight recorder");
+    assert_eq!(dump1, dump2, "dump_json must render identically for identical rings");
+}
