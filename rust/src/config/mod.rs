@@ -199,6 +199,26 @@ pub struct EngineConfig {
     pub trace_ring: usize,
     /// Flight-recorder ring capacity (events retained for `{"dump"}`).
     pub recorder_ring: usize,
+    /// Chunked-prefill (Sarathi-style) chunk size in prompt tokens: a
+    /// native-backend prefill runs through the decode path at most this
+    /// many tokens at a time, so cancellation, deadlines, preemption,
+    /// and fault isolation all get chunk-boundary cut points instead of
+    /// waiting out a monster prompt. 0 disables fixed chunking (the
+    /// whole remaining prompt is one chunk — the run-to-completion
+    /// baseline when `round_token_budget` is also 0). The default is
+    /// one 64-token compression group.
+    pub prefill_chunk_tokens: usize,
+    /// Per-round token budget for the engine's round planner: each
+    /// step, every decodable sequence's token is charged first, and
+    /// only the leftover budget is granted to prefill chunks
+    /// (round-robin over mid-prefill sequences, oldest first). Decoders
+    /// are never skipped — the budget bounds prefill interference, so a
+    /// 1M-token prompt cannot head-of-line-block decoding users — and
+    /// prefill always makes at least one chunk of progress per round so
+    /// neither side starves. 0 (the default) disables the budget:
+    /// admitted prompts prefill to completion within the admitting
+    /// step, preserving single-step admission semantics.
+    pub round_token_budget: usize,
 }
 
 impl Default for EngineConfig {
@@ -220,6 +240,8 @@ impl Default for EngineConfig {
             telemetry: true,
             trace_ring: 4096,
             recorder_ring: 1024,
+            prefill_chunk_tokens: 64,
+            round_token_budget: 0,
         }
     }
 }

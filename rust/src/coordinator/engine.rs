@@ -12,6 +12,20 @@
 //! sequences to a higher sparsity tier, preempt the youngest sequence
 //! back onto the queue — before anything is rejected.
 //!
+//! Prefill is chunked, resumable, and fairly scheduled (Sarathi-style):
+//! admission builds an *empty* (or prefix-cache-seeded) `SequenceKV`
+//! and hands the sequence to the round planner, which feeds it prompt
+//! chunks of `prefill_chunk_tokens` through the decode path —
+//! interleaved with decode rounds under `round_token_budget`, so a
+//! monster prompt no longer head-of-line-blocks every decoding user.
+//! Sequences are therefore live-but-not-yet-decodable while
+//! `ActiveSeq::prefill` is `Some`: decode rounds skip them, pool
+//! reservations settle exactly per chunk, and cancellation, deadlines,
+//! and preemption all cut *between* chunks with immediate page release.
+//! Because chunks run token-by-token through the same `decode_into`
+//! kernel regardless of chunk size, chunked prefill is bit-identical to
+//! run-to-completion prefill — the property tests assert it.
+//!
 //! Request lifetime is cancellable end to end: `cancel` removes a
 //! request from the queue or drops its sequence from the active batch
 //! and releases its pool pages immediately (shared prefixes decref
@@ -39,11 +53,11 @@ use crate::config::{Backend, EngineConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pjrt_backend::{PjrtBackend, PjrtSeq};
 use crate::coordinator::pool::WorkerPool;
-use crate::coordinator::request::{ActiveSeq, Completion, FinishReason, Request};
+use crate::coordinator::request::{ActiveSeq, Completion, FinishReason, PrefillCursor, Request};
 use crate::coordinator::scheduler::Scheduler;
 use crate::error::Result;
 use crate::faults::Injector;
-use crate::kvcache::{build_shared_prefill, KvPolicy, SequenceKV};
+use crate::kvcache::{KvPolicy, SequenceKV};
 use crate::kvpool::{self, KvPool, OwnerId, PoolConfig, PoolStats, PrefixCache, PrefixHit};
 use crate::model::{argmax, DecodeScratch, NativeModel};
 use crate::telemetry::{self, FlightRecorder, Span, SpanRing, Telemetry};
@@ -52,6 +66,17 @@ use crate::telemetry::{self, FlightRecorder, Span, SpanRing, Telemetry};
 pub enum SeqState {
     Native(Box<SequenceKV>),
     Pjrt(Box<PjrtSeq>),
+}
+
+/// What admission built for a request.
+enum Admission {
+    /// Fully prefilled at admission: a full prefix-cache hit's restored
+    /// state, or a PJRT device-side prefill. First token included.
+    Ready(SeqState, u16),
+    /// Native chunked path: a `SequenceKV` holding prompt tokens
+    /// `[0, cursor)` (empty on a cold miss, prefix-seeded on a partial
+    /// hit); the round planner feeds the rest chunk by chunk.
+    Prefilling(Box<SequenceKV>, usize),
 }
 
 /// Synchronous continuous-batching engine.
@@ -76,6 +101,13 @@ pub struct Engine {
     prefix_cache: PrefixCache,
     /// Monotone admission counter (pressure-controller coldness order).
     admit_stamp: u64,
+    /// Round-robin cursor for the prefill planner: admission stamp of
+    /// the last sequence served a chunk. Each round starts serving from
+    /// the next stamp after it (wrapping), so a monster prompt that
+    /// exhausts the round budget cannot shut out later-admitted prompts
+    /// round after round — every mid-prefill sequence is served within
+    /// one full rotation.
+    prefill_rr: u64,
     /// Fault injection (disabled unless `MUSTAFAR_FAULTS` is set or a
     /// test installs an injector). The kvpool shares the same handle.
     faults: Injector,
@@ -151,6 +183,7 @@ impl Engine {
             kvpool,
             prefix_cache,
             admit_stamp: 0,
+            prefill_rr: 0,
             faults,
         }
     }
@@ -244,6 +277,10 @@ impl Engine {
         let mut req = req;
         req.max_new_tokens = req.max_new_tokens.min(self.cfg.max_new_tokens.max(1));
         req.submitted = Instant::now();
+        // a fresh submission starts a fresh queue history (requeues go
+        // through the scheduler directly and keep theirs)
+        req.enqueued = req.submitted;
+        req.queue_ms_acc = 0.0;
         let (id, plen) = (req.id, req.prompt.len());
         if self.scheduler.submit(req) {
             self.recorder.note("queued", id, plen as u64);
@@ -288,11 +325,13 @@ impl Engine {
         self.active.is_empty() && self.scheduler.pending() == 0
     }
 
-    /// Admit + prefill new sequences, run one decode round, then settle
-    /// every sequence's pool reservation against its actual growth.
-    /// Deadlines are enforced first, so a stale queued request never
-    /// spends prefill compute and an expired active one frees its pages
-    /// before the round.
+    /// One engine round: admit new sequences, run the round planner's
+    /// prefill half (chunks for mid-prefill sequences under the token
+    /// budget), run one decode round over the decodable set, then
+    /// settle every sequence's pool reservation against its actual
+    /// growth. Deadlines are enforced first, so a stale queued request
+    /// never spends prefill compute and an expired active one frees its
+    /// pages before the round.
     pub fn step(&mut self) -> Result<()> {
         let t0 = Instant::now();
         self.enforce_deadlines();
@@ -300,8 +339,21 @@ impl Engine {
         // `prefix_ttl_ms` is set) — before admission so the freed pages
         // are available to this step's arrivals.
         self.metrics.prefix_ttl_evictions += self.prefix_cache.expire_idle(&mut self.kvpool);
-        self.admit_and_prefill()?;
-        self.decode_round()?;
+        self.admit_new()?;
+        let work_t0 = Instant::now();
+        self.prefill_round();
+        let landed = self.decode_round()?;
+        if self.telemetry.on() && landed > 0 {
+            // Inter-token latency spans the whole round: a decoder's
+            // next token waited out any prefill chunks scheduled ahead
+            // of the decode too, so chunked-prefill head-of-line
+            // interference shows up in this histogram — which is what
+            // the round budget exists to bound.
+            let gap_us = telemetry::us(work_t0.elapsed());
+            for _ in 0..landed {
+                self.telemetry.inter_token_us.record(gap_us);
+            }
+        }
         self.sync_pool();
         if self.telemetry.on() {
             self.telemetry.pool_occupancy_bytes.record(self.kvpool.stats().live_bytes as u64);
@@ -474,7 +526,11 @@ impl Engine {
         crate::coordinator::scheduler::estimate_seq_bytes(&self.policy, self.model.cfg(), window)
     }
 
-    fn admit_and_prefill(&mut self) -> Result<()> {
+    /// Admit new sequences into the batch (up to `max_batch`). A full
+    /// prefix-cache hit (and the PJRT backend) activates fully built;
+    /// the native cold/partial paths activate *mid-prefill* — the round
+    /// planner feeds them prompt chunks on subsequent `prefill_round`s.
+    fn admit_new(&mut self) -> Result<()> {
         while self.active.len() < self.cfg.max_batch {
             let Some(mut need) = self.scheduler.peek_need() else { break };
             // a fully-cached head only charges its tails — don't evict
@@ -516,23 +572,32 @@ impl Engine {
         Ok(())
     }
 
-    /// Prefill (or restore from the prefix cache), reserve exact pool
-    /// bytes, and activate one admitted request.
+    /// Begin serving one admitted request: resolve the prefix cache,
+    /// build the admission-time state, and either activate it fully
+    /// prefilled (full hit / PJRT) or hand it to the round planner
+    /// mid-prefill (native cold and partial-hit paths).
     ///
-    /// The state build runs under `catch_unwind`: a panic anywhere in
-    /// prefill (kernel stack, cache restore, or an injected
-    /// `seq.prefill` fault) is isolated to this request — its waiter
-    /// gets an `Error` completion and the engine keeps serving.
-    /// Genuine `Err` returns keep their old semantics (the completion
-    /// is pushed by `admit_and_prefill` and the step error
-    /// propagates): an `Err` is the engine *reporting* a failure it
-    /// understands, a panic is the failure escaping it.
+    /// The admission build runs under `catch_unwind`: a panic anywhere
+    /// in it (kernel stack, cache restore, or an injected `seq.prefill`
+    /// fault) is isolated to this request — its waiter gets an `Error`
+    /// completion and the engine keeps serving. Genuine `Err` returns
+    /// keep their old semantics (the completion is pushed by
+    /// `admit_new` and the step error propagates): an `Err` is the
+    /// engine *reporting* a failure it understands, a panic is the
+    /// failure escaping it.
     fn start_request(&mut self, req: Request) -> Result<()> {
         let admitted = Instant::now();
-        let queue_ms = admitted.duration_since(req.submitted).as_secs_f64() * 1e3;
+        // queue wait accumulates across mid-prefill requeues: prior
+        // stays are banked in `queue_ms_acc`, this stay ran from the
+        // most recent `enqueued` stamp (satellite: stamp once per stay,
+        // never reset, so requeues don't erase real waiting)
+        let queue_ms =
+            req.queue_ms_acc + admitted.duration_since(req.enqueued).as_secs_f64() * 1e3;
+        let mut req = req;
+        req.queue_ms_acc = queue_ms;
         let t0 = Instant::now();
-        let built = catch_unwind(AssertUnwindSafe(|| self.build_seq_state(&req)));
-        let (state, first) = match built {
+        let built = catch_unwind(AssertUnwindSafe(|| self.admission_build(&req)));
+        let admission = match built {
             Ok(Ok(built)) => built,
             Ok(Err(e)) => return Err(e),
             Err(payload) => {
@@ -561,15 +626,32 @@ impl Engine {
             }
         };
         let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-        self.activate(req, state, first, queue_ms, prefill_ms)
+        match admission {
+            Admission::Ready(state, first) => {
+                self.activate(req, state, first, queue_ms, prefill_ms)
+            }
+            Admission::Prefilling(kv, cursor) => {
+                self.begin_prefill(req, kv, cursor, queue_ms, prefill_ms)
+            }
+        }
     }
 
-    /// The post-prefill `(state, first_token)` build — prefix-cache
-    /// fast paths or the full forward. Extracted from `start_request`
-    /// so it can run under `catch_unwind`; the injected `seq.prefill`
-    /// fault fires before any state is touched, so an injected panic
-    /// never leaves partial mutations behind.
-    fn build_seq_state(&mut self, req: &Request) -> Result<(SeqState, u16)> {
+    /// The admission-time state build — prefix-cache resolution plus
+    /// whatever can be constructed without running prompt compute.
+    /// Extracted from `start_request` so it can run under
+    /// `catch_unwind`; the injected `seq.prefill` fault fires before
+    /// any state is touched, so an injected panic never leaves partial
+    /// mutations behind.
+    ///
+    /// Native cold and partial-hit paths return `Prefilling`: an empty
+    /// (or prefix-seeded) `SequenceKV` plus the prompt cursor the round
+    /// planner resumes from. All prompt compute then runs token-by-token
+    /// through `decode_into` in `prefill_round` — one chunked-prefill
+    /// code path, bit-identical for every chunk size because the chunk
+    /// boundary is not visible to the kernel. A full cache hit restores
+    /// the exact post-prefill state (`Ready`); PJRT keeps its
+    /// device-side run-to-completion prefill (`Ready`).
+    fn admission_build(&mut self, req: &Request) -> Result<Admission> {
         if self.faults.fire("seq.prefill") {
             panic!("injected fault: seq.prefill");
         }
@@ -584,10 +666,14 @@ impl Engine {
                 } else {
                     None
                 };
+                let mcfg = self.model.cfg();
+                let (l, nkv, hd) = (mcfg.n_layers, mcfg.n_kv_heads, mcfg.head_dim);
                 match hit {
                     Some(PrefixHit::Full { prefix, tail_k, tail_v, first_token }) => {
                         // the whole prefill is cached: reconstruct the
                         // exact post-prefill state and skip the forward
+                        // (`Completion::prefill_ms` reports this restore
+                        // cost — it is the hit's real prefill work)
                         self.metrics.prefix_full_hits += 1;
                         self.metrics.prefix_tokens_reused += req.prompt.len();
                         let kv = SequenceKV::restore_full(
@@ -597,104 +683,32 @@ impl Engine {
                             tail_v,
                             req.prompt.len(),
                         )?;
-                        (SeqState::Native(Box::new(kv)), first_token)
+                        Admission::Ready(SeqState::Native(Box::new(kv)), first_token)
                     }
                     Some(PrefixHit::Partial { prefix }) => {
-                        // shared pages cover [0, b); run only the prompt
-                        // suffix, token by token, over the compressed
-                        // prefix (chunked prefill)
+                        // shared pages cover [0, b); the round planner
+                        // runs only the prompt suffix, resuming at b
                         let b = prefix.tokens;
                         self.metrics.prefix_partial_hits += 1;
                         self.metrics.prefix_tokens_reused += b;
                         self.metrics.prefill_tokens += req.prompt.len() - b;
-                        let mut kv = SequenceKV::with_prefix(self.policy, prefix)?;
-                        let mut scratch = DecodeScratch::new();
-                        for (j, &tok) in req.prompt.iter().enumerate().skip(b) {
-                            self.model.decode_into(tok, j, &mut kv, &mut scratch)?;
-                        }
-                        // only the final suffix position's logits matter
-                        let first = argmax(&scratch.logits);
-                        // Re-insert the extended state: the suffix rebuild
-                        // compressed fresh groups past the hit boundary, so
-                        // a lineage of ever-longer shared prompts gets an
-                        // ever-longer partial hit (plus a full entry for
-                        // exact repeats) instead of re-prefilling its new
-                        // tail forever. On success the sequence is promoted
-                        // onto the canonical (cache-charged) prefix and its
-                        // private group copies are dropped.
-                        let (snap, tk, tv) = kv.shareable_snapshot()?;
-                        let ev0 = self.prefix_cache.evictions;
-                        // an injected insert fault models the cache
-                        // declining (its no-room path) — the sequence
-                        // keeps its private state, accounting exact
-                        let canonical = if self.faults.fire("prefix.insert") {
-                            None
-                        } else {
-                            self.prefix_cache.insert(
-                                &req.prompt,
-                                snap,
-                                &tk,
-                                &tv,
-                                first,
-                                &mut self.kvpool,
-                            )
-                        };
-                        self.metrics.prefix_evictions += self.prefix_cache.evictions - ev0;
-                        if let Some(p) = canonical {
-                            kv.promote_prefix(p)?;
-                        }
-                        (SeqState::Native(Box::new(kv)), first)
+                        let kv = SequenceKV::with_prefix(self.policy, prefix)?;
+                        Admission::Prefilling(Box::new(kv), b)
                     }
                     None => {
                         if cacheable {
                             self.metrics.prefix_misses += 1;
                         }
                         self.metrics.prefill_tokens += req.prompt.len();
-                        let r = self.model.prefill(&req.prompt, false);
-                        let first = argmax(&r.logits_last);
-                        let mcfg = self.model.cfg();
-                        let (l, nkv, hd) = (mcfg.n_layers, mcfg.n_kv_heads, mcfg.head_dim);
-                        let kv = if cacheable {
-                            // cacheable split: immutable compressed
-                            // prefix (shared pages) + private tails
-                            let (prefix, tk, tv) =
-                                build_shared_prefill(&self.policy, l, nkv, hd, &r.k, &r.v, r.t)?;
-                            let ev0 = self.prefix_cache.evictions;
-                            let canonical = if self.faults.fire("prefix.insert") {
-                                None
-                            } else {
-                                self.prefix_cache.insert(
-                                    &req.prompt,
-                                    Arc::new(prefix),
-                                    &tk,
-                                    &tv,
-                                    first,
-                                    &mut self.kvpool,
-                                )
-                            };
-                            self.metrics.prefix_evictions += self.prefix_cache.evictions - ev0;
-                            if let Some(p) = canonical {
-                                SequenceKV::restore_full(self.policy, p, tk, tv, r.t)?
-                            } else {
-                                // no room to cache: keep everything
-                                // private so each byte has one owner
-                                let mut kv = SequenceKV::new(self.policy, l, nkv, hd)?;
-                                kv.ingest_prefill(&r.k, &r.v, r.t, None)?;
-                                kv
-                            }
-                        } else {
-                            let mut kv = SequenceKV::new(self.policy, l, nkv, hd)?;
-                            kv.ingest_prefill(&r.k, &r.v, r.t, None)?;
-                            kv
-                        };
-                        (SeqState::Native(Box::new(kv)), first)
+                        let kv = SequenceKV::new(self.policy, l, nkv, hd)?;
+                        Admission::Prefilling(Box::new(kv), 0)
                     }
                 }
             }
             (Backend::PjrtDense | Backend::PjrtSparse, Some(pj)) => {
                 self.metrics.prefill_tokens += req.prompt.len();
                 let (seq, logits) = pj.prefill(&req.prompt, self.cfg.backend)?;
-                (SeqState::Pjrt(Box::new(seq)), argmax(&logits))
+                Admission::Ready(SeqState::Pjrt(Box::new(seq)), argmax(&logits))
             }
             (_, None) => {
                 return Err(crate::Error::Engine(
@@ -759,6 +773,7 @@ impl Engine {
             req,
             generated: vec![first],
             pos,
+            prefill: None,
             prefill_ms,
             queue_ms,
             decode_start: Instant::now(),
@@ -776,6 +791,378 @@ impl Engine {
             self.active.push(seq);
         }
         Ok(())
+    }
+
+    /// Activate an admitted-but-unprefilled sequence: register its pool
+    /// owner, reserve what it holds so far (a reused prefix is charged
+    /// to the cache, a cold start holds almost nothing — the exact
+    /// per-chunk settle happens as chunks land), and hand it to the
+    /// round planner.
+    fn begin_prefill(
+        &mut self,
+        req: Request,
+        kv: Box<SequenceKV>,
+        cursor: usize,
+        queue_ms: f64,
+        prefill_ms: f64,
+    ) -> Result<()> {
+        let state = SeqState::Native(kv);
+        let owner = self.kvpool.register();
+        let bytes = Self::state_bytes(&state, self.pjrt.as_ref());
+        if let Err(sf) = self.kvpool.set_live_bytes(owner, bytes) {
+            let ok = self.reclaim(sf.bytes, None, true)
+                && self.kvpool.set_live_bytes(owner, bytes).is_ok();
+            if !ok {
+                self.kvpool.release(owner);
+                self.metrics.rejected += 1;
+                self.metrics.rejected_capacity += 1;
+                self.recorder.note("reject_capacity", req.id, bytes as u64);
+                let mut c = Completion::queued(
+                    req.id,
+                    req.route,
+                    req.submitted,
+                    FinishReason::Rejected,
+                    None,
+                );
+                c.queue_ms = queue_ms;
+                c.prefill_ms = prefill_ms;
+                self.completions.push(c);
+                return Ok(());
+            }
+        }
+        if self.telemetry.on() {
+            self.telemetry.queue_wait_us.record((queue_ms * 1e3).max(0.0) as u64);
+        }
+        self.recorder.note("admit", req.id, req.prompt.len() as u64);
+        self.admit_stamp += 1;
+        let seq = ActiveSeq {
+            req,
+            generated: Vec::new(),
+            pos: cursor,
+            prefill: Some(PrefillCursor { cursor, chunks: 0 }),
+            prefill_ms,
+            queue_ms,
+            // re-stamped when the first token lands; until then the
+            // sequence has no decode phase
+            decode_start: Instant::now(),
+            state,
+            owner,
+            admitted_seq: self.admit_stamp,
+            reprune_tier: 0,
+            scratch: DecodeScratch::new(),
+        };
+        self.active.push(seq);
+        Ok(())
+    }
+
+    /// The round planner's prefill half: feed prompt chunks to every
+    /// mid-prefill sequence, round-robin in admission order, under the
+    /// round token budget. Every decodable sequence's next token is
+    /// charged against the budget first; prefill gets the leftover —
+    /// floored at one chunk, so a fully decode-loaded engine still
+    /// advances prefill (neither side can starve the other).
+    /// Round-robin *across rounds* (the `prefill_rr` cursor, rather
+    /// than oldest-runs-dry) lets short prompts admitted behind a
+    /// monster finish in a handful of rounds even when the monster
+    /// exhausts each round's budget by itself, which is where the TTFT
+    /// fairness comes from.
+    fn prefill_round(&mut self) {
+        if !self.active.iter().any(|s| s.prefill.is_some()) {
+            self.telemetry.round_budget_tokens.set(0);
+            return;
+        }
+        let chunk = if self.cfg.prefill_chunk_tokens == 0 {
+            usize::MAX
+        } else {
+            self.cfg.prefill_chunk_tokens
+        };
+        let mut budget = if self.cfg.round_token_budget == 0 {
+            usize::MAX
+        } else {
+            let decodable = self.active.iter().filter(|s| s.prefill.is_none()).count();
+            let leftover = self.cfg.round_token_budget.saturating_sub(decodable);
+            if leftover == 0 {
+                chunk
+            } else {
+                leftover
+            }
+        };
+        let mut fed = 0usize;
+        loop {
+            let mut waiting: Vec<(u64, OwnerId)> = self
+                .active
+                .iter()
+                .filter(|s| s.prefill.is_some())
+                .map(|s| (s.admitted_seq, s.owner))
+                .collect();
+            if waiting.is_empty() || budget == 0 {
+                break;
+            }
+            waiting.sort_by_key(|&(stamp, _)| stamp);
+            // resume the rotation after the last-served stamp (wrap to
+            // the oldest when the cursor is past everyone)
+            let pivot =
+                waiting.iter().position(|&(stamp, _)| stamp > self.prefill_rr).unwrap_or(0);
+            waiting.rotate_left(pivot);
+            let mut progressed = false;
+            for (stamp, owner) in waiting {
+                if budget == 0 {
+                    break;
+                }
+                let n = self.prefill_chunk_for(owner, chunk.min(budget));
+                self.prefill_rr = stamp;
+                budget = budget.saturating_sub(n);
+                fed += n;
+                progressed |= n > 0;
+            }
+            if !progressed {
+                break;
+            }
+        }
+        self.telemetry.round_budget_tokens.set(fed as u64);
+    }
+
+    /// Feed one prompt chunk (≤ `take` tokens) to the mid-prefill
+    /// sequence owned by `owner`, through the decode path — the same
+    /// `decode_into` kernel every token goes through regardless of
+    /// chunk size, which is what makes chunked prefill bit-identical to
+    /// run-to-completion. Settles the sequence's exact pool reservation
+    /// afterwards (pressure ladder → requeue → reject), and completes
+    /// the prefill when the final chunk lands. Returns the prompt
+    /// tokens consumed (0 when the sequence vanished, was cut by its
+    /// deadline, or died).
+    fn prefill_chunk_for(&mut self, owner: OwnerId, take: usize) -> usize {
+        let Some(idx) = self.active.iter().position(|s| s.owner == owner) else {
+            return 0;
+        };
+        // deadline cut *between chunks*: a monster prompt past its
+        // deadline stops burning compute now, not at the next sweep,
+        // and its partial pages come back immediately
+        let expired = self.active[idx]
+            .req
+            .deadline_ms
+            .is_some_and(|d| self.active[idx].req.submitted.elapsed().as_millis() as u64 > d);
+        if expired {
+            let s = self.active.swap_remove(idx);
+            let kv = self.seq_kv_bytes(&s.state);
+            self.note_kv_peaks(kv);
+            self.kvpool.release(s.owner);
+            self.metrics.deadline_exceeded += 1;
+            self.recorder.note("timeout", s.req.id, 0);
+            self.completions.push(s.into_completion(FinishReason::Timeout, None, kv));
+            return 0;
+        }
+        let t0 = Instant::now();
+        let model = Arc::clone(&self.model);
+        let faults = self.faults.clone();
+        let (cur, end, outcome) = {
+            let s = &mut self.active[idx];
+            let cur = s.prefill.as_ref().map_or(s.pos, |p| p.cursor);
+            let end = (cur + take).min(s.req.prompt.len());
+            let ActiveSeq { req, state, scratch, .. } = s;
+            let SeqState::Native(kv) = state else {
+                // PJRT prefills run-to-completion at admission; a
+                // non-native state is never mid-prefill
+                return 0;
+            };
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                if faults.fire("seq.prefill_chunk") {
+                    panic!("injected fault: seq.prefill_chunk");
+                }
+                for j in cur..end {
+                    model.decode_into(req.prompt[j], j, kv, scratch)?;
+                }
+                Ok::<(), crate::Error>(())
+            }));
+            (cur, end, outcome)
+        };
+        match outcome {
+            Err(payload) => {
+                // same isolation contract as admission-time prefill:
+                // the panic poisons exactly this request — pages
+                // released, waiter answered, engine keeps serving
+                let s = self.active.swap_remove(idx);
+                let kv = self.seq_kv_bytes(&s.state);
+                self.note_kv_peaks(kv);
+                self.kvpool.release(s.owner);
+                self.metrics.isolated_panics += 1;
+                self.metrics.failed += 1;
+                self.recorder.note("prefill_panic", s.req.id, cur as u64);
+                self.recorder.trigger_auto_dump("panic isolated in prefill chunk");
+                let msg = format!(
+                    "isolated panic during prefill chunk: {}",
+                    panic_message(payload.as_ref())
+                );
+                self.completions.push(s.into_completion(FinishReason::Error, Some(msg), kv));
+                0
+            }
+            Ok(Err(e)) => {
+                let s = self.active.swap_remove(idx);
+                let kv = self.seq_kv_bytes(&s.state);
+                self.note_kv_peaks(kv);
+                self.kvpool.release(s.owner);
+                self.metrics.failed += 1;
+                self.recorder.note("prefill_fail", s.req.id, cur as u64);
+                self.completions
+                    .push(s.into_completion(FinishReason::Error, Some(e.to_string()), kv));
+                0
+            }
+            Ok(Ok(())) => {
+                if self.telemetry.on() {
+                    self.telemetry.prefill_chunk_us.record(telemetry::us(t0.elapsed()));
+                }
+                self.telemetry.prefill_chunks.inc();
+                {
+                    let s = &mut self.active[idx];
+                    s.pos = end;
+                    s.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+                    if let Some(p) = s.prefill.as_mut() {
+                        p.cursor = end;
+                        p.chunks += 1;
+                    }
+                }
+                // settle the exact reservation for this chunk's growth;
+                // the ladder may run, with the same bounded retries as
+                // `sync_pool` (this sequence protected as the victim)
+                let bytes = Self::state_bytes(&self.active[idx].state, self.pjrt.as_ref());
+                let stamp = self.active[idx].admitted_seq;
+                let mut attempts = 0;
+                loop {
+                    match self.kvpool.set_live_bytes(owner, bytes) {
+                        Ok(()) => break,
+                        Err(sf) => {
+                            attempts += 1;
+                            if attempts <= 3 && self.reclaim(sf.bytes, Some(stamp), true) {
+                                continue;
+                            }
+                            // cannot hold this chunk: bounce back to the
+                            // queue if peers may free room later (their
+                            // retirement is the only thing that will),
+                            // reject if it has the pool to itself
+                            let Some(idx) =
+                                self.active.iter().position(|s| s.owner == owner)
+                            else {
+                                break;
+                            };
+                            if self.active.len() > 1 {
+                                self.requeue_prefill(idx);
+                            } else {
+                                let s = self.active.swap_remove(idx);
+                                self.kvpool.release(s.owner);
+                                self.reject_finish(s);
+                            }
+                            return end - cur;
+                        }
+                    }
+                }
+                // the reclaim above can reorder `active`: re-find before
+                // completing
+                if let Some(idx) = self.active.iter().position(|s| s.owner == owner) {
+                    if self.active[idx].pos == self.active[idx].req.prompt.len() {
+                        self.complete_prefill(idx);
+                    }
+                }
+                end - cur
+            }
+        }
+    }
+
+    /// The final chunk landed: derive the first token from the last
+    /// chunk's logits, share the built prefix through the cache (the
+    /// cold and partial-hit paths converge here), and flip the sequence
+    /// decodable.
+    fn complete_prefill(&mut self, idx: usize) {
+        let first = argmax(&self.active[idx].scratch.logits);
+        let cacheable = self.prefix_cache.enabled()
+            && self.policy.prefix_shareable()
+            && matches!(self.cfg.backend, Backend::NativeDense | Backend::NativeSparse);
+        if cacheable {
+            // Insert the built state: prefill compressed fresh groups
+            // past any hit boundary, so a lineage of ever-longer shared
+            // prompts gets an ever-longer partial hit (plus a full
+            // entry for exact repeats) instead of re-prefilling its new
+            // tail forever. On success the sequence is promoted onto
+            // the canonical (cache-charged) prefix and its private
+            // group copies are dropped.
+            let snap = {
+                let SeqState::Native(kv) = &mut self.active[idx].state else {
+                    return;
+                };
+                kv.shareable_snapshot()
+            };
+            if let Ok((snap, tk, tv)) = snap {
+                let ev0 = self.prefix_cache.evictions;
+                // an injected insert fault models the cache declining
+                // (its no-room path) — the sequence keeps its private
+                // state, accounting exact
+                let canonical = if self.faults.fire("prefix.insert") {
+                    None
+                } else {
+                    self.prefix_cache.insert(
+                        &self.active[idx].req.prompt,
+                        snap,
+                        &tk,
+                        &tv,
+                        first,
+                        &mut self.kvpool,
+                    )
+                };
+                self.metrics.prefix_evictions += self.prefix_cache.evictions - ev0;
+                if let Some(p) = canonical {
+                    let promoted = {
+                        let SeqState::Native(kv) = &mut self.active[idx].state else {
+                            return;
+                        };
+                        kv.promote_prefix(p).is_ok()
+                    };
+                    if promoted {
+                        // promotion dropped private copies — a shrink,
+                        // so the settle cannot fail
+                        let owner = self.active[idx].owner;
+                        let bytes =
+                            Self::state_bytes(&self.active[idx].state, self.pjrt.as_ref());
+                        let _ = self.kvpool.set_live_bytes(owner, bytes);
+                    }
+                }
+            }
+        }
+        let ttft_us = telemetry::us(self.active[idx].req.submitted.elapsed());
+        {
+            let s = &mut self.active[idx];
+            s.generated.push(first);
+            s.prefill = None;
+            s.decode_start = Instant::now();
+        }
+        self.metrics.generated_tokens += 1;
+        if self.telemetry.on() {
+            let prefill_ms = self.active[idx].prefill_ms;
+            self.telemetry.prefill_us.record((prefill_ms * 1e3).max(0.0) as u64);
+            // TTFT: the first token exists the moment the final chunk
+            // lands, measured from the client's submission
+            self.telemetry.ttft_us.record(ttft_us);
+        }
+        self.recorder.note("first_token", self.active[idx].req.id, self.active[idx].pos as u64);
+        if self.seq_finished(&self.active[idx]) {
+            let s = self.active.swap_remove(idx);
+            self.finish(s);
+        }
+    }
+
+    /// Bounce a mid-prefill sequence back to the admission queue under
+    /// pool pressure: recompute-style (the partial KV is dropped with
+    /// its pages released *now*), the queue stay restarts so `queue_ms`
+    /// keeps accumulating, and it re-enters at the head so it re-admits
+    /// before newer arrivals.
+    fn requeue_prefill(&mut self, idx: usize) {
+        let mut s = self.active.swap_remove(idx);
+        self.kvpool.release(s.owner);
+        self.telemetry.prefill_preempted.inc();
+        let at = s.prefill.as_ref().map_or(0, |p| p.cursor);
+        self.recorder.note("prefill_preempt", s.req.id, at as u64);
+        s.req.queue_ms_acc = s.queue_ms;
+        s.req.enqueued = Instant::now();
+        self.scheduler.requeue_front(s.req);
+        self.metrics.preempted += 1;
     }
 
     fn state_bytes(state: &SeqState, pjrt: Option<&PjrtBackend>) -> usize {
@@ -882,10 +1269,17 @@ impl Engine {
     /// `generated_tokens == Σ completion lengths` holds regardless of
     /// preemptions).
     fn preempt_at(&mut self, idx: usize) {
-        let s = self.active.swap_remove(idx);
+        let mut s = self.active.swap_remove(idx);
         self.kvpool.release(s.owner);
         self.metrics.generated_tokens -= s.generated.len();
+        if s.prefill.is_some() {
+            self.telemetry.prefill_preempted.inc();
+        }
         self.recorder.note("preempt", s.req.id, s.generated.len() as u64);
+        // restart the queue stay (the accumulator keeps the wait so far)
+        // — deadlines still anchor to the original `submitted`
+        s.req.queue_ms_acc = s.queue_ms;
+        s.req.enqueued = Instant::now();
         self.scheduler.requeue_front(s.req);
         self.metrics.preempted += 1;
     }
@@ -960,6 +1354,12 @@ impl Engine {
     }
 
     fn seq_finished(&self, s: &ActiveSeq) -> bool {
+        // a mid-prefill sequence has produced nothing yet — even a
+        // degenerate `max_new_tokens == 0` request must land its first
+        // token before the length check can fire
+        if s.prefill.is_some() {
+            return false;
+        }
         if s.generated.len() >= s.req.max_new_tokens {
             return true;
         }
@@ -971,13 +1371,17 @@ impl Engine {
         false
     }
 
-    fn decode_round(&mut self) -> Result<()> {
-        if self.active.is_empty() {
-            return Ok(());
+    /// One decode round over the decodable sequences (mid-prefill ones
+    /// are skipped — they have no token to extend yet). Returns how
+    /// many tokens landed, for the step-level inter-token histogram.
+    fn decode_round(&mut self) -> Result<usize> {
+        let n_decodable = self.active.iter().filter(|s| s.prefill.is_none()).count();
+        if n_decodable == 0 {
+            return Ok(0);
         }
         self.metrics.decode_rounds += 1;
-        self.metrics.note_batch(self.active.len());
-        let batch = self.active.len();
+        self.metrics.note_batch(n_decodable);
+        let batch = n_decodable;
         let round_t0 = Instant::now();
         let mut landed = 0usize;
 
@@ -988,7 +1392,7 @@ impl Engine {
                 // persistent worker pool — no per-round thread spawning.
                 // Each sequence's step runs under catch_unwind, so a
                 // panic or decode error poisons only that sequence.
-                let n = self.active.len();
+                let n = n_decodable;
                 let outcomes: Vec<DecodeOutcome> = if n > 1 {
                     let workers = crate::util::threads().min(self.cfg.max_batch.max(1));
                     let tel = Arc::clone(&self.telemetry);
@@ -1000,6 +1404,7 @@ impl Engine {
                     let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
                         .active
                         .iter_mut()
+                        .filter(|s| s.prefill.is_none())
                         .zip(slots.iter_mut())
                         .map(|(s, slot)| {
                             let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
@@ -1026,6 +1431,7 @@ impl Engine {
                     let faults = self.faults.clone();
                     self.active
                         .iter_mut()
+                        .filter(|s| s.prefill.is_none())
                         .map(|s| decode_step_isolated(&model, &faults, s, false))
                         .collect()
                 };
@@ -1034,7 +1440,8 @@ impl Engine {
                 // completions carry them — the `generated_tokens ==
                 // Σ completion lengths` invariant must include them
                 let mut casualties: Vec<(OwnerId, String, bool)> = Vec::new();
-                for (s, o) in self.active.iter_mut().zip(outcomes) {
+                let decodable = self.active.iter_mut().filter(|s| s.prefill.is_none());
+                for (s, o) in decodable.zip(outcomes) {
                     match o {
                         DecodeOutcome::Token(tok) => {
                             s.generated.push(tok);
@@ -1104,12 +1511,9 @@ impl Engine {
         if self.telemetry.on() {
             let round_us = telemetry::us(round_t0.elapsed());
             self.telemetry.decode_round_us.record(round_us);
-            // inter-token latency: with continuous batching every
-            // sequence that landed a token this round waited one round
-            // for it, so the round time is each token's inter-arrival
-            for _ in 0..landed {
-                self.telemetry.inter_token_us.record(round_us);
-            }
+            // (inter-token latency is recorded by `step` over the whole
+            // round — prefill chunks included — so chunked-prefill
+            // interference is visible in that histogram)
             let end_us = self.telemetry.now_us();
             self.spans.push(Span {
                 name: "decode_round",
@@ -1130,7 +1534,7 @@ impl Engine {
                 i += 1;
             }
         }
-        Ok(())
+        Ok(landed)
     }
 
     fn finish(&mut self, s: ActiveSeq) {
@@ -2187,6 +2591,231 @@ mod tests {
             "request 1 waited a full request ({} vs {})",
             c1.queue_ms,
             c0.queue_ms
+        );
+    }
+
+    /// Engine with explicit chunk/budget knobs — the chunked-prefill
+    /// test harness (sparse backend, same weights/seed as tiny_engine).
+    fn chunked_engine(chunk: usize, budget: usize) -> Engine {
+        let cfg = tiny_model_cfg(2, 1, 32);
+        let model = NativeModel::new(Weights::random_for_tests(cfg, 42));
+        let mut ec = EngineConfig::default();
+        ec.backend = Backend::NativeSparse;
+        ec.sparsity = crate::config::SparsityConfig::mustafar(0.5, 0.5);
+        ec.max_batch = 4;
+        ec.max_new_tokens = 8;
+        ec.prefill_chunk_tokens = chunk;
+        ec.round_token_budget = budget;
+        Engine::new_native(model, ec)
+    }
+
+    #[test]
+    fn chunked_prefill_is_token_identical_across_chunk_sizes_and_budgets() {
+        // Acceptance: chunk boundaries are invisible to the kernel —
+        // every (chunk, budget) combination must produce bit-identical
+        // token streams vs run-to-completion, including chunk sizes
+        // that are not group-aligned and prompt lengths that are not
+        // chunk multiples (137, 200).
+        let trace = || {
+            vec![
+                Request::new(0, (0..137).map(|j| ((j * 11) % 400 + 16) as u16).collect(), 8),
+                Request::new(1, (0..200).map(|j| ((j * 5 + 3) % 400 + 16) as u16).collect(), 8),
+                Request::new(2, (0..64).map(|j| ((j * 17 + 9) % 400 + 16) as u16).collect(), 8),
+            ]
+        };
+        let collect = |mut e: Engine| {
+            let mut out = e.run_trace(trace()).unwrap();
+            out.sort_by_key(|c| c.id);
+            assert!(out.iter().all(|c| c.finish == FinishReason::Length));
+            (out.into_iter().map(|c| c.tokens).collect::<Vec<_>>(), e)
+        };
+        let (baseline, _) = collect(chunked_engine(0, 0)); // run-to-completion
+        for (chunk, budget) in [(16, 0), (64, 0), (100, 0), (0, 48), (16, 48), (64, 24)] {
+            let (tokens, e) = collect(chunked_engine(chunk, budget));
+            assert_eq!(
+                tokens, baseline,
+                "chunk={chunk} budget={budget} diverged from run-to-completion"
+            );
+            if chunk == 16 {
+                // 137 + 200 + 64 prompt tokens at 16/chunk really split
+                assert!(e.telemetry.prefill_chunks.get() > 3, "prefill never actually chunked");
+            }
+        }
+    }
+
+    #[test]
+    fn partial_hit_resumed_across_rounds_matches_unchunked_cold_prefill() {
+        // Satellite: the partial-hit suffix rebuild rides the same
+        // resumable chunk API as cold prefill. Resume a hit across
+        // several budgeted rounds and compare against an unchunked cold
+        // prefill of the same prompt on a fresh (unprimed) engine.
+        let base = reqs(1, 224, 4);
+        let mut longer = base[0].prompt.clone();
+        longer.extend((0..64).map(|i| (i * 3 % 300 + 20) as u16)); // 288 tokens
+
+        let mut cold = chunked_engine(0, 0);
+        let want = cold.run_trace(vec![Request::new(9, longer.clone(), 4)]).unwrap();
+
+        // primed cache + tiny chunks under a small round budget: the
+        // 96-token suffix rebuild spans multiple engine steps
+        let mut e = chunked_engine(16, 24);
+        e.run_trace(base).unwrap();
+        let chunks0 = e.telemetry.prefill_chunks.get();
+        let got = e.run_trace(vec![Request::new(9, longer, 4)]).unwrap();
+        assert_eq!(e.metrics.prefix_partial_hits, 1);
+        assert_eq!(e.metrics.prefix_tokens_reused, 192);
+        assert!(
+            e.telemetry.prefill_chunks.get() - chunks0 >= 4,
+            "the suffix rebuild must have resumed across chunks"
+        );
+        assert_eq!(got[0].tokens, want[0].tokens, "resumed partial hit diverged");
+        assert_eq!(got[0].finish, FinishReason::Length);
+    }
+
+    #[test]
+    fn cancel_mid_prefill_releases_partial_pages_immediately() {
+        let mut e = chunked_engine(16, 16);
+        assert!(e.submit(reqs(1, 96, 4).remove(0)));
+        e.step().unwrap();
+        // one budgeted chunk in: live but not yet decodable
+        assert_eq!(e.active_count(), 1);
+        assert_eq!(e.progress(0), Some(0), "no token yet mid-prefill");
+        assert!(e.pool_stats().live_bytes > 0, "partial KV must be charged");
+        assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+        assert!(e.cancel(0));
+        assert_eq!(e.pool_stats().live_bytes, 0, "partial pages must come back at cancel");
+        assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+        assert!(e.idle());
+        let out = e.take_completions();
+        assert_eq!(out.len(), 1, "answered exactly once");
+        assert_eq!(out[0].finish, FinishReason::Cancelled);
+        assert!(out[0].tokens.is_empty());
+        assert_eq!(out[0].decode_ms, 0.0, "never decoded");
+        assert_eq!(e.metrics.cancelled, 1);
+        assert_eq!(e.metrics.generated_tokens, 0);
+    }
+
+    #[test]
+    fn deadline_cuts_a_mid_prefill_sequence_and_frees_its_pages() {
+        let mut e = chunked_engine(16, 16);
+        let mut r = reqs(1, 96, 8).remove(0);
+        r.deadline_ms = Some(50);
+        assert!(e.submit(r));
+        e.step().unwrap(); // admits; the first chunk lands
+        assert_eq!(e.progress(0), Some(0), "still mid-prefill");
+        assert_eq!(e.active_count(), 1);
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        let bound = Instant::now() + std::time::Duration::from_secs(60);
+        while !e.idle() {
+            assert!(Instant::now() < bound, "deadline never enforced");
+            e.step().unwrap();
+            assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+        }
+        let out = e.take_completions();
+        assert_eq!(out.len(), 1, "answered exactly once");
+        assert_eq!(out[0].finish, FinishReason::Timeout);
+        assert!(out[0].tokens.is_empty(), "cut before its first token");
+        assert_eq!(out[0].decode_ms, 0.0);
+        assert_eq!(e.metrics.deadline_exceeded, 1);
+        assert_eq!(e.pool_stats().live_bytes, 0, "partial pages released at the cut");
+    }
+
+    #[test]
+    fn injected_prefill_chunk_panic_is_contained_to_its_sequence() {
+        let mut e = chunked_engine(16, 0);
+        // the short prompt (1 chunk) takes the first consult; the long
+        // one (3 chunks) takes the rest and panics on its final chunk
+        e.set_fault_injector(
+            crate::faults::Injector::parse("seq.prefill_chunk:after=3", 5).unwrap(),
+        );
+        let short = Request::new(0, (0..16).map(|j| ((j * 13) % 400 + 16) as u16).collect(), 4);
+        let long =
+            Request::new(1, (0..48).map(|j| ((j * 29 + 7) % 400 + 16) as u16).collect(), 4);
+        let out = e.run_trace(vec![short, long]).unwrap();
+        assert_eq!(out.len(), 2, "every request answered exactly once");
+        let c0 = out.iter().find(|c| c.id == 0).unwrap();
+        let c1 = out.iter().find(|c| c.id == 1).unwrap();
+        assert_eq!(c0.finish, FinishReason::Length, "survivor must finish normally");
+        assert_eq!(c0.tokens.len(), 4);
+        assert_eq!(c1.finish, FinishReason::Error);
+        assert!(c1
+            .error
+            .as_deref()
+            .unwrap_or("")
+            .contains("isolated panic during prefill chunk"));
+        assert!(c1.tokens.is_empty());
+        assert_eq!(e.metrics.isolated_panics, 1);
+        assert_eq!(e.metrics.failed, 1);
+        assert_eq!(e.pool_stats().live_bytes, e.measured_live_bytes());
+        assert_eq!(e.pool_stats().live_bytes, e.prefix_cache().measured_bytes());
+    }
+
+    #[test]
+    fn round_budget_rotation_prevents_prefill_starvation_behind_a_monster() {
+        // budget 8 < chunk: each round grants one 8-token slice to one
+        // sequence. Without the `prefill_rr` rotation cursor the
+        // monster (admitted first) would win every round and the short
+        // prompts behind it would never reach their first token.
+        let mut e = chunked_engine(64, 8);
+        assert!(e.submit(Request::new(0, reqs(1, 512, 4).remove(0).prompt, 4)));
+        for mut r in reqs(2, 24, 4) {
+            r.id += 1;
+            r.route = r.id;
+            assert!(e.submit(r));
+        }
+        let mut steps = 0;
+        while e.progress(1).is_some() || e.progress(2).is_some() {
+            e.step().unwrap();
+            assert!(e.telemetry.round_budget_tokens.get() <= 8, "planner overspent the budget");
+            steps += 1;
+            assert!(steps < 40, "short decoders starved behind the monster prefill");
+        }
+        assert_eq!(e.progress(0), Some(0), "monster still mid-prefill");
+        // and the monster itself is never starved either: it completes
+        let bound = 2000;
+        let mut n = 0;
+        while !e.idle() {
+            e.step().unwrap();
+            n += 1;
+            assert!(n < bound, "monster prefill never completed");
+        }
+        let mut out = e.take_completions();
+        out.sort_by_key(|c| c.id);
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|c| c.finish == FinishReason::Length), "{out:?}");
+        assert_eq!(out[0].tokens.len(), 4);
+    }
+
+    #[test]
+    fn queue_wait_accumulates_across_a_mid_prefill_requeue() {
+        let mut e = chunked_engine(16, 16);
+        assert!(e.submit(reqs(1, 96, 4).remove(0)));
+        e.step().unwrap(); // admitted, one chunk in
+        assert!(e.active[0].prefill.is_some());
+        let q0 = e.active[0].queue_ms;
+        // pressure-bounce the mid-prefill sequence back to the queue
+        e.requeue_prefill(0);
+        assert_eq!(e.active_count(), 0);
+        assert_eq!(e.queued_count(), 1);
+        assert_eq!(e.telemetry.prefill_preempted.get(), 1);
+        assert_eq!(e.metrics.preempted, 1);
+        assert_eq!(e.pool_stats().live_bytes, 0, "bounced pages released immediately");
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        let mut n = 0;
+        while !e.idle() {
+            e.step().unwrap();
+            n += 1;
+            assert!(n < 2000, "requeued request never finished");
+        }
+        let out = e.take_completions();
+        assert_eq!(out.len(), 1, "answered exactly once across the requeue");
+        assert_eq!(out[0].finish, FinishReason::Length);
+        // the second stay adds >= the 15 ms sleep on top of the banked
+        // first stay — a per-stay restamp would have erased q0
+        assert!(
+            out[0].queue_ms >= q0 + 15.0,
+            "queue wait erased by the requeue: {} vs banked {q0}",
+            out[0].queue_ms
         );
     }
 }

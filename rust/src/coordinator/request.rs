@@ -29,18 +29,33 @@ pub struct Request {
     /// `Timeout` (with whatever tokens it generated) instead of holding
     /// pool pages for an answer the client has stopped waiting for.
     pub deadline_ms: Option<u64>,
+    /// When the request last entered the admission queue. Equals
+    /// `submitted` on first submit; re-stamped on every requeue
+    /// (preemption, mid-prefill pressure bounce) so each queue stay is
+    /// measured from the right origin while `submitted` keeps anchoring
+    /// deadlines to the client's original send.
+    pub enqueued: Instant,
+    /// Queue wait accumulated over *previous* queue stays, ms. A
+    /// request preempted or bounced mid-prefill goes back to the queue;
+    /// its eventual `Completion::queue_ms` is this accumulator plus the
+    /// current stay — stamped once per stay at admission, never reset,
+    /// so requeues don't erase waiting the client actually experienced.
+    pub queue_ms_acc: f64,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<u16>, max_new_tokens: usize) -> Request {
+        let now = Instant::now();
         Request {
             id,
             route: id,
             prompt,
             max_new_tokens,
             stop_token: None,
-            submitted: Instant::now(),
+            submitted: now,
             deadline_ms: None,
+            enqueued: now,
+            queue_ms_acc: 0.0,
         }
     }
 }
@@ -124,12 +139,32 @@ impl Completion {
     }
 }
 
+/// Chunked-prefill progress carried on a live sequence that is not yet
+/// decodable: the partially built `SequenceKV` lives in
+/// `ActiveSeq::state` as usual, this records how far into the prompt it
+/// has been fed. Dropped (set to `None`) the moment the final chunk
+/// lands the first token.
+pub(crate) struct PrefillCursor {
+    /// Next prompt index to feed (prompt tokens `[0, cursor)` are
+    /// already in the KV state; for a prefix-cache partial hit the
+    /// cursor starts at the reused boundary, not 0).
+    pub cursor: usize,
+    /// Chunks executed so far for this admission (diagnostics).
+    pub chunks: u64,
+}
+
 /// Internal per-sequence decode state.
 pub(crate) struct ActiveSeq {
     pub req: Request,
     pub generated: Vec<u16>,
     /// Next RoPE position (= tokens processed so far).
     pub pos: usize,
+    /// `Some` while the sequence is admitted but still mid-prefill
+    /// (live-but-not-yet-decodable): decode rounds skip it, the round
+    /// planner feeds it prompt chunks, and any terminal cut (cancel,
+    /// deadline, preempt, pressure) releases its partial pages exactly
+    /// like a decodable sequence's.
+    pub prefill: Option<PrefillCursor>,
     pub prefill_ms: f64,
     pub queue_ms: f64,
     pub decode_start: Instant,
@@ -165,7 +200,13 @@ impl ActiveSeq {
             error,
             queue_ms: self.queue_ms,
             prefill_ms: self.prefill_ms,
-            decode_ms: self.decode_start.elapsed().as_secs_f64() * 1e3,
+            // a sequence cut mid-prefill never started decoding;
+            // `decode_start` is only stamped when the first token lands
+            decode_ms: if self.prefill.is_some() {
+                0.0
+            } else {
+                self.decode_start.elapsed().as_secs_f64() * 1e3
+            },
             kv_bytes: kv.0,
             kv_dense_bytes: kv.1,
             retry_after_ms: None,

@@ -5,6 +5,13 @@
 //! system level: compressed sequences reserve fewer bytes, so more of
 //! them fit in the same budget — the mechanism behind Fig 7's "larger
 //! batch at the same memory" result.
+//!
+//! Admission no longer implies "fully prefilled": with chunked prefill
+//! (`EngineConfig::prefill_chunk_tokens`) a popped request activates
+//! mid-prefill and the engine's round planner feeds it prompt chunks
+//! across steps. The queue still only holds *unadmitted* requests — a
+//! mid-prefill sequence bounced by pool pressure re-enters through
+//! `requeue_front` like any preemption victim.
 
 use std::collections::VecDeque;
 
@@ -152,6 +159,13 @@ impl Scheduler {
     /// (`Engine::cancel` removes queued requests via `remove_by_id`,
     /// and cancellation is only processed between steps, so a cancelled
     /// request is never in the active set when preemption runs).
+    ///
+    /// Since chunked prefill, the bounced request may have been cut
+    /// *mid-prefill* (its partial `SequenceKV` dropped with the pages
+    /// released): the engine re-stamps `Request::enqueued` and banks the
+    /// prior stay into `queue_ms_acc` before calling this, so the new
+    /// queue stay is measured from the bounce while the reported
+    /// `queue_ms` keeps accumulating across stays.
     pub fn requeue_front(&mut self, req: Request) {
         self.queue.push_front(req);
         self.peak_pending = self.peak_pending.max(self.queue.len());

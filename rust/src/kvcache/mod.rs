@@ -15,6 +15,20 @@
 //!    magnitude — the runtime method) and *appended* to the compressed
 //!    region (tile ordering makes this an O(group) append);
 //!  * optional KIVI-style fake quantization after pruning (§4.2.2).
+//!
+//! The serving engine's *chunked* prefill drives prompt tokens through
+//! the same per-token decode path (`commit_token` via
+//! `model::decode_into`) regardless of chunk size, resuming from a
+//! cursor between engine rounds: a cold start begins from [`new`],
+//! a prefix-cache partial hit from [`with_prefix`] (the suffix rebuild
+//! is the same resumable chunk API, not a separate code path), and a
+//! full hit skips prompt compute entirely via [`restore_full`]. Batched
+//! `ingest_prefill`/`build_shared_prefill` remain for offline/eval
+//! paths that build a whole sequence in one call.
+//!
+//! [`new`]: SequenceKV::new
+//! [`with_prefix`]: SequenceKV::with_prefix
+//! [`restore_full`]: SequenceKV::restore_full
 
 use std::sync::Arc;
 

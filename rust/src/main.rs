@@ -73,6 +73,7 @@ USAGE:
            [--reactor-threads N] [--max-conns N] [--max-line-bytes N]
            [--write-hwm N] [--idle-timeout-ms N] [--read-deadline-ms N]
            [--drain-deadline-ms N] [--prefix-cache-bytes N] [--prefix-ttl-ms N]
+           [--prefill-chunk TOKENS] [--round-budget TOKENS]
            [--no-telemetry] [--trace-out FILE] [--metrics-addr HOST:PORT]
   mustafar generate [--model M] [--backend B] [--ks S] [--vs S]
            [--prompt-seed N] [--prompt-len N] [--max-new N] [--artifacts DIR]
@@ -152,6 +153,8 @@ fn build_engine(args: &Args) -> mustafar::Result<Engine> {
     ec.max_new_tokens = args.get_usize("max-new", 64);
     ec.max_queue_ms = args.get_usize("max-queue-ms", 0) as u64;
     ec.kv_budget_bytes = args.get_usize("kv-budget", 0);
+    ec.prefill_chunk_tokens = args.get_usize("prefill-chunk", ec.prefill_chunk_tokens);
+    ec.round_token_budget = args.get_usize("round-budget", ec.round_token_budget);
     ec.prefix_cache_bytes = args.get_usize("prefix-cache-bytes", 0);
     ec.prefix_ttl_ms = args.get_usize("prefix-ttl-ms", 0) as u64;
     ec.telemetry = !args.flags.contains_key("no-telemetry");

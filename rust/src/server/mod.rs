@@ -376,6 +376,9 @@ fn stats_scalars(engine: &Engine) -> Vec<(&'static str, f64)> {
         ("trace_queries", engine.telemetry.trace_queries.get() as f64),
         ("dump_queries", engine.telemetry.dump_queries.get() as f64),
         ("metrics_queries", engine.telemetry.metrics_queries.get() as f64),
+        ("prefill_chunks", engine.telemetry.prefill_chunks.get() as f64),
+        ("prefill_preempted", engine.telemetry.prefill_preempted.get() as f64),
+        ("round_budget_tokens", engine.telemetry.round_budget_tokens.get() as f64),
     ];
     out.extend(engine.telemetry.quantile_fields());
     out

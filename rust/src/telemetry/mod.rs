@@ -94,10 +94,22 @@ pub struct Telemetry {
     /// Worker-pool job wall time, µs (recorded on worker threads —
     /// the cross-thread shard-merge path).
     pub worker_task_us: AtomicHist,
+    /// One chunked-prefill chunk (decode-path forward over ≤
+    /// `prefill_chunk_tokens` prompt tokens + reservation settle), µs.
+    pub prefill_chunk_us: AtomicHist,
     /// Observability-surface traffic.
     pub trace_queries: Counter,
     pub dump_queries: Counter,
     pub metrics_queries: Counter,
+    /// Prefill chunks executed (all sequences; a run-to-completion
+    /// prefill counts as one chunk).
+    pub prefill_chunks: Counter,
+    /// Mid-prefill sequences bounced back to the queue (pool-pressure
+    /// requeue or preemption before their first token landed).
+    pub prefill_preempted: Counter,
+    /// Tokens granted to prefill chunks by the round planner last step
+    /// (0 when the budget is disabled or nothing was mid-prefill).
+    pub round_budget_tokens: Gauge,
 }
 
 impl Telemetry {
@@ -114,9 +126,13 @@ impl Telemetry {
             pool_occupancy_bytes: AtomicHist::new(),
             write_queue_depth: AtomicHist::new(),
             worker_task_us: AtomicHist::new(),
+            prefill_chunk_us: AtomicHist::new(),
             trace_queries: Counter::default(),
             dump_queries: Counter::default(),
             metrics_queries: Counter::default(),
+            prefill_chunks: Counter::default(),
+            prefill_preempted: Counter::default(),
+            round_budget_tokens: Gauge::default(),
         }
     }
 
@@ -144,6 +160,7 @@ impl Telemetry {
             ("pool_occupancy_bytes", self.pool_occupancy_bytes.snapshot()),
             ("write_queue_depth", self.write_queue_depth.snapshot()),
             ("worker_task_us", self.worker_task_us.snapshot()),
+            ("prefill_chunk_us", self.prefill_chunk_us.snapshot()),
         ]
     }
 

@@ -120,6 +120,41 @@ pub fn chaos_trace(seed: u64, n: usize, input_len: usize, gen_len: usize) -> Vec
         .collect()
 }
 
+/// A bursty monster-prompt trace (EXPERIMENTS §12): one request with a
+/// `monster_len`-token prompt (id 0, arriving first) followed by
+/// `n_short` short interactive decoders (`short_len` prompt tokens,
+/// `gen_len` generated each). Under run-to-completion admission the
+/// monster's prefill head-of-line-blocks every decoder for its whole
+/// duration; under chunked prefill with a round token budget the
+/// decoders' inter-token latency stays bounded — the trace the
+/// chunked-prefill SLO gate and the scheduler-fairness tests replay.
+pub fn bursty_monster_trace(
+    seed: u64,
+    monster_len: usize,
+    n_short: usize,
+    short_len: usize,
+    gen_len: usize,
+) -> Vec<TraceRequest> {
+    let mut out = Vec::with_capacity(n_short + 1);
+    let mut mrng = Pcg32::new(seed.wrapping_mul(3571).wrapping_add(29), 83);
+    out.push(TraceRequest {
+        id: 0,
+        prompt: lang::gen_document(&mut mrng, monster_len),
+        max_new_tokens: gen_len,
+        cancel_after: None,
+    });
+    for i in 0..n_short {
+        let mut rng = Pcg32::new(seed.wrapping_mul(1471).wrapping_add(i as u64), 47);
+        out.push(TraceRequest {
+            id: i as u64 + 1,
+            prompt: lang::gen_document(&mut rng, short_len),
+            max_new_tokens: gen_len,
+            cancel_after: None,
+        });
+    }
+    out
+}
+
 /// A connection-storm trace (EXPERIMENTS §10): `conns` client
 /// connections each pipelining `per_conn` small requests at the server
 /// at once. Flat request list in connection-major order — request `k`
@@ -225,6 +260,23 @@ mod tests {
         assert_ne!(tr[6].prompt, tr[7].prompt);
         assert_eq!(storm_trace(9, 4, 3, 48, 8)[7].prompt, tr[7].prompt);
         assert_ne!(storm_trace(10, 4, 3, 48, 8)[7].prompt, tr[7].prompt);
+    }
+
+    #[test]
+    fn bursty_monster_trace_shape_and_determinism() {
+        let tr = bursty_monster_trace(7, 2048, 16, 24, 8);
+        assert_eq!(tr.len(), 17);
+        assert_eq!(tr[0].id, 0);
+        assert_eq!(tr[0].prompt.len(), 2048, "the monster arrives first");
+        for (i, r) in tr.iter().enumerate().skip(1) {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.prompt.len(), 24);
+            assert_eq!(r.max_new_tokens, 8);
+            assert!(r.cancel_after.is_none());
+        }
+        assert_ne!(tr[1].prompt, tr[2].prompt, "short prompts are distinct");
+        assert_eq!(bursty_monster_trace(7, 2048, 16, 24, 8)[3].prompt, tr[3].prompt);
+        assert_ne!(bursty_monster_trace(8, 2048, 16, 24, 8)[0].prompt, tr[0].prompt);
     }
 
     #[test]

@@ -23,18 +23,24 @@
 //! exactly: `MUSTAFAR_FAULT_SEED=<seed> cargo test --test chaos`.
 
 use std::collections::{BTreeMap, HashSet};
+use std::time::Duration;
 
 use mustafar::config::{Backend, EngineConfig, SparsityConfig};
-use mustafar::coordinator::{estimate_seq_bytes, Completion, Engine, Request, SubmitOutcome};
+use mustafar::coordinator::{
+    estimate_seq_bytes, Completion, Engine, FinishReason, Request, SubmitOutcome,
+};
 use mustafar::faults::Injector;
 use mustafar::kvcache::KvPolicy;
 use mustafar::model::{NativeModel, Weights};
-use mustafar::workload::trace::{chaos_trace, disconnect_trace, TraceRequest};
+use mustafar::workload::trace::{
+    bursty_monster_trace, chaos_trace, disconnect_trace, TraceRequest,
+};
 
 /// Every request-reachable fault point, armed with low per-call
 /// probabilities so runs see a mix of clean and broken behavior.
 const SPEC: &str = "kvpool.alloc:0.02,kvpool.release:0.02,worker.task:0.01,\
-                    seq.decode:0.02,seq.prefill:0.02,prefix.insert:0.05";
+                    seq.decode:0.02,seq.prefill:0.02,seq.prefill_chunk:0.02,\
+                    prefix.insert:0.05";
 
 fn base_seed() -> u64 {
     std::env::var("MUSTAFAR_FAULT_SEED")
@@ -61,7 +67,10 @@ fn tiny_cfg() -> mustafar::config::ModelConfig {
 
 /// A pressured engine: sparse backend, small pool budget (two full
 /// sequences out of a four-slot batch), prefix cache on — so alloc
-/// faults land on real reclaim paths, not an uncontended pool.
+/// faults land on real reclaim paths, not an uncontended pool. Prefill
+/// is chunked under a round budget so `seq.prefill_chunk` faults and
+/// mid-prefill cuts have live-but-not-yet-decodable sequences to land
+/// on.
 fn pressured_engine(seed: u64) -> Engine {
     let cfg = tiny_cfg();
     let policy = KvPolicy::mustafar(0.7, 0.7);
@@ -73,6 +82,27 @@ fn pressured_engine(seed: u64) -> Engine {
     ec.max_new_tokens = 64;
     ec.kv_budget_bytes = per_seq * 2;
     ec.kv_page_bytes = 1024;
+    ec.prefill_chunk_tokens = 16;
+    ec.round_token_budget = 32;
+    Engine::new_native(NativeModel::new(Weights::random_for_tests(cfg, seed)), ec)
+}
+
+/// Like [`pressured_engine`] but sized for the bursty-monster trace: the
+/// pool holds the monster plus a couple of shorts, so the monster's
+/// chunked prefill runs for many rounds while shorts churn around it.
+fn monster_engine(seed: u64) -> Engine {
+    let cfg = tiny_cfg();
+    let policy = KvPolicy::mustafar(0.7, 0.7);
+    let per_monster = estimate_seq_bytes(&policy, &cfg, 256 + 8);
+    let mut ec = EngineConfig::default();
+    ec.backend = Backend::NativeSparse;
+    ec.sparsity = SparsityConfig::mustafar(0.7, 0.7);
+    ec.max_batch = 6;
+    ec.max_new_tokens = 8;
+    ec.kv_budget_bytes = per_monster * 2;
+    ec.kv_page_bytes = 1024;
+    ec.prefill_chunk_tokens = 16;
+    ec.round_token_budget = 32;
     Engine::new_native(NativeModel::new(Weights::random_for_tests(cfg, seed)), ec)
 }
 
@@ -223,4 +253,126 @@ fn unarmed_injector_changes_nothing() {
     };
     let seed = base_seed();
     assert_eq!(run(seed), run(seed));
+}
+
+/// Deterministic synthetic prompt in-vocab for [`tiny_cfg`] (vocab 512).
+fn cut_prompt(seed: u64, len: usize) -> Vec<u16> {
+    (0..len)
+        .map(|i| (((seed as usize).wrapping_mul(131) + i * 7) % 500 + 5) as u16)
+        .collect()
+}
+
+#[test]
+fn mid_prefill_cuts_release_partial_pages_under_faults() {
+    // A sequence cut between chunks — client cancel or blown deadline —
+    // must release every partial pool page immediately, with the
+    // injector firing around it. Prompts are long relative to the chunk
+    // size and round budget, so after one step every admitted sequence
+    // is still mid-prefill; the cuts all land on live-but-not-yet-
+    // decodable state.
+    let seed = base_seed().wrapping_mul(17).wrapping_add(3);
+    let mut e = pressured_engine(seed);
+    e.set_fault_injector(Injector::parse(SPEC, seed).unwrap());
+
+    let n = 10u64;
+    let mut refused = Vec::new();
+    for i in 0..n {
+        let mut r = Request::new(i, cut_prompt(seed.wrapping_add(i), 96), 8);
+        if i % 2 == 0 {
+            // expires long before a 96-token prompt can clear 16-token
+            // chunks under a 32-token round budget
+            r.deadline_ms = Some(5);
+        }
+        match e.submit_full(r) {
+            SubmitOutcome::Queued => {}
+            SubmitOutcome::Rejected | SubmitOutcome::Shed { .. } => refused.push(i),
+        }
+    }
+
+    // one step admits the head of the queue and feeds first chunks
+    if let Err(err) = e.step() {
+        e.fail_inflight(&err.to_string());
+    }
+    let mut out: Vec<Completion> = e.take_completions();
+
+    // every odd id hangs up — queued or mid-prefill, the pages (and the
+    // accounting) must be back before the next step runs
+    for i in (1..n).step_by(2) {
+        let _ = e.cancel(i);
+        assert_eq!(
+            e.pool_stats().live_bytes,
+            e.measured_live_bytes(),
+            "accounting diverged right after cancelling {i}"
+        );
+    }
+    out.extend(e.take_completions());
+
+    // ...and the even cohort blows through its 5 ms deadline
+    std::thread::sleep(Duration::from_millis(10));
+    let mut steps = 0usize;
+    while !e.idle() {
+        if let Err(err) = e.step() {
+            e.fail_inflight(&err.to_string());
+        }
+        assert_eq!(
+            e.pool_stats().live_bytes,
+            e.measured_live_bytes(),
+            "pool accounting diverged at step {steps}"
+        );
+        out.extend(e.take_completions());
+        steps += 1;
+        assert!(steps < 20_000, "engine failed to quiesce after mid-prefill cuts");
+    }
+    out.extend(e.take_completions());
+
+    assert_exactly_once(n as usize, &out, &refused, "mid-prefill cuts");
+    assert_eq!(e.pool_stats().live_bytes, 0, "cut sequences left pages live");
+    for c in &out {
+        assert!(
+            c.tokens.is_empty(),
+            "id {} was cut pre-decode but carries tokens {:?}",
+            c.id,
+            c.tokens
+        );
+        assert_eq!(c.decode_ms, 0.0, "id {} never started decoding", c.id);
+    }
+    let timeouts = out.iter().filter(|c| c.finish == FinishReason::Timeout).count();
+    let cancels = out.iter().filter(|c| c.finish == FinishReason::Cancelled).count();
+    assert!(timeouts >= 1, "no deadline cut landed mid-prefill");
+    assert!(cancels >= 1, "no cancel cut landed mid-prefill");
+}
+
+#[test]
+fn monster_prompt_under_faults_answers_exactly_once_and_replays() {
+    // The issue's starvation scenario with the injector armed on top:
+    // one 256-token monster prefilling in 16-token chunks for many
+    // rounds while 16 shorts churn around it under pool pressure.
+    // Whatever fires, every request answers exactly once, accounting
+    // stays exact at every step, and — because the trace and the
+    // injector are both seed-deterministic — the whole run replays
+    // bit-identically, which is what makes a failing chaos seed
+    // debuggable.
+    let run = |seed: u64| -> Vec<(u64, String, Vec<u16>)> {
+        let mut e = monster_engine(seed);
+        e.set_fault_injector(Injector::parse(SPEC, seed).unwrap());
+        let trace = bursty_monster_trace(seed, 256, 16, 24, 4);
+        let n = trace.len();
+        let (out, refused, _) = drive(&mut e, trace);
+        assert_exactly_once(n, &out, &refused, &format!("monster seed {seed}"));
+        assert_eq!(e.active_count(), 0, "sequences left active");
+        assert_eq!(e.queued_count(), 0, "requests left queued");
+        assert_eq!(e.pool_stats().live_bytes, 0, "pages left live after quiescence");
+        let mut key: Vec<(u64, String, Vec<u16>)> = out
+            .iter()
+            .map(|c| (c.id, format!("{:?}", c.finish), c.tokens.clone()))
+            .collect();
+        key.sort();
+        key
+    };
+    let seed = base_seed().wrapping_mul(13).wrapping_add(1);
+    assert_eq!(
+        run(seed),
+        run(seed),
+        "armed chaos run must replay identically under a pinned seed"
+    );
 }

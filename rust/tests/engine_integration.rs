@@ -14,10 +14,15 @@
 //! Engine + server integration over the real trained model (random
 //! weights fallback keeps the test meaningful without artifacts).
 
+use std::collections::BTreeMap;
+use std::time::Duration;
+
 use mustafar::config::{Backend, EngineConfig, ModelConfig, SparsityConfig};
-use mustafar::coordinator::{Engine, Request};
+use mustafar::coordinator::{estimate_seq_bytes, Engine, FinishReason, Request};
+use mustafar::kvcache::KvPolicy;
 use mustafar::model::{NativeModel, Weights};
 use mustafar::server;
+use mustafar::workload::trace::bursty_monster_trace;
 
 fn tiny_weights() -> Weights {
     let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
@@ -85,4 +90,209 @@ fn server_round_trip_over_tcp() {
     line.clear();
     BufReader::new(stream).read_line(&mut line).unwrap();
     assert!(line.contains("error"));
+}
+
+/// A 512-position model config for tests whose prompts outgrow the
+/// tiny artifact's 256-token window (monster prompts, overcommit runs).
+fn wide_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        head_dim: 32,
+        ff: 128,
+        vocab: 512,
+        rope_theta: 10000.0,
+        max_seq: 512,
+        norm_eps: 1e-5,
+    }
+}
+
+#[test]
+fn full_prefix_hit_reports_restore_cost_in_prefill_ms() {
+    let mut ec = EngineConfig::default();
+    ec.backend = Backend::NativeSparse;
+    ec.sparsity = SparsityConfig::mustafar(0.5, 0.5);
+    ec.max_new_tokens = 4;
+    let mut e = Engine::new_native(NativeModel::new(tiny_weights()), ec);
+
+    let prompt: Vec<u16> = (0..224).map(|i| ((17 + i * 5) % 400 + 20) as u16).collect();
+    let cold = e.run_trace(vec![Request::new(0, prompt.clone(), 4)]).unwrap();
+    let hit = e.run_trace(vec![Request::new(1, prompt, 4)]).unwrap();
+
+    assert_eq!(e.metrics.prefix_full_hits, 1, "second submission must fully hit the cache");
+    assert_eq!(cold[0].tokens, hit[0].tokens, "a cache hit must not change the output");
+    // the fix under test: a full hit skips the forward pass but still
+    // pays to restore the cached pages into a live sequence — that cost
+    // is the hit's prefill, not zero
+    assert!(
+        hit[0].prefill_ms > 0.0,
+        "full-prefix-hit prefill_ms must report the restore cost, got {}",
+        hit[0].prefill_ms
+    );
+}
+
+#[test]
+fn pool_overcommit_bounces_a_sequence_and_queue_wait_spans_both_stays() {
+    // Two sequences whose combined steady-state footprint exceeds the
+    // pool are both admitted early (admission reserves per chunk, not
+    // the whole estimate up front); growth later forces the pressure
+    // ladder to requeue one of them. With the prefix cache and the
+    // re-prune ladder off, preemption is the only reclaim left, so the
+    // bounce is guaranteed. The bounced request must (a) still produce
+    // exactly the tokens an unpressured engine produces and (b) report
+    // a queue_ms that spans both queue stays, not just the last one.
+    let cfg = wide_cfg();
+    let policy = KvPolicy::mustafar(0.5, 0.5);
+    let mk = |budget: usize| {
+        let mut ec = EngineConfig::default();
+        ec.backend = Backend::NativeSparse;
+        ec.sparsity = SparsityConfig::mustafar(0.5, 0.5);
+        ec.max_batch = 2;
+        ec.max_new_tokens = 64;
+        ec.kv_budget_bytes = budget;
+        ec.kv_page_bytes = 1024;
+        ec.prefix_cache = false;
+        ec.reprune_tiers = vec![];
+        ec.prefill_chunk_tokens = 16;
+        ec.round_token_budget = 16;
+        Engine::new_native(NativeModel::new(Weights::random_for_tests(cfg.clone(), 11)), ec)
+    };
+    let reqs = || {
+        let decoder: Vec<u16> = (0..48).map(|i| ((i * 13) % 460 + 30) as u16).collect();
+        let monster: Vec<u16> = (0..160).map(|i| ((i * 7) % 460 + 25) as u16).collect();
+        vec![Request::new(0, decoder, 64), Request::new(1, monster, 4)]
+    };
+
+    // control: unbounded pool, no pressure, same chunking
+    let control = mk(0).run_trace(reqs()).unwrap();
+    let expect: BTreeMap<u64, (Vec<u16>, FinishReason)> =
+        control.iter().map(|c| (c.id, (c.tokens.clone(), c.finish))).collect();
+
+    // pressured: room for one monster plus a small margin — both admit
+    // while small, the combined 112 + 164 token footprint cannot fit
+    let mut e = mk(estimate_seq_bytes(&policy, &cfg, 180));
+    for r in reqs() {
+        use mustafar::coordinator::SubmitOutcome;
+        assert!(matches!(e.submit_full(r), SubmitOutcome::Queued));
+    }
+    // first queue stay: both requests wait measurably before admission
+    std::thread::sleep(Duration::from_millis(25));
+    let mut out = Vec::new();
+    let mut steps = 0usize;
+    let mut slept_requeued = false;
+    while !e.idle() {
+        e.step().unwrap();
+        out.extend(e.take_completions());
+        steps += 1;
+        assert!(steps < 5000, "overcommit run failed to quiesce");
+        if !slept_requeued && e.metrics.preempted >= 1 {
+            // second stay: the victim is back in the queue and cannot
+            // re-admit while the survivor holds the pool — this wait
+            // must land in its final queue_ms on top of the first stay
+            std::thread::sleep(Duration::from_millis(25));
+            slept_requeued = true;
+        }
+    }
+    out.extend(e.take_completions());
+
+    assert!(e.metrics.preempted >= 1, "overcommit never bounced a sequence");
+    assert_eq!(out.len(), 2);
+    for c in &out {
+        let (tokens, finish) = &expect[&c.id];
+        assert_eq!(&c.tokens, tokens, "id {}: bounce changed the output", c.id);
+        assert_eq!(&c.finish, finish, "id {}: bounce changed the finish", c.id);
+        // both waited out the pre-admission sleep
+        assert!(c.queue_ms >= 24.0, "id {}: queue_ms {} lost its first stay", c.id, c.queue_ms);
+    }
+    let qmax = out.iter().map(|c| c.queue_ms).fold(0.0, f64::max);
+    assert!(
+        qmax >= 48.0,
+        "bounced request's queue_ms ({qmax:.1}) does not span both queue stays"
+    );
+}
+
+#[test]
+fn decoders_inter_token_latency_is_bounded_while_a_monster_prefills() {
+    // The issue's fairness SLO, scaled to the test model: one monster
+    // prompt prefilling in chunks under a round budget must not starve
+    // 16 short decoders. Solo run (shorts only) sets the baseline
+    // inter-token p99 from the PR-8 histograms; the mixed run must stay
+    // within a fixed factor (plus a small absolute allowance for shared
+    // CI machines). Starvation-freedom itself is asserted on round
+    // counts, which are scheduling-deterministic.
+    const MONSTER: usize = 384; // tokens, 12 chunks of 32
+    const N_SHORT: usize = 16;
+    const SHORT: usize = 24;
+    const GEN: usize = 8;
+    const BUDGET: usize = 48;
+    let mk = || {
+        let mut ec = EngineConfig::default();
+        ec.backend = Backend::NativeSparse;
+        ec.sparsity = SparsityConfig::mustafar(0.5, 0.5);
+        ec.max_batch = 20;
+        ec.max_new_tokens = GEN;
+        ec.prefill_chunk_tokens = 32;
+        ec.round_token_budget = BUDGET;
+        Engine::new_native(NativeModel::new(Weights::random_for_tests(wide_cfg(), 5)), ec)
+    };
+    let trace = bursty_monster_trace(3, MONSTER, N_SHORT, SHORT, GEN);
+
+    // baseline: the 16 shorts with the monster filtered out
+    let mut solo = mk();
+    let shorts_only: Vec<Request> = trace
+        .iter()
+        .filter(|t| t.id != 0)
+        .map(|t| Request::new(t.id, t.prompt.clone(), t.max_new_tokens))
+        .collect();
+    solo.run_trace(shorts_only).unwrap();
+    let p99_solo = solo.telemetry.inter_token_us.snapshot().quantile(0.99);
+
+    // mixed: same shorts with the monster submitted first
+    let mut e = mk();
+    for t in &trace {
+        use mustafar::coordinator::SubmitOutcome;
+        let r = Request::new(t.id, t.prompt.clone(), t.max_new_tokens);
+        assert!(matches!(e.submit_full(r), SubmitOutcome::Queued));
+    }
+    let mut shorts_done = 0usize;
+    let mut shorts_done_at = 0usize;
+    let mut monster_done_at = 0usize;
+    let mut steps = 0usize;
+    while !e.idle() {
+        e.step().unwrap();
+        steps += 1;
+        assert!(steps < 2000, "mixed run failed to quiesce");
+        for c in e.take_completions() {
+            assert_eq!(c.tokens.len(), GEN, "id {} starved of decode tokens", c.id);
+            if c.id == 0 {
+                monster_done_at = steps;
+            } else {
+                shorts_done += 1;
+                shorts_done_at = steps;
+            }
+        }
+    }
+    assert_eq!(shorts_done, N_SHORT);
+
+    // budget-derived starvation bound: every round feeds at least
+    // (budget - decodables) prefill tokens (floor: one chunk), and the
+    // monster's rotation share is at most one chunk per cycle — double
+    // it all for slack and the shorts must still be done
+    let per_round = BUDGET - (N_SHORT + 1);
+    let bound = 2 * ((N_SHORT * SHORT + MONSTER) / per_round + GEN + N_SHORT + 1);
+    assert!(
+        shorts_done_at <= bound,
+        "shorts finished at round {shorts_done_at}, budget bound is {bound}"
+    );
+    assert!(monster_done_at > 0, "monster never completed");
+
+    let p99_mixed = e.telemetry.inter_token_us.snapshot().quantile(0.99);
+    assert!(
+        p99_mixed <= 50.0 * p99_solo + 5_000.0,
+        "decoder inter-token p99 {p99_mixed:.0}us vs solo {p99_solo:.0}us — \
+         chunked prefill is starving decoders"
+    );
 }
