@@ -1,0 +1,126 @@
+// Shared lint policy with the library crate (rust/src/lib.rs): these
+// allows cover numeric-harness idioms (indexed loops, config structs
+// mutated after Default::default(), positional format args).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::field_reassign_with_default,
+    clippy::uninlined_format_args,
+    clippy::manual_div_ceil,
+    clippy::type_complexity
+)]
+
+//! Deferred-compression SLO gate: a multi-sequence decode trace replayed
+//! twice on the same weights — group prune/pack deferred to the worker
+//! pool vs synchronous prune-on-commit — compared on the engine's own
+//! inter-token p99 histogram (microseconds).
+//!
+//! Every sequence has the same prompt and generation length, so their
+//! 64-token group exits land in the *same* decode rounds: in synchronous
+//! mode those rounds pay the whole batch's prune+pack on the commit
+//! path, a periodic latency spike that sits squarely in the inter-token
+//! p99. Deferred mode only bumps a pending counter in those rounds and
+//! compresses on the pool, overlapped with the next round's decode. The
+//! gate requires the deferred variant's inter-token p99 to be no worse
+//! than the synchronous one. Min-of-iterations on both sides,
+//! interleaved, so slow-host drift hits both variants alike.
+
+use mustafar::bench::{smoke_mode, BenchReport};
+use mustafar::config::{Backend, EngineConfig, ModelConfig, SparsityConfig};
+use mustafar::coordinator::{Engine, Request};
+use mustafar::fmt::Json;
+use mustafar::model::{NativeModel, Weights};
+use mustafar::util::Pcg32;
+
+fn bench_cfg() -> ModelConfig {
+    // 3 layers x 2 kv heads = 6 prune/pack jobs per exited group — enough
+    // work per spike round for the deferred/sync gap to clear host noise
+    ModelConfig {
+        name: "tiny".into(),
+        d_model: 128,
+        n_layers: 3,
+        n_heads: 4,
+        n_kv_heads: 2,
+        head_dim: 32,
+        ff: 256,
+        vocab: 512,
+        rope_theta: 10000.0,
+        max_seq: 1024,
+        norm_eps: 1e-5,
+    }
+}
+
+/// One full replay; returns the inter-token p99 in us from the engine's
+/// own telemetry histogram.
+fn run(w: &Weights, deferred: bool, n_seqs: usize, prompt_len: usize, gen: usize) -> f64 {
+    let mut ec = EngineConfig::default();
+    ec.backend = Backend::NativeSparse;
+    ec.sparsity = SparsityConfig::mustafar(0.6, 0.6);
+    ec.max_batch = n_seqs;
+    ec.max_new_tokens = gen;
+    ec.deferred_compress = deferred;
+    ec.compress_inflight_groups = 2;
+    let mut e = Engine::new_native(NativeModel::new(w.clone()), ec);
+    let mut rng = Pcg32::seeded(31);
+    let reqs: Vec<Request> = (0..n_seqs as u64)
+        .map(|i| {
+            // identical lengths: group exits synchronize across the batch
+            let prompt: Vec<u16> = (0..prompt_len).map(|_| 16 + rng.below(400) as u16).collect();
+            Request::new(i, prompt, gen)
+        })
+        .collect();
+    e.run_trace(reqs).expect("bench trace must not fail");
+    if deferred {
+        assert!(
+            e.telemetry.compress_jobs.get() > 0,
+            "deferred variant submitted no jobs — the bench is not measuring the pipeline"
+        );
+    }
+    e.telemetry.inter_token_us.snapshot().quantile(0.99)
+}
+
+fn main() {
+    let (iters, n_seqs, prompt_len, gen): (usize, usize, usize, usize) =
+        if smoke_mode() { (2, 4, 96, 96) } else { (5, 8, 96, 160) };
+    let w = Weights::random_for_tests(bench_cfg(), 19);
+
+    // warmup both paths once (page in weights, spawn/park worker pools)
+    let _ = run(&w, true, n_seqs, prompt_len, gen);
+    let _ = run(&w, false, n_seqs, prompt_len, gen);
+
+    // interleave the variants so ambient slowdowns bias neither side
+    let mut def_inter = f64::INFINITY;
+    let mut sync_inter = f64::INFINITY;
+    for _ in 0..iters {
+        sync_inter = sync_inter.min(run(&w, false, n_seqs, prompt_len, gen));
+        def_inter = def_inter.min(run(&w, true, n_seqs, prompt_len, gen));
+    }
+
+    println!(
+        "deferred compress: inter-token p99 {def_inter:.0} us vs {sync_inter:.0} us \
+         synchronous ({:.2}x)",
+        sync_inter / def_inter.max(1.0)
+    );
+
+    let mut report = BenchReport::new("deferred_compress");
+    report.meta("gate", Json::str("deferred inter_token_p99 <= synchronous"));
+    report.case(vec![
+        ("name", Json::str("synchronized_group_exits")),
+        ("sequences", Json::num(n_seqs as f64)),
+        ("prompt_tokens", Json::num(prompt_len as f64)),
+        ("decode_tokens", Json::num(gen as f64)),
+        ("deferred_inter_token_p99_us", Json::num(def_inter)),
+        ("sync_inter_token_p99_us", Json::num(sync_inter)),
+    ]);
+    report.write_or_warn();
+
+    if def_inter > sync_inter {
+        eprintln!(
+            "FAIL: deferred inter-token p99 {def_inter:.0} us loses to \
+             synchronous prune-on-commit {sync_inter:.0} us"
+        );
+        std::process::exit(1);
+    }
+    println!("deferred compress gate: PASS (inter-token p99 no worse than synchronous)");
+}

@@ -219,6 +219,28 @@ pub struct EngineConfig {
     /// admitted prompts prefill to completion within the admitting
     /// step, preserving single-step admission semantics.
     pub round_token_budget: usize,
+    /// Deferred group compression (the default): decoding sequences only
+    /// append fp16 to their dense ring tail on the hot path, and exited
+    /// 64-token groups are pruned + bitmap-packed asynchronously on the
+    /// worker pool, settled before the next round's attention reads —
+    /// token-identical to the synchronous path. `false` restores
+    /// compress-inside-`commit_token` (the comparison baseline the
+    /// `deferred_compress` bench gate measures against). Prefill always
+    /// compresses synchronously either way: its per-chunk token loop
+    /// reads attention between commits, so there is no overlap window.
+    pub deferred_compress: bool,
+    /// Max exited groups a sequence's ring tail may buffer awaiting
+    /// deferred compression before `commit_token` stalls (compresses the
+    /// oldest group synchronously in place). In engine operation the
+    /// settle-every-round schedule keeps the queue depth at 1; the
+    /// budget is the graceful-degradation bound when the compressor
+    /// falls behind.
+    pub compress_inflight_groups: usize,
+    /// Dense local attention window in tokens (the paper's recency
+    /// region, kept unpruned). Larger windows trade KV bytes for
+    /// accuracy at high sparsity tiers — see the EXPERIMENTS.md §13
+    /// NLL-vs-window sweep.
+    pub local_window: usize,
 }
 
 impl Default for EngineConfig {
@@ -242,6 +264,9 @@ impl Default for EngineConfig {
             recorder_ring: 1024,
             prefill_chunk_tokens: 64,
             round_token_budget: 0,
+            deferred_compress: true,
+            compress_inflight_groups: 2,
+            local_window: crate::prune::LOCAL_WINDOW,
         }
     }
 }

@@ -1,0 +1,309 @@
+//! Deferred KV-group compression: the engine-side coordinator that
+//! turns exited 64-token groups into fire-and-forget jobs on the shared
+//! [`WorkerPool`] and settles the results back into their sequences in
+//! exit order.
+//!
+//! The decode hot path only ever appends fp16 to a sequence's dense
+//! ring tail ([`SequenceKV::commit_token`] in deferred mode is O(1)
+//! bookkeeping); the prune → bitmap-pack work runs here, overlapped
+//! with subsequent engine rounds. The schedule that keeps this
+//! bit-identical to the synchronous path is *settle-before-read*: the
+//! engine settles every completed wave at the top of its round (before
+//! admission decisions and before any attention walk), and decode adds
+//! exactly one token per sequence per round, so a group exiting in
+//! round `t` is compressed and visible by the first attention of round
+//! `t + 1` — precisely when the synchronous path would have compressed
+//! it.
+//!
+//! Jobs operate on *copied* rows (recycled `Vec<u16>` buffers, so the
+//! steady state allocates nothing) and hold no pool pages: cancelling,
+//! preempting, or failing a sequence with jobs in flight is pure
+//! bookkeeping here ([`Compressor::abandon`]) while the pages are
+//! released exactly once through the engine's existing paths. Every job
+//! runs under its own `catch_unwind` and *always* sends a result — an
+//! injected `seq.compress` fault or a real panic comes back as a typed
+//! `Err` that poisons only the owning sequence.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::engine::panic_message;
+use crate::coordinator::pool::WorkerPool;
+use crate::error::{Error, Result};
+use crate::kvcache::{compress_group, SequenceKV};
+use crate::kvpool::OwnerId;
+use crate::sparse::BitmapMatrix;
+use crate::telemetry::{self, Telemetry};
+
+/// Recycled-input free-list cap: beyond this, returned job buffers are
+/// simply dropped (bounds idle memory after a burst of deep sequences).
+const MAX_FREE_BUFFERS: usize = 64;
+
+/// One completed per-head compression job, routed back over the result
+/// channel. Carries its input buffers home for recycling.
+struct GroupResult {
+    owner: OwnerId,
+    head: usize,
+    wave: u64,
+    out: Result<(BitmapMatrix, BitmapMatrix)>,
+    k_in: Vec<u16>,
+    v_in: Vec<u16>,
+}
+
+/// In-flight state for one sequence (pool owner).
+struct Flight {
+    /// Per-head jobs submitted but not yet received back.
+    outstanding: usize,
+    /// Results received and awaiting settle (sorted by wave at settle).
+    ready: Vec<GroupResult>,
+    /// Monotonic wave id: one wave per harvested group, settled in
+    /// submission order.
+    next_wave: u64,
+    /// Heads per wave (`n_layers * n_kv`, fixed per sequence).
+    heads: usize,
+    /// Owner left the engine: results are recycled as they arrive and
+    /// the flight is dropped once drained, never settled.
+    abandoned: bool,
+}
+
+/// Engine-owned coordinator for deferred group compression. Not a
+/// thread: submission happens on the engine thread, the prune/pack work
+/// on the worker pool, and settling back on the engine thread — so
+/// `SequenceKV` needs no locking and live-byte accounting stays an
+/// engine-thread-exact figure.
+pub struct Compressor {
+    tx: Sender<GroupResult>,
+    rx: Receiver<GroupResult>,
+    flights: HashMap<OwnerId, Flight>,
+    /// Recycled job-input buffers.
+    free: Vec<(Vec<u16>, Vec<u16>)>,
+    telemetry: Arc<Telemetry>,
+}
+
+impl Compressor {
+    pub fn new(telemetry: Arc<Telemetry>) -> Compressor {
+        let (tx, rx) = channel();
+        Compressor { tx, rx, flights: HashMap::new(), free: Vec::new(), telemetry }
+    }
+
+    /// True when no sequence has anything submitted or buffered.
+    pub fn is_idle(&self) -> bool {
+        self.flights.is_empty()
+    }
+
+    /// Owners with live (non-abandoned) flights, for the engine's settle
+    /// loop.
+    pub fn owners(&self) -> Vec<OwnerId> {
+        self.flights.iter().filter(|(_, f)| !f.abandoned).map(|(&o, _)| o).collect()
+    }
+
+    /// Groups submitted but not yet settled, across all sequences (the
+    /// `compress_backlog` gauge's in-flight half).
+    pub fn backlog_groups(&self) -> usize {
+        self.flights
+            .values()
+            .map(|f| (f.outstanding + f.ready.len()).div_ceil(f.heads.max(1)))
+            .sum()
+    }
+
+    /// Harvest every pending group of `kv` into per-head worker jobs.
+    /// `fails[g]` marks group `g`'s jobs for an injected `seq.compress`
+    /// failure (the fault is *consulted* on the engine thread for
+    /// deterministic replay; it *fires* inside the job as a panic so the
+    /// isolation path is the one a real kernel bug would take). Returns
+    /// the number of per-head jobs submitted.
+    pub fn submit_pending(
+        &mut self,
+        pool: &WorkerPool,
+        owner: OwnerId,
+        kv: &mut SequenceKV,
+        fails: &[bool],
+    ) -> u64 {
+        let groups = fails.len();
+        debug_assert_eq!(groups, kv.pending_groups());
+        if groups == 0 {
+            return 0;
+        }
+        let heads = kv.n_layers * kv.n_kv;
+        let hd = kv.hd;
+        let policy = kv.policy;
+        let flight = self.flights.entry(owner).or_insert(Flight {
+            outstanding: 0,
+            ready: Vec::new(),
+            next_wave: 0,
+            heads,
+            abandoned: false,
+        });
+        let mut submitted = 0u64;
+        for (slot, &fail) in fails.iter().enumerate() {
+            let wave = flight.next_wave;
+            flight.next_wave += 1;
+            for head in 0..heads {
+                let (mut k_in, mut v_in) = self.free.pop().unwrap_or_default();
+                {
+                    let (kr, vr) = kv.pending_group_rows(head, slot);
+                    k_in.clear();
+                    k_in.extend_from_slice(kr);
+                    v_in.clear();
+                    v_in.extend_from_slice(vr);
+                }
+                let tx = self.tx.clone();
+                let tel = Arc::clone(&self.telemetry);
+                let job = move || {
+                    let t0 = Instant::now();
+                    let out = catch_unwind(AssertUnwindSafe(|| {
+                        if fail {
+                            panic!("injected fault: seq.compress");
+                        }
+                        compress_group(&policy, hd, &k_in, &v_in)
+                    }))
+                    .unwrap_or_else(|payload| {
+                        Err(Error::Engine(format!(
+                            "isolated panic in compression job: {}",
+                            panic_message(payload.as_ref())
+                        )))
+                    });
+                    if tel.on() {
+                        tel.compress_us.record(telemetry::us(t0.elapsed()));
+                    }
+                    // the engine may already have dropped (shutdown);
+                    // a dead receiver is fine
+                    let _ = tx.send(GroupResult { owner, head, wave, out, k_in, v_in });
+                };
+                // a shutting-down pool degrades to inline execution so
+                // the settle loop still sees every result
+                if let Err(job) = pool.submit_detached(Box::new(job)) {
+                    job();
+                }
+                flight.outstanding += 1;
+                submitted += 1;
+            }
+        }
+        kv.mark_harvested(groups);
+        submitted
+    }
+
+    /// Absorb any results that have already arrived without blocking
+    /// (keeps abandoned flights draining and the ready queues warm).
+    pub fn drain_idle(&mut self) {
+        while let Ok(r) = self.rx.try_recv() {
+            self.route(r);
+        }
+    }
+
+    /// Mark every flight whose owner is not in `live` as abandoned: its
+    /// buffered results are recycled now, stragglers recycle on arrival,
+    /// and the flight is dropped once drained. The compressor holds no
+    /// pool pages, so this is pure bookkeeping — page release stays with
+    /// the engine's existing (exactly-once) retirement paths.
+    pub fn sweep_abandoned(&mut self, live: &[OwnerId]) {
+        let dead: Vec<OwnerId> =
+            self.flights.keys().filter(|o| !live.contains(o)).copied().collect();
+        for owner in dead {
+            self.abandon(owner);
+        }
+    }
+
+    /// Abandon one owner's flight (cancel/deadline/preempt/poison).
+    pub fn abandon(&mut self, owner: OwnerId) {
+        let Some(flight) = self.flights.get_mut(&owner) else {
+            return;
+        };
+        flight.abandoned = true;
+        let drained = std::mem::take(&mut flight.ready);
+        let done = flight.outstanding == 0;
+        for r in drained {
+            self.recycle(r.k_in, r.v_in);
+        }
+        if done {
+            self.flights.remove(&owner);
+        }
+    }
+
+    /// Block until every outstanding job for `owner` has reported, then
+    /// settle the completed waves into `kv` in exit order. Returns
+    /// `Ok(true)` if anything settled, `Ok(false)` for no flight, and
+    /// `Err` when any job failed (injected fault or isolated panic) —
+    /// the sequence's earlier waves are still settled exactly, so
+    /// live-byte accounting stays truthful while the engine poisons it.
+    pub fn settle_owner(&mut self, owner: OwnerId, kv: &mut SequenceKV) -> Result<bool> {
+        if !self.flights.contains_key(&owner) {
+            return Ok(false);
+        }
+        while self.flights.get(&owner).is_some_and(|f| f.outstanding > 0) {
+            match self.rx.recv() {
+                Ok(r) => self.route(r),
+                // unreachable: we hold a sender clone for the channel's
+                // whole lifetime
+                Err(_) => return Err(Error::Engine("compressor result channel closed".into())),
+            }
+        }
+        let Some(flight) = self.flights.remove(&owner) else {
+            return Ok(false);
+        };
+        let heads = flight.heads;
+        let mut ready = flight.ready;
+        ready.sort_by_key(|r| (r.wave, r.head));
+        let mut results = ready.into_iter();
+        let mut failure: Option<Error> = None;
+        loop {
+            let wave: Vec<GroupResult> = results.by_ref().take(heads).collect();
+            if wave.is_empty() {
+                break;
+            }
+            let mut parts = Vec::with_capacity(heads);
+            for r in wave {
+                let GroupResult { out, k_in, v_in, .. } = r;
+                match out {
+                    Ok(pair) => parts.push(pair),
+                    Err(e) => {
+                        if failure.is_none() {
+                            failure = Some(e);
+                        }
+                    }
+                }
+                self.recycle(k_in, v_in);
+            }
+            // a failed wave (and, for ordering, everything after it)
+            // never settles; the sequence is poisoned by the caller
+            if failure.is_none() {
+                kv.settle_group(parts)?;
+            }
+        }
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(true),
+        }
+    }
+
+    fn route(&mut self, r: GroupResult) {
+        let Some(flight) = self.flights.get_mut(&r.owner) else {
+            // flight already dropped (abandoned + fully drained before
+            // this straggler): just reclaim the buffers
+            let GroupResult { k_in, v_in, .. } = r;
+            self.recycle(k_in, v_in);
+            return;
+        };
+        flight.outstanding = flight.outstanding.saturating_sub(1);
+        if flight.abandoned {
+            let done = flight.outstanding == 0;
+            let owner = r.owner;
+            let GroupResult { k_in, v_in, .. } = r;
+            self.recycle(k_in, v_in);
+            if done {
+                self.flights.remove(&owner);
+            }
+        } else {
+            flight.ready.push(r);
+        }
+    }
+
+    fn recycle(&mut self, k_in: Vec<u16>, v_in: Vec<u16>) {
+        if self.free.len() < MAX_FREE_BUFFERS {
+            self.free.push((k_in, v_in));
+        }
+    }
+}

@@ -50,6 +50,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::{Backend, EngineConfig};
+use crate::coordinator::compress::Compressor;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pjrt_backend::{PjrtBackend, PjrtSeq};
 use crate::coordinator::pool::WorkerPool;
@@ -125,6 +126,10 @@ pub struct Engine {
     /// worker-thread fault fires into recorder events deterministically
     /// (diffed and sorted on the engine thread).
     fault_fires: Vec<(String, u64)>,
+    /// Deferred group-compression coordinator: exited groups harvested
+    /// after each decode round into detached worker jobs, settled at the
+    /// top of the next step (before admission and any attention read).
+    compressor: Compressor,
 }
 
 /// What `Engine::submit_full` did with a request.
@@ -150,7 +155,7 @@ impl Engine {
                 sparsity: cfg.sparsity,
                 quant: None,
                 compress: true,
-                local_window: crate::prune::LOCAL_WINDOW,
+                local_window: cfg.local_window.max(1),
             },
         };
         let scheduler = Scheduler::new(cfg.clone(), model.cfg().clone(), policy);
@@ -167,6 +172,7 @@ impl Engine {
         let spans = SpanRing::new(cfg.trace_ring);
         let recorder = FlightRecorder::new(cfg.recorder_ring);
         Engine {
+            compressor: Compressor::new(Arc::clone(&tel)),
             telemetry: tel,
             spans,
             recorder,
@@ -339,6 +345,12 @@ impl Engine {
         // `prefix_ttl_ms` is set) — before admission so the freed pages
         // are available to this step's arrivals.
         self.metrics.prefix_ttl_evictions += self.prefix_cache.expire_idle(&mut self.kvpool);
+        // Settle last round's deferred compression jobs before admission
+        // decisions (live-byte accounting must reflect the settled
+        // layout) and before any attention read (bit-exactness: an
+        // exited group is compressed by the first attention after its
+        // exit, exactly like the synchronous path).
+        self.settle_compressions();
         self.admit_new()?;
         let work_t0 = Instant::now();
         self.prefill_round();
@@ -354,6 +366,10 @@ impl Engine {
                 self.telemetry.inter_token_us.record(gap_us);
             }
         }
+        // Harvest the groups this round's commits pushed out of the
+        // window into detached worker jobs — they compress overlapped
+        // with everything the engine does until the next settle.
+        self.harvest_compressions();
         self.sync_pool();
         if self.telemetry.on() {
             self.telemetry.pool_occupancy_bytes.record(self.kvpool.stats().live_bytes as u64);
@@ -787,6 +803,18 @@ impl Engine {
         if self.seq_finished(&seq) {
             self.finish(seq);
         } else {
+            // Decode from here on: switch the KV write path to the
+            // append-only ring tail. Prefill (above) always ran
+            // synchronously — its per-chunk token loop reads attention
+            // between commits, so there is no overlap window to exploit
+            // and the sync path keeps prefix snapshots and mid-prefill
+            // resume structurally identical.
+            if self.deferred_on() {
+                if let SeqState::Native(kv) = &mut seq.state {
+                    // enabling never flushes, so this cannot fail
+                    let _ = kv.set_deferred(true, self.cfg.compress_inflight_groups);
+                }
+            }
             seq.decode_start = Instant::now();
             self.active.push(seq);
         }
@@ -1133,6 +1161,15 @@ impl Engine {
             s.prefill = None;
             s.decode_start = Instant::now();
         }
+        // Prefill done (and any prefix snapshot taken above, while the
+        // ring was clean): decode commits from here on go through the
+        // deferred append-only tail.
+        if self.deferred_on() {
+            let budget = self.cfg.compress_inflight_groups;
+            if let SeqState::Native(kv) = &mut self.active[idx].state {
+                let _ = kv.set_deferred(true, budget);
+            }
+        }
         self.metrics.generated_tokens += 1;
         if self.telemetry.on() {
             let prefill_ms = self.active[idx].prefill_ms;
@@ -1244,12 +1281,15 @@ impl Engine {
             return true;
         };
         s.reprune_tier = next_tier;
-        let t0 = Instant::now();
-        if kv.reprune(sparsity, sparsity).is_err() {
-            return false;
-        }
         let owner = s.owner;
         let id = s.req.id;
+        let t0 = Instant::now();
+        if self.reprune_heads_parallel(i, sparsity).is_err() {
+            return false;
+        }
+        let SeqState::Native(kv) = &self.active[i].state else {
+            return false; // unreachable: matched Native above
+        };
         let bytes = kv.private_bytes();
         if self.telemetry.on() {
             self.telemetry.prune_us.record(telemetry::us(t0.elapsed()));
@@ -1259,6 +1299,59 @@ impl Engine {
         self.metrics.repruned += 1;
         self.recorder.note("reprune", id, next_tier as u64);
         true
+    }
+
+    /// Raise one native sequence's sparsity in place, fanning the
+    /// per-head re-prune across the worker pool (heads are independent —
+    /// the same batch parallelism decode uses). Each head job catches
+    /// its own panics so a bad head fails the re-prune, not the engine
+    /// thread. The deferred pipeline needs no special casing: queued and
+    /// in-flight groups are still dense tail bytes, and only the
+    /// already-compressed region is repruned.
+    fn reprune_heads_parallel(&mut self, idx: usize, sparsity: f64) -> Result<()> {
+        self.ensure_pool();
+        let Engine { active, pool, .. } = self;
+        let SeqState::Native(kv) = &mut active[idx].state else {
+            return Ok(());
+        };
+        let (raise_k, raise_v, kk_k, kk_v) = kv.reprune_plan(sparsity, sparsity);
+        if !raise_k && !raise_v {
+            kv.apply_reprune_policy(sparsity, sparsity);
+            return Ok(());
+        }
+        let hd = kv.hd;
+        let pool = pool.as_ref().expect("ensure_pool");
+        let heads = kv.heads_mut();
+        let n = heads.len();
+        let mut slots: Vec<Option<Result<()>>> = (0..n).map(|_| None).collect();
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = heads
+            .iter_mut()
+            .zip(slots.iter_mut())
+            .map(|(h, slot)| {
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    *slot = Some(
+                        catch_unwind(AssertUnwindSafe(|| {
+                            crate::kvcache::reprune_head_inplace(
+                                h, hd, raise_k, raise_v, kk_k, kk_v,
+                            )
+                        }))
+                        .unwrap_or_else(|payload| {
+                            Err(crate::Error::Engine(format!(
+                                "isolated panic during reprune: {}",
+                                panic_message(payload.as_ref())
+                            )))
+                        }),
+                    );
+                });
+                job
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        for r in slots {
+            r.unwrap_or(Err(crate::Error::Engine("reprune job dropped".into())))?;
+        }
+        kv.apply_reprune_policy(sparsity, sparsity);
+        Ok(())
     }
 
     /// Recompute-style preemption: drop the sequence's state (pages and
@@ -1292,6 +1385,15 @@ impl Engine {
     fn sync_pool(&mut self) {
         let owners: Vec<(OwnerId, u64)> =
             self.active.iter().map(|s| (s.owner, s.admitted_seq)).collect();
+        self.resettle_owner_bytes(owners);
+    }
+
+    /// Re-settle the given owners' reservations against their actual
+    /// footprints, with the bounded reclaim ladder. Shared by the
+    /// post-round `sync_pool` and the compression settle (whose settled
+    /// sequences just swapped dense tail bytes for compressed bytes and
+    /// must be re-accounted before admission reads the pool).
+    fn resettle_owner_bytes(&mut self, owners: Vec<(OwnerId, u64)>) {
         for (owner, stamp) in owners {
             let mut attempts = 0;
             loop {
@@ -1324,6 +1426,134 @@ impl Engine {
                     }
                 }
             }
+        }
+    }
+
+    /// Whether this engine runs the deferred compression pipeline: a
+    /// native backend with compression on and the config knob set. The
+    /// dense baseline never compresses, and PJRT sequences own no
+    /// engine-side tail, so both stay on their existing paths.
+    fn deferred_on(&self) -> bool {
+        self.cfg.deferred_compress
+            && self.policy.compress
+            && matches!(self.cfg.backend, Backend::NativeDense | Backend::NativeSparse)
+    }
+
+    /// Create the worker pool if it does not exist yet. Decode creates
+    /// it lazily on the first batched round; the deferred compressor and
+    /// the parallel re-prune need it even for single-sequence workloads.
+    fn ensure_pool(&mut self) {
+        if self.pool.is_none() {
+            let workers = crate::util::threads().min(self.cfg.max_batch.max(1));
+            let tel = Arc::clone(&self.telemetry);
+            self.pool = Some(WorkerPool::new_with_telemetry(workers, tel));
+        }
+    }
+
+    /// Top-of-step settle: absorb every completed compression job, apply
+    /// the waves to their sequences in exit order, poison any sequence
+    /// whose job failed (injected `seq.compress` fault or an isolated
+    /// worker panic), and re-settle the settled owners' reservations so
+    /// this step's admission decisions see exact live bytes. Runs before
+    /// any attention read, which is what keeps the deferred pipeline
+    /// bit-identical to synchronous compression (see
+    /// `coordinator::compress`).
+    fn settle_compressions(&mut self) {
+        if self.compressor.is_idle() {
+            return;
+        }
+        self.compressor.drain_idle();
+        // owners that left the engine since submitting (finish, cancel,
+        // deadline, preempt, decode casualty) drop their flights here —
+        // their pages were already released exactly once on those paths,
+        // and the compressor holds only copied rows
+        let live: Vec<OwnerId> = self.active.iter().map(|s| s.owner).collect();
+        self.compressor.sweep_abandoned(&live);
+        let mut settled: Vec<(OwnerId, u64)> = Vec::new();
+        for owner in self.compressor.owners() {
+            let Some(idx) = self.active.iter().position(|s| s.owner == owner) else {
+                continue; // unreachable after the sweep
+            };
+            let stamp = self.active[idx].admitted_seq;
+            let SeqState::Native(kv) = &mut self.active[idx].state else {
+                continue;
+            };
+            match self.compressor.settle_owner(owner, kv) {
+                Ok(true) => settled.push((owner, stamp)),
+                Ok(false) => {}
+                Err(e) => {
+                    // poison exactly this sequence: its earlier waves
+                    // settled exactly (accounting stays truthful), the
+                    // waiter gets one Error finish, the pages come back
+                    // now, and the batch keeps going
+                    let s = self.active.swap_remove(idx);
+                    let kvb = self.seq_kv_bytes(&s.state);
+                    self.note_kv_peaks(kvb);
+                    self.kvpool.release(s.owner);
+                    self.compressor.abandon(owner);
+                    self.metrics.failed += 1;
+                    self.metrics.isolated_panics += 1;
+                    self.recorder.note("compress_fail", s.req.id, s.generated.len() as u64);
+                    self.recorder.trigger_auto_dump("compression job failed");
+                    self.completions.push(s.into_completion(
+                        FinishReason::Error,
+                        Some(format!("deferred compression failed: {e}")),
+                        kvb,
+                    ));
+                }
+            }
+        }
+        // settled sequences swapped dense tail bytes for compressed
+        // bytes: re-account them (ladder included) before admission
+        self.resettle_owner_bytes(settled);
+        if self.telemetry.on() {
+            self.telemetry.compress_backlog.set(self.compressor.backlog_groups() as u64);
+        }
+    }
+
+    /// Post-round harvest: hand every sequence's newly exited groups to
+    /// the worker pool as detached jobs, overlapped with everything the
+    /// engine does until the next settle. The `seq.compress` fault is
+    /// *consulted* here, on the engine thread, once per harvested group
+    /// — deterministic under a pinned seed regardless of worker
+    /// interleaving — and *fires* inside the job.
+    fn harvest_compressions(&mut self) {
+        if !self.deferred_on() {
+            return;
+        }
+        let mut stalls = 0u64;
+        let mut any = false;
+        for s in &mut self.active {
+            if let SeqState::Native(kv) = &mut s.state {
+                stalls += kv.take_stalls();
+                any |= kv.pending_groups() > 0;
+            }
+        }
+        if stalls > 0 {
+            self.telemetry.compress_stalls.add(stalls);
+        }
+        if any {
+            self.ensure_pool();
+            let Engine { active, pool, compressor, faults, .. } = self;
+            let pool = pool.as_ref().expect("ensure_pool");
+            let mut jobs = 0u64;
+            for s in active.iter_mut() {
+                let SeqState::Native(kv) = &mut s.state else {
+                    continue;
+                };
+                let groups = kv.pending_groups();
+                if groups == 0 {
+                    continue;
+                }
+                let fails: Vec<bool> = (0..groups).map(|_| faults.fire("seq.compress")).collect();
+                jobs += compressor.submit_pending(pool, s.owner, kv, &fails);
+            }
+            if jobs > 0 {
+                self.telemetry.compress_jobs.add(jobs);
+            }
+        }
+        if self.telemetry.on() {
+            self.telemetry.compress_backlog.set(self.compressor.backlog_groups() as u64);
         }
     }
 
@@ -1743,7 +1973,7 @@ enum DecodeOutcome {
 }
 
 /// Best-effort text of a caught panic payload.
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
     if let Some(s) = payload.downcast_ref::<&'static str>() {
         s
     } else if let Some(s) = payload.downcast_ref::<String>() {

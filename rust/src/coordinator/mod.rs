@@ -2,6 +2,7 @@
 //! continuous batching, prefill/decode scheduling, and the compressed
 //! KV-cache lifecycle (prune + compress on local-window exit).
 
+pub mod compress;
 pub mod engine;
 pub mod metrics;
 pub mod pjrt_backend;

@@ -19,11 +19,23 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// Panic payload carried back from a worker (`None` = job completed).
 type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
 
+/// One queued unit of work. Scoped tasks participate in `run_scoped`'s
+/// completion barrier (one done-channel message each, panic payloads
+/// re-raised on the caller); detached tasks do not — they report their
+/// outcome through whatever channel the job itself carries (the deferred
+/// compressor's result queue), so a detached panic is swallowed here
+/// after the job's own `catch_unwind` has already converted it.
+enum Task {
+    Scoped(Job),
+    Detached(Job),
+}
+
 /// Fixed-size pool of parked worker threads executing borrowed jobs with
 /// a scoped-join guarantee (`run_scoped` blocks until every submitted
-/// job has finished).
+/// job has finished). Detached fire-and-forget jobs (`submit_detached`)
+/// share the same workers and queue but skip the barrier.
 pub struct WorkerPool {
-    tx: Option<Sender<Job>>,
+    tx: Option<Sender<Task>>,
     done_rx: Receiver<Option<PanicPayload>>,
     handles: Vec<JoinHandle<()>>,
     size: usize,
@@ -46,7 +58,7 @@ impl WorkerPool {
 
     fn spawn(size: usize, tel: Option<Arc<Telemetry>>) -> WorkerPool {
         let size = size.max(1);
-        let (tx, rx) = channel::<Job>();
+        let (tx, rx) = channel::<Task>();
         let rx = Arc::new(Mutex::new(rx));
         let (done_tx, done_rx) = channel::<Option<PanicPayload>>();
         let tel = tel.filter(|t| t.on());
@@ -59,12 +71,16 @@ impl WorkerPool {
                     .name(format!("decode-worker-{i}"))
                     .spawn(move || loop {
                         // hold the lock only while dequeueing
-                        let job = match rx.lock() {
+                        let task = match rx.lock() {
                             Ok(guard) => guard.recv(),
                             Err(_) => break,
                         };
-                        match job {
-                            Ok(job) => {
+                        match task {
+                            Ok(task) => {
+                                let (job, scoped) = match task {
+                                    Task::Scoped(job) => (job, true),
+                                    Task::Detached(job) => (job, false),
+                                };
                                 // carry the payload back so run_scoped can
                                 // resume_unwind with the original message
                                 let t0 = tel.as_ref().map(|_| Instant::now());
@@ -75,7 +91,10 @@ impl WorkerPool {
                                 if let (Some(tel), Some(t0)) = (tel.as_ref(), t0) {
                                     tel.worker_task_us.record(telemetry::us(t0.elapsed()));
                                 }
-                                if done.send(payload).is_err() {
+                                // detached tasks never touch the barrier
+                                // channel: run_scoped counts exactly its
+                                // own submissions
+                                if scoped && done.send(payload).is_err() {
                                     break;
                                 }
                             }
@@ -86,6 +105,20 @@ impl WorkerPool {
             })
             .collect();
         WorkerPool { tx: Some(tx), done_rx, handles, size }
+    }
+
+    /// Queue a fire-and-forget job on the pool. If the pool is shutting
+    /// down the job is handed back unrun so the caller can execute it
+    /// inline. The job is responsible for reporting its own outcome
+    /// (including catching its own panics); `run_scoped`'s barrier is
+    /// unaffected.
+    pub fn submit_detached(&self, job: Job) -> std::result::Result<(), Job> {
+        match &self.tx {
+            Some(tx) => tx.send(Task::Detached(job)).map_err(|e| match e.0 {
+                Task::Detached(job) | Task::Scoped(job) => job,
+            }),
+            None => Err(job),
+        }
     }
 
     pub fn size(&self) -> usize {
@@ -114,7 +147,7 @@ impl WorkerPool {
             let alive = self
                 .tx
                 .as_ref()
-                .map(|tx| tx.send(job).is_ok())
+                .map(|tx| tx.send(Task::Scoped(job)).is_ok())
                 .unwrap_or(false);
             if !alive {
                 eprintln!("fatal: decode worker pool unavailable mid-dispatch");
@@ -221,6 +254,48 @@ mod tests {
             pool.run_scoped(jobs);
         }
         assert_eq!(tel.worker_task_us.snapshot().count(), 12);
+    }
+
+    #[test]
+    fn detached_jobs_share_workers_without_touching_the_barrier() {
+        let pool = WorkerPool::new(2);
+        let (tx, rx) = std::sync::mpsc::channel::<usize>();
+        for i in 0..8 {
+            let tx = tx.clone();
+            assert!(pool
+                .submit_detached(Box::new(move || {
+                    let _ = tx.send(i);
+                }))
+                .is_ok());
+        }
+        // a scoped round interleaved with the detached stream still
+        // counts exactly its own jobs at the barrier
+        let count = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let c = &count;
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(count.load(Ordering::Relaxed), 4);
+        let mut got: Vec<usize> = (0..8).map(|_| rx.recv().unwrap()).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn detached_panic_is_contained_and_pool_survives() {
+        let pool = WorkerPool::new(1);
+        assert!(pool.submit_detached(Box::new(|| panic!("detached boom"))).is_ok());
+        let done = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| {
+            done.fetch_add(1, Ordering::Relaxed);
+        })];
+        pool.run_scoped(jobs);
+        assert_eq!(done.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -43,10 +43,10 @@ impl ExpCtx {
 }
 
 /// All known experiment ids, in run order.
-pub const ALL_EXPERIMENTS: [&str; 15] = [
+pub const ALL_EXPERIMENTS: [&str; 16] = [
     "fig2", "table1", "table2", "table3", "table4", "table5", "table6",
     "table7", "table8", "table9", "table10", "table11", "table12", "fig6b",
-    "ppl",
+    "ppl", "window",
 ];
 
 /// Dispatch one experiment by id ("all" runs everything).
@@ -77,6 +77,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "table12" => table12(ctx),
         "fig6b" => fig6b(ctx),
         "ppl" => ppl_study(ctx),
+        "window" => window_study(ctx),
         other => Err(Error::Invalid(format!("unknown experiment '{other}'"))),
     }
 }
@@ -477,6 +478,44 @@ fn ppl_study(ctx: &ExpCtx) -> Result<()> {
         out.push('\n');
     }
     ctx.write_report("ppl", &out)
+}
+
+/// §13 — held-out NLL vs dense local-window size, per sparsity tier.
+/// The local window is the deferred pipeline's ring-tail floor (the
+/// most recent `window` tokens always stay dense), so this table is
+/// the quality side of the window knob: how much NLL each tier buys
+/// back as the dense window grows from 8 to 64 tokens.
+fn window_study(ctx: &ExpCtx) -> Result<()> {
+    let windows = [8usize, 16, 32, 64];
+    let tiers = [0.5f64, 0.7, 0.9];
+    let mut out = String::from(
+        "# §13 — held-out NLL (nats/token) vs local window size\n\n         \
+         Rows sweep the dense local window (the ring-tail floor of the\n         \
+         deferred compression pipeline); columns sweep the Mustafar\n         \
+         sparsity tier. Dense NLL is the shared floor.\n\n",
+    );
+    for name in ["gqa-small", "mha-small"] {
+        let Ok(model) = ctx.model(name) else { continue };
+        let (ns, cl) = (ctx.n_samples.min(12), ctx.ctx_len.min(384));
+        let dense = crate::eval::ppl::sweep_nll(&model, &[EvalConfig::dense()], ns, cl)[0];
+        let mut header = vec!["window".to_string()];
+        header.extend(tiers.iter().map(|t| format!("K{t} V{t}")));
+        let cols: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&format!("window — {name} (dense NLL {})", fnum(dense, 4)), &cols);
+        for &w in &windows {
+            let cfgs: Vec<EvalConfig> =
+                tiers.iter().map(|&s| EvalConfig::mustafar(s, s)).collect();
+            let nll = crate::eval::ppl::sweep_nll_window(&model, &cfgs, ns, cl, w);
+            let mut row = vec![w.to_string()];
+            row.extend(nll.iter().map(|&x| fnum(x, 4)));
+            t.row(row);
+        }
+        let body = t.render();
+        println!("{body}");
+        out.push_str(&body);
+        out.push('\n');
+    }
+    ctx.write_report("window", &out)
 }
 
 // ---------------------------------------------------------------------------

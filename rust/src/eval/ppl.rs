@@ -16,9 +16,25 @@ use crate::prune::LOCAL_WINDOW;
 use crate::util::Pcg32;
 use crate::workload::lang;
 
-/// Mean NLL (nats/token) of the continuation under each config.
+/// Mean NLL (nats/token) of the continuation under each config, with
+/// the paper's default local window.
 pub fn doc_nll(model: &NativeModel, doc: &[u16], split: usize, cfgs: &[EvalConfig]) -> Vec<f64> {
+    doc_nll_window(model, doc, split, cfgs, LOCAL_WINDOW)
+}
+
+/// [`doc_nll`] with an explicit dense local-window size — the §13
+/// window-vs-quality sweep varies it against the sparsity tier (a
+/// larger window keeps more recent tokens dense, trading ring-tail
+/// bytes for NLL).
+pub fn doc_nll_window(
+    model: &NativeModel,
+    doc: &[u16],
+    split: usize,
+    cfgs: &[EvalConfig],
+    window: usize,
+) -> Vec<f64> {
     assert!(split > 0 && split < doc.len());
+    assert!(window > 0, "local window must be at least one token");
     let pre = model.prefill(&doc[..split], cfgs.iter().any(|c| needs_aux(c)));
     let mcfg = model.cfg();
 
@@ -30,7 +46,7 @@ pub fn doc_nll(model: &NativeModel, doc: &[u16], split: usize, cfgs: &[EvalConfi
                 compress: cfg.sparsity.key_method != crate::prune::Method::None
                     || cfg.sparsity.value_method != crate::prune::Method::None
                     || cfg.quant.is_some(),
-                local_window: LOCAL_WINDOW,
+                local_window: window,
             };
             let mut kv = SequenceKV::new(policy, mcfg.n_layers, mcfg.n_kv_heads, mcfg.head_dim)
                 .expect("kv geometry");
@@ -60,12 +76,24 @@ fn token_nll(logits: &[f32], gold: u16) -> f64 {
     -((logits[gold as usize] - m) as f64 - denom.ln())
 }
 
-/// Average doc_nll over `n_docs` held-out documents of length `len`.
+/// Average doc_nll over `n_docs` held-out documents of length `len`,
+/// with the paper's default local window.
 pub fn sweep_nll(
     model: &NativeModel,
     cfgs: &[EvalConfig],
     n_docs: usize,
     len: usize,
+) -> Vec<f64> {
+    sweep_nll_window(model, cfgs, n_docs, len, LOCAL_WINDOW)
+}
+
+/// [`sweep_nll`] with an explicit dense local-window size.
+pub fn sweep_nll_window(
+    model: &NativeModel,
+    cfgs: &[EvalConfig],
+    n_docs: usize,
+    len: usize,
+    window: usize,
 ) -> Vec<f64> {
     let mut totals = vec![0.0f64; cfgs.len()];
     let work: Vec<u64> = (0..n_docs as u64).collect();
@@ -77,7 +105,7 @@ pub fn sweep_nll(
                     // held-out stream: seeds far from the training stream
                     let mut rng = Pcg32::new(9_000_000 + i, 54);
                     let doc = lang::gen_document(&mut rng, len);
-                    doc_nll(model, &doc, len / 2, cfgs)
+                    doc_nll_window(model, &doc, len / 2, cfgs, window)
                 })
             })
             .collect();
@@ -132,6 +160,19 @@ mod tests {
         // even a random model: destroying 95% of the cache must not
         // *improve* held-out NLL relative to dense (sanity direction)
         assert!(nll[2] >= nll[0] - 0.05, "{nll:?}");
+    }
+
+    #[test]
+    fn window_sweep_is_finite_and_default_window_matches() {
+        let model = tiny();
+        let cfgs = vec![EvalConfig::mustafar(0.7, 0.7)];
+        let a = sweep_nll(&model, &cfgs, 2, 160);
+        let b = sweep_nll_window(&model, &cfgs, 2, 160, LOCAL_WINDOW);
+        assert_eq!(a, b, "default-window delegate must be exact");
+        for w in [8usize, 64] {
+            let n = sweep_nll_window(&model, &cfgs, 2, 160, w);
+            assert!(n[0].is_finite() && n[0] > 0.0, "window {w}: {n:?}");
+        }
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! [`with_prefix`]: SequenceKV::with_prefix
 //! [`restore_full`]: SequenceKV::restore_full
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
 use crate::config::SparsityConfig;
@@ -41,6 +42,109 @@ use crate::sparse::{BitmapMatrix, PackAxis, TILE};
 
 /// Dense-tail capacity: one compression group in flight + local window.
 pub const TAIL_CAP: usize = TILE + prune::LOCAL_WINDOW;
+
+thread_local! {
+    /// Reusable widen/prune scratch for group compression: one (K, V)
+    /// pair of `[TILE * hd]` f32 buffers per thread, shared by the
+    /// synchronous `commit_token` path (engine thread) and the deferred
+    /// compression jobs (worker threads). Replaces the two fresh
+    /// `vec![0.0; TILE * hd]` allocations every group exit used to pay —
+    /// once a thread's pair has grown to the largest head_dim it
+    /// compresses, steady-state group compression allocates nothing.
+    static COMPRESS_SCRATCH: RefCell<(Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Run `f` with this thread's reusable `[elems]` widen/prune scratch
+/// pair (grown on demand, never shrunk). Not reentrant.
+pub fn with_compress_scratch<R>(elems: usize, f: impl FnOnce(&mut [f32], &mut [f32]) -> R) -> R {
+    COMPRESS_SCRATCH.with(|cell| {
+        let mut pair = cell.borrow_mut();
+        let (kg, vg) = &mut *pair;
+        if kg.len() < elems {
+            kg.resize(elems, 0.0);
+            vg.resize(elems, 0.0);
+        }
+        f(&mut kg[..elems], &mut vg[..elems])
+    })
+}
+
+/// Widen one exited 64-token group from binary16 into the provided
+/// scratch and apply the runtime policy in place: per-token magnitude
+/// prune (the paper's kernel method; output-aware scores are a
+/// prefill-time notion) + optional fake quantization. A pure per-group
+/// function of the policy and the rows, shared verbatim by the
+/// synchronous `commit_token` path and the deferred worker jobs — which
+/// is what keeps the two pipelines bit-identical.
+pub fn prune_group_into(
+    policy: &KvPolicy,
+    hd: usize,
+    k_rows: &[u16],
+    v_rows: &[u16],
+    kg: &mut [f32],
+    vg: &mut [f32],
+) {
+    debug_assert_eq!(k_rows.len(), TILE * hd);
+    let sp = policy.sparsity;
+    f16::widen_into(kg, k_rows);
+    f16::widen_into(vg, v_rows);
+    if sp.key_method != Method::None {
+        prune::per_token_magnitude_inplace(kg, TILE, hd, prune::keep_count(hd, sp.key_sparsity));
+    }
+    if sp.value_method != Method::None {
+        prune::per_token_magnitude_inplace(vg, TILE, hd, prune::keep_count(hd, sp.value_sparsity));
+    }
+    if let Some(q) = policy.quant {
+        quant::kivi_fake_quant(kg, TILE, hd, q.key_bits, quant::Axis::PerChannel, true);
+        quant::kivi_fake_quant(vg, TILE, hd, q.value_bits, quant::Axis::PerToken, true);
+    }
+}
+
+/// Prune + bitmap-pack one exited group from its dense binary16 rows:
+/// the body of a deferred compression job, runnable on any worker
+/// thread. Returns the compressed (K, V) pair; `SequenceKV::settle_group`
+/// appends it byte-identically to what the synchronous path's
+/// `append_groups` would have produced (the
+/// `BitmapMatrix::append_compressed` byte-identity contract).
+pub fn compress_group(
+    policy: &KvPolicy,
+    hd: usize,
+    k_rows: &[u16],
+    v_rows: &[u16],
+) -> Result<(BitmapMatrix, BitmapMatrix)> {
+    with_compress_scratch(TILE * hd, |kg, vg| {
+        prune_group_into(policy, hd, k_rows, v_rows, kg, vg);
+        let km = BitmapMatrix::compress(kg, TILE, hd, PackAxis::Token)?;
+        let vm = BitmapMatrix::compress(vg, TILE, hd, PackAxis::Channel)?;
+        Ok((km, vm))
+    })
+}
+
+/// Re-prune one head's compressed regions in place to the given keep
+/// counts — the per-head body of [`SequenceKV::reprune`], exposed so
+/// the engine can fan a pressure re-prune's heads out across the worker
+/// pool as deferred jobs instead of blocking its own thread on the
+/// whole sequence.
+pub fn reprune_head_inplace(
+    h: &mut HeadKV,
+    hd: usize,
+    raise_k: bool,
+    raise_v: bool,
+    kk_k: usize,
+    kk_v: usize,
+) -> Result<()> {
+    if raise_k && h.k_comp.tokens > 0 {
+        let t = h.k_comp.tokens;
+        let pruned = prune::per_token_magnitude(&h.k_comp.decompress(), t, hd, kk_k);
+        h.k_comp = BitmapMatrix::compress(&pruned, t, hd, PackAxis::Token)?;
+    }
+    if raise_v && h.v_comp.tokens > 0 {
+        let t = h.v_comp.tokens;
+        let pruned = prune::per_token_magnitude(&h.v_comp.decompress(), t, hd, kk_v);
+        h.v_comp = BitmapMatrix::compress(&pruned, t, hd, PackAxis::Channel)?;
+    }
+    Ok(())
+}
 
 /// Optional KIVI-sim quantization applied to the compressed region.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -337,13 +441,40 @@ pub struct SequenceKV {
     /// Total tokens represented (prefix + compressed + tail); uniform
     /// across heads.
     pub tokens: usize,
+    /// Deferred-compression mode (engine-driven; see [`set_deferred`]).
+    /// When on, `commit_token` only bumps `pending` — exited groups stay
+    /// dense at the front of the ring tail until harvested into worker
+    /// jobs (`pending` → `inflight`) and settled (`settle_group`) in
+    /// exit order. Both are zero in synchronous mode.
+    ///
+    /// [`set_deferred`]: SequenceKV::set_deferred
+    deferred: bool,
+    /// Max exited groups the ring tail may buffer before `commit_token`
+    /// stalls (compresses synchronously in place).
+    inflight_budget: usize,
+    pending: usize,
+    inflight: usize,
+    stalls: u64,
 }
 
 impl SequenceKV {
     pub fn new(policy: KvPolicy, n_layers: usize, n_kv: usize, hd: usize) -> Result<SequenceKV> {
         let heads =
             (0..n_layers * n_kv).map(|_| HeadKV::new(hd)).collect::<Result<Vec<HeadKV>>>()?;
-        Ok(SequenceKV { policy, n_layers, n_kv, hd, heads, prefix: None, tokens: 0 })
+        Ok(SequenceKV {
+            policy,
+            n_layers,
+            n_kv,
+            hd,
+            heads,
+            prefix: None,
+            tokens: 0,
+            deferred: false,
+            inflight_budget: 0,
+            pending: 0,
+            inflight: 0,
+            stalls: 0,
+        })
     }
 
     /// Build a sequence on top of a shared compressed prefix (partial
@@ -427,6 +558,16 @@ impl SequenceKV {
     /// groups were compressed the existing prefix `Arc` is returned
     /// as-is (no copy).
     pub fn shareable_snapshot(&self) -> Result<(Arc<SharedPrefix>, Vec<Vec<u16>>, Vec<Vec<u16>>)> {
+        if self.pending + self.inflight > 0 {
+            // A snapshot with exited-but-uncompressed groups in its tail
+            // would restore to a layout the cold path never produces
+            // (dense attention over rows the cold path pruned), breaking
+            // the restore-is-bit-identical contract. The engine only
+            // snapshots synchronous-mode sequences.
+            return Err(Error::Invalid(
+                "shareable_snapshot: deferred groups queued; settle and flush first".into(),
+            ));
+        }
         let tail_k: Vec<Vec<u16>> = self.heads.iter().map(|h| h.tail_k().to_vec()).collect();
         let tail_v: Vec<Vec<u16>> = self.heads.iter().map(|h| h.tail_v().to_vec()).collect();
         let comp_tokens = self.heads.first().map_or(0, |h| h.k_comp.tokens);
@@ -548,57 +689,213 @@ impl SequenceKV {
     }
 
     /// Account the token appended to all heads and run the compression
-    /// trigger: once the tail holds a full group + window, the oldest
-    /// 64-token group is pruned (runtime per-token magnitude at the
-    /// policy's sparsity) and appended to the compressed region.
+    /// trigger: once the tail holds a full group beyond the local window
+    /// (plus any groups already queued for deferred compression), the
+    /// oldest 64-token group exits. Synchronous mode prunes + packs it
+    /// here, on the calling thread; deferred mode only bumps the
+    /// pending-group count — an O(1), allocation-free bookkeeping step —
+    /// leaving the prune/pack work to harvested worker jobs
+    /// ([`pending_group_rows`] → [`settle_group`]).
+    ///
+    /// [`pending_group_rows`]: SequenceKV::pending_group_rows
+    /// [`settle_group`]: SequenceKV::settle_group
     pub fn commit_token(&mut self) -> Result<()> {
         self.tokens += 1;
         if !self.policy.compress {
             return Ok(());
         }
-        let hd = self.hd;
-        let cap = TILE + self.policy.local_window;
+        let cap = TILE + self.policy.local_window + (self.pending + self.inflight) * TILE;
         // decide based on head 0 (all heads have identical tail lengths)
-        if self.heads[0].tail_len(hd) < cap {
+        if self.heads[0].tail_len(self.hd) < cap {
             return Ok(());
         }
-        let sp = self.policy.sparsity;
-        // Runtime path is magnitude-based (the paper's kernel method);
-        // output-aware scores are a prefill-time notion.
-        let kk_k = prune::keep_count(hd, sp.key_sparsity);
-        let kk_v = prune::keep_count(hd, sp.value_sparsity);
-        // Two widening scratches reused across heads; the group is
-        // widened, pruned, and (optionally) quantized *in place*, so a
-        // commit performs no per-head allocations — the former
-        // `kg.clone()` / pruned-copy per head every 64 tokens is gone.
-        let mut kg = vec![0.0f32; TILE * hd];
-        let mut vg = vec![0.0f32; TILE * hd];
-        for idx in 0..self.heads.len() {
-            // Widen the exiting group to f32 for pruning/quantization;
-            // appending narrows back — a no-op for values already rounded
-            // through f16 once.
-            {
-                let h = &self.heads[idx];
-                f16::widen_into(&mut kg, &h.tail_k()[..TILE * hd]);
-                f16::widen_into(&mut vg, &h.tail_v()[..TILE * hd]);
-            }
-            if sp.key_method != Method::None {
-                prune::per_token_magnitude_inplace(&mut kg, TILE, hd, kk_k);
-            }
-            if sp.value_method != Method::None {
-                prune::per_token_magnitude_inplace(&mut vg, TILE, hd, kk_v);
-            }
-            if let Some(q) = self.policy.quant {
-                let (kb, vb) = (q.key_bits, q.value_bits);
-                quant::kivi_fake_quant(&mut kg, TILE, hd, kb, quant::Axis::PerChannel, true);
-                quant::kivi_fake_quant(&mut vg, TILE, hd, vb, quant::Axis::PerToken, true);
-            }
-            let h = &mut self.heads[idx];
-            h.k_comp.append_groups(&kg, TILE)?;
-            h.v_comp.append_groups(&vg, TILE)?;
-            h.advance_tail(TILE * hd);
+        if !self.deferred {
+            return self.compress_front_group();
+        }
+        self.pending += 1;
+        // Backpressure: the ring tail may buffer at most
+        // `inflight_budget` exited groups. Degrade gracefully by
+        // compressing the oldest pending group synchronously in place —
+        // order-preserving and bit-identical to the deferred job — the
+        // "stall" the `compress_stalls` counter reports. In engine
+        // operation the budget is never exceeded (decode adds one token
+        // per round and every round settles first), so this is the
+        // slow-compressor escape hatch; with jobs still in flight ahead
+        // of the pending group the ring grows instead (the front cannot
+        // be retired past unsettled groups).
+        while self.pending + self.inflight > self.inflight_budget.max(1) && self.inflight == 0 {
+            self.compress_front_group()?;
+            self.pending -= 1;
+            self.stalls += 1;
         }
         Ok(())
+    }
+
+    /// Prune + pack the group at the front of the dense tail into the
+    /// compressed region — the synchronous compression step. Widen,
+    /// prune, and (optional) quantize run *in place* in the thread's
+    /// reusable scratch pair, so a commit performs no allocations beyond
+    /// the compressed region itself.
+    fn compress_front_group(&mut self) -> Result<()> {
+        let hd = self.hd;
+        let policy = self.policy;
+        with_compress_scratch(TILE * hd, |kg, vg| {
+            for idx in 0..self.heads.len() {
+                {
+                    let h = &self.heads[idx];
+                    prune_group_into(
+                        &policy,
+                        hd,
+                        &h.tail_k()[..TILE * hd],
+                        &h.tail_v()[..TILE * hd],
+                        kg,
+                        vg,
+                    );
+                }
+                let h = &mut self.heads[idx];
+                h.k_comp.append_groups(kg, TILE)?;
+                h.v_comp.append_groups(vg, TILE)?;
+                h.advance_tail(TILE * hd);
+            }
+            Ok(())
+        })
+    }
+
+    /// Switch deferred-compression mode. The engine flips this on when a
+    /// sequence becomes decodable; direct users (batched prefill
+    /// ingestion, eval) stay synchronous. Turning it off flushes any
+    /// pending groups synchronously so the layout returns to the
+    /// canonical synchronous one. `budget` bounds how many exited groups
+    /// the ring tail may buffer before `commit_token` stalls.
+    pub fn set_deferred(&mut self, on: bool, budget: usize) -> Result<()> {
+        if !on {
+            self.flush_queued()?;
+        }
+        self.deferred = on;
+        self.inflight_budget = budget;
+        Ok(())
+    }
+
+    /// Exited groups not yet harvested into compression jobs.
+    #[inline]
+    pub fn pending_groups(&self) -> usize {
+        self.pending
+    }
+
+    /// Harvested groups whose compression jobs have not settled yet.
+    #[inline]
+    pub fn inflight_groups(&self) -> usize {
+        self.inflight
+    }
+
+    /// Exited groups still dense in the ring tail (pending + in flight).
+    #[inline]
+    pub fn queued_groups(&self) -> usize {
+        self.pending + self.inflight
+    }
+
+    /// Drain the backpressure-stall count (commits forced to compress
+    /// synchronously because the ring was full).
+    pub fn take_stalls(&mut self) -> u64 {
+        std::mem::take(&mut self.stalls)
+    }
+
+    /// Dense binary16 rows of the `slot`-th *pending* group (0 = oldest
+    /// unharvested) for head `idx` — the input a deferred compression
+    /// job copies out before [`mark_harvested`] moves the slot in
+    /// flight.
+    ///
+    /// [`mark_harvested`]: SequenceKV::mark_harvested
+    pub fn pending_group_rows(&self, idx: usize, slot: usize) -> (&[u16], &[u16]) {
+        debug_assert!(slot < self.pending, "pending_group_rows: slot {slot} >= {}", self.pending);
+        let elems = TILE * self.hd;
+        let off = (self.inflight + slot) * elems;
+        let h = &self.heads[idx];
+        (&h.tail_k()[off..off + elems], &h.tail_v()[off..off + elems])
+    }
+
+    /// Mark the oldest `n` pending groups as harvested into worker jobs;
+    /// their results must come back through [`settle_group`] in exit
+    /// order.
+    ///
+    /// [`settle_group`]: SequenceKV::settle_group
+    pub fn mark_harvested(&mut self, n: usize) {
+        debug_assert!(n <= self.pending);
+        self.pending -= n;
+        self.inflight += n;
+    }
+
+    /// Settle one completed compression wave: append each head's
+    /// compressed (K, V) pair — produced by [`compress_group`] from the
+    /// rows this call now retires — and advance the ring tail past the
+    /// group. Byte-identical to the synchronous path per
+    /// `BitmapMatrix::append_compressed`. Waves must arrive in exit
+    /// order (the engine's compressor sorts by wave id), `parts` in
+    /// `layer * n_kv + kv` head order.
+    pub fn settle_group(&mut self, parts: Vec<(BitmapMatrix, BitmapMatrix)>) -> Result<()> {
+        if self.inflight == 0 {
+            return Err(Error::Invalid("settle_group: no compression wave in flight".into()));
+        }
+        if parts.len() != self.heads.len() {
+            return Err(Error::Shape(format!(
+                "settle_group: {} head results for {} heads",
+                parts.len(),
+                self.heads.len()
+            )));
+        }
+        let elems = TILE * self.hd;
+        for (h, (km, vm)) in self.heads.iter_mut().zip(parts) {
+            h.k_comp.append_compressed(&km)?;
+            h.v_comp.append_compressed(&vm)?;
+            h.advance_tail(elems);
+        }
+        self.inflight -= 1;
+        Ok(())
+    }
+
+    /// Synchronously compress every pending group (leaving deferred
+    /// mode, or preparing a canonical-layout snapshot). Requires nothing
+    /// in flight — the engine settles before flushing.
+    pub fn flush_queued(&mut self) -> Result<()> {
+        if self.inflight > 0 {
+            return Err(Error::Invalid(
+                "flush_queued: compression jobs still in flight; settle first".into(),
+            ));
+        }
+        while self.pending > 0 {
+            self.compress_front_group()?;
+            self.pending -= 1;
+        }
+        Ok(())
+    }
+
+    /// Mutable access to the per-(layer, kv-head) states, in
+    /// `layer * n_kv + kv` order — the engine's worker-parallel re-prune
+    /// fans these out with [`reprune_head_inplace`].
+    pub fn heads_mut(&mut self) -> &mut [HeadKV] {
+        &mut self.heads
+    }
+
+    /// Which sides a re-prune to (ks, vs) raises, plus the per-side keep
+    /// counts (shared by the inline and worker-parallel re-prune paths).
+    pub fn reprune_plan(&self, ks: f64, vs: f64) -> (bool, bool, usize, usize) {
+        let raise_k = self.policy.compress && ks > self.policy.sparsity.key_sparsity;
+        let raise_v = self.policy.compress && vs > self.policy.sparsity.value_sparsity;
+        (raise_k, raise_v, prune::keep_count(self.hd, ks), prune::keep_count(self.hd, vs))
+    }
+
+    /// Record a completed re-prune's policy side effects, so groups
+    /// compressed from now on (including still-pending deferred groups)
+    /// match the new tier.
+    pub fn apply_reprune_policy(&mut self, ks: f64, vs: f64) {
+        if self.policy.compress && ks > self.policy.sparsity.key_sparsity {
+            self.policy.sparsity.key_sparsity = ks;
+            self.policy.sparsity.key_method = Method::TokenMagnitude;
+        }
+        if self.policy.compress && vs > self.policy.sparsity.value_sparsity {
+            self.policy.sparsity.value_sparsity = vs;
+            self.policy.sparsity.value_method = Method::TokenMagnitude;
+        }
     }
 
     /// (compressed_bytes, dense_equivalent_bytes) — the Fig 6b metric,
@@ -646,30 +943,11 @@ impl SequenceKV {
     pub fn reprune(&mut self, ks: f64, vs: f64) -> Result<usize> {
         let before = self.private_bytes();
         let hd = self.hd;
-        let raise_k = self.policy.compress && ks > self.policy.sparsity.key_sparsity;
-        let raise_v = self.policy.compress && vs > self.policy.sparsity.value_sparsity;
-        let kk_k = prune::keep_count(hd, ks);
-        let kk_v = prune::keep_count(hd, vs);
+        let (raise_k, raise_v, kk_k, kk_v) = self.reprune_plan(ks, vs);
         for h in &mut self.heads {
-            if raise_k && h.k_comp.tokens > 0 {
-                let t = h.k_comp.tokens;
-                let pruned = prune::per_token_magnitude(&h.k_comp.decompress(), t, hd, kk_k);
-                h.k_comp = BitmapMatrix::compress(&pruned, t, hd, PackAxis::Token)?;
-            }
-            if raise_v && h.v_comp.tokens > 0 {
-                let t = h.v_comp.tokens;
-                let pruned = prune::per_token_magnitude(&h.v_comp.decompress(), t, hd, kk_v);
-                h.v_comp = BitmapMatrix::compress(&pruned, t, hd, PackAxis::Channel)?;
-            }
+            reprune_head_inplace(h, hd, raise_k, raise_v, kk_k, kk_v)?;
         }
-        if raise_k {
-            self.policy.sparsity.key_sparsity = ks;
-            self.policy.sparsity.key_method = Method::TokenMagnitude;
-        }
-        if raise_v {
-            self.policy.sparsity.value_sparsity = vs;
-            self.policy.sparsity.value_method = Method::TokenMagnitude;
-        }
+        self.apply_reprune_policy(ks, vs);
         Ok(before.saturating_sub(self.private_bytes()))
     }
 
@@ -1066,5 +1344,137 @@ mod tests {
         assert_eq!(h.k_comp.decompress(), want);
         // value method None -> v stored exactly (up to the f16 narrowing)
         assert_eq!(h.v_comp.decompress(), f16::f16_round_vec(&v[0][..64 * hd]));
+    }
+
+    /// Drive two identical sequences — one synchronous, one deferred —
+    /// through the same append stream, harvesting + settling the
+    /// deferred one's exited groups with `compress_group` (the worker-
+    /// job body). Every head's compressed region and live tail must be
+    /// byte-identical at every step: the bit-exactness the engine's
+    /// settle-before-read schedule relies on.
+    #[test]
+    fn deferred_harvest_and_settle_is_bit_identical_to_sync() {
+        let (l, kv, hd) = (2, 2, 32);
+        let policy = KvPolicy::mustafar(0.6, 0.4);
+        let mut sync = SequenceKV::new(policy, l, kv, hd).unwrap();
+        let mut def = SequenceKV::new(policy, l, kv, hd).unwrap();
+        def.set_deferred(true, 2).unwrap();
+
+        let mut rng = Pcg32::seeded(90);
+        for step in 0..3 * TAIL_CAP {
+            for layer in 0..l {
+                for h in 0..kv {
+                    let kr: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+                    let vr: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+                    sync.append(layer, h, &kr, &vr);
+                    def.append(layer, h, &kr, &vr);
+                }
+            }
+            sync.commit_token().unwrap();
+            def.commit_token().unwrap();
+
+            // harvest + settle like the engine does between rounds
+            while def.pending_groups() > 0 {
+                let parts: Vec<(BitmapMatrix, BitmapMatrix)> = (0..l * kv)
+                    .map(|idx| {
+                        let (kr, vr) = def.pending_group_rows(idx, 0);
+                        compress_group(&policy, hd, kr, vr).unwrap()
+                    })
+                    .collect();
+                def.mark_harvested(1);
+                def.settle_group(parts).unwrap();
+            }
+
+            assert_eq!(def.tokens, sync.tokens, "step {step}");
+            assert_eq!(def.private_bytes(), sync.private_bytes(), "step {step}");
+            for idx in 0..l * kv {
+                let (a, b) = (&def.heads[idx], &sync.heads[idx]);
+                assert_eq!(a.k_comp, b.k_comp, "K head {idx} step {step}");
+                assert_eq!(a.v_comp, b.v_comp, "V head {idx} step {step}");
+                assert_eq!(a.tail_k(), b.tail_k(), "tail K head {idx} step {step}");
+                assert_eq!(a.tail_v(), b.tail_v(), "tail V head {idx} step {step}");
+            }
+        }
+        assert!(sync.head(0, 0).k_comp.tokens >= 2 * TILE, "too few groups exercised");
+        assert_eq!(def.take_stalls(), 0, "budget 2 with per-step settle must never stall");
+    }
+
+    /// With a full ring (budget exhausted, nothing harvested) the tail
+    /// stalls: the oldest pending group is compressed synchronously in
+    /// place. Order is preserved, the stall is counted, and after a
+    /// final flush the layout equals the all-synchronous one exactly.
+    #[test]
+    fn deferred_ring_full_stalls_bit_exact_and_counts() {
+        let (l, kv, hd) = (1, 1, 48);
+        let policy = KvPolicy::mustafar(0.5, 0.5);
+        let mut sync = SequenceKV::new(policy, l, kv, hd).unwrap();
+        let mut def = SequenceKV::new(policy, l, kv, hd).unwrap();
+        def.set_deferred(true, 1).unwrap();
+
+        let mut rng = Pcg32::seeded(91);
+        let steps = TAIL_CAP + 4 * TILE; // several group exits, never harvested
+        for _ in 0..steps {
+            let kr: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+            let vr: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+            sync.append(0, 0, &kr, &vr);
+            def.append(0, 0, &kr, &vr);
+            sync.commit_token().unwrap();
+            def.commit_token().unwrap();
+            // ring may buffer at most one exited group
+            assert!(def.queued_groups() <= 1);
+        }
+        let stalls = def.take_stalls();
+        assert!(stalls >= 3, "expected repeated ring-full stalls, got {stalls}");
+
+        def.flush_queued().unwrap();
+        assert_eq!(def.pending_groups(), 0);
+        assert_eq!(def.head(0, 0).k_comp, sync.head(0, 0).k_comp);
+        assert_eq!(def.head(0, 0).v_comp, sync.head(0, 0).v_comp);
+        assert_eq!(def.head(0, 0).tail_k(), sync.head(0, 0).tail_k());
+        assert_eq!(def.head(0, 0).tail_v(), sync.head(0, 0).tail_v());
+    }
+
+    /// Deferred commits are pure bookkeeping (no prune/pack work), a
+    /// snapshot with queued groups is refused (it would restore to a
+    /// layout the cold path never produces), and leaving deferred mode
+    /// flushes back to the canonical synchronous layout.
+    #[test]
+    fn deferred_commit_is_bookkeeping_and_mode_exit_flushes() {
+        let (l, kv, hd) = (1, 1, 32);
+        let mut seq = SequenceKV::new(KvPolicy::mustafar(0.5, 0.5), l, kv, hd).unwrap();
+        seq.set_deferred(true, 4).unwrap();
+        let mut rng = Pcg32::seeded(92);
+        for _ in 0..TAIL_CAP + TILE {
+            let kr: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+            let vr: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+            seq.append(0, 0, &kr, &vr);
+            seq.commit_token().unwrap();
+        }
+        // two groups exited (TAIL_CAP + TILE appends) and stayed dense
+        assert_eq!(seq.pending_groups(), 2);
+        assert_eq!(seq.head(0, 0).k_comp.tokens, 0, "deferred commit must not compress");
+        assert!(seq.shareable_snapshot().is_err(), "queued groups must refuse snapshot");
+
+        seq.set_deferred(false, 0).unwrap();
+        assert_eq!(seq.pending_groups(), 0);
+        assert_eq!(seq.head(0, 0).k_comp.tokens, 2 * TILE);
+        assert!(seq.shareable_snapshot().is_ok());
+    }
+
+    /// The thread-local widen/prune scratch is grown once and reused:
+    /// repeated group compressions on one thread must hand back the same
+    /// buffers (pointer-stable), which is the structural form of the
+    /// "steady-state decode is allocation-free" guarantee.
+    #[test]
+    fn compress_scratch_is_reused_across_groups() {
+        let elems = TILE * 64;
+        let first = with_compress_scratch(elems, |kg, vg| (kg.as_ptr(), vg.as_ptr()));
+        for _ in 0..8 {
+            let again = with_compress_scratch(elems, |kg, vg| (kg.as_ptr(), vg.as_ptr()));
+            assert_eq!(again, first, "scratch must be reused, not reallocated");
+        }
+        // smaller requests share the same allocation
+        let small = with_compress_scratch(elems / 2, |kg, vg| (kg.as_ptr(), vg.as_ptr()));
+        assert_eq!(small, first);
     }
 }

@@ -74,6 +74,7 @@ USAGE:
            [--write-hwm N] [--idle-timeout-ms N] [--read-deadline-ms N]
            [--drain-deadline-ms N] [--prefix-cache-bytes N] [--prefix-ttl-ms N]
            [--prefill-chunk TOKENS] [--round-budget TOKENS]
+           [--sync-compress] [--compress-inflight GROUPS] [--local-window TOKENS]
            [--no-telemetry] [--trace-out FILE] [--metrics-addr HOST:PORT]
   mustafar generate [--model M] [--backend B] [--ks S] [--vs S]
            [--prompt-seed N] [--prompt-len N] [--max-new N] [--artifacts DIR]
@@ -157,6 +158,12 @@ fn build_engine(args: &Args) -> mustafar::Result<Engine> {
     ec.round_token_budget = args.get_usize("round-budget", ec.round_token_budget);
     ec.prefix_cache_bytes = args.get_usize("prefix-cache-bytes", 0);
     ec.prefix_ttl_ms = args.get_usize("prefix-ttl-ms", 0) as u64;
+    // deferred group compression is the default; --sync-compress restores
+    // the synchronous prune-on-commit path (the bench baseline)
+    ec.deferred_compress = !args.flags.contains_key("sync-compress");
+    ec.compress_inflight_groups =
+        args.get_usize("compress-inflight", ec.compress_inflight_groups);
+    ec.local_window = args.get_usize("local-window", ec.local_window);
     ec.telemetry = !args.flags.contains_key("no-telemetry");
 
     let model = NativeModel::new(weights.clone());

@@ -379,6 +379,9 @@ fn stats_scalars(engine: &Engine) -> Vec<(&'static str, f64)> {
         ("prefill_chunks", engine.telemetry.prefill_chunks.get() as f64),
         ("prefill_preempted", engine.telemetry.prefill_preempted.get() as f64),
         ("round_budget_tokens", engine.telemetry.round_budget_tokens.get() as f64),
+        ("compress_jobs", engine.telemetry.compress_jobs.get() as f64),
+        ("compress_stalls", engine.telemetry.compress_stalls.get() as f64),
+        ("compress_backlog", engine.telemetry.compress_backlog.get() as f64),
     ];
     out.extend(engine.telemetry.quantile_fields());
     out

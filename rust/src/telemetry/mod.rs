@@ -97,6 +97,10 @@ pub struct Telemetry {
     /// One chunked-prefill chunk (decode-path forward over ≤
     /// `prefill_chunk_tokens` prompt tokens + reservation settle), µs.
     pub prefill_chunk_us: AtomicHist,
+    /// One deferred per-head group-compression job (widen → prune →
+    /// bitmap-pack of a 64-token group), µs — recorded on the worker
+    /// threads, like `worker_task_us`.
+    pub compress_us: AtomicHist,
     /// Observability-surface traffic.
     pub trace_queries: Counter,
     pub dump_queries: Counter,
@@ -110,6 +114,15 @@ pub struct Telemetry {
     /// Tokens granted to prefill chunks by the round planner last step
     /// (0 when the budget is disabled or nothing was mid-prefill).
     pub round_budget_tokens: Gauge,
+    /// Deferred per-head compression jobs submitted to the worker pool.
+    pub compress_jobs: Counter,
+    /// Ring-full backpressure stalls: commits forced to compress a
+    /// group synchronously because the in-flight-group budget was
+    /// exhausted (0 in healthy operation).
+    pub compress_stalls: Counter,
+    /// Exited groups awaiting compression (pending + in flight) sampled
+    /// once per engine step.
+    pub compress_backlog: Gauge,
 }
 
 impl Telemetry {
@@ -127,12 +140,16 @@ impl Telemetry {
             write_queue_depth: AtomicHist::new(),
             worker_task_us: AtomicHist::new(),
             prefill_chunk_us: AtomicHist::new(),
+            compress_us: AtomicHist::new(),
             trace_queries: Counter::default(),
             dump_queries: Counter::default(),
             metrics_queries: Counter::default(),
             prefill_chunks: Counter::default(),
             prefill_preempted: Counter::default(),
             round_budget_tokens: Gauge::default(),
+            compress_jobs: Counter::default(),
+            compress_stalls: Counter::default(),
+            compress_backlog: Gauge::default(),
         }
     }
 
@@ -161,6 +178,7 @@ impl Telemetry {
             ("write_queue_depth", self.write_queue_depth.snapshot()),
             ("worker_task_us", self.worker_task_us.snapshot()),
             ("prefill_chunk_us", self.prefill_chunk_us.snapshot()),
+            ("compress_us", self.compress_us.snapshot()),
         ]
     }
 

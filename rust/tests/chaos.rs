@@ -40,7 +40,7 @@ use mustafar::workload::trace::{
 /// probabilities so runs see a mix of clean and broken behavior.
 const SPEC: &str = "kvpool.alloc:0.02,kvpool.release:0.02,worker.task:0.01,\
                     seq.decode:0.02,seq.prefill:0.02,seq.prefill_chunk:0.02,\
-                    prefix.insert:0.05";
+                    seq.compress:0.02,prefix.insert:0.05";
 
 fn base_seed() -> u64 {
     std::env::var("MUSTAFAR_FAULT_SEED")

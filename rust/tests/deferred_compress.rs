@@ -1,0 +1,315 @@
+// Shared lint policy with the library crate (rust/src/lib.rs): these
+// allows cover numeric-harness idioms (indexed loops, config structs
+// mutated after Default::default(), positional format args).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::field_reassign_with_default,
+    clippy::uninlined_format_args,
+    clippy::manual_div_ceil,
+    clippy::type_complexity
+)]
+
+//! Acceptance for the deferred compression pipeline: the async
+//! harvest/settle path must be *token-identical* to synchronous
+//! prune-on-commit across local-window sizes and in-flight budgets —
+//! including chunked-prefill resume and partial prefix-hit suffix
+//! rebuilds — a `seq.compress` fault must poison exactly one sequence
+//! with exact live-byte accounting throughout, and the steady-state
+//! deferred commit must be allocation-free (the hot path only appends
+//! to the dense ring tail).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use mustafar::config::{Backend, EngineConfig, ModelConfig, SparsityConfig};
+use mustafar::coordinator::{Completion, Engine, FinishReason, Request, SubmitOutcome};
+use mustafar::faults::Injector;
+use mustafar::kvcache::{KvPolicy, SequenceKV};
+use mustafar::model::{NativeModel, Weights};
+use mustafar::prune::LOCAL_WINDOW;
+use mustafar::sparse::TILE;
+use mustafar::util::Pcg32;
+
+// ---------------------------------------------------------------------
+// Thread-local allocation counter: a global allocator that tallies this
+// thread's heap operations, so one test can assert the deferred decode
+// hot path allocates nothing without being perturbed by parallel tests.
+
+struct CountingAlloc;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        // try_with: TLS may be mid-teardown during thread exit
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+// ---------------------------------------------------------------------
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        head_dim: 32,
+        ff: 128,
+        vocab: 512,
+        rope_theta: 10000.0,
+        max_seq: 512,
+        norm_eps: 1e-5,
+    }
+}
+
+/// A sparse native engine with an unconstrained pool (identity runs must
+/// not diverge through reclaim timing, which legitimately shifts by one
+/// step between modes).
+fn engine(deferred: bool, window: usize, budget: usize, seed: u64) -> Engine {
+    let mut ec = EngineConfig::default();
+    ec.backend = Backend::NativeSparse;
+    ec.sparsity = SparsityConfig::mustafar(0.6, 0.6);
+    ec.max_batch = 4;
+    ec.max_new_tokens = 256;
+    ec.deferred_compress = deferred;
+    ec.compress_inflight_groups = budget;
+    ec.local_window = window;
+    Engine::new_native(NativeModel::new(Weights::random_for_tests(tiny_cfg(), seed)), ec)
+}
+
+fn prompts(seed: u64, lens: &[usize]) -> Vec<Vec<u16>> {
+    let mut rng = Pcg32::seeded(seed);
+    lens.iter()
+        .map(|&n| (0..n).map(|_| 16 + rng.below(400) as u16).collect())
+        .collect()
+}
+
+fn by_id(out: Vec<Completion>) -> Vec<(u64, Vec<u16>)> {
+    let mut v: Vec<(u64, Vec<u16>)> = out.into_iter().map(|c| (c.id, c.tokens)).collect();
+    v.sort_by_key(|(id, _)| *id);
+    v
+}
+
+/// Tentpole acceptance: for every local-window size and in-flight-group
+/// budget, a multi-sequence deferred run generates the exact token
+/// streams of the synchronous engine. Prompts are long enough that
+/// several groups exit during both prefill and decode, so the harvest →
+/// overlap → settle schedule is genuinely exercised.
+#[test]
+fn deferred_is_token_identical_to_sync_across_windows_and_budgets() {
+    for &window in &[8usize, LOCAL_WINDOW, 64] {
+        let lens = [2 * TILE + 11, 90, 3 * TILE];
+        let gen = TILE + 17; // enough decode commits to exit groups mid-decode
+        let mk_reqs = || -> Vec<Request> {
+            prompts(40 + window as u64, &lens)
+                .into_iter()
+                .enumerate()
+                .map(|(i, p)| Request::new(i as u64, p, gen))
+                .collect()
+        };
+        let baseline = by_id(engine(false, window, 1, 7).run_trace(mk_reqs()).unwrap());
+        for &budget in &[1usize, 2, 8] {
+            let mut e = engine(true, window, budget, 7);
+            let got = by_id(e.run_trace(mk_reqs()).unwrap());
+            assert_eq!(
+                got, baseline,
+                "window {window} budget {budget}: deferred diverged from sync"
+            );
+            assert!(
+                e.telemetry.compress_jobs.get() > 0,
+                "window {window} budget {budget}: no deferred jobs ran — \
+                 the pipeline was not exercised"
+            );
+            assert_eq!(
+                e.telemetry.compress_backlog.get(),
+                0,
+                "window {window} budget {budget}: backlog gauge nonzero at idle"
+            );
+        }
+    }
+}
+
+/// Chunked prefill stays synchronous (no overlap window exists inside a
+/// chunk's token loop), so a monster prompt resuming across many rounds
+/// while shorts decode around it must be bit-identical between modes.
+#[test]
+fn deferred_is_identical_through_chunked_prefill_resume() {
+    let mk = |deferred: bool| -> Engine {
+        let mut ec = EngineConfig::default();
+        ec.backend = Backend::NativeSparse;
+        ec.sparsity = SparsityConfig::mustafar(0.7, 0.7);
+        ec.max_batch = 4;
+        ec.max_new_tokens = 64;
+        ec.prefill_chunk_tokens = 16;
+        ec.round_token_budget = 32;
+        ec.deferred_compress = deferred;
+        ec.compress_inflight_groups = 2;
+        Engine::new_native(NativeModel::new(Weights::random_for_tests(tiny_cfg(), 11)), ec)
+    };
+    let mk_reqs = || -> Vec<Request> {
+        let ps = prompts(55, &[250, 40, 48]);
+        ps.into_iter()
+            .enumerate()
+            .map(|(i, p)| Request::new(i as u64, p, 24))
+            .collect()
+    };
+    let sync = by_id(mk(false).run_trace(mk_reqs()).unwrap());
+    let def = by_id(mk(true).run_trace(mk_reqs()).unwrap());
+    assert_eq!(def, sync, "deferred diverged across chunked-prefill resume");
+}
+
+/// A partial prefix hit seeds the new sequence from the cache and
+/// rebuilds only the unshared suffix. The shareable snapshot is taken
+/// before the ring goes deferred, so the lineage must stay identical —
+/// and the hit must actually occur in both modes.
+#[test]
+fn deferred_is_identical_across_partial_prefix_hit_suffix_rebuild() {
+    let run = |deferred: bool| -> (Vec<(u64, Vec<u16>)>, u64) {
+        let mut ec = EngineConfig::default();
+        ec.backend = Backend::NativeSparse;
+        ec.sparsity = SparsityConfig::mustafar(0.6, 0.6);
+        ec.max_batch = 2;
+        ec.max_new_tokens = 64;
+        ec.prefix_cache_bytes = 16 << 20;
+        ec.deferred_compress = deferred;
+        ec.compress_inflight_groups = 2;
+        let mut e =
+            Engine::new_native(NativeModel::new(Weights::random_for_tests(tiny_cfg(), 13)), ec);
+        let base = prompts(77, &[3 * TILE])[0].clone();
+        let mut longer = base.clone();
+        longer.extend(prompts(78, &[TILE + 9])[0].iter().copied());
+        // first request populates the cache...
+        let mut out = e.run_trace(vec![Request::new(0, base, 16)]).unwrap();
+        // ...second gets a partial hit and rebuilds only its suffix
+        out.extend(e.run_trace(vec![Request::new(1, longer, 16)]).unwrap());
+        let hits = e.metrics.prefix_partial_hits;
+        (by_id(out), hits)
+    };
+    let (sync, sync_hits) = run(false);
+    let (def, def_hits) = run(true);
+    assert!(sync_hits >= 1, "sync run saw no partial prefix hit");
+    assert!(def_hits >= 1, "deferred run saw no partial prefix hit");
+    assert_eq!(def, sync, "deferred diverged after a partial prefix hit");
+}
+
+/// An armed `seq.compress` fault fails compression jobs: each poisoned
+/// sequence gets exactly one `error` finish naming the deferred
+/// pipeline, its pages come back, live-byte accounting is exact after
+/// every step with jobs in flight, and the engine itself survives to
+/// quiescence.
+#[test]
+fn compress_fault_poisons_sequences_with_exact_accounting() {
+    let mut e = engine(true, LOCAL_WINDOW, 2, 21);
+    e.set_fault_injector(Injector::parse("seq.compress:1.0", 4242).unwrap());
+    let lens = [2 * TILE + 20, 2 * TILE + 33, 40];
+    let n = lens.len() as u64;
+    for (i, p) in prompts(99, &lens).into_iter().enumerate() {
+        assert!(matches!(
+            e.submit_full(Request::new(i as u64, p, TILE)),
+            SubmitOutcome::Queued
+        ));
+    }
+    let mut out = Vec::new();
+    let mut steps = 0usize;
+    while !e.idle() {
+        if let Err(err) = e.step() {
+            e.fail_inflight(&err.to_string());
+        }
+        assert_eq!(
+            e.pool_stats().live_bytes,
+            e.measured_live_bytes(),
+            "accounting drifted with compression jobs in flight"
+        );
+        out.extend(e.take_completions());
+        steps += 1;
+        assert!(steps < 10_000, "engine failed to quiesce under seq.compress faults");
+    }
+    out.extend(e.take_completions());
+
+    let mut ids: Vec<u64> = out.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n).collect::<Vec<_>>(), "exactly-once violated");
+    let errors: Vec<&Completion> =
+        out.iter().filter(|c| c.finish == FinishReason::Error).collect();
+    assert!(
+        !errors.is_empty(),
+        "a p=1.0 seq.compress fault with group exits must poison something"
+    );
+    for c in &errors {
+        let msg = c.error.as_deref().unwrap_or("");
+        assert!(
+            msg.contains("deferred compression failed"),
+            "error finish not attributed to the compression pipeline: {msg:?}"
+        );
+    }
+    // every page is back once the batch drains
+    assert_eq!(e.pool_stats().live_bytes, 0, "pages leaked after poisoned finishes");
+    assert!(e.telemetry.compress_jobs.get() > 0, "no jobs were ever submitted");
+}
+
+/// The decode hot path in deferred mode only appends fp16 to the ring
+/// tail and bumps a pending counter: once the ring has reached its
+/// steady-state extent, a full budget's worth of commits — group exits
+/// included — performs zero heap allocations on this thread.
+#[test]
+fn steady_state_deferred_commit_allocates_nothing() {
+    let (l, kvh, hd) = (1usize, 1usize, 32usize);
+    let policy = KvPolicy::mustafar(0.6, 0.6);
+    let mut kv = SequenceKV::new(policy, l, kvh, hd).unwrap();
+    kv.set_deferred(true, 8).unwrap();
+    let mut rng = Pcg32::seeded(17);
+    let mut kr = vec![0.0f32; hd];
+    let mut vr = vec![0.0f32; hd];
+
+    let mut climb = |kv: &mut SequenceKV, rng: &mut Pcg32, kr: &mut [f32], vr: &mut [f32]| {
+        while kv.pending_groups() < 8 {
+            for x in kr.iter_mut() {
+                *x = rng.normal_f32();
+            }
+            for x in vr.iter_mut() {
+                *x = rng.normal_f32();
+            }
+            kv.append(0, 0, kr, vr);
+            kv.commit_token().unwrap();
+        }
+    };
+
+    // two warm-up cycles: the ring tail reaches its steady-state extent
+    // (Vec capacity retained across the flush's advance/compact) and the
+    // shared compression scratch is grown once
+    for _ in 0..2 {
+        climb(&mut kv, &mut rng, &mut kr, &mut vr);
+        kv.flush_queued().unwrap();
+    }
+
+    let before = thread_allocs();
+    climb(&mut kv, &mut rng, &mut kr, &mut vr);
+    let allocs = thread_allocs() - before;
+    assert_eq!(
+        allocs, 0,
+        "steady-state deferred commits must be allocation-free \
+         (ring append + pending bookkeeping only), saw {allocs} allocations"
+    );
+    kv.flush_queued().unwrap(); // leave the sequence consistent
+}

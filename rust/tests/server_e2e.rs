@@ -618,6 +618,15 @@ fn metrics_trace_and_dump_lines_round_trip() {
     }
     assert!(stats.get("ttft_ms_p50").unwrap().as_f64().unwrap() > 0.0);
     assert!(stats.get("queue_peak_pending").unwrap().as_usize().unwrap() >= 1);
+    // the deferred-compression scalars parse back as numbers (this tiny
+    // workload never exits a group, so they are present-but-zero here;
+    // the engine tests drive them nonzero)
+    for key in ["compress_jobs", "compress_stalls", "compress_backlog"] {
+        assert!(
+            stats.get(key).unwrap().as_f64().unwrap() >= 0.0,
+            "stats key {key} missing or non-numeric"
+        );
+    }
 
     // metrics-scrape smoke: every scalar the stats line reports must
     // appear in the Prometheus exposition under the mustafar_ prefix
